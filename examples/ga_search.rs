@@ -1,0 +1,65 @@
+//! GA baseline vs the paper's narrowing funnel (the §3.2 argument).
+//!
+//! The previous GPU work [32] searched offload patterns with a genetic
+//! algorithm and many measurements — fine when compiles take minutes,
+//! ruinous at FPGA compile times (~3 h). This example runs both
+//! strategies on tdfir and prints the measurement/wall-clock gap the
+//! paper's funnel exists to close.
+//!
+//! Run with: `cargo run --release --example ga_search`
+
+use fpga_offload::analysis::analyze;
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::minic::parse;
+use fpga_offload::search::{ga, search, GaConfig, SearchConfig};
+use fpga_offload::workloads;
+
+fn main() -> anyhow::Result<()> {
+    println!("== GA baseline [32] vs narrowing funnel (tdfir) ==\n");
+    let prog =
+        parse(workloads::TDFIR_C).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let an = analyze(&prog, "main").map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let funnel = search(
+        "tdfir",
+        &prog,
+        &an,
+        &SearchConfig::default(),
+        &XEON_BRONZE_3104,
+        &ARRIA10_GX,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let ga_res = ga::run(
+        &prog,
+        &an,
+        &GaConfig::default(),
+        &XEON_BRONZE_3104,
+        &ARRIA10_GX,
+    );
+
+    println!("funnel : best {:<10} {:>6.2}x  {} measurements  ~{:>6.1} h",
+        funnel.best_measurement().label(),
+        funnel.speedup(),
+        funnel.measurements.len(),
+        funnel.automation_s / 3600.0);
+    println!("GA [32]: best {:<10} {:>6.2}x  {} measurements  ~{:>6.1} h",
+        ga_res
+            .best_loops
+            .iter()
+            .map(|l| l.to_string())
+            .collect::<Vec<_>>()
+            .join("+"),
+        ga_res.best_speedup,
+        ga_res.measurements,
+        ga_res.modeled_wall_clock_s / 3600.0);
+    println!("\nGA convergence (best speedup per generation): {:?}",
+        ga_res.history);
+    println!(
+        "\nmeasurement economy: funnel used {:.0}% of the GA's compiles",
+        100.0 * funnel.measurements.len() as f64
+            / ga_res.measurements.max(1) as f64
+    );
+    Ok(())
+}

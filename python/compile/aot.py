@@ -1,0 +1,101 @@
+"""AOT bridge: lower the L2 models to HLO *text* artifacts for Rust.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits:
+  artifacts/tdfir.hlo.txt   — TDFIR sample test (Pallas FIR kernel inside)
+  artifacts/mriq.hlo.txt    — MRI-Q sample test (Pallas kernel inside)
+  artifacts/meta.json       — shapes + argument order for the Rust loader
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True``; the Rust side unwraps with
+``to_tuple()``. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_tdfir():
+    s = model.SHAPES["tdfir"]
+    m, n, k = s["m"], s["n"], s["k"]
+    args = [_spec(m, n), _spec(m, n), _spec(m, k), _spec(m, k)]
+    return jax.jit(model.tdfir_model).lower(*args)
+
+
+def lower_mriq():
+    s = model.SHAPES["mriq"]
+    kd, xd = s["k"], s["x"]
+    args = [
+        _spec(kd), _spec(kd), _spec(kd),          # kx, ky, kz
+        _spec(xd), _spec(xd), _spec(xd),          # x, y, z
+        _spec(kd), _spec(kd),                     # phir, phii
+    ]
+    return jax.jit(model.mriq_model).lower(*args)
+
+
+META_ARG_ORDER = {
+    "tdfir": ["xr[m,n]", "xi[m,n]", "hr[m,k]", "hi[m,k]"],
+    "mriq": ["kx[k]", "ky[k]", "kz[k]", "x[x]", "y[x]", "z[x]",
+             "phir[k]", "phii[k]"],
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Back-compat with the scaffold Makefile's `--out path/model.hlo.txt`.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    ns = ap.parse_args()
+    out_dir = os.path.dirname(ns.out) if ns.out else ns.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    for name, lower in (("tdfir", lower_tdfir), ("mriq", lower_mriq)):
+        text = to_hlo_text(lower())
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "format": "hlo-text/return-tuple",
+        "shapes": model.SHAPES,
+        "arg_order": META_ARG_ORDER,
+        "outputs": {"tdfir": ["yr[m,n]", "yi[m,n]"],
+                    "mriq": ["qr[x]", "qi[x]"]},
+    }
+    meta_path = os.path.join(out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

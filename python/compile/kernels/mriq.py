@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: MRI-Q Q-matrix computation (paper §5.1.1, app 2).
+
+The Parboil MRI-Q hot loop: for every voxel, accumulate
+``|phi[k]|^2 * exp(i * 2*pi * k . x)`` over all K-space samples. This is the
+loop the paper's method offloads (7.1x in Fig. 4) — trig-dense, tiny
+transfer footprint, the archetypal high-arithmetic-intensity loop.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA
+build pipelines the K-loop with the voxel loop outer; the blocked TPU
+equivalent tiles *both* dimensions so a (BX, BK) phase tile lives in VMEM
+per grid step — BlockSpec plays the role of the FPGA unroll factor. The
+K dimension is the reduction: grid = (X/BX, K/BK) with the output block
+revisited across the K axis and accumulated in place (init at k-block 0).
+
+``interpret=True`` for CPU-PJRT executability — see tdfir.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TWO_PI = 6.2831853071795864769
+
+# Default VMEM tile: (BX, BK) f32 phase tile = 128*128*4 B = 64 KiB, plus
+# the 1-D operand blocks — comfortably inside a TPU core's ~16 MiB VMEM
+# with double-buffering headroom.
+BLOCK_X = 128
+BLOCK_K = 128
+
+
+def _mriq_kernel(kx_ref, ky_ref, kz_ref, x_ref, y_ref, z_ref,
+                 phir_ref, phii_ref, qr_ref, qi_ref):
+    """One grid step = one (voxel-block, k-block) tile of the reduction."""
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        qr_ref[...] = jnp.zeros_like(qr_ref)
+        qi_ref[...] = jnp.zeros_like(qi_ref)
+
+    phir = phir_ref[...]
+    phii = phii_ref[...]
+    phimag = phir * phir + phii * phii  # |phi|^2, recomputed per tile —
+    # mirrors the FPGA kernel, which computes it inside the pipeline rather
+    # than staging a third input stream.
+    arg = TWO_PI * (
+        x_ref[...][:, None] * kx_ref[...][None, :]
+        + y_ref[...][:, None] * ky_ref[...][None, :]
+        + z_ref[...][:, None] * kz_ref[...][None, :]
+    )
+    qr_ref[...] += jnp.sum(phimag[None, :] * jnp.cos(arg), axis=1)
+    qi_ref[...] += jnp.sum(phimag[None, :] * jnp.sin(arg), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_x", "block_k"))
+def mriq(kx, ky, kz, x, y, z, phir, phii, *, block_x=BLOCK_X,
+         block_k=BLOCK_K):
+    """MRI-Q via the Pallas kernel.
+
+    Args:
+      kx, ky, kz, phir, phii: ``f32[K]`` K-space trajectory and phase.
+      x, y, z: ``f32[X]`` voxel coordinates.
+      block_x, block_k: VMEM tile sizes; must divide X and K.
+
+    Returns:
+      ``(qr, qi)``: ``f32[X]``, matching ``ref.mriq_ref``.
+    """
+    (kdim,) = kx.shape
+    (xdim,) = x.shape
+    if xdim % block_x or kdim % block_k:
+        raise ValueError(
+            f"block sizes must divide dims: X={xdim}%{block_x}, "
+            f"K={kdim}%{block_k}"
+        )
+    grid = (xdim // block_x, kdim // block_k)
+    kspec = pl.BlockSpec((block_k,), lambda i, kb: (kb,))
+    xspec = pl.BlockSpec((block_x,), lambda i, kb: (i,))
+    out_shape = [
+        jax.ShapeDtypeStruct((xdim,), x.dtype),
+        jax.ShapeDtypeStruct((xdim,), x.dtype),
+    ]
+    qr, qi = pl.pallas_call(
+        _mriq_kernel,
+        grid=grid,
+        in_specs=[kspec, kspec, kspec, xspec, xspec, xspec, kspec, kspec],
+        out_specs=[xspec, xspec],
+        out_shape=out_shape,
+        interpret=True,
+    )(kx, ky, kz, x, y, z, phir, phii)
+    return qr, qi

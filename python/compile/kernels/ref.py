@@ -1,0 +1,82 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the kernels (and, transitively, the Rust
+runtime's sample tests) are validated against. They intentionally use only
+plain jax.numpy — no pallas — so a bug in the kernels cannot hide in shared
+code.
+
+The two workloads mirror the paper's §5.1.1 evaluation applications:
+
+* ``tdfir_ref`` — HPEC-challenge style *time-domain finite impulse response
+  filter bank*: M independent complex FIR filters of K taps applied to
+  M length-N complex input streams.
+* ``mriq_ref``  — Parboil *MRI-Q*: Q-matrix computation for non-Cartesian
+  MRI reconstruction; for every voxel, a sum over K-space samples of
+  |phi|^2 * exp(i * 2*pi * k . x).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+TWO_PI = 6.2831853071795864769
+
+
+def tdfir_ref(xr, xi, hr, hi):
+    """Complex FIR filter bank, causal, zero-padded history.
+
+    Args:
+      xr, xi: ``f32[M, N]`` input stream (real / imaginary parts).
+      hr, hi: ``f32[M, K]`` filter taps per stream.
+
+    Returns:
+      ``(yr, yi)``: ``f32[M, N]`` where
+      ``y[m, n] = sum_k h[m, k] * x[m, n - k]`` (terms with ``n - k < 0``
+      dropped), using complex multiplication.
+    """
+    m, n = xr.shape
+    k = hr.shape[1]
+    # Zero-pad K-1 samples of history on the left so every output index has
+    # a full window.
+    pad = ((0, 0), (k - 1, 0))
+    xr_p = jnp.pad(xr, pad)
+    xi_p = jnp.pad(xi, pad)
+    yr = jnp.zeros((m, n), xr.dtype)
+    yi = jnp.zeros((m, n), xr.dtype)
+    for j in range(k):
+        # x[m, n - j] == xpad[m, (K-1) + n - j]
+        sl_r = xr_p[:, k - 1 - j : k - 1 - j + n]
+        sl_i = xi_p[:, k - 1 - j : k - 1 - j + n]
+        hr_j = hr[:, j : j + 1]
+        hi_j = hi[:, j : j + 1]
+        yr = yr + hr_j * sl_r - hi_j * sl_i
+        yi = yi + hr_j * sl_i + hi_j * sl_r
+    return yr, yi
+
+
+def mriq_phimag_ref(phir, phii):
+    """``|phi|^2`` per K-space sample: ``f32[K] -> f32[K]``."""
+    return phir * phir + phii * phii
+
+
+def mriq_ref(kx, ky, kz, x, y, z, phir, phii):
+    """MRI-Q Q-matrix computation.
+
+    Args:
+      kx, ky, kz: ``f32[K]`` K-space trajectory.
+      x, y, z:    ``f32[X]`` voxel coordinates.
+      phir, phii: ``f32[K]`` per-sample phase.
+
+    Returns:
+      ``(qr, qi)``: ``f32[X]`` with
+      ``q[i] = sum_k |phi[k]|^2 * exp(1j * 2*pi * (kx[k]*x[i] + ky[k]*y[i]
+      + kz[k]*z[i]))``.
+    """
+    phimag = mriq_phimag_ref(phir, phii)
+    # [X, K] phase matrix.
+    arg = TWO_PI * (
+        jnp.outer(x, kx) + jnp.outer(y, ky) + jnp.outer(z, kz)
+    )
+    qr = jnp.sum(phimag[None, :] * jnp.cos(arg), axis=1)
+    qi = jnp.sum(phimag[None, :] * jnp.sin(arg), axis=1)
+    return qr, qi

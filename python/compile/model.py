@@ -1,0 +1,47 @@
+"""L2: JAX compute graphs for the paper's sample-test applications.
+
+These are the "sample processing specified by the application to be
+accelerated" (paper §4): the computations the verification environment runs
+to measure each offload pattern. Each model wraps an L1 Pallas kernel
+(kernels/tdfir.py, kernels/mriq.py) plus the host-side staging around it,
+and is AOT-lowered once by aot.py to HLO text that the Rust runtime
+(rust/src/runtime/) loads and executes via PJRT. Python never runs on the
+request path.
+
+Default shapes (SHAPES) are the sample-test sizes compiled into the
+artifacts; the Rust side reads them from artifacts/meta.json.
+"""
+
+from __future__ import annotations
+
+from .kernels import mriq as mriq_kernel
+from .kernels import tdfir as tdfir_kernel
+
+# Sample-test sizes. tdfir mirrors the HPEC-challenge "set 1" shape scaled
+# to a CI-friendly footprint (bank of 8 filters, 32 complex taps, 1024
+# samples); mriq mirrors Parboil's small dataset scaled likewise.
+SHAPES = {
+    "tdfir": {"m": 8, "n": 1024, "k": 32},
+    "mriq": {"k": 512, "x": 1024, "block_x": 128, "block_k": 128},
+}
+
+
+def tdfir_model(xr, xi, hr, hi):
+    """Sample test for the TDFIR application.
+
+    Runs the filter bank via the Pallas kernel. Returns a flat tuple
+    ``(yr, yi)`` — the Rust loader unwraps the 1-level output tuple that
+    ``return_tuple=True`` lowering produces.
+    """
+    yr, yi = tdfir_kernel.tdfir(xr, xi, hr, hi)
+    return yr, yi
+
+
+def mriq_model(kx, ky, kz, x, y, z, phir, phii):
+    """Sample test for the MRI-Q application (default VMEM blocking)."""
+    shp = SHAPES["mriq"]
+    qr, qi = mriq_kernel.mriq(
+        kx, ky, kz, x, y, z, phir, phii,
+        block_x=shp["block_x"], block_k=shp["block_k"],
+    )
+    return qr, qi

@@ -1,0 +1,140 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Fixed-shape allclose checks for both Pallas kernels against the pure-jnp
+oracles in kernels/ref.py. Property-based shape/value sweeps live in
+test_kernel_properties.py.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import mriq as mriq_kernel
+from compile.kernels import ref
+from compile.kernels import tdfir as tdfir_kernel
+
+
+def _randn(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+class TestTdfir:
+    @pytest.mark.parametrize(
+        "m,n,k",
+        [(1, 8, 1), (1, 16, 4), (2, 32, 8), (4, 64, 16), (8, 1024, 32)],
+    )
+    def test_matches_ref(self, rng, m, n, k):
+        xr, xi = _randn(rng, m, n), _randn(rng, m, n)
+        hr, hi = _randn(rng, m, k), _randn(rng, m, k)
+        yr, yi = tdfir_kernel.tdfir(xr, xi, hr, hi)
+        er, ei = ref.tdfir_ref(xr, xi, hr, hi)
+        np.testing.assert_allclose(yr, er, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(yi, ei, rtol=1e-5, atol=1e-5)
+
+    def test_impulse_recovers_taps(self, rng):
+        """FIR of a unit impulse reproduces the tap sequence."""
+        m, n, k = 2, 64, 8
+        xr = jnp.zeros((m, n)).at[:, 0].set(1.0)
+        xi = jnp.zeros((m, n))
+        hr, hi = _randn(rng, m, k), _randn(rng, m, k)
+        yr, yi = tdfir_kernel.tdfir(xr, xi, hr, hi)
+        np.testing.assert_allclose(yr[:, :k], hr, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(yi[:, :k], hi, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(yr[:, k:], 0.0, atol=1e-6)
+
+    def test_single_tap_is_complex_scale(self, rng):
+        """K=1 degenerates to complex pointwise scaling."""
+        m, n = 3, 32
+        xr, xi = _randn(rng, m, n), _randn(rng, m, n)
+        hr, hi = _randn(rng, m, 1), _randn(rng, m, 1)
+        yr, yi = tdfir_kernel.tdfir(xr, xi, hr, hi)
+        np.testing.assert_allclose(yr, hr * xr - hi * xi, rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(yi, hr * xi + hi * xr, rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_linearity(self, rng):
+        """FIR is linear: f(a*x) == a*f(x)."""
+        m, n, k = 2, 48, 6
+        xr, xi = _randn(rng, m, n), _randn(rng, m, n)
+        hr, hi = _randn(rng, m, k), _randn(rng, m, k)
+        y1r, y1i = tdfir_kernel.tdfir(2.5 * xr, 2.5 * xi, hr, hi)
+        y2r, y2i = tdfir_kernel.tdfir(xr, xi, hr, hi)
+        np.testing.assert_allclose(y1r, 2.5 * y2r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(y1i, 2.5 * y2i, rtol=1e-4, atol=1e-5)
+
+    def test_rows_independent(self, rng):
+        """Each filter-bank row only depends on its own stream/taps."""
+        m, n, k = 4, 32, 4
+        xr, xi = _randn(rng, m, n), _randn(rng, m, n)
+        hr, hi = _randn(rng, m, k), _randn(rng, m, k)
+        full_r, full_i = tdfir_kernel.tdfir(xr, xi, hr, hi)
+        row_r, row_i = tdfir_kernel.tdfir(
+            xr[1:2], xi[1:2], hr[1:2], hi[1:2]
+        )
+        np.testing.assert_allclose(full_r[1:2], row_r, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(full_i[1:2], row_i, rtol=1e-6, atol=1e-6)
+
+
+class TestMriq:
+    @pytest.mark.parametrize(
+        "kd,xd,bk,bx",
+        [(64, 64, 64, 64), (128, 64, 64, 32), (256, 256, 64, 64),
+         (512, 1024, 128, 128)],
+    )
+    def test_matches_ref(self, rng, kd, xd, bk, bx):
+        kx, ky, kz = _randn(rng, kd), _randn(rng, kd), _randn(rng, kd)
+        phir, phii = _randn(rng, kd), _randn(rng, kd)
+        x, y, z = _randn(rng, xd), _randn(rng, xd), _randn(rng, xd)
+        qr, qi = mriq_kernel.mriq(kx, ky, kz, x, y, z, phir, phii,
+                                  block_x=bx, block_k=bk)
+        er, ei = ref.mriq_ref(kx, ky, kz, x, y, z, phir, phii)
+        np.testing.assert_allclose(qr, er, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(qi, ei, rtol=1e-4, atol=1e-3)
+
+    def test_zero_phase_gives_zero(self, rng):
+        kd, xd = 64, 64
+        z1 = jnp.zeros((kd,))
+        kx, ky, kz = _randn(rng, kd), _randn(rng, kd), _randn(rng, kd)
+        x, y, z = _randn(rng, xd), _randn(rng, xd), _randn(rng, xd)
+        qr, qi = mriq_kernel.mriq(kx, ky, kz, x, y, z, z1, z1,
+                                  block_x=64, block_k=64)
+        np.testing.assert_allclose(qr, 0.0, atol=1e-6)
+        np.testing.assert_allclose(qi, 0.0, atol=1e-6)
+
+    def test_origin_voxel_sums_phimag(self, rng):
+        """At x=y=z=0 the exponential is 1, so qr = sum(|phi|^2), qi = 0."""
+        kd, xd = 128, 64
+        kx, ky, kz = _randn(rng, kd), _randn(rng, kd), _randn(rng, kd)
+        phir, phii = _randn(rng, kd), _randn(rng, kd)
+        zeros = jnp.zeros((xd,))
+        qr, qi = mriq_kernel.mriq(kx, ky, kz, zeros, zeros, zeros,
+                                  phir, phii, block_x=64, block_k=64)
+        expect = float(jnp.sum(phir**2 + phii**2))
+        np.testing.assert_allclose(qr, expect, rtol=1e-5)
+        np.testing.assert_allclose(qi, 0.0, atol=1e-4)
+
+    def test_blocking_invariance(self, rng):
+        """Different VMEM tilings must give identical results."""
+        kd, xd = 256, 128
+        kx, ky, kz = _randn(rng, kd), _randn(rng, kd), _randn(rng, kd)
+        phir, phii = _randn(rng, kd), _randn(rng, kd)
+        x, y, z = _randn(rng, xd), _randn(rng, xd), _randn(rng, xd)
+        a = mriq_kernel.mriq(kx, ky, kz, x, y, z, phir, phii,
+                             block_x=128, block_k=256)
+        b = mriq_kernel.mriq(kx, ky, kz, x, y, z, phir, phii,
+                             block_x=32, block_k=64)
+        np.testing.assert_allclose(a[0], b[0], rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(a[1], b[1], rtol=1e-5, atol=1e-4)
+
+    def test_bad_blocking_raises(self, rng):
+        kd, xd = 96, 64
+        arrs = [_randn(rng, kd)] * 3 + [_randn(rng, xd)] * 3 \
+            + [_randn(rng, kd)] * 2
+        with pytest.raises(ValueError, match="block sizes must divide"):
+            mriq_kernel.mriq(*arrs, block_x=64, block_k=64)

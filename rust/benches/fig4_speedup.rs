@@ -1,0 +1,94 @@
+//! Fig. 4 reproduction: performance improvement of the automatic FPGA
+//! offloading solution vs all-CPU, for both evaluated applications.
+//!
+//! Paper: tdfir 4.0x, MRI-Q 7.1x. The absolute numbers come from the
+//! calibrated Arria10/Xeon models (DESIGN.md §2); the claims under test
+//! are the magnitudes (≈4x / ≈7x) and the ordering (MRI-Q > tdfir).
+
+use fpga_offload::analysis::analyze;
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::minic::parse;
+use fpga_offload::search::{search, SearchConfig};
+use fpga_offload::util::bench::{bench, save_results, Table};
+use fpga_offload::util::json::Json;
+use fpga_offload::workloads;
+
+fn solve(app: &str, src: &str) -> fpga_offload::search::OffloadSolution {
+    let prog = parse(src).expect("parse");
+    let an = analyze(&prog, "main").expect("profile");
+    search(
+        app,
+        &prog,
+        &an,
+        &SearchConfig::default(),
+        &XEON_BRONZE_3104,
+        &ARRIA10_GX,
+    )
+    .expect("search")
+}
+
+fn main() {
+    println!("== Fig. 4: performance improvement of automatic FPGA offloading ==\n");
+
+    let apps = [
+        ("tdfir", workloads::TDFIR_C, 4.0),
+        ("mriq", workloads::MRIQ_C, 7.1),
+    ];
+
+    let mut table = Table::new(&[
+        "application",
+        "paper",
+        "measured",
+        "pattern",
+        "patterns measured",
+        "automation h",
+    ]);
+    let mut results = Vec::new();
+    let mut speedups = Vec::new();
+
+    for (app, src, paper) in apps {
+        // Time the full search itself (the coordinator hot path).
+        let mut sol = None;
+        bench(&format!("fig4/search/{app}"), 0, 3, || {
+            sol = Some(solve(app, src));
+        });
+        let sol = sol.unwrap();
+        table.row(&[
+            app.to_string(),
+            format!("{paper:.1}x"),
+            format!("{:.2}x", sol.speedup()),
+            sol.best_measurement().label(),
+            sol.measurements.len().to_string(),
+            format!("{:.1}", sol.automation_s / 3600.0),
+        ]);
+        results.push((app, sol.speedup()));
+        speedups.push(sol.speedup());
+    }
+
+    println!();
+    table.print();
+
+    // Shape assertions (who wins, by roughly what factor).
+    let (tdfir, mriq) = (speedups[0], speedups[1]);
+    assert!(
+        (2.5..7.0).contains(&tdfir),
+        "tdfir speedup {tdfir:.2} not in the paper's ballpark (4.0x)"
+    );
+    assert!(
+        (5.0..10.0).contains(&mriq),
+        "mriq speedup {mriq:.2} not in the paper's ballpark (7.1x)"
+    );
+    assert!(mriq > tdfir, "paper ordering: MRI-Q > tdfir");
+    println!("\nshape check: PASS (tdfir≈4x, mriq≈7x, mriq > tdfir)");
+
+    save_results(
+        "fig4_speedup",
+        &Json::obj(
+            results
+                .iter()
+                .map(|(app, s)| (*app, Json::Num(*s)))
+                .collect(),
+        ),
+    );
+}

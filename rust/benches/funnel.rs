@@ -1,0 +1,84 @@
+//! Fig. 2 reproduction: the narrowing funnel's stage sizes and per-stage
+//! cost for both applications.
+//!
+//! Paper §5.1.2: 36 (tdfir) / 16 (MRI-Q) loops → top-5 arithmetic
+//! intensity → top-3 resource efficiency → ≤4 measured patterns. The cheap
+//! stages (profiling, pre-compiles) run in milliseconds here; the
+//! expensive stage (measured patterns) is what the funnel minimizes.
+
+use fpga_offload::analysis::analyze;
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::minic::parse;
+use fpga_offload::search::{funnel, search, SearchConfig};
+use fpga_offload::util::bench::{bench, save_results, Table};
+use fpga_offload::util::json::Json;
+use fpga_offload::workloads;
+
+fn main() {
+    println!("== Fig. 2: narrowing funnel stages ==\n");
+    let cfg = SearchConfig::default();
+    let mut table = Table::new(&[
+        "application",
+        "loops",
+        "offloadable",
+        "top-A",
+        "top-C",
+        "measured",
+        "paper loops",
+    ]);
+    let mut out = Vec::new();
+
+    for (app, src, paper_loops) in [
+        ("tdfir", workloads::TDFIR_C, 36.0),
+        ("mriq", workloads::MRIQ_C, 16.0),
+    ] {
+        let prog = parse(src).unwrap();
+
+        // Stage timings.
+        bench(&format!("funnel/parse/{app}"), 1, 10, || {
+            let _ = parse(src).unwrap();
+        });
+        let mut an = None;
+        bench(&format!("funnel/profile/{app}"), 0, 3, || {
+            an = Some(analyze(&prog, "main").unwrap());
+        });
+        let an = an.unwrap();
+        bench(&format!("funnel/narrow/{app}"), 1, 10, || {
+            let _ = funnel::run(&prog, &an, &cfg, &ARRIA10_GX).unwrap();
+        });
+
+        let (_, trace) = funnel::run(&prog, &an, &cfg, &ARRIA10_GX).unwrap();
+        let sol = search(app, &prog, &an, &cfg, &XEON_BRONZE_3104, &ARRIA10_GX)
+            .unwrap();
+
+        assert_eq!(trace.total_loops as f64, paper_loops, "{app} loop count");
+        assert!(trace.top_a.len() <= cfg.top_a);
+        assert!(trace.top_c.len() <= cfg.top_c);
+        assert!(sol.measurements.len() <= cfg.max_patterns);
+
+        table.row(&[
+            app.into(),
+            trace.total_loops.to_string(),
+            trace.offloadable.len().to_string(),
+            trace.top_a.len().to_string(),
+            trace.top_c.len().to_string(),
+            sol.measurements.len().to_string(),
+            format!("{paper_loops}"),
+        ]);
+        out.push((
+            app,
+            Json::Arr(vec![
+                Json::Num(trace.total_loops as f64),
+                Json::Num(trace.top_a.len() as f64),
+                Json::Num(trace.top_c.len() as f64),
+                Json::Num(sol.measurements.len() as f64),
+            ]),
+        ));
+    }
+
+    println!();
+    table.print();
+    println!("\nshape check: PASS (36/16 loops, ≤5 → ≤3 → ≤4 funnel)");
+    save_results("funnel", &Json::obj(out));
+}

@@ -1,0 +1,100 @@
+//! Ablation: funnel widths A (intensity) and C (resource efficiency) vs
+//! solution quality and measurement cost, on tdfir.
+//!
+//! The paper fixes A=5, C=3 (§5.1.2). This sweep shows the trade the
+//! numbers buy: narrower funnels risk missing the winner; wider funnels
+//! buy nothing but compiles. Solution quality is scored against the
+//! exhaustive single-loop optimum.
+
+use fpga_offload::analysis::analyze;
+use fpga_offload::codegen::split;
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::fpga::simulate;
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::minic::parse;
+use fpga_offload::search::{search, SearchConfig};
+use fpga_offload::util::bench::{save_results, Table};
+use fpga_offload::util::json::Json;
+use fpga_offload::workloads;
+
+fn main() {
+    println!("== ablation: funnel widths A and C (tdfir) ==\n");
+    let prog = parse(workloads::TDFIR_C).unwrap();
+    let an = analyze(&prog, "main").unwrap();
+
+    // Exhaustive single-loop optimum (the oracle).
+    let mut oracle = 1.0f64;
+    for al in &an.loops {
+        if !al.candidate() {
+            continue;
+        }
+        let Ok(sp) = split(&prog, al) else { continue };
+        if let Ok(t) =
+            simulate(&an, &[sp.kernel], &XEON_BRONZE_3104, &ARRIA10_GX)
+        {
+            oracle = oracle.max(t.speedup);
+        }
+    }
+    println!("exhaustive single-loop oracle: {oracle:.2}x\n");
+
+    let mut table = Table::new(&[
+        "A", "C", "measured", "speedup", "vs oracle", "hit",
+    ]);
+    let mut results = Vec::new();
+    for a in [1usize, 2, 3, 5, 8] {
+        for c in [1usize, 2, 3].iter().copied().filter(|c| *c <= a) {
+            let cfg = SearchConfig {
+                top_a: a,
+                top_c: c,
+                first_round: c.min(3),
+                max_patterns: c.min(3) + 1,
+                ..Default::default()
+            };
+            let sol = match search(
+                "tdfir",
+                &prog,
+                &an,
+                &cfg,
+                &XEON_BRONZE_3104,
+                &ARRIA10_GX,
+            ) {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let ratio = sol.speedup() / oracle;
+            table.row(&[
+                a.to_string(),
+                c.to_string(),
+                sol.measurements.len().to_string(),
+                format!("{:.2}x", sol.speedup()),
+                format!("{:.0}%", ratio * 100.0),
+                if ratio > 0.99 { "yes" } else { "no" }.into(),
+            ]);
+            results.push(Json::Arr(vec![
+                Json::Num(a as f64),
+                Json::Num(c as f64),
+                Json::Num(sol.speedup()),
+            ]));
+        }
+    }
+    table.print();
+
+    // The paper's setting must hit the oracle.
+    let paper = search(
+        "tdfir",
+        &prog,
+        &an,
+        &SearchConfig::default(),
+        &XEON_BRONZE_3104,
+        &ARRIA10_GX,
+    )
+    .unwrap();
+    assert!(
+        paper.speedup() >= oracle * 0.99,
+        "A=5/C=3 must find the single-loop oracle: {:.2} vs {:.2}",
+        paper.speedup(),
+        oracle
+    );
+    println!("\nshape check: PASS (A=5, C=3 reaches the oracle)");
+    save_results("narrowing", &Json::Arr(results));
+}

@@ -1,0 +1,100 @@
+//! §Perf bench: the coordinator's own hot path (no modeled compiles —
+//! the real wall-clock cost of parse → typecheck → profile → funnel →
+//! simulate on this machine).
+//!
+//! The profiling run (the instrumented interpreter over ~10^5..10^6 loop
+//! iterations) dominates; everything else must be sub-millisecond. This
+//! is the bench the §Perf optimization pass iterates against.
+
+use fpga_offload::analysis::analyze;
+use fpga_offload::codegen::split;
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::fpga::simulate;
+use fpga_offload::hls::{estimate, precompile, ARRIA10_GX};
+use fpga_offload::minic::{parse, typecheck, Interp};
+use fpga_offload::search::{funnel, search, SearchConfig};
+use fpga_offload::util::bench::{bench, save_results};
+use fpga_offload::util::json::Json;
+use fpga_offload::workloads;
+
+fn main() {
+    println!("== coordinator hot path (real wall-clock) ==\n");
+    let src = workloads::TDFIR_C;
+    let cfg = SearchConfig::default();
+
+    let s_parse = bench("hotpath/parse(tdfir.c)", 3, 50, || {
+        let _ = parse(src).unwrap();
+    });
+    let prog = parse(src).unwrap();
+
+    let s_check = bench("hotpath/typecheck", 3, 50, || {
+        assert!(typecheck::check(&prog).is_empty());
+    });
+
+    let s_profile = bench("hotpath/profile(interpreter)", 1, 5, || {
+        let mut i = Interp::new(&prog).unwrap();
+        i.call("main", &[]).unwrap();
+    });
+
+    let an = analyze(&prog, "main").unwrap();
+    let s_funnel = bench("hotpath/funnel(narrow+precompile)", 3, 50, || {
+        let _ = funnel::run(&prog, &an, &cfg, &ARRIA10_GX).unwrap();
+    });
+
+    // First rank-ordered candidate that the splitter accepts (top-ranked
+    // loops can be rejected, e.g. scalar write-back shapes).
+    let (al, sp) = an
+        .ranked_candidates()
+        .into_iter()
+        .find_map(|al| split(&prog, al).ok().map(|sp| (al, sp)))
+        .expect("a splittable candidate");
+    let s_estimate = bench("hotpath/estimate(one kernel)", 10, 200, || {
+        let _ = estimate(&sp.kernel);
+    });
+    let s_report = bench("hotpath/precompile-report", 10, 200, || {
+        let _ = precompile(
+            &sp.kernel,
+            al.intensity.as_ref().unwrap(),
+            &ARRIA10_GX,
+        );
+    });
+    let s_sim = bench("hotpath/simulate(one pattern)", 10, 200, || {
+        let _ =
+            simulate(&an, &[sp.kernel.clone()], &XEON_BRONZE_3104, &ARRIA10_GX)
+                .unwrap();
+    });
+    let s_search = bench("hotpath/full-search(no profiling)", 1, 5, || {
+        let _ = search(
+            "tdfir",
+            &prog,
+            &an,
+            &cfg,
+            &XEON_BRONZE_3104,
+            &ARRIA10_GX,
+        )
+        .unwrap();
+    });
+
+    // §Perf targets (DESIGN.md §6): static stages in single-digit ms;
+    // the profiling interpreter is the only stage allowed above that.
+    assert!(s_parse.mean_ms() < 10.0, "parse too slow");
+    assert!(s_check.mean_ms() < 10.0, "typecheck too slow");
+    assert!(s_funnel.mean_ms() < 10.0, "funnel too slow");
+    assert!(s_estimate.mean_ms() < 1.0, "estimate too slow");
+    assert!(s_sim.mean_ms() < 1.0, "simulate too slow");
+    println!("\nperf targets: PASS (static pipeline in single-digit ms)");
+
+    save_results(
+        "pipeline_hotpath",
+        &Json::obj(vec![
+            ("parse_ms", Json::Num(s_parse.mean_ms())),
+            ("typecheck_ms", Json::Num(s_check.mean_ms())),
+            ("profile_ms", Json::Num(s_profile.mean_ms())),
+            ("funnel_ms", Json::Num(s_funnel.mean_ms())),
+            ("estimate_ms", Json::Num(s_estimate.mean_ms())),
+            ("report_ms", Json::Num(s_report.mean_ms())),
+            ("simulate_ms", Json::Num(s_sim.mean_ms())),
+            ("search_ms", Json::Num(s_search.mean_ms())),
+        ]),
+    );
+}

@@ -1,0 +1,84 @@
+//! Ablation: the CPU/FPGA crossover as compute density varies (§2's
+//! motivation: "naive parallel processing performances with FPGAs or GPUs
+//! are not high because of overheads of CPU and FPGA/GPU devices memory
+//! data transfer").
+//!
+//! A synthetic elementwise loop is swept from pure copy (0 trig calls per
+//! element) to trig-dense (4 calls). Low densities must LOSE when
+//! offloaded (transfer-dominated), high densities must win — the
+//! landscape that makes arithmetic-intensity narrowing meaningful.
+
+use fpga_offload::analysis::analyze;
+use fpga_offload::codegen::split;
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::fpga::simulate;
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::minic::ast::LoopId;
+use fpga_offload::minic::parse;
+use fpga_offload::util::bench::{save_results, Table};
+use fpga_offload::util::json::Json;
+
+fn app_with_density(trig_calls: usize) -> String {
+    let expr = match trig_calls {
+        0 => "a[i]".to_string(),
+        n => {
+            let mut e = "a[i]".to_string();
+            for k in 0..n {
+                let f = ["sin", "cos", "sqrt", "exp"][k % 4];
+                e = format!("{f}({e} + 0.1)");
+            }
+            e
+        }
+    };
+    format!(
+        "#define N 8192\nfloat a[N]; float b[N];\n\
+         int main() {{\n\
+           for (int i = 0; i < N; i++) {{ a[i] = (i % 97) * 0.01; }}\n\
+           for (int i = 0; i < N; i++) {{ b[i] = {expr}; }}\n\
+           return 0;\n\
+         }}"
+    )
+}
+
+fn main() {
+    println!("== transfer/compute crossover (synthetic elementwise loop) ==\n");
+    let mut table = Table::new(&[
+        "trig calls/elem", "speedup", "verdict",
+    ]);
+    let mut speedups = Vec::new();
+    let mut results = Vec::new();
+
+    for density in [0usize, 1, 2, 3, 4] {
+        let src = app_with_density(density);
+        let prog = parse(&src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let al = an.loop_by_id(LoopId(1)).unwrap();
+        let sp = split(&prog, al).unwrap();
+        let t = simulate(&an, &[sp.kernel], &XEON_BRONZE_3104, &ARRIA10_GX)
+            .unwrap();
+        table.row(&[
+            density.to_string(),
+            format!("{:.2}x", t.speedup),
+            if t.speedup > 1.0 { "offload" } else { "stay on CPU" }.into(),
+        ]);
+        speedups.push(t.speedup);
+        results.push(Json::Arr(vec![
+            Json::Num(density as f64),
+            Json::Num(t.speedup),
+        ]));
+    }
+    table.print();
+
+    // Shape: monotone in density; copy loses, dense wins, a crossover
+    // exists in between.
+    for w in speedups.windows(2) {
+        assert!(w[1] >= w[0] * 0.98, "speedup must not fall with density");
+    }
+    assert!(speedups[0] < 1.0, "pure copy must lose: {:.2}", speedups[0]);
+    assert!(
+        *speedups.last().unwrap() > 2.0,
+        "trig-dense must win clearly"
+    );
+    println!("\nshape check: PASS (copy loses, dense wins, crossover in between)");
+    save_results("transfer_crossover", &Json::Arr(results));
+}

@@ -1,0 +1,495 @@
+//! Loop-carried dependence classification.
+//!
+//! Drives two decisions downstream:
+//! * [`crate::hls::schedule`] — the pipeline initiation interval (II): an
+//!   independent loop streams one iteration per cycle, a reduction pays
+//!   the accumulator latency, a true carried dependence serializes.
+//! * parallel replication (multiple kernel instances) is only valid for
+//!   independent loops.
+//!
+//! Method: the body is linearized into an *event sequence* (scalar/array
+//! reads and writes in evaluation order — RHS before LHS). A non-local
+//! scalar read before its first write carries a value across iterations;
+//! recognized reduction updates (`s += e`, `s = s ± e`) are exempted. An
+//! array written at index `I` and read anywhere at a textually different
+//! index is conservatively carried (the paper's analysis likewise defers
+//! borderline cases to measurement).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::minic::ast::*;
+
+/// Dependence classification for one loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Dependence {
+    /// Iterations are independent — fully pipelineable/replicable.
+    Independent,
+    /// Scalar reduction(s): pipelineable with accumulator latency.
+    Reduction(BTreeSet<String>),
+    /// A loop-carried dependence through the named variable/array.
+    Carried(String),
+}
+
+impl Dependence {
+    pub fn parallelizable(&self) -> bool {
+        matches!(self, Dependence::Independent)
+    }
+
+    pub fn pipelineable(&self) -> bool {
+        !matches!(self, Dependence::Carried(_))
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Event {
+    ReadScalar(String),
+    /// `reduction=true` for `s += e` / `s = s ⊕ e` shapes (the self-read
+    /// is folded into the update and not emitted separately).
+    WriteScalar { name: String, reduction: bool },
+    ReadArray { base: String, idx: Vec<Expr> },
+    WriteArray { base: String, idx: Vec<Expr> },
+}
+
+/// Classify the carried dependences of a loop body w.r.t. the given
+/// induction variable.
+pub fn classify(body: &[Stmt], induction: Option<&str>) -> Dependence {
+    // Locals declared anywhere in the body are iteration-private.
+    let mut local: BTreeSet<String> = BTreeSet::new();
+    for s in body {
+        s.walk(&mut |s| {
+            if let Stmt::Decl { name, .. } = s {
+                local.insert(name.clone());
+            }
+            if let Stmt::For { init: Some(i), .. } = s {
+                if let Stmt::Decl { name, .. } = i.as_ref() {
+                    local.insert(name.clone());
+                }
+            }
+        });
+    }
+    // Inner-loop induction variables are private too.
+    for s in body {
+        s.walk(&mut |s| {
+            if let Stmt::For { init: Some(i), .. } = s {
+                if let Stmt::Assign {
+                    target: LValue::Var(n),
+                    ..
+                } = i.as_ref()
+                {
+                    local.insert(n.clone());
+                }
+            }
+        });
+    }
+
+    let mut events = Vec::new();
+    for s in body {
+        emit_stmt(s, &mut events);
+    }
+
+    // ---- array dependences ----
+    let mut array_writes: BTreeMap<&str, Vec<&Vec<Expr>>> = BTreeMap::new();
+    for e in &events {
+        if let Event::WriteArray { base, idx } = e {
+            array_writes.entry(base).or_default().push(idx);
+        }
+    }
+    for e in &events {
+        if let Event::ReadArray { base, idx } = e {
+            if let Some(writes) = array_writes.get(base.as_str()) {
+                if writes.iter().any(|w| w.as_slice() != idx.as_slice()) {
+                    return Dependence::Carried(base.clone());
+                }
+            }
+        }
+    }
+
+    // ---- scalar dependences (event order) ----
+    let is_tracked = |n: &str| {
+        !local.contains(n) && Some(n) != induction
+    };
+    #[derive(Default, Clone)]
+    struct ScalarState {
+        read_first: bool,
+        written: bool,
+        plain_write: bool,     // non-reduction write
+        reduction_write: bool, // reduction-shaped write
+        read_after_write: bool,
+    }
+    let mut state: BTreeMap<String, ScalarState> = BTreeMap::new();
+    for e in &events {
+        match e {
+            Event::ReadScalar(n) if is_tracked(n) => {
+                let st = state.entry(n.clone()).or_default();
+                if st.written {
+                    st.read_after_write = true;
+                } else {
+                    st.read_first = true;
+                }
+            }
+            Event::WriteScalar { name, reduction } if is_tracked(name) => {
+                let st = state.entry(name.clone()).or_default();
+                st.written = true;
+                if *reduction {
+                    st.reduction_write = true;
+                } else {
+                    st.plain_write = true;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let mut reductions = BTreeSet::new();
+    for (name, st) in &state {
+        if !st.written {
+            continue; // read-only outer scalar: a kernel argument, fine.
+        }
+        if st.reduction_write && !st.plain_write && !st.read_first
+            && !st.read_after_write
+        {
+            // Pure accumulator: only reduction updates, never read.
+            reductions.insert(name.clone());
+            continue;
+        }
+        if st.reduction_write {
+            // Reduction value observed inside the iteration (prefix sum)
+            // or mixed with plain writes: order-dependent → carried.
+            return Dependence::Carried(name.clone());
+        }
+        if st.read_first {
+            // Value flows in from the previous iteration.
+            return Dependence::Carried(name.clone());
+        }
+        // Write-first then (maybe) read: privatizable.
+    }
+
+    if reductions.is_empty() {
+        Dependence::Independent
+    } else {
+        Dependence::Reduction(reductions)
+    }
+}
+
+/// Emit events for a statement, RHS before LHS (evaluation order).
+fn emit_stmt(s: &Stmt, out: &mut Vec<Event>) {
+    match s {
+        Stmt::Decl { init, .. } => {
+            if let Some(e) = init {
+                emit_expr(e, out);
+            }
+        }
+        Stmt::Assign { target, op, value, .. } => {
+            match target {
+                LValue::Var(name) => {
+                    let reduction = match op {
+                        AssignOp::AddSet
+                        | AssignOp::SubSet
+                        | AssignOp::MulSet
+                        | AssignOp::DivSet => {
+                            emit_expr(value, out);
+                            true
+                        }
+                        AssignOp::Set => {
+                            if let Some(rest) = self_update_rest(name, value) {
+                                emit_expr(rest, out);
+                                true
+                            } else {
+                                emit_expr(value, out);
+                                false
+                            }
+                        }
+                    };
+                    out.push(Event::WriteScalar {
+                        name: name.clone(),
+                        reduction,
+                    });
+                }
+                LValue::Index { base, indices } => {
+                    emit_expr(value, out);
+                    for i in indices {
+                        emit_expr(i, out);
+                    }
+                    if *op != AssignOp::Set {
+                        // Compound array update reads the element first.
+                        out.push(Event::ReadArray {
+                            base: base.clone(),
+                            idx: indices.clone(),
+                        });
+                    }
+                    out.push(Event::WriteArray {
+                        base: base.clone(),
+                        idx: indices.clone(),
+                    });
+                }
+            }
+        }
+        Stmt::If {
+            cond,
+            then_branch,
+            else_branch,
+            ..
+        } => {
+            emit_expr(cond, out);
+            for s in then_branch.iter().chain(else_branch) {
+                emit_stmt(s, out);
+            }
+        }
+        Stmt::For {
+            init, cond, step, body, ..
+        } => {
+            if let Some(s) = init {
+                emit_stmt(s, out);
+            }
+            if let Some(c) = cond {
+                emit_expr(c, out);
+            }
+            for s in body {
+                emit_stmt(s, out);
+            }
+            if let Some(s) = step {
+                emit_stmt(s, out);
+            }
+        }
+        Stmt::While { cond, body, .. } => {
+            emit_expr(cond, out);
+            for s in body {
+                emit_stmt(s, out);
+            }
+        }
+        Stmt::Return { value, .. } => {
+            if let Some(e) = value {
+                emit_expr(e, out);
+            }
+        }
+        Stmt::ExprStmt { expr, .. } => emit_expr(expr, out),
+    }
+}
+
+fn emit_expr(e: &Expr, out: &mut Vec<Event>) {
+    match e {
+        Expr::Var(n) => out.push(Event::ReadScalar(n.clone())),
+        Expr::Index { base, indices } => {
+            for i in indices {
+                emit_expr(i, out);
+            }
+            out.push(Event::ReadArray {
+                base: base.clone(),
+                idx: indices.clone(),
+            });
+        }
+        Expr::Bin { lhs, rhs, .. } => {
+            emit_expr(lhs, out);
+            emit_expr(rhs, out);
+        }
+        Expr::Un { operand, .. } | Expr::Cast { operand, .. } => {
+            emit_expr(operand, out)
+        }
+        Expr::Call { args, .. } => {
+            for a in args {
+                emit_expr(a, out);
+            }
+        }
+        Expr::IntLit(_) | Expr::FloatLit(_) | Expr::StrLit(_) => {}
+    }
+}
+
+/// If `value` is `name ⊕ rest` or `rest ⊕ name` (⊕ ∈ {+, -, *}) with a
+/// single occurrence of `name`, return the non-self operand.
+fn self_update_rest<'a>(name: &str, value: &'a Expr) -> Option<&'a Expr> {
+    if let Expr::Bin { op, lhs, rhs } = value {
+        if !matches!(op, BinOp::Add | BinOp::Sub | BinOp::Mul) {
+            return None;
+        }
+        let l_is = matches!(lhs.as_ref(), Expr::Var(n) if n == name);
+        let r_is = matches!(rhs.as_ref(), Expr::Var(n) if n == name);
+        if l_is && !expr_reads_var(rhs, name) {
+            return Some(rhs);
+        }
+        if r_is && !expr_reads_var(lhs, name) && *op != BinOp::Sub {
+            return Some(lhs);
+        }
+    }
+    None
+}
+
+fn expr_reads_var(e: &Expr, name: &str) -> bool {
+    let mut found = false;
+    e.walk(&mut |e| {
+        if let Expr::Var(n) = e {
+            if n == name {
+                found = true;
+            }
+        }
+    });
+    found
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::parse;
+
+    fn classify_loop0(src: &str) -> Dependence {
+        let prog = parse(src).unwrap();
+        let info = crate::analysis::loopinfo::extract(&prog);
+        let ind = info[0].induction.clone();
+        let mut result = None;
+        prog.walk_stmts(&mut |s| {
+            if result.is_none() {
+                if let Stmt::For { id, body, .. } = s {
+                    if id.0 == 0 {
+                        result = Some(classify(body, ind.as_deref()));
+                    }
+                }
+            }
+        });
+        result.expect("no loop")
+    }
+
+    #[test]
+    fn elementwise_is_independent() {
+        let d = classify_loop0(
+            "#define N 4\nfloat a[N]; float b[N];\n
+             void f() { for (int i = 0; i < N; i++) { b[i] = a[i] * 2.0; } }",
+        );
+        assert_eq!(d, Dependence::Independent);
+    }
+
+    #[test]
+    fn same_index_update_is_independent() {
+        let d = classify_loop0(
+            "#define N 4\nfloat a[N];\n
+             void f() { for (int i = 0; i < N; i++) { a[i] = a[i] * 2.0; } }",
+        );
+        assert_eq!(d, Dependence::Independent);
+    }
+
+    #[test]
+    fn accumulator_is_reduction() {
+        let d = classify_loop0(
+            "#define N 4\nfloat a[N];\nfloat s;\n
+             void f() { for (int i = 0; i < N; i++) { s += a[i]; } }",
+        );
+        match d {
+            Dependence::Reduction(vars) => assert!(vars.contains("s")),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn explicit_self_add_is_reduction() {
+        let d = classify_loop0(
+            "#define N 4\nfloat a[N];\nfloat s;\n
+             void f() { for (int i = 0; i < N; i++) { s = s + a[i]; } }",
+        );
+        assert!(matches!(d, Dependence::Reduction(_)));
+    }
+
+    #[test]
+    fn stencil_is_carried() {
+        let d = classify_loop0(
+            "#define N 8\nfloat a[N];\n
+             void f() { for (int i = 1; i < N; i++) { a[i] = a[i - 1] + 1.0; } }",
+        );
+        assert_eq!(d, Dependence::Carried("a".to_string()));
+    }
+
+    #[test]
+    fn gather_read_other_array_ok() {
+        let d = classify_loop0(
+            "#define N 8\nfloat a[N]; float b[N];\n
+             void f() { for (int i = 1; i < N; i++) { b[i] = a[i - 1] + a[i]; } }",
+        );
+        assert_eq!(d, Dependence::Independent);
+    }
+
+    #[test]
+    fn prefix_sum_is_carried() {
+        let d = classify_loop0(
+            "#define N 8\nfloat a[N]; float b[N];\nfloat s;\n
+             void f() { for (int i = 0; i < N; i++) { s += a[i]; b[i] = s; } }",
+        );
+        assert!(matches!(d, Dependence::Carried(v) if v == "s"));
+    }
+
+    #[test]
+    fn private_temp_is_fine() {
+        let d = classify_loop0(
+            "#define N 8\nfloat a[N]; float b[N];\n
+             void f() {
+               for (int i = 0; i < N; i++) {
+                 float t = a[i] * 2.0;
+                 b[i] = t + 1.0;
+               }
+             }",
+        );
+        assert_eq!(d, Dependence::Independent);
+    }
+
+    #[test]
+    fn overwritten_outer_scalar_is_privatized() {
+        let d = classify_loop0(
+            "#define N 8\nfloat a[N]; float b[N];\nfloat t;\n
+             void f() {
+               for (int i = 0; i < N; i++) { t = a[i]; b[i] = t * t; }
+             }",
+        );
+        assert_eq!(d, Dependence::Independent);
+    }
+
+    #[test]
+    fn read_before_write_scalar_is_carried() {
+        // `a[i] = t` reads last iteration's t before `t = a[i] + 1`.
+        let d = classify_loop0(
+            "#define N 8\nfloat a[N];\nfloat t;\n
+             void f() {
+               for (int i = 0; i < N; i++) { a[i] = t; t = a[i] + 1.0; }
+             }",
+        );
+        assert_eq!(d, Dependence::Carried("t".to_string()));
+    }
+
+    #[test]
+    fn read_only_outer_scalar_is_fine() {
+        let d = classify_loop0(
+            "#define N 8\nfloat a[N];\nfloat scale;\n
+             void f() { for (int i = 0; i < N; i++) { a[i] = a[i] * scale; } }",
+        );
+        assert_eq!(d, Dependence::Independent);
+    }
+
+    #[test]
+    fn inner_loop_reduction_into_array_is_independent_outer() {
+        // Classic matmul-ish shape: inner accumulates into a local.
+        let d = classify_loop0(
+            "#define N 4\nfloat a[N][N]; float x[N]; float y[N];\n
+             void f() {
+               for (int i = 0; i < N; i++) {
+                 float acc = 0.0;
+                 for (int j = 0; j < N; j++) { acc += a[i][j] * x[j]; }
+                 y[i] = acc;
+               }
+             }",
+        );
+        assert_eq!(d, Dependence::Independent);
+    }
+
+    #[test]
+    fn compound_array_update_same_index_ok() {
+        let d = classify_loop0(
+            "#define N 8\nfloat a[N];\n
+             void f() { for (int i = 0; i < N; i++) { a[i] += 1.0; } }",
+        );
+        assert_eq!(d, Dependence::Independent);
+    }
+
+    #[test]
+    fn global_accumulator_array_different_index_carried() {
+        let d = classify_loop0(
+            "#define N 8\nfloat a[N];\n
+             void f() { for (int i = 0; i < N; i++) { a[0] = a[0] + a[i]; } }",
+        );
+        assert_eq!(d, Dependence::Carried("a".to_string()));
+    }
+}

@@ -1,0 +1,189 @@
+//! Arithmetic-intensity analysis (the PGI-compiler analog, paper §3.3/§4).
+//!
+//! The paper's indicator: "an index that increases when the number of
+//! loops and the amount of data are large, and decreases when the number
+//! of accesses is large". We compute it from the dynamic profile (the
+//! gcov-analog run of [`crate::minic::Interp`]):
+//!
+//! ```text
+//! intensity(L)  = flops(L) / accesses(L)        (ops per array access)
+//! flop_byte(L)  = flops(L) / bytes(L)           (classic roofline AI)
+//! work(L)       = flops(L)                      (absolute weight)
+//! score(L)      = intensity(L) × work(L)        (the narrowing key)
+//! ```
+//!
+//! `score` is the narrowing key (top-A). Both factors matter: the paper's
+//! indicator "increases when the number of loops and the amount of data
+//! are large" (that's `work` — total flops already scale with trip count)
+//! "and decreases when the number of accesses is large" (that's the
+//! `intensity` ratio). Ranking by the ratio alone would let a
+//! 10-iteration loop with a lucky flop/access ratio displace the real hot
+//! loop; ranking by work alone would pick memory-bound giants.
+//! Transcendentals are weighted: one sin/cos on the Xeon costs ~20-40
+//! scalar flops, and on the FPGA consumes a big CORDIC pipeline; counting
+//! them as `TRIG_FLOP_WEIGHT` flops keeps both models honest.
+
+use crate::minic::ast::LoopId;
+use crate::minic::{OpCounts, Profile};
+
+/// Effective flops charged per transcendental call (sin/cos/exp/...).
+pub const TRIG_FLOP_WEIGHT: u64 = 24;
+
+/// Per-loop intensity record.
+#[derive(Debug, Clone)]
+pub struct LoopIntensity {
+    pub id: LoopId,
+    /// Weighted flops in the loop subtree (trig-weighted).
+    pub work: u64,
+    /// Array accesses (reads + writes).
+    pub accesses: u64,
+    /// Bytes moved by those accesses.
+    pub bytes: u64,
+    /// Total iterations observed.
+    pub trips: u64,
+    /// Ops per array access.
+    pub intensity: f64,
+    /// Classic flop/byte (for the roofline view).
+    pub flop_byte: f64,
+    /// The narrowing key: `intensity × work`.
+    pub score: f64,
+}
+
+/// Weighted flop count for an op-count record.
+pub fn weighted_flops(ops: &OpCounts) -> u64 {
+    ops.f_add + ops.f_mul + ops.f_div + ops.f_trig * TRIG_FLOP_WEIGHT
+}
+
+/// Compute intensity for every profiled loop, sorted descending by
+/// `score` — the order the funnel consumes.
+pub fn rank(profile: &Profile) -> Vec<LoopIntensity> {
+    let mut out: Vec<LoopIntensity> = profile
+        .loops
+        .iter()
+        .map(|(id, lp)| {
+            let work = weighted_flops(&lp.ops);
+            let accesses = lp.ops.reads + lp.ops.writes;
+            let bytes = lp.ops.bytes();
+            let intensity = work as f64 / accesses.max(1) as f64;
+            LoopIntensity {
+                id: *id,
+                work,
+                accesses,
+                bytes,
+                trips: lp.trips,
+                intensity,
+                flop_byte: work as f64 / bytes.max(1) as f64,
+                score: intensity * work as f64,
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| {
+        b.score
+            .partial_cmp(&a.score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b.work.cmp(&a.work))
+            .then(a.id.cmp(&b.id))
+    });
+    out
+}
+
+/// Keep the top `a` records (the paper's "top A loop statements with the
+/// highest arithmetic intensity", §4).
+pub fn top_a(ranked: &[LoopIntensity], a: usize) -> Vec<LoopIntensity> {
+    ranked.iter().take(a).cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::{parse, Interp};
+
+    fn profile_of(src: &str) -> Profile {
+        let prog = parse(src).unwrap();
+        let mut interp = Interp::new(&prog).unwrap();
+        interp.call("main", &[]).unwrap();
+        interp.profile().clone()
+    }
+
+    #[test]
+    fn trig_heavy_loop_outranks_copy_loop() {
+        let profile = profile_of(
+            "#define N 64\nfloat a[N]; float b[N];\n
+             int main() {
+               for (int i = 0; i < N; i++) { b[i] = a[i]; }          // L0 copy
+               for (int i = 0; i < N; i++) { b[i] = sin(a[i]) * cos(a[i]); } // L1
+               return 0;
+             }",
+        );
+        let ranked = rank(&profile);
+        assert_eq!(ranked[0].id, LoopId(1));
+        assert!(ranked[0].intensity > ranked[1].intensity);
+    }
+
+    #[test]
+    fn work_counts_subtree() {
+        let profile = profile_of(
+            "#define N 16\nfloat a[N];\n
+             int main() {
+               for (int i = 0; i < N; i++)       // L0
+                 for (int j = 0; j < N; j++)     // L1
+                   a[i] = a[i] + 1.5;
+               return 0;
+             }",
+        );
+        let ranked = rank(&profile);
+        let l0 = ranked.iter().find(|l| l.id == LoopId(0)).unwrap();
+        let l1 = ranked.iter().find(|l| l.id == LoopId(1)).unwrap();
+        assert!(l0.work >= l1.work);
+        assert_eq!(l1.trips, 256);
+    }
+
+    #[test]
+    fn top_a_truncates_in_order() {
+        let profile = profile_of(
+            "#define N 8\nfloat a[N];\n
+             int main() {
+               for (int i = 0; i < N; i++) { a[i] = a[i] * 2.0; }
+               for (int i = 0; i < N; i++) { a[i] = a[i] + 1.0; }
+               for (int i = 0; i < N; i++) { a[i] = sin(a[i]); }
+               return 0;
+             }",
+        );
+        let ranked = rank(&profile);
+        let top2 = top_a(&ranked, 2);
+        assert_eq!(top2.len(), 2);
+        assert_eq!(top2[0].id, ranked[0].id);
+        let top99 = top_a(&ranked, 99);
+        assert_eq!(top99.len(), 3);
+    }
+
+    #[test]
+    fn intensity_decreases_with_accesses() {
+        // Same flops, more accesses → lower intensity (paper's wording).
+        let profile = profile_of(
+            "#define N 32\nfloat a[N]; float b[N]; float c[N]; float d[N];\n
+             int main() {
+               for (int i = 0; i < N; i++) { d[i] = a[i] + 1.0; }            // L0: 1 add, 2 acc
+               for (int i = 0; i < N; i++) { d[i] = a[i] + b[i] + c[i] - 1.0; } // L1: 3 add, 4 acc
+               return 0;
+             }",
+        );
+        let ranked = rank(&profile);
+        let l0 = ranked.iter().find(|l| l.id == LoopId(0)).unwrap();
+        let l1 = ranked.iter().find(|l| l.id == LoopId(1)).unwrap();
+        // L1: 3/4 ops/access beats L0: 1/2 — intensity follows flops per
+        // access, so check the arithmetic exactly.
+        assert!((l0.intensity - 0.5).abs() < 1e-9, "{}", l0.intensity);
+        assert!((l1.intensity - 0.75).abs() < 1e-9, "{}", l1.intensity);
+    }
+
+    #[test]
+    fn weighted_flops_counts_trig() {
+        let ops = OpCounts {
+            f_add: 10,
+            f_trig: 2,
+            ..Default::default()
+        };
+        assert_eq!(weighted_flops(&ops), 10 + 2 * TRIG_FLOP_WEIGHT);
+    }
+}

@@ -1,0 +1,592 @@
+//! Static loop-structure extraction (paper Step 1, code analysis).
+//!
+//! Builds the loop tree with, per loop: nesting, induction variable,
+//! statically-known trip count (when the bounds are `#define`s/literals),
+//! array reference sets, and *offloadability* — whether the loop body is
+//! something our OpenCL-style codegen can turn into a standalone kernel
+//! (no user-function calls, no I/O, no `return`, arrays with known element
+//! types).
+
+use std::collections::BTreeSet;
+
+use crate::minic::ast::*;
+use crate::minic::typecheck::{BUILTINS_1, BUILTINS_2};
+use crate::minic::Program;
+
+/// Why a loop cannot be offloaded.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Blocker {
+    /// Calls a user-defined function (kernel can't contain it).
+    UserCall(String),
+    /// Performs I/O (printf).
+    Io,
+    /// Contains a `return` (control leaves the loop body).
+    Return,
+    /// `while` loop without a `for`-shaped header — trip count unknowable
+    /// for the HLS pipeline model.
+    WhileLoop,
+    /// Contains a nested while-blocker (propagated from children).
+    Nested(Box<Blocker>),
+}
+
+impl std::fmt::Display for Blocker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Blocker::UserCall(n) => write!(f, "calls user function `{n}`"),
+            Blocker::Io => write!(f, "performs I/O"),
+            Blocker::Return => write!(f, "contains return"),
+            Blocker::WhileLoop => write!(f, "non-counted while loop"),
+            Blocker::Nested(b) => write!(f, "nested loop {b}"),
+        }
+    }
+}
+
+/// Static description of one loop statement.
+#[derive(Debug, Clone)]
+pub struct LoopInfo {
+    pub id: LoopId,
+    /// Function containing the loop.
+    pub function: String,
+    pub line: u32,
+    /// 0 = outermost in its function.
+    pub depth: usize,
+    pub parent: Option<LoopId>,
+    pub children: Vec<LoopId>,
+    /// Induction variable, when the `for` header is canonical
+    /// (`for (i = a; i < b; i += c)`).
+    pub induction: Option<String>,
+    /// Static trip count when derivable from literals/#defines.
+    pub static_trips: Option<u64>,
+    /// Array names read / written in the loop subtree.
+    pub arrays_read: BTreeSet<String>,
+    pub arrays_written: BTreeSet<String>,
+    /// Scalar variables referenced but defined outside the loop (kernel
+    /// arguments beyond the arrays).
+    pub free_scalars: BTreeSet<String>,
+    /// None = offloadable; Some(blocker) = not.
+    pub blocker: Option<Blocker>,
+}
+
+impl LoopInfo {
+    pub fn offloadable(&self) -> bool {
+        self.blocker.is_none()
+    }
+}
+
+/// Extract the loop table for a whole program, in loop-id order.
+pub fn extract(prog: &Program) -> Vec<LoopInfo> {
+    let mut out = Vec::new();
+    for f in &prog.functions {
+        let mut stack: Vec<LoopId> = Vec::new();
+        walk_stmts(&f.body, prog, f, &mut stack, &mut out);
+    }
+    out.sort_by_key(|l| l.id);
+    out
+}
+
+fn walk_stmts(
+    stmts: &[Stmt],
+    prog: &Program,
+    func: &Function,
+    stack: &mut Vec<LoopId>,
+    out: &mut Vec<LoopInfo>,
+) {
+    for s in stmts {
+        match s {
+            Stmt::For {
+                id,
+                init,
+                cond,
+                step,
+                body,
+                line,
+            } => {
+                let induction = induction_var(init.as_deref(), step.as_deref());
+                let static_trips = static_trip_count(
+                    prog,
+                    init.as_deref(),
+                    cond.as_ref(),
+                    step.as_deref(),
+                );
+                push_loop(
+                    LoopInfo {
+                        id: *id,
+                        function: func.name.clone(),
+                        line: *line,
+                        depth: stack.len(),
+                        parent: stack.last().copied(),
+                        children: Vec::new(),
+                        induction,
+                        static_trips,
+                        arrays_read: BTreeSet::new(),
+                        arrays_written: BTreeSet::new(),
+                        free_scalars: BTreeSet::new(),
+                        blocker: None,
+                    },
+                    s,
+                    prog,
+                    func,
+                    stack,
+                    out,
+                    body,
+                );
+            }
+            Stmt::While { id, body, line, .. } => {
+                push_loop(
+                    LoopInfo {
+                        id: *id,
+                        function: func.name.clone(),
+                        line: *line,
+                        depth: stack.len(),
+                        parent: stack.last().copied(),
+                        children: Vec::new(),
+                        induction: None,
+                        static_trips: None,
+                        arrays_read: BTreeSet::new(),
+                        arrays_written: BTreeSet::new(),
+                        free_scalars: BTreeSet::new(),
+                        blocker: Some(Blocker::WhileLoop),
+                    },
+                    s,
+                    prog,
+                    func,
+                    stack,
+                    out,
+                    body,
+                );
+            }
+            Stmt::If {
+                then_branch,
+                else_branch,
+                ..
+            } => {
+                walk_stmts(then_branch, prog, func, stack, out);
+                walk_stmts(else_branch, prog, func, stack, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_loop(
+    mut info: LoopInfo,
+    stmt: &Stmt,
+    prog: &Program,
+    func: &Function,
+    stack: &mut Vec<LoopId>,
+    out: &mut Vec<LoopInfo>,
+    body: &[Stmt],
+) {
+    analyze_subtree(stmt, prog, func, &mut info);
+    let id = info.id;
+    if let Some(parent) = stack.last() {
+        // Parent is already in `out` (preorder).
+        if let Some(p) = out.iter_mut().find(|l| l.id == *parent) {
+            p.children.push(id);
+        }
+    }
+    out.push(info);
+    stack.push(id);
+    walk_stmts(body, prog, func, stack, out);
+    stack.pop();
+    // Propagate child blockers upward: a loop containing a non-offloadable
+    // while child is still offloadable only if the child itself is; we are
+    // conservative and inherit while-blockers.
+    let child_blockers: Vec<Blocker> = out
+        .iter()
+        .filter(|l| l.parent == Some(id))
+        .filter_map(|l| l.blocker.clone())
+        .collect();
+    if let Some(b) = child_blockers.into_iter().next() {
+        let me = out.iter_mut().find(|l| l.id == id).expect("self");
+        if me.blocker.is_none() {
+            me.blocker = Some(Blocker::Nested(Box::new(b)));
+        }
+    }
+}
+
+/// Scan the loop subtree for refs, blockers, and free scalars.
+fn analyze_subtree(
+    loop_stmt: &Stmt,
+    prog: &Program,
+    func: &Function,
+    info: &mut LoopInfo,
+) {
+    let mut declared: BTreeSet<String> = BTreeSet::new();
+    // For-header decls count as loop-local.
+    if let Stmt::For { init: Some(init), .. } = loop_stmt {
+        if let Stmt::Decl { name, .. } = init.as_ref() {
+            declared.insert(name.clone());
+        }
+    }
+
+    let body: &[Stmt] = match loop_stmt {
+        Stmt::For { body, .. } | Stmt::While { body, .. } => body,
+        _ => unreachable!("analyze_subtree on non-loop"),
+    };
+
+    // Collect declarations first (any depth) — they are kernel-local.
+    for s in body {
+        s.walk(&mut |s| {
+            if let Stmt::Decl { name, .. } = s {
+                declared.insert(name.clone());
+            }
+            if let Stmt::For { init: Some(init), .. } = s {
+                if let Stmt::Decl { name, .. } = init.as_ref() {
+                    declared.insert(name.clone());
+                }
+            }
+        });
+    }
+
+    let is_array = |name: &str| -> bool {
+        // Arrays are globals with array type or params with ptr/array type.
+        prog.globals.iter().any(|g| {
+            matches!(g, Stmt::Decl { name: n, ty, .. }
+                if n == name && ty.is_indexable())
+        }) || func
+            .params
+            .iter()
+            .any(|p| p.name == name && p.ty.is_indexable())
+    };
+
+    let note_expr = |e: &Expr, info: &mut LoopInfo, declared: &BTreeSet<String>| {
+        e.walk(&mut |e| match e {
+            Expr::Index { base, .. } => {
+                info.arrays_read.insert(base.clone());
+            }
+            Expr::Var(n) => {
+                if !declared.contains(n)
+                    && !is_array(n)
+                    && prog.define(n).is_none()
+                {
+                    info.free_scalars.insert(n.clone());
+                }
+            }
+            Expr::Call { name, args: _ } => {
+                let known = BUILTINS_1.contains(&name.as_str())
+                    || BUILTINS_2.contains(&name.as_str());
+                if name == "printf" {
+                    info.blocker.get_or_insert(Blocker::Io);
+                } else if !known && prog.function(name).is_some() {
+                    info.blocker
+                        .get_or_insert(Blocker::UserCall(name.clone()));
+                }
+            }
+            _ => {}
+        });
+    };
+
+    // Walk statements including the loop's own cond/step.
+    if let Stmt::For { cond, step, .. } = loop_stmt {
+        if let Some(c) = cond {
+            note_expr(c, info, &declared);
+        }
+        if let Some(s) = step {
+            if let Stmt::Assign { value, .. } = s.as_ref() {
+                note_expr(value, info, &declared);
+            }
+        }
+    }
+    if let Stmt::While { cond, .. } = loop_stmt {
+        note_expr(cond, info, &declared);
+    }
+
+    for s in body {
+        s.walk(&mut |s| match s {
+            Stmt::Assign { target, value, .. } => {
+                match target {
+                    LValue::Index { base, indices } => {
+                        info.arrays_written.insert(base.clone());
+                        for i in indices {
+                            note_expr(i, info, &declared);
+                        }
+                    }
+                    LValue::Var(n) => {
+                        if !declared.contains(n) {
+                            info.free_scalars.insert(n.clone());
+                        }
+                    }
+                }
+                note_expr(value, info, &declared);
+            }
+            Stmt::Decl { init, .. } => {
+                if let Some(e) = init {
+                    note_expr(e, info, &declared);
+                }
+            }
+            Stmt::If { cond, .. } => note_expr(cond, info, &declared),
+            Stmt::For { cond, step, .. } => {
+                if let Some(c) = cond {
+                    note_expr(c, info, &declared);
+                }
+                if let Some(st) = step {
+                    if let Stmt::Assign { value, .. } = st.as_ref() {
+                        note_expr(value, info, &declared);
+                    }
+                }
+            }
+            Stmt::While { cond, .. } => note_expr(cond, info, &declared),
+            Stmt::Return { .. } => {
+                info.blocker.get_or_insert(Blocker::Return);
+            }
+            Stmt::ExprStmt { expr, .. } => note_expr(expr, info, &declared),
+        });
+    }
+
+    // Reads that are also written: keep in both sets (that's information —
+    // in/out arrays). But indices seen only as write targets shouldn't be
+    // in arrays_read; the walker above already only adds Index *reads* via
+    // expressions, and writes via Assign targets.
+}
+
+/// `for (i = a; ...; i++/i+=c)` → `Some(i)` if init and step agree.
+fn induction_var(init: Option<&Stmt>, step: Option<&Stmt>) -> Option<String> {
+    let init_var = match init? {
+        Stmt::Decl { name, .. } => name.clone(),
+        Stmt::Assign {
+            target: LValue::Var(n),
+            ..
+        } => n.clone(),
+        _ => return None,
+    };
+    let step_var = match step? {
+        Stmt::Assign {
+            target: LValue::Var(n),
+            ..
+        } => n.clone(),
+        _ => return None,
+    };
+    (init_var == step_var).then_some(init_var)
+}
+
+/// Evaluate a constant expression over int literals and `#define`s.
+fn const_eval(prog: &Program, e: &Expr) -> Option<f64> {
+    Some(match e {
+        Expr::IntLit(v) => *v as f64,
+        Expr::FloatLit(v) => *v,
+        Expr::Var(n) => prog.define(n)?,
+        Expr::Bin { op, lhs, rhs } => {
+            let a = const_eval(prog, lhs)?;
+            let b = const_eval(prog, rhs)?;
+            match op {
+                BinOp::Add => a + b,
+                BinOp::Sub => a - b,
+                BinOp::Mul => a * b,
+                BinOp::Div => {
+                    if b == 0.0 {
+                        return None;
+                    }
+                    a / b
+                }
+                _ => return None,
+            }
+        }
+        Expr::Un {
+            op: UnOp::Neg,
+            operand,
+        } => -const_eval(prog, operand)?,
+        Expr::Cast { operand, .. } => const_eval(prog, operand)?,
+        _ => return None,
+    })
+}
+
+/// Static trip count for a canonical counted loop.
+fn static_trip_count(
+    prog: &Program,
+    init: Option<&Stmt>,
+    cond: Option<&Expr>,
+    step: Option<&Stmt>,
+) -> Option<u64> {
+    let var = induction_var(init, step)?;
+    let start = match init? {
+        Stmt::Decl { init: Some(e), .. } => const_eval(prog, e)?,
+        Stmt::Assign { value, .. } => const_eval(prog, value)?,
+        _ => return None,
+    };
+    // Step must be i++ / i += c with constant c > 0.
+    let stride = match step? {
+        Stmt::Assign {
+            op: AssignOp::AddSet,
+            value,
+            ..
+        } => const_eval(prog, value)?,
+        Stmt::Assign {
+            op: AssignOp::Set,
+            value:
+                Expr::Bin {
+                    op: BinOp::Add,
+                    lhs,
+                    rhs,
+                },
+            ..
+        } => {
+            // i = i + c
+            if matches!(lhs.as_ref(), Expr::Var(n) if *n == var) {
+                const_eval(prog, rhs)?
+            } else {
+                return None;
+            }
+        }
+        _ => return None,
+    };
+    if stride <= 0.0 {
+        return None;
+    }
+    // Cond must be `var < bound` or `var <= bound`.
+    let (bound, inclusive) = match cond? {
+        Expr::Bin { op, lhs, rhs } => {
+            if !matches!(lhs.as_ref(), Expr::Var(n) if *n == var) {
+                return None;
+            }
+            match op {
+                BinOp::Lt => (const_eval(prog, rhs)?, false),
+                BinOp::Le => (const_eval(prog, rhs)?, true),
+                _ => return None,
+            }
+        }
+        _ => return None,
+    };
+    let span = bound - start + if inclusive { 1.0 } else { 0.0 };
+    if span <= 0.0 {
+        return Some(0);
+    }
+    Some((span / stride).ceil() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::parse;
+
+    fn table(src: &str) -> Vec<LoopInfo> {
+        extract(&parse(src).unwrap())
+    }
+
+    #[test]
+    fn loop_tree_structure() {
+        let t = table(
+            "#define N 8\nfloat a[N];\n
+             void f() {
+               for (int i = 0; i < N; i++) {        // L0
+                 for (int j = 0; j < N; j++) {      // L1
+                   a[i] = a[i] + 1.0;
+                 }
+               }
+               for (int k = 0; k < N; k++) { }      // L2
+             }",
+        );
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].depth, 0);
+        assert_eq!(t[1].depth, 1);
+        assert_eq!(t[1].parent, Some(LoopId(0)));
+        assert_eq!(t[0].children, vec![LoopId(1)]);
+        assert_eq!(t[2].parent, None);
+    }
+
+    #[test]
+    fn static_trips_from_defines() {
+        let t = table(
+            "#define N 100\nvoid f() { for (int i = 0; i < N; i++) { } }",
+        );
+        assert_eq!(t[0].static_trips, Some(100));
+        assert_eq!(t[0].induction.as_deref(), Some("i"));
+    }
+
+    #[test]
+    fn static_trips_with_stride_and_le() {
+        let t = table("void f() { for (int i = 2; i <= 10; i += 3) { } }");
+        assert_eq!(t[0].static_trips, Some(3)); // 2, 5, 8 → wait: 2,5,8 then 11>10 → 3
+    }
+
+    #[test]
+    fn array_read_write_sets() {
+        let t = table(
+            "#define N 4\nfloat a[N]; float b[N]; float c[N];\n
+             void f() { for (int i = 0; i < N; i++) { c[i] = a[i] * b[i]; } }",
+        );
+        assert!(t[0].arrays_read.contains("a"));
+        assert!(t[0].arrays_read.contains("b"));
+        assert!(t[0].arrays_written.contains("c"));
+        assert!(!t[0].arrays_written.contains("a"));
+        assert!(t[0].offloadable());
+    }
+
+    #[test]
+    fn free_scalars_detected() {
+        let t = table(
+            "#define N 4\nfloat a[N];\nfloat scale;\n
+             void f(float bias) {
+               for (int i = 0; i < N; i++) { a[i] = a[i] * scale + bias; }
+             }",
+        );
+        assert!(t[0].free_scalars.contains("scale"));
+        assert!(t[0].free_scalars.contains("bias"));
+        assert!(!t[0].free_scalars.contains("i"));
+    }
+
+    #[test]
+    fn user_call_blocks_offload() {
+        let t = table(
+            "void helper() { }\n
+             void f() { for (int i = 0; i < 4; i++) { helper(); } }",
+        );
+        assert_eq!(
+            t[0].blocker,
+            Some(Blocker::UserCall("helper".into()))
+        );
+    }
+
+    #[test]
+    fn builtin_call_does_not_block() {
+        let t = table(
+            "#define N 4\nfloat a[N];\n
+             void f() { for (int i = 0; i < N; i++) { a[i] = sin(a[i]); } }",
+        );
+        assert!(t[0].offloadable());
+    }
+
+    #[test]
+    fn printf_blocks_offload() {
+        let t = table(
+            r#"void f() { for (int i = 0; i < 4; i++) { printf("%d", i); } }"#,
+        );
+        assert_eq!(t[0].blocker, Some(Blocker::Io));
+    }
+
+    #[test]
+    fn return_blocks_offload() {
+        let t = table(
+            "int f() { for (int i = 0; i < 4; i++) { if (i == 2) return i; } return 0; }",
+        );
+        assert_eq!(t[0].blocker, Some(Blocker::Return));
+    }
+
+    #[test]
+    fn while_blocks_and_propagates() {
+        let t = table(
+            "void f() {
+               for (int i = 0; i < 4; i++) {   // L0
+                 while (i < 2) { }             // L1
+               }
+             }",
+        );
+        assert_eq!(t[1].blocker, Some(Blocker::WhileLoop));
+        assert!(matches!(t[0].blocker, Some(Blocker::Nested(_))));
+    }
+
+    #[test]
+    fn nested_offloadable_for_is_fine() {
+        let t = table(
+            "#define N 4\nfloat a[N][N];\n
+             void f() {
+               for (int i = 0; i < N; i++)
+                 for (int j = 0; j < N; j++)
+                   a[i][j] = 1.0;
+             }",
+        );
+        assert!(t[0].offloadable());
+        assert!(t[1].offloadable());
+    }
+}

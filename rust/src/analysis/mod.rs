@@ -1,0 +1,20 @@
+//! Analysis layer: paper Step 1 (code analysis) and the front half of
+//! Step 2 (appropriate-place extraction).
+//!
+//! * [`loopinfo`] — static loop tree, reference sets, offloadability
+//!   (Clang-analog structural analysis).
+//! * [`profile`] — dynamic profiling via the instrumented interpreter
+//!   (gcov/gprof analog) joined with the static table.
+//! * [`intensity`] — the arithmetic-intensity indicator (PGI analog).
+//! * [`depend`] — loop-carried dependence classification feeding the HLS
+//!   pipeline model.
+
+pub mod depend;
+pub mod intensity;
+pub mod loopinfo;
+pub mod profile;
+
+pub use depend::Dependence;
+pub use intensity::{LoopIntensity, TRIG_FLOP_WEIGHT};
+pub use loopinfo::{Blocker, LoopInfo};
+pub use profile::{analyze, Analysis, AnalyzedLoop};

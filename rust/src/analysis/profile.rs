@@ -1,0 +1,177 @@
+//! Profiled analysis runs: execute the application under the instrumented
+//! interpreter (the gcov analog) and join dynamic stats with the static
+//! loop table into the [`AnalyzedLoop`] records the funnel consumes.
+
+use std::collections::BTreeSet;
+
+use crate::minic::ast::{LoopId, Stmt};
+use crate::minic::{Interp, MiniCError, Profile, Program};
+
+use super::depend::{classify, Dependence};
+use super::intensity::{rank, LoopIntensity};
+use super::loopinfo::{extract, LoopInfo};
+
+/// Everything the offload pipeline knows about one loop.
+#[derive(Debug, Clone)]
+pub struct AnalyzedLoop {
+    pub info: LoopInfo,
+    pub dependence: Dependence,
+    /// None when the loop never executed in the profiling run.
+    pub intensity: Option<LoopIntensity>,
+}
+
+impl AnalyzedLoop {
+    pub fn id(&self) -> LoopId {
+        self.info.id
+    }
+
+    /// Candidate for offload: statically offloadable AND observed hot.
+    pub fn candidate(&self) -> bool {
+        self.info.offloadable() && self.intensity.is_some()
+    }
+}
+
+/// Result of a full analysis pass.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub loops: Vec<AnalyzedLoop>,
+    pub profile: Profile,
+}
+
+impl Analysis {
+    pub fn loop_by_id(&self, id: LoopId) -> Option<&AnalyzedLoop> {
+        self.loops.iter().find(|l| l.id() == id)
+    }
+
+    /// Loops ranked by intensity, filtered to offloadable candidates.
+    pub fn ranked_candidates(&self) -> Vec<&AnalyzedLoop> {
+        let mut cands: Vec<&AnalyzedLoop> =
+            self.loops.iter().filter(|l| l.candidate()).collect();
+        cands.sort_by(|a, b| {
+            let ia = a.intensity.as_ref().expect("candidate").score;
+            let ib = b.intensity.as_ref().expect("candidate").score;
+            ib.partial_cmp(&ia)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.id().cmp(&b.id()))
+        });
+        cands
+    }
+
+    /// Names of loops that never ran (dead under the sample input).
+    pub fn cold_loops(&self) -> BTreeSet<LoopId> {
+        self.loops
+            .iter()
+            .filter(|l| l.intensity.is_none())
+            .map(|l| l.id())
+            .collect()
+    }
+}
+
+/// Parse-independent analysis entry: profile `entry()` and join tables.
+///
+/// This is paper Step 1 + Step 2's analysis half: code analysis (static)
+/// plus the profiling run that the arithmetic-intensity tool needs.
+pub fn analyze(prog: &Program, entry: &str) -> Result<Analysis, MiniCError> {
+    let static_info = extract(prog);
+
+    let mut interp = Interp::new(prog)?;
+    interp.call(entry, &[])?;
+    let profile = interp.profile().clone();
+
+    let ranked = rank(&profile);
+
+    let loops = static_info
+        .into_iter()
+        .map(|info| {
+            let dependence = loop_dependence(prog, &info);
+            let intensity =
+                ranked.iter().find(|r| r.id == info.id).cloned();
+            AnalyzedLoop {
+                info,
+                dependence,
+                intensity,
+            }
+        })
+        .collect();
+
+    Ok(Analysis { loops, profile })
+}
+
+/// Find the loop body in the program and classify its dependence.
+fn loop_dependence(prog: &Program, info: &LoopInfo) -> Dependence {
+    let mut dep = Dependence::Independent;
+    let mut found = false;
+    prog.walk_stmts(&mut |s| {
+        if found {
+            return;
+        }
+        if let Stmt::For { id, body, .. } | Stmt::While { id, body, .. } = s {
+            if *id == info.id {
+                dep = classify(body, info.induction.as_deref());
+                found = true;
+            }
+        }
+    });
+    dep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::parse;
+
+    const SRC: &str = "
+#define N 64
+float a[N]; float b[N];
+float total;
+void setup() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.5; }      // L0
+}
+int main() {
+    setup();
+    for (int i = 0; i < N; i++) {                        // L1 hot
+        b[i] = sin(a[i]) * cos(a[i]) + sqrt(a[i] + 1.0);
+    }
+    for (int i = 0; i < N; i++) { total += b[i]; }       // L2 reduction
+    if (total < 0.0) {
+        for (int i = 0; i < N; i++) { b[i] = 0.0; }      // L3 cold
+    }
+    return 0;
+}";
+
+    #[test]
+    fn analysis_joins_static_and_dynamic() {
+        let prog = parse(SRC).unwrap();
+        let a = analyze(&prog, "main").unwrap();
+        assert_eq!(a.loops.len(), 4);
+        // L1 is the hottest candidate.
+        let ranked = a.ranked_candidates();
+        assert_eq!(ranked[0].id(), LoopId(1));
+        // L2 classified as reduction.
+        assert!(matches!(
+            a.loop_by_id(LoopId(2)).unwrap().dependence,
+            Dependence::Reduction(_)
+        ));
+        // L3 never ran.
+        assert!(a.cold_loops().contains(&LoopId(3)));
+        assert!(!a.loop_by_id(LoopId(3)).unwrap().candidate());
+    }
+
+    #[test]
+    fn candidates_exclude_blocked_loops() {
+        let src = r#"
+#define N 8
+float a[N];
+void log_it() { }
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = a[i] + 1.0; log_it(); }  // L0 blocked
+    for (int i = 0; i < N; i++) { a[i] = a[i] * 2.0; }            // L1 ok
+    return 0;
+}"#;
+        let prog = parse(src).unwrap();
+        let a = analyze(&prog, "main").unwrap();
+        let ids: Vec<LoopId> =
+            a.ranked_candidates().iter().map(|l| l.id()).collect();
+        assert_eq!(ids, vec![LoopId(1)]);
+    }
+}

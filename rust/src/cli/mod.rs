@@ -1,0 +1,434 @@
+//! Command-line interface (hand-rolled; no clap in the offline crate set).
+//!
+//! ```text
+//! repro offload <app|file.c> [--explain] [--top-a N] [--unroll B]
+//!               [--top-c N] [--max-patterns D] [--machines N]
+//!               [--pattern-db DIR] [--pjrt] [--no-verify]
+//! repro analyze <app|file.c>       loop table + intensity ranking
+//! repro estimate <app|file.c> [--unroll B]   pre-compile reports (top-A)
+//! repro opencl <app|file.c> --loop N [--unroll B]   emit kernel + host
+//! repro ga <app|file.c> [--seed S]           GA baseline from [32]
+//! repro run-sample <tdfir|mriq>    PJRT sample test only
+//! repro apps                       list bundled applications
+//! ```
+
+use crate::analysis::{analyze, Analysis};
+use crate::cpu::XEON_BRONZE_3104;
+use crate::envadapt::{FlowOptions, TestDb};
+use crate::hls::{render, ARRIA10_GX};
+use crate::minic::{parse, typecheck, Program};
+use crate::runtime::{Artifacts, Runtime};
+use crate::search::{GaConfig, SearchConfig};
+use crate::workloads;
+
+/// Entry point. Returns the process exit code.
+pub fn run(args: &[String]) -> i32 {
+    let result = match args.first().map(String::as_str) {
+        Some("offload") => cmd_offload(&args[1..]),
+        Some("analyze") => cmd_analyze(&args[1..]),
+        Some("estimate") => cmd_estimate(&args[1..]),
+        Some("opencl") => cmd_opencl(&args[1..]),
+        Some("ga") => cmd_ga(&args[1..]),
+        Some("run-sample") => cmd_run_sample(&args[1..]),
+        Some("apps") => {
+            for app in workloads::APPS {
+                println!("{app}");
+            }
+            Ok(())
+        }
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_usage();
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repro — automatic FPGA offloading of application loop statements\n\
+         (Yamato 2020 reproduction; FPGA toolchain simulated, numerics via\n\
+         Pallas→HLO→PJRT artifacts)\n\
+         \n\
+         USAGE: repro <subcommand> [options]\n\
+         \n\
+         SUBCOMMANDS\n\
+           offload <app|file.c>   full flow: analyze → funnel → measure → pick\n\
+             --explain            print the funnel trace and reports\n\
+             --top-a N            intensity narrowing (default 5)\n\
+             --unroll B           loop expansion factor (default 1)\n\
+             --top-c N            resource-efficiency narrowing (default 3)\n\
+             --max-patterns D     measurement budget (default 4)\n\
+             --machines N         verification build machines (default 1)\n\
+             --pattern-db DIR     persist the solution\n\
+             --pjrt               run the PJRT sample test (step 6)\n\
+             --no-verify          skip functional verification\n\
+           analyze <app|file.c>   loop table with intensity ranking\n\
+           estimate <app|file.c>  pre-compile resource reports (top-A)\n\
+           opencl <app|file.c> --loop N   emit OpenCL kernel + host text\n\
+           ga <app|file.c>        GA baseline search ([32])\n\
+           run-sample <tdfir|mriq>  PJRT sample test\n\
+           apps                   list bundled applications\n\
+         \n\
+         <app> is one of the bundled apps (repro apps) or a path to a .c file."
+    );
+}
+
+/// Resolve an app name or .c path to (name, source).
+fn resolve_source(spec: &str) -> anyhow::Result<(String, String)> {
+    if let Some(src) = workloads::source(spec) {
+        return Ok((spec.to_string(), src.to_string()));
+    }
+    if spec.ends_with(".c") {
+        let text = std::fs::read_to_string(spec)
+            .map_err(|e| anyhow::anyhow!("reading {spec}: {e}"))?;
+        let name = std::path::Path::new(spec)
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "custom".into());
+        return Ok((name, text));
+    }
+    anyhow::bail!(
+        "unknown app {spec:?} — use `repro apps` or pass a .c file path"
+    )
+}
+
+fn parse_and_analyze(src: &str) -> anyhow::Result<(Program, Analysis)> {
+    let prog = parse(src).map_err(|e| anyhow::anyhow!("{e}"))?;
+    typecheck::check_ok(&prog).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let an = analyze(&prog, "main").map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok((prog, an))
+}
+
+/// Tiny flag parser: positional args + `--key value` + `--switch`.
+struct Flags<'a> {
+    args: &'a [String],
+}
+
+impl<'a> Flags<'a> {
+    fn positional(&self, n: usize) -> Option<&'a str> {
+        self.args
+            .iter()
+            .filter(|a| !a.starts_with("--"))
+            .nth(n)
+            .map(String::as_str)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.args.iter().any(|a| a == name)
+    }
+
+    fn value(&self, name: &str) -> Option<&'a str> {
+        let idx = self.args.iter().position(|a| a == name)?;
+        self.args.get(idx + 1).map(String::as_str)
+    }
+
+    fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T> {
+        match self.value(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for {name}: {v:?}")),
+        }
+    }
+}
+
+fn config_from_flags(f: &Flags) -> anyhow::Result<SearchConfig> {
+    let d = SearchConfig::default();
+    let top_c = f.num("--top-c", d.top_c)?;
+    let cfg = SearchConfig {
+        top_a: f.num("--top-a", d.top_a)?,
+        unroll: f.num("--unroll", d.unroll)?,
+        top_c,
+        first_round: f.num("--first-round", d.first_round.min(top_c))?,
+        max_patterns: f.num("--max-patterns", d.max_patterns)?,
+        build_machines: f.num("--machines", d.build_machines)?,
+        verify_numerics: !f.has("--no-verify"),
+        ..d
+    };
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
+fn cmd_offload(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let spec = f
+        .positional(0)
+        .ok_or_else(|| anyhow::anyhow!("usage: repro offload <app|file.c>"))?;
+    let (app, src) = resolve_source(spec)?;
+    let cfg = config_from_flags(&f)?;
+
+    let mut testdb = TestDb::builtin();
+    if testdb.get(&app).is_none() {
+        testdb.register(crate::envadapt::TestCase {
+            app: app.clone(),
+            entry: "main".into(),
+            observed_arrays: vec![],
+            pjrt_sample: None,
+            description: format!("user-supplied application {app}"),
+        });
+    }
+
+    let (rt, art);
+    let runtime_pair = if f.has("--pjrt") {
+        let cwd = std::env::current_dir()?;
+        art = Artifacts::discover(&cwd)?;
+        rt = Runtime::cpu()?;
+        Some((&rt, &art))
+    } else {
+        None
+    };
+
+    let pattern_db = f.value("--pattern-db").map(std::path::PathBuf::from);
+    let opts = FlowOptions {
+        config: cfg,
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+        pattern_db: pattern_db.as_deref(),
+        runtime: runtime_pair,
+        seed: f.num("--seed", 42u64)?,
+    };
+    let report = crate::envadapt::run_flow(&app, &src, &testdb, &opts)?;
+    let sol = &report.solution;
+
+    if f.has("--explain") {
+        println!("== funnel (Fig. 2) ==");
+        println!(
+            "loops {} → offloadable {} → top-A {} → top-C {}",
+            sol.funnel.total_loops,
+            sol.funnel.offloadable.len(),
+            sol.funnel.top_a.len(),
+            sol.funnel.top_c.len()
+        );
+        for r in &sol.funnel.reports {
+            println!("{}", render(r));
+        }
+    }
+
+    println!("== measurements ==");
+    for m in &sol.measurements {
+        println!(
+            "round {} pattern {:<12} speedup {:>6.2}x  compile {:>4.1} h  verified {}",
+            m.round,
+            m.label(),
+            m.speedup(),
+            m.compile_s / 3600.0,
+            m.verified.map(|v| v.to_string()).unwrap_or("-".into()),
+        );
+    }
+    println!("== solution ==");
+    println!(
+        "{}: best pattern {} — {:.2}x vs all-CPU (automation {:.1} h)",
+        app,
+        sol.best_measurement().label(),
+        sol.speedup(),
+        sol.automation_s / 3600.0
+    );
+    if let Some(path) = &report.stored_at {
+        println!("pattern stored at {}", path.display());
+    }
+    if let Some(sr) = &report.sample_run {
+        println!(
+            "PJRT sample test [{}]: exec {:?}, max|err| {:.2e} over {} outputs — OK",
+            sr.app, sr.exec_time, sr.max_abs_err, sr.checked
+        );
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let spec = f
+        .positional(0)
+        .ok_or_else(|| anyhow::anyhow!("usage: repro analyze <app|file.c>"))?;
+    let (app, src) = resolve_source(spec)?;
+    let (_prog, an) = parse_and_analyze(&src)?;
+
+    println!("{app}: {} loop statements", an.loops.len());
+    println!(
+        "{:<5} {:<14} {:>5} {:>10} {:>12} {:>10} {:>12}  {}",
+        "loop", "function", "line", "trips", "work(flops)", "ops/acc",
+        "score", "status"
+    );
+    let mut rows: Vec<_> = an.loops.iter().collect();
+    rows.sort_by(|a, b| {
+        let sa = a.intensity.as_ref().map(|i| i.score).unwrap_or(-1.0);
+        let sb = b.intensity.as_ref().map(|i| i.score).unwrap_or(-1.0);
+        sb.partial_cmp(&sa).unwrap()
+    });
+    for al in rows {
+        let (trips, work, inten, score) = match &al.intensity {
+            Some(i) => (
+                i.trips.to_string(),
+                i.work.to_string(),
+                format!("{:.2}", i.intensity),
+                format!("{:.3e}", i.score),
+            ),
+            None => ("-".into(), "-".into(), "-".into(), "-".into()),
+        };
+        let status = match &al.info.blocker {
+            Some(b) => format!("blocked: {b}"),
+            None => format!("{:?}", al.dependence),
+        };
+        println!(
+            "{:<5} {:<14} {:>5} {:>10} {:>12} {:>10} {:>12}  {}",
+            al.id().to_string(),
+            al.info.function,
+            al.info.line,
+            trips,
+            work,
+            inten,
+            score,
+            status
+        );
+    }
+    Ok(())
+}
+
+fn cmd_estimate(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let spec = f
+        .positional(0)
+        .ok_or_else(|| anyhow::anyhow!("usage: repro estimate <app|file.c>"))?;
+    let (_app, src) = resolve_source(spec)?;
+    let (prog, an) = parse_and_analyze(&src)?;
+    let cfg = config_from_flags(&f)?;
+    let (cands, trace) =
+        crate::search::funnel::run(&prog, &an, &cfg, &ARRIA10_GX)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "funnel: {} loops → {} offloadable → top-A {:?} → top-C {:?}",
+        trace.total_loops,
+        trace.offloadable.len(),
+        trace.top_a,
+        trace.top_c
+    );
+    for r in &trace.reports {
+        println!("{}", render(r));
+    }
+    let _ = cands;
+    Ok(())
+}
+
+fn cmd_opencl(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let spec = f
+        .positional(0)
+        .ok_or_else(|| anyhow::anyhow!("usage: repro opencl <app|file.c> --loop N"))?;
+    let (_app, src) = resolve_source(spec)?;
+    let (prog, an) = parse_and_analyze(&src)?;
+    let loop_n: u32 = f.num("--loop", 0)?;
+    let unroll_b: u32 = f.num("--unroll", 1)?;
+    let al = an
+        .loop_by_id(crate::minic::ast::LoopId(loop_n))
+        .ok_or_else(|| anyhow::anyhow!("no loop L{loop_n}"))?;
+    let sp = crate::codegen::split(&prog, al)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let k = crate::codegen::unroll(&sp.kernel, unroll_b)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!("{}", crate::codegen::opencl::kernel_text(&k));
+    println!("{}", crate::codegen::opencl::host_text(&k));
+    Ok(())
+}
+
+fn cmd_ga(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let spec = f
+        .positional(0)
+        .ok_or_else(|| anyhow::anyhow!("usage: repro ga <app|file.c>"))?;
+    let (app, src) = resolve_source(spec)?;
+    let (prog, an) = parse_and_analyze(&src)?;
+    let cfg = GaConfig {
+        seed: f.num("--seed", GaConfig::default().seed)?,
+        ..Default::default()
+    };
+    let res =
+        crate::search::ga::run(&prog, &an, &cfg, &XEON_BRONZE_3104, &ARRIA10_GX);
+    println!(
+        "{app}: GA best {:?} — {:.2}x after {} measured patterns \
+         (modeled compile wall-clock {:.1} h)",
+        res.best_loops,
+        res.best_speedup,
+        res.measurements,
+        res.modeled_wall_clock_s / 3600.0
+    );
+    println!("convergence: {:?}", res.history);
+    Ok(())
+}
+
+fn cmd_run_sample(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let app = f
+        .positional(0)
+        .ok_or_else(|| anyhow::anyhow!("usage: repro run-sample <tdfir|mriq>"))?;
+    let cwd = std::env::current_dir()?;
+    let art = Artifacts::discover(&cwd)?;
+    let rt = Runtime::cpu()?;
+    let run = crate::runtime::run_app(&rt, &art, app, 42)?;
+    println!(
+        "{}: exec {:?}, max|err| {:.3e} over {} outputs — OK",
+        run.app, run.exec_time, run.max_abs_err, run.checked
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn unknown_subcommand_fails() {
+        assert_eq!(run(&s(&["bogus"])), 2);
+    }
+
+    #[test]
+    fn help_succeeds() {
+        assert_eq!(run(&s(&["--help"])), 0);
+        assert_eq!(run(&[]), 0);
+    }
+
+    #[test]
+    fn apps_lists_bundled() {
+        assert_eq!(run(&s(&["apps"])), 0);
+    }
+
+    #[test]
+    fn analyze_bundled_app() {
+        assert_eq!(run(&s(&["analyze", "sobel"])), 0);
+    }
+
+    #[test]
+    fn analyze_unknown_app_fails() {
+        assert_eq!(run(&s(&["analyze", "ghost"])), 1);
+    }
+
+    #[test]
+    fn flags_parse() {
+        let args = s(&["sobel", "--top-a", "3", "--explain"]);
+        let f = Flags { args: &args };
+        assert_eq!(f.positional(0), Some("sobel"));
+        assert!(f.has("--explain"));
+        assert_eq!(f.num("--top-a", 5usize).unwrap(), 3);
+        assert_eq!(f.num("--top-c", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn opencl_emission_for_sobel() {
+        assert_eq!(run(&s(&["opencl", "sobel", "--loop", "4"])), 0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Kernel IR: the OpenCL-analog representation of one offloaded loop.
+//!
+//! Paper §3.3: "two processes are required to make a loop statement into a
+//! high level language such as OpenCL. One is to divide a CPU processing
+//! program into a kernel (FPGA) program and a host (CPU) program … The
+//! other is to include techniques for speeding up for loop statements."
+//! [`crate::codegen::split`] performs the division; this module is the
+//! resulting kernel-side artifact, consumed by [`crate::hls`] (resource
+//! estimation), [`crate::fpga`] (simulation + functional execution) and
+//! [`crate::codegen::opencl`] (text emission).
+
+use std::fmt;
+
+use crate::analysis::Dependence;
+use crate::minic::ast::{LoopId, Scalar, Stmt};
+
+/// Transfer direction of a kernel parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Host → device before launch.
+    In,
+    /// Device → host after completion.
+    Out,
+    /// Both ways.
+    InOut,
+}
+
+impl Direction {
+    pub fn reads_host(self) -> bool {
+        matches!(self, Direction::In | Direction::InOut)
+    }
+
+    pub fn writes_host(self) -> bool {
+        matches!(self, Direction::Out | Direction::InOut)
+    }
+}
+
+impl fmt::Display for Direction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Direction::In => "in",
+            Direction::Out => "out",
+            Direction::InOut => "inout",
+        })
+    }
+}
+
+/// One kernel parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelParam {
+    pub name: String,
+    pub elem: Scalar,
+    /// `Some(dims)` for statically sized arrays; `None` for scalars.
+    pub dims: Option<Vec<usize>>,
+    pub direction: Direction,
+}
+
+impl KernelParam {
+    pub fn is_array(&self) -> bool {
+        self.dims.is_some()
+    }
+
+    /// Bytes transferred for this parameter (one direction).
+    pub fn bytes(&self) -> u64 {
+        match &self.dims {
+            Some(dims) => {
+                dims.iter().product::<usize>() as u64
+                    * self.elem.size_bytes()
+            }
+            None => self.elem.size_bytes(),
+        }
+    }
+}
+
+/// The kernel: one loop statement hoisted into an OpenCL-style kernel.
+#[derive(Debug, Clone)]
+pub struct KernelIr {
+    pub loop_id: LoopId,
+    /// `kernel_L<n>`.
+    pub name: String,
+    pub params: Vec<KernelParam>,
+    /// The loop statement itself (a `Stmt::For`), possibly unrolled.
+    pub body: Stmt,
+    /// Unroll factor applied (1 = none) — paper's expansion number B.
+    pub unroll: u32,
+    /// Static trip count of the outermost loop, if known.
+    pub static_trips: Option<u64>,
+    pub dependence: Dependence,
+    /// `#define` constants visible to the loop (needed by the HLS model
+    /// to evaluate inner-loop bounds for spatialization).
+    pub defines: Vec<(String, f64)>,
+}
+
+impl KernelIr {
+    /// Total host→device bytes.
+    pub fn bytes_in(&self) -> u64 {
+        self.params
+            .iter()
+            .filter(|p| p.direction.reads_host())
+            .map(KernelParam::bytes)
+            .sum()
+    }
+
+    /// Total device→host bytes.
+    pub fn bytes_out(&self) -> u64 {
+        self.params
+            .iter()
+            .filter(|p| p.direction.writes_host())
+            .map(KernelParam::bytes)
+            .sum()
+    }
+
+    pub fn array_params(&self) -> impl Iterator<Item = &KernelParam> {
+        self.params.iter().filter(|p| p.is_array())
+    }
+
+    pub fn scalar_params(&self) -> impl Iterator<Item = &KernelParam> {
+        self.params.iter().filter(|p| !p.is_array())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn param(name: &str, dims: Option<Vec<usize>>, dir: Direction) -> KernelParam {
+        KernelParam {
+            name: name.into(),
+            elem: Scalar::Float,
+            dims,
+            direction: dir,
+        }
+    }
+
+    #[test]
+    fn param_bytes() {
+        assert_eq!(param("x", Some(vec![8, 4]), Direction::In).bytes(), 128);
+        assert_eq!(param("s", None, Direction::In).bytes(), 4);
+    }
+
+    #[test]
+    fn transfer_totals_respect_direction() {
+        let k = KernelIr {
+            loop_id: LoopId(0),
+            name: "kernel_L0".into(),
+            params: vec![
+                param("a", Some(vec![16]), Direction::In),
+                param("b", Some(vec![16]), Direction::Out),
+                param("c", Some(vec![16]), Direction::InOut),
+                param("n", None, Direction::In),
+            ],
+            body: Stmt::Return { value: None, line: 0 },
+            unroll: 1,
+            static_trips: Some(16),
+            dependence: Dependence::Independent,
+            defines: Vec::new(),
+        };
+        assert_eq!(k.bytes_in(), 64 + 64 + 4);
+        assert_eq!(k.bytes_out(), 64 + 64);
+        assert_eq!(k.array_params().count(), 3);
+        assert_eq!(k.scalar_params().count(), 1);
+    }
+}

@@ -1,0 +1,18 @@
+//! Codegen: turn candidate loops into OpenCL-style kernel/host pairs
+//! (paper §3.3, Step 3 of the flow).
+//!
+//! * [`kernel_ir`] — the kernel-side IR (signature + body + unroll).
+//! * [`split`] — host/kernel division from the analysis' reference sets,
+//!   plus AST outlining for functional verification.
+//! * [`unroll`] — loop expansion by factor B (the paper's speed-up
+//!   technique).
+//! * [`opencl`] — OpenCL-C text emission (kernel + the ten host steps).
+
+pub mod kernel_ir;
+pub mod opencl;
+pub mod split;
+pub mod unroll;
+
+pub use kernel_ir::{Direction, KernelIr, KernelParam};
+pub use split::{offload_program, split, SplitError, SplitResult};
+pub use unroll::{unroll, UnrollError};

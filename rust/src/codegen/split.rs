@@ -1,0 +1,548 @@
+//! Host/kernel division (paper §3.3: "divide a CPU processing program into
+//! a kernel (FPGA) program and a host (CPU) program").
+//!
+//! For a candidate loop the splitter derives the kernel signature from the
+//! analysis' reference sets — arrays become `__global` buffers with a
+//! transfer [`Direction`], free scalars become value arguments — and
+//! produces:
+//!
+//! * the [`KernelIr`] (resource estimation / simulation / OpenCL text),
+//! * an *outlined MiniC function* whose body is the loop, and
+//! * the host-side launch call.
+//!
+//! The outlined function is the functional-verification path: running the
+//! host program with loops replaced by calls through the ordinary
+//! interpreter proves the split captured every input the kernel needs — a
+//! missed parameter surfaces as an undeclared-variable error, exactly the
+//! bug class real OpenCL splits suffer.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::profile::AnalyzedLoop;
+use crate::minic::ast::*;
+use crate::minic::Program;
+
+use super::kernel_ir::{Direction, KernelIr, KernelParam};
+
+/// Splitting failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SplitError {
+    NotOffloadable(LoopId),
+    LoopNotFound(LoopId),
+    /// Could not determine the extent of array `name` (pointer parameter
+    /// with no resolvable call site).
+    UnsizedArray(String),
+    UnknownScalar(String),
+    /// The loop writes a function-local scalar that outlives it (e.g. the
+    /// accumulator of an enclosing loop). OpenCL kernels cannot write
+    /// back by-value scalars; offloading this loop alone is unsound, so
+    /// the generator refuses (offload an enclosing loop instead).
+    ScalarWriteback(String),
+}
+
+impl std::fmt::Display for SplitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SplitError::NotOffloadable(id) => {
+                write!(f, "loop {id} is not offloadable")
+            }
+            SplitError::LoopNotFound(id) => {
+                write!(f, "loop {id} not found in program")
+            }
+            SplitError::UnsizedArray(n) => {
+                write!(f, "cannot determine extent of array `{n}`")
+            }
+            SplitError::UnknownScalar(n) => {
+                write!(f, "cannot determine type of scalar `{n}`")
+            }
+            SplitError::ScalarWriteback(n) => {
+                write!(
+                    f,
+                    "loop writes non-global scalar `{n}` — no write-back \
+                     path for a by-value kernel argument"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for SplitError {}
+
+/// Result of splitting one loop.
+#[derive(Debug, Clone)]
+pub struct SplitResult {
+    pub kernel: KernelIr,
+    /// The kernel as an ordinary MiniC function (for verification runs).
+    pub kernel_fn: Function,
+    /// The host-side call replacing the loop.
+    pub launch_call: Stmt,
+}
+
+/// Split one analyzed loop out of the program.
+pub fn split(prog: &Program, al: &AnalyzedLoop) -> Result<SplitResult, SplitError> {
+    let id = al.info.id;
+    if !al.info.offloadable() {
+        return Err(SplitError::NotOffloadable(id));
+    }
+    let loop_stmt = find_loop(prog, id).ok_or(SplitError::LoopNotFound(id))?;
+
+    let mut params: Vec<KernelParam> = Vec::new();
+    let mut args: Vec<Expr> = Vec::new();
+    let mut fn_params: Vec<Param> = Vec::new();
+
+    // Arrays, in deterministic (BTreeSet) order: read∪written.
+    let mut all_arrays: BTreeMap<&str, Direction> = BTreeMap::new();
+    for a in &al.info.arrays_read {
+        all_arrays.insert(a, Direction::In);
+    }
+    for a in &al.info.arrays_written {
+        all_arrays
+            .entry(a)
+            .and_modify(|d| *d = Direction::InOut)
+            .or_insert(Direction::Out);
+    }
+    for (name, dir) in &all_arrays {
+        let (elem, dims) = array_shape(prog, &al.info.function, name)
+            .ok_or_else(|| SplitError::UnsizedArray(name.to_string()))?;
+        params.push(KernelParam {
+            name: name.to_string(),
+            elem,
+            dims: Some(dims.clone()),
+            direction: *dir,
+        });
+        args.push(Expr::Var(name.to_string()));
+        fn_params.push(Param {
+            name: name.to_string(),
+            ty: Type::Array(elem, dims),
+        });
+    }
+
+    // Free scalars become value arguments.
+    for name in &al.info.free_scalars {
+        let elem = scalar_type(prog, &al.info.function, name)
+            .ok_or_else(|| SplitError::UnknownScalar(name.clone()))?;
+        let direction = scalar_direction(&loop_stmt, name);
+        if direction.writes_host() && !is_global(prog, name) {
+            return Err(SplitError::ScalarWriteback(name.clone()));
+        }
+        params.push(KernelParam {
+            name: name.clone(),
+            elem,
+            dims: None,
+            direction,
+        });
+        args.push(Expr::Var(name.clone()));
+        fn_params.push(Param {
+            name: name.clone(),
+            ty: Type::Scalar(elem),
+        });
+    }
+
+    let kname = format!("kernel_{id}");
+    let (static_trips, line) = match &loop_stmt {
+        Stmt::For { line, .. } | Stmt::While { line, .. } => {
+            (al.info.static_trips, *line)
+        }
+        _ => unreachable!(),
+    };
+
+    let kernel = KernelIr {
+        loop_id: id,
+        name: kname.clone(),
+        params,
+        body: loop_stmt.clone(),
+        unroll: 1,
+        static_trips,
+        dependence: al.dependence.clone(),
+        defines: prog.defines.clone(),
+    };
+
+    // NOTE on scalar outputs: a `Reduction` accumulator is a scalar the
+    // kernel must return. MiniC functions pass scalars by value, so the
+    // outlined function writes reductions back through a 1-element global
+    // staging array would complicate things — instead the outliner keeps
+    // reduction scalars *global* (they already are, or they wouldn't be
+    // free), and the outlined function updates the global directly. The
+    // kernel-parameter list still records them for transfer accounting.
+    let kernel_fn_params: Vec<Param> = fn_params
+        .iter()
+        .filter(|p| {
+            // Globals stay global in the outlined fn so writes persist.
+            !is_global(prog, &p.name)
+        })
+        .cloned()
+        .collect();
+    let kernel_fn_args: Vec<Expr> = all_arrays
+        .keys()
+        .map(|n| n.to_string())
+        .chain(al.info.free_scalars.iter().cloned())
+        .filter(|n| !is_global(prog, n))
+        .map(Expr::Var)
+        .collect();
+
+    let kernel_fn = Function {
+        name: kname.clone(),
+        ret: Scalar::Void,
+        params: kernel_fn_params,
+        body: vec![loop_stmt.clone()],
+        line,
+    };
+    let launch_call = Stmt::ExprStmt {
+        expr: Expr::Call {
+            name: kname,
+            args: kernel_fn_args,
+        },
+        line,
+    };
+
+    Ok(SplitResult {
+        kernel,
+        kernel_fn,
+        launch_call,
+    })
+}
+
+/// Build the host program: loops in `splits` replaced by launch calls,
+/// outlined kernel functions appended.
+pub fn offload_program(prog: &Program, splits: &[SplitResult]) -> Program {
+    let mut out = prog.clone();
+    for f in &mut out.functions {
+        f.body = replace_loops(std::mem::take(&mut f.body), splits);
+    }
+    for s in splits {
+        out.functions.push(s.kernel_fn.clone());
+    }
+    out
+}
+
+fn replace_loops(stmts: Vec<Stmt>, splits: &[SplitResult]) -> Vec<Stmt> {
+    stmts
+        .into_iter()
+        .map(|s| replace_in_stmt(s, splits))
+        .collect()
+}
+
+fn replace_in_stmt(s: Stmt, splits: &[SplitResult]) -> Stmt {
+    match s {
+        Stmt::For {
+            id,
+            init,
+            cond,
+            step,
+            body,
+            line,
+        } => {
+            if let Some(sp) = splits.iter().find(|sp| sp.kernel.loop_id == id)
+            {
+                sp.launch_call.clone()
+            } else {
+                Stmt::For {
+                    id,
+                    init,
+                    cond,
+                    step,
+                    body: replace_loops(body, splits),
+                    line,
+                }
+            }
+        }
+        Stmt::While { id, cond, body, line } => {
+            if let Some(sp) = splits.iter().find(|sp| sp.kernel.loop_id == id)
+            {
+                sp.launch_call.clone()
+            } else {
+                Stmt::While {
+                    id,
+                    cond,
+                    body: replace_loops(body, splits),
+                    line,
+                }
+            }
+        }
+        Stmt::If {
+            cond,
+            then_branch,
+            else_branch,
+            line,
+        } => Stmt::If {
+            cond,
+            then_branch: replace_loops(then_branch, splits),
+            else_branch: replace_loops(else_branch, splits),
+            line,
+        },
+        other => other,
+    }
+}
+
+fn find_loop(prog: &Program, id: LoopId) -> Option<Stmt> {
+    let mut found = None;
+    prog.walk_stmts(&mut |s| {
+        if found.is_some() {
+            return;
+        }
+        if let Stmt::For { id: lid, .. } | Stmt::While { id: lid, .. } = s {
+            if *lid == id {
+                found = Some(s.clone());
+            }
+        }
+    });
+    found
+}
+
+fn is_global(prog: &Program, name: &str) -> bool {
+    prog.globals.iter().any(
+        |g| matches!(g, Stmt::Decl { name: n, .. } if n == name),
+    ) || prog.define(name).is_some()
+}
+
+/// Element type + dims for array `name` visible in `func`.
+fn array_shape(
+    prog: &Program,
+    func: &str,
+    name: &str,
+) -> Option<(Scalar, Vec<usize>)> {
+    // Global array?
+    for g in &prog.globals {
+        if let Stmt::Decl {
+            name: n,
+            ty: Type::Array(elem, dims),
+            ..
+        } = g
+        {
+            if n == name {
+                return Some((*elem, dims.clone()));
+            }
+        }
+    }
+    // Function parameter?
+    let f = prog.function(func)?;
+    let param = f.params.iter().find(|p| p.name == name)?;
+    match &param.ty {
+        Type::Array(elem, dims) => Some((*elem, dims.clone())),
+        Type::Ptr(elem) => {
+            // Resolve the extent through call sites: find a call to `func`
+            // passing a sizable array for this parameter.
+            let pos = f.params.iter().position(|p| p.name == name)?;
+            resolve_ptr_extent(prog, func, pos).map(|dims| (*elem, dims))
+        }
+        Type::Scalar(_) => None,
+    }
+}
+
+fn resolve_ptr_extent(
+    prog: &Program,
+    func: &str,
+    arg_pos: usize,
+) -> Option<Vec<usize>> {
+    let mut resolved: Option<Vec<usize>> = None;
+    prog.walk_stmts(&mut |s| {
+        let exprs: Vec<&Expr> = match s {
+            Stmt::ExprStmt { expr, .. } => vec![expr],
+            Stmt::Assign { value, .. } => vec![value],
+            Stmt::Decl { init: Some(e), .. } => vec![e],
+            _ => vec![],
+        };
+        for e in exprs {
+            e.walk(&mut |e| {
+                if let Expr::Call { name, args } = e {
+                    if name == func && arg_pos < args.len() {
+                        if let Expr::Var(arg_name) = &args[arg_pos] {
+                            for g in &prog.globals {
+                                if let Stmt::Decl {
+                                    name: n,
+                                    ty: Type::Array(_, dims),
+                                    ..
+                                } = g
+                                {
+                                    if n == arg_name && resolved.is_none() {
+                                        resolved = Some(dims.clone());
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    resolved
+}
+
+/// Scalar type for `name` visible in `func`.
+fn scalar_type(prog: &Program, func: &str, name: &str) -> Option<Scalar> {
+    let f = prog.function(func)?;
+    // Parameter?
+    if let Some(p) = f.params.iter().find(|p| p.name == name) {
+        if let Type::Scalar(s) = p.ty {
+            return Some(s);
+        }
+    }
+    // Local declaration before the loop?
+    let mut found = None;
+    for s in &f.body {
+        s.walk(&mut |s| {
+            if let Stmt::Decl {
+                name: n,
+                ty: Type::Scalar(sc),
+                ..
+            } = s
+            {
+                if n == name && found.is_none() {
+                    found = Some(*sc);
+                }
+            }
+        });
+    }
+    if found.is_some() {
+        return found;
+    }
+    // Global?
+    for g in &prog.globals {
+        if let Stmt::Decl {
+            name: n,
+            ty: Type::Scalar(sc),
+            ..
+        } = g
+        {
+            if n == name {
+                return Some(*sc);
+            }
+        }
+    }
+    None
+}
+
+/// A scalar written inside the loop (reduction) must flow back.
+fn scalar_direction(loop_stmt: &Stmt, name: &str) -> Direction {
+    let mut written = false;
+    loop_stmt.walk(&mut |s| {
+        if let Stmt::Assign {
+            target: LValue::Var(n),
+            ..
+        } = s
+        {
+            if n == name {
+                written = true;
+            }
+        }
+    });
+    if written {
+        Direction::InOut
+    } else {
+        Direction::In
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::minic::parse;
+
+    const SRC: &str = "
+#define N 32
+float a[N]; float b[N];
+float scale;
+float total;
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.25; }           // L0
+    for (int i = 0; i < N; i++) { b[i] = a[i] * scale + 1.0; } // L1
+    for (int i = 0; i < N; i++) { total += b[i]; }             // L2
+    return 0;
+}";
+
+    fn split_loop(src: &str, id: u32) -> SplitResult {
+        let prog = parse(src).unwrap();
+        let a = analyze(&prog, "main").unwrap();
+        let al = a.loop_by_id(LoopId(id)).unwrap();
+        split(&prog, al).unwrap()
+    }
+
+    #[test]
+    fn elementwise_split_directions() {
+        let r = split_loop(SRC, 1);
+        let k = &r.kernel;
+        let dir = |n: &str| {
+            k.params.iter().find(|p| p.name == n).unwrap().direction
+        };
+        assert_eq!(dir("a"), Direction::In);
+        assert_eq!(dir("b"), Direction::Out);
+        assert_eq!(dir("scale"), Direction::In);
+        assert_eq!(k.bytes_in(), 32 * 4 + 4);
+        assert_eq!(k.bytes_out(), 32 * 4);
+    }
+
+    #[test]
+    fn reduction_scalar_is_inout() {
+        let r = split_loop(SRC, 2);
+        let total = r
+            .kernel
+            .params
+            .iter()
+            .find(|p| p.name == "total")
+            .unwrap();
+        assert_eq!(total.direction, Direction::InOut);
+        assert!(total.dims.is_none());
+    }
+
+    #[test]
+    fn offloaded_program_matches_original_numerics() {
+        use crate::minic::{Interp, Value};
+        let prog = parse(SRC).unwrap();
+        let a = analyze(&prog, "main").unwrap();
+        let r1 = split(&prog, a.loop_by_id(LoopId(1)).unwrap()).unwrap();
+        let r2 = split(&prog, a.loop_by_id(LoopId(2)).unwrap()).unwrap();
+        let host = offload_program(&prog, &[r1, r2]);
+
+        // Typecheck the host program — the outlined kernels must be
+        // complete (no undeclared variables).
+        let errs = crate::minic::typecheck::check(&host);
+        assert!(errs.is_empty(), "{errs:?}");
+
+        // Run both and compare array `b` and `total`.
+        let mut base = Interp::new(&prog).unwrap();
+        base.call("main", &[]).unwrap();
+        let mut off = Interp::new(&host).unwrap();
+        off.call("main", &[]).unwrap();
+
+        let b_base = base.array(base.global_array("b").unwrap()).data.clone();
+        let b_off = off.array(off.global_array("b").unwrap()).data.clone();
+        assert_eq!(b_base, b_off);
+    }
+
+    #[test]
+    fn pointer_param_extent_resolved_via_call_site() {
+        let src = "
+#define N 16
+float data[N];
+void work(float *x, int n) {
+    for (int i = 0; i < n; i++) { x[i] = x[i] * 2.0; }   // L0
+}
+int main() { work(data, N); return 0; }";
+        let prog = parse(src).unwrap();
+        let a = analyze(&prog, "main").unwrap();
+        let r = split(&prog, a.loop_by_id(LoopId(0)).unwrap()).unwrap();
+        let x = r.kernel.params.iter().find(|p| p.name == "x").unwrap();
+        assert_eq!(x.dims, Some(vec![16]));
+        assert_eq!(x.direction, Direction::InOut);
+        // `n` comes along as a scalar.
+        assert!(r.kernel.params.iter().any(|p| p.name == "n"));
+    }
+
+    #[test]
+    fn split_rejects_blocked_loop() {
+        let src = r#"
+void helper() { }
+int main() {
+    for (int i = 0; i < 4; i++) { helper(); }
+    return 0;
+}"#;
+        let prog = parse(src).unwrap();
+        let a = analyze(&prog, "main").unwrap();
+        let al = a.loop_by_id(LoopId(0)).unwrap();
+        assert_eq!(
+            split(&prog, al).unwrap_err(),
+            SplitError::NotOffloadable(LoopId(0))
+        );
+    }
+}

@@ -1,0 +1,399 @@
+//! Loop expansion — the paper's speed-up technique B (§4: "the loop
+//! sentence is expanded by number B … The loop statement expansion process
+//! increases the amount of resources, but is effective for speeding up").
+//!
+//! For a canonical counted loop `for (i = a; i < b; i += s)` with unroll
+//! factor `u`, the body is replicated `u` times with the induction
+//! variable substituted `i, i+s, …, i+(u-1)s` and the step becomes
+//! `i += u*s`. Replicas after the first are guarded (`if (i + k*s < b)`)
+//! unless the static trip count is known to divide evenly.
+
+use crate::minic::ast::*;
+
+use super::kernel_ir::KernelIr;
+
+/// Error: the loop shape does not admit unrolling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnrollError(pub String);
+
+impl std::fmt::Display for UnrollError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cannot unroll: {}", self.0)
+    }
+}
+
+impl std::error::Error for UnrollError {}
+
+/// Apply unroll factor `u` to the kernel's outermost loop.
+///
+/// `u == 1` is the identity. Returns a new kernel with `unroll = u` and a
+/// rewritten body.
+pub fn unroll(kernel: &KernelIr, u: u32) -> Result<KernelIr, UnrollError> {
+    if u == 0 {
+        return Err(UnrollError("factor must be >= 1".into()));
+    }
+    if u == 1 {
+        let mut k = kernel.clone();
+        k.unroll = 1;
+        return Ok(k);
+    }
+    let Stmt::For {
+        id,
+        init,
+        cond,
+        step,
+        body,
+        line,
+    } = &kernel.body
+    else {
+        return Err(UnrollError("only for-loops can be expanded".into()));
+    };
+
+    let var = induction_of(init.as_deref(), step.as_deref())
+        .ok_or_else(|| UnrollError("non-canonical loop header".into()))?;
+    let stride = stride_of(step.as_deref())
+        .ok_or_else(|| UnrollError("non-constant stride".into()))?;
+    let bound = bound_of(cond.as_ref())
+        .ok_or_else(|| UnrollError("unsupported loop condition".into()))?;
+
+    let even = kernel
+        .static_trips
+        .map(|t| t % u as u64 == 0)
+        .unwrap_or(false);
+
+    let mut new_body: Vec<Stmt> = Vec::new();
+    for k in 0..u {
+        let offset = (k as i64) * stride;
+        let replica: Vec<Stmt> = body
+            .iter()
+            .map(|s| substitute_stmt(s, &var, offset))
+            .collect();
+        if k == 0 || even {
+            new_body.extend(replica);
+        } else {
+            // Guard: if (var + offset < bound) { replica }
+            let guard = Expr::Bin {
+                op: bound.op,
+                lhs: Box::new(Expr::Bin {
+                    op: BinOp::Add,
+                    lhs: Box::new(Expr::Var(var.clone())),
+                    rhs: Box::new(Expr::IntLit(offset)),
+                }),
+                rhs: Box::new(bound.expr.clone()),
+            };
+            new_body.push(Stmt::If {
+                cond: guard,
+                then_branch: replica,
+                else_branch: Vec::new(),
+                line: *line,
+            });
+        }
+    }
+
+    let new_step = Stmt::Assign {
+        target: LValue::Var(var.clone()),
+        op: AssignOp::AddSet,
+        value: Expr::IntLit(stride * u as i64),
+        line: *line,
+    };
+
+    let mut out = kernel.clone();
+    out.unroll = u;
+    out.body = Stmt::For {
+        id: *id,
+        init: init.clone(),
+        cond: cond.clone(),
+        step: Some(Box::new(new_step)),
+        body: new_body,
+        line: *line,
+    };
+    Ok(out)
+}
+
+struct Bound {
+    op: BinOp,
+    expr: Expr,
+}
+
+fn induction_of(init: Option<&Stmt>, step: Option<&Stmt>) -> Option<String> {
+    let iv = match init? {
+        Stmt::Decl { name, .. } => name.clone(),
+        Stmt::Assign {
+            target: LValue::Var(n),
+            ..
+        } => n.clone(),
+        _ => return None,
+    };
+    let sv = match step? {
+        Stmt::Assign {
+            target: LValue::Var(n),
+            ..
+        } => n.clone(),
+        _ => return None,
+    };
+    (iv == sv).then_some(iv)
+}
+
+fn stride_of(step: Option<&Stmt>) -> Option<i64> {
+    match step? {
+        Stmt::Assign {
+            op: AssignOp::AddSet,
+            value: Expr::IntLit(c),
+            ..
+        } => Some(*c),
+        Stmt::Assign {
+            op: AssignOp::Set,
+            value:
+                Expr::Bin {
+                    op: BinOp::Add,
+                    lhs: _,
+                    rhs,
+                },
+            ..
+        } => match rhs.as_ref() {
+            Expr::IntLit(c) => Some(*c),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+fn bound_of(cond: Option<&Expr>) -> Option<Bound> {
+    match cond? {
+        Expr::Bin { op, rhs, .. } if matches!(op, BinOp::Lt | BinOp::Le) => {
+            Some(Bound {
+                op: *op,
+                expr: rhs.as_ref().clone(),
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Substitute `var := var + offset` in a statement subtree.
+fn substitute_stmt(s: &Stmt, var: &str, offset: i64) -> Stmt {
+    if offset == 0 {
+        return s.clone();
+    }
+    match s {
+        Stmt::Decl { name, ty, init, line } => Stmt::Decl {
+            name: name.clone(),
+            ty: ty.clone(),
+            init: init.as_ref().map(|e| substitute_expr(e, var, offset)),
+            line: *line,
+        },
+        Stmt::Assign {
+            target,
+            op,
+            value,
+            line,
+        } => Stmt::Assign {
+            target: match target {
+                LValue::Var(n) => LValue::Var(n.clone()),
+                LValue::Index { base, indices } => LValue::Index {
+                    base: base.clone(),
+                    indices: indices
+                        .iter()
+                        .map(|e| substitute_expr(e, var, offset))
+                        .collect(),
+                },
+            },
+            op: *op,
+            value: substitute_expr(value, var, offset),
+            line: *line,
+        },
+        Stmt::If {
+            cond,
+            then_branch,
+            else_branch,
+            line,
+        } => Stmt::If {
+            cond: substitute_expr(cond, var, offset),
+            then_branch: then_branch
+                .iter()
+                .map(|s| substitute_stmt(s, var, offset))
+                .collect(),
+            else_branch: else_branch
+                .iter()
+                .map(|s| substitute_stmt(s, var, offset))
+                .collect(),
+            line: *line,
+        },
+        Stmt::For {
+            id,
+            init,
+            cond,
+            step,
+            body,
+            line,
+        } => Stmt::For {
+            id: *id,
+            init: init
+                .as_ref()
+                .map(|s| Box::new(substitute_stmt(s, var, offset))),
+            cond: cond.as_ref().map(|e| substitute_expr(e, var, offset)),
+            step: step
+                .as_ref()
+                .map(|s| Box::new(substitute_stmt(s, var, offset))),
+            body: body
+                .iter()
+                .map(|s| substitute_stmt(s, var, offset))
+                .collect(),
+            line: *line,
+        },
+        Stmt::While { id, cond, body, line } => Stmt::While {
+            id: *id,
+            cond: substitute_expr(cond, var, offset),
+            body: body
+                .iter()
+                .map(|s| substitute_stmt(s, var, offset))
+                .collect(),
+            line: *line,
+        },
+        Stmt::Return { value, line } => Stmt::Return {
+            value: value.as_ref().map(|e| substitute_expr(e, var, offset)),
+            line: *line,
+        },
+        Stmt::ExprStmt { expr, line } => Stmt::ExprStmt {
+            expr: substitute_expr(expr, var, offset),
+            line: *line,
+        },
+    }
+}
+
+fn substitute_expr(e: &Expr, var: &str, offset: i64) -> Expr {
+    match e {
+        Expr::Var(n) if n == var => Expr::Bin {
+            op: BinOp::Add,
+            lhs: Box::new(Expr::Var(n.clone())),
+            rhs: Box::new(Expr::IntLit(offset)),
+        },
+        Expr::Var(_)
+        | Expr::IntLit(_)
+        | Expr::FloatLit(_)
+        | Expr::StrLit(_) => e.clone(),
+        Expr::Index { base, indices } => Expr::Index {
+            base: base.clone(),
+            indices: indices
+                .iter()
+                .map(|i| substitute_expr(i, var, offset))
+                .collect(),
+        },
+        Expr::Bin { op, lhs, rhs } => Expr::Bin {
+            op: *op,
+            lhs: Box::new(substitute_expr(lhs, var, offset)),
+            rhs: Box::new(substitute_expr(rhs, var, offset)),
+        },
+        Expr::Un { op, operand } => Expr::Un {
+            op: *op,
+            operand: Box::new(substitute_expr(operand, var, offset)),
+        },
+        Expr::Call { name, args } => Expr::Call {
+            name: name.clone(),
+            args: args
+                .iter()
+                .map(|a| substitute_expr(a, var, offset))
+                .collect(),
+        },
+        Expr::Cast { to, operand } => Expr::Cast {
+            to: *to,
+            operand: Box::new(substitute_expr(operand, var, offset)),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::codegen::split::split;
+    use crate::minic::ast::LoopId;
+    use crate::minic::{parse, Interp};
+
+    const SRC: &str = "
+#define N 32
+float a[N]; float b[N];
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.5; }
+    for (int i = 0; i < N; i++) { b[i] = a[i] * 2.0 + 1.0; }
+    return 0;
+}";
+
+    fn kernel_l1(u: u32) -> KernelIr {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let r = split(&prog, an.loop_by_id(LoopId(1)).unwrap()).unwrap();
+        unroll(&r.kernel, u).unwrap()
+    }
+
+    #[test]
+    fn unroll_1_is_identity() {
+        let k = kernel_l1(1);
+        assert_eq!(k.unroll, 1);
+    }
+
+    #[test]
+    fn unroll_even_has_no_guards() {
+        let k = kernel_l1(4); // 32 % 4 == 0
+        let Stmt::For { body, .. } = &k.body else { panic!() };
+        assert_eq!(body.len(), 4);
+        assert!(body.iter().all(|s| matches!(s, Stmt::Assign { .. })));
+    }
+
+    #[test]
+    fn unroll_uneven_guards_replicas() {
+        let k = kernel_l1(5); // 32 % 5 != 0
+        let Stmt::For { body, .. } = &k.body else { panic!() };
+        assert_eq!(body.len(), 5);
+        assert!(matches!(body[0], Stmt::Assign { .. }));
+        assert!(body[1..].iter().all(|s| matches!(s, Stmt::If { .. })));
+    }
+
+    /// The decisive test: unrolled kernels must compute the same values.
+    #[test]
+    fn unrolled_kernel_preserves_semantics() {
+        for u in [1u32, 2, 4, 5, 8] {
+            let prog = parse(SRC).unwrap();
+            let an = analyze(&prog, "main").unwrap();
+            let mut r =
+                split(&prog, an.loop_by_id(LoopId(1)).unwrap()).unwrap();
+            let unrolled = unroll(&r.kernel, u).unwrap();
+            // Patch the outlined function body with the unrolled loop.
+            r.kernel_fn.body = vec![unrolled.body.clone()];
+            r.kernel = unrolled;
+            let host =
+                crate::codegen::split::offload_program(&prog, &[r]);
+
+            let mut base = Interp::new(&prog).unwrap();
+            base.call("main", &[]).unwrap();
+            let mut off = Interp::new(&host).unwrap();
+            off.call("main", &[]).unwrap();
+
+            let b0 = base.array(base.global_array("b").unwrap()).data.clone();
+            let b1 = off.array(off.global_array("b").unwrap()).data.clone();
+            assert_eq!(b0, b1, "unroll factor {u} changed results");
+        }
+    }
+
+    #[test]
+    fn unroll_step_multiplied() {
+        let k = kernel_l1(4);
+        let Stmt::For { step: Some(step), .. } = &k.body else { panic!() };
+        match step.as_ref() {
+            Stmt::Assign {
+                op: AssignOp::AddSet,
+                value: Expr::IntLit(4),
+                ..
+            } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn unroll_0_rejected() {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let r = split(&prog, an.loop_by_id(LoopId(1)).unwrap()).unwrap();
+        assert!(unroll(&r.kernel, 0).is_err());
+    }
+}

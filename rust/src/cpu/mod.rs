@@ -1,0 +1,108 @@
+//! CPU cost model — the "all CPU processing" baseline (paper Fig. 3:
+//! Intel Xeon Bronze 3104, 1.7 GHz, no turbo).
+//!
+//! Converts the interpreter's dynamic op counts into modeled single-thread
+//! wall-clock. Per-op costs are in cycles and folded through an effective
+//! superscalar factor; memory traffic is priced separately so
+//! access-heavy loops are slower than flop-heavy loops of equal op count
+//! (which is what makes offloading access-light/compute-dense loops pay
+//! off — the paper's selection signal).
+
+use crate::minic::OpCounts;
+
+/// A CPU performance model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuModel {
+    pub name: &'static str,
+    pub clock_hz: f64,
+    /// Sustained instructions-per-cycle for scalar FP code.
+    pub ipc: f64,
+    /// Cycles per op class (before IPC folding).
+    pub cyc_fadd: f64,
+    pub cyc_fmul: f64,
+    pub cyc_fdiv: f64,
+    pub cyc_trig: f64,
+    pub cyc_iop: f64,
+    pub cyc_cmp: f64,
+    /// Cycles per array access (streaming, cache-resident mix).
+    pub cyc_read: f64,
+    pub cyc_write: f64,
+}
+
+/// Intel Xeon Bronze 3104 (paper Fig. 3): 6C/6T, 1.7 GHz base, no turbo,
+/// modeled single-threaded (the paper's applications are single-thread C).
+pub const XEON_BRONZE_3104: CpuModel = CpuModel {
+    name: "Intel Xeon Bronze 3104 @ 1.7 GHz",
+    clock_hz: 1.7e9,
+    ipc: 1.6,
+    cyc_fadd: 1.0,
+    cyc_fmul: 1.0,
+    cyc_fdiv: 14.0,
+    cyc_trig: 42.0, // libm sin/cos on Skylake-SP class cores
+    cyc_iop: 0.5,
+    cyc_cmp: 0.5,
+    cyc_read: 1.1,
+    cyc_write: 1.4,
+};
+
+impl CpuModel {
+    /// Modeled cycles for an op-count record.
+    pub fn cycles(&self, ops: &OpCounts) -> f64 {
+        let raw = ops.f_add as f64 * self.cyc_fadd
+            + ops.f_mul as f64 * self.cyc_fmul
+            + ops.f_div as f64 * self.cyc_fdiv
+            + ops.f_trig as f64 * self.cyc_trig
+            + ops.i_op as f64 * self.cyc_iop
+            + ops.cmp as f64 * self.cyc_cmp
+            + ops.reads as f64 * self.cyc_read
+            + ops.writes as f64 * self.cyc_write;
+        raw / self.ipc
+    }
+
+    /// Modeled seconds for an op-count record.
+    pub fn time(&self, ops: &OpCounts) -> f64 {
+        self.cycles(ops) / self.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ops(f_add: u64, f_trig: u64, reads: u64) -> OpCounts {
+        OpCounts {
+            f_add,
+            f_trig,
+            reads,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn time_positive_and_monotone() {
+        let m = &XEON_BRONZE_3104;
+        let t1 = m.time(&ops(1000, 0, 1000));
+        let t2 = m.time(&ops(2000, 0, 2000));
+        assert!(t1 > 0.0);
+        assert!(t2 > t1 * 1.9 && t2 < t1 * 2.1);
+    }
+
+    #[test]
+    fn trig_dominates_adds() {
+        let m = &XEON_BRONZE_3104;
+        assert!(m.time(&ops(0, 100, 0)) > m.time(&ops(100, 0, 0)) * 10.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(XEON_BRONZE_3104.time(&OpCounts::default()), 0.0);
+    }
+
+    #[test]
+    fn gigaflop_scale_sane() {
+        // 1e9 adds ≈ 0.37 s at 1.7 GHz / IPC 1.6 — single-digit-GFLOPS
+        // scalar, the right ballpark for this CPU.
+        let t = XEON_BRONZE_3104.time(&ops(1_000_000_000, 0, 0));
+        assert!((0.1..1.0).contains(&t), "{t}");
+    }
+}

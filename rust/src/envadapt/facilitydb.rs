@@ -1,0 +1,144 @@
+//! Facility-resource DB (paper Fig. 1 / Fig. 3): the machines the
+//! environment-adaptive software can deploy to.
+//!
+//! Mirrors the paper's experiment environment: a verification machine and
+//! a running (production) environment, both Dell R740 + Xeon Bronze 3104
+//! + Intel PAC Arria10 GX, plus the client note PC that submits code.
+
+use crate::cpu::{CpuModel, XEON_BRONZE_3104};
+use crate::hls::{Device, ARRIA10_GX};
+use crate::util::json::Json;
+
+/// Role of a facility in the flow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Try-and-error measurement machine.
+    Verification,
+    /// Production environment the tuned code deploys to.
+    Running,
+    /// Submits application code; no accelerator.
+    Client,
+}
+
+/// One facility record.
+#[derive(Debug, Clone)]
+pub struct Facility {
+    pub name: String,
+    pub role: Role,
+    pub hardware: String,
+    pub os: String,
+    pub cpu: Option<CpuModel>,
+    pub fpga: Option<Device>,
+    /// Concurrent FPGA compile slots.
+    pub build_slots: usize,
+}
+
+/// The facility inventory.
+#[derive(Debug, Clone, Default)]
+pub struct FacilityDb {
+    pub facilities: Vec<Facility>,
+}
+
+impl FacilityDb {
+    /// The paper's Fig. 3 environment.
+    pub fn paper_fig3() -> Self {
+        FacilityDb {
+            facilities: vec![
+                Facility {
+                    name: "verification".into(),
+                    role: Role::Verification,
+                    hardware: "Dell PowerEdge R740".into(),
+                    os: "CentOS 7.4".into(),
+                    cpu: Some(XEON_BRONZE_3104),
+                    fpga: Some(ARRIA10_GX),
+                    build_slots: 1,
+                },
+                Facility {
+                    name: "running".into(),
+                    role: Role::Running,
+                    hardware: "Dell PowerEdge R740".into(),
+                    os: "CentOS 7.4".into(),
+                    cpu: Some(XEON_BRONZE_3104),
+                    fpga: Some(ARRIA10_GX),
+                    build_slots: 0,
+                },
+                Facility {
+                    name: "client".into(),
+                    role: Role::Client,
+                    hardware: "HP ProBook 470 G3".into(),
+                    os: "Windows 7 Professional".into(),
+                    cpu: None,
+                    fpga: None,
+                    build_slots: 0,
+                },
+            ],
+        }
+    }
+
+    pub fn verification(&self) -> Option<&Facility> {
+        self.facilities.iter().find(|f| f.role == Role::Verification)
+    }
+
+    pub fn running(&self) -> Option<&Facility> {
+        self.facilities.iter().find(|f| f.role == Role::Running)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.facilities
+                .iter()
+                .map(|f| {
+                    Json::obj(vec![
+                        ("name", Json::Str(f.name.clone())),
+                        (
+                            "role",
+                            Json::Str(
+                                match f.role {
+                                    Role::Verification => "verification",
+                                    Role::Running => "running",
+                                    Role::Client => "client",
+                                }
+                                .into(),
+                            ),
+                        ),
+                        ("hardware", Json::Str(f.hardware.clone())),
+                        ("os", Json::Str(f.os.clone())),
+                        (
+                            "fpga",
+                            f.fpga
+                                .as_ref()
+                                .map(|d| Json::Str(d.name.into()))
+                                .unwrap_or(Json::Null),
+                        ),
+                        ("build_slots", Json::Num(f.build_slots as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_inventory_complete() {
+        let db = FacilityDb::paper_fig3();
+        assert_eq!(db.facilities.len(), 3);
+        let v = db.verification().unwrap();
+        assert!(v.fpga.is_some());
+        assert_eq!(v.build_slots, 1);
+        assert!(db.running().is_some());
+    }
+
+    #[test]
+    fn json_has_roles() {
+        let j = FacilityDb::paper_fig3().to_json();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert!(arr
+            .iter()
+            .any(|f| f.get(&["role"]).unwrap().as_str() == Some("client")));
+    }
+}

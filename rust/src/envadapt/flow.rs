@@ -1,0 +1,213 @@
+//! The environment-adaptive-software flow (paper Fig. 1).
+//!
+//! Steps, as the paper numbers them:
+//! 1. **Code analysis** — parse + typecheck + loop extraction + profiling.
+//! 2. **Extraction of offloadable areas** — candidate filtering and the
+//!    intensity / resource-efficiency funnel.
+//! 3. **Conversion** — OpenCL-style kernel/host generation (inside the
+//!    funnel) and pattern generation.
+//! 4. **Verification-environment measurement** — simulate + functionally
+//!    verify each pattern, two rounds.
+//! 5. **Solution selection + DB store** — best pattern into the
+//!    code-pattern DB.
+//! 6. **Production deployment check** — the PJRT sample test: execute the
+//!    application's real kernels (Pallas→HLO artifacts) and validate
+//!    numerics, proving the deployable stack end to end.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::analysis::{analyze, Analysis};
+use crate::cpu::CpuModel;
+use crate::hls::Device;
+use crate::minic::{parse, typecheck, Program};
+use crate::runtime::{self, Artifacts, Runtime, SampleRun};
+use crate::search::{search, OffloadSolution, SearchConfig};
+
+use super::patterndb::PatternDb;
+use super::testdb::{TestCase, TestDb};
+
+/// Everything the flow produced for one application.
+#[derive(Debug)]
+pub struct FlowReport {
+    pub app: String,
+    pub solution: OffloadSolution,
+    /// Where the pattern was stored (step 5), if a DB dir was given.
+    pub stored_at: Option<std::path::PathBuf>,
+    /// PJRT sample-test result (step 6), if the app has an artifact and a
+    /// runtime was supplied.
+    pub sample_run: Option<SampleRun>,
+}
+
+/// Options for a flow run.
+pub struct FlowOptions<'a> {
+    pub config: SearchConfig,
+    pub cpu: &'a CpuModel,
+    pub device: &'a Device,
+    /// Pattern-DB directory (None = don't persist).
+    pub pattern_db: Option<&'a Path>,
+    /// PJRT runtime + artifacts for the step-6 sample test (None = skip).
+    pub runtime: Option<(&'a Runtime, &'a Artifacts)>,
+    pub seed: u64,
+}
+
+/// Step 1 only: parse + semantic check + analysis.
+pub fn analyze_source(source: &str, entry: &str) -> Result<(Program, Analysis)> {
+    let prog = parse(source).map_err(|e| anyhow::anyhow!("{e}"))?;
+    typecheck::check_ok(&prog).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let analysis =
+        analyze(&prog, entry).map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok((prog, analysis))
+}
+
+/// Run the full flow for one application.
+pub fn run_flow(
+    app: &str,
+    source: &str,
+    testdb: &TestDb,
+    opts: &FlowOptions<'_>,
+) -> Result<FlowReport> {
+    let case: &TestCase = testdb
+        .get(app)
+        .with_context(|| format!("no test case registered for {app:?}"))?;
+
+    // Steps 1–2: analysis.
+    let (prog, analysis) = analyze_source(source, &case.entry)?;
+
+    // Steps 3–5: funnel, patterns, measurement, selection.
+    let solution = search(
+        app,
+        &prog,
+        &analysis,
+        &opts.config,
+        opts.cpu,
+        opts.device,
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // Step 5: persist to the code-pattern DB.
+    let stored_at = match opts.pattern_db {
+        Some(dir) => Some(PatternDb::open(dir)?.store(&solution)?),
+        None => None,
+    };
+
+    // Step 6: PJRT sample test — run the real (Pallas→HLO) kernels.
+    let sample_run = match (&case.pjrt_sample, opts.runtime) {
+        (Some(sample), Some((rt, art))) => Some(
+            runtime::run_app(rt, art, sample, opts.seed)
+                .context("PJRT sample test failed")?,
+        ),
+        _ => None,
+    };
+
+    Ok(FlowReport {
+        app: app.to_string(),
+        solution,
+        stored_at,
+        sample_run,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::XEON_BRONZE_3104;
+    use crate::hls::ARRIA10_GX;
+
+    const SRC: &str = "
+#define N 1024
+float a[N]; float outr[N]; float outi[N];
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.002 - 1.0; }
+    for (int i = 0; i < N; i++) { outr[i] = sin(a[i]) * cos(a[i]); }
+    for (int i = 0; i < N; i++) { outi[i] = sqrt(a[i] * a[i] + 1.0); }
+    return 0;
+}";
+
+    #[test]
+    fn flow_without_runtime_or_db() {
+        let mut testdb = TestDb::new();
+        testdb.register(TestCase {
+            app: "mini".into(),
+            entry: "main".into(),
+            observed_arrays: vec!["outr".into(), "outi".into()],
+            pjrt_sample: None,
+            description: "unit test app".into(),
+        });
+        let opts = FlowOptions {
+            config: SearchConfig::default(),
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+            pattern_db: None,
+            runtime: None,
+            seed: 1,
+        };
+        let report = run_flow("mini", SRC, &testdb, &opts).unwrap();
+        assert!(report.solution.speedup() > 0.5);
+        assert!(report.stored_at.is_none());
+        assert!(report.sample_run.is_none());
+    }
+
+    #[test]
+    fn flow_persists_to_pattern_db() {
+        let dir = std::env::temp_dir().join("fpga_offload_flow_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let mut testdb = TestDb::new();
+        testdb.register(TestCase {
+            app: "mini".into(),
+            entry: "main".into(),
+            observed_arrays: vec![],
+            pjrt_sample: None,
+            description: String::new(),
+        });
+        let opts = FlowOptions {
+            config: SearchConfig::default(),
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+            pattern_db: Some(&dir),
+            runtime: None,
+            seed: 1,
+        };
+        let report = run_flow("mini", SRC, &testdb, &opts).unwrap();
+        assert!(report.stored_at.as_ref().unwrap().exists());
+        let db = PatternDb::open(&dir).unwrap();
+        assert!(db.load("mini").unwrap().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flow_rejects_unregistered_app() {
+        let testdb = TestDb::new();
+        let opts = FlowOptions {
+            config: SearchConfig::default(),
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+            pattern_db: None,
+            runtime: None,
+            seed: 1,
+        };
+        assert!(run_flow("ghost", SRC, &testdb, &opts).is_err());
+    }
+
+    #[test]
+    fn flow_rejects_malformed_source() {
+        let mut testdb = TestDb::new();
+        testdb.register(TestCase {
+            app: "bad".into(),
+            entry: "main".into(),
+            observed_arrays: vec![],
+            pjrt_sample: None,
+            description: String::new(),
+        });
+        let opts = FlowOptions {
+            config: SearchConfig::default(),
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+            pattern_db: None,
+            runtime: None,
+            seed: 1,
+        };
+        assert!(run_flow("bad", "int main( {", &testdb, &opts).is_err());
+    }
+}

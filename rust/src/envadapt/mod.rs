@@ -1,0 +1,16 @@
+//! Environment-adaptive software (paper Fig. 1): the flow and its DBs.
+//!
+//! * [`flow`] — steps 1–6 end to end for one application.
+//! * [`testdb`] — test-case DB (sample tests per app).
+//! * [`patterndb`] — code-pattern DB (persisted solutions).
+//! * [`facilitydb`] — facility-resource DB (Fig. 3 machines).
+
+pub mod facilitydb;
+pub mod flow;
+pub mod patterndb;
+pub mod testdb;
+
+pub use facilitydb::{Facility, FacilityDb, Role};
+pub use flow::{analyze_source, run_flow, FlowOptions, FlowReport};
+pub use patterndb::PatternDb;
+pub use testdb::{TestCase, TestDb};

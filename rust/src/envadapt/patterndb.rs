@@ -1,0 +1,126 @@
+//! Code-pattern DB (paper Fig. 1): persisted offload solutions.
+//!
+//! Once the verification environment selects a pattern, the solution is
+//! stored so production deployment (and later re-adaptation) can reuse it
+//! without re-searching. File-backed JSON, one file per app.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::search::OffloadSolution;
+use crate::util::json::Json;
+
+/// File-backed pattern store.
+#[derive(Debug, Clone)]
+pub struct PatternDb {
+    dir: PathBuf,
+}
+
+impl PatternDb {
+    /// Open (creating the directory if needed).
+    pub fn open(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating pattern DB dir {dir:?}"))?;
+        Ok(PatternDb {
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    fn path_for(&self, app: &str) -> PathBuf {
+        self.dir.join(format!("{app}.pattern.json"))
+    }
+
+    /// Persist a solution (overwrites any previous one for the app).
+    pub fn store(&self, sol: &OffloadSolution) -> Result<PathBuf> {
+        let path = self.path_for(&sol.app);
+        std::fs::write(&path, sol.to_json().pretty())
+            .with_context(|| format!("writing {path:?}"))?;
+        Ok(path)
+    }
+
+    /// Load the stored solution summary for an app, if present.
+    pub fn load(&self, app: &str) -> Result<Option<Json>> {
+        let path = self.path_for(app);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Ok(Some(
+            Json::parse(&text).with_context(|| format!("parsing {path:?}"))?,
+        ))
+    }
+
+    /// Apps with stored patterns.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if let Some(app) = name.strip_suffix(".pattern.json") {
+                out.push(app.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::{FunnelTrace, PatternMeasurement};
+
+    fn dummy_solution(app: &str) -> OffloadSolution {
+        OffloadSolution {
+            app: app.to_string(),
+            funnel: FunnelTrace {
+                total_loops: 5,
+                offloadable: vec![],
+                top_a: vec![],
+                reports: vec![],
+                top_c: vec![],
+            },
+            measurements: vec![PatternMeasurement {
+                loops: vec![crate::minic::ast::LoopId(2)],
+                round: 1,
+                timing: crate::fpga::PatternTiming {
+                    cpu_baseline_s: 2.0,
+                    cpu_rest_s: 0.1,
+                    loops: vec![],
+                    pattern_s: 0.5,
+                    speedup: 4.0,
+                    combined: Default::default(),
+                },
+                compile_s: 10800.0,
+                verified: Some(true),
+            }],
+            best: 0,
+            automation_s: 43200.0,
+        }
+    }
+
+    #[test]
+    fn store_and_load_roundtrip() {
+        let dir = std::env::temp_dir().join("fpga_offload_pdb_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let db = PatternDb::open(&dir).unwrap();
+        db.store(&dummy_solution("demo")).unwrap();
+        let loaded = db.load("demo").unwrap().unwrap();
+        assert_eq!(
+            loaded.get(&["speedup"]).unwrap().as_f64(),
+            Some(4.0)
+        );
+        assert_eq!(db.list().unwrap(), vec!["demo".to_string()]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_app_is_none() {
+        let dir = std::env::temp_dir().join("fpga_offload_pdb_test2");
+        std::fs::remove_dir_all(&dir).ok();
+        let db = PatternDb::open(&dir).unwrap();
+        assert!(db.load("nope").unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,167 @@
+//! Test-case DB (paper Fig. 1): which sample test proves an application's
+//! performance and correctness.
+//!
+//! The paper's flow keeps test cases in a DB (Jenkins-style) so the
+//! verification environment can run "the sample processing specified by
+//! the application". Here: app name → entry function + expected arrays +
+//! optional PJRT sample-test id (the real-kernel numeric probe).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// One registered test case.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TestCase {
+    pub app: String,
+    /// MiniC entry function for the all-CPU baseline + verification runs.
+    pub entry: String,
+    /// Global arrays whose contents define the observable output.
+    pub observed_arrays: Vec<String>,
+    /// PJRT sample-test id (`tdfir` / `mriq`) when the application has an
+    /// AOT artifact; None for CPU-only verification.
+    pub pjrt_sample: Option<String>,
+    pub description: String,
+}
+
+/// In-memory registry with JSON round-trip for persistence.
+#[derive(Debug, Default, Clone)]
+pub struct TestDb {
+    cases: BTreeMap<String, TestCase>,
+}
+
+impl TestDb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The registry preloaded with the paper's evaluated applications.
+    pub fn builtin() -> Self {
+        let mut db = Self::new();
+        db.register(TestCase {
+            app: "tdfir".into(),
+            entry: "main".into(),
+            observed_arrays: vec!["outr".into(), "outi".into()],
+            pjrt_sample: Some("tdfir".into()),
+            description: "HPEC time-domain FIR filter bank sample test"
+                .into(),
+        });
+        db.register(TestCase {
+            app: "mriq".into(),
+            entry: "main".into(),
+            observed_arrays: vec!["qr".into(), "qi".into()],
+            pjrt_sample: Some("mriq".into()),
+            description: "Parboil MRI-Q Q-matrix sample test".into(),
+        });
+        db.register(TestCase {
+            app: "sobel".into(),
+            entry: "main".into(),
+            observed_arrays: vec!["gmag".into()],
+            pjrt_sample: None,
+            description: "Sobel edge-detection sample test (IoT camera \
+                          motivation, paper §1)"
+                .into(),
+        });
+        db
+    }
+
+    pub fn register(&mut self, case: TestCase) {
+        self.cases.insert(case.app.clone(), case);
+    }
+
+    pub fn get(&self, app: &str) -> Option<&TestCase> {
+        self.cases.get(app)
+    }
+
+    pub fn apps(&self) -> Vec<&str> {
+        self.cases.keys().map(String::as_str).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.cases
+                .values()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("app", Json::Str(c.app.clone())),
+                        ("entry", Json::Str(c.entry.clone())),
+                        (
+                            "observed_arrays",
+                            Json::Arr(
+                                c.observed_arrays
+                                    .iter()
+                                    .map(|a| Json::Str(a.clone()))
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "pjrt_sample",
+                            c.pjrt_sample
+                                .clone()
+                                .map(Json::Str)
+                                .unwrap_or(Json::Null),
+                        ),
+                        ("description", Json::Str(c.description.clone())),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Json) -> Option<Self> {
+        let mut db = Self::new();
+        for item in v.as_arr()? {
+            let case = TestCase {
+                app: item.get(&["app"])?.as_str()?.to_string(),
+                entry: item.get(&["entry"])?.as_str()?.to_string(),
+                observed_arrays: item
+                    .get(&["observed_arrays"])?
+                    .as_arr()?
+                    .iter()
+                    .filter_map(|a| a.as_str().map(String::from))
+                    .collect(),
+                pjrt_sample: item
+                    .get(&["pjrt_sample"])
+                    .and_then(Json::as_str)
+                    .map(String::from),
+                description: item
+                    .get(&["description"])?
+                    .as_str()?
+                    .to_string(),
+            };
+            db.register(case);
+        }
+        Some(db)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_has_paper_apps() {
+        let db = TestDb::builtin();
+        assert!(db.get("tdfir").is_some());
+        assert!(db.get("mriq").is_some());
+        assert_eq!(
+            db.get("tdfir").unwrap().pjrt_sample.as_deref(),
+            Some("tdfir")
+        );
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let db = TestDb::builtin();
+        let j = db.to_json();
+        let back = TestDb::from_json(&j).unwrap();
+        assert_eq!(db.apps(), back.apps());
+        assert_eq!(db.get("mriq"), back.get("mriq"));
+    }
+
+    #[test]
+    fn sobel_is_cpu_only() {
+        let db = TestDb::builtin();
+        assert!(db.get("sobel").unwrap().pjrt_sample.is_none());
+    }
+}

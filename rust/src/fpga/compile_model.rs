@@ -1,0 +1,104 @@
+//! Compile-time model for the verification environment.
+//!
+//! Full FPGA place-and-route takes hours (paper §5.2: "about 3 hours to
+//! compile one offload pattern" → "about half day" for 4 patterns). The
+//! verification environment schedules pattern compiles on a pool of build
+//! machines; this module computes the makespan so the automation-time
+//! experiment (EXPERIMENTS.md, §5.2 text) is reproducible without
+//! actually burning 12 hours.
+
+/// A compile job (one offload pattern).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompileJob {
+    /// Modeled compile duration, seconds.
+    pub duration_s: f64,
+}
+
+/// Makespan of `jobs` on `machines` identical build machines using LPT
+/// (longest processing time first) list scheduling — what a Jenkins-style
+/// verification environment with a worker pool does.
+pub fn makespan(jobs: &[CompileJob], machines: usize) -> f64 {
+    assert!(machines > 0, "need at least one build machine");
+    let mut sorted: Vec<f64> = jobs.iter().map(|j| j.duration_s).collect();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut loads = vec![0.0f64; machines];
+    for d in sorted {
+        // Assign to least-loaded machine.
+        let (idx, _) = loads
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        loads[idx] += d;
+    }
+    loads.into_iter().fold(0.0, f64::max)
+}
+
+/// Total automation time: sequential measurement rounds, each round's
+/// compiles in parallel on the machine pool, plus per-pattern measurement
+/// time (sample-test execution, minutes at most).
+pub fn automation_time(
+    rounds: &[Vec<CompileJob>],
+    machines: usize,
+    measure_s_per_pattern: f64,
+) -> f64 {
+    rounds
+        .iter()
+        .map(|round| {
+            makespan(round, machines)
+                + round.len() as f64 * measure_s_per_pattern
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(h: f64) -> CompileJob {
+        CompileJob {
+            duration_s: h * 3600.0,
+        }
+    }
+
+    #[test]
+    fn single_machine_sums() {
+        let jobs = vec![job(3.0), job(3.0), job(3.0)];
+        assert!((makespan(&jobs, 1) - 9.0 * 3600.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn enough_machines_parallelize() {
+        let jobs = vec![job(3.0), job(2.0), job(1.0)];
+        assert!((makespan(&jobs, 3) - 3.0 * 3600.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn lpt_balances() {
+        let jobs = vec![job(3.0), job(2.0), job(2.0), job(1.0)];
+        // 2 machines: LPT → {3,1}, {2,2} → makespan 4 h.
+        assert!((makespan(&jobs, 2) - 4.0 * 3600.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn paper_half_day_scenario() {
+        // §5.1.2/§5.2: 4 patterns (3 singles + 1 combo), ~3 h each, one
+        // verification machine, two rounds (3 then 1) → ~12 h ≈ half day.
+        let rounds = vec![
+            vec![job(3.0), job(3.0), job(3.0)],
+            vec![job(3.0)],
+        ];
+        let t = automation_time(&rounds, 1, 120.0);
+        let hours = t / 3600.0;
+        assert!(
+            (11.0..14.0).contains(&hours),
+            "automation should be about half a day: {hours:.1} h"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn zero_machines_panics() {
+        makespan(&[job(1.0)], 0);
+    }
+}

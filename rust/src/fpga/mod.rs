@@ -1,0 +1,19 @@
+//! FPGA substrate: what the paper's physical Intel PAC provides, built as
+//! simulation (repro band 0/5 — no hardware; see DESIGN.md §2).
+//!
+//! * [`sim`] — cycle/transfer performance model for measuring patterns.
+//! * [`xfer`] — PCIe DMA transfer model.
+//! * [`exec`] — *functional* execution of offloaded programs for numeric
+//!   verification (outlined-kernel interpretation).
+//! * [`compile_model`] — the hours-long place-and-route wall-clock model
+//!   behind the paper's "half day" automation figure.
+
+pub mod compile_model;
+pub mod exec;
+pub mod sim;
+pub mod xfer;
+
+pub use compile_model::{automation_time, makespan, CompileJob};
+pub use exec::{verify_pattern, VerifyResult};
+pub use sim::{simulate, subtree_ids, LoopTiming, PatternTiming, SimError};
+pub use xfer::{dma_time, launch_overhead};

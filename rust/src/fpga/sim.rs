@@ -1,0 +1,310 @@
+//! FPGA performance simulator: models the verification-environment
+//! measurement of one offload pattern (paper §4: "conducts performance
+//! measurements on a server with FPGA in the verification environment").
+//!
+//! For each offloaded loop the time is
+//!
+//! ```text
+//! entries × [launch + DMA(in) + pipeline(depth + slots·II/unroll)/fmax + DMA(out)]
+//! ```
+//!
+//! where `slots` is the innermost iteration count of the loop's subtree
+//! (HLS pipelines the innermost loop; outer levels wrap it), `fmax` is
+//! derated by the *combined* utilization of all kernels in the pattern —
+//! concentrating resources on one kernel versus spreading them across
+//! several is exactly the trade-off the paper's two "types of speed up"
+//! describe — and the remaining program stays on the CPU model.
+
+use std::collections::BTreeSet;
+
+use crate::analysis::Analysis;
+use crate::codegen::KernelIr;
+use crate::cpu::CpuModel;
+use crate::hls::{estimate, schedule, Device, ResourceEstimate};
+use crate::minic::ast::LoopId;
+use crate::minic::OpCounts;
+
+use super::xfer;
+
+/// Simulation failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SimError {
+    /// Two offloaded loops overlap (one nests the other).
+    OverlappingLoops(LoopId, LoopId),
+    /// The combined pattern exceeds device resources.
+    DoesNotFit,
+    /// A kernel's loop has no profile data (never executed).
+    ColdLoop(LoopId),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::OverlappingLoops(a, b) => {
+                write!(f, "offloaded loops {a} and {b} overlap")
+            }
+            SimError::DoesNotFit => {
+                write!(f, "combined pattern exceeds device resources")
+            }
+            SimError::ColdLoop(id) => {
+                write!(f, "loop {id} never executed in the profiling run")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Timing breakdown for one offloaded loop.
+#[derive(Debug, Clone)]
+pub struct LoopTiming {
+    pub loop_id: LoopId,
+    pub entries: u64,
+    /// Innermost pipeline slots across all entries.
+    pub slots: u64,
+    pub compute_s: f64,
+    pub transfer_s: f64,
+    pub total_s: f64,
+}
+
+/// Timing of a full pattern.
+#[derive(Debug, Clone)]
+pub struct PatternTiming {
+    /// All-CPU baseline (the paper's comparison denominator).
+    pub cpu_baseline_s: f64,
+    /// CPU time of the non-offloaded remainder.
+    pub cpu_rest_s: f64,
+    pub loops: Vec<LoopTiming>,
+    /// Total modeled pattern time.
+    pub pattern_s: f64,
+    /// `cpu_baseline_s / pattern_s`.
+    pub speedup: f64,
+    /// Combined resource estimate of the pattern.
+    pub combined: ResourceEstimate,
+}
+
+/// Simulate a pattern of offloaded kernels against an analysis profile.
+pub fn simulate(
+    analysis: &Analysis,
+    kernels: &[KernelIr],
+    cpu: &CpuModel,
+    dev: &Device,
+) -> Result<PatternTiming, SimError> {
+    // Disjointness: no offloaded loop may contain another offloaded loop.
+    let offloaded: Vec<LoopId> = kernels.iter().map(|k| k.loop_id).collect();
+    for k in kernels {
+        let subtree = subtree_ids(analysis, k.loop_id);
+        for other in &offloaded {
+            if *other != k.loop_id && subtree.contains(other) {
+                return Err(SimError::OverlappingLoops(k.loop_id, *other));
+            }
+        }
+    }
+
+    // Combined resources decide fit and clock derating.
+    let combined = kernels
+        .iter()
+        .map(estimate)
+        .fold(ResourceEstimate::default(), |acc, e| acc.add(&e));
+    if !combined.fits(dev) {
+        return Err(SimError::DoesNotFit);
+    }
+
+    let cpu_baseline_s = cpu.time(&analysis.profile.total);
+
+    let mut offloaded_ops = OpCounts::default();
+    let mut loops = Vec::new();
+    for k in kernels {
+        let lp = analysis
+            .profile
+            .loop_profile(k.loop_id)
+            .ok_or(SimError::ColdLoop(k.loop_id))?;
+        offloaded_ops = offloaded_ops.plus(&lp.ops);
+
+        let sched = schedule(k, &combined, dev);
+        let entries = lp.entries.max(1);
+        // Innermost iteration count of the subtree, divided by the
+        // spatial replication of the innermost loop (a spatialized K-tap
+        // MAC consumes K iterations per clock).
+        let inner_trips = subtree_ids(analysis, k.loop_id)
+            .iter()
+            .filter_map(|id| analysis.profile.loop_profile(*id))
+            .map(|p| p.trips)
+            .max()
+            .unwrap_or(lp.trips);
+        let slots = inner_trips.div_ceil(crate::hls::spatial_factor(k)).max(1);
+
+        let fill_s = (entries * sched.depth) as f64 / sched.fmax_hz;
+        let throughput_s = (slots.div_ceil(k.unroll.max(1) as u64)
+            * sched.ii) as f64
+            / sched.fmax_hz;
+        let compute_s = fill_s + throughput_s;
+        let transfer_s = entries as f64
+            * xfer::launch_overhead(dev, k.bytes_in(), k.bytes_out());
+        loops.push(LoopTiming {
+            loop_id: k.loop_id,
+            entries,
+            slots,
+            compute_s,
+            transfer_s,
+            total_s: compute_s + transfer_s,
+        });
+    }
+
+    let rest_ops = analysis.profile.total.saturating_sub(&offloaded_ops);
+    let cpu_rest_s = cpu.time(&rest_ops);
+    let fpga_s: f64 = loops.iter().map(|l| l.total_s).sum();
+    let pattern_s = cpu_rest_s + fpga_s;
+    let speedup = if pattern_s > 0.0 {
+        cpu_baseline_s / pattern_s
+    } else {
+        f64::INFINITY
+    };
+
+    Ok(PatternTiming {
+        cpu_baseline_s,
+        cpu_rest_s,
+        loops,
+        pattern_s,
+        speedup,
+        combined,
+    })
+}
+
+/// Ids of the loop and every loop nested inside it.
+pub fn subtree_ids(analysis: &Analysis, id: LoopId) -> BTreeSet<LoopId> {
+    let mut out = BTreeSet::new();
+    let mut stack = vec![id];
+    while let Some(cur) = stack.pop() {
+        if !out.insert(cur) {
+            continue;
+        }
+        if let Some(al) = analysis.loop_by_id(cur) {
+            stack.extend(al.info.children.iter().copied());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::codegen::split;
+    use crate::cpu::XEON_BRONZE_3104;
+    use crate::hls::ARRIA10_GX;
+    use crate::minic::parse;
+
+    /// A program with one hot trig loop and one cold copy loop that is
+    /// entered many times (transfer-dominated if offloaded).
+    const SRC: &str = "
+#define N 2048
+#define REP 64
+float a[N]; float b[N]; float c[N];
+int main() {
+    for (int r = 0; r < REP; r++) {                   // L0 (outer, calls nothing)
+        for (int i = 0; i < N; i++) {                 // L1 hot inner
+            b[i] = sin(a[i]) * cos(a[i]) + sqrt(a[i] + 2.0);
+        }
+    }
+    for (int i = 0; i < N; i++) { c[i] = b[i]; }      // L2 copy
+    return 0;
+}";
+
+    fn setup() -> (crate::minic::Program, Analysis) {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        (prog, an)
+    }
+
+    fn kernel(prog: &crate::minic::Program, an: &Analysis, id: u32) -> KernelIr {
+        split(prog, an.loop_by_id(LoopId(id)).unwrap())
+            .unwrap()
+            .kernel
+    }
+
+    #[test]
+    fn hot_outer_loop_speeds_up() {
+        let (prog, an) = setup();
+        let k = kernel(&prog, &an, 0); // offload the whole repetition loop
+        let t = simulate(&an, &[k], &XEON_BRONZE_3104, &ARRIA10_GX).unwrap();
+        assert!(
+            t.speedup > 1.5,
+            "trig-dense loop should win on FPGA: {:.2}x",
+            t.speedup
+        );
+    }
+
+    #[test]
+    fn copy_loop_loses() {
+        let (prog, an) = setup();
+        let k = kernel(&prog, &an, 2);
+        let t = simulate(&an, &[k], &XEON_BRONZE_3104, &ARRIA10_GX).unwrap();
+        assert!(
+            t.speedup < 1.05,
+            "pure copy loop must not win: {:.3}x",
+            t.speedup
+        );
+    }
+
+    #[test]
+    fn inner_loop_per_entry_transfer_tax() {
+        let (prog, an) = setup();
+        // Offloading L1 directly means REP kernel launches with transfers.
+        let k_inner = kernel(&prog, &an, 1);
+        let k_outer = kernel(&prog, &an, 0);
+        let t_inner =
+            simulate(&an, &[k_inner], &XEON_BRONZE_3104, &ARRIA10_GX)
+                .unwrap();
+        let t_outer =
+            simulate(&an, &[k_outer], &XEON_BRONZE_3104, &ARRIA10_GX)
+                .unwrap();
+        let inner_l = &t_inner.loops[0];
+        let outer_l = &t_outer.loops[0];
+        assert_eq!(inner_l.entries, 64);
+        assert_eq!(outer_l.entries, 1);
+        assert!(inner_l.transfer_s > outer_l.transfer_s * 10.0);
+        assert!(t_outer.speedup > t_inner.speedup);
+    }
+
+    #[test]
+    fn overlapping_pattern_rejected() {
+        let (prog, an) = setup();
+        let k0 = kernel(&prog, &an, 0);
+        let k1 = kernel(&prog, &an, 1);
+        let err = simulate(&an, &[k0, k1], &XEON_BRONZE_3104, &ARRIA10_GX)
+            .unwrap_err();
+        assert!(matches!(err, SimError::OverlappingLoops(..)));
+    }
+
+    #[test]
+    fn disjoint_combination_allowed() {
+        let (prog, an) = setup();
+        let k0 = kernel(&prog, &an, 0);
+        let k2 = kernel(&prog, &an, 2);
+        let t = simulate(&an, &[k0, k2], &XEON_BRONZE_3104, &ARRIA10_GX)
+            .unwrap();
+        assert_eq!(t.loops.len(), 2);
+        // Combined estimate is the sum of parts.
+        let e0 = estimate(&kernel(&prog, &an, 0));
+        let e2 = estimate(&kernel(&prog, &an, 2));
+        assert_eq!(t.combined, e0.add(&e2));
+    }
+
+    #[test]
+    fn empty_pattern_is_baseline() {
+        let (_prog, an) = setup();
+        let t = simulate(&an, &[], &XEON_BRONZE_3104, &ARRIA10_GX).unwrap();
+        assert!((t.speedup - 1.0).abs() < 1e-9);
+        assert_eq!(t.loops.len(), 0);
+    }
+
+    #[test]
+    fn subtree_ids_cover_nesting() {
+        let (_prog, an) = setup();
+        let s = subtree_ids(&an, LoopId(0));
+        assert!(s.contains(&LoopId(0)));
+        assert!(s.contains(&LoopId(1)));
+        assert!(!s.contains(&LoopId(2)));
+    }
+}

@@ -1,0 +1,66 @@
+//! Host↔device transfer model (PCIe DMA).
+//!
+//! OpenCL/CUDA offloading's tax: every kernel launch moves its buffers
+//! over PCIe (paper §2: "naive parallel processing performances with
+//! FPGAs or GPUs are not high because of overheads of CPU and FPGA/GPU
+//! devices memory data transfer"). The model is latency + size/bandwidth
+//! per DMA, which is what makes *frequently-entered small loops* lose
+//! when offloaded — the decision landscape the funnel must navigate.
+
+use crate::hls::Device;
+
+/// One direction of a transfer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    pub bytes: u64,
+    pub seconds: f64,
+}
+
+/// Time to move `bytes` one way (one DMA).
+pub fn dma_time(dev: &Device, bytes: u64) -> f64 {
+    if bytes == 0 {
+        return 0.0;
+    }
+    dev.dma_latency_s + bytes as f64 / dev.pcie_bytes_per_sec
+}
+
+/// Full launch overhead for a kernel invocation that moves `bytes_in`
+/// then `bytes_out`.
+pub fn launch_overhead(dev: &Device, bytes_in: u64, bytes_out: u64) -> f64 {
+    dev.launch_latency_s + dma_time(dev, bytes_in) + dma_time(dev, bytes_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::ARRIA10_GX;
+
+    #[test]
+    fn zero_bytes_zero_time() {
+        assert_eq!(dma_time(&ARRIA10_GX, 0), 0.0);
+    }
+
+    #[test]
+    fn latency_floor_for_small_transfers() {
+        let t = dma_time(&ARRIA10_GX, 64);
+        assert!(t >= ARRIA10_GX.dma_latency_s);
+        assert!(t < ARRIA10_GX.dma_latency_s * 1.01);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_transfers() {
+        let gb = 1u64 << 30;
+        let t = dma_time(&ARRIA10_GX, gb);
+        let ideal = gb as f64 / ARRIA10_GX.pcie_bytes_per_sec;
+        assert!((t - ideal).abs() / ideal < 0.01);
+    }
+
+    #[test]
+    fn launch_overhead_sums_parts() {
+        let t = launch_overhead(&ARRIA10_GX, 1000, 2000);
+        let expect = ARRIA10_GX.launch_latency_s
+            + dma_time(&ARRIA10_GX, 1000)
+            + dma_time(&ARRIA10_GX, 2000);
+        assert!((t - expect).abs() < 1e-12);
+    }
+}

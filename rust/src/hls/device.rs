@@ -1,0 +1,92 @@
+//! FPGA device models (paper Fig. 3: Intel PAC with Intel Arria10 GX).
+//!
+//! Public resource figures for the Arria 10 GX 1150 on the Intel
+//! Programmable Acceleration Card, the paper's verification device:
+//! 427,200 ALMs (~2 LUT + 2 FF each), 1,518 hard DSP blocks, 2,713 M20K
+//! (20 kb) memory blocks. The OpenCL BSP (board support package:
+//! PCIe/DDR controllers, DMA) permanently occupies a sizable slice —
+//! that's the `bsp_overhead` fraction, and it is why even trivial kernels
+//! report double-digit utilization in real Quartus reports.
+
+/// Static description of an FPGA device + BSP.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    /// Adaptive logic modules; we track LUTs and FFs through ALM-derived
+    /// totals (2 per ALM each).
+    pub luts: u64,
+    pub ffs: u64,
+    /// Hard floating-point capable DSP blocks.
+    pub dsps: u64,
+    /// Block RAM bits (M20K × 20 kb).
+    pub bram_bits: u64,
+    /// Fraction of each resource pre-consumed by the board support
+    /// package (PCIe, DDR4 controllers, DMA engines).
+    pub bsp_overhead: f64,
+    /// Peak kernel clock of the OpenCL fabric in Hz (derated by
+    /// utilization in [`crate::hls::schedule`]).
+    pub base_clock_hz: f64,
+    /// Effective host↔device bandwidth (PCIe Gen3 x8), bytes/s.
+    pub pcie_bytes_per_sec: f64,
+    /// Fixed per-DMA-transfer latency, seconds.
+    pub dma_latency_s: f64,
+    /// Fixed kernel-launch overhead, seconds.
+    pub launch_latency_s: f64,
+}
+
+/// Intel PAC with Arria 10 GX 1150 + Acceleration Stack 1.2 (paper Fig. 3).
+pub const ARRIA10_GX: Device = Device {
+    name: "Intel PAC Arria10 GX 1150",
+    luts: 854_400,        // 427,200 ALMs × 2
+    ffs: 1_708_800,       // 427,200 ALMs × 4 registers / 2 (usable pairs)
+    dsps: 1_518,
+    bram_bits: 55_562_240, // 2,713 × 20,480 bits
+    bsp_overhead: 0.18,
+    base_clock_hz: 240.0e6, // typical Arria10 OpenCL kernel clock
+    pcie_bytes_per_sec: 6.0e9, // PCIe Gen3 x8 effective (~75% of 8 GB/s)
+    dma_latency_s: 12.0e-6,
+    launch_latency_s: 6.0e-6,
+};
+
+impl Device {
+    /// Resource amount available to kernels (after the BSP).
+    pub fn usable_luts(&self) -> u64 {
+        (self.luts as f64 * (1.0 - self.bsp_overhead)) as u64
+    }
+
+    pub fn usable_ffs(&self) -> u64 {
+        (self.ffs as f64 * (1.0 - self.bsp_overhead)) as u64
+    }
+
+    pub fn usable_dsps(&self) -> u64 {
+        (self.dsps as f64 * (1.0 - self.bsp_overhead)) as u64
+    }
+
+    pub fn usable_bram_bits(&self) -> u64 {
+        (self.bram_bits as f64 * (1.0 - self.bsp_overhead)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arria10_figures_sane() {
+        let d = &ARRIA10_GX;
+        assert!(d.luts > 800_000);
+        assert!(d.dsps > 1_000);
+        assert!(d.bram_bits > 50_000_000);
+        assert!(d.bsp_overhead > 0.0 && d.bsp_overhead < 0.5);
+    }
+
+    #[test]
+    fn usable_less_than_total() {
+        let d = &ARRIA10_GX;
+        assert!(d.usable_luts() < d.luts);
+        assert!(d.usable_dsps() < d.dsps);
+        assert!(d.usable_bram_bits() < d.bram_bits);
+        // But the majority remains usable.
+        assert!(d.usable_luts() > d.luts / 2);
+    }
+}

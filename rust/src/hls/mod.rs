@@ -1,0 +1,24 @@
+//! HLS model: the Intel FPGA SDK for OpenCL pre-compile analog.
+//!
+//! Given a kernel IR, produce in "about a minute" what the real toolchain
+//! produces from the HDL intermediate: resource usage (FF/LUT/DSP/M20K as
+//! % of the Arria10), a pipeline schedule (II/depth/fmax), and the
+//! resource-efficiency ratio the paper narrows candidates by — all
+//! without the ~3 h full place-and-route, which is exactly the asymmetry
+//! the paper's method is built around.
+
+pub mod device;
+pub mod report;
+pub mod resources;
+pub mod schedule;
+
+pub use device::{Device, ARRIA10_GX};
+pub use report::{
+    full_compile_seconds, precompile, render, PrecompileReport,
+    PRECOMPILE_SECONDS,
+};
+pub use resources::{
+    estimate, inventory, spatial_factor, OpInventory, ResourceEstimate,
+    Utilization, SPATIAL_MAX_TRIPS,
+};
+pub use schedule::{body_latency, schedule, Schedule};

@@ -1,0 +1,185 @@
+//! Pre-compile report: the Quartus-style summary the narrowing step reads.
+//!
+//! One per candidate kernel. Carries the resource estimate (as % of the
+//! device, like the SDK's report), the pipeline schedule, the *resource
+//! efficiency* (paper §3.3: "(arithmetic intensity / resource amount)"),
+//! and the modeled compile times — minutes for HDL extraction, hours for
+//! full place-and-route (the asymmetry the whole method exists to
+//! exploit).
+
+use crate::analysis::LoopIntensity;
+use crate::codegen::KernelIr;
+use crate::minic::ast::LoopId;
+
+use super::device::Device;
+use super::resources::{estimate, ResourceEstimate, Utilization};
+use super::schedule::{schedule, Schedule};
+
+/// Modeled time for the HDL-extraction pre-compile (paper: "about a
+/// minute").
+pub const PRECOMPILE_SECONDS: f64 = 60.0;
+
+/// The pre-compile report for one kernel variant.
+#[derive(Debug, Clone)]
+pub struct PrecompileReport {
+    pub loop_id: LoopId,
+    pub kernel_name: String,
+    pub unroll: u32,
+    pub estimate: ResourceEstimate,
+    pub utilization: Utilization,
+    /// Bottleneck fraction (the paper's scalar "resource amount").
+    pub resource_amount: f64,
+    pub fits: bool,
+    pub schedule: Schedule,
+    /// intensity / resource_amount (paper's resource efficiency).
+    pub resource_efficiency: f64,
+    /// Modeled full-compile wall-clock, seconds (~3 h in the paper).
+    pub full_compile_s: f64,
+}
+
+/// Modeled full place-and-route time: base hours plus growth with design
+/// size (bigger designs route longer). Paper §5.2: "about 3 hours to
+/// compile one offload pattern".
+pub fn full_compile_seconds(est: &ResourceEstimate, dev: &Device) -> f64 {
+    let util = est.utilization(dev).max();
+    let base_h = 2.4;
+    let growth_h = 1.2 * util.min(1.2);
+    (base_h + growth_h) * 3600.0
+}
+
+/// Produce the report for a kernel + its measured intensity.
+pub fn precompile(
+    kernel: &KernelIr,
+    intensity: &LoopIntensity,
+    dev: &Device,
+) -> PrecompileReport {
+    let est = estimate(kernel);
+    let utilization = est.utilization(dev);
+    let resource_amount = utilization.max();
+    let sched = schedule(kernel, &est, dev);
+    let resource_efficiency = if resource_amount > 0.0 {
+        intensity.intensity / resource_amount
+    } else {
+        0.0
+    };
+    PrecompileReport {
+        loop_id: kernel.loop_id,
+        kernel_name: kernel.name.clone(),
+        unroll: kernel.unroll,
+        estimate: est,
+        utilization,
+        resource_amount,
+        fits: est.fits(dev),
+        schedule: sched,
+        resource_efficiency,
+        full_compile_s: full_compile_seconds(&est, dev),
+    }
+}
+
+/// Human-readable rendering (the `--explain` output).
+pub fn render(r: &PrecompileReport) -> String {
+    format!(
+        "{name} (loop {id}, unroll {u}):\n\
+         \x20 LUT {lut:>8}  ({lutp:5.2}%)   FF {ff:>8} ({ffp:5.2}%)\n\
+         \x20 DSP {dsp:>8}  ({dspp:5.2}%)   M20K bits {bram:>9} ({bramp:5.2}%)\n\
+         \x20 II {ii}  depth {depth}  fmax {fmax:.0} MHz  fits: {fits}\n\
+         \x20 resource amount {ra:.4}  efficiency {re:.1}  full compile {fc:.1} h",
+        name = r.kernel_name,
+        id = r.loop_id,
+        u = r.unroll,
+        lut = r.estimate.luts,
+        lutp = r.utilization.luts * 100.0,
+        ff = r.estimate.ffs,
+        ffp = r.utilization.ffs * 100.0,
+        dsp = r.estimate.dsps,
+        dspp = r.utilization.dsps * 100.0,
+        bram = r.estimate.bram_bits,
+        bramp = r.utilization.bram * 100.0,
+        ii = r.schedule.ii,
+        depth = r.schedule.depth,
+        fmax = r.schedule.fmax_hz / 1e6,
+        fits = r.fits,
+        ra = r.resource_amount,
+        re = r.resource_efficiency,
+        fc = r.full_compile_s / 3600.0,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::codegen::split;
+    use crate::hls::device::ARRIA10_GX;
+    use crate::minic::parse;
+
+    fn report_for(src: &str, id: u32) -> PrecompileReport {
+        let prog = parse(src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let al = an.loop_by_id(LoopId(id)).unwrap();
+        let r = split(&prog, al).unwrap();
+        precompile(
+            &r.kernel,
+            al.intensity.as_ref().unwrap(),
+            &ARRIA10_GX,
+        )
+    }
+
+    const SRC: &str = "
+#define N 1024
+float a[N]; float b[N]; float c[N];
+int main() {
+    for (int i = 0; i < N; i++) { b[i] = a[i] + 1.0; }                   // L0 cheap
+    for (int i = 0; i < N; i++) { c[i] = sin(a[i]) * cos(b[i]) + sqrt(a[i] + 2.0); } // L1 dense
+    return 0;
+}";
+
+    #[test]
+    fn efficiency_is_intensity_over_amount() {
+        let r = report_for(SRC, 1);
+        let expected = {
+            let prog = parse(SRC).unwrap();
+            let an = analyze(&prog, "main").unwrap();
+            let i = an
+                .loop_by_id(LoopId(1))
+                .unwrap()
+                .intensity
+                .as_ref()
+                .unwrap()
+                .intensity;
+            i / r.resource_amount
+        };
+        assert!((r.resource_efficiency - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compile_time_in_paper_ballpark() {
+        let r = report_for(SRC, 1);
+        let hours = r.full_compile_s / 3600.0;
+        assert!((2.0..4.0).contains(&hours), "{hours} h");
+    }
+
+    #[test]
+    fn render_mentions_key_fields() {
+        let r = report_for(SRC, 0);
+        let text = render(&r);
+        assert!(text.contains("kernel_L0"));
+        assert!(text.contains("fmax"));
+        assert!(text.contains("efficiency"));
+    }
+
+    #[test]
+    fn dense_kernel_lower_efficiency_iff_resources_dominate() {
+        // The trig loop has higher intensity but also much bigger
+        // datapath; the report must reflect both sides of the ratio.
+        let cheap = report_for(SRC, 0);
+        let dense = report_for(SRC, 1);
+        assert!(dense.resource_amount > cheap.resource_amount);
+        assert!(
+            dense.estimate.luts > cheap.estimate.luts * 3,
+            "{} vs {}",
+            dense.estimate.luts,
+            cheap.estimate.luts
+        );
+    }
+}

@@ -1,0 +1,642 @@
+//! HDL-level resource estimation (the Intel-SDK pre-compile analog).
+//!
+//! Paper §3.3: "it takes only a minute until to extract HDL as the
+//! intermediate state. Since resources such as Flip Flop and Look Up Table
+//! used in FPGA can be estimated at the HDL level, the amount of resources
+//! used can be known in a short time even if compiling is not completed."
+//!
+//! The estimator prices one *datapath instance* of the kernel body — the
+//! structure HLS actually instantiates. Nested loops contribute their body
+//! once (they become pipelined sub-schedules, not replicated hardware);
+//! the unroll factor replicates the outermost body. Costs are calibrated
+//! to Arria-10-class OpenCL reports: hard-FP DSPs absorb mul/add, divides
+//! and transcendentals burn soft logic, each array argument owns a
+//! load-store unit, and small arrays are cached in M20K local memory (the
+//! paper's "local memory cache" speed-up technique).
+
+use crate::codegen::KernelIr;
+use crate::minic::ast::*;
+
+use super::device::Device;
+
+/// Estimated resource usage of one kernel.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceEstimate {
+    pub luts: u64,
+    pub ffs: u64,
+    pub dsps: u64,
+    pub bram_bits: u64,
+}
+
+impl ResourceEstimate {
+    pub fn add(&self, o: &ResourceEstimate) -> ResourceEstimate {
+        ResourceEstimate {
+            luts: self.luts + o.luts,
+            ffs: self.ffs + o.ffs,
+            dsps: self.dsps + o.dsps,
+            bram_bits: self.bram_bits + o.bram_bits,
+        }
+    }
+
+    /// Utilization fractions of the device's *usable* (post-BSP) pool.
+    pub fn utilization(&self, dev: &Device) -> Utilization {
+        Utilization {
+            luts: self.luts as f64 / dev.usable_luts() as f64,
+            ffs: self.ffs as f64 / dev.usable_ffs() as f64,
+            dsps: self.dsps as f64 / dev.usable_dsps() as f64,
+            bram: self.bram_bits as f64 / dev.usable_bram_bits() as f64,
+        }
+    }
+
+    pub fn fits(&self, dev: &Device) -> bool {
+        let u = self.utilization(dev);
+        u.max() <= 1.0
+    }
+}
+
+/// Per-class utilization fractions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Utilization {
+    pub luts: f64,
+    pub ffs: f64,
+    pub dsps: f64,
+    pub bram: f64,
+}
+
+impl Utilization {
+    /// Bottleneck fraction — the paper's "resource amount" scalar used in
+    /// the resource-efficiency ratio.
+    pub fn max(&self) -> f64 {
+        self.luts.max(self.ffs).max(self.dsps).max(self.bram)
+    }
+}
+
+/// Static op inventory of one datapath instance.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct OpInventory {
+    pub f_add: u64,
+    pub f_mul: u64,
+    pub f_div: u64,
+    pub f_trig: u64,
+    pub i_op: u64,
+    pub cmp: u64,
+    pub loads: u64,
+    pub stores: u64,
+    /// Nested loop structures (each needs control logic).
+    pub inner_loops: u64,
+    /// Textual memory access *sites* — the global-memory stream rate per
+    /// pipeline slot. Unlike `loads`/`stores` this is NOT multiplied by
+    /// spatialization: a spatially unrolled inner loop reads from banked
+    /// M20K local memory, not from the global interface.
+    pub ports: u64,
+}
+
+impl OpInventory {
+    fn add_assign(&mut self, o: &OpInventory) {
+        self.f_add += o.f_add;
+        self.f_mul += o.f_mul;
+        self.f_div += o.f_div;
+        self.f_trig += o.f_trig;
+        self.i_op += o.i_op;
+        self.cmp += o.cmp;
+        self.loads += o.loads;
+        self.stores += o.stores;
+        self.inner_loops += o.inner_loops;
+        self.ports += o.ports;
+    }
+
+    /// Scale the datapath by a spatial replication factor (ports exempt).
+    fn scale(&self, f: u64) -> OpInventory {
+        OpInventory {
+            f_add: self.f_add * f,
+            f_mul: self.f_mul * f,
+            f_div: self.f_div * f,
+            f_trig: self.f_trig * f,
+            i_op: self.i_op * f,
+            cmp: self.cmp * f,
+            loads: self.loads * f,
+            stores: self.stores * f,
+            inner_loops: self.inner_loops,
+            ports: self.ports,
+        }
+    }
+}
+
+/// Inner counted loops with at most this many iterations are *spatialized*
+/// — fully unrolled into the datapath, the way Intel's OpenCL compiler
+/// treats small fixed-bound inner loops (the K-tap MAC of a FIR becomes K
+/// parallel MACs feeding an adder tree).
+pub const SPATIAL_MAX_TRIPS: u64 = 64;
+
+// ---- cost table (Arria10-class OpenCL, hard-FP DSP) ----
+
+const KERNEL_BASE_LUT: u64 = 2_400;
+const KERNEL_BASE_FF: u64 = 3_600;
+const LSU_LUT: u64 = 1_600; // one load-store unit per array argument
+const LSU_FF: u64 = 2_600;
+const LOOP_CTRL_LUT: u64 = 320;
+const LOOP_CTRL_FF: u64 = 420;
+
+const FADD_DSP: u64 = 1;
+const FADD_LUT: u64 = 110;
+const FADD_FF: u64 = 170;
+const FMUL_DSP: u64 = 1;
+const FMUL_LUT: u64 = 100;
+const FMUL_FF: u64 = 160;
+const FDIV_LUT: u64 = 3_000;
+const FDIV_FF: u64 = 3_600;
+const TRIG_LUT: u64 = 5_800;
+const TRIG_FF: u64 = 7_200;
+const TRIG_DSP: u64 = 8;
+const IOP_LUT: u64 = 64;
+const IOP_FF: u64 = 64;
+const CMP_LUT: u64 = 36;
+const CMP_FF: u64 = 18;
+const PORT_LUT: u64 = 210; // per memory access port in the datapath
+const PORT_FF: u64 = 260;
+
+/// Arrays up to this size are cached whole in M20K local memory.
+const LOCAL_CACHE_MAX_BYTES: u64 = 256 * 1024;
+/// Minimum BRAM granule (one M20K block).
+const M20K_BITS: u64 = 20_480;
+
+/// Count the datapath op inventory of the kernel's (possibly unrolled)
+/// loop body. The outermost loop header counts as control; nested loops
+/// contribute their body once plus control — except small fixed-bound
+/// innermost loops, which are spatialized (body × trips).
+pub fn inventory(kernel: &KernelIr) -> OpInventory {
+    let mut inv = OpInventory::default();
+    let (Stmt::For { body, .. } | Stmt::While { body, .. }) = &kernel.body
+    else {
+        return inv;
+    };
+    // Arrays too big for M20K local caching stream from global memory —
+    // only their accesses consume global ports (cached-array traffic is
+    // already priced as BRAM in `estimate`).
+    let streamed: std::collections::BTreeSet<&str> = kernel
+        .array_params()
+        .filter(|p| p.bytes() > LOCAL_CACHE_MAX_BYTES)
+        .map(|p| p.name.as_str())
+        .collect();
+    // Outermost header: one compare + one add per iteration.
+    inv.cmp += 1;
+    inv.i_op += 1;
+    for s in body {
+        inv.add_assign(&stmt_ops(s, &kernel.defines, &streamed));
+    }
+    inv
+}
+
+/// Spatial replication factor of the kernel's innermost loop (1 when the
+/// innermost loop is not spatializable). The performance simulator
+/// divides pipeline slots by this.
+pub fn spatial_factor(kernel: &KernelIr) -> u64 {
+    fn innermost_factor(body: &[Stmt], defines: &[(String, f64)]) -> u64 {
+        let mut best = 1;
+        for s in body {
+            s.walk(&mut |s| {
+                if let Stmt::For { body: inner, .. } = s {
+                    let has_nested = inner.iter().any(|st| {
+                        let mut found = false;
+                        st.walk(&mut |x| {
+                            if matches!(x, Stmt::For { .. } | Stmt::While { .. })
+                            {
+                                found = true;
+                            }
+                        });
+                        found
+                    });
+                    if !has_nested {
+                        if let Some(t) = local_static_trips(s, defines) {
+                            if t <= SPATIAL_MAX_TRIPS {
+                                best = best.max(t);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        best
+    }
+    match &kernel.body {
+        Stmt::For { body, .. } | Stmt::While { body, .. } => {
+            innermost_factor(body, &kernel.defines)
+        }
+        _ => 1,
+    }
+}
+
+type Streamed<'a> = std::collections::BTreeSet<&'a str>;
+
+fn stmt_ops(s: &Stmt, defines: &[(String, f64)], streamed: &Streamed) -> OpInventory {
+    let mut inv = OpInventory::default();
+    match s {
+        Stmt::Decl { init, .. } => {
+            if let Some(e) = init {
+                inv.add_assign(&expr_ops(e, streamed));
+            }
+        }
+        Stmt::Assign { target, op, value, .. } => {
+            inv.add_assign(&expr_ops(value, streamed));
+            match target {
+                LValue::Index { base, indices } => {
+                    for i in indices {
+                        add_expr_ops(i, &mut inv, true, streamed);
+                    }
+                    inv.i_op += indices.len() as u64;
+                    inv.stores += 1;
+                    if streamed.contains(base.as_str()) {
+                        inv.ports += 1;
+                    }
+                    if *op != AssignOp::Set {
+                        inv.loads += 1;
+                        if streamed.contains(base.as_str()) {
+                            inv.ports += 1;
+                        }
+                        inv.f_add += 1; // the compound op itself
+                    }
+                }
+                LValue::Var(_) => {
+                    if *op != AssignOp::Set {
+                        inv.f_add += 1;
+                    }
+                }
+            }
+        }
+        Stmt::If {
+            cond,
+            then_branch,
+            else_branch,
+            ..
+        } => {
+            inv.add_assign(&expr_ops(cond, streamed));
+            // Both branches exist in hardware (predicated datapath).
+            for s in then_branch.iter().chain(else_branch) {
+                inv.add_assign(&stmt_ops(s, defines, streamed));
+            }
+        }
+        Stmt::For { cond, body, .. } => {
+            let mut body_inv = OpInventory::default();
+            let mut has_nested = false;
+            for s in body {
+                s.walk(&mut |x| {
+                    if matches!(x, Stmt::For { .. } | Stmt::While { .. }) {
+                        has_nested = true;
+                    }
+                });
+                body_inv.add_assign(&stmt_ops(s, defines, streamed));
+            }
+            let trips = local_static_trips(s, defines);
+            match trips {
+                Some(t) if !has_nested && t <= SPATIAL_MAX_TRIPS => {
+                    // Spatialized: body replicated t times, loop control
+                    // and header vanish into wiring.
+                    inv.add_assign(&body_inv.scale(t));
+                }
+                _ => {
+                    inv.inner_loops += 1;
+                    inv.cmp += 1;
+                    inv.i_op += 1;
+                    if let Some(c) = cond {
+                        inv.add_assign(&expr_ops(c, streamed));
+                    }
+                    inv.add_assign(&body_inv);
+                }
+            }
+        }
+        Stmt::While { cond, body, .. } => {
+            inv.inner_loops += 1;
+            inv.add_assign(&expr_ops(cond, streamed));
+            for s in body {
+                inv.add_assign(&stmt_ops(s, defines, streamed));
+            }
+        }
+        Stmt::Return { value, .. } => {
+            if let Some(e) = value {
+                inv.add_assign(&expr_ops(e, streamed));
+            }
+        }
+        Stmt::ExprStmt { expr, .. } => inv.add_assign(&expr_ops(expr, streamed)),
+    }
+    inv
+}
+
+/// Static trip count of a canonical `for (v = a; v < b; v += c)` loop
+/// using only literals and `#define`s.
+fn local_static_trips(s: &Stmt, defines: &[(String, f64)]) -> Option<u64> {
+    let Stmt::For { init, cond, step, .. } = s else {
+        return None;
+    };
+    let ev = |e: &Expr| -> Option<f64> { const_eval(e, defines) };
+    let var = match init.as_deref()? {
+        Stmt::Decl { name, .. } => name.clone(),
+        Stmt::Assign {
+            target: LValue::Var(n),
+            ..
+        } => n.clone(),
+        _ => return None,
+    };
+    let start = match init.as_deref()? {
+        Stmt::Decl { init: Some(e), .. } => ev(e)?,
+        Stmt::Assign { value, .. } => ev(value)?,
+        _ => return None,
+    };
+    let stride = match step.as_deref()? {
+        Stmt::Assign {
+            op: AssignOp::AddSet,
+            value,
+            ..
+        } => ev(value)?,
+        _ => return None,
+    };
+    if stride <= 0.0 {
+        return None;
+    }
+    let (bound, incl) = match cond.as_ref()? {
+        Expr::Bin { op, lhs, rhs } => {
+            if !matches!(lhs.as_ref(), Expr::Var(n) if *n == var) {
+                return None;
+            }
+            match op {
+                BinOp::Lt => (ev(rhs)?, 0.0),
+                BinOp::Le => (ev(rhs)?, 1.0),
+                _ => return None,
+            }
+        }
+        _ => return None,
+    };
+    let span = bound - start + incl;
+    if span <= 0.0 {
+        return Some(0);
+    }
+    Some((span / stride).ceil() as u64)
+}
+
+fn const_eval(e: &Expr, defines: &[(String, f64)]) -> Option<f64> {
+    Some(match e {
+        Expr::IntLit(v) => *v as f64,
+        Expr::FloatLit(v) => *v,
+        Expr::Var(n) => {
+            defines.iter().rev().find(|(d, _)| d == n).map(|(_, v)| *v)?
+        }
+        Expr::Bin { op, lhs, rhs } => {
+            let a = const_eval(lhs, defines)?;
+            let b = const_eval(rhs, defines)?;
+            match op {
+                BinOp::Add => a + b,
+                BinOp::Sub => a - b,
+                BinOp::Mul => a * b,
+                BinOp::Div if b != 0.0 => a / b,
+                _ => return None,
+            }
+        }
+        Expr::Un {
+            op: UnOp::Neg,
+            operand,
+        } => -const_eval(operand, defines)?,
+        _ => return None,
+    })
+}
+
+fn expr_ops(e: &Expr, streamed: &Streamed) -> OpInventory {
+    let mut inv = OpInventory::default();
+    add_expr_ops(e, &mut inv, false, streamed);
+    inv
+}
+
+/// Recursive op pricing. `addr` marks address context: arithmetic inside
+/// array subscripts is integer address math (AGU logic), not FP datapath.
+fn add_expr_ops(e: &Expr, inv: &mut OpInventory, addr: bool, streamed: &Streamed) {
+    match e {
+        Expr::Bin { op, lhs, rhs } => {
+            match op {
+                _ if addr => inv.i_op += 1,
+                BinOp::Add | BinOp::Sub => inv.f_add += 1,
+                BinOp::Mul => inv.f_mul += 1,
+                BinOp::Div | BinOp::Rem => inv.f_div += 1,
+                _ => inv.cmp += 1,
+            }
+            add_expr_ops(lhs, inv, addr, streamed);
+            add_expr_ops(rhs, inv, addr, streamed);
+        }
+        Expr::Un { op, operand } => {
+            match op {
+                _ if addr => inv.i_op += 1,
+                UnOp::Neg => inv.f_add += 1,
+                UnOp::Not => inv.cmp += 1,
+            }
+            add_expr_ops(operand, inv, addr, streamed);
+        }
+        Expr::Index { base, indices } => {
+            inv.loads += 1;
+            if streamed.contains(base.as_str()) {
+                inv.ports += 1;
+            }
+            inv.i_op += indices.len() as u64;
+            for i in indices {
+                add_expr_ops(i, inv, true, streamed);
+            }
+        }
+        Expr::Call { name, args } => {
+            // Builtins only (user calls are blocked upstream).
+            if name != "printf" {
+                inv.f_trig += 1;
+            }
+            for a in args {
+                add_expr_ops(a, inv, addr, streamed);
+            }
+        }
+        Expr::Cast { operand, .. } => add_expr_ops(operand, inv, addr, streamed),
+        Expr::IntLit(_) | Expr::FloatLit(_) | Expr::StrLit(_) | Expr::Var(_) => {}
+    }
+}
+
+/// Estimate resources for a kernel (already unrolled — the body reflects
+/// the replication, so the inventory scales naturally).
+pub fn estimate(kernel: &KernelIr) -> ResourceEstimate {
+    let inv = inventory(kernel);
+    let mut est = ResourceEstimate {
+        luts: KERNEL_BASE_LUT,
+        ffs: KERNEL_BASE_FF,
+        ..Default::default()
+    };
+
+    // Datapath ops.
+    est.luts += inv.f_add * FADD_LUT
+        + inv.f_mul * FMUL_LUT
+        + inv.f_div * FDIV_LUT
+        + inv.f_trig * TRIG_LUT
+        + inv.i_op * IOP_LUT
+        + inv.cmp * CMP_LUT;
+    est.ffs += inv.f_add * FADD_FF
+        + inv.f_mul * FMUL_FF
+        + inv.f_div * FDIV_FF
+        + inv.f_trig * TRIG_FF
+        + inv.i_op * IOP_FF
+        + inv.cmp * CMP_FF;
+    est.dsps += inv.f_add * FADD_DSP
+        + inv.f_mul * FMUL_DSP
+        + inv.f_trig * TRIG_DSP;
+
+    // Memory system: one LSU per array argument + per-port datapath cost.
+    let n_arrays = kernel.array_params().count() as u64;
+    est.luts += n_arrays * LSU_LUT;
+    est.ffs += n_arrays * LSU_FF;
+    est.luts += (inv.loads + inv.stores) * PORT_LUT;
+    est.ffs += (inv.loads + inv.stores) * PORT_FF;
+
+    // Loop control (outer + inner).
+    est.luts += (1 + inv.inner_loops) * LOOP_CTRL_LUT;
+    est.ffs += (1 + inv.inner_loops) * LOOP_CTRL_FF;
+
+    // Local-memory caching of small array arguments.
+    for p in kernel.array_params() {
+        let bytes = p.bytes();
+        if bytes <= LOCAL_CACHE_MAX_BYTES {
+            let bits = (bytes * 8).max(M20K_BITS);
+            // Round up to whole M20K blocks.
+            let blocks = bits.div_ceil(M20K_BITS);
+            est.bram_bits += blocks * M20K_BITS;
+        }
+    }
+
+    est
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::codegen::{split, unroll};
+    use crate::hls::device::ARRIA10_GX;
+    use crate::minic::ast::LoopId;
+    use crate::minic::parse;
+
+    fn kernel(src: &str, id: u32, u: u32) -> KernelIr {
+        let prog = parse(src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let r = split(&prog, an.loop_by_id(LoopId(id)).unwrap()).unwrap();
+        unroll(&r.kernel, u).unwrap()
+    }
+
+    const ELEMWISE: &str = "
+#define N 1024
+float a[N]; float b[N];
+int main() {
+    for (int i = 0; i < N; i++) { b[i] = a[i] * 2.0 + 1.0; }
+    return 0;
+}";
+
+    const TRIG: &str = "
+#define N 1024
+float a[N]; float b[N];
+int main() {
+    for (int i = 0; i < N; i++) { b[i] = sin(a[i]) * cos(a[i]); }
+    return 0;
+}";
+
+    #[test]
+    fn inventory_counts_elementwise() {
+        let inv = inventory(&kernel(ELEMWISE, 0, 1));
+        assert_eq!(inv.f_mul, 1);
+        assert_eq!(inv.f_add, 1);
+        assert_eq!(inv.loads, 1);
+        assert_eq!(inv.stores, 1);
+        assert_eq!(inv.f_trig, 0);
+    }
+
+    #[test]
+    fn trig_kernel_much_bigger() {
+        let e1 = estimate(&kernel(ELEMWISE, 0, 1));
+        let e2 = estimate(&kernel(TRIG, 0, 1));
+        assert!(e2.luts > e1.luts * 2, "{e1:?} vs {e2:?}");
+        assert!(e2.dsps > e1.dsps);
+    }
+
+    #[test]
+    fn unroll_scales_datapath_not_base() {
+        let e1 = estimate(&kernel(ELEMWISE, 0, 1));
+        let e8 = estimate(&kernel(ELEMWISE, 0, 8));
+        // DSPs scale ~8x (datapath), LUTs grow but sublinearly (base+LSU
+        // amortized).
+        assert_eq!(e8.dsps, e1.dsps * 8);
+        assert!(e8.luts > e1.luts);
+        assert!(e8.luts < e1.luts * 8);
+    }
+
+    #[test]
+    fn small_arrays_cached_in_bram() {
+        let e = estimate(&kernel(ELEMWISE, 0, 1));
+        // Two 4 KiB arrays → at least 2 M20K blocks each rounded up.
+        assert!(e.bram_bits >= 2 * 20_480);
+        assert_eq!(e.bram_bits % 20_480, 0);
+    }
+
+    #[test]
+    fn everything_fits_arria10() {
+        for u in [1, 4, 16] {
+            let e = estimate(&kernel(TRIG, 0, u));
+            assert!(e.fits(&ARRIA10_GX), "u={u}: {e:?}");
+        }
+    }
+
+    #[test]
+    fn utilization_bottleneck_is_max() {
+        let u = Utilization {
+            luts: 0.1,
+            ffs: 0.2,
+            dsps: 0.7,
+            bram: 0.3,
+        };
+        assert_eq!(u.max(), 0.7);
+    }
+
+    #[test]
+    fn large_nested_loop_counts_once() {
+        let src = "
+#define N 512
+float a[N][N]; float x[N]; float y[N];
+int main() {
+    for (int i = 0; i < N; i++) {
+        float acc = 0.0;
+        for (int j = 0; j < N; j++) { acc += a[i][j] * x[j]; }
+        y[i] = acc;
+    }
+    return 0;
+}";
+        // N=512 > SPATIAL_MAX_TRIPS: the inner loop pipelines, the
+        // datapath holds ONE instance of its body.
+        let inv = inventory(&kernel(src, 0, 1));
+        assert_eq!(inv.f_mul, 1);
+        assert_eq!(inv.inner_loops, 1);
+    }
+
+    #[test]
+    fn small_inner_loop_spatializes() {
+        let src = "
+#define N 512
+#define K 16
+float a[N]; float h[K]; float y[N];
+int main() {
+    for (int i = 0; i < N; i++) {
+        float acc = 0.0;
+        for (int k = 0; k < K; k++) { acc += h[k] * a[i]; }
+        y[i] = acc;
+    }
+    return 0;
+}";
+        let k = kernel(src, 0, 1);
+        let inv = inventory(&k);
+        // K=16 ≤ SPATIAL_MAX_TRIPS: 16 parallel MACs in the datapath.
+        assert_eq!(inv.f_mul, 16);
+        assert_eq!(inv.inner_loops, 0);
+        assert_eq!(spatial_factor(&k), 16);
+        // Ports stay at the textual site count (local-memory banking).
+        assert!(inv.ports < inv.loads + inv.stores);
+    }
+
+    #[test]
+    fn spatial_factor_one_for_flat_loops() {
+        assert_eq!(spatial_factor(&kernel(ELEMWISE, 0, 1)), 1);
+    }
+}

@@ -1,0 +1,42 @@
+//! # fpga-offload
+//!
+//! Reproduction of **Yamato, "Proposal of Automatic FPGA Offloading for
+//! Applications Loop Statements" (CS.DC 2020)** as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The paper's pipeline, end to end:
+//!
+//! 1. [`minic`] parses the application's C source (the Clang analog).
+//! 2. [`analysis`] extracts the loop tree, measures arithmetic intensity
+//!    (the PGI-compiler analog) and dynamic trip counts (the gcov analog).
+//! 3. [`codegen`] splits each candidate loop into an OpenCL-style
+//!    FPGA-kernel / CPU-host pair and applies unrolling.
+//! 4. [`hls`] "pre-compiles" the kernel to an HDL-level resource estimate
+//!    (FF/LUT/DSP/BRAM as % of an Arria10 GX) without full place-and-route.
+//! 5. [`search`] runs the paper's narrowing funnel — top-A arithmetic
+//!    intensity, top-C resource efficiency, ≤D measured patterns (singles
+//!    then combinations) — measuring each pattern on the [`fpga`]
+//!    simulator inside the verification environment.
+//! 6. [`envadapt`] wires the above into the Fig.-1 environment-adaptive
+//!    software flow with its test-case / code-pattern / facility DBs.
+//!
+//! Numeric ground truth comes from the real stack: [`runtime`] loads the
+//! AOT-compiled HLO artifacts (JAX models wrapping Pallas kernels, lowered
+//! once at build time by `python/compile/aot.py`) and executes them via
+//! PJRT — Python is never on the request path.
+
+pub mod analysis;
+pub mod cli;
+pub mod codegen;
+pub mod cpu;
+pub mod envadapt;
+pub mod fpga;
+pub mod hls;
+pub mod minic;
+pub mod runtime;
+pub mod search;
+pub mod util;
+pub mod workloads;
+
+pub use search::config::SearchConfig;
+pub use search::result::{OffloadSolution, PatternMeasurement};

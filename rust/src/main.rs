@@ -1,0 +1,8 @@
+//! `repro` — leader entrypoint for the automatic-FPGA-offloading
+//! coordinator. Thin shell over [`fpga_offload::cli`].
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = fpga_offload::cli::run(&args);
+    std::process::exit(code);
+}

@@ -1,0 +1,373 @@
+//! AST for the MiniC subset.
+//!
+//! Every loop statement carries a stable [`LoopId`] assigned in source
+//! order by the parser — the identity the whole offloading pipeline keys
+//! on (arithmetic intensity tables, resource reports, offload patterns).
+
+use std::fmt;
+
+/// Stable identifier of a loop statement (source order, 0-based).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LoopId(pub u32);
+
+impl fmt::Display for LoopId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "L{}", self.0)
+    }
+}
+
+/// Scalar element types.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scalar {
+    Int,
+    Float,  // f32 on the device
+    Double, // f64
+    Void,
+}
+
+impl Scalar {
+    pub fn is_floating(self) -> bool {
+        matches!(self, Scalar::Float | Scalar::Double)
+    }
+
+    /// Size in bytes (for transfer-volume and BRAM estimates).
+    pub fn size_bytes(self) -> u64 {
+        match self {
+            Scalar::Int => 4,
+            Scalar::Float => 4,
+            Scalar::Double => 8,
+            Scalar::Void => 0,
+        }
+    }
+}
+
+impl fmt::Display for Scalar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Scalar::Int => "int",
+            Scalar::Float => "float",
+            Scalar::Double => "double",
+            Scalar::Void => "void",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A type: scalar, array with static dims, or pointer-to-scalar (function
+/// parameters; extent unknown at parse time).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Type {
+    Scalar(Scalar),
+    /// `float a[N][M]` — dims are constant expressions resolved by the
+    /// parser against `#define`s.
+    Array(Scalar, Vec<usize>),
+    /// `float *a` — runtime extent.
+    Ptr(Scalar),
+}
+
+impl Type {
+    pub fn elem(&self) -> Scalar {
+        match self {
+            Type::Scalar(s) | Type::Array(s, _) | Type::Ptr(s) => *s,
+        }
+    }
+
+    pub fn is_indexable(&self) -> bool {
+        matches!(self, Type::Array(..) | Type::Ptr(..))
+    }
+}
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Eq,
+    Ne,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    And,
+    Or,
+}
+
+impl BinOp {
+    pub fn is_comparison(self) -> bool {
+        matches!(
+            self,
+            BinOp::Eq | BinOp::Ne | BinOp::Lt | BinOp::Gt | BinOp::Le | BinOp::Ge
+        )
+    }
+
+    pub fn is_logical(self) -> bool {
+        matches!(self, BinOp::And | BinOp::Or)
+    }
+
+    pub fn c_symbol(self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Rem => "%",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::Lt => "<",
+            BinOp::Gt => ">",
+            BinOp::Le => "<=",
+            BinOp::Ge => ">=",
+            BinOp::And => "&&",
+            BinOp::Or => "||",
+        }
+    }
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+/// Expressions. `line` on the variants that matter for diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    IntLit(i64),
+    FloatLit(f64),
+    /// String literal — only legal as a `printf` format argument.
+    StrLit(String),
+    /// Variable reference.
+    Var(String),
+    /// `a[i]` / `a[i][j]` — base is always a named array/pointer in MiniC.
+    Index {
+        base: String,
+        indices: Vec<Expr>,
+    },
+    Bin {
+        op: BinOp,
+        lhs: Box<Expr>,
+        rhs: Box<Expr>,
+    },
+    Un {
+        op: UnOp,
+        operand: Box<Expr>,
+    },
+    /// Function call — user function or builtin (sin/cos/sqrt/fabs/exp).
+    Call {
+        name: String,
+        args: Vec<Expr>,
+    },
+    /// `(float) e` — cast, element type only.
+    Cast {
+        to: Scalar,
+        operand: Box<Expr>,
+    },
+}
+
+impl Expr {
+    /// Walk every sub-expression (preorder), including `self`.
+    pub fn walk<'a>(&'a self, f: &mut impl FnMut(&'a Expr)) {
+        f(self);
+        match self {
+            Expr::Index { indices, .. } => {
+                for i in indices {
+                    i.walk(f);
+                }
+            }
+            Expr::Bin { lhs, rhs, .. } => {
+                lhs.walk(f);
+                rhs.walk(f);
+            }
+            Expr::Un { operand, .. } | Expr::Cast { operand, .. } => {
+                operand.walk(f)
+            }
+            Expr::Call { args, .. } => {
+                for a in args {
+                    a.walk(f);
+                }
+            }
+            Expr::IntLit(_)
+            | Expr::FloatLit(_)
+            | Expr::StrLit(_)
+            | Expr::Var(_) => {}
+        }
+    }
+}
+
+/// Assignment targets.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LValue {
+    Var(String),
+    Index { base: String, indices: Vec<Expr> },
+}
+
+impl LValue {
+    pub fn base_name(&self) -> &str {
+        match self {
+            LValue::Var(n) | LValue::Index { base: n, .. } => n,
+        }
+    }
+}
+
+/// Compound-assignment flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignOp {
+    Set,      // =
+    AddSet,   // +=
+    SubSet,   // -=
+    MulSet,   // *=
+    DivSet,   // /=
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// Declaration with optional initializer.
+    Decl {
+        name: String,
+        ty: Type,
+        init: Option<Expr>,
+        line: u32,
+    },
+    Assign {
+        target: LValue,
+        op: AssignOp,
+        value: Expr,
+        line: u32,
+    },
+    If {
+        cond: Expr,
+        then_branch: Vec<Stmt>,
+        else_branch: Vec<Stmt>,
+        line: u32,
+    },
+    For {
+        id: LoopId,
+        /// `for (init; cond; step)` — init/step are restricted to
+        /// assignments in MiniC; `int i = 0` inits become a Decl.
+        init: Option<Box<Stmt>>,
+        cond: Option<Expr>,
+        step: Option<Box<Stmt>>,
+        body: Vec<Stmt>,
+        line: u32,
+    },
+    While {
+        id: LoopId,
+        cond: Expr,
+        body: Vec<Stmt>,
+        line: u32,
+    },
+    Return {
+        value: Option<Expr>,
+        line: u32,
+    },
+    /// Bare call, e.g. `init_data(x);`.
+    ExprStmt { expr: Expr, line: u32 },
+}
+
+impl Stmt {
+    /// Walk all statements in this subtree (preorder), including `self`.
+    pub fn walk<'a>(&'a self, f: &mut impl FnMut(&'a Stmt)) {
+        f(self);
+        match self {
+            Stmt::If {
+                then_branch,
+                else_branch,
+                ..
+            } => {
+                for s in then_branch.iter().chain(else_branch) {
+                    s.walk(f);
+                }
+            }
+            Stmt::For { init, step, body, .. } => {
+                if let Some(s) = init {
+                    s.walk(f);
+                }
+                if let Some(s) = step {
+                    s.walk(f);
+                }
+                for s in body {
+                    s.walk(f);
+                }
+            }
+            Stmt::While { body, .. } => {
+                for s in body {
+                    s.walk(f);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    pub fn line(&self) -> u32 {
+        match self {
+            Stmt::Decl { line, .. }
+            | Stmt::Assign { line, .. }
+            | Stmt::If { line, .. }
+            | Stmt::For { line, .. }
+            | Stmt::While { line, .. }
+            | Stmt::Return { line, .. }
+            | Stmt::ExprStmt { line, .. } => *line,
+        }
+    }
+}
+
+/// A function parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub ty: Type,
+}
+
+/// A function definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Function {
+    pub name: String,
+    pub ret: Scalar,
+    pub params: Vec<Param>,
+    pub body: Vec<Stmt>,
+    pub line: u32,
+}
+
+/// A parsed translation unit.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Program {
+    /// `#define NAME value` constants, in source order.
+    pub defines: Vec<(String, f64)>,
+    /// Global variable declarations.
+    pub globals: Vec<Stmt>,
+    pub functions: Vec<Function>,
+    /// Total number of loop statements (== next LoopId).
+    pub loop_count: u32,
+}
+
+impl Program {
+    pub fn function(&self, name: &str) -> Option<&Function> {
+        self.functions.iter().find(|f| f.name == name)
+    }
+
+    /// Visit every statement in every function (globals included).
+    pub fn walk_stmts<'a>(&'a self, f: &mut impl FnMut(&'a Stmt)) {
+        for g in &self.globals {
+            g.walk(f);
+        }
+        for func in &self.functions {
+            for s in &func.body {
+                s.walk(f);
+            }
+        }
+    }
+
+    /// The define value for `name`, if any.
+    pub fn define(&self, name: &str) -> Option<f64> {
+        self.defines
+            .iter()
+            .rev()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+    }
+}

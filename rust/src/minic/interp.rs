@@ -1,0 +1,1086 @@
+//! Tree-walking interpreter for MiniC with profiling instrumentation.
+//!
+//! This plays two roles in the reproduction:
+//!
+//! 1. **Semantics oracle** — "all-CPU" execution of the application, the
+//!    baseline every offload pattern's numerics are checked against.
+//! 2. **Dynamic profiler** — the gcov/gprof analog (paper §4: "to count
+//!    loop number, we also can use gcov"): per-loop trip counts, floating
+//!    op counts, and memory traffic, attributed to the loop *subtree* so
+//!    offloading decisions see the cost of a loop including its children.
+//!
+//! The cost model in [`crate::cpu`] converts the op counts into modeled
+//! CPU time; [`crate::analysis::intensity`] combines them into the
+//! arithmetic-intensity indicator.
+
+use std::collections::{HashMap, HashSet};
+
+use super::ast::*;
+use super::value::{zero_of, ArrayObj, ArrayRef, Env, Value};
+use super::MiniCError;
+
+/// Dynamic operation counters (monotone, global).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct OpCounts {
+    /// Floating add/sub.
+    pub f_add: u64,
+    /// Floating mul.
+    pub f_mul: u64,
+    /// Floating div.
+    pub f_div: u64,
+    /// Transcendentals (sin/cos/exp/sqrt/...).
+    pub f_trig: u64,
+    /// Integer ALU ops (address arithmetic excluded; loop/index math).
+    pub i_op: u64,
+    /// Comparisons (int or float).
+    pub cmp: u64,
+    /// Array element reads / writes.
+    pub reads: u64,
+    pub writes: u64,
+    /// Bytes moved by those reads/writes (element-size aware).
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+}
+
+impl OpCounts {
+    /// Total floating-point operations.
+    pub fn flops(&self) -> u64 {
+        self.f_add + self.f_mul + self.f_div + self.f_trig
+    }
+
+    /// Total bytes moved.
+    pub fn bytes(&self) -> u64 {
+        self.read_bytes + self.write_bytes
+    }
+
+    /// Saturating element-wise subtraction (for "program minus offloaded
+    /// loops" accounting in the FPGA simulator).
+    pub fn saturating_sub(&self, o: &OpCounts) -> OpCounts {
+        OpCounts {
+            f_add: self.f_add.saturating_sub(o.f_add),
+            f_mul: self.f_mul.saturating_sub(o.f_mul),
+            f_div: self.f_div.saturating_sub(o.f_div),
+            f_trig: self.f_trig.saturating_sub(o.f_trig),
+            i_op: self.i_op.saturating_sub(o.i_op),
+            cmp: self.cmp.saturating_sub(o.cmp),
+            reads: self.reads.saturating_sub(o.reads),
+            writes: self.writes.saturating_sub(o.writes),
+            read_bytes: self.read_bytes.saturating_sub(o.read_bytes),
+            write_bytes: self.write_bytes.saturating_sub(o.write_bytes),
+        }
+    }
+
+    /// Element-wise addition (public counterpart used by the simulator).
+    pub fn plus(&self, o: &OpCounts) -> OpCounts {
+        let mut out = *self;
+        out.add_assign(o);
+        out
+    }
+
+    fn sub(&self, earlier: &OpCounts) -> OpCounts {
+        OpCounts {
+            f_add: self.f_add - earlier.f_add,
+            f_mul: self.f_mul - earlier.f_mul,
+            f_div: self.f_div - earlier.f_div,
+            f_trig: self.f_trig - earlier.f_trig,
+            i_op: self.i_op - earlier.i_op,
+            cmp: self.cmp - earlier.cmp,
+            reads: self.reads - earlier.reads,
+            writes: self.writes - earlier.writes,
+            read_bytes: self.read_bytes - earlier.read_bytes,
+            write_bytes: self.write_bytes - earlier.write_bytes,
+        }
+    }
+
+    fn add_assign(&mut self, d: &OpCounts) {
+        self.f_add += d.f_add;
+        self.f_mul += d.f_mul;
+        self.f_div += d.f_div;
+        self.f_trig += d.f_trig;
+        self.i_op += d.i_op;
+        self.cmp += d.cmp;
+        self.reads += d.reads;
+        self.writes += d.writes;
+        self.read_bytes += d.read_bytes;
+        self.write_bytes += d.write_bytes;
+    }
+}
+
+/// Per-loop dynamic profile (subtree-attributed).
+#[derive(Debug, Default, Clone)]
+pub struct LoopProfile {
+    /// Number of times the loop *header* was entered.
+    pub entries: u64,
+    /// Total iterations executed (all entries summed).
+    pub trips: u64,
+    /// Ops executed inside the loop subtree.
+    pub ops: OpCounts,
+    /// Arrays read / written anywhere in the subtree.
+    pub arrays_read: HashSet<String>,
+    pub arrays_written: HashSet<String>,
+}
+
+/// Full profile of one program run.
+#[derive(Debug, Default, Clone)]
+pub struct Profile {
+    pub total: OpCounts,
+    pub loops: HashMap<LoopId, LoopProfile>,
+}
+
+impl Profile {
+    pub fn loop_profile(&self, id: LoopId) -> Option<&LoopProfile> {
+        self.loops.get(&id)
+    }
+}
+
+/// Interpreter execution limits (runaway guard).
+const MAX_STEPS: u64 = 2_000_000_000;
+
+/// Dense per-loop counters (§Perf: indexed by `LoopId.0` — no hashing on
+/// the per-trip path; array footprints as tiny linear-scan vecs instead
+/// of per-access `HashSet` inserts).
+#[derive(Debug, Default, Clone)]
+struct LoopSlot {
+    entries: u64,
+    trips: u64,
+    ops: OpCounts,
+    arrays_read: Vec<String>,
+    arrays_written: Vec<String>,
+}
+
+/// The interpreter. One instance per program run.
+pub struct Interp<'p> {
+    prog: &'p Program,
+    pub arena: Vec<ArrayObj>,
+    globals: Env,
+    total: OpCounts,
+    loop_slots: Vec<LoopSlot>,
+    /// Stack of active loop ids for attribution.
+    loop_stack: Vec<LoopId>,
+    steps: u64,
+}
+
+/// Result of `Stmt` execution: normal flow or early return.
+enum Flow {
+    Normal,
+    Return(Value),
+}
+
+impl<'p> Interp<'p> {
+    pub fn new(prog: &'p Program) -> Result<Self, MiniCError> {
+        let mut interp = Interp {
+            prog,
+            arena: Vec::new(),
+            globals: Env::new(),
+            total: OpCounts::default(),
+            loop_slots: vec![
+                LoopSlot::default();
+                prog.loop_count as usize
+            ],
+            loop_stack: Vec::new(),
+            steps: 0,
+        };
+        // #defines become immutable globals.
+        for (name, val) in &prog.defines {
+            let v = if val.fract() == 0.0 {
+                Value::Int(*val as i64)
+            } else {
+                Value::Float(*val)
+            };
+            interp.globals.declare(name, v);
+        }
+        // Allocate global declarations.
+        let globals = prog.globals.clone();
+        for g in &globals {
+            if let Stmt::Decl { name, ty, init, .. } = g {
+                let v = interp.alloc_decl(ty)?;
+                interp.globals.declare(name, v);
+                if let Some(e) = init {
+                    let mut env = Env::new();
+                    let val = interp.eval(e, &mut env)?;
+                    interp.globals.set(name, val)?;
+                }
+            }
+        }
+        Ok(interp)
+    }
+
+    fn alloc_decl(&mut self, ty: &Type) -> Result<Value, MiniCError> {
+        Ok(match ty {
+            Type::Array(elem, dims) => {
+                let arr = ArrayObj::new(*elem, dims.clone());
+                self.arena.push(arr);
+                Value::Array(ArrayRef(self.arena.len() - 1))
+            }
+            Type::Ptr(_) => {
+                return Err(MiniCError::Runtime(
+                    "pointer declarations require an argument binding".into(),
+                ))
+            }
+            _ => zero_of(ty),
+        })
+    }
+
+    /// Allocate an array in the arena (harness-side input setup).
+    pub fn alloc_array(&mut self, elem: Scalar, dims: Vec<usize>) -> ArrayRef {
+        self.arena.push(ArrayObj::new(elem, dims));
+        ArrayRef(self.arena.len() - 1)
+    }
+
+    pub fn array(&self, r: ArrayRef) -> &ArrayObj {
+        &self.arena[r.0]
+    }
+
+    pub fn array_mut(&mut self, r: ArrayRef) -> &mut ArrayObj {
+        &mut self.arena[r.0]
+    }
+
+    /// The global named `name`, if it is an array.
+    pub fn global_array(&self, name: &str) -> Option<ArrayRef> {
+        match self.globals.get(name) {
+            Some(Value::Array(r)) => Some(*r),
+            _ => None,
+        }
+    }
+
+    /// The global named `name`, if it is a scalar.
+    pub fn global_scalar(&self, name: &str) -> Option<f64> {
+        match self.globals.get(name) {
+            Some(Value::Int(v)) => Some(*v as f64),
+            Some(Value::Float(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Assemble the public [`Profile`] from the dense internal counters
+    /// (loops that never entered are omitted, matching gcov semantics).
+    pub fn profile(&self) -> Profile {
+        let mut loops = HashMap::new();
+        for (i, slot) in self.loop_slots.iter().enumerate() {
+            if slot.entries == 0 {
+                continue;
+            }
+            loops.insert(
+                LoopId(i as u32),
+                LoopProfile {
+                    entries: slot.entries,
+                    trips: slot.trips,
+                    ops: slot.ops,
+                    arrays_read: slot.arrays_read.iter().cloned().collect(),
+                    arrays_written: slot
+                        .arrays_written
+                        .iter()
+                        .cloned()
+                        .collect(),
+                },
+            );
+        }
+        Profile {
+            total: self.total,
+            loops,
+        }
+    }
+
+    /// Call a function by name with the given arguments.
+    pub fn call(
+        &mut self,
+        name: &str,
+        args: &[Value],
+    ) -> Result<Value, MiniCError> {
+        let func = self
+            .prog
+            .function(name)
+            .ok_or_else(|| {
+                MiniCError::Runtime(format!("no function `{name}`"))
+            })?;
+        if func.params.len() != args.len() {
+            return Err(MiniCError::Runtime(format!(
+                "`{name}` expects {} args, got {}",
+                func.params.len(),
+                args.len()
+            )));
+        }
+        let mut env = Env::new();
+        for (p, a) in func.params.iter().zip(args) {
+            // Array/pointer params must receive array handles.
+            match (&p.ty, a) {
+                (Type::Ptr(_) | Type::Array(..), Value::Array(_)) => {}
+                (Type::Scalar(_), Value::Array(_)) => {
+                    return Err(MiniCError::Runtime(format!(
+                        "array passed to scalar param `{}`",
+                        p.name
+                    )))
+                }
+                (Type::Ptr(_) | Type::Array(..), _) => {
+                    return Err(MiniCError::Runtime(format!(
+                        "scalar passed to array param `{}`",
+                        p.name
+                    )))
+                }
+                _ => {}
+            }
+            env.declare(&p.name, a.clone());
+        }
+        let body = func.body.clone();
+        match self.exec_block(&body, &mut env)? {
+            Flow::Return(v) => Ok(v),
+            Flow::Normal => Ok(Value::Int(0)),
+        }
+    }
+
+    fn tick(&mut self) -> Result<(), MiniCError> {
+        self.steps += 1;
+        if self.steps > MAX_STEPS {
+            return Err(MiniCError::Runtime(format!(
+                "step limit exceeded ({MAX_STEPS})"
+            )));
+        }
+        Ok(())
+    }
+
+    // ---- statements ----
+
+    fn exec_block(
+        &mut self,
+        stmts: &[Stmt],
+        env: &mut Env,
+    ) -> Result<Flow, MiniCError> {
+        // §Perf: a scope map allocation per block execution is a per-loop-
+        // iteration cost. Blocks without top-level declarations cannot
+        // shadow anything, so the scope push is elided for them.
+        let needs_scope =
+            stmts.iter().any(|s| matches!(s, Stmt::Decl { .. }));
+        if needs_scope {
+            env.push();
+        }
+        for s in stmts {
+            match self.exec(s, env)? {
+                Flow::Normal => {}
+                ret => {
+                    if needs_scope {
+                        env.pop();
+                    }
+                    return Ok(ret);
+                }
+            }
+        }
+        if needs_scope {
+            env.pop();
+        }
+        Ok(Flow::Normal)
+    }
+
+    fn exec(&mut self, stmt: &Stmt, env: &mut Env) -> Result<Flow, MiniCError> {
+        self.tick()?;
+        match stmt {
+            Stmt::Decl { name, ty, init, .. } => {
+                let v = self.alloc_decl(ty)?;
+                env.declare(name, v);
+                if let Some(e) = init {
+                    let val = self.eval(e, env)?;
+                    let val = coerce(ty, val);
+                    env.set(name, val)?;
+                }
+                Ok(Flow::Normal)
+            }
+            Stmt::Assign { target, op, value, .. } => {
+                self.exec_assign(target, *op, value, env)?;
+                Ok(Flow::Normal)
+            }
+            Stmt::If {
+                cond,
+                then_branch,
+                else_branch,
+                ..
+            } => {
+                let c = self.eval(cond, env)?;
+                self.total.cmp += 1;
+                self.bump_loop_cmp();
+                if c.truthy()? {
+                    self.exec_block(then_branch, env)
+                } else {
+                    self.exec_block(else_branch, env)
+                }
+            }
+            Stmt::For {
+                id,
+                init,
+                cond,
+                step,
+                body,
+                ..
+            } => {
+                env.push();
+                if let Some(s) = init {
+                    self.exec(s, env)?;
+                }
+                let snapshot = self.total;
+                self.enter_loop(*id);
+                let mut flow = Flow::Normal;
+                loop {
+                    let go = match cond {
+                        Some(c) => {
+                            self.total.cmp += 1;
+                            self.eval(c, env)?.truthy()?
+                        }
+                        None => true,
+                    };
+                    if !go {
+                        break;
+                    }
+                    self.record_trip(*id);
+                    match self.exec_block(body, env)? {
+                        Flow::Normal => {}
+                        ret => {
+                            flow = ret;
+                            break;
+                        }
+                    }
+                    if let Some(s) = step {
+                        self.exec(s, env)?;
+                    }
+                }
+                self.exit_loop(*id, snapshot);
+                env.pop();
+                Ok(flow)
+            }
+            Stmt::While { id, cond, body, .. } => {
+                let snapshot = self.total;
+                self.enter_loop(*id);
+                let mut flow = Flow::Normal;
+                loop {
+                    self.total.cmp += 1;
+                    if !self.eval(cond, env)?.truthy()? {
+                        break;
+                    }
+                    self.record_trip(*id);
+                    match self.exec_block(body, env)? {
+                        Flow::Normal => {}
+                        ret => {
+                            flow = ret;
+                            break;
+                        }
+                    }
+                }
+                self.exit_loop(*id, snapshot);
+                Ok(flow)
+            }
+            Stmt::Return { value, .. } => {
+                let v = match value {
+                    Some(e) => self.eval(e, env)?,
+                    None => Value::Int(0),
+                };
+                Ok(Flow::Return(v))
+            }
+            Stmt::ExprStmt { expr, .. } => {
+                self.eval(expr, env)?;
+                Ok(Flow::Normal)
+            }
+        }
+    }
+
+    fn exec_assign(
+        &mut self,
+        target: &LValue,
+        op: AssignOp,
+        value: &Expr,
+        env: &mut Env,
+    ) -> Result<(), MiniCError> {
+        let rhs = self.eval(value, env)?;
+        match target {
+            LValue::Var(name) => {
+                let new = if op == AssignOp::Set {
+                    rhs
+                } else {
+                    let old = env
+                        .get(name)
+                        .or_else(|| self.globals.get(name))
+                        .cloned()
+                        .ok_or_else(|| {
+                            MiniCError::Runtime(format!("undeclared `{name}`"))
+                        })?;
+                    self.apply_compound(op, &old, &rhs)?
+                };
+                if env.set(name, new.clone()).is_err() {
+                    self.globals.set(name, new)?;
+                }
+            }
+            LValue::Index { base, indices } => {
+                let mut buf = [0i64; 4];
+                let n = self.eval_indices(indices, env, &mut buf)?;
+                let idx = &buf[..n];
+                // Address arithmetic.
+                self.total.i_op += n as u64;
+                let arr_ref = self.lookup_array(base, env)?;
+                let elem_size =
+                    self.arena[arr_ref.0].elem.size_bytes();
+                let flat = self.arena[arr_ref.0].flat_index(idx)?;
+                let new = if op == AssignOp::Set {
+                    rhs
+                } else {
+                    let old = Value::Float(self.arena[arr_ref.0].data[flat]);
+                    self.count_read(base, elem_size);
+                    self.apply_compound(op, &old, &rhs)?
+                };
+                self.arena[arr_ref.0].data[flat] = new.as_f64()?;
+                self.count_write(base, elem_size);
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_compound(
+        &mut self,
+        op: AssignOp,
+        old: &Value,
+        rhs: &Value,
+    ) -> Result<Value, MiniCError> {
+        let bin = match op {
+            AssignOp::AddSet => BinOp::Add,
+            AssignOp::SubSet => BinOp::Sub,
+            AssignOp::MulSet => BinOp::Mul,
+            AssignOp::DivSet => BinOp::Div,
+            AssignOp::Set => unreachable!(),
+        };
+        self.apply_bin(bin, old, rhs)
+    }
+
+    /// Evaluate index expressions into a fixed buffer (§Perf: no heap
+    /// allocation per array access; MiniC arrays are rank ≤ 2).
+    fn eval_indices(
+        &mut self,
+        indices: &[Expr],
+        env: &mut Env,
+        buf: &mut [i64; 4],
+    ) -> Result<usize, MiniCError> {
+        if indices.len() > buf.len() {
+            return Err(MiniCError::Runtime(format!(
+                "array rank {} exceeds supported maximum",
+                indices.len()
+            )));
+        }
+        for (slot, e) in buf.iter_mut().zip(indices) {
+            *slot = self.eval(e, env)?.as_i64()?;
+        }
+        Ok(indices.len())
+    }
+
+    fn lookup_array(
+        &self,
+        name: &str,
+        env: &Env,
+    ) -> Result<ArrayRef, MiniCError> {
+        match env.get(name).or_else(|| self.globals.get(name)) {
+            Some(Value::Array(r)) => Ok(*r),
+            Some(_) => Err(MiniCError::Runtime(format!(
+                "`{name}` is not an array"
+            ))),
+            None => Err(MiniCError::Runtime(format!("undeclared `{name}`"))),
+        }
+    }
+
+    // ---- profiling helpers ----
+
+    fn enter_loop(&mut self, id: LoopId) {
+        self.loop_stack.push(id);
+        self.loop_slots[id.0 as usize].entries += 1;
+    }
+
+    fn record_trip(&mut self, id: LoopId) {
+        self.loop_slots[id.0 as usize].trips += 1;
+    }
+
+    fn exit_loop(&mut self, id: LoopId, snapshot: OpCounts) {
+        self.loop_stack.pop();
+        let delta = self.total.sub(&snapshot);
+        self.loop_slots[id.0 as usize].ops.add_assign(&delta);
+    }
+
+    fn bump_loop_cmp(&mut self) {
+        // cmp already counted in total; loop attribution happens via the
+        // snapshot diff at exit, so nothing extra here. Kept as a hook.
+    }
+
+    fn count_read(&mut self, array: &str, elem_size: u64) {
+        self.total.reads += 1;
+        self.total.read_bytes += elem_size;
+        let (stack, slots) = (&self.loop_stack, &mut self.loop_slots);
+        for id in stack {
+            let set = &mut slots[id.0 as usize].arrays_read;
+            if !set.iter().any(|a| a == array) {
+                set.push(array.to_string());
+            }
+        }
+    }
+
+    fn count_write(&mut self, array: &str, elem_size: u64) {
+        self.total.writes += 1;
+        self.total.write_bytes += elem_size;
+        let (stack, slots) = (&self.loop_stack, &mut self.loop_slots);
+        for id in stack {
+            let set = &mut slots[id.0 as usize].arrays_written;
+            if !set.iter().any(|a| a == array) {
+                set.push(array.to_string());
+            }
+        }
+    }
+
+    // ---- expressions ----
+
+    fn eval(&mut self, expr: &Expr, env: &mut Env) -> Result<Value, MiniCError> {
+        self.tick()?;
+        match expr {
+            Expr::IntLit(v) => Ok(Value::Int(*v)),
+            Expr::FloatLit(v) => Ok(Value::Float(*v)),
+            // Format strings evaluate to 0 (only printf consumes them).
+            Expr::StrLit(_) => Ok(Value::Int(0)),
+            Expr::Var(name) => env
+                .get(name)
+                .or_else(|| self.globals.get(name))
+                .cloned()
+                .ok_or_else(|| {
+                    MiniCError::Runtime(format!("undeclared `{name}`"))
+                }),
+            Expr::Index { base, indices } => {
+                let mut buf = [0i64; 4];
+                let n = self.eval_indices(indices, env, &mut buf)?;
+                self.total.i_op += n as u64;
+                let arr_ref = self.lookup_array(base, env)?;
+                let arr = &self.arena[arr_ref.0];
+                let flat = arr.flat_index(&buf[..n])?;
+                let v = arr.data[flat];
+                let elem = arr.elem;
+                self.count_read(base, elem.size_bytes());
+                Ok(if elem == Scalar::Int {
+                    Value::Int(v as i64)
+                } else {
+                    Value::Float(v)
+                })
+            }
+            Expr::Bin { op, lhs, rhs } => {
+                // Short-circuit logicals.
+                if *op == BinOp::And {
+                    let l = self.eval(lhs, env)?;
+                    self.total.cmp += 1;
+                    if !l.truthy()? {
+                        return Ok(Value::Int(0));
+                    }
+                    let r = self.eval(rhs, env)?;
+                    return Ok(Value::Int(r.truthy()? as i64));
+                }
+                if *op == BinOp::Or {
+                    let l = self.eval(lhs, env)?;
+                    self.total.cmp += 1;
+                    if l.truthy()? {
+                        return Ok(Value::Int(1));
+                    }
+                    let r = self.eval(rhs, env)?;
+                    return Ok(Value::Int(r.truthy()? as i64));
+                }
+                let l = self.eval(lhs, env)?;
+                let r = self.eval(rhs, env)?;
+                self.apply_bin(*op, &l, &r)
+            }
+            Expr::Un { op, operand } => {
+                let v = self.eval(operand, env)?;
+                match op {
+                    UnOp::Neg => match v {
+                        Value::Int(i) => {
+                            self.total.i_op += 1;
+                            Ok(Value::Int(-i))
+                        }
+                        Value::Float(f) => {
+                            self.total.f_add += 1;
+                            Ok(Value::Float(-f))
+                        }
+                        Value::Array(_) => Err(MiniCError::Runtime(
+                            "negating an array".into(),
+                        )),
+                    },
+                    UnOp::Not => {
+                        self.total.cmp += 1;
+                        Ok(Value::Int(!v.truthy()? as i64))
+                    }
+                }
+            }
+            Expr::Call { name, args } => self.eval_call(name, args, env),
+            Expr::Cast { to, operand } => {
+                let v = self.eval(operand, env)?;
+                Ok(match to {
+                    Scalar::Int => Value::Int(v.as_i64()?),
+                    _ => Value::Float(v.as_f64()?),
+                })
+            }
+        }
+    }
+
+    fn apply_bin(
+        &mut self,
+        op: BinOp,
+        l: &Value,
+        r: &Value,
+    ) -> Result<Value, MiniCError> {
+        use BinOp::*;
+        // Integer fast path.
+        if let (Value::Int(a), Value::Int(b)) = (l, r) {
+            let (a, b) = (*a, *b);
+            return Ok(match op {
+                Add | Sub | Mul | Div | Rem => {
+                    self.total.i_op += 1;
+                    match op {
+                        Add => Value::Int(a.wrapping_add(b)),
+                        Sub => Value::Int(a.wrapping_sub(b)),
+                        Mul => Value::Int(a.wrapping_mul(b)),
+                        Div => {
+                            if b == 0 {
+                                return Err(MiniCError::Runtime(
+                                    "integer division by zero".into(),
+                                ));
+                            }
+                            Value::Int(a / b)
+                        }
+                        Rem => {
+                            if b == 0 {
+                                return Err(MiniCError::Runtime(
+                                    "integer modulo by zero".into(),
+                                ));
+                            }
+                            Value::Int(a % b)
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+                Eq | Ne | Lt | Gt | Le | Ge => {
+                    self.total.cmp += 1;
+                    Value::Int(int_cmp(op, a, b) as i64)
+                }
+                And | Or => unreachable!("handled in eval"),
+            });
+        }
+        // Float path.
+        let a = l.as_f64()?;
+        let b = r.as_f64()?;
+        Ok(match op {
+            Add => {
+                self.total.f_add += 1;
+                Value::Float(a + b)
+            }
+            Sub => {
+                self.total.f_add += 1;
+                Value::Float(a - b)
+            }
+            Mul => {
+                self.total.f_mul += 1;
+                Value::Float(a * b)
+            }
+            Div => {
+                self.total.f_div += 1;
+                Value::Float(a / b)
+            }
+            Rem => {
+                self.total.f_div += 1;
+                Value::Float(a % b)
+            }
+            Eq | Ne | Lt | Gt | Le | Ge => {
+                self.total.cmp += 1;
+                Value::Int(float_cmp(op, a, b) as i64)
+            }
+            And | Or => unreachable!("handled in eval"),
+        })
+    }
+
+    fn eval_call(
+        &mut self,
+        name: &str,
+        args: &[Expr],
+        env: &mut Env,
+    ) -> Result<Value, MiniCError> {
+        // Builtins first.
+        if let Some(f1) = builtin1(name) {
+            if args.len() != 1 {
+                return Err(MiniCError::Runtime(format!(
+                    "`{name}` expects 1 argument"
+                )));
+            }
+            let v = self.eval(&args[0], env)?.as_f64()?;
+            self.total.f_trig += 1;
+            return Ok(Value::Float(f1(v)));
+        }
+        match name {
+            "printf" => {
+                // Evaluate args for effect-parity, produce no output (the
+                // verification environment owns stdout).
+                for a in args.iter().skip(1) {
+                    self.eval(a, env)?;
+                }
+                return Ok(Value::Int(0));
+            }
+            "fmin" | "fmax" | "pow" => {
+                if args.len() != 2 {
+                    return Err(MiniCError::Runtime(format!(
+                        "`{name}` expects 2 arguments"
+                    )));
+                }
+                let a = self.eval(&args[0], env)?.as_f64()?;
+                let b = self.eval(&args[1], env)?.as_f64()?;
+                let v = match name {
+                    "fmin" => {
+                        self.total.cmp += 1;
+                        a.min(b)
+                    }
+                    "fmax" => {
+                        self.total.cmp += 1;
+                        a.max(b)
+                    }
+                    _ => {
+                        self.total.f_trig += 1;
+                        a.powf(b)
+                    }
+                };
+                return Ok(Value::Float(v));
+            }
+            _ => {}
+        }
+        // User function.
+        let vals: Vec<Value> = args
+            .iter()
+            .map(|a| self.eval(a, env))
+            .collect::<Result<_, _>>()?;
+        self.call(name, &vals)
+    }
+}
+
+fn int_cmp(op: BinOp, a: i64, b: i64) -> bool {
+    match op {
+        BinOp::Eq => a == b,
+        BinOp::Ne => a != b,
+        BinOp::Lt => a < b,
+        BinOp::Gt => a > b,
+        BinOp::Le => a <= b,
+        BinOp::Ge => a >= b,
+        _ => unreachable!(),
+    }
+}
+
+fn float_cmp(op: BinOp, a: f64, b: f64) -> bool {
+    match op {
+        BinOp::Eq => a == b,
+        BinOp::Ne => a != b,
+        BinOp::Lt => a < b,
+        BinOp::Gt => a > b,
+        BinOp::Le => a <= b,
+        BinOp::Ge => a >= b,
+        _ => unreachable!(),
+    }
+}
+
+fn builtin1(name: &str) -> Option<fn(f64) -> f64> {
+    Some(match name {
+        "sin" => f64::sin,
+        "cos" => f64::cos,
+        "tan" => f64::tan,
+        "sqrt" => f64::sqrt,
+        "sqrtf" => f64::sqrt,
+        "exp" => f64::exp,
+        "log" => f64::ln,
+        "fabs" => f64::abs,
+        "floor" => f64::floor,
+        "ceil" => f64::ceil,
+        _ => return None,
+    })
+}
+
+fn coerce(ty: &Type, v: Value) -> Value {
+    match (ty, &v) {
+        (Type::Scalar(Scalar::Int), Value::Float(f)) => Value::Int(*f as i64),
+        (Type::Scalar(s), Value::Int(i)) if s.is_floating() => {
+            Value::Float(*i as f64)
+        }
+        _ => v,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::parse;
+
+    fn run_main(src: &str) -> (Value, Profile) {
+        let prog = parse(src).unwrap();
+        let mut interp = Interp::new(&prog).unwrap();
+        let v = interp.call("main", &[]).unwrap();
+        (v, interp.profile().clone())
+    }
+
+    #[test]
+    fn arithmetic_and_return() {
+        let (v, _) = run_main("int main() { return 2 + 3 * 4; }");
+        assert_eq!(v, Value::Int(14));
+    }
+
+    #[test]
+    fn float_promotion() {
+        let (v, _) = run_main("int main() { float x = 3 / 2.0; return (int)(x * 10.0); }");
+        assert_eq!(v, Value::Int(15));
+    }
+
+    #[test]
+    fn for_loop_sums() {
+        let (v, prof) = run_main(
+            "int main() { int s = 0; for (int i = 0; i < 10; i++) { s += i; } return s; }",
+        );
+        assert_eq!(v, Value::Int(45));
+        let lp = prof.loop_profile(LoopId(0)).unwrap();
+        assert_eq!(lp.trips, 10);
+        assert_eq!(lp.entries, 1);
+    }
+
+    #[test]
+    fn nested_loop_trip_attribution() {
+        let (_, prof) = run_main(
+            "int main() { int s = 0;
+               for (int i = 0; i < 3; i++)
+                 for (int j = 0; j < 5; j++)
+                   s += 1;
+               return s; }",
+        );
+        assert_eq!(prof.loop_profile(LoopId(0)).unwrap().trips, 3);
+        let inner = prof.loop_profile(LoopId(1)).unwrap();
+        assert_eq!(inner.trips, 15);
+        assert_eq!(inner.entries, 3);
+    }
+
+    #[test]
+    fn outer_loop_ops_include_inner() {
+        let (_, prof) = run_main(
+            "#define N 4\nfloat a[N];\n
+             int main() {
+               for (int i = 0; i < N; i++) {
+                 for (int j = 0; j < N; j++) {
+                   a[i] = a[i] + 1.5;
+                 }
+               }
+               return 0; }",
+        );
+        let outer = prof.loop_profile(LoopId(0)).unwrap().ops;
+        let inner = prof.loop_profile(LoopId(1)).unwrap().ops;
+        assert!(outer.f_add >= inner.f_add);
+        assert_eq!(inner.f_add, 16);
+        assert_eq!(inner.writes, 16);
+    }
+
+    #[test]
+    fn array_footprint_tracking() {
+        let (_, prof) = run_main(
+            "#define N 8\nfloat a[N]; float b[N];\n
+             int main() {
+               for (int i = 0; i < N; i++) { b[i] = a[i] * 2.0; }
+               return 0; }",
+        );
+        let lp = prof.loop_profile(LoopId(0)).unwrap();
+        assert!(lp.arrays_read.contains("a"));
+        assert!(lp.arrays_written.contains("b"));
+        assert!(!lp.arrays_written.contains("a"));
+    }
+
+    #[test]
+    fn while_loop_and_compound_assign() {
+        let (v, prof) = run_main(
+            "int main() { int i = 0; int s = 1; while (i < 5) { s *= 2; i++; } return s; }",
+        );
+        assert_eq!(v, Value::Int(32));
+        assert_eq!(prof.loop_profile(LoopId(0)).unwrap().trips, 5);
+    }
+
+    #[test]
+    fn user_function_call_with_array() {
+        let (v, _) = run_main(
+            "#define N 4\nfloat a[N];\n
+             void fill(float *x, int n) {
+               for (int i = 0; i < n; i++) { x[i] = i * 1.0; }
+             }
+             float total(float *x, int n) {
+               float s = 0.0;
+               for (int i = 0; i < n; i++) { s += x[i]; }
+               return s;
+             }
+             int main() { fill(a, N); return (int) total(a, N); }",
+        );
+        assert_eq!(v, Value::Int(6)); // 0+1+2+3
+    }
+
+    #[test]
+    fn builtins() {
+        let (v, prof) = run_main(
+            "int main() { float x = sqrt(16.0) + fabs(-2.0) + cos(0.0); return (int) x; }",
+        );
+        assert_eq!(v, Value::Int(7));
+        assert_eq!(prof.total.f_trig, 3);
+    }
+
+    #[test]
+    fn if_else_branches() {
+        let (v, _) = run_main(
+            "int main() { int x = 5; if (x > 3 && x < 10) { return 1; } else { return 2; } }",
+        );
+        assert_eq!(v, Value::Int(1));
+    }
+
+    #[test]
+    fn early_return_from_loop() {
+        let (v, prof) = run_main(
+            "int main() { for (int i = 0; i < 100; i++) { if (i == 3) return i; } return -1; }",
+        );
+        assert_eq!(v, Value::Int(3));
+        assert_eq!(prof.loop_profile(LoopId(0)).unwrap().trips, 4);
+    }
+
+    #[test]
+    fn out_of_bounds_errors() {
+        let prog = parse(
+            "#define N 4\nfloat a[N];\nint main() { a[9] = 1.0; return 0; }",
+        )
+        .unwrap();
+        let mut interp = Interp::new(&prog).unwrap();
+        assert!(interp.call("main", &[]).is_err());
+    }
+
+    #[test]
+    fn division_by_zero_errors() {
+        let prog = parse("int main() { int x = 0; return 3 / x; }").unwrap();
+        let mut interp = Interp::new(&prog).unwrap();
+        assert!(interp.call("main", &[]).is_err());
+    }
+
+    #[test]
+    fn two_d_array_roundtrip() {
+        let (v, _) = run_main(
+            "#define R 3\n#define C 4\nfloat m[R][C];\n
+             int main() {
+               for (int i = 0; i < R; i++)
+                 for (int j = 0; j < C; j++)
+                   m[i][j] = i * 10.0 + j;
+               return (int) m[2][3];
+             }",
+        );
+        assert_eq!(v, Value::Int(23));
+    }
+
+    #[test]
+    fn printf_is_silent_noop() {
+        let (v, _) = run_main(
+            r#"int main() { printf("x=%d\n", 42); return 0; }"#,
+        );
+        assert_eq!(v, Value::Int(0));
+    }
+
+    #[test]
+    fn globals_shared_across_calls() {
+        let (v, _) = run_main(
+            "int counter;\n
+             void bump() { counter = counter + 1; }\n
+             int main() { bump(); bump(); bump(); return counter; }",
+        );
+        assert_eq!(v, Value::Int(3));
+    }
+}

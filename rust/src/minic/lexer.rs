@@ -1,0 +1,439 @@
+//! Lexer for the MiniC subset, including a tiny preprocessor layer:
+//! `#define NAME <int|float>` becomes a `KwDefine`-led pseudo-statement
+//! handled by the parser; `//` and `/* */` comments and `#include` lines
+//! are skipped.
+
+use super::token::{Token, TokenKind};
+use super::MiniCError;
+
+pub struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(src: &'a str) -> Self {
+        Lexer {
+            src: src.as_bytes(),
+            pos: 0,
+            line: 1,
+            col: 1,
+        }
+    }
+
+    /// Tokenize the whole input (appends an `Eof` token).
+    pub fn tokenize(mut self) -> Result<Vec<Token>, MiniCError> {
+        let mut out = Vec::new();
+        loop {
+            let tok = self.next_token()?;
+            let done = tok.kind == TokenKind::Eof;
+            out.push(tok);
+            if done {
+                return Ok(out);
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.pos).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.src.get(self.pos + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek()?;
+        self.pos += 1;
+        if b == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(b)
+    }
+
+    fn err(&self, msg: impl Into<String>) -> MiniCError {
+        MiniCError::Lex {
+            line: self.line,
+            col: self.col,
+            msg: msg.into(),
+        }
+    }
+
+    fn skip_trivia(&mut self) -> Result<(), MiniCError> {
+        loop {
+            match (self.peek(), self.peek2()) {
+                (Some(b' ' | b'\t' | b'\r' | b'\n'), _) => {
+                    self.bump();
+                }
+                (Some(b'/'), Some(b'/')) => {
+                    while let Some(b) = self.peek() {
+                        if b == b'\n' {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                (Some(b'/'), Some(b'*')) => {
+                    let (l, c) = (self.line, self.col);
+                    self.bump();
+                    self.bump();
+                    loop {
+                        match (self.peek(), self.peek2()) {
+                            (Some(b'*'), Some(b'/')) => {
+                                self.bump();
+                                self.bump();
+                                break;
+                            }
+                            (Some(_), _) => {
+                                self.bump();
+                            }
+                            (None, _) => {
+                                return Err(MiniCError::Lex {
+                                    line: l,
+                                    col: c,
+                                    msg: "unterminated block comment".into(),
+                                })
+                            }
+                        }
+                    }
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    fn next_token(&mut self) -> Result<Token, MiniCError> {
+        self.skip_trivia()?;
+        let (line, col) = (self.line, self.col);
+        let mk = |kind| Token { kind, line, col };
+
+        let b = match self.peek() {
+            None => return Ok(mk(TokenKind::Eof)),
+            Some(b) => b,
+        };
+
+        // Preprocessor lines.
+        if b == b'#' {
+            return self.preprocessor(line, col);
+        }
+
+        if b.is_ascii_alphabetic() || b == b'_' {
+            let word = self.ident();
+            let kind = TokenKind::keyword(&word)
+                .unwrap_or(TokenKind::Ident(word));
+            return Ok(mk(kind));
+        }
+
+        if b.is_ascii_digit()
+            || (b == b'.' && self.peek2().is_some_and(|c| c.is_ascii_digit()))
+        {
+            return self.number(line, col);
+        }
+
+        if b == b'"' {
+            return self.string(line, col);
+        }
+
+        // Operators / punctuation.
+        self.bump();
+        let two = |lexer: &mut Self, next: u8, yes: TokenKind, no: TokenKind| {
+            if lexer.peek() == Some(next) {
+                lexer.bump();
+                yes
+            } else {
+                no
+            }
+        };
+        use TokenKind::*;
+        let kind = match b {
+            b'(' => LParen,
+            b')' => RParen,
+            b'{' => LBrace,
+            b'}' => RBrace,
+            b'[' => LBracket,
+            b']' => RBracket,
+            b';' => Semi,
+            b',' => Comma,
+            b'%' => Percent,
+            b'+' => match self.peek() {
+                Some(b'+') => {
+                    self.bump();
+                    PlusPlus
+                }
+                Some(b'=') => {
+                    self.bump();
+                    PlusAssign
+                }
+                _ => Plus,
+            },
+            b'-' => match self.peek() {
+                Some(b'-') => {
+                    self.bump();
+                    MinusMinus
+                }
+                Some(b'=') => {
+                    self.bump();
+                    MinusAssign
+                }
+                _ => Minus,
+            },
+            b'*' => two(self, b'=', StarAssign, Star),
+            b'/' => two(self, b'=', SlashAssign, Slash),
+            b'=' => two(self, b'=', Eq, Assign),
+            b'!' => two(self, b'=', Ne, Not),
+            b'<' => two(self, b'=', Le, Lt),
+            b'>' => two(self, b'=', Ge, Gt),
+            b'&' => two(self, b'&', AndAnd, Amp),
+            b'|' => {
+                if self.peek() == Some(b'|') {
+                    self.bump();
+                    OrOr
+                } else {
+                    return Err(self.err("bitwise `|` unsupported in MiniC"));
+                }
+            }
+            other => {
+                return Err(
+                    self.err(format!("unexpected byte '{}'", other as char))
+                )
+            }
+        };
+        Ok(mk(kind))
+    }
+
+    fn ident(&mut self) -> String {
+        let start = self.pos;
+        while self
+            .peek()
+            .is_some_and(|b| b.is_ascii_alphanumeric() || b == b'_')
+        {
+            self.bump();
+        }
+        String::from_utf8_lossy(&self.src[start..self.pos]).into_owned()
+    }
+
+    fn number(&mut self, line: u32, col: u32) -> Result<Token, MiniCError> {
+        let start = self.pos;
+        let mut is_float = false;
+        while self.peek().is_some_and(|b| b.is_ascii_digit()) {
+            self.bump();
+        }
+        if self.peek() == Some(b'.') {
+            is_float = true;
+            self.bump();
+            while self.peek().is_some_and(|b| b.is_ascii_digit()) {
+                self.bump();
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            is_float = true;
+            self.bump();
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.bump();
+            }
+            while self.peek().is_some_and(|b| b.is_ascii_digit()) {
+                self.bump();
+            }
+        }
+        // Float suffix `f` / `F` (accepted and ignored).
+        if matches!(self.peek(), Some(b'f' | b'F')) {
+            let _ = is_float; // suffix forces float regardless
+            self.bump();
+            let text = std::str::from_utf8(&self.src[start..self.pos - 1])
+                .expect("ascii digits");
+            let v: f64 = text.parse().map_err(|_| MiniCError::Lex {
+                line,
+                col,
+                msg: format!("bad float literal {text:?}"),
+            })?;
+            return Ok(Token {
+                kind: TokenKind::FloatLit(v),
+                line,
+                col,
+            });
+        }
+        let text = std::str::from_utf8(&self.src[start..self.pos])
+            .expect("ascii digits");
+        let kind = if is_float {
+            TokenKind::FloatLit(text.parse().map_err(|_| MiniCError::Lex {
+                line,
+                col,
+                msg: format!("bad float literal {text:?}"),
+            })?)
+        } else {
+            TokenKind::IntLit(text.parse().map_err(|_| MiniCError::Lex {
+                line,
+                col,
+                msg: format!("bad int literal {text:?}"),
+            })?)
+        };
+        Ok(Token { kind, line, col })
+    }
+
+    fn string(&mut self, line: u32, col: u32) -> Result<Token, MiniCError> {
+        self.bump(); // opening quote
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                Some(b'"') => {
+                    return Ok(Token {
+                        kind: TokenKind::StrLit(out),
+                        line,
+                        col,
+                    })
+                }
+                Some(b'\\') => match self.bump() {
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    _ => {
+                        return Err(MiniCError::Lex {
+                            line,
+                            col,
+                            msg: "bad string escape".into(),
+                        })
+                    }
+                },
+                Some(b) => out.push(b as char),
+                None => {
+                    return Err(MiniCError::Lex {
+                        line,
+                        col,
+                        msg: "unterminated string".into(),
+                    })
+                }
+            }
+        }
+    }
+
+    /// `#define NAME ...` becomes `KwDefine Ident <value tokens...>`;
+    /// `#include ...` and `#pragma ...` lines are skipped entirely.
+    fn preprocessor(&mut self, line: u32, col: u32) -> Result<Token, MiniCError> {
+        self.bump(); // '#'
+        let word = self.ident();
+        match word.as_str() {
+            "define" => Ok(Token {
+                kind: TokenKind::KwDefine,
+                line,
+                col,
+            }),
+            "include" | "pragma" | "ifdef" | "ifndef" | "endif" | "else" => {
+                // Skip to end of line, then lex the next token.
+                while let Some(b) = self.peek() {
+                    if b == b'\n' {
+                        break;
+                    }
+                    self.bump();
+                }
+                self.next_token()
+            }
+            other => Err(MiniCError::Lex {
+                line,
+                col,
+                msg: format!("unsupported preprocessor directive #{other}"),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use TokenKind::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        Lexer::new(src)
+            .tokenize()
+            .unwrap()
+            .into_iter()
+            .map(|t| t.kind)
+            .collect()
+    }
+
+    #[test]
+    fn lex_basic_tokens() {
+        assert_eq!(
+            kinds("int x = 42;"),
+            vec![KwInt, Ident("x".into()), Assign, IntLit(42), Semi, Eof]
+        );
+    }
+
+    #[test]
+    fn lex_float_forms() {
+        assert_eq!(
+            kinds("1.5 2e3 0.25f .5"),
+            vec![
+                FloatLit(1.5),
+                FloatLit(2000.0),
+                FloatLit(0.25),
+                FloatLit(0.5),
+                Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_operators() {
+        assert_eq!(
+            kinds("a += b * c <= d && !e || f++"),
+            vec![
+                Ident("a".into()),
+                PlusAssign,
+                Ident("b".into()),
+                Star,
+                Ident("c".into()),
+                Le,
+                Ident("d".into()),
+                AndAnd,
+                Not,
+                Ident("e".into()),
+                OrOr,
+                Ident("f".into()),
+                PlusPlus,
+                Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_comments_skipped() {
+        assert_eq!(
+            kinds("a // line comment\n/* block\ncomment */ b"),
+            vec![Ident("a".into()), Ident("b".into()), Eof]
+        );
+    }
+
+    #[test]
+    fn lex_include_skipped_define_kept() {
+        assert_eq!(
+            kinds("#include <stdio.h>\n#define N 64\nint"),
+            vec![KwDefine, Ident("N".into()), IntLit(64), KwInt, Eof]
+        );
+    }
+
+    #[test]
+    fn lex_positions() {
+        let toks = Lexer::new("int\n  x;").tokenize().unwrap();
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (2, 3));
+    }
+
+    #[test]
+    fn lex_unterminated_comment_errors() {
+        assert!(Lexer::new("/* oops").tokenize().is_err());
+    }
+
+    #[test]
+    fn lex_string_literal() {
+        assert_eq!(
+            kinds(r#""hi\n" x"#),
+            vec![StrLit("hi\n".into()), Ident("x".into()), Eof]
+        );
+    }
+}

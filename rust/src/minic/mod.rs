@@ -1,0 +1,57 @@
+//! MiniC: the C-subset frontend (the paper's Clang/libClang analog).
+//!
+//! The offloading method needs three things from the source language
+//! (paper §3.3: "parses source codes … understands the loop statements and
+//! variables information"): the loop-statement structure, the variable
+//! reference relations, and an executable semantics for the all-CPU
+//! baseline. MiniC provides exactly that for a C subset rich enough to
+//! express the paper's evaluation applications (tdfir, MRI-Q): typed
+//! scalars/arrays/pointers, `for`/`while`/`if`, functions, math builtins,
+//! and `#define` constants.
+
+pub mod ast;
+pub mod interp;
+pub mod lexer;
+pub mod parser;
+pub mod pretty;
+pub mod token;
+pub mod typecheck;
+pub mod value;
+
+pub use ast::{
+    AssignOp, BinOp, Expr, Function, LValue, LoopId, Param, Program, Scalar,
+    Stmt, Type, UnOp,
+};
+pub use interp::{Interp, LoopProfile, OpCounts, Profile};
+pub use parser::parse;
+pub use value::{ArrayObj, ArrayRef, Value};
+
+use std::fmt;
+
+/// Errors from any MiniC stage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MiniCError {
+    Lex { line: u32, col: u32, msg: String },
+    Parse { line: u32, col: u32, msg: String },
+    Semantic { line: u32, msg: String },
+    Runtime(String),
+}
+
+impl fmt::Display for MiniCError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MiniCError::Lex { line, col, msg } => {
+                write!(f, "lex error at {line}:{col}: {msg}")
+            }
+            MiniCError::Parse { line, col, msg } => {
+                write!(f, "parse error at {line}:{col}: {msg}")
+            }
+            MiniCError::Semantic { line, msg } => {
+                write!(f, "semantic error at line {line}: {msg}")
+            }
+            MiniCError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for MiniCError {}

@@ -1,0 +1,874 @@
+//! Recursive-descent parser for the MiniC subset.
+//!
+//! Grammar (informal):
+//! ```text
+//! program   := (define | function | global-decl)*
+//! define    := '#define' IDENT (INT | FLOAT)
+//! function  := type IDENT '(' params? ')' block
+//! decl      := type declarator ('=' expr)? ';'
+//! stmt      := decl | assign ';' | if | for | while | return ';'
+//!            | call ';' | block
+//! for       := 'for' '(' (decl | assign)? ';' expr? ';' assign? ')' body
+//! ```
+//! Array dimensions must be constant expressions over `#define`s and
+//! integer literals. Loop ids are assigned in source order — the stable
+//! identity the offload pipeline keys on.
+
+use super::ast::*;
+use super::lexer::Lexer;
+use super::token::{Token, TokenKind};
+use super::MiniCError;
+
+/// Parse a full translation unit.
+pub fn parse(src: &str) -> Result<Program, MiniCError> {
+    let tokens = Lexer::new(src).tokenize()?;
+    Parser {
+        tokens,
+        pos: 0,
+        defines: Vec::new(),
+        next_loop: 0,
+    }
+    .program()
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+    defines: Vec<(String, f64)>,
+    next_loop: u32,
+}
+
+impl Parser {
+    fn peek(&self) -> &TokenKind {
+        &self.tokens[self.pos].kind
+    }
+
+    fn peek2(&self) -> &TokenKind {
+        &self.tokens[(self.pos + 1).min(self.tokens.len() - 1)].kind
+    }
+
+    fn line(&self) -> u32 {
+        self.tokens[self.pos].line
+    }
+
+    fn bump(&mut self) -> TokenKind {
+        let k = self.tokens[self.pos].kind.clone();
+        if self.pos + 1 < self.tokens.len() {
+            self.pos += 1;
+        }
+        k
+    }
+
+    fn err(&self, msg: impl Into<String>) -> MiniCError {
+        let t = &self.tokens[self.pos];
+        MiniCError::Parse {
+            line: t.line,
+            col: t.col,
+            msg: format!("{} (found {})", msg.into(), t.kind),
+        }
+    }
+
+    fn expect(&mut self, kind: TokenKind) -> Result<(), MiniCError> {
+        if *self.peek() == kind {
+            self.bump();
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {kind}")))
+        }
+    }
+
+    fn accept(&mut self, kind: TokenKind) -> bool {
+        if *self.peek() == kind {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    // ---- top level ----
+
+    fn program(mut self) -> Result<Program, MiniCError> {
+        let mut prog = Program::default();
+        loop {
+            match self.peek() {
+                TokenKind::Eof => break,
+                TokenKind::KwDefine => {
+                    let (name, val) = self.define()?;
+                    self.defines.push((name.clone(), val));
+                    prog.defines.push((name, val));
+                }
+                _ => {
+                    let item = self.function_or_global()?;
+                    match item {
+                        Item::Func(f) => prog.functions.push(f),
+                        Item::Global(s) => prog.globals.push(s),
+                    }
+                }
+            }
+        }
+        prog.loop_count = self.next_loop;
+        Ok(prog)
+    }
+
+    fn define(&mut self) -> Result<(String, f64), MiniCError> {
+        self.expect(TokenKind::KwDefine)?;
+        let name = self.ident()?;
+        let neg = self.accept(TokenKind::Minus);
+        let val = match self.bump() {
+            TokenKind::IntLit(v) => v as f64,
+            TokenKind::FloatLit(v) => v,
+            _ => return Err(self.err("expected numeric #define value")),
+        };
+        Ok((name, if neg { -val } else { val }))
+    }
+
+    fn ident(&mut self) -> Result<String, MiniCError> {
+        match self.peek().clone() {
+            TokenKind::Ident(s) => {
+                self.bump();
+                Ok(s)
+            }
+            _ => Err(self.err("expected identifier")),
+        }
+    }
+
+    fn scalar_type(&mut self) -> Result<Scalar, MiniCError> {
+        self.accept(TokenKind::KwConst);
+        let s = match self.peek() {
+            TokenKind::KwInt => Scalar::Int,
+            TokenKind::KwFloat => Scalar::Float,
+            TokenKind::KwDouble => Scalar::Double,
+            TokenKind::KwVoid => Scalar::Void,
+            _ => return Err(self.err("expected type")),
+        };
+        self.bump();
+        Ok(s)
+    }
+
+    fn starts_type(&self) -> bool {
+        matches!(
+            self.peek(),
+            TokenKind::KwInt
+                | TokenKind::KwFloat
+                | TokenKind::KwDouble
+                | TokenKind::KwVoid
+                | TokenKind::KwConst
+        )
+    }
+
+    fn function_or_global(&mut self) -> Result<Item, MiniCError> {
+        let line = self.line();
+        let scalar = self.scalar_type()?;
+        let is_ptr = self.accept(TokenKind::Star);
+        let name = self.ident()?;
+        if *self.peek() == TokenKind::LParen {
+            if is_ptr {
+                return Err(self.err("pointer return types unsupported"));
+            }
+            let f = self.function_rest(scalar, name, line)?;
+            Ok(Item::Func(f))
+        } else {
+            let stmt = self.decl_rest(scalar, is_ptr, name, line)?;
+            self.expect(TokenKind::Semi)?;
+            Ok(Item::Global(stmt))
+        }
+    }
+
+    fn function_rest(
+        &mut self,
+        ret: Scalar,
+        name: String,
+        line: u32,
+    ) -> Result<Function, MiniCError> {
+        self.expect(TokenKind::LParen)?;
+        let mut params = Vec::new();
+        if !self.accept(TokenKind::RParen) {
+            loop {
+                if *self.peek() == TokenKind::KwVoid
+                    && *self.peek2() == TokenKind::RParen
+                {
+                    self.bump(); // `(void)`
+                    break;
+                }
+                let scalar = self.scalar_type()?;
+                let is_ptr = self.accept(TokenKind::Star);
+                let pname = self.ident()?;
+                let ty = if is_ptr {
+                    Type::Ptr(scalar)
+                } else if *self.peek() == TokenKind::LBracket {
+                    // `float a[N]` parameter — dims must be constant.
+                    let dims = self.array_dims()?;
+                    Type::Array(scalar, dims)
+                } else {
+                    Type::Scalar(scalar)
+                };
+                params.push(Param { name: pname, ty });
+                if !self.accept(TokenKind::Comma) {
+                    break;
+                }
+            }
+            self.expect(TokenKind::RParen)?;
+        }
+        let body = self.block()?;
+        Ok(Function {
+            name,
+            ret,
+            params,
+            body,
+            line,
+        })
+    }
+
+    fn array_dims(&mut self) -> Result<Vec<usize>, MiniCError> {
+        let mut dims = Vec::new();
+        while self.accept(TokenKind::LBracket) {
+            let d = self.const_index_expr()?;
+            dims.push(d);
+            self.expect(TokenKind::RBracket)?;
+        }
+        Ok(dims)
+    }
+
+    /// Constant expression inside array brackets: INT, `#define` name, or
+    /// products/sums of those.
+    fn const_index_expr(&mut self) -> Result<usize, MiniCError> {
+        let mut acc = self.const_atom()?;
+        loop {
+            if self.accept(TokenKind::Star) {
+                acc *= self.const_atom()?;
+            } else if self.accept(TokenKind::Plus) {
+                acc += self.const_atom()?;
+            } else if self.accept(TokenKind::Minus) {
+                let rhs = self.const_atom()?;
+                acc = acc.checked_sub(rhs).ok_or_else(|| {
+                    self.err("negative array dimension")
+                })?;
+            } else {
+                return Ok(acc);
+            }
+        }
+    }
+
+    fn const_atom(&mut self) -> Result<usize, MiniCError> {
+        match self.peek().clone() {
+            TokenKind::IntLit(v) if v >= 0 => {
+                self.bump();
+                Ok(v as usize)
+            }
+            TokenKind::Ident(name) => {
+                let val = self
+                    .defines
+                    .iter()
+                    .rev()
+                    .find(|(n, _)| *n == name)
+                    .map(|(_, v)| *v)
+                    .ok_or_else(|| {
+                        self.err(format!(
+                            "array dimension `{name}` is not a #define"
+                        ))
+                    })?;
+                self.bump();
+                if val < 0.0 || val.fract() != 0.0 {
+                    return Err(self.err(format!(
+                        "#define {name} = {val} is not a valid dimension"
+                    )));
+                }
+                Ok(val as usize)
+            }
+            _ => Err(self.err("expected constant array dimension")),
+        }
+    }
+
+    fn decl_rest(
+        &mut self,
+        scalar: Scalar,
+        is_ptr: bool,
+        name: String,
+        line: u32,
+    ) -> Result<Stmt, MiniCError> {
+        let ty = if is_ptr {
+            Type::Ptr(scalar)
+        } else if *self.peek() == TokenKind::LBracket {
+            Type::Array(scalar, self.array_dims()?)
+        } else {
+            Type::Scalar(scalar)
+        };
+        let init = if self.accept(TokenKind::Assign) {
+            Some(self.expr()?)
+        } else {
+            None
+        };
+        Ok(Stmt::Decl {
+            name,
+            ty,
+            init,
+            line,
+        })
+    }
+
+    // ---- statements ----
+
+    fn block(&mut self) -> Result<Vec<Stmt>, MiniCError> {
+        self.expect(TokenKind::LBrace)?;
+        let mut stmts = Vec::new();
+        while !self.accept(TokenKind::RBrace) {
+            if *self.peek() == TokenKind::Eof {
+                return Err(self.err("unterminated block"));
+            }
+            stmts.push(self.stmt()?);
+        }
+        Ok(stmts)
+    }
+
+    /// A statement or single-statement body (for `if (c) x = 1;`).
+    fn body(&mut self) -> Result<Vec<Stmt>, MiniCError> {
+        if *self.peek() == TokenKind::LBrace {
+            self.block()
+        } else {
+            Ok(vec![self.stmt()?])
+        }
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, MiniCError> {
+        let line = self.line();
+        match self.peek() {
+            TokenKind::KwIf => self.if_stmt(),
+            TokenKind::KwFor => self.for_stmt(),
+            TokenKind::KwWhile => self.while_stmt(),
+            TokenKind::KwReturn => {
+                self.bump();
+                let value = if *self.peek() == TokenKind::Semi {
+                    None
+                } else {
+                    Some(self.expr()?)
+                };
+                self.expect(TokenKind::Semi)?;
+                Ok(Stmt::Return { value, line })
+            }
+            _ if self.starts_type() => {
+                let scalar = self.scalar_type()?;
+                let is_ptr = self.accept(TokenKind::Star);
+                let name = self.ident()?;
+                let s = self.decl_rest(scalar, is_ptr, name, line)?;
+                self.expect(TokenKind::Semi)?;
+                Ok(s)
+            }
+            _ => {
+                let s = self.simple_stmt()?;
+                self.expect(TokenKind::Semi)?;
+                Ok(s)
+            }
+        }
+    }
+
+    /// Assignment, inc/dec, or bare call — no trailing `;` (shared between
+    /// statement position and `for` headers).
+    fn simple_stmt(&mut self) -> Result<Stmt, MiniCError> {
+        let line = self.line();
+        let name = self.ident()?;
+
+        // Call statement.
+        if *self.peek() == TokenKind::LParen {
+            let args = self.call_args()?;
+            return Ok(Stmt::ExprStmt {
+                expr: Expr::Call { name, args },
+                line,
+            });
+        }
+
+        // Optional index part of the lvalue.
+        let target = if *self.peek() == TokenKind::LBracket {
+            let mut indices = Vec::new();
+            while self.accept(TokenKind::LBracket) {
+                indices.push(self.expr()?);
+                self.expect(TokenKind::RBracket)?;
+            }
+            LValue::Index { base: name, indices }
+        } else {
+            LValue::Var(name)
+        };
+
+        use TokenKind::*;
+        let (op, value) = match self.peek().clone() {
+            Assign => {
+                self.bump();
+                (AssignOp::Set, self.expr()?)
+            }
+            PlusAssign => {
+                self.bump();
+                (AssignOp::AddSet, self.expr()?)
+            }
+            MinusAssign => {
+                self.bump();
+                (AssignOp::SubSet, self.expr()?)
+            }
+            StarAssign => {
+                self.bump();
+                (AssignOp::MulSet, self.expr()?)
+            }
+            SlashAssign => {
+                self.bump();
+                (AssignOp::DivSet, self.expr()?)
+            }
+            PlusPlus => {
+                self.bump();
+                (AssignOp::AddSet, Expr::IntLit(1))
+            }
+            MinusMinus => {
+                self.bump();
+                (AssignOp::SubSet, Expr::IntLit(1))
+            }
+            _ => return Err(self.err("expected assignment operator")),
+        };
+        Ok(Stmt::Assign {
+            target,
+            op,
+            value,
+            line,
+        })
+    }
+
+    fn if_stmt(&mut self) -> Result<Stmt, MiniCError> {
+        let line = self.line();
+        self.expect(TokenKind::KwIf)?;
+        self.expect(TokenKind::LParen)?;
+        let cond = self.expr()?;
+        self.expect(TokenKind::RParen)?;
+        let then_branch = self.body()?;
+        let else_branch = if self.accept(TokenKind::KwElse) {
+            if *self.peek() == TokenKind::KwIf {
+                vec![self.if_stmt()?]
+            } else {
+                self.body()?
+            }
+        } else {
+            Vec::new()
+        };
+        Ok(Stmt::If {
+            cond,
+            then_branch,
+            else_branch,
+            line,
+        })
+    }
+
+    fn for_stmt(&mut self) -> Result<Stmt, MiniCError> {
+        let line = self.line();
+        let id = LoopId(self.next_loop);
+        self.next_loop += 1;
+        self.expect(TokenKind::KwFor)?;
+        self.expect(TokenKind::LParen)?;
+
+        let init = if *self.peek() == TokenKind::Semi {
+            None
+        } else if self.starts_type() {
+            let dline = self.line();
+            let scalar = self.scalar_type()?;
+            let name = self.ident()?;
+            let s = self.decl_rest(scalar, false, name, dline)?;
+            Some(Box::new(s))
+        } else {
+            Some(Box::new(self.simple_stmt()?))
+        };
+        self.expect(TokenKind::Semi)?;
+
+        let cond = if *self.peek() == TokenKind::Semi {
+            None
+        } else {
+            Some(self.expr()?)
+        };
+        self.expect(TokenKind::Semi)?;
+
+        let step = if *self.peek() == TokenKind::RParen {
+            None
+        } else {
+            Some(Box::new(self.simple_stmt()?))
+        };
+        self.expect(TokenKind::RParen)?;
+
+        let body = self.body()?;
+        Ok(Stmt::For {
+            id,
+            init,
+            cond,
+            step,
+            body,
+            line,
+        })
+    }
+
+    fn while_stmt(&mut self) -> Result<Stmt, MiniCError> {
+        let line = self.line();
+        let id = LoopId(self.next_loop);
+        self.next_loop += 1;
+        self.expect(TokenKind::KwWhile)?;
+        self.expect(TokenKind::LParen)?;
+        let cond = self.expr()?;
+        self.expect(TokenKind::RParen)?;
+        let body = self.body()?;
+        Ok(Stmt::While { id, cond, body, line })
+    }
+
+    // ---- expressions (precedence climbing) ----
+
+    fn expr(&mut self) -> Result<Expr, MiniCError> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, MiniCError> {
+        let mut lhs = self.and_expr()?;
+        while self.accept(TokenKind::OrOr) {
+            let rhs = self.and_expr()?;
+            lhs = Expr::Bin {
+                op: BinOp::Or,
+                lhs: Box::new(lhs),
+                rhs: Box::new(rhs),
+            };
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, MiniCError> {
+        let mut lhs = self.equality()?;
+        while self.accept(TokenKind::AndAnd) {
+            let rhs = self.equality()?;
+            lhs = Expr::Bin {
+                op: BinOp::And,
+                lhs: Box::new(lhs),
+                rhs: Box::new(rhs),
+            };
+        }
+        Ok(lhs)
+    }
+
+    fn equality(&mut self) -> Result<Expr, MiniCError> {
+        let mut lhs = self.relational()?;
+        loop {
+            let op = match self.peek() {
+                TokenKind::Eq => BinOp::Eq,
+                TokenKind::Ne => BinOp::Ne,
+                _ => return Ok(lhs),
+            };
+            self.bump();
+            let rhs = self.relational()?;
+            lhs = Expr::Bin {
+                op,
+                lhs: Box::new(lhs),
+                rhs: Box::new(rhs),
+            };
+        }
+    }
+
+    fn relational(&mut self) -> Result<Expr, MiniCError> {
+        let mut lhs = self.additive()?;
+        loop {
+            let op = match self.peek() {
+                TokenKind::Lt => BinOp::Lt,
+                TokenKind::Gt => BinOp::Gt,
+                TokenKind::Le => BinOp::Le,
+                TokenKind::Ge => BinOp::Ge,
+                _ => return Ok(lhs),
+            };
+            self.bump();
+            let rhs = self.additive()?;
+            lhs = Expr::Bin {
+                op,
+                lhs: Box::new(lhs),
+                rhs: Box::new(rhs),
+            };
+        }
+    }
+
+    fn additive(&mut self) -> Result<Expr, MiniCError> {
+        let mut lhs = self.multiplicative()?;
+        loop {
+            let op = match self.peek() {
+                TokenKind::Plus => BinOp::Add,
+                TokenKind::Minus => BinOp::Sub,
+                _ => return Ok(lhs),
+            };
+            self.bump();
+            let rhs = self.multiplicative()?;
+            lhs = Expr::Bin {
+                op,
+                lhs: Box::new(lhs),
+                rhs: Box::new(rhs),
+            };
+        }
+    }
+
+    fn multiplicative(&mut self) -> Result<Expr, MiniCError> {
+        let mut lhs = self.unary()?;
+        loop {
+            let op = match self.peek() {
+                TokenKind::Star => BinOp::Mul,
+                TokenKind::Slash => BinOp::Div,
+                TokenKind::Percent => BinOp::Rem,
+                _ => return Ok(lhs),
+            };
+            self.bump();
+            let rhs = self.unary()?;
+            lhs = Expr::Bin {
+                op,
+                lhs: Box::new(lhs),
+                rhs: Box::new(rhs),
+            };
+        }
+    }
+
+    fn unary(&mut self) -> Result<Expr, MiniCError> {
+        match self.peek() {
+            TokenKind::Minus => {
+                self.bump();
+                Ok(Expr::Un {
+                    op: UnOp::Neg,
+                    operand: Box::new(self.unary()?),
+                })
+            }
+            TokenKind::Not => {
+                self.bump();
+                Ok(Expr::Un {
+                    op: UnOp::Not,
+                    operand: Box::new(self.unary()?),
+                })
+            }
+            // `(float) expr` cast vs parenthesized expression.
+            TokenKind::LParen
+                if matches!(
+                    self.peek2(),
+                    TokenKind::KwInt
+                        | TokenKind::KwFloat
+                        | TokenKind::KwDouble
+                ) =>
+            {
+                self.bump(); // (
+                let to = self.scalar_type()?;
+                self.expect(TokenKind::RParen)?;
+                Ok(Expr::Cast {
+                    to,
+                    operand: Box::new(self.unary()?),
+                })
+            }
+            _ => self.postfix(),
+        }
+    }
+
+    fn postfix(&mut self) -> Result<Expr, MiniCError> {
+        match self.peek().clone() {
+            TokenKind::IntLit(v) => {
+                self.bump();
+                Ok(Expr::IntLit(v))
+            }
+            TokenKind::FloatLit(v) => {
+                self.bump();
+                Ok(Expr::FloatLit(v))
+            }
+            TokenKind::StrLit(s) => {
+                self.bump();
+                Ok(Expr::StrLit(s))
+            }
+            TokenKind::LParen => {
+                self.bump();
+                let e = self.expr()?;
+                self.expect(TokenKind::RParen)?;
+                Ok(e)
+            }
+            TokenKind::Ident(name) => {
+                self.bump();
+                if *self.peek() == TokenKind::LParen {
+                    let args = self.call_args()?;
+                    Ok(Expr::Call { name, args })
+                } else if *self.peek() == TokenKind::LBracket {
+                    let mut indices = Vec::new();
+                    while self.accept(TokenKind::LBracket) {
+                        indices.push(self.expr()?);
+                        self.expect(TokenKind::RBracket)?;
+                    }
+                    Ok(Expr::Index {
+                        base: name,
+                        indices,
+                    })
+                } else {
+                    Ok(Expr::Var(name))
+                }
+            }
+            _ => Err(self.err("expected expression")),
+        }
+    }
+
+    fn call_args(&mut self) -> Result<Vec<Expr>, MiniCError> {
+        self.expect(TokenKind::LParen)?;
+        let mut args = Vec::new();
+        if self.accept(TokenKind::RParen) {
+            return Ok(args);
+        }
+        loop {
+            args.push(self.expr()?);
+            if !self.accept(TokenKind::Comma) {
+                break;
+            }
+        }
+        self.expect(TokenKind::RParen)?;
+        Ok(args)
+    }
+}
+
+enum Item {
+    Func(Function),
+    Global(Stmt),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_function() {
+        let p = parse("int main() { return 0; }").unwrap();
+        assert_eq!(p.functions.len(), 1);
+        assert_eq!(p.functions[0].name, "main");
+        assert_eq!(p.loop_count, 0);
+    }
+
+    #[test]
+    fn parse_defines_and_dims() {
+        let p = parse(
+            "#define N 8\n#define M 4\nfloat a[N][M];\nint main() { return 0; }",
+        )
+        .unwrap();
+        assert_eq!(p.define("N"), Some(8.0));
+        match &p.globals[0] {
+            Stmt::Decl { ty, .. } => {
+                assert_eq!(*ty, Type::Array(Scalar::Float, vec![8, 4]))
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_dim_arithmetic() {
+        let p = parse("#define N 8\nfloat a[N*2+1];\nint main(){return 0;}")
+            .unwrap();
+        match &p.globals[0] {
+            Stmt::Decl { ty, .. } => {
+                assert_eq!(*ty, Type::Array(Scalar::Float, vec![17]))
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_for_loops_get_ids_in_source_order() {
+        let src = "
+            void f() {
+                for (int i = 0; i < 4; i++) {
+                    for (int j = 0; j < 4; j++) { }
+                }
+                while (1) { }
+            }";
+        let p = parse(src).unwrap();
+        assert_eq!(p.loop_count, 3);
+        let mut ids = Vec::new();
+        p.walk_stmts(&mut |s| match s {
+            Stmt::For { id, .. } | Stmt::While { id, .. } => ids.push(id.0),
+            _ => {}
+        });
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn parse_precedence() {
+        let p = parse("int main() { int x = 1 + 2 * 3; return x; }").unwrap();
+        match &p.functions[0].body[0] {
+            Stmt::Decl {
+                init: Some(Expr::Bin { op: BinOp::Add, rhs, .. }),
+                ..
+            } => match rhs.as_ref() {
+                Expr::Bin { op: BinOp::Mul, .. } => {}
+                other => panic!("rhs {other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_compound_assign_and_incdec() {
+        let src = "void f() { int i = 0; i += 2; i--; }";
+        let p = parse(src).unwrap();
+        assert_eq!(p.functions[0].body.len(), 3);
+    }
+
+    #[test]
+    fn parse_array_indexing_2d() {
+        let src = "#define N 4\nfloat a[N][N];\nvoid f() { a[1][2] = a[2][1] + 1.0; }";
+        let p = parse(src).unwrap();
+        match &p.functions[0].body[0] {
+            Stmt::Assign {
+                target: LValue::Index { base, indices },
+                ..
+            } => {
+                assert_eq!(base, "a");
+                assert_eq!(indices.len(), 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_call_and_builtin() {
+        let src = "void f(float *x) { x[0] = sin(x[1]) + cos(0.5); }";
+        let p = parse(src).unwrap();
+        assert_eq!(p.functions[0].params.len(), 1);
+        assert!(matches!(
+            p.functions[0].params[0].ty,
+            Type::Ptr(Scalar::Float)
+        ));
+    }
+
+    #[test]
+    fn parse_if_else_chain() {
+        let src = "void f(int x) { if (x > 0) { x = 1; } else if (x < 0) x = 2; else { x = 3; } }";
+        let p = parse(src).unwrap();
+        match &p.functions[0].body[0] {
+            Stmt::If { else_branch, .. } => {
+                assert_eq!(else_branch.len(), 1);
+                assert!(matches!(else_branch[0], Stmt::If { .. }));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_cast() {
+        let src = "void f() { float x = (float) 3 / 2; }";
+        let p = parse(src).unwrap();
+        match &p.functions[0].body[0] {
+            Stmt::Decl { init: Some(Expr::Bin { lhs, .. }), .. } => {
+                assert!(matches!(lhs.as_ref(), Expr::Cast { .. }));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_error_reports_position() {
+        let err = parse("int main() { int = 3; }").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("1:"), "{msg}");
+    }
+
+    #[test]
+    fn parse_for_without_decl_init() {
+        let src = "void f() { int i; for (i = 0; i < 8; i = i + 1) { } }";
+        let p = parse(src).unwrap();
+        assert_eq!(p.loop_count, 1);
+    }
+
+    #[test]
+    fn parse_include_lines_ignored() {
+        let src = "#include <math.h>\nvoid f() { }";
+        let p = parse(src).unwrap();
+        assert_eq!(p.functions.len(), 1);
+    }
+}

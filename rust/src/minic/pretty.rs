@@ -1,0 +1,331 @@
+//! Pretty-printer: AST → C-like source text.
+//!
+//! Used by [`crate::codegen`] to emit the host-program and OpenCL-kernel
+//! texts (paper §3.3: "the target loop statement is converted into a high
+//! level language such as OpenCL"), and in diagnostics.
+
+use super::ast::*;
+use std::fmt::Write;
+
+/// Render an expression.
+pub fn expr(e: &Expr) -> String {
+    let mut s = String::new();
+    write_expr(e, &mut s, 0);
+    s
+}
+
+/// Render a statement at the given indent depth.
+pub fn stmt(s: &Stmt, depth: usize) -> String {
+    let mut out = String::new();
+    write_stmt(s, &mut out, depth);
+    out
+}
+
+/// Render a whole function.
+pub fn function(f: &Function) -> String {
+    let mut out = String::new();
+    let params = f
+        .params
+        .iter()
+        .map(|p| param(p))
+        .collect::<Vec<_>>()
+        .join(", ");
+    let _ = writeln!(out, "{} {}({}) {{", f.ret, f.name, params);
+    for s in &f.body {
+        write_stmt(s, &mut out, 1);
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn param(p: &Param) -> String {
+    match &p.ty {
+        Type::Scalar(s) => format!("{s} {}", p.name),
+        Type::Ptr(s) => format!("{s} *{}", p.name),
+        Type::Array(s, dims) => {
+            let d: String = dims.iter().map(|d| format!("[{d}]")).collect();
+            format!("{s} {}{d}", p.name)
+        }
+    }
+}
+
+fn indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("    ");
+    }
+}
+
+fn write_stmt(s: &Stmt, out: &mut String, depth: usize) {
+    indent(out, depth);
+    match s {
+        Stmt::Decl { name, ty, init, .. } => {
+            match ty {
+                Type::Scalar(sc) => {
+                    let _ = write!(out, "{sc} {name}");
+                }
+                Type::Ptr(sc) => {
+                    let _ = write!(out, "{sc} *{name}");
+                }
+                Type::Array(sc, dims) => {
+                    let _ = write!(out, "{sc} {name}");
+                    for d in dims {
+                        let _ = write!(out, "[{d}]");
+                    }
+                }
+            }
+            if let Some(e) = init {
+                let _ = write!(out, " = {}", expr(e));
+            }
+            out.push_str(";\n");
+        }
+        Stmt::Assign { target, op, value, .. } => {
+            let t = match target {
+                LValue::Var(n) => n.clone(),
+                LValue::Index { base, indices } => {
+                    let idx: String = indices
+                        .iter()
+                        .map(|i| format!("[{}]", expr(i)))
+                        .collect();
+                    format!("{base}{idx}")
+                }
+            };
+            let sym = match op {
+                AssignOp::Set => "=",
+                AssignOp::AddSet => "+=",
+                AssignOp::SubSet => "-=",
+                AssignOp::MulSet => "*=",
+                AssignOp::DivSet => "/=",
+            };
+            let _ = writeln!(out, "{t} {sym} {};", expr(value));
+        }
+        Stmt::If {
+            cond,
+            then_branch,
+            else_branch,
+            ..
+        } => {
+            let _ = writeln!(out, "if ({}) {{", expr(cond));
+            for s in then_branch {
+                write_stmt(s, out, depth + 1);
+            }
+            indent(out, depth);
+            if else_branch.is_empty() {
+                out.push_str("}\n");
+            } else {
+                out.push_str("} else {\n");
+                for s in else_branch {
+                    write_stmt(s, out, depth + 1);
+                }
+                indent(out, depth);
+                out.push_str("}\n");
+            }
+        }
+        Stmt::For {
+            id,
+            init,
+            cond,
+            step,
+            body,
+            ..
+        } => {
+            let init_s = init
+                .as_ref()
+                .map(|s| oneline(s))
+                .unwrap_or_default();
+            let cond_s = cond.as_ref().map(expr).unwrap_or_default();
+            let step_s = step
+                .as_ref()
+                .map(|s| oneline(s))
+                .unwrap_or_default();
+            let _ = writeln!(
+                out,
+                "for ({init_s}; {cond_s}; {step_s}) {{ /* {id} */"
+            );
+            for s in body {
+                write_stmt(s, out, depth + 1);
+            }
+            indent(out, depth);
+            out.push_str("}\n");
+        }
+        Stmt::While { id, cond, body, .. } => {
+            let _ = writeln!(out, "while ({}) {{ /* {id} */", expr(cond));
+            for s in body {
+                write_stmt(s, out, depth + 1);
+            }
+            indent(out, depth);
+            out.push_str("}\n");
+        }
+        Stmt::Return { value, .. } => match value {
+            Some(e) => {
+                let _ = writeln!(out, "return {};", expr(e));
+            }
+            None => out.push_str("return;\n"),
+        },
+        Stmt::ExprStmt { expr: e, .. } => {
+            let _ = writeln!(out, "{};", expr(e));
+        }
+    }
+}
+
+/// Statement without trailing `;\n` or indent — for `for` headers.
+fn oneline(s: &Stmt) -> String {
+    let mut text = stmt(s, 0);
+    while text.ends_with('\n') || text.ends_with(';') {
+        text.pop();
+    }
+    text
+}
+
+fn prec(e: &Expr) -> u8 {
+    match e {
+        Expr::Bin { op, .. } => match op {
+            BinOp::Or => 1,
+            BinOp::And => 2,
+            BinOp::Eq | BinOp::Ne => 3,
+            BinOp::Lt | BinOp::Gt | BinOp::Le | BinOp::Ge => 4,
+            BinOp::Add | BinOp::Sub => 5,
+            BinOp::Mul | BinOp::Div | BinOp::Rem => 6,
+        },
+        Expr::Un { .. } | Expr::Cast { .. } => 7,
+        _ => 8,
+    }
+}
+
+fn write_expr(e: &Expr, out: &mut String, parent_prec: u8) {
+    let my_prec = prec(e);
+    let need_parens = my_prec < parent_prec;
+    if need_parens {
+        out.push('(');
+    }
+    match e {
+        Expr::IntLit(v) => {
+            let _ = write!(out, "{v}");
+        }
+        Expr::FloatLit(v) => {
+            if v.fract() == 0.0 && v.abs() < 1e15 {
+                let _ = write!(out, "{:.1}", v);
+            } else {
+                let _ = write!(out, "{v}");
+            }
+        }
+        Expr::StrLit(s) => {
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        Expr::Var(n) => out.push_str(n),
+        Expr::Index { base, indices } => {
+            out.push_str(base);
+            for i in indices {
+                out.push('[');
+                write_expr(i, out, 0);
+                out.push(']');
+            }
+        }
+        Expr::Bin { op, lhs, rhs } => {
+            write_expr(lhs, out, my_prec);
+            let _ = write!(out, " {} ", op.c_symbol());
+            // Right operand needs the next precedence up for left-assoc.
+            write_expr(rhs, out, my_prec + 1);
+        }
+        Expr::Un { op, operand } => {
+            out.push(match op {
+                UnOp::Neg => '-',
+                UnOp::Not => '!',
+            });
+            write_expr(operand, out, my_prec);
+        }
+        Expr::Call { name, args } => {
+            out.push_str(name);
+            out.push('(');
+            for (i, a) in args.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                write_expr(a, out, 0);
+            }
+            out.push(')');
+        }
+        Expr::Cast { to, operand } => {
+            let _ = write!(out, "({to}) ");
+            write_expr(operand, out, my_prec);
+        }
+    }
+    if need_parens {
+        out.push(')');
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::parse;
+
+    #[test]
+    fn roundtrip_is_idempotent() {
+        // Parse → pretty → parse → pretty: the two renderings must be
+        // byte-identical (ASTs carry line numbers, so AST equality across
+        // different sources is not expected; print-stability is).
+        let src = "
+#define N 16
+float a[N];
+float acc;
+void work(float *x, int n) {
+    for (int i = 0; i < n; i++) {
+        if (x[i] > 0.5) { acc += x[i] * 2.0 - 1.0; }
+    }
+}
+int main() { work(a, N); return (int) acc; }
+";
+        fn render(p: &crate::minic::Program) -> String {
+            let mut out = String::new();
+            for (name, val) in &p.defines {
+                out.push_str(&format!("#define {name} {val}\n"));
+            }
+            for g in &p.globals {
+                out.push_str(&stmt(g, 0));
+            }
+            for f in &p.functions {
+                out.push_str(&function(f));
+            }
+            out
+        }
+        let p1 = parse(src).unwrap();
+        let r1 = render(&p1);
+        let p2 = parse(&r1).unwrap();
+        let r2 = render(&p2);
+        assert_eq!(r1, r2);
+        // Loop inventory is preserved as well.
+        assert_eq!(p1.loop_count, p2.loop_count);
+    }
+
+    #[test]
+    fn parenthesization_correct() {
+        let p = parse("int main() { int x = (1 + 2) * 3; return x; }").unwrap();
+        let body = &p.functions[0].body[0];
+        let text = stmt(body, 0);
+        assert!(text.contains("(1 + 2) * 3"), "{text}");
+    }
+
+    #[test]
+    fn no_spurious_parens() {
+        let p = parse("int main() { int x = 1 + 2 * 3; return x; }").unwrap();
+        let text = stmt(&p.functions[0].body[0], 0);
+        assert!(text.contains("1 + 2 * 3"), "{text}");
+    }
+
+    #[test]
+    fn loop_comment_carries_id() {
+        let p = parse("void f() { for (int i = 0; i < 4; i++) { } }").unwrap();
+        let text = function(&p.functions[0]);
+        assert!(text.contains("/* L0 */"), "{text}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Token model for the MiniC frontend.
+
+use std::fmt;
+
+/// A lexical token with its source position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: TokenKind,
+    /// 1-based line.
+    pub line: u32,
+    /// 1-based column.
+    pub col: u32,
+}
+
+/// Token kinds for the C subset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenKind {
+    // Literals and identifiers
+    Ident(String),
+    IntLit(i64),
+    FloatLit(f64),
+    StrLit(String),
+
+    // Keywords
+    KwInt,
+    KwFloat,
+    KwDouble,
+    KwVoid,
+    KwConst,
+    KwIf,
+    KwElse,
+    KwFor,
+    KwWhile,
+    KwReturn,
+    KwDefine, // from `#define` preprocessing
+
+    // Punctuation
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Semi,
+    Comma,
+
+    // Operators
+    Assign,     // =
+    PlusAssign, // +=
+    MinusAssign,
+    StarAssign,
+    SlashAssign,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    PlusPlus,
+    MinusMinus,
+    Eq,  // ==
+    Ne,  // !=
+    Lt,  // <
+    Gt,  // >
+    Le,  // <=
+    Ge,  // >=
+    AndAnd,
+    OrOr,
+    Not,
+    Amp, // & (only in declarator/address contexts we accept)
+
+    Eof,
+}
+
+impl TokenKind {
+    /// Keyword lookup for an identifier-shaped lexeme.
+    pub fn keyword(s: &str) -> Option<TokenKind> {
+        Some(match s {
+            "int" => TokenKind::KwInt,
+            "float" => TokenKind::KwFloat,
+            "double" => TokenKind::KwDouble,
+            "void" => TokenKind::KwVoid,
+            "const" => TokenKind::KwConst,
+            "if" => TokenKind::KwIf,
+            "else" => TokenKind::KwElse,
+            "for" => TokenKind::KwFor,
+            "while" => TokenKind::KwWhile,
+            "return" => TokenKind::KwReturn,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for TokenKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use TokenKind::*;
+        match self {
+            Ident(s) => write!(f, "identifier `{s}`"),
+            IntLit(v) => write!(f, "integer literal {v}"),
+            FloatLit(v) => write!(f, "float literal {v}"),
+            StrLit(s) => write!(f, "string literal {s:?}"),
+            KwInt => write!(f, "`int`"),
+            KwFloat => write!(f, "`float`"),
+            KwDouble => write!(f, "`double`"),
+            KwVoid => write!(f, "`void`"),
+            KwConst => write!(f, "`const`"),
+            KwIf => write!(f, "`if`"),
+            KwElse => write!(f, "`else`"),
+            KwFor => write!(f, "`for`"),
+            KwWhile => write!(f, "`while`"),
+            KwReturn => write!(f, "`return`"),
+            KwDefine => write!(f, "`#define`"),
+            LParen => write!(f, "`(`"),
+            RParen => write!(f, "`)`"),
+            LBrace => write!(f, "`{{`"),
+            RBrace => write!(f, "`}}`"),
+            LBracket => write!(f, "`[`"),
+            RBracket => write!(f, "`]`"),
+            Semi => write!(f, "`;`"),
+            Comma => write!(f, "`,`"),
+            Assign => write!(f, "`=`"),
+            PlusAssign => write!(f, "`+=`"),
+            MinusAssign => write!(f, "`-=`"),
+            StarAssign => write!(f, "`*=`"),
+            SlashAssign => write!(f, "`/=`"),
+            Plus => write!(f, "`+`"),
+            Minus => write!(f, "`-`"),
+            Star => write!(f, "`*`"),
+            Slash => write!(f, "`/`"),
+            Percent => write!(f, "`%`"),
+            PlusPlus => write!(f, "`++`"),
+            MinusMinus => write!(f, "`--`"),
+            Eq => write!(f, "`==`"),
+            Ne => write!(f, "`!=`"),
+            Lt => write!(f, "`<`"),
+            Gt => write!(f, "`>`"),
+            Le => write!(f, "`<=`"),
+            Ge => write!(f, "`>=`"),
+            AndAnd => write!(f, "`&&`"),
+            OrOr => write!(f, "`||`"),
+            Not => write!(f, "`!`"),
+            Amp => write!(f, "`&`"),
+            Eof => write!(f, "end of input"),
+        }
+    }
+}

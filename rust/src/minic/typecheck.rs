@@ -1,0 +1,366 @@
+//! Static semantic checks over a parsed [`Program`].
+//!
+//! Run once before analysis/offloading so later stages can assume a
+//! well-formed program: every referenced name is declared, array ranks
+//! match their declarations, called functions exist with the right arity,
+//! and loop ids are unique and dense. (The interpreter re-checks
+//! dynamically; this catches errors before any measurement is spent.)
+
+use std::collections::{HashMap, HashSet};
+
+use super::ast::*;
+use super::MiniCError;
+
+/// Known 1-argument math builtins.
+pub const BUILTINS_1: &[&str] = &[
+    "sin", "cos", "tan", "sqrt", "sqrtf", "exp", "log", "fabs", "floor",
+    "ceil",
+];
+
+/// Known 2-argument builtins.
+pub const BUILTINS_2: &[&str] = &["fmin", "fmax", "pow"];
+
+/// Check the program; returns the list of semantic errors (empty = ok).
+pub fn check(prog: &Program) -> Vec<MiniCError> {
+    let mut errors = Vec::new();
+    let mut checker = Checker {
+        prog,
+        errors: &mut errors,
+        scopes: Vec::new(),
+    };
+    checker.run();
+    errors
+}
+
+/// Convenience: check and fail on the first error.
+pub fn check_ok(prog: &Program) -> Result<(), MiniCError> {
+    match check(prog).into_iter().next() {
+        None => Ok(()),
+        Some(e) => Err(e),
+    }
+}
+
+struct Checker<'p, 'e> {
+    prog: &'p Program,
+    errors: &'e mut Vec<MiniCError>,
+    scopes: Vec<HashMap<String, Type>>,
+}
+
+impl<'p, 'e> Checker<'p, 'e> {
+    fn run(&mut self) {
+        self.check_loop_ids();
+
+        // Global scope: defines + globals.
+        let mut globals = HashMap::new();
+        for (name, _) in &self.prog.defines {
+            globals.insert(name.clone(), Type::Scalar(Scalar::Int));
+        }
+        for g in &self.prog.globals {
+            if let Stmt::Decl { name, ty, .. } = g {
+                if globals.contains_key(name) {
+                    self.err(g.line(), format!("duplicate global `{name}`"));
+                }
+                globals.insert(name.clone(), ty.clone());
+            }
+        }
+        self.scopes.push(globals);
+
+        let mut fn_names = HashSet::new();
+        for f in &self.prog.functions {
+            if !fn_names.insert(f.name.clone()) {
+                self.err(f.line, format!("duplicate function `{}`", f.name));
+            }
+        }
+        for f in &self.prog.functions {
+            self.check_function(f);
+        }
+    }
+
+    fn check_loop_ids(&mut self) {
+        let mut seen = HashSet::new();
+        let mut max = 0u32;
+        let mut count = 0u32;
+        self.prog.walk_stmts(&mut |s| {
+            if let Stmt::For { id, .. } | Stmt::While { id, .. } = s {
+                if !seen.insert(*id) {
+                    // Can't borrow self in closure; collected below.
+                }
+                max = max.max(id.0);
+                count += 1;
+            }
+        });
+        if count != self.prog.loop_count
+            || (count > 0 && max + 1 != count)
+            || seen.len() != count as usize
+        {
+            self.err(
+                0,
+                format!(
+                    "loop id invariant broken: count={count}, max={max}, \
+                     declared={}",
+                    self.prog.loop_count
+                ),
+            );
+        }
+    }
+
+    fn err(&mut self, line: u32, msg: String) {
+        self.errors.push(MiniCError::Semantic { line, msg });
+    }
+
+    fn lookup(&self, name: &str) -> Option<&Type> {
+        self.scopes.iter().rev().find_map(|s| s.get(name))
+    }
+
+    fn declare(&mut self, name: &str, ty: Type) {
+        self.scopes
+            .last_mut()
+            .expect("scope")
+            .insert(name.to_string(), ty);
+    }
+
+    fn check_function(&mut self, f: &Function) {
+        self.scopes.push(HashMap::new());
+        for p in &f.params {
+            self.declare(&p.name, p.ty.clone());
+        }
+        self.check_block(&f.body);
+        self.scopes.pop();
+    }
+
+    fn check_block(&mut self, stmts: &[Stmt]) {
+        self.scopes.push(HashMap::new());
+        for s in stmts {
+            self.check_stmt(s);
+        }
+        self.scopes.pop();
+    }
+
+    fn check_stmt(&mut self, s: &Stmt) {
+        match s {
+            Stmt::Decl { name, ty, init, line } => {
+                if let Some(e) = init {
+                    self.check_expr(e, *line);
+                }
+                self.declare(name, ty.clone());
+            }
+            Stmt::Assign { target, value, line, .. } => {
+                match target {
+                    LValue::Var(n) => {
+                        if self.lookup(n).is_none() {
+                            self.err(
+                                *line,
+                                format!("assignment to undeclared `{n}`"),
+                            );
+                        }
+                    }
+                    LValue::Index { base, indices } => {
+                        self.check_index(base, indices, *line);
+                        for i in indices {
+                            self.check_expr(i, *line);
+                        }
+                    }
+                }
+                self.check_expr(value, *line);
+            }
+            Stmt::If {
+                cond,
+                then_branch,
+                else_branch,
+                line,
+            } => {
+                self.check_expr(cond, *line);
+                self.check_block(then_branch);
+                self.check_block(else_branch);
+            }
+            Stmt::For {
+                init,
+                cond,
+                step,
+                body,
+                line,
+                ..
+            } => {
+                self.scopes.push(HashMap::new());
+                if let Some(s) = init {
+                    self.check_stmt(s);
+                }
+                if let Some(c) = cond {
+                    self.check_expr(c, *line);
+                }
+                if let Some(s) = step {
+                    self.check_stmt(s);
+                }
+                self.check_block(body);
+                self.scopes.pop();
+            }
+            Stmt::While { cond, body, line, .. } => {
+                self.check_expr(cond, *line);
+                self.check_block(body);
+            }
+            Stmt::Return { value, line } => {
+                if let Some(e) = value {
+                    self.check_expr(e, *line);
+                }
+            }
+            Stmt::ExprStmt { expr, line } => self.check_expr(expr, *line),
+        }
+    }
+
+    fn check_index(&mut self, base: &str, indices: &[Expr], line: u32) {
+        match self.lookup(base).cloned() {
+            None => self.err(line, format!("undeclared array `{base}`")),
+            Some(Type::Array(_, dims)) => {
+                if dims.len() != indices.len() {
+                    self.err(
+                        line,
+                        format!(
+                            "`{base}` has rank {}, indexed with {} subscripts",
+                            dims.len(),
+                            indices.len()
+                        ),
+                    );
+                }
+            }
+            Some(Type::Ptr(_)) => {
+                if indices.len() != 1 {
+                    self.err(
+                        line,
+                        format!(
+                            "pointer `{base}` must be indexed with exactly 1 \
+                             subscript"
+                        ),
+                    );
+                }
+            }
+            Some(Type::Scalar(_)) => {
+                self.err(line, format!("scalar `{base}` indexed like an array"))
+            }
+        }
+    }
+
+    fn check_expr(&mut self, e: &Expr, line: u32) {
+        match e {
+            Expr::Var(n) => {
+                if self.lookup(n).is_none() {
+                    self.err(line, format!("undeclared variable `{n}`"));
+                }
+            }
+            Expr::Index { base, indices } => {
+                self.check_index(base, indices, line);
+                for i in indices {
+                    self.check_expr(i, line);
+                }
+            }
+            Expr::Bin { lhs, rhs, .. } => {
+                self.check_expr(lhs, line);
+                self.check_expr(rhs, line);
+            }
+            Expr::Un { operand, .. } | Expr::Cast { operand, .. } => {
+                self.check_expr(operand, line)
+            }
+            Expr::Call { name, args } => {
+                let arity = if BUILTINS_1.contains(&name.as_str()) {
+                    Some(1)
+                } else if BUILTINS_2.contains(&name.as_str()) {
+                    Some(2)
+                } else if name == "printf" {
+                    None // variadic
+                } else if let Some(f) = self.prog.function(name) {
+                    Some(f.params.len())
+                } else {
+                    self.err(line, format!("call to unknown function `{name}`"));
+                    None
+                };
+                if let Some(n) = arity {
+                    if args.len() != n {
+                        self.err(
+                            line,
+                            format!(
+                                "`{name}` expects {n} args, got {}",
+                                args.len()
+                            ),
+                        );
+                    }
+                }
+                for a in args {
+                    self.check_expr(a, line);
+                }
+            }
+            Expr::IntLit(_) | Expr::FloatLit(_) | Expr::StrLit(_) => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::parse;
+
+    fn errs(src: &str) -> Vec<String> {
+        check(&parse(src).unwrap())
+            .into_iter()
+            .map(|e| e.to_string())
+            .collect()
+    }
+
+    #[test]
+    fn clean_program_passes() {
+        let es = errs(
+            "#define N 4\nfloat a[N];\n
+             void f(float *x) { for (int i = 0; i < N; i++) x[i] = 0.0; }\n
+             int main() { f(a); return 0; }",
+        );
+        assert!(es.is_empty(), "{es:?}");
+    }
+
+    #[test]
+    fn undeclared_variable_caught() {
+        let es = errs("int main() { return bogus; }");
+        assert!(es.iter().any(|e| e.contains("bogus")), "{es:?}");
+    }
+
+    #[test]
+    fn unknown_function_caught() {
+        let es = errs("int main() { missing(1); return 0; }");
+        assert!(es.iter().any(|e| e.contains("missing")), "{es:?}");
+    }
+
+    #[test]
+    fn wrong_arity_caught() {
+        let es = errs("int main() { float x = sin(1.0, 2.0); return 0; }");
+        assert!(es.iter().any(|e| e.contains("expects 1")), "{es:?}");
+    }
+
+    #[test]
+    fn rank_mismatch_caught() {
+        let es = errs(
+            "#define N 4\nfloat a[N][N];\nint main() { a[1] = 2.0; return 0; }",
+        );
+        assert!(es.iter().any(|e| e.contains("rank")), "{es:?}");
+    }
+
+    #[test]
+    fn scalar_indexed_caught() {
+        let es = errs("int main() { int x = 0; x[0] = 1; return 0; }");
+        assert!(es.iter().any(|e| e.contains("scalar")), "{es:?}");
+    }
+
+    #[test]
+    fn duplicate_function_caught() {
+        let es = errs("void f() { }\nvoid f() { }\nint main() { return 0; }");
+        assert!(es.iter().any(|e| e.contains("duplicate")), "{es:?}");
+    }
+
+    #[test]
+    fn loop_scoped_decl_visible_in_body_only() {
+        let es = errs(
+            "int main() { for (int i = 0; i < 3; i++) { int j = i; } return 0; }",
+        );
+        assert!(es.is_empty(), "{es:?}");
+        let es2 = errs(
+            "int main() { for (int i = 0; i < 3; i++) { } return i; }",
+        );
+        assert!(es2.iter().any(|e| e.contains('i')), "{es2:?}");
+    }
+}

@@ -1,0 +1,190 @@
+//! Runtime values and environments for the MiniC interpreter.
+
+use crate::util::fnv::FnvMap;
+
+use super::ast::{Scalar, Type};
+use super::MiniCError;
+
+/// A runtime value: scalar or array handle.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    /// Index into the interpreter's array arena.
+    Array(ArrayRef),
+}
+
+/// Handle to an arena-allocated array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrayRef(pub usize);
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64, MiniCError> {
+        match self {
+            Value::Int(v) => Ok(*v as f64),
+            Value::Float(v) => Ok(*v),
+            Value::Array(_) => Err(MiniCError::Runtime(
+                "array used as scalar".into(),
+            )),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64, MiniCError> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            Value::Float(v) => Ok(*v as i64),
+            Value::Array(_) => Err(MiniCError::Runtime(
+                "array used as integer".into(),
+            )),
+        }
+    }
+
+    pub fn truthy(&self) -> Result<bool, MiniCError> {
+        Ok(self.as_f64()? != 0.0)
+    }
+}
+
+/// An array instance: element type, dims, flat f64 storage.
+///
+/// Storage is always f64 — int arrays round on store. This keeps the
+/// arena monomorphic; precision subtleties of f32 are the kernels'
+/// business, the interpreter is a *semantics* oracle.
+#[derive(Debug, Clone)]
+pub struct ArrayObj {
+    pub elem: Scalar,
+    pub dims: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl ArrayObj {
+    pub fn new(elem: Scalar, dims: Vec<usize>) -> Self {
+        let len = dims.iter().product();
+        ArrayObj {
+            elem,
+            dims,
+            data: vec![0.0; len],
+        }
+    }
+
+    /// Flatten a multi-dim index; bounds-checked.
+    pub fn flat_index(&self, idx: &[i64]) -> Result<usize, MiniCError> {
+        if idx.len() != self.dims.len() {
+            return Err(MiniCError::Runtime(format!(
+                "rank mismatch: {} indices into rank-{} array",
+                idx.len(),
+                self.dims.len()
+            )));
+        }
+        let mut flat = 0usize;
+        for (d, (&i, &dim)) in idx.iter().zip(&self.dims).enumerate() {
+            if i < 0 || i as usize >= dim {
+                return Err(MiniCError::Runtime(format!(
+                    "index {i} out of bounds for dim {d} (size {dim})"
+                )));
+            }
+            flat = flat * dim + i as usize;
+        }
+        Ok(flat)
+    }
+}
+
+/// Lexically scoped variable environment.
+///
+/// FNV-hashed maps (§Perf: name resolution is the interpreter's hottest
+/// operation; see util::fnv).
+#[derive(Debug, Default)]
+pub struct Env {
+    scopes: Vec<FnvMap<String, Value>>,
+}
+
+impl Env {
+    pub fn new() -> Self {
+        Env {
+            scopes: vec![FnvMap::default()],
+        }
+    }
+
+    pub fn push(&mut self) {
+        self.scopes.push(FnvMap::default());
+    }
+
+    pub fn pop(&mut self) {
+        self.scopes.pop().expect("scope underflow");
+    }
+
+    pub fn declare(&mut self, name: &str, v: Value) {
+        self.scopes
+            .last_mut()
+            .expect("no scope")
+            .insert(name.to_string(), v);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.scopes.iter().rev().find_map(|s| s.get(name))
+    }
+
+    pub fn set(&mut self, name: &str, v: Value) -> Result<(), MiniCError> {
+        for scope in self.scopes.iter_mut().rev() {
+            if let Some(slot) = scope.get_mut(name) {
+                *slot = v;
+                return Ok(());
+            }
+        }
+        Err(MiniCError::Runtime(format!("assignment to undeclared `{name}`")))
+    }
+}
+
+/// Zero value for a declared type (arrays are allocated by the caller).
+pub fn zero_of(ty: &Type) -> Value {
+    match ty {
+        Type::Scalar(Scalar::Int) => Value::Int(0),
+        Type::Scalar(_) => Value::Float(0.0),
+        Type::Array(..) | Type::Ptr(..) => {
+            unreachable!("arrays allocated via arena")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_scoping_shadows_and_restores() {
+        let mut env = Env::new();
+        env.declare("x", Value::Int(1));
+        env.push();
+        env.declare("x", Value::Int(2));
+        assert_eq!(env.get("x"), Some(&Value::Int(2)));
+        env.pop();
+        assert_eq!(env.get("x"), Some(&Value::Int(1)));
+    }
+
+    #[test]
+    fn env_set_walks_outward() {
+        let mut env = Env::new();
+        env.declare("x", Value::Int(1));
+        env.push();
+        env.set("x", Value::Int(5)).unwrap();
+        env.pop();
+        assert_eq!(env.get("x"), Some(&Value::Int(5)));
+    }
+
+    #[test]
+    fn env_set_undeclared_errors() {
+        let mut env = Env::new();
+        assert!(env.set("nope", Value::Int(0)).is_err());
+    }
+
+    #[test]
+    fn array_flat_index_2d() {
+        let a = ArrayObj::new(Scalar::Float, vec![3, 4]);
+        assert_eq!(a.flat_index(&[0, 0]).unwrap(), 0);
+        assert_eq!(a.flat_index(&[1, 2]).unwrap(), 6);
+        assert_eq!(a.flat_index(&[2, 3]).unwrap(), 11);
+        assert!(a.flat_index(&[3, 0]).is_err());
+        assert!(a.flat_index(&[0, 4]).is_err());
+        assert!(a.flat_index(&[-1, 0]).is_err());
+        assert!(a.flat_index(&[0]).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! Artifact discovery: locate `artifacts/` and read `meta.json`.
+//!
+//! `make artifacts` (the one-time Python AOT step) produces
+//! `artifacts/{tdfir,mriq}.hlo.txt` and `artifacts/meta.json`. Everything
+//! the Rust side needs at run time — paths and sample-test shapes — comes
+//! from here; Python itself is never invoked.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Sample-test shapes for the TDFIR artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TdfirShape {
+    /// Number of filters in the bank.
+    pub m: usize,
+    /// Stream length.
+    pub n: usize,
+    /// Taps per filter.
+    pub k: usize,
+}
+
+/// Sample-test shapes for the MRI-Q artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MriqShape {
+    /// K-space samples.
+    pub k: usize,
+    /// Voxels.
+    pub x: usize,
+}
+
+/// Resolved artifact set.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub tdfir_hlo: PathBuf,
+    pub mriq_hlo: PathBuf,
+    pub tdfir_shape: TdfirShape,
+    pub mriq_shape: MriqShape,
+}
+
+impl Artifacts {
+    /// Locate artifacts under `dir` and parse `meta.json`.
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path).with_context(|| {
+            format!(
+                "reading {meta_path:?} — run `make artifacts` first"
+            )
+        })?;
+        let meta = Json::parse(&text)
+            .with_context(|| format!("parsing {meta_path:?}"))?;
+
+        let need = |path: &[&str]| -> Result<usize> {
+            meta.get(path)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("meta.json missing {path:?}"))
+        };
+        let tdfir_shape = TdfirShape {
+            m: need(&["shapes", "tdfir", "m"])?,
+            n: need(&["shapes", "tdfir", "n"])?,
+            k: need(&["shapes", "tdfir", "k"])?,
+        };
+        let mriq_shape = MriqShape {
+            k: need(&["shapes", "mriq", "k"])?,
+            x: need(&["shapes", "mriq", "x"])?,
+        };
+
+        let tdfir_hlo = dir.join("tdfir.hlo.txt");
+        let mriq_hlo = dir.join("mriq.hlo.txt");
+        for p in [&tdfir_hlo, &mriq_hlo] {
+            if !p.exists() {
+                bail!("missing artifact {p:?} — run `make artifacts`");
+            }
+        }
+        Ok(Artifacts {
+            dir: dir.to_path_buf(),
+            tdfir_hlo,
+            mriq_hlo,
+            tdfir_shape,
+            mriq_shape,
+        })
+    }
+
+    /// Search upward from `start` (usually the cwd) for an `artifacts/`
+    /// directory containing `meta.json`.
+    pub fn discover(start: &Path) -> Result<Artifacts> {
+        let mut cur = Some(start);
+        while let Some(dir) = cur {
+            let candidate = dir.join("artifacts");
+            if candidate.join("meta.json").exists() {
+                return Self::load(&candidate);
+            }
+            cur = dir.parent();
+        }
+        bail!(
+            "no artifacts/ directory found above {start:?} — run `make artifacts`"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_meta(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"shapes":{"tdfir":{"m":8,"n":1024,"k":32},
+                 "mriq":{"k":512,"x":1024,"block_x":128,"block_k":128}}}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("tdfir.hlo.txt"), "HloModule x").unwrap();
+        std::fs::write(dir.join("mriq.hlo.txt"), "HloModule y").unwrap();
+    }
+
+    #[test]
+    fn load_parses_shapes() {
+        let base = std::env::temp_dir().join("fpga_offload_art_test1");
+        let dir = base.join("artifacts");
+        write_meta(&dir);
+        let art = Artifacts::load(&dir).unwrap();
+        assert_eq!(
+            art.tdfir_shape,
+            TdfirShape { m: 8, n: 1024, k: 32 }
+        );
+        assert_eq!(art.mriq_shape, MriqShape { k: 512, x: 1024 });
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn discover_walks_up() {
+        let base = std::env::temp_dir().join("fpga_offload_art_test2");
+        let nested = base.join("a").join("b");
+        std::fs::create_dir_all(&nested).unwrap();
+        write_meta(&base.join("artifacts"));
+        let art = Artifacts::discover(&nested).unwrap();
+        assert!(art.dir.ends_with("artifacts"));
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn missing_artifacts_is_helpful_error() {
+        let base = std::env::temp_dir().join("fpga_offload_art_test3");
+        std::fs::create_dir_all(&base).unwrap();
+        let err = Artifacts::discover(&base).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&base).ok();
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 runtime: load AOT HLO artifacts and execute them via PJRT.
+//!
+//! The `xla` crate wiring follows /opt/xla-example/load_hlo:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. One compiled executable per model
+//! variant, cached for the process lifetime. Python is build-time only.
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod sampletest;
+
+pub use artifacts::{Artifacts, MriqShape, TdfirShape};
+pub use pjrt::{Executable, Runtime, TensorF32};
+pub use sampletest::{run_app, run_mriq, run_tdfir, SampleRun};

@@ -1,0 +1,158 @@
+//! PJRT wrapper: load HLO-text artifacts and execute them on the CPU
+//! client.
+//!
+//! This is the only place the `xla` crate is touched. The interchange
+//! format is HLO *text* (see python/compile/aot.py — xla_extension 0.5.1
+//! rejects jax≥0.5 serialized protos). Executables are compiled once and
+//! cached; execution is synchronous on the caller thread.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A compiled XLA executable plus its source path (for diagnostics).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Path of the HLO text this was compiled from.
+    pub source: PathBuf,
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs; returns the flattened output
+    /// tensors (the lowering wraps outputs in a 1-level tuple, which is
+    /// unwrapped here).
+    pub fn run_f32(&self, inputs: &[TensorF32]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(TensorF32::to_literal)
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {:?}", self.source))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = out.to_tuple().context("untupling result")?;
+        parts
+            .iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+/// A host-side f32 tensor: flat data + dims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl TensorF32 {
+    pub fn new(data: Vec<f32>, dims: Vec<i64>) -> Self {
+        debug_assert_eq!(
+            data.len() as i64,
+            dims.iter().product::<i64>(),
+            "data length must match dims product"
+        );
+        TensorF32 { data, dims }
+    }
+
+    pub fn vec1(data: Vec<f32>) -> Self {
+        let n = data.len() as i64;
+        TensorF32::new(data, vec![n])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&self.data)
+            .reshape(&self.dims)
+            .context("reshaping input literal")?)
+    }
+}
+
+/// Owns the PJRT client and a cache of compiled executables.
+///
+/// `Mutex` (not `RwLock`) around the cache: compilation writes are rare,
+/// lookups are cheap clones of `Arc`-like handles — but the xla crate's
+/// executable is not `Clone`, so we key by path and return `&Executable`
+/// through a stable `Box`. Thread-safe so the verification environment's
+/// worker threads can share one runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, &'static Executable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it (cached per path).
+    ///
+    /// The returned reference is `'static` because compiled executables are
+    /// intentionally leaked: they live for the process lifetime (there are
+    /// at most a handful of model variants) and PJRT teardown order with
+    /// the client is finicky otherwise.
+    pub fn load(&self, path: &Path) -> Result<&'static Executable> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(path) {
+            return Ok(exe);
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .with_context(|| format!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        let boxed: &'static Executable = Box::leak(Box::new(Executable {
+            exe,
+            source: path.to_path_buf(),
+        }));
+        cache.insert(path.to_path_buf(), boxed);
+        Ok(boxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_check() {
+        let t = TensorF32::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.dims, vec![2, 2]);
+        assert_eq!(t.data.len(), 4);
+    }
+
+    #[test]
+    fn vec1_dims() {
+        let t = TensorF32::vec1(vec![1.0; 7]);
+        assert_eq!(t.dims, vec![7]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "data length")]
+    fn tensor_shape_mismatch_panics() {
+        let _ = TensorF32::new(vec![1.0; 3], vec![2, 2]);
+    }
+}

@@ -1,0 +1,151 @@
+//! Sample tests: the paper's per-application performance/correctness
+//! probes (§4: "the sample processing specified by the application to be
+//! accelerated is performed").
+//!
+//! Each sample test generates deterministic input data, executes the
+//! AOT-compiled HLO artifact (JAX model wrapping the Pallas kernel) on the
+//! PJRT runtime, and validates the numerics against the in-crate Rust
+//! reference implementation. A passing sample test is the proof that the
+//! L1→L2→L3 stack composes: the bytes the coordinator measures are the
+//! bytes the paper's offloaded kernel would produce.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use super::artifacts::Artifacts;
+use super::pjrt::{Runtime, TensorF32};
+use crate::workloads::{data, reference};
+
+/// Result of one sample-test execution.
+#[derive(Debug, Clone)]
+pub struct SampleRun {
+    /// Which application.
+    pub app: &'static str,
+    /// Wall-clock of the PJRT execution only (excludes data generation).
+    pub exec_time: Duration,
+    /// Max |kernel - reference| over all outputs.
+    pub max_abs_err: f64,
+    /// Number of output scalars checked.
+    pub checked: usize,
+}
+
+/// Tolerance for kernel-vs-reference agreement. f32 accumulation order
+/// differs between XLA and the Rust reference, so exact equality is not
+/// expected; the bound is scaled generously above observed error.
+pub const TOLERANCE: f64 = 5e-3;
+
+/// Run the TDFIR sample test once.
+pub fn run_tdfir(rt: &Runtime, art: &Artifacts, seed: u64) -> Result<SampleRun> {
+    let s = art.tdfir_shape;
+    let inp = data::tdfir_inputs(s, seed);
+    let exe = rt.load(&art.tdfir_hlo)?;
+
+    let tensors = [
+        TensorF32::new(inp.xr.clone(), vec![s.m as i64, s.n as i64]),
+        TensorF32::new(inp.xi.clone(), vec![s.m as i64, s.n as i64]),
+        TensorF32::new(inp.hr.clone(), vec![s.m as i64, s.k as i64]),
+        TensorF32::new(inp.hi.clone(), vec![s.m as i64, s.k as i64]),
+    ];
+    let start = Instant::now();
+    let outs = exe.run_f32(&tensors)?;
+    let exec_time = start.elapsed();
+    ensure!(outs.len() == 2, "tdfir artifact returned {} outputs", outs.len());
+
+    let (er, ei) = reference::tdfir(&inp.xr, &inp.xi, &inp.hr, &inp.hi, s.m, s.n, s.k);
+    let err_r = max_abs_diff(&outs[0], &er);
+    let err_i = max_abs_diff(&outs[1], &ei);
+    let max_abs_err = err_r.max(err_i);
+    ensure!(
+        max_abs_err < TOLERANCE,
+        "tdfir sample test numerics diverged: max err {max_abs_err}"
+    );
+    Ok(SampleRun {
+        app: "tdfir",
+        exec_time,
+        max_abs_err,
+        checked: er.len() + ei.len(),
+    })
+}
+
+/// Run the MRI-Q sample test once.
+pub fn run_mriq(rt: &Runtime, art: &Artifacts, seed: u64) -> Result<SampleRun> {
+    let s = art.mriq_shape;
+    let inp = data::mriq_inputs(s, seed);
+    let exe = rt.load(&art.mriq_hlo)?;
+
+    let kd = s.k as i64;
+    let xd = s.x as i64;
+    let tensors = [
+        TensorF32::new(inp.kx.clone(), vec![kd]),
+        TensorF32::new(inp.ky.clone(), vec![kd]),
+        TensorF32::new(inp.kz.clone(), vec![kd]),
+        TensorF32::new(inp.x.clone(), vec![xd]),
+        TensorF32::new(inp.y.clone(), vec![xd]),
+        TensorF32::new(inp.z.clone(), vec![xd]),
+        TensorF32::new(inp.phir.clone(), vec![kd]),
+        TensorF32::new(inp.phii.clone(), vec![kd]),
+    ];
+    let start = Instant::now();
+    let outs = exe.run_f32(&tensors)?;
+    let exec_time = start.elapsed();
+    ensure!(outs.len() == 2, "mriq artifact returned {} outputs", outs.len());
+
+    let (eqr, eqi) = reference::mriq(
+        &inp.kx, &inp.ky, &inp.kz, &inp.x, &inp.y, &inp.z, &inp.phir,
+        &inp.phii,
+    );
+    let err_r = max_abs_diff(&outs[0], &eqr);
+    let err_i = max_abs_diff(&outs[1], &eqi);
+    let max_abs_err = err_r.max(err_i);
+    ensure!(
+        max_abs_err < TOLERANCE * 10.0, // K=512-term trig sums accumulate more
+        "mriq sample test numerics diverged: max err {max_abs_err}"
+    );
+    Ok(SampleRun {
+        app: "mriq",
+        exec_time,
+        max_abs_err,
+        checked: eqr.len() + eqi.len(),
+    })
+}
+
+/// Dispatch by application name (as used by the CLI and the verification
+/// environment).
+pub fn run_app(
+    rt: &Runtime,
+    art: &Artifacts,
+    app: &str,
+    seed: u64,
+) -> Result<SampleRun> {
+    match app {
+        "tdfir" => run_tdfir(rt, art, seed),
+        "mriq" => run_mriq(rt, art, seed),
+        other => anyhow::bail!("unknown sample-test app {other:?}"),
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "output length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (*x as f64 - *y as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_abs_diff_basics() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn max_abs_diff_len_mismatch() {
+        max_abs_diff(&[1.0], &[1.0, 2.0]);
+    }
+}

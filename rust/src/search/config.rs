@@ -1,0 +1,113 @@
+//! Search configuration: the paper's experiment knobs (§5.1.2).
+
+/// Tunable parameters of the offload search.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchConfig {
+    /// Narrow to the top **A** loops by arithmetic intensity (paper: 5).
+    pub top_a: usize,
+    /// Loop expansion factor **B** applied to every kernel (paper: 1 —
+    /// "I confirm the effect of FPGA offloading with OpenCL without
+    /// expansions").
+    pub unroll: u32,
+    /// Narrow to the top **C** loops by resource efficiency (paper: 3).
+    pub top_c: usize,
+    /// Singles measured in the first round (paper: 3 — the top-C loops).
+    pub first_round: usize,
+    /// Total measured offload patterns **D** across rounds (paper: 4).
+    pub max_patterns: usize,
+    /// Combined-utilization cap for combination patterns (paper: "if it
+    /// does not fit within the upper limit, the combination pattern is
+    /// not generated").
+    pub resource_cap: f64,
+    /// Build machines in the verification environment (paper Fig. 3: one
+    /// verification machine).
+    pub build_machines: usize,
+    /// Modeled sample-test measurement time per pattern, seconds.
+    pub measure_seconds: f64,
+    /// Functionally verify each measured pattern via the interpreter
+    /// (numeric equivalence of the offloaded program).
+    pub verify_numerics: bool,
+}
+
+impl Default for SearchConfig {
+    /// The paper's §5.1.2 conditions.
+    fn default() -> Self {
+        SearchConfig {
+            top_a: 5,
+            unroll: 1,
+            top_c: 3,
+            first_round: 3,
+            max_patterns: 4,
+            resource_cap: 1.0,
+            build_machines: 1,
+            measure_seconds: 120.0,
+            verify_numerics: true,
+        }
+    }
+}
+
+impl SearchConfig {
+    /// Validate the invariants the funnel relies on.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.top_a == 0 {
+            return Err("top_a must be >= 1".into());
+        }
+        if self.top_c == 0 {
+            return Err("top_c must be >= 1".into());
+        }
+        if self.unroll == 0 {
+            return Err("unroll must be >= 1".into());
+        }
+        if self.first_round == 0 || self.first_round > self.max_patterns {
+            return Err(
+                "first_round must be in 1..=max_patterns".into()
+            );
+        }
+        if self.top_c < self.first_round {
+            return Err("first_round cannot exceed top_c".into());
+        }
+        if !(0.0..=1.0).contains(&self.resource_cap) {
+            return Err("resource_cap must be in [0, 1]".into());
+        }
+        if self.build_machines == 0 {
+            return Err("need at least one build machine".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let c = SearchConfig::default();
+        assert_eq!(c.top_a, 5);
+        assert_eq!(c.unroll, 1);
+        assert_eq!(c.top_c, 3);
+        assert_eq!(c.first_round, 3);
+        assert_eq!(c.max_patterns, 4);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let base = SearchConfig::default();
+        for bad in [
+            SearchConfig { top_a: 0, ..base.clone() },
+            SearchConfig { top_c: 0, ..base.clone() },
+            SearchConfig { unroll: 0, ..base.clone() },
+            SearchConfig { first_round: 0, ..base.clone() },
+            SearchConfig {
+                first_round: 9,
+                max_patterns: 4,
+                ..base.clone()
+            },
+            SearchConfig { resource_cap: 1.5, ..base.clone() },
+            SearchConfig { build_machines: 0, ..base.clone() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! The narrowing funnel (paper Fig. 2): loops → offloadable → top-A by
+//! arithmetic intensity → OpenCL generation + pre-compile → top-C by
+//! resource efficiency.
+//!
+//! The funnel's entire purpose is measurement economy: a full FPGA compile
+//! is ~3 h, so the set that reaches actual measurement must be tiny, and
+//! everything before that line must come from cheap analysis (profiling,
+//! one-minute pre-compiles).
+
+use crate::analysis::Analysis;
+use crate::codegen::{split, unroll, SplitResult};
+use crate::hls::{precompile, Device, PrecompileReport};
+use crate::minic::ast::LoopId;
+use crate::minic::Program;
+
+use super::config::SearchConfig;
+use super::result::FunnelTrace;
+
+/// A candidate that survived the funnel: its split (with unrolled kernel)
+/// and pre-compile report.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub split: SplitResult,
+    pub report: PrecompileReport,
+}
+
+impl Candidate {
+    pub fn loop_id(&self) -> LoopId {
+        self.split.kernel.loop_id
+    }
+}
+
+/// Funnel failure.
+#[derive(Debug, Clone)]
+pub enum FunnelError {
+    Config(String),
+    NoCandidates,
+}
+
+impl std::fmt::Display for FunnelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FunnelError::Config(msg) => write!(f, "bad config: {msg}"),
+            FunnelError::NoCandidates => {
+                write!(f, "no offloadable loops survived the funnel")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FunnelError {}
+
+/// Run the funnel. Returns the surviving candidates (top-C, ordered by
+/// resource efficiency, descending) and the trace for reporting.
+pub fn run(
+    prog: &Program,
+    analysis: &Analysis,
+    cfg: &SearchConfig,
+    dev: &Device,
+) -> Result<(Vec<Candidate>, FunnelTrace), FunnelError> {
+    cfg.validate().map_err(FunnelError::Config)?;
+
+    let total_loops = analysis.loops.len();
+    let offloadable: Vec<LoopId> = analysis
+        .loops
+        .iter()
+        .filter(|l| l.candidate())
+        .map(|l| l.id())
+        .collect();
+
+    // Stage 1: arithmetic-intensity narrowing (top A).
+    let ranked = analysis.ranked_candidates();
+    let top_a_loops: Vec<LoopId> = ranked
+        .iter()
+        .take(cfg.top_a)
+        .map(|l| l.id())
+        .collect();
+
+    // Stage 2: OpenCL generation + pre-compile for each top-A loop.
+    let mut survivors: Vec<Candidate> = Vec::new();
+    let mut reports: Vec<PrecompileReport> = Vec::new();
+    for al in ranked.iter().take(cfg.top_a) {
+        let Ok(mut sp) = split(prog, al) else {
+            continue; // split failure = drop from funnel (kept in trace)
+        };
+        // Apply the expansion factor B.
+        match unroll(&sp.kernel, cfg.unroll) {
+            Ok(k) => {
+                sp.kernel_fn.body = vec![k.body.clone()];
+                sp.kernel = k;
+            }
+            Err(_) => {
+                // Unrollable shape with B > 1: keep the un-expanded kernel
+                // (the paper's expansion is best-effort).
+            }
+        }
+        let intensity = al.intensity.as_ref().expect("candidate");
+        let report = precompile(&sp.kernel, intensity, dev);
+        reports.push(report.clone());
+        if report.fits {
+            survivors.push(Candidate { split: sp, report });
+        }
+    }
+
+    // Stage 3: resource-efficiency narrowing (top C).
+    survivors.sort_by(|a, b| {
+        b.report
+            .resource_efficiency
+            .partial_cmp(&a.report.resource_efficiency)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.loop_id().cmp(&b.loop_id()))
+    });
+    survivors.truncate(cfg.top_c);
+
+    if survivors.is_empty() {
+        return Err(FunnelError::NoCandidates);
+    }
+
+    let trace = FunnelTrace {
+        total_loops,
+        offloadable,
+        top_a: top_a_loops,
+        reports,
+        top_c: survivors.iter().map(Candidate::loop_id).collect(),
+    };
+    Ok((survivors, trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::hls::ARRIA10_GX;
+    use crate::minic::parse;
+
+    /// Six loops with clearly graded intensity so the funnel's ordering is
+    /// deterministic; one blocked loop.
+    const SRC: &str = r#"
+#define N 1024
+float a[N]; float b[N]; float c[N]; float d[N];
+float acc;
+void audit() { }
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.001; }                // L0 init
+    for (int i = 0; i < N; i++) { b[i] = a[i] + 1.0; }               // L1 cheap
+    for (int i = 0; i < N; i++) { c[i] = sin(a[i]) * cos(a[i]); }    // L2 trig
+    for (int i = 0; i < N; i++) {                                    // L3 dense
+        d[i] = sin(a[i]) * cos(b[i]) + sqrt(a[i] * a[i] + b[i] * b[i] + 1.0);
+    }
+    for (int i = 0; i < N; i++) { acc += d[i]; }                     // L4 reduce
+    for (int i = 0; i < N; i++) { audit(); }                         // L5 blocked
+    return 0;
+}"#;
+
+    fn run_funnel(cfg: &SearchConfig) -> (Vec<Candidate>, FunnelTrace) {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        run(&prog, &an, cfg, &ARRIA10_GX).unwrap()
+    }
+
+    #[test]
+    fn funnel_stage_sizes_match_config() {
+        let cfg = SearchConfig {
+            top_a: 4,
+            top_c: 2,
+            first_round: 2,
+            max_patterns: 3,
+            ..Default::default()
+        };
+        let (cands, trace) = run_funnel(&cfg);
+        assert_eq!(trace.total_loops, 6);
+        assert_eq!(trace.offloadable.len(), 5); // L5 blocked
+        assert_eq!(trace.top_a.len(), 4);
+        assert_eq!(cands.len(), 2);
+        assert_eq!(trace.top_c.len(), 2);
+    }
+
+    #[test]
+    fn blocked_loop_never_survives() {
+        let (cands, trace) = run_funnel(&SearchConfig::default());
+        assert!(!trace.offloadable.contains(&LoopId(5)));
+        assert!(cands.iter().all(|c| c.loop_id() != LoopId(5)));
+    }
+
+    #[test]
+    fn survivors_sorted_by_efficiency() {
+        let (cands, _) = run_funnel(&SearchConfig::default());
+        for w in cands.windows(2) {
+            assert!(
+                w[0].report.resource_efficiency
+                    >= w[1].report.resource_efficiency
+            );
+        }
+    }
+
+    #[test]
+    fn trig_loops_reach_top() {
+        let (cands, _) = run_funnel(&SearchConfig::default());
+        let ids: Vec<LoopId> = cands.iter().map(Candidate::loop_id).collect();
+        assert!(
+            ids.contains(&LoopId(2)) || ids.contains(&LoopId(3)),
+            "{ids:?}"
+        );
+    }
+
+    #[test]
+    fn unroll_factor_applied() {
+        let cfg = SearchConfig {
+            unroll: 4,
+            ..Default::default()
+        };
+        let (cands, _) = run_funnel(&cfg);
+        assert!(cands.iter().all(|c| c.split.kernel.unroll == 4));
+    }
+
+    #[test]
+    fn no_candidates_is_error() {
+        let src = r#"void log_x() { }
+int main() { for (int i = 0; i < 4; i++) { log_x(); } return 0; }"#;
+        let prog = parse(src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let err = run(&prog, &an, &SearchConfig::default(), &ARRIA10_GX);
+        assert!(matches!(err, Err(FunnelError::NoCandidates)));
+    }
+}

@@ -1,0 +1,275 @@
+//! GA search baseline — the previous work's strategy ([32], automatic GPU
+//! offloading), implemented for comparison benches.
+//!
+//! [32] evolves offload bitmasks over *all* processable loops with many
+//! performance measurements. That is affordable when a pattern compiles in
+//! minutes (GPU) and ruinous at ~3 h per FPGA compile — the gap the
+//! paper's funnel exists to close. `ga_vs_funnel` benchmarks exactly this:
+//! measurements-to-solution and modeled wall-clock for both strategies.
+
+use crate::analysis::Analysis;
+use crate::codegen::{split, SplitResult};
+use crate::cpu::CpuModel;
+use crate::fpga::{self, simulate};
+use crate::hls::{estimate, full_compile_seconds, Device, ResourceEstimate};
+use crate::minic::ast::LoopId;
+use crate::minic::Program;
+use crate::util::rng::Pcg32;
+
+/// GA hyper-parameters (matched to [32]'s modest settings).
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub crossover_rate: f64,
+    pub mutation_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        GaConfig {
+            population: 8,
+            generations: 5,
+            crossover_rate: 0.9,
+            mutation_rate: 0.05,
+            seed: 0xf96a,
+        }
+    }
+}
+
+/// GA outcome.
+#[derive(Debug, Clone)]
+pub struct GaResult {
+    pub best_loops: Vec<LoopId>,
+    pub best_speedup: f64,
+    /// Distinct patterns whose fitness was measured (each would be a ~3 h
+    /// FPGA compile).
+    pub measurements: usize,
+    /// Modeled wall-clock to run those compiles sequentially, seconds.
+    pub modeled_wall_clock_s: f64,
+    /// Best speedup after each generation (convergence curve).
+    pub history: Vec<f64>,
+}
+
+/// Run the GA baseline over all offloadable candidate loops.
+pub fn run(
+    prog: &Program,
+    analysis: &Analysis,
+    cfg: &GaConfig,
+    cpu: &CpuModel,
+    dev: &Device,
+) -> GaResult {
+    // Gene space: every offloadable candidate (no funnel narrowing).
+    let cands: Vec<(LoopId, SplitResult)> = analysis
+        .ranked_candidates()
+        .into_iter()
+        .filter_map(|al| split(prog, al).ok().map(|s| (al.id(), s)))
+        .collect();
+    let n = cands.len();
+    if n == 0 {
+        return GaResult {
+            best_loops: Vec::new(),
+            best_speedup: 1.0,
+            measurements: 0,
+            modeled_wall_clock_s: 0.0,
+            history: Vec::new(),
+        };
+    }
+
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut evaluated: std::collections::HashMap<u64, f64> =
+        std::collections::HashMap::new();
+    let mut compile_s_total = 0.0;
+
+    let fitness = |mask: u64,
+                       evaluated: &mut std::collections::HashMap<u64, f64>,
+                       compile_s_total: &mut f64|
+     -> f64 {
+        if let Some(f) = evaluated.get(&mask) {
+            return *f;
+        }
+        let kernels: Vec<_> = (0..n)
+            .filter(|b| mask & (1 << b) != 0)
+            .map(|b| cands[b].1.kernel.clone())
+            .collect();
+        let f = if kernels.is_empty() {
+            1.0 // all-CPU
+        } else {
+            match simulate(analysis, &kernels, cpu, dev) {
+                Ok(t) => t.speedup,
+                Err(fpga::SimError::OverlappingLoops(..))
+                | Err(fpga::SimError::DoesNotFit) => 0.0,
+                Err(fpga::SimError::ColdLoop(_)) => 0.0,
+            }
+        };
+        // Every *new* measured pattern costs a full compile.
+        if !kernels.is_empty() && f > 0.0 {
+            let combined = kernels
+                .iter()
+                .map(estimate)
+                .fold(ResourceEstimate::default(), |a, e| a.add(&e));
+            *compile_s_total += full_compile_seconds(&combined, dev);
+        }
+        evaluated.insert(mask, f);
+        f
+    };
+
+    // Init population: random masks with 1–2 bits set.
+    let mut pop: Vec<u64> = (0..cfg.population)
+        .map(|_| {
+            let mut m = 1u64 << rng.index(n);
+            if rng.chance(0.5) {
+                m |= 1 << rng.index(n);
+            }
+            m
+        })
+        .collect();
+
+    let mut best_mask = 0u64;
+    let mut best_fit = 1.0f64;
+    let mut history = Vec::new();
+
+    for _gen in 0..cfg.generations {
+        let fits: Vec<f64> = pop
+            .iter()
+            .map(|&m| fitness(m, &mut evaluated, &mut compile_s_total))
+            .collect();
+        for (m, f) in pop.iter().zip(&fits) {
+            if *f > best_fit {
+                best_fit = *f;
+                best_mask = *m;
+            }
+        }
+        history.push(best_fit);
+
+        // Tournament selection + single-point crossover + mutation.
+        let mut next = Vec::with_capacity(pop.len());
+        while next.len() < pop.len() {
+            let pick = |rng: &mut Pcg32| {
+                let a = rng.index(pop.len());
+                let b = rng.index(pop.len());
+                if fits[a] >= fits[b] {
+                    pop[a]
+                } else {
+                    pop[b]
+                }
+            };
+            let p1 = pick(&mut rng);
+            let p2 = pick(&mut rng);
+            let mut child = if rng.chance(cfg.crossover_rate) && n > 1 {
+                let point = 1 + rng.index(n - 1);
+                let low = (1u64 << point) - 1;
+                (p1 & low) | (p2 & !low)
+            } else {
+                p1
+            };
+            for b in 0..n {
+                if rng.chance(cfg.mutation_rate) {
+                    child ^= 1 << b;
+                }
+            }
+            next.push(child);
+        }
+        pop = next;
+    }
+    // Final evaluation pass.
+    for &m in &pop {
+        let f = fitness(m, &mut evaluated, &mut compile_s_total);
+        if f > best_fit {
+            best_fit = f;
+            best_mask = m;
+        }
+    }
+    history.push(best_fit);
+
+    let best_loops: Vec<LoopId> = (0..n)
+        .filter(|b| best_mask & (1 << b) != 0)
+        .map(|b| cands[b].0)
+        .collect();
+    GaResult {
+        best_loops,
+        best_speedup: best_fit,
+        measurements: evaluated.len(),
+        modeled_wall_clock_s: compile_s_total,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::cpu::XEON_BRONZE_3104;
+    use crate::hls::ARRIA10_GX;
+    use crate::minic::parse;
+    use crate::search::{measure, SearchConfig};
+
+    const SRC: &str = "
+#define N 2048
+#define REP 16
+float sig[N]; float o1[N]; float o2[N];
+int main() {
+    for (int i = 0; i < N; i++) { sig[i] = i * 0.001 - 1.0; }
+    for (int r = 0; r < REP; r++) {
+        for (int i = 0; i < N; i++) {
+            o1[i] = sin(sig[i]) * cos(sig[i]) + sqrt(sig[i] * sig[i] + 1.0);
+        }
+    }
+    for (int i = 0; i < N; i++) { o2[i] = sqrt(o1[i] + 2.0); }
+    return 0;
+}";
+
+    #[test]
+    fn ga_finds_a_win_but_pays_many_measurements() {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let ga = run(
+            &prog,
+            &an,
+            &GaConfig::default(),
+            &XEON_BRONZE_3104,
+            &ARRIA10_GX,
+        );
+        assert!(ga.best_speedup > 1.0, "{ga:?}");
+
+        let funnel_sol = measure::search(
+            "t",
+            &prog,
+            &an,
+            &SearchConfig::default(),
+            &XEON_BRONZE_3104,
+            &ARRIA10_GX,
+        )
+        .unwrap();
+        // The funnel reaches comparable quality with far fewer
+        // measurements — the paper's core claim.
+        assert!(ga.measurements > funnel_sol.measurements.len());
+        assert!(
+            funnel_sol.speedup() >= ga.best_speedup * 0.8,
+            "funnel {:.2} vs ga {:.2}",
+            funnel_sol.speedup(),
+            ga.best_speedup
+        );
+    }
+
+    #[test]
+    fn ga_deterministic_per_seed() {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let a = run(&prog, &an, &GaConfig::default(), &XEON_BRONZE_3104, &ARRIA10_GX);
+        let b = run(&prog, &an, &GaConfig::default(), &XEON_BRONZE_3104, &ARRIA10_GX);
+        assert_eq!(a.best_loops, b.best_loops);
+        assert_eq!(a.measurements, b.measurements);
+    }
+
+    #[test]
+    fn ga_history_monotone() {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let ga = run(&prog, &an, &GaConfig::default(), &XEON_BRONZE_3104, &ARRIA10_GX);
+        for w in ga.history.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! The offload search — the paper's contribution (§3.3, Fig. 2).
+//!
+//! * [`config`] — the A/B/C/D knobs from §5.1.2.
+//! * [`funnel`] — intensity → pre-compile → resource-efficiency narrowing.
+//! * [`patterns`] — single + combination pattern generation with the
+//!   resource-cap rule.
+//! * [`measure`] — the verification environment: worker-pool measurement,
+//!   two rounds, best-pattern selection, automation-time accounting.
+//! * [`ga`] — the previous work's GA strategy [32], as the comparison
+//!   baseline.
+
+pub mod config;
+pub mod funnel;
+pub mod ga;
+pub mod measure;
+pub mod patterns;
+pub mod result;
+
+pub use config::SearchConfig;
+pub use funnel::{Candidate, FunnelError};
+pub use ga::{GaConfig, GaResult};
+pub use measure::{search, SearchError};
+pub use result::{FunnelTrace, OffloadSolution, PatternMeasurement};

@@ -1,0 +1,244 @@
+//! Offload-pattern generation (paper §4).
+//!
+//! Round 1: single-loop patterns for the top-C candidates ("in the first
+//! measurement, the implementation generates patterns within D").
+//! Round 2: combinations of the singles that actually accelerated ("if #1
+//! and #3 offloading can be accelerated, the implementation generates a
+//! pattern with both #1 and #3 offloaded"), skipping combinations whose
+//! summed resources exceed the device ("if it does not fit within the
+//! upper limit, the combination pattern is not generated") and pairs of
+//! loops that nest one another.
+
+use crate::analysis::Analysis;
+use crate::fpga::subtree_ids;
+use crate::hls::{Device, ResourceEstimate};
+use crate::minic::ast::LoopId;
+
+use super::config::SearchConfig;
+use super::funnel::Candidate;
+
+/// A pattern: indices into the candidate list.
+pub type Pattern = Vec<usize>;
+
+/// Round-1 single-loop patterns (at most `first_round`).
+pub fn singles(cands: &[Candidate], cfg: &SearchConfig) -> Vec<Pattern> {
+    (0..cands.len().min(cfg.first_round)).map(|i| vec![i]).collect()
+}
+
+/// Round-2 combination patterns.
+///
+/// `accelerated` holds (candidate index, measured speedup) for the singles
+/// that beat the CPU. Combinations are ranked by the sum of their parts'
+/// speedups (the greedy prior: combine the best) and truncated to the
+/// remaining measurement budget.
+pub fn combinations(
+    cands: &[Candidate],
+    accelerated: &[(usize, f64)],
+    analysis: &Analysis,
+    cfg: &SearchConfig,
+    dev: &Device,
+    budget: usize,
+) -> Vec<Pattern> {
+    if accelerated.len() < 2 || budget == 0 {
+        return Vec::new();
+    }
+    let idxs: Vec<usize> = accelerated.iter().map(|(i, _)| *i).collect();
+    let mut combos: Vec<(f64, Pattern)> = Vec::new();
+
+    // All subsets of size >= 2 (accelerated set is tiny: <= top_c).
+    let n = idxs.len();
+    for mask in 1u32..(1 << n) {
+        if mask.count_ones() < 2 {
+            continue;
+        }
+        let subset: Pattern = (0..n)
+            .filter(|b| mask & (1 << b) != 0)
+            .map(|b| idxs[b])
+            .collect();
+        if !disjoint(&subset, cands, analysis) {
+            continue;
+        }
+        if !fits(&subset, cands, dev, cfg.resource_cap) {
+            continue;
+        }
+        let score: f64 = subset
+            .iter()
+            .map(|i| {
+                accelerated
+                    .iter()
+                    .find(|(j, _)| j == i)
+                    .map(|(_, s)| *s)
+                    .unwrap_or(0.0)
+            })
+            .sum();
+        combos.push((score, subset));
+    }
+
+    combos.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.len().cmp(&b.1.len()))
+    });
+    combos.into_iter().take(budget).map(|(_, p)| p).collect()
+}
+
+/// No loop in the pattern may be nested inside another.
+pub fn disjoint(
+    pattern: &[usize],
+    cands: &[Candidate],
+    analysis: &Analysis,
+) -> bool {
+    let ids: Vec<LoopId> = pattern.iter().map(|&i| cands[i].loop_id()).collect();
+    for &i in pattern {
+        let sub = subtree_ids(analysis, cands[i].loop_id());
+        for id in &ids {
+            if *id != cands[i].loop_id() && sub.contains(id) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Combined estimate fits under the resource cap.
+pub fn fits(
+    pattern: &[usize],
+    cands: &[Candidate],
+    dev: &Device,
+    cap: f64,
+) -> bool {
+    let combined = pattern
+        .iter()
+        .map(|&i| cands[i].report.estimate)
+        .fold(ResourceEstimate::default(), |acc, e| acc.add(&e));
+    combined.utilization(dev).max() <= cap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::hls::ARRIA10_GX;
+    use crate::minic::parse;
+    use crate::search::funnel;
+
+    const SRC: &str = "
+#define N 512
+float a[N]; float b[N]; float c[N]; float d[N];
+int main() {
+    for (int i = 0; i < N; i++) { b[i] = sin(a[i]) + 1.0; }   // L0
+    for (int i = 0; i < N; i++) { c[i] = cos(a[i]) * 2.0; }   // L1
+    for (int i = 0; i < N; i++) { d[i] = sqrt(a[i] + 4.0); }  // L2
+    return 0;
+}";
+
+    fn setup() -> (Vec<Candidate>, Analysis) {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let (cands, _) =
+            funnel::run(&prog, &an, &SearchConfig::default(), &ARRIA10_GX)
+                .unwrap();
+        (cands, an)
+    }
+
+    #[test]
+    fn singles_respect_first_round() {
+        let (cands, _) = setup();
+        let cfg = SearchConfig {
+            first_round: 2,
+            max_patterns: 3,
+            top_c: 3,
+            ..Default::default()
+        };
+        let s = singles(&cands, &cfg);
+        assert_eq!(s, vec![vec![0], vec![1]]);
+    }
+
+    #[test]
+    fn combos_require_two_accelerated() {
+        let (cands, an) = setup();
+        let cfg = SearchConfig::default();
+        let combos = combinations(
+            &cands,
+            &[(0, 2.0)],
+            &an,
+            &cfg,
+            &ARRIA10_GX,
+            4,
+        );
+        assert!(combos.is_empty());
+    }
+
+    #[test]
+    fn combos_ranked_and_budgeted() {
+        let (cands, an) = setup();
+        let cfg = SearchConfig::default();
+        let acc = [(0usize, 3.0), (1usize, 2.0), (2usize, 1.5)];
+        let combos =
+            combinations(&cands, &acc, &an, &cfg, &ARRIA10_GX, 1);
+        assert_eq!(combos.len(), 1);
+        // Best combo should include the two highest-speedup singles, or
+        // all three if it scores higher (sum 6.5 > 5.0) and fits.
+        assert!(combos[0].contains(&0));
+        assert!(combos[0].len() >= 2);
+    }
+
+    #[test]
+    fn zero_budget_no_combos() {
+        let (cands, an) = setup();
+        let cfg = SearchConfig::default();
+        let acc = [(0usize, 3.0), (1usize, 2.0)];
+        assert!(
+            combinations(&cands, &acc, &an, &cfg, &ARRIA10_GX, 0)
+                .is_empty()
+        );
+    }
+
+    #[test]
+    fn nested_loops_not_combined() {
+        let src = "
+#define N 256
+float a[N]; float b[N];
+int main() {
+    for (int r = 0; r < 8; r++) {                       // L0
+        for (int i = 0; i < N; i++) {                   // L1 nested in L0
+            b[i] = sin(a[i]) * cos(a[i]);
+        }
+    }
+    return 0;
+}";
+        let prog = parse(src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let (cands, _) =
+            funnel::run(&prog, &an, &SearchConfig::default(), &ARRIA10_GX)
+                .unwrap();
+        // If both L0 and L1 survive the funnel, they must not combine.
+        if cands.len() >= 2 {
+            let acc: Vec<(usize, f64)> =
+                (0..cands.len()).map(|i| (i, 2.0)).collect();
+            let combos = combinations(
+                &cands,
+                &acc,
+                &an,
+                &SearchConfig::default(),
+                &ARRIA10_GX,
+                4,
+            );
+            assert!(combos.is_empty(), "{combos:?}");
+        }
+    }
+
+    #[test]
+    fn resource_cap_prunes() {
+        let (cands, an) = setup();
+        let cfg = SearchConfig {
+            resource_cap: 0.000_001, // nothing fits together
+            ..Default::default()
+        };
+        let acc = [(0usize, 2.0), (1usize, 2.0)];
+        assert!(
+            combinations(&cands, &acc, &an, &cfg, &ARRIA10_GX, 4)
+                .is_empty()
+        );
+    }
+}

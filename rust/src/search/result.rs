@@ -1,0 +1,159 @@
+//! Result types for the offload search.
+
+use crate::fpga::PatternTiming;
+use crate::hls::PrecompileReport;
+use crate::minic::ast::LoopId;
+use crate::util::json::Json;
+
+/// One measured offload pattern.
+#[derive(Debug, Clone)]
+pub struct PatternMeasurement {
+    /// Offloaded loop ids (sorted).
+    pub loops: Vec<LoopId>,
+    /// Round in which it was measured (1 = singles, 2 = combinations).
+    pub round: u32,
+    pub timing: PatternTiming,
+    /// Modeled full-compile wall clock for this pattern, seconds.
+    pub compile_s: f64,
+    /// Functional verification outcome (None = not requested).
+    pub verified: Option<bool>,
+}
+
+impl PatternMeasurement {
+    pub fn speedup(&self) -> f64 {
+        self.timing.speedup
+    }
+
+    pub fn label(&self) -> String {
+        if self.loops.is_empty() {
+            "all-CPU".to_string()
+        } else {
+            self.loops
+                .iter()
+                .map(|l| l.to_string())
+                .collect::<Vec<_>>()
+                .join("+")
+        }
+    }
+}
+
+/// Trace of the narrowing funnel (Fig. 2 of the paper).
+#[derive(Debug, Clone)]
+pub struct FunnelTrace {
+    /// Total loop statements found (paper: 36 for tdfir, 16 for MRI-Q).
+    pub total_loops: usize,
+    /// Offloadable after structural filtering.
+    pub offloadable: Vec<LoopId>,
+    /// After arithmetic-intensity narrowing (top A).
+    pub top_a: Vec<LoopId>,
+    /// Pre-compile reports for the top-A loops.
+    pub reports: Vec<PrecompileReport>,
+    /// After resource-efficiency narrowing (top C).
+    pub top_c: Vec<LoopId>,
+}
+
+/// The search's final product.
+#[derive(Debug, Clone)]
+pub struct OffloadSolution {
+    pub app: String,
+    pub funnel: FunnelTrace,
+    /// All measured patterns in measurement order.
+    pub measurements: Vec<PatternMeasurement>,
+    /// Index into `measurements` of the selected pattern.
+    pub best: usize,
+    /// Modeled end-to-end automation wall clock, seconds (compiles +
+    /// measurements per round).
+    pub automation_s: f64,
+}
+
+impl OffloadSolution {
+    pub fn best_measurement(&self) -> &PatternMeasurement {
+        &self.measurements[self.best]
+    }
+
+    /// Headline number: speedup of the chosen pattern vs all-CPU.
+    pub fn speedup(&self) -> f64 {
+        self.best_measurement().speedup()
+    }
+
+    /// Serialize for the code-pattern DB.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(self.app.clone())),
+            (
+                "best_pattern",
+                Json::Arr(
+                    self.best_measurement()
+                        .loops
+                        .iter()
+                        .map(|l| Json::Num(l.0 as f64))
+                        .collect(),
+                ),
+            ),
+            ("speedup", Json::Num(self.speedup())),
+            ("automation_hours", Json::Num(self.automation_s / 3600.0)),
+            (
+                "measurements",
+                Json::Arr(
+                    self.measurements
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("pattern", Json::Str(m.label())),
+                                ("round", Json::Num(m.round as f64)),
+                                ("speedup", Json::Num(m.speedup())),
+                                (
+                                    "verified",
+                                    match m.verified {
+                                        Some(v) => Json::Bool(v),
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "funnel",
+                Json::obj(vec![
+                    (
+                        "total_loops",
+                        Json::Num(self.funnel.total_loops as f64),
+                    ),
+                    (
+                        "offloadable",
+                        Json::Num(self.funnel.offloadable.len() as f64),
+                    ),
+                    ("top_a", Json::Num(self.funnel.top_a.len() as f64)),
+                    ("top_c", Json::Num(self.funnel.top_c.len() as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_formats() {
+        let m = PatternMeasurement {
+            loops: vec![LoopId(1), LoopId(3)],
+            round: 2,
+            timing: crate::fpga::PatternTiming {
+                cpu_baseline_s: 1.0,
+                cpu_rest_s: 0.2,
+                loops: vec![],
+                pattern_s: 0.5,
+                speedup: 2.0,
+                combined: Default::default(),
+            },
+            compile_s: 3.0 * 3600.0,
+            verified: Some(true),
+        };
+        assert_eq!(m.label(), "L1+L3");
+        assert_eq!(m.speedup(), 2.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Minimal benchmark harness (criterion substitute for the offline
+//! environment). Used by the `rust/benches/*.rs` targets, which are
+//! declared with `harness = false`.
+//!
+//! Measures wall-clock over warmup + timed iterations and prints
+//! criterion-style lines; also offers simple aligned tables for the
+//! paper-reproduction benches, and writes machine-readable results into
+//! `target/bench-results/<name>.json` for EXPERIMENTS.md bookkeeping.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+/// Timing statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs; prints a summary line.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let total: Duration = times.iter().sum();
+    let stats = Stats {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean: total / iters.max(1),
+        min: *times.iter().min().unwrap(),
+        max: *times.iter().max().unwrap(),
+    };
+    println!(
+        "{:<44} time: [{:>10.3?} {:>10.3?} {:>10.3?}]  ({} iters)",
+        stats.name, stats.min, stats.mean, stats.max, stats.iters
+    );
+    stats
+}
+
+/// Aligned table printer for result matrices.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, (c, w)) in cells.iter().zip(&widths).enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{c:>w$}"));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Persist a bench's result object under `target/bench-results/`.
+pub fn save_results(bench_name: &str, value: &Json) {
+    let dir = std::path::Path::new("target/bench-results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(format!("{bench_name}.json"));
+        let _ = std::fs::write(path, value.pretty());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let s = bench("test", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    }
+
+    #[test]
+    fn table_alignment_no_panic() {
+        let mut t = Table::new(&["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        t.print();
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

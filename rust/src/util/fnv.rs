@@ -1,0 +1,64 @@
+//! FNV-1a hashing (§Perf optimization 1, EXPERIMENTS.md).
+//!
+//! The interpreter's hot path is name → value resolution in scoped
+//! hash maps. std's default SipHash is DoS-resistant but slow for short
+//! keys; variable names are attacker-free, so FNV-1a (a multiply/xor per
+//! byte) is the right trade. Measured on the tdfir profiling run: see
+//! EXPERIMENTS.md §Perf.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// 64-bit FNV-1a.
+#[derive(Default)]
+pub struct FnvHasher(u64);
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+impl Hasher for FnvHasher {
+    fn finish(&self) -> u64 {
+        self.0 ^ FNV_OFFSET // mix so a fresh hasher isn't 0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.0 == 0 { FNV_OFFSET } else { self.0 };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+}
+
+/// A HashMap using FNV-1a.
+pub type FnvMap<K, V> = HashMap<K, V, BuildHasherDefault<FnvHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_basics() {
+        let mut m: FnvMap<String, i32> = FnvMap::default();
+        m.insert("alpha".into(), 1);
+        m.insert("beta".into(), 2);
+        assert_eq!(m.get("alpha"), Some(&1));
+        assert_eq!(m.get("beta"), Some(&2));
+        assert_eq!(m.get("gamma"), None);
+    }
+
+    #[test]
+    fn distinct_keys_distinct_hashes_mostly() {
+        use std::hash::Hash;
+        let hash = |s: &str| {
+            let mut h = FnvHasher::default();
+            s.hash(&mut h);
+            h.finish()
+        };
+        let names = ["i", "j", "k", "acc", "accr", "acci", "outr", "outi"];
+        let hashes: std::collections::BTreeSet<u64> =
+            names.iter().map(|n| hash(n)).collect();
+        assert_eq!(hashes.len(), names.len());
+    }
+}

@@ -1,0 +1,8 @@
+//! Small self-contained substrates the offline build environment forces us
+//! to own: JSON, a seedable RNG, and a property-testing harness.
+
+pub mod bench;
+pub mod fnv;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,100 @@
+//! Deterministic sample-data generators for the evaluated applications.
+//!
+//! The verification environment measures every offload pattern on the same
+//! sample inputs (paper §4: performance is measured with "the sample
+//! processing specified by the application"), so generation is seeded and
+//! platform-independent (our PCG32, not libc rand).
+
+use crate::runtime::artifacts::{MriqShape, TdfirShape};
+use crate::util::rng::Pcg32;
+
+/// Inputs for the TDFIR sample test (row-major flattened).
+#[derive(Debug, Clone)]
+pub struct TdfirInputs {
+    pub xr: Vec<f32>,
+    pub xi: Vec<f32>,
+    pub hr: Vec<f32>,
+    pub hi: Vec<f32>,
+}
+
+/// Inputs for the MRI-Q sample test.
+#[derive(Debug, Clone)]
+pub struct MriqInputs {
+    pub kx: Vec<f32>,
+    pub ky: Vec<f32>,
+    pub kz: Vec<f32>,
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub z: Vec<f32>,
+    pub phir: Vec<f32>,
+    pub phii: Vec<f32>,
+}
+
+fn uniform_vec(rng: &mut Pcg32, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f32(lo, hi)).collect()
+}
+
+/// Generate TDFIR inputs: unit-ish signal, taps shaped like a windowed
+/// band-pass so outputs stay O(1).
+pub fn tdfir_inputs(shape: TdfirShape, seed: u64) -> TdfirInputs {
+    let mut rng = Pcg32::new(seed, 0x7df1);
+    let TdfirShape { m, n, k } = shape;
+    let scale = 1.0 / (k as f32).sqrt();
+    TdfirInputs {
+        xr: uniform_vec(&mut rng, m * n, -1.0, 1.0),
+        xi: uniform_vec(&mut rng, m * n, -1.0, 1.0),
+        hr: uniform_vec(&mut rng, m * k, -scale, scale),
+        hi: uniform_vec(&mut rng, m * k, -scale, scale),
+    }
+}
+
+/// Generate MRI-Q inputs: trajectory and voxel coordinates in [-0.5, 0.5)
+/// (normalized k-space units, like Parboil), unit-ish phase.
+pub fn mriq_inputs(shape: MriqShape, seed: u64) -> MriqInputs {
+    let mut rng = Pcg32::new(seed, 0x3219);
+    let MriqShape { k, x } = shape;
+    MriqInputs {
+        kx: uniform_vec(&mut rng, k, -0.5, 0.5),
+        ky: uniform_vec(&mut rng, k, -0.5, 0.5),
+        kz: uniform_vec(&mut rng, k, -0.5, 0.5),
+        x: uniform_vec(&mut rng, x, -0.5, 0.5),
+        y: uniform_vec(&mut rng, x, -0.5, 0.5),
+        z: uniform_vec(&mut rng, x, -0.5, 0.5),
+        phir: uniform_vec(&mut rng, k, -1.0, 1.0),
+        phii: uniform_vec(&mut rng, k, -1.0, 1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tdfir_inputs_deterministic() {
+        let s = TdfirShape { m: 2, n: 16, k: 4 };
+        let a = tdfir_inputs(s, 9);
+        let b = tdfir_inputs(s, 9);
+        assert_eq!(a.xr, b.xr);
+        assert_eq!(a.hi, b.hi);
+        let c = tdfir_inputs(s, 10);
+        assert_ne!(a.xr, c.xr);
+    }
+
+    #[test]
+    fn mriq_inputs_in_range() {
+        let s = MriqShape { k: 32, x: 16 };
+        let inp = mriq_inputs(s, 1);
+        assert_eq!(inp.kx.len(), 32);
+        assert_eq!(inp.x.len(), 16);
+        assert!(inp.kx.iter().all(|&v| (-0.5..0.5).contains(&v)));
+        assert!(inp.phir.iter().all(|&v| (-1.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn tdfir_tap_scale_bounded() {
+        let s = TdfirShape { m: 1, n: 8, k: 64 };
+        let inp = tdfir_inputs(s, 2);
+        let bound = 1.0 / 8.0; // 1/sqrt(64)
+        assert!(inp.hr.iter().all(|&v| v.abs() <= bound));
+    }
+}

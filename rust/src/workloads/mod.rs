@@ -1,0 +1,8 @@
+//! Evaluated applications: embedded MiniC sources, Rust reference
+//! numerics, and deterministic sample-data generators.
+
+pub mod data;
+pub mod reference;
+pub mod sources;
+
+pub use sources::{source, APPS, MRIQ_C, SOBEL_C, TDFIR_C};

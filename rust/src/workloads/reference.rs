@@ -1,0 +1,163 @@
+//! Rust reference implementations of the evaluated applications' numerics.
+//!
+//! Independent of both the JAX/Pallas path (python/compile/kernels/) and
+//! the MiniC interpreter — a third implementation, so agreement between
+//! any two is strong evidence of correctness. f64 accumulation to act as
+//! the "more precise oracle" for the f32 kernels.
+
+/// Complex FIR filter bank: `y[m][n] = Σ_j h[m][j] * x[m][n-j]`.
+///
+/// Inputs are row-major `[m, n]` / `[m, k]` flattened slices; returns
+/// `(yr, yi)` of length `m*n`.
+pub fn tdfir(
+    xr: &[f32],
+    xi: &[f32],
+    hr: &[f32],
+    hi: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(xr.len(), m * n);
+    assert_eq!(hr.len(), m * k);
+    let mut yr = vec![0f32; m * n];
+    let mut yi = vec![0f32; m * n];
+    for row in 0..m {
+        for out in 0..n {
+            let mut acc_r = 0f64;
+            let mut acc_i = 0f64;
+            for j in 0..=out.min(k - 1) {
+                let xv_r = xr[row * n + out - j] as f64;
+                let xv_i = xi[row * n + out - j] as f64;
+                let h_r = hr[row * k + j] as f64;
+                let h_i = hi[row * k + j] as f64;
+                acc_r += h_r * xv_r - h_i * xv_i;
+                acc_i += h_r * xv_i + h_i * xv_r;
+            }
+            yr[row * n + out] = acc_r as f32;
+            yi[row * n + out] = acc_i as f32;
+        }
+    }
+    (yr, yi)
+}
+
+/// MRI-Q: `q[i] = Σ_k |phi[k]|² · exp(i·2π·(kx·x + ky·y + kz·z))`.
+///
+/// Returns `(qr, qi)` of length `x.len()`.
+#[allow(clippy::too_many_arguments)]
+pub fn mriq(
+    kx: &[f32],
+    ky: &[f32],
+    kz: &[f32],
+    x: &[f32],
+    y: &[f32],
+    z: &[f32],
+    phir: &[f32],
+    phii: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let kd = kx.len();
+    assert_eq!(ky.len(), kd);
+    assert_eq!(kz.len(), kd);
+    assert_eq!(phir.len(), kd);
+    assert_eq!(phii.len(), kd);
+    let xd = x.len();
+    assert_eq!(y.len(), xd);
+    assert_eq!(z.len(), xd);
+
+    const TWO_PI: f64 = 6.283185307179586476925286766559;
+    let phimag: Vec<f64> = (0..kd)
+        .map(|j| {
+            let r = phir[j] as f64;
+            let i = phii[j] as f64;
+            r * r + i * i
+        })
+        .collect();
+
+    let mut qr = vec![0f32; xd];
+    let mut qi = vec![0f32; xd];
+    for i in 0..xd {
+        let (xi_, yi_, zi_) = (x[i] as f64, y[i] as f64, z[i] as f64);
+        let mut acc_r = 0f64;
+        let mut acc_i = 0f64;
+        for j in 0..kd {
+            let arg = TWO_PI
+                * (kx[j] as f64 * xi_ + ky[j] as f64 * yi_
+                    + kz[j] as f64 * zi_);
+            // Compute in f32 precision for the trig argument to mirror the
+            // kernel (XLA evaluates cos/sin on the f32 value); accumulate
+            // in f64.
+            let arg32 = arg as f32;
+            acc_r += phimag[j] * (arg32.cos() as f64);
+            acc_i += phimag[j] * (arg32.sin() as f64);
+        }
+        qr[i] = acc_r as f32;
+        qi[i] = acc_i as f32;
+    }
+    (qr, qi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tdfir_impulse_recovers_taps() {
+        let (m, n, k) = (1, 8, 3);
+        let mut xr = vec![0f32; n];
+        xr[0] = 1.0;
+        let xi = vec![0f32; n];
+        let hr = vec![0.5, -1.0, 2.0];
+        let hi = vec![1.0, 0.25, -0.5];
+        let (yr, yi) = tdfir(&xr, &xi, &hr, &hi, m, n, k);
+        assert_eq!(&yr[..k], &hr[..]);
+        assert_eq!(&yi[..k], &hi[..]);
+        assert!(yr[k..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tdfir_single_tap_scales() {
+        let (m, n, k) = (1, 4, 1);
+        let xr = vec![1.0, 2.0, 3.0, 4.0];
+        let xi = vec![0.5, 0.5, 0.5, 0.5];
+        let hr = vec![2.0];
+        let hi = vec![1.0];
+        let (yr, yi) = tdfir(&xr, &xi, &hr, &hi, m, n, k);
+        for i in 0..n {
+            assert!((yr[i] - (2.0 * xr[i] - 1.0 * xi[i])).abs() < 1e-6);
+            assert!((yi[i] - (2.0 * xi[i] + 1.0 * xr[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mriq_zero_phase_is_zero() {
+        let kd = 4;
+        let xd = 3;
+        let zeros_k = vec![0f32; kd];
+        let ones_k = vec![1f32; kd];
+        let coords = vec![0.3f32, -0.2, 0.9];
+        let (qr, qi) = mriq(
+            &ones_k, &ones_k, &ones_k, &coords, &coords, &coords, &zeros_k,
+            &zeros_k,
+        );
+        assert!(qr.iter().all(|&v| v == 0.0));
+        assert!(qi.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn mriq_origin_voxel_sums_phimag() {
+        let kd = 5;
+        let kx: Vec<f32> = (0..kd).map(|i| i as f32 * 0.17).collect();
+        let phir = vec![1.0f32, 2.0, 0.5, -1.0, 0.25];
+        let phii = vec![0.5f32, -0.5, 1.5, 0.0, 2.0];
+        let zero = vec![0f32; 1];
+        let (qr, qi) =
+            mriq(&kx, &kx, &kx, &zero, &zero, &zero, &phir, &phii);
+        let expect: f32 = phir
+            .iter()
+            .zip(&phii)
+            .map(|(r, i)| r * r + i * i)
+            .sum();
+        assert!((qr[0] - expect).abs() < 1e-4, "{} vs {expect}", qr[0]);
+        assert!(qi[0].abs() < 1e-5);
+    }
+}

@@ -1,0 +1,107 @@
+//! Embedded MiniC sources of the evaluated applications.
+//!
+//! The `.c` files live in `rust/src/workloads/c/` and are compiled into
+//! the binary so the coordinator is self-contained (no runtime file
+//! dependencies beyond the AOT artifacts).
+
+/// HPEC tdfir — 36 loops (paper §5.1.2).
+pub const TDFIR_C: &str = include_str!("c/tdfir.c");
+
+/// Parboil MRI-Q — 16 loops (paper §5.1.2).
+pub const MRIQ_C: &str = include_str!("c/mriq.c");
+
+/// Sobel edge detection — the extra IoT-imaging workload.
+pub const SOBEL_C: &str = include_str!("c/sobel.c");
+
+/// Source lookup by app name.
+pub fn source(app: &str) -> Option<&'static str> {
+    match app {
+        "tdfir" => Some(TDFIR_C),
+        "mriq" => Some(MRIQ_C),
+        "sobel" => Some(SOBEL_C),
+        _ => None,
+    }
+}
+
+/// All bundled app names.
+pub const APPS: &[&str] = &["tdfir", "mriq", "sobel"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::{parse, typecheck};
+
+    #[test]
+    fn tdfir_has_exactly_36_loops() {
+        let prog = parse(TDFIR_C).unwrap();
+        assert_eq!(prog.loop_count, 36, "paper §5.1.2: tdfir has 36 loops");
+    }
+
+    #[test]
+    fn mriq_has_exactly_16_loops() {
+        let prog = parse(MRIQ_C).unwrap();
+        assert_eq!(prog.loop_count, 16, "paper §5.1.2: MRI-Q has 16 loops");
+    }
+
+    #[test]
+    fn sobel_parses_with_12_loops() {
+        let prog = parse(SOBEL_C).unwrap();
+        assert_eq!(prog.loop_count, 12);
+    }
+
+    #[test]
+    fn all_sources_typecheck() {
+        for app in APPS {
+            let prog = parse(source(app).unwrap()).unwrap();
+            let errs = typecheck::check(&prog);
+            assert!(errs.is_empty(), "{app}: {errs:?}");
+        }
+    }
+
+    #[test]
+    fn all_sources_execute() {
+        use crate::minic::Interp;
+        for app in APPS {
+            let prog = parse(source(app).unwrap()).unwrap();
+            let mut interp = Interp::new(&prog).unwrap();
+            interp.call("main", &[]).unwrap_or_else(|e| {
+                panic!("{app} failed to run: {e}");
+            });
+            // Every loop in the hot path must have been profiled.
+            assert!(
+                !interp.profile().loops.is_empty(),
+                "{app}: no loops profiled"
+            );
+        }
+    }
+
+    #[test]
+    fn tdfir_internal_verification_passes() {
+        use crate::minic::Interp;
+        let prog = parse(TDFIR_C).unwrap();
+        let mut interp = Interp::new(&prog).unwrap();
+        interp.call("main", &[]).unwrap();
+        // The in-app spot check: bank output matches the naive reference.
+        let maxerr = interp.global_scalar("maxerr").unwrap();
+        assert!(maxerr < 1e-9, "tdfir self-check failed: maxerr={maxerr}");
+        let energy = interp.global_scalar("out_energy").unwrap();
+        assert!(energy > 0.0);
+    }
+
+    #[test]
+    fn mriq_internal_verification_passes() {
+        use crate::minic::Interp;
+        let prog = parse(MRIQ_C).unwrap();
+        let mut interp = Interp::new(&prog).unwrap();
+        interp.call("main", &[]).unwrap();
+        let maxerr = interp.global_scalar("maxerr").unwrap();
+        assert!(maxerr < 1e-9, "mriq self-check failed: maxerr={maxerr}");
+        let energy = interp.global_scalar("q_energy").unwrap();
+        assert!(energy > 0.0);
+    }
+
+    #[test]
+    fn unknown_app_is_none() {
+        assert!(source("nope").is_none());
+    }
+}

@@ -1,0 +1,142 @@
+//! Integration: the environment-adaptive-software flow (Fig. 1) with all
+//! three layers — including the step-6 PJRT sample test against the real
+//! AOT artifacts — plus DB wiring and failure-injection cases.
+
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::envadapt::{
+    run_flow, FacilityDb, FlowOptions, TestCase, TestDb,
+};
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::runtime::{Artifacts, Runtime};
+use fpga_offload::search::SearchConfig;
+use fpga_offload::workloads;
+
+fn opts_base<'a>() -> FlowOptions<'a> {
+    FlowOptions {
+        config: SearchConfig::default(),
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+        pattern_db: None,
+        runtime: None,
+        seed: 42,
+    }
+}
+
+#[test]
+fn full_flow_tdfir_with_pjrt_sample_test() {
+    let cwd = std::env::current_dir().unwrap();
+    let art = Artifacts::discover(&cwd)
+        .expect("artifacts/ missing — run `make artifacts`");
+    let rt = Runtime::cpu().unwrap();
+
+    let testdb = TestDb::builtin();
+    let opts = FlowOptions {
+        runtime: Some((&rt, &art)),
+        ..opts_base()
+    };
+    let report =
+        run_flow("tdfir", workloads::TDFIR_C, &testdb, &opts).unwrap();
+
+    // Fig. 4 shape.
+    assert!((2.5..7.0).contains(&report.solution.speedup()));
+    // Step 6: the Pallas→HLO kernels ran and matched the reference.
+    let sr = report.sample_run.expect("PJRT sample test must run");
+    assert_eq!(sr.app, "tdfir");
+    assert!(sr.max_abs_err < 5e-3);
+}
+
+#[test]
+fn full_flow_mriq_with_pjrt_sample_test() {
+    let cwd = std::env::current_dir().unwrap();
+    let art = Artifacts::discover(&cwd).expect("run `make artifacts`");
+    let rt = Runtime::cpu().unwrap();
+    let testdb = TestDb::builtin();
+    let opts = FlowOptions {
+        runtime: Some((&rt, &art)),
+        ..opts_base()
+    };
+    let report =
+        run_flow("mriq", workloads::MRIQ_C, &testdb, &opts).unwrap();
+    assert!((5.0..10.0).contains(&report.solution.speedup()));
+    let sr = report.sample_run.unwrap();
+    assert_eq!(sr.app, "mriq");
+    assert!(sr.max_abs_err < 5e-2);
+}
+
+#[test]
+fn flow_persists_and_lists_patterns() {
+    let dir = std::env::temp_dir().join("fpga_offload_flow_int_db");
+    std::fs::remove_dir_all(&dir).ok();
+    let testdb = TestDb::builtin();
+    let opts = FlowOptions {
+        pattern_db: Some(&dir),
+        ..opts_base()
+    };
+    run_flow("sobel", workloads::SOBEL_C, &testdb, &opts).unwrap();
+    run_flow("mriq", workloads::MRIQ_C, &testdb, &opts).unwrap();
+    let db = fpga_offload::envadapt::PatternDb::open(&dir).unwrap();
+    assert_eq!(db.list().unwrap(), vec!["mriq", "sobel"]);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn facility_db_describes_fig3() {
+    let db = FacilityDb::paper_fig3();
+    let v = db.verification().unwrap();
+    assert_eq!(v.fpga.as_ref().unwrap().name, ARRIA10_GX.name);
+    assert_eq!(v.cpu.as_ref().unwrap().name, XEON_BRONZE_3104.name);
+    assert_eq!(db.facilities.len(), 3);
+}
+
+#[test]
+fn flow_fails_cleanly_on_source_with_no_offloadable_loops() {
+    let mut testdb = TestDb::new();
+    testdb.register(TestCase {
+        app: "noloop".into(),
+        entry: "main".into(),
+        observed_arrays: vec![],
+        pjrt_sample: None,
+        description: String::new(),
+    });
+    let src = "int main() { return 42; }";
+    let err = run_flow("noloop", src, &testdb, &opts_base()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("no offloadable") || msg.contains("funnel"),
+        "{msg}"
+    );
+}
+
+#[test]
+fn flow_rejects_semantic_errors_before_measuring() {
+    let mut testdb = TestDb::new();
+    testdb.register(TestCase {
+        app: "bad".into(),
+        entry: "main".into(),
+        observed_arrays: vec![],
+        pjrt_sample: None,
+        description: String::new(),
+    });
+    let src = "int main() { for (int i = 0; i < 4; i++) { x[i] = 1.0; } return 0; }";
+    assert!(run_flow("bad", src, &testdb, &opts_base()).is_err());
+}
+
+#[test]
+fn custom_search_configs_flow_through() {
+    let testdb = TestDb::builtin();
+    let opts = FlowOptions {
+        config: SearchConfig {
+            top_a: 2,
+            top_c: 1,
+            first_round: 1,
+            max_patterns: 2,
+            ..Default::default()
+        },
+        ..opts_base()
+    };
+    let report =
+        run_flow("sobel", workloads::SOBEL_C, &testdb, &opts).unwrap();
+    assert!(report.solution.measurements.len() <= 2);
+    assert!(report.solution.funnel.top_a.len() <= 2);
+    assert!(report.solution.funnel.top_c.len() <= 1);
+}

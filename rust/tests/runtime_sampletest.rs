@@ -1,0 +1,71 @@
+//! Integration: the PJRT runtime executing the AOT artifacts (Pallas
+//! kernels inside JAX models, lowered to HLO text at build time).
+//!
+//! Requires `make artifacts`. If the artifacts are missing these tests
+//! fail with an actionable message rather than being skipped — the
+//! end-to-end stack is a deliverable, not an option.
+
+use fpga_offload::runtime::{run_mriq, run_tdfir, Artifacts, Runtime};
+
+fn setup() -> (Runtime, Artifacts) {
+    let cwd = std::env::current_dir().expect("cwd");
+    let art = Artifacts::discover(&cwd)
+        .expect("artifacts/ not found — run `make artifacts` first");
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    (rt, art)
+}
+
+#[test]
+fn tdfir_artifact_matches_rust_reference() {
+    let (rt, art) = setup();
+    let run = run_tdfir(&rt, &art, 42).expect("tdfir sample test");
+    assert_eq!(run.app, "tdfir");
+    assert!(run.max_abs_err < 5e-3, "err {}", run.max_abs_err);
+    assert_eq!(
+        run.checked,
+        2 * art.tdfir_shape.m * art.tdfir_shape.n,
+        "all outputs compared"
+    );
+}
+
+#[test]
+fn mriq_artifact_matches_rust_reference() {
+    let (rt, art) = setup();
+    let run = run_mriq(&rt, &art, 42).expect("mriq sample test");
+    assert_eq!(run.app, "mriq");
+    assert!(run.max_abs_err < 5e-2, "err {}", run.max_abs_err);
+    assert_eq!(run.checked, 2 * art.mriq_shape.x);
+}
+
+#[test]
+fn different_seeds_give_different_data_same_correctness() {
+    let (rt, art) = setup();
+    for seed in [1u64, 7, 1234] {
+        let run = run_tdfir(&rt, &art, seed)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e:#}"));
+        assert!(run.max_abs_err < 5e-3, "seed {seed}: {}", run.max_abs_err);
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let (rt, art) = setup();
+    // First load compiles; second load must be cache-hit (same pointer).
+    let a = rt.load(&art.tdfir_hlo).unwrap();
+    let b = rt.load(&art.tdfir_hlo).unwrap();
+    assert!(std::ptr::eq(a, b), "executable cache miss");
+    // Repeated execution through the cached executable stays correct.
+    let r1 = run_tdfir(&rt, &art, 5).unwrap();
+    let r2 = run_tdfir(&rt, &art, 5).unwrap();
+    assert_eq!(r1.checked, r2.checked);
+}
+
+#[test]
+fn meta_shapes_match_compiled_artifacts() {
+    let (rt, art) = setup();
+    // Executing with meta.json's shapes must succeed — i.e. the artifact
+    // and its metadata were produced by the same AOT run.
+    assert!(run_tdfir(&rt, &art, 2).is_ok());
+    assert!(run_mriq(&rt, &art, 2).is_ok());
+    assert_eq!(art.tdfir_shape.m * art.tdfir_shape.n > 0, true);
+}

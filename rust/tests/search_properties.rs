@@ -1,0 +1,210 @@
+//! Property-based tests over the coordinator invariants (routing of loops
+//! through the funnel, pattern batching rules, and search-state
+//! invariants), using the in-repo property harness (proptest substitute —
+//! see Cargo.toml note).
+//!
+//! Programs are *generated*: random loop nests with varying compute
+//! density, so the invariants are exercised over a broad family of
+//! applications, not just the bundled three.
+
+use fpga_offload::analysis::analyze;
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::minic::parse;
+use fpga_offload::search::{funnel, search, SearchConfig};
+use fpga_offload::util::prop::{check, holds, Outcome};
+use fpga_offload::util::rng::Pcg32;
+
+/// Generate a random MiniC program with `n_loops` top-level loops over
+/// shared arrays, each with random density/shape.
+fn gen_program(rng: &mut Pcg32, n_loops: usize) -> String {
+    let mut src = String::from(
+        "#define N 256\nfloat a[N]; float b[N]; float c[N];\nfloat acc;\n\
+         int main() {\n",
+    );
+    for i in 0..n_loops {
+        let dst = ["b", "c"][rng.index(2)];
+        let body = match rng.index(5) {
+            0 => format!("{dst}[i] = a[i] * 2.0 + 1.0;"),
+            1 => format!("{dst}[i] = sin(a[i]) * cos(a[i]);"),
+            2 => format!("{dst}[i] = sqrt(a[i] * a[i] + {i}.0);"),
+            3 => "acc += a[i];".to_string(),
+            _ => format!("{dst}[i] = a[i] / ({i}.0 + 2.0);"),
+        };
+        let bound = 1 + rng.index(256);
+        src.push_str(&format!(
+            "    for (int i = 0; i < {bound}; i++) {{ {body} }}\n"
+        ));
+    }
+    src.push_str("    return 0;\n}\n");
+    src
+}
+
+fn cfg_for(rng: &mut Pcg32) -> SearchConfig {
+    let top_c = 1 + rng.index(3);
+    SearchConfig {
+        top_a: top_c + rng.index(4),
+        top_c,
+        first_round: 1 + rng.index(top_c),
+        max_patterns: top_c + 1,
+        verify_numerics: true,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn funnel_stage_sizes_always_monotone() {
+    check(40, |rng| {
+        let n = 2 + rng.index(8);
+        let src = gen_program(rng, n);
+        let prog = parse(&src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let cfg = cfg_for(rng);
+        match funnel::run(&prog, &an, &cfg, &ARRIA10_GX) {
+            Err(_) => Outcome::Pass, // no candidates is legal
+            Ok((cands, trace)) => holds(
+                trace.offloadable.len() <= trace.total_loops
+                    && trace.top_a.len() <= cfg.top_a
+                    && trace.top_a.len() <= trace.offloadable.len()
+                    && cands.len() <= cfg.top_c
+                    && cands.len() <= trace.top_a.len(),
+                format!(
+                    "funnel not monotone: {} -> {} -> {} -> {} (cfg {cfg:?})",
+                    trace.total_loops,
+                    trace.offloadable.len(),
+                    trace.top_a.len(),
+                    cands.len()
+                ),
+            ),
+        }
+    });
+}
+
+#[test]
+fn funnel_survivors_sorted_by_resource_efficiency() {
+    check(40, |rng| {
+        let n = 3 + rng.index(6);
+        let src = gen_program(rng, n);
+        let prog = parse(&src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        match funnel::run(&prog, &an, &SearchConfig::default(), &ARRIA10_GX) {
+            Err(_) => Outcome::Pass,
+            Ok((cands, _)) => holds(
+                cands.windows(2).all(|w| {
+                    w[0].report.resource_efficiency
+                        >= w[1].report.resource_efficiency
+                }),
+                "survivors out of order".to_string(),
+            ),
+        }
+    });
+}
+
+#[test]
+fn search_never_exceeds_measurement_budget() {
+    check(30, |rng| {
+        let n = 2 + rng.index(8);
+        let src = gen_program(rng, n);
+        let prog = parse(&src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let cfg = cfg_for(rng);
+        match search("p", &prog, &an, &cfg, &XEON_BRONZE_3104, &ARRIA10_GX) {
+            Err(_) => Outcome::Pass,
+            Ok(sol) => holds(
+                !sol.measurements.is_empty()
+                    && sol.measurements.len() <= cfg.max_patterns,
+                format!(
+                    "budget violated: {} > {}",
+                    sol.measurements.len(),
+                    cfg.max_patterns
+                ),
+            ),
+        }
+    });
+}
+
+#[test]
+fn best_is_always_the_argmax_and_verified() {
+    check(30, |rng| {
+        let n = 2 + rng.index(6);
+        let src = gen_program(rng, n);
+        let prog = parse(&src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let cfg = cfg_for(rng);
+        match search("p", &prog, &an, &cfg, &XEON_BRONZE_3104, &ARRIA10_GX) {
+            Err(_) => Outcome::Pass,
+            Ok(sol) => {
+                let max = sol
+                    .measurements
+                    .iter()
+                    .map(|m| m.speedup())
+                    .fold(f64::MIN, f64::max);
+                holds(
+                    (sol.speedup() - max).abs() < 1e-12
+                        && sol
+                            .measurements
+                            .iter()
+                            .all(|m| m.verified == Some(true)),
+                    format!("best {} vs max {max}", sol.speedup()),
+                )
+            }
+        }
+    });
+}
+
+#[test]
+fn combination_patterns_only_from_accelerated_disjoint_singles() {
+    check(30, |rng| {
+        let n = 3 + rng.index(6);
+        let src = gen_program(rng, n);
+        let prog = parse(&src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let cfg = cfg_for(rng);
+        match search("p", &prog, &an, &cfg, &XEON_BRONZE_3104, &ARRIA10_GX) {
+            Err(_) => Outcome::Pass,
+            Ok(sol) => {
+                // Every round-2 pattern's loops are a union of round-1
+                // winners.
+                let winners: Vec<_> = sol
+                    .measurements
+                    .iter()
+                    .filter(|m| m.round == 1 && m.speedup() > 1.0)
+                    .flat_map(|m| m.loops.clone())
+                    .collect();
+                let ok = sol
+                    .measurements
+                    .iter()
+                    .filter(|m| m.round == 2)
+                    .all(|m| {
+                        m.loops.len() >= 2
+                            && m.loops.iter().all(|l| winners.contains(l))
+                    });
+                holds(ok, "round-2 pattern not built from winners".to_string())
+            }
+        }
+    });
+}
+
+#[test]
+fn deterministic_given_same_input() {
+    check(15, |rng| {
+        let n = 2 + rng.index(5);
+        let src = gen_program(rng, n);
+        let prog = parse(&src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let cfg = SearchConfig::default();
+        let a = search("p", &prog, &an, &cfg, &XEON_BRONZE_3104, &ARRIA10_GX);
+        let b = search("p", &prog, &an, &cfg, &XEON_BRONZE_3104, &ARRIA10_GX);
+        match (a, b) {
+            (Err(_), Err(_)) => Outcome::Pass,
+            (Ok(x), Ok(y)) => holds(
+                x.measurements.len() == y.measurements.len()
+                    && x.best_measurement().loops
+                        == y.best_measurement().loops
+                    && (x.speedup() - y.speedup()).abs() < 1e-12,
+                "nondeterministic search".to_string(),
+            ),
+            _ => Outcome::Fail("one run errored".to_string()),
+        }
+    });
+}
