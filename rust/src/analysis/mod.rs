@@ -17,4 +17,4 @@ pub mod profile;
 pub use depend::Dependence;
 pub use intensity::{LoopIntensity, TRIG_FLOP_WEIGHT};
 pub use loopinfo::{Blocker, LoopInfo};
-pub use profile::{analyze, Analysis, AnalyzedLoop};
+pub use profile::{analyze, analyze_with, Analysis, AnalyzedLoop};

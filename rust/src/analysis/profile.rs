@@ -1,11 +1,17 @@
-//! Profiled analysis runs: execute the application under the instrumented
-//! interpreter (the gcov analog) and join dynamic stats with the static
+//! Profiled analysis runs: execute the application under an instrumented
+//! engine (the gcov analog) and join dynamic stats with the static
 //! loop table into the [`AnalyzedLoop`] records the funnel consumes.
+//!
+//! The profiling run is the pipeline's dominant wall-clock cost, so it
+//! executes on the bytecode VM by default; pass
+//! [`EngineKind::TreeWalk`] to [`analyze_with`] to profile under the
+//! tree-walking oracle instead (the two are differentially tested to
+//! produce identical profiles).
 
 use std::collections::BTreeSet;
 
 use crate::minic::ast::{LoopId, Stmt};
-use crate::minic::{Interp, MiniCError, Profile, Program};
+use crate::minic::{EngineKind, MiniCError, Profile, Program};
 
 use super::depend::{classify, Dependence};
 use super::intensity::{rank, LoopIntensity};
@@ -71,12 +77,22 @@ impl Analysis {
 ///
 /// This is paper Step 1 + Step 2's analysis half: code analysis (static)
 /// plus the profiling run that the arithmetic-intensity tool needs.
+/// Profiles on the default engine (the bytecode VM).
 pub fn analyze(prog: &Program, entry: &str) -> Result<Analysis, MiniCError> {
+    analyze_with(prog, entry, EngineKind::default())
+}
+
+/// [`analyze`] with an explicit execution engine.
+pub fn analyze_with(
+    prog: &Program,
+    entry: &str,
+    engine: EngineKind,
+) -> Result<Analysis, MiniCError> {
     let static_info = extract(prog);
 
-    let mut interp = Interp::new(prog)?;
-    interp.call(entry, &[])?;
-    let profile = interp.profile().clone();
+    let mut eng = engine.build(prog)?;
+    eng.call(entry, &[])?;
+    let profile = eng.profile();
 
     let ranked = rank(&profile);
 
@@ -155,6 +171,22 @@ int main() {
         // L3 never ran.
         assert!(a.cold_loops().contains(&LoopId(3)));
         assert!(!a.loop_by_id(LoopId(3)).unwrap().candidate());
+    }
+
+    #[test]
+    fn engines_produce_identical_analysis() {
+        let prog = parse(SRC).unwrap();
+        let a_vm =
+            analyze_with(&prog, "main", EngineKind::Bytecode).unwrap();
+        let a_tw =
+            analyze_with(&prog, "main", EngineKind::TreeWalk).unwrap();
+        assert_eq!(a_vm.profile.total, a_tw.profile.total);
+        assert_eq!(a_vm.profile.loops.len(), a_tw.profile.loops.len());
+        for (id, lp) in &a_tw.profile.loops {
+            let lv = a_vm.profile.loop_profile(*id).unwrap();
+            assert_eq!(lp.ops, lv.ops, "{id}");
+            assert_eq!(lp.trips, lv.trips, "{id}");
+        }
     }
 
     #[test]

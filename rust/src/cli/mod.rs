@@ -4,6 +4,7 @@
 //! repro offload <app|file.c> [--explain] [--top-a N] [--unroll B]
 //!               [--top-c N] [--max-patterns D] [--machines N]
 //!               [--pattern-db DIR] [--pjrt] [--no-verify]
+//!               [--engine interp|vm]
 //! repro analyze <app|file.c>       loop table + intensity ranking
 //! repro estimate <app|file.c> [--unroll B]   pre-compile reports (top-A)
 //! repro opencl <app|file.c> --loop N [--unroll B]   emit kernel + host
@@ -12,11 +13,11 @@
 //! repro apps                       list bundled applications
 //! ```
 
-use crate::analysis::{analyze, Analysis};
+use crate::analysis::{analyze_with, Analysis};
 use crate::cpu::XEON_BRONZE_3104;
 use crate::envadapt::{FlowOptions, TestDb};
 use crate::hls::{render, ARRIA10_GX};
-use crate::minic::{parse, typecheck, Program};
+use crate::minic::{parse, typecheck, EngineKind, Program};
 use crate::runtime::{Artifacts, Runtime};
 use crate::search::{GaConfig, SearchConfig};
 use crate::workloads;
@@ -66,6 +67,7 @@ fn print_usage() {
          SUBCOMMANDS\n\
            offload <app|file.c>   full flow: analyze → funnel → measure → pick\n\
              --explain            print the funnel trace and reports\n\
+             --engine E           execution engine: vm (default) | interp\n\
              --top-a N            intensity narrowing (default 5)\n\
              --unroll B           loop expansion factor (default 1)\n\
              --top-c N            resource-efficiency narrowing (default 3)\n\
@@ -104,11 +106,24 @@ fn resolve_source(spec: &str) -> anyhow::Result<(String, String)> {
     )
 }
 
-fn parse_and_analyze(src: &str) -> anyhow::Result<(Program, Analysis)> {
+fn parse_and_analyze(
+    src: &str,
+    engine: EngineKind,
+) -> anyhow::Result<(Program, Analysis)> {
     let prog = parse(src).map_err(|e| anyhow::anyhow!("{e}"))?;
     typecheck::check_ok(&prog).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let an = analyze(&prog, "main").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let an = analyze_with(&prog, "main", engine)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     Ok((prog, an))
+}
+
+fn engine_from_flags(f: &Flags) -> anyhow::Result<EngineKind> {
+    match f.value("--engine") {
+        None => Ok(EngineKind::default()),
+        Some(v) => EngineKind::parse(v).ok_or_else(|| {
+            anyhow::anyhow!("bad value for --engine: {v:?} (use interp|vm)")
+        }),
+    }
 }
 
 /// Tiny flag parser: positional args + `--key value` + `--switch`.
@@ -155,6 +170,7 @@ fn config_from_flags(f: &Flags) -> anyhow::Result<SearchConfig> {
         max_patterns: f.num("--max-patterns", d.max_patterns)?,
         build_machines: f.num("--machines", d.build_machines)?,
         verify_numerics: !f.has("--no-verify"),
+        engine: engine_from_flags(f)?,
         ..d
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
@@ -253,7 +269,7 @@ fn cmd_analyze(args: &[String]) -> anyhow::Result<()> {
         .positional(0)
         .ok_or_else(|| anyhow::anyhow!("usage: repro analyze <app|file.c>"))?;
     let (app, src) = resolve_source(spec)?;
-    let (_prog, an) = parse_and_analyze(&src)?;
+    let (_prog, an) = parse_and_analyze(&src, engine_from_flags(&f)?)?;
 
     println!("{app}: {} loop statements", an.loops.len());
     println!(
@@ -302,7 +318,7 @@ fn cmd_estimate(args: &[String]) -> anyhow::Result<()> {
         .positional(0)
         .ok_or_else(|| anyhow::anyhow!("usage: repro estimate <app|file.c>"))?;
     let (_app, src) = resolve_source(spec)?;
-    let (prog, an) = parse_and_analyze(&src)?;
+    let (prog, an) = parse_and_analyze(&src, engine_from_flags(&f)?)?;
     let cfg = config_from_flags(&f)?;
     let (cands, trace) =
         crate::search::funnel::run(&prog, &an, &cfg, &ARRIA10_GX)
@@ -327,7 +343,7 @@ fn cmd_opencl(args: &[String]) -> anyhow::Result<()> {
         .positional(0)
         .ok_or_else(|| anyhow::anyhow!("usage: repro opencl <app|file.c> --loop N"))?;
     let (_app, src) = resolve_source(spec)?;
-    let (prog, an) = parse_and_analyze(&src)?;
+    let (prog, an) = parse_and_analyze(&src, engine_from_flags(&f)?)?;
     let loop_n: u32 = f.num("--loop", 0)?;
     let unroll_b: u32 = f.num("--unroll", 1)?;
     let al = an
@@ -348,7 +364,7 @@ fn cmd_ga(args: &[String]) -> anyhow::Result<()> {
         .positional(0)
         .ok_or_else(|| anyhow::anyhow!("usage: repro ga <app|file.c>"))?;
     let (app, src) = resolve_source(spec)?;
-    let (prog, an) = parse_and_analyze(&src)?;
+    let (prog, an) = parse_and_analyze(&src, engine_from_flags(&f)?)?;
     let cfg = GaConfig {
         seed: f.num("--seed", GaConfig::default().seed)?,
         ..Default::default()

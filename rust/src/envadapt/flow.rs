@@ -18,7 +18,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::analysis::{analyze, Analysis};
+use crate::analysis::{analyze, analyze_with, Analysis};
 use crate::cpu::CpuModel;
 use crate::hls::Device;
 use crate::minic::{parse, typecheck, Program};
@@ -72,8 +72,11 @@ pub fn run_flow(
         .get(app)
         .with_context(|| format!("no test case registered for {app:?}"))?;
 
-    // Steps 1–2: analysis.
-    let (prog, analysis) = analyze_source(source, &case.entry)?;
+    // Steps 1–2: analysis (profiling runs on the configured engine).
+    let prog = parse(source).map_err(|e| anyhow::anyhow!("{e}"))?;
+    typecheck::check_ok(&prog).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let analysis = analyze_with(&prog, &case.entry, opts.config.engine)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     // Steps 3–5: funnel, patterns, measurement, selection.
     let solution = search(

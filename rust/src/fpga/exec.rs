@@ -12,7 +12,7 @@
 use std::collections::BTreeMap;
 
 use crate::codegen::{offload_program, SplitResult};
-use crate::minic::{Interp, MiniCError, Program};
+use crate::minic::{EngineKind, MiniCError, Program};
 
 /// Result of a functional verification run.
 #[derive(Debug, Clone)]
@@ -30,16 +30,28 @@ pub struct VerifyResult {
 pub const TOLERANCE: f64 = 0.0;
 
 /// Run baseline and offloaded programs; compare every global array.
+/// Executes on the default engine (the bytecode VM); two rounds of
+/// pattern verification are a hot path of the automation loop.
 pub fn verify_pattern(
     prog: &Program,
     splits: &[SplitResult],
     entry: &str,
 ) -> Result<VerifyResult, MiniCError> {
+    verify_pattern_with(prog, splits, entry, EngineKind::default())
+}
+
+/// [`verify_pattern`] with an explicit execution engine.
+pub fn verify_pattern_with(
+    prog: &Program,
+    splits: &[SplitResult],
+    entry: &str,
+    engine: EngineKind,
+) -> Result<VerifyResult, MiniCError> {
     let host = offload_program(prog, splits);
 
-    let mut base = Interp::new(prog)?;
+    let mut base = engine.build(prog)?;
     base.call(entry, &[])?;
-    let mut off = Interp::new(&host)?;
+    let mut off = engine.build(&host)?;
     off.call(entry, &[])?;
 
     let mut max_abs_err = 0.0f64;
@@ -125,6 +137,31 @@ int main() {
             let v = verify_pattern(&prog, &[s], "main").unwrap();
             assert!(v.passed, "unroll {u}: err = {}", v.max_abs_err);
         }
+    }
+
+    #[test]
+    fn oracle_and_vm_verification_agree() {
+        use crate::minic::EngineKind;
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let s = split(&prog, an.loop_by_id(LoopId(2)).unwrap()).unwrap();
+        let v_vm = verify_pattern_with(
+            &prog,
+            std::slice::from_ref(&s),
+            "main",
+            EngineKind::Bytecode,
+        )
+        .unwrap();
+        let v_tw = verify_pattern_with(
+            &prog,
+            std::slice::from_ref(&s),
+            "main",
+            EngineKind::TreeWalk,
+        )
+        .unwrap();
+        assert_eq!(v_vm.passed, v_tw.passed);
+        assert_eq!(v_vm.max_abs_err, v_tw.max_abs_err);
+        assert_eq!(v_vm.compared, v_tw.compared);
     }
 
     #[test]

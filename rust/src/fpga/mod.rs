@@ -14,6 +14,6 @@ pub mod sim;
 pub mod xfer;
 
 pub use compile_model::{automation_time, makespan, CompileJob};
-pub use exec::{verify_pattern, VerifyResult};
+pub use exec::{verify_pattern, verify_pattern_with, VerifyResult};
 pub use sim::{simulate, subtree_ids, LoopTiming, PatternTiming, SimError};
 pub use xfer::{dma_time, launch_overhead};

@@ -1,0 +1,241 @@
+//! Compact bytecode for the slot-resolved MiniC VM (§Perf).
+//!
+//! The tree-walking interpreter pays for name resolution (hash lookups in
+//! scoped maps), AST pointer chasing, and per-call `body.clone()` on every
+//! hot-path statement. This module defines the flat program the
+//! [`crate::minic::resolve`] pass lowers to instead: identifiers are
+//! interned, locals/params live in dense frame slots, globals in a flat
+//! slot vector, and loop profiling markers ([`Instr::LoopEnter`] /
+//! [`Instr::LoopTrip`] / [`Instr::LoopExit`]) carry their [`LoopId`] so
+//! the VM maintains the same per-loop profiles as the tree-walker with no
+//! hashing on the trip path.
+//!
+//! Design rules:
+//! * Instructions are `Copy` and fixed-size; dispatch fetches by value.
+//! * Control flow is intra-function only (`Jump`/`JumpIfFalse` hold
+//!   absolute instruction indices); calls push VM frames.
+//! * Anything the tree-walker only rejects *at runtime* (undeclared
+//!   names, unknown calls, bad arity) compiles to [`Instr::Trap`] with
+//!   the equivalent message, so dead code stays executable-equivalent.
+
+use crate::util::fnv::FnvMap;
+
+use super::ast::{AssignOp, BinOp, LoopId, Param, Scalar};
+
+/// One-argument math builtins (dispatch table kept in the VM).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Builtin1 {
+    Sin,
+    Cos,
+    Tan,
+    Sqrt,
+    Exp,
+    Log,
+    Fabs,
+    Floor,
+    Ceil,
+}
+
+impl Builtin1 {
+    /// Lookup by source name (mirrors the tree-walker's builtin table).
+    pub fn from_name(name: &str) -> Option<Builtin1> {
+        Some(match name {
+            "sin" => Builtin1::Sin,
+            "cos" => Builtin1::Cos,
+            "tan" => Builtin1::Tan,
+            "sqrt" | "sqrtf" => Builtin1::Sqrt,
+            "exp" => Builtin1::Exp,
+            "log" => Builtin1::Log,
+            "fabs" => Builtin1::Fabs,
+            "floor" => Builtin1::Floor,
+            "ceil" => Builtin1::Ceil,
+            _ => return None,
+        })
+    }
+
+    pub fn eval(self, v: f64) -> f64 {
+        match self {
+            Builtin1::Sin => v.sin(),
+            Builtin1::Cos => v.cos(),
+            Builtin1::Tan => v.tan(),
+            Builtin1::Sqrt => v.sqrt(),
+            Builtin1::Exp => v.exp(),
+            Builtin1::Log => v.ln(),
+            Builtin1::Fabs => v.abs(),
+            Builtin1::Floor => v.floor(),
+            Builtin1::Ceil => v.ceil(),
+        }
+    }
+}
+
+/// Two-argument builtins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Builtin2 {
+    Fmin,
+    Fmax,
+    Pow,
+}
+
+impl Builtin2 {
+    pub fn from_name(name: &str) -> Option<Builtin2> {
+        Some(match name {
+            "fmin" => Builtin2::Fmin,
+            "fmax" => Builtin2::Fmax,
+            "pow" => Builtin2::Pow,
+            _ => return None,
+        })
+    }
+}
+
+/// Where an lvalue/rvalue slot lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Storage {
+    /// Frame-relative local slot.
+    Local(u16),
+    /// Module-global slot.
+    Global(u16),
+}
+
+/// One VM instruction. All variants are `Copy`; jump targets are
+/// absolute indices into the owning function's `code`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    ConstInt(i64),
+    ConstFloat(f64),
+    LoadLocal(u16),
+    StoreLocal(u16),
+    /// Declaration store: coerce to the declared scalar type first
+    /// (`int x = 1.5;` truncates, `float x = 3;` promotes).
+    StoreLocalCoerce(u16, Scalar),
+    LoadGlobal(u16),
+    StoreGlobal(u16),
+    /// Pop rhs, apply `old <op> rhs` against the slot, store back.
+    /// Mirrors the tree-walker's compound assignment (old value is read
+    /// *after* the rhs evaluates).
+    CompoundLocal(u16, BinOp),
+    CompoundGlobal(u16, BinOp),
+    /// Re-zero a declared scalar slot (a `Decl` re-executes per loop
+    /// iteration in the tree-walker, resetting the variable).
+    ZeroLocal(u16, Scalar),
+    /// Allocate a fresh arena array for a local array declaration
+    /// (again per-execution, matching the tree-walker). `dims` indexes
+    /// [`Module::array_dims`].
+    AllocLocalArray { slot: u16, dims: u16 },
+    /// `base[i...]` read: pops `rank` indices (last on top), counts
+    /// `rank` address ops + one element read attributed to `name`.
+    LoadIndex { base: Storage, rank: u8, name: u32 },
+    /// `base[i...] (op)= v`: pops `rank` indices then the rhs value.
+    StoreIndex {
+        base: Storage,
+        rank: u8,
+        name: u32,
+        op: AssignOp,
+    },
+    /// Pops rhs then lhs; applies the operator with the tree-walker's
+    /// int-fast-path / float-promotion and op-count semantics.
+    Bin(BinOp),
+    Neg,
+    Not,
+    CastInt,
+    CastFloat,
+    /// `total.cmp += 1` — the explicit branch/loop-condition count the
+    /// tree-walker performs besides the comparison itself.
+    BumpCmp,
+    Jump(u32),
+    /// Pops; jumps when falsy. Counts nothing (callers emit `BumpCmp`).
+    JumpIfFalse(u32),
+    /// `&&` lhs check: pops, counts one cmp; when falsy pushes `Int(0)`
+    /// and jumps past the rhs.
+    AndCheck(u32),
+    /// `||` lhs check: pops, counts one cmp; when truthy pushes `Int(1)`
+    /// and jumps past the rhs.
+    OrCheck(u32),
+    /// Pop a value, push `Int(truthy as i64)` (no counts) — normalizes
+    /// the rhs of `&&`/`||`.
+    ToBool,
+    Pop,
+    /// Loop header entered: push loop stack entry (snapshot) and count
+    /// one entry.
+    LoopEnter(LoopId),
+    /// One iteration admitted (condition held).
+    LoopTrip(LoopId),
+    /// Loop exited: pop the stack entry, attribute the op-count delta.
+    LoopExit,
+    /// Call a user function (index into [`Module::funcs`]); pops `argc`
+    /// arguments (first argument deepest).
+    Call { func: u16, argc: u8 },
+    Builtin1(Builtin1),
+    Builtin2(Builtin2),
+    /// Pop the return value, unwind the frame (attributing any still-
+    /// open loops of this frame), and resume the caller.
+    Return,
+    /// Deferred runtime error (message in [`Module::traps`]). Emitted
+    /// where the tree-walker would fail at execution time, so programs
+    /// whose errors live in dead code behave identically.
+    Trap(u32),
+}
+
+/// A compiled function.
+#[derive(Debug, Clone)]
+pub struct FuncCode {
+    pub name: String,
+    /// Original parameters (used for call-site type checks).
+    pub params: Vec<Param>,
+    /// Total frame slots (params occupy `0..params.len()`).
+    pub n_slots: u16,
+    pub code: Vec<Instr>,
+}
+
+/// How a global slot is materialized at VM construction.
+#[derive(Debug, Clone)]
+pub enum GlobalKind {
+    /// `#define` constant, integral value.
+    DefineInt(i64),
+    /// `#define` constant, fractional value.
+    DefineFloat(f64),
+    /// Scalar global, zero-initialized (`int` ⇒ `Int(0)`).
+    ScalarInt,
+    /// Scalar global, zero-initialized (`float`/`double`/`void`).
+    ScalarFloat,
+    /// Array global: arena-allocated at construction.
+    Array(Scalar, Vec<usize>),
+}
+
+/// One global slot.
+#[derive(Debug, Clone)]
+pub struct GlobalDecl {
+    pub name: String,
+    pub kind: GlobalKind,
+}
+
+/// A fully lowered program.
+#[derive(Debug, Clone)]
+pub struct Module {
+    pub funcs: Vec<FuncCode>,
+    /// First function with each name wins (mirrors `Program::function`).
+    pub func_names: FnvMap<String, u16>,
+    /// Index into `funcs` of the synthetic global-initializer chunk
+    /// (run once at VM construction, instrumented like the tree-walker).
+    pub init_func: u16,
+    pub globals: Vec<GlobalDecl>,
+    /// Final name → slot binding (later declarations shadow earlier).
+    pub global_names: FnvMap<String, u16>,
+    /// Interned array names for footprint attribution.
+    pub names: Vec<String>,
+    /// Dim tables for `AllocLocalArray`.
+    pub array_dims: Vec<(Scalar, Vec<usize>)>,
+    /// Messages for `Trap`.
+    pub traps: Vec<String>,
+    pub loop_count: u32,
+}
+
+impl Module {
+    pub fn func(&self, name: &str) -> Option<u16> {
+        self.func_names.get(name).copied()
+    }
+
+    /// Total compiled instruction count (diagnostics / tests).
+    pub fn code_len(&self) -> usize {
+        self.funcs.iter().map(|f| f.code.len()).sum()
+    }
+}

@@ -1,0 +1,189 @@
+//! Execution-engine abstraction: tree-walker oracle vs bytecode VM.
+//!
+//! The pipeline's dynamic stages (profiling runs, numeric verification,
+//! GA fitness) only need a small surface: run a function, read the
+//! profile, inspect globals/arrays. Both engines implement it:
+//!
+//! * [`Interp`] — the tree-walking *semantics oracle*. Slow, simple,
+//!   and the definition of correct behavior.
+//! * [`Vm`] — the slot-resolved bytecode engine (§Perf), the default.
+//!   The differential property test (`tests/vm_differential.rs`) pins
+//!   it to the oracle: identical results, `OpCounts`, and per-loop
+//!   profiles over randomized programs.
+
+use super::ast::Scalar;
+use super::interp::{Interp, Profile};
+use super::value::{ArrayObj, ArrayRef, Value};
+use super::vm::Vm;
+use super::{MiniCError, Program};
+
+/// What the analysis/verification layers need from an executor.
+pub trait Engine {
+    /// Call a function by name.
+    fn call(
+        &mut self,
+        name: &str,
+        args: &[Value],
+    ) -> Result<Value, MiniCError>;
+
+    /// Profile accumulated so far.
+    fn profile(&self) -> Profile;
+
+    /// The global named `name`, if it is an array.
+    fn global_array(&self, name: &str) -> Option<ArrayRef>;
+
+    /// The global named `name`, if it is a scalar.
+    fn global_scalar(&self, name: &str) -> Option<f64>;
+
+    fn array(&self, r: ArrayRef) -> &ArrayObj;
+
+    fn array_mut(&mut self, r: ArrayRef) -> &mut ArrayObj;
+
+    /// Allocate an array in the engine's arena (input setup).
+    fn alloc_array(&mut self, elem: Scalar, dims: Vec<usize>) -> ArrayRef;
+}
+
+impl Engine for Interp<'_> {
+    fn call(
+        &mut self,
+        name: &str,
+        args: &[Value],
+    ) -> Result<Value, MiniCError> {
+        Interp::call(self, name, args)
+    }
+
+    fn profile(&self) -> Profile {
+        Interp::profile(self)
+    }
+
+    fn global_array(&self, name: &str) -> Option<ArrayRef> {
+        Interp::global_array(self, name)
+    }
+
+    fn global_scalar(&self, name: &str) -> Option<f64> {
+        Interp::global_scalar(self, name)
+    }
+
+    fn array(&self, r: ArrayRef) -> &ArrayObj {
+        Interp::array(self, r)
+    }
+
+    fn array_mut(&mut self, r: ArrayRef) -> &mut ArrayObj {
+        Interp::array_mut(self, r)
+    }
+
+    fn alloc_array(&mut self, elem: Scalar, dims: Vec<usize>) -> ArrayRef {
+        Interp::alloc_array(self, elem, dims)
+    }
+}
+
+impl Engine for Vm {
+    fn call(
+        &mut self,
+        name: &str,
+        args: &[Value],
+    ) -> Result<Value, MiniCError> {
+        Vm::call(self, name, args)
+    }
+
+    fn profile(&self) -> Profile {
+        Vm::profile(self)
+    }
+
+    fn global_array(&self, name: &str) -> Option<ArrayRef> {
+        Vm::global_array(self, name)
+    }
+
+    fn global_scalar(&self, name: &str) -> Option<f64> {
+        Vm::global_scalar(self, name)
+    }
+
+    fn array(&self, r: ArrayRef) -> &ArrayObj {
+        Vm::array(self, r)
+    }
+
+    fn array_mut(&mut self, r: ArrayRef) -> &mut ArrayObj {
+        Vm::array_mut(self, r)
+    }
+
+    fn alloc_array(&mut self, elem: Scalar, dims: Vec<usize>) -> ArrayRef {
+        Vm::alloc_array(self, elem, dims)
+    }
+}
+
+/// Which engine to execute MiniC with. The VM is the default everywhere;
+/// the tree-walker stays selectable (CLI `--engine interp`) as the
+/// oracle and fallback.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Tree-walking interpreter (semantics oracle).
+    TreeWalk,
+    /// Slot-resolved bytecode VM (§Perf fast path).
+    #[default]
+    Bytecode,
+}
+
+impl EngineKind {
+    /// Parse a CLI-facing name.
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "interp" | "treewalk" | "oracle" => Some(EngineKind::TreeWalk),
+            "vm" | "bytecode" => Some(EngineKind::Bytecode),
+            _ => None,
+        }
+    }
+
+    /// Construct the engine for `prog`.
+    pub fn build<'p>(
+        self,
+        prog: &'p Program,
+    ) -> Result<Box<dyn Engine + 'p>, MiniCError> {
+        Ok(match self {
+            EngineKind::TreeWalk => Box::new(Interp::new(prog)?),
+            EngineKind::Bytecode => Box::new(Vm::new(prog)?),
+        })
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EngineKind::TreeWalk => "interp",
+            EngineKind::Bytecode => "vm",
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::parse;
+
+    const SRC: &str = "
+#define N 6
+float a[N];
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 1.5; }
+    return 0;
+}";
+
+    #[test]
+    fn both_engines_run_and_agree() {
+        let prog = parse(SRC).unwrap();
+        for kind in [EngineKind::TreeWalk, EngineKind::Bytecode] {
+            let mut eng = kind.build(&prog).unwrap();
+            eng.call("main", &[]).unwrap();
+            let r = eng.global_array("a").unwrap();
+            assert_eq!(eng.array(r).data[4], 6.0, "{kind}");
+            assert_eq!(eng.profile().total.f_mul, 6, "{kind}");
+        }
+    }
+
+    #[test]
+    fn kind_parses_and_defaults() {
+        assert_eq!(EngineKind::default(), EngineKind::Bytecode);
+        assert_eq!(EngineKind::parse("interp"), Some(EngineKind::TreeWalk));
+        assert_eq!(EngineKind::parse("vm"), Some(EngineKind::Bytecode));
+        assert_eq!(EngineKind::parse("gpu"), None);
+    }
+}

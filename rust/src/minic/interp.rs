@@ -73,11 +73,11 @@ impl OpCounts {
     /// Element-wise addition (public counterpart used by the simulator).
     pub fn plus(&self, o: &OpCounts) -> OpCounts {
         let mut out = *self;
-        out.add_assign(o);
+        out.accumulate(o);
         out
     }
 
-    fn sub(&self, earlier: &OpCounts) -> OpCounts {
+    pub(crate) fn delta_from(&self, earlier: &OpCounts) -> OpCounts {
         OpCounts {
             f_add: self.f_add - earlier.f_add,
             f_mul: self.f_mul - earlier.f_mul,
@@ -92,7 +92,7 @@ impl OpCounts {
         }
     }
 
-    fn add_assign(&mut self, d: &OpCounts) {
+    pub(crate) fn accumulate(&mut self, d: &OpCounts) {
         self.f_add += d.f_add;
         self.f_mul += d.f_mul;
         self.f_div += d.f_div;
@@ -592,8 +592,8 @@ impl<'p> Interp<'p> {
 
     fn exit_loop(&mut self, id: LoopId, snapshot: OpCounts) {
         self.loop_stack.pop();
-        let delta = self.total.sub(&snapshot);
-        self.loop_slots[id.0 as usize].ops.add_assign(&delta);
+        let delta = self.total.delta_from(&snapshot);
+        self.loop_slots[id.0 as usize].ops.accumulate(&delta);
     }
 
     fn bump_loop_cmp(&mut self) {

@@ -8,23 +8,54 @@
 //! express the paper's evaluation applications (tdfir, MRI-Q): typed
 //! scalars/arrays/pointers, `for`/`while`/`if`, functions, math builtins,
 //! and `#define` constants.
+//!
+//! # Two execution engines (oracle vs fast path)
+//!
+//! Executable semantics comes in two interchangeable engines behind the
+//! [`Engine`] trait ([`engine`]):
+//!
+//! * **[`Interp`]** ([`interp`]) — the tree-walking interpreter, kept as
+//!   the *semantics oracle*: simple enough to audit, and the reference
+//!   every other executor is measured against. It resolves names through
+//!   scoped hash maps on every access, which makes it the slowest part
+//!   of the whole pipeline (profiling runs dominate the coordinator's
+//!   wall-clock; see `benches/pipeline_hotpath.rs`).
+//! * **[`Vm`]** ([`vm`]) — the slot-resolved bytecode VM, the *default
+//!   engine* for profiling, GA fitness, and numeric verification. The
+//!   [`resolve`] pass lowers the AST once ([`bytecode`]): identifiers
+//!   intern to dense frame/global slots, `#define`s fold to constants,
+//!   and loop-entry/trip/exit markers carry their [`LoopId`] so the VM
+//!   maintains the identical [`OpCounts`]/[`LoopProfile`] instrumentation
+//!   inline — no hashing or allocation on the per-iteration path.
+//!
+//! The two engines are pinned together by a differential property test
+//! (`tests/vm_differential.rs`): over randomized programs, final
+//! globals, totals, and per-loop profiles must match exactly. Engine
+//! selection is wired through [`engine::EngineKind`] (CLI: `--engine
+//! interp|vm`).
 
 pub mod ast;
+pub mod bytecode;
+pub mod engine;
 pub mod interp;
 pub mod lexer;
 pub mod parser;
 pub mod pretty;
+pub mod resolve;
 pub mod token;
 pub mod typecheck;
 pub mod value;
+pub mod vm;
 
 pub use ast::{
     AssignOp, BinOp, Expr, Function, LValue, LoopId, Param, Program, Scalar,
     Stmt, Type, UnOp,
 };
+pub use engine::{Engine, EngineKind};
 pub use interp::{Interp, LoopProfile, OpCounts, Profile};
 pub use parser::parse;
 pub use value::{ArrayObj, ArrayRef, Value};
+pub use vm::Vm;
 
 use std::fmt;
 

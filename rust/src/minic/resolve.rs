@@ -1,0 +1,705 @@
+//! Resolution + lowering: AST → slot-resolved bytecode (§Perf).
+//!
+//! One pass over the program does everything the tree-walker re-does on
+//! every execution:
+//!
+//! * **Name resolution** — lexical scopes are walked once here; every
+//!   variable becomes a dense frame slot (locals/params) or a global
+//!   slot index. Resolution is *positional*: a use site sees exactly the
+//!   bindings a running tree-walker would have declared by that point,
+//!   so shadowing, use-before-decl, and re-declaration behave
+//!   identically.
+//! * **`#define` folding** — a define reference becomes an inline
+//!   constant, unless the program somewhere assigns to that name (the
+//!   tree-walker models defines as mutable globals; folding would break
+//!   such programs, so they keep the slot).
+//! * **Interning** — array names used for footprint attribution become
+//!   `u32` ids.
+//! * **Deferred errors** — anything the tree-walker only rejects at
+//!   runtime (undeclared names, unknown functions, bad builtin arity,
+//!   rank > 4) lowers to a [`Instr::Trap`] at the equivalent execution
+//!   point.
+
+use std::collections::HashSet;
+
+use crate::util::fnv::FnvMap;
+
+use super::ast::*;
+use super::bytecode::{
+    Builtin1, Builtin2, FuncCode, GlobalDecl, GlobalKind, Instr, Module,
+    Storage,
+};
+use super::MiniCError;
+
+/// Maximum supported array rank (fixed index buffer in the VM).
+pub const MAX_RANK: usize = 4;
+
+/// Lower a parsed program to a [`Module`].
+///
+/// Fails only where [`super::Interp::new`] would fail at construction
+/// (pointer-typed globals have no binding to allocate).
+pub fn compile(prog: &Program) -> Result<Module, MiniCError> {
+    let mut c = Compiler {
+        prog,
+        names: Vec::new(),
+        name_ids: FnvMap::default(),
+        traps: Vec::new(),
+        trap_ids: FnvMap::default(),
+        array_dims: Vec::new(),
+        globals: Vec::new(),
+        global_names: FnvMap::default(),
+        func_names: FnvMap::default(),
+        assigned: assigned_var_names(prog),
+    };
+
+    // Defines become (potentially foldable) globals, in source order.
+    for (name, val) in &prog.defines {
+        let kind = if val.fract() == 0.0 {
+            GlobalKind::DefineInt(*val as i64)
+        } else {
+            GlobalKind::DefineFloat(*val)
+        };
+        c.push_global(name, kind);
+    }
+
+    // Function table before anything compiles (global initializers may
+    // call functions; calls resolve by index, first name wins).
+    for (i, f) in prog.functions.iter().enumerate() {
+        let idx = i as u16;
+        c.func_names.entry(f.name.clone()).or_insert(idx);
+    }
+
+    // Global declarations: allocate slots in order, compile initializer
+    // expressions into the synthetic init chunk. Each initializer only
+    // sees defines and the globals declared up to (and including) its
+    // own declaration, exactly like the tree-walker's sequential pass.
+    let mut init = FnCompiler::new();
+    for g in &prog.globals {
+        if let Stmt::Decl { name, ty, init: ie, .. } = g {
+            let kind = match ty {
+                Type::Array(elem, dims) => {
+                    GlobalKind::Array(*elem, dims.clone())
+                }
+                Type::Ptr(_) => {
+                    return Err(MiniCError::Runtime(
+                        "pointer declarations require an argument binding"
+                            .into(),
+                    ))
+                }
+                Type::Scalar(Scalar::Int) => GlobalKind::ScalarInt,
+                Type::Scalar(_) => GlobalKind::ScalarFloat,
+            };
+            let slot = c.push_global(name, kind);
+            if let Some(e) = ie {
+                init.expr(&mut c, e);
+                init.code.push(Instr::StoreGlobal(slot));
+            }
+        }
+    }
+    init.code.push(Instr::ConstInt(0));
+    init.code.push(Instr::Return);
+
+    let mut funcs = Vec::with_capacity(prog.functions.len() + 1);
+    for f in prog.functions.iter() {
+        funcs.push(compile_function(&mut c, f));
+    }
+    let init_func = funcs.len() as u16;
+    funcs.push(FuncCode {
+        name: "@init".into(),
+        params: Vec::new(),
+        n_slots: 0,
+        code: init.code,
+    });
+
+    Ok(Module {
+        funcs,
+        func_names: c.func_names,
+        init_func,
+        globals: c.globals,
+        global_names: c.global_names,
+        names: c.names,
+        array_dims: c.array_dims,
+        traps: c.traps,
+        loop_count: prog.loop_count,
+    })
+}
+
+/// Names assigned anywhere via `LValue::Var` — a define in this set is
+/// mutated at runtime and must keep its global slot (no folding).
+fn assigned_var_names(prog: &Program) -> HashSet<String> {
+    let mut out = HashSet::new();
+    prog.walk_stmts(&mut |s| {
+        if let Stmt::Assign { target: LValue::Var(n), .. } = s {
+            out.insert(n.clone());
+        }
+    });
+    out
+}
+
+struct Compiler<'p> {
+    prog: &'p Program,
+    names: Vec<String>,
+    name_ids: FnvMap<String, u32>,
+    traps: Vec<String>,
+    trap_ids: FnvMap<String, u32>,
+    array_dims: Vec<(Scalar, Vec<usize>)>,
+    globals: Vec<GlobalDecl>,
+    global_names: FnvMap<String, u16>,
+    func_names: FnvMap<String, u16>,
+    assigned: HashSet<String>,
+}
+
+impl<'p> Compiler<'p> {
+    fn push_global(&mut self, name: &str, kind: GlobalKind) -> u16 {
+        let slot = self.globals.len() as u16;
+        self.globals.push(GlobalDecl {
+            name: name.to_string(),
+            kind,
+        });
+        // Later bindings shadow earlier ones, like map insertion in the
+        // tree-walker's global environment.
+        self.global_names.insert(name.to_string(), slot);
+        slot
+    }
+
+    fn intern(&mut self, name: &str) -> u32 {
+        if let Some(id) = self.name_ids.get(name) {
+            return *id;
+        }
+        let id = self.names.len() as u32;
+        self.names.push(name.to_string());
+        self.name_ids.insert(name.to_string(), id);
+        id
+    }
+
+    fn trap_id(&mut self, msg: String) -> u32 {
+        if let Some(id) = self.trap_ids.get(&msg) {
+            return *id;
+        }
+        let id = self.traps.len() as u32;
+        self.traps.push(msg.clone());
+        self.trap_ids.insert(msg, id);
+        id
+    }
+
+    /// The define value for a global slot, when folding is allowed.
+    fn foldable(&self, name: &str, slot: u16) -> Option<Instr> {
+        if self.assigned.contains(name) {
+            return None;
+        }
+        match &self.globals[slot as usize].kind {
+            GlobalKind::DefineInt(v) => Some(Instr::ConstInt(*v)),
+            GlobalKind::DefineFloat(v) => Some(Instr::ConstFloat(*v)),
+            _ => None,
+        }
+    }
+}
+
+fn compile_function(c: &mut Compiler, f: &Function) -> FuncCode {
+    let mut fc = FnCompiler::new();
+    fc.scopes.push(FnvMap::default());
+    for p in &f.params {
+        let slot = fc.new_slot();
+        fc.bind(&p.name, slot);
+    }
+    for s in &f.body {
+        fc.stmt(c, s);
+    }
+    // Fall-through return (the tree-walker yields `Int(0)`).
+    fc.code.push(Instr::ConstInt(0));
+    fc.code.push(Instr::Return);
+    FuncCode {
+        name: f.name.clone(),
+        params: f.params.clone(),
+        n_slots: fc.n_slots,
+        code: fc.code,
+    }
+}
+
+struct FnCompiler {
+    scopes: Vec<FnvMap<String, u16>>,
+    n_slots: u16,
+    code: Vec<Instr>,
+}
+
+impl FnCompiler {
+    fn new() -> Self {
+        FnCompiler {
+            scopes: Vec::new(),
+            n_slots: 0,
+            code: Vec::new(),
+        }
+    }
+
+    fn new_slot(&mut self) -> u16 {
+        let slot = self.n_slots;
+        // Frames are bounded by source size; u16 overflow would need
+        // >65k declarations in one function.
+        self.n_slots += 1;
+        slot
+    }
+
+    fn bind(&mut self, name: &str, slot: u16) {
+        self.scopes
+            .last_mut()
+            .expect("scope")
+            .insert(name.to_string(), slot);
+    }
+
+    fn resolve_local(&self, name: &str) -> Option<u16> {
+        self.scopes.iter().rev().find_map(|s| s.get(name)).copied()
+    }
+
+    /// Resolve to local slot / global slot, or `None` (undeclared).
+    fn resolve(&self, c: &Compiler, name: &str) -> Option<Storage> {
+        if let Some(slot) = self.resolve_local(name) {
+            return Some(Storage::Local(slot));
+        }
+        c.global_names.get(name).copied().map(Storage::Global)
+    }
+
+    fn here(&self) -> u32 {
+        self.code.len() as u32
+    }
+
+    fn patch(&mut self, at: usize) {
+        let target = self.here();
+        self.code[at] = match self.code[at] {
+            Instr::Jump(_) => Instr::Jump(target),
+            Instr::JumpIfFalse(_) => Instr::JumpIfFalse(target),
+            Instr::AndCheck(_) => Instr::AndCheck(target),
+            Instr::OrCheck(_) => Instr::OrCheck(target),
+            other => unreachable!("patching {other:?}"),
+        };
+    }
+
+    fn trap(&mut self, c: &mut Compiler, msg: String) {
+        let id = c.trap_id(msg);
+        self.code.push(Instr::Trap(id));
+    }
+
+    fn block(&mut self, c: &mut Compiler, stmts: &[Stmt]) {
+        // Always push a compile-time scope: positional binding makes
+        // this equivalent to the tree-walker's conditional scope push.
+        self.scopes.push(FnvMap::default());
+        for s in stmts {
+            self.stmt(c, s);
+        }
+        self.scopes.pop();
+    }
+
+    fn stmt(&mut self, c: &mut Compiler, s: &Stmt) {
+        match s {
+            Stmt::Decl { name, ty, init, .. } => self.decl(c, name, ty, init),
+            Stmt::Assign { target, op, value, .. } => {
+                self.assign(c, target, *op, value)
+            }
+            Stmt::If {
+                cond,
+                then_branch,
+                else_branch,
+                ..
+            } => {
+                self.expr(c, cond);
+                self.code.push(Instr::BumpCmp);
+                let jf = self.code.len();
+                self.code.push(Instr::JumpIfFalse(0));
+                self.block(c, then_branch);
+                let jend = self.code.len();
+                self.code.push(Instr::Jump(0));
+                self.patch(jf);
+                self.block(c, else_branch);
+                self.patch(jend);
+            }
+            Stmt::For {
+                id,
+                init,
+                cond,
+                step,
+                body,
+                ..
+            } => {
+                self.scopes.push(FnvMap::default());
+                if let Some(s) = init {
+                    self.stmt(c, s);
+                }
+                self.code.push(Instr::LoopEnter(*id));
+                let top = self.here();
+                let jf = match cond {
+                    Some(cexpr) => {
+                        self.code.push(Instr::BumpCmp);
+                        self.expr(c, cexpr);
+                        let jf = self.code.len();
+                        self.code.push(Instr::JumpIfFalse(0));
+                        Some(jf)
+                    }
+                    None => None,
+                };
+                self.code.push(Instr::LoopTrip(*id));
+                self.block(c, body);
+                if let Some(s) = step {
+                    self.stmt(c, s);
+                }
+                self.code.push(Instr::Jump(top));
+                if let Some(jf) = jf {
+                    self.patch(jf);
+                }
+                self.code.push(Instr::LoopExit);
+                self.scopes.pop();
+            }
+            Stmt::While { id, cond, body, .. } => {
+                self.code.push(Instr::LoopEnter(*id));
+                let top = self.here();
+                self.code.push(Instr::BumpCmp);
+                self.expr(c, cond);
+                let jf = self.code.len();
+                self.code.push(Instr::JumpIfFalse(0));
+                self.code.push(Instr::LoopTrip(*id));
+                self.block(c, body);
+                self.code.push(Instr::Jump(top));
+                self.patch(jf);
+                self.code.push(Instr::LoopExit);
+            }
+            Stmt::Return { value, .. } => {
+                match value {
+                    Some(e) => self.expr(c, e),
+                    None => self.code.push(Instr::ConstInt(0)),
+                }
+                self.code.push(Instr::Return);
+            }
+            Stmt::ExprStmt { expr, .. } => {
+                self.expr(c, expr);
+                self.code.push(Instr::Pop);
+            }
+        }
+    }
+
+    fn decl(
+        &mut self,
+        c: &mut Compiler,
+        name: &str,
+        ty: &Type,
+        init: &Option<Expr>,
+    ) {
+        match ty {
+            Type::Scalar(sc) => {
+                let slot = self.new_slot();
+                // Zero + bind first: the tree-walker declares the zeroed
+                // variable before evaluating the initializer, so an init
+                // expression referencing `name` sees the fresh zero.
+                self.code.push(Instr::ZeroLocal(slot, *sc));
+                self.bind(name, slot);
+                if let Some(e) = init {
+                    self.expr(c, e);
+                    self.code.push(Instr::StoreLocalCoerce(slot, *sc));
+                }
+            }
+            Type::Array(elem, dims) => {
+                let slot = self.new_slot();
+                let dims_id = c.array_dims.len() as u16;
+                c.array_dims.push((*elem, dims.clone()));
+                self.code.push(Instr::AllocLocalArray { slot, dims: dims_id });
+                self.bind(name, slot);
+                if let Some(e) = init {
+                    // Degenerate (`float a[N] = expr;`): the tree-walker
+                    // overwrites the handle with the scalar, uncoerced.
+                    self.expr(c, e);
+                    self.code.push(Instr::StoreLocal(slot));
+                }
+            }
+            Type::Ptr(_) => {
+                // The tree-walker fails when the declaration executes.
+                self.trap(
+                    c,
+                    "pointer declarations require an argument binding".into(),
+                );
+                let slot = self.new_slot();
+                self.bind(name, slot);
+            }
+        }
+    }
+
+    fn assign(
+        &mut self,
+        c: &mut Compiler,
+        target: &LValue,
+        op: AssignOp,
+        value: &Expr,
+    ) {
+        // Rhs evaluates before the target is resolved or read.
+        self.expr(c, value);
+        match target {
+            LValue::Var(name) => match self.resolve(c, name) {
+                Some(Storage::Local(slot)) => {
+                    self.code.push(match compound_op(op) {
+                        None => Instr::StoreLocal(slot),
+                        Some(bin) => Instr::CompoundLocal(slot, bin),
+                    });
+                }
+                Some(Storage::Global(slot)) => {
+                    self.code.push(match compound_op(op) {
+                        None => Instr::StoreGlobal(slot),
+                        Some(bin) => Instr::CompoundGlobal(slot, bin),
+                    });
+                }
+                None => {
+                    let msg = if op == AssignOp::Set {
+                        format!("assignment to undeclared `{name}`")
+                    } else {
+                        format!("undeclared `{name}`")
+                    };
+                    self.trap(c, msg);
+                }
+            },
+            LValue::Index { base, indices } => {
+                for i in indices {
+                    self.expr(c, i);
+                }
+                if indices.len() > MAX_RANK {
+                    let msg = format!(
+                        "array rank {} exceeds supported maximum",
+                        indices.len()
+                    );
+                    self.trap(c, msg);
+                    return;
+                }
+                let name = c.intern(base);
+                match self.resolve(c, base) {
+                    Some(storage) => self.code.push(Instr::StoreIndex {
+                        base: storage,
+                        rank: indices.len() as u8,
+                        name,
+                        op,
+                    }),
+                    None => {
+                        self.trap(c, format!("undeclared `{base}`"));
+                    }
+                }
+            }
+        }
+    }
+
+    fn expr(&mut self, c: &mut Compiler, e: &Expr) {
+        match e {
+            Expr::IntLit(v) => self.code.push(Instr::ConstInt(*v)),
+            Expr::FloatLit(v) => self.code.push(Instr::ConstFloat(*v)),
+            // Format strings evaluate to 0 (only printf consumes them).
+            Expr::StrLit(_) => self.code.push(Instr::ConstInt(0)),
+            Expr::Var(name) => match self.resolve(c, name) {
+                Some(Storage::Local(slot)) => {
+                    self.code.push(Instr::LoadLocal(slot))
+                }
+                Some(Storage::Global(slot)) => {
+                    let instr = match c.foldable(name, slot) {
+                        Some(folded) => folded,
+                        None => Instr::LoadGlobal(slot),
+                    };
+                    self.code.push(instr);
+                }
+                None => self.trap(c, format!("undeclared `{name}`")),
+            },
+            Expr::Index { base, indices } => {
+                for i in indices {
+                    self.expr(c, i);
+                }
+                if indices.len() > MAX_RANK {
+                    let msg = format!(
+                        "array rank {} exceeds supported maximum",
+                        indices.len()
+                    );
+                    self.trap(c, msg);
+                    return;
+                }
+                let name = c.intern(base);
+                match self.resolve(c, base) {
+                    Some(storage) => self.code.push(Instr::LoadIndex {
+                        base: storage,
+                        rank: indices.len() as u8,
+                        name,
+                    }),
+                    None => self.trap(c, format!("undeclared `{base}`")),
+                }
+            }
+            Expr::Bin { op: BinOp::And, lhs, rhs } => {
+                self.expr(c, lhs);
+                let at = self.code.len();
+                self.code.push(Instr::AndCheck(0));
+                self.expr(c, rhs);
+                self.code.push(Instr::ToBool);
+                self.patch(at);
+            }
+            Expr::Bin { op: BinOp::Or, lhs, rhs } => {
+                self.expr(c, lhs);
+                let at = self.code.len();
+                self.code.push(Instr::OrCheck(0));
+                self.expr(c, rhs);
+                self.code.push(Instr::ToBool);
+                self.patch(at);
+            }
+            Expr::Bin { op, lhs, rhs } => {
+                self.expr(c, lhs);
+                self.expr(c, rhs);
+                self.code.push(Instr::Bin(*op));
+            }
+            Expr::Un { op, operand } => {
+                self.expr(c, operand);
+                self.code.push(match op {
+                    UnOp::Neg => Instr::Neg,
+                    UnOp::Not => Instr::Not,
+                });
+            }
+            Expr::Call { name, args } => self.call(c, name, args),
+            Expr::Cast { to, operand } => {
+                self.expr(c, operand);
+                self.code.push(match to {
+                    Scalar::Int => Instr::CastInt,
+                    _ => Instr::CastFloat,
+                });
+            }
+        }
+    }
+
+    /// Calls follow the tree-walker's dispatch order exactly: 1-arg
+    /// builtins, then printf / 2-arg builtins, then user functions.
+    fn call(&mut self, c: &mut Compiler, name: &str, args: &[Expr]) {
+        if let Some(b) = Builtin1::from_name(name) {
+            if args.len() != 1 {
+                // Arity is checked before any argument evaluates.
+                self.trap(c, format!("`{name}` expects 1 argument"));
+                return;
+            }
+            self.expr(c, &args[0]);
+            self.code.push(Instr::Builtin1(b));
+            return;
+        }
+        if name == "printf" {
+            // Evaluate args for effect-parity (format string skipped).
+            for a in args.iter().skip(1) {
+                self.expr(c, a);
+                self.code.push(Instr::Pop);
+            }
+            self.code.push(Instr::ConstInt(0));
+            return;
+        }
+        if let Some(b) = Builtin2::from_name(name) {
+            if args.len() != 2 {
+                self.trap(c, format!("`{name}` expects 2 arguments"));
+                return;
+            }
+            self.expr(c, &args[0]);
+            self.expr(c, &args[1]);
+            self.code.push(Instr::Builtin2(b));
+            return;
+        }
+        // User function: arguments evaluate before the lookup/arity
+        // failure surfaces, matching the tree-walker.
+        for a in args {
+            self.expr(c, a);
+        }
+        match c.func_names.get(name).copied() {
+            None => {
+                self.trap(c, format!("no function `{name}`"));
+            }
+            Some(idx) => {
+                let expected =
+                    c.prog.functions[idx as usize].params.len();
+                if expected != args.len() {
+                    let msg = format!(
+                        "`{name}` expects {expected} args, got {}",
+                        args.len()
+                    );
+                    self.trap(c, msg);
+                } else {
+                    self.code.push(Instr::Call {
+                        func: idx,
+                        argc: args.len() as u8,
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn compound_op(op: AssignOp) -> Option<BinOp> {
+    match op {
+        AssignOp::Set => None,
+        AssignOp::AddSet => Some(BinOp::Add),
+        AssignOp::SubSet => Some(BinOp::Sub),
+        AssignOp::MulSet => Some(BinOp::Mul),
+        AssignOp::DivSet => Some(BinOp::Div),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::parse;
+
+    #[test]
+    fn compiles_minimal_program() {
+        let prog = parse("int main() { return 1 + 2; }").unwrap();
+        let m = compile(&prog).unwrap();
+        assert_eq!(m.funcs.len(), 2); // main + @init
+        assert!(m.func("main").is_some());
+        let main = &m.funcs[m.func("main").unwrap() as usize];
+        assert!(main.code.contains(&Instr::Bin(BinOp::Add)));
+    }
+
+    #[test]
+    fn defines_fold_to_constants() {
+        let prog = parse(
+            "#define N 8\nint main() { return N; }",
+        )
+        .unwrap();
+        let m = compile(&prog).unwrap();
+        let main = &m.funcs[m.func("main").unwrap() as usize];
+        assert!(main.code.contains(&Instr::ConstInt(8)));
+        assert!(!main
+            .code
+            .iter()
+            .any(|i| matches!(i, Instr::LoadGlobal(_))));
+    }
+
+    #[test]
+    fn assigned_define_keeps_global_slot() {
+        let prog = parse(
+            "#define N 8\nint main() { N = 9; return N; }",
+        )
+        .unwrap();
+        let m = compile(&prog).unwrap();
+        let main = &m.funcs[m.func("main").unwrap() as usize];
+        assert!(main
+            .code
+            .iter()
+            .any(|i| matches!(i, Instr::LoadGlobal(_))));
+    }
+
+    #[test]
+    fn loops_carry_profile_markers() {
+        let prog = parse(
+            "int main() { for (int i = 0; i < 3; i++) { } return 0; }",
+        )
+        .unwrap();
+        let m = compile(&prog).unwrap();
+        let main = &m.funcs[m.func("main").unwrap() as usize];
+        assert!(main.code.contains(&Instr::LoopEnter(LoopId(0))));
+        assert!(main.code.contains(&Instr::LoopTrip(LoopId(0))));
+        assert!(main.code.contains(&Instr::LoopExit));
+    }
+
+    #[test]
+    fn undeclared_name_becomes_trap() {
+        let prog =
+            parse("int main() { if (0) { return ghost; } return 0; }")
+                .unwrap();
+        let m = compile(&prog).unwrap();
+        let main = &m.funcs[m.func("main").unwrap() as usize];
+        assert!(main.code.iter().any(|i| matches!(i, Instr::Trap(_))));
+    }
+
+    #[test]
+    fn pointer_global_rejected_at_compile() {
+        let prog = parse("float *p;\nint main() { return 0; }").unwrap();
+        assert!(compile(&prog).is_err());
+    }
+}

@@ -1,0 +1,921 @@
+//! Slot-resolved bytecode VM for MiniC (§Perf).
+//!
+//! Drop-in replacement for the tree-walking [`super::Interp`] on the
+//! pipeline's hot paths (profiling runs, GA fitness, numeric
+//! verification). The program is lowered once by [`super::resolve`];
+//! execution is a flat dispatch loop over [`Instr`]s with:
+//!
+//! * dense frame slots instead of `HashMap<String, Value>` scopes,
+//! * preallocated operand/locals/frame stacks (no per-iteration
+//!   allocation; local arrays are the only runtime allocation, exactly
+//!   as in the tree-walker),
+//! * the [`OpCounts`] / per-loop profile instrumentation maintained
+//!   inline by the same rules as the tree-walker, so `profile()` is
+//!   bit-identical (the differential property test enforces this).
+//!
+//! The tree-walker remains the *semantics oracle*; this VM is the
+//! default engine (see [`super::engine`]).
+
+use std::collections::HashMap;
+
+use super::ast::{LoopId, Scalar, Type};
+use super::bytecode::{Builtin2, Instr, Module, Storage};
+use super::interp::{LoopProfile, OpCounts, Profile};
+use super::resolve;
+use super::value::{ArrayObj, ArrayRef, Value};
+use super::{BinOp, MiniCError, Program};
+
+/// Runaway guard, same budget as the tree-walker.
+const MAX_STEPS: u64 = 2_000_000_000;
+
+/// Call-depth guard (the tree-walker recurses on the Rust stack; the VM
+/// heap-allocates frames, so it bounds depth explicitly instead).
+const MAX_FRAMES: usize = 10_000;
+
+/// Unboxed runtime value (the VM-internal `Value`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Slot {
+    Int(i64),
+    Float(f64),
+    Arr(u32),
+}
+
+fn slot_of_value(v: &Value) -> Slot {
+    match v {
+        Value::Int(i) => Slot::Int(*i),
+        Value::Float(f) => Slot::Float(*f),
+        Value::Array(r) => Slot::Arr(r.0 as u32),
+    }
+}
+
+fn value_of_slot(v: Slot) -> Value {
+    match v {
+        Slot::Int(i) => Value::Int(i),
+        Slot::Float(f) => Value::Float(f),
+        Slot::Arr(a) => Value::Array(ArrayRef(a as usize)),
+    }
+}
+
+fn slot_as_f64(v: Slot) -> Result<f64, MiniCError> {
+    match v {
+        Slot::Int(i) => Ok(i as f64),
+        Slot::Float(f) => Ok(f),
+        Slot::Arr(_) => {
+            Err(MiniCError::Runtime("array used as scalar".into()))
+        }
+    }
+}
+
+fn slot_as_i64(v: Slot) -> Result<i64, MiniCError> {
+    match v {
+        Slot::Int(i) => Ok(i),
+        Slot::Float(f) => Ok(f as i64),
+        Slot::Arr(_) => {
+            Err(MiniCError::Runtime("array used as integer".into()))
+        }
+    }
+}
+
+fn truthy(v: Slot) -> Result<bool, MiniCError> {
+    Ok(slot_as_f64(v)? != 0.0)
+}
+
+fn int_cmp(op: BinOp, a: i64, b: i64) -> bool {
+    match op {
+        BinOp::Eq => a == b,
+        BinOp::Ne => a != b,
+        BinOp::Lt => a < b,
+        BinOp::Gt => a > b,
+        BinOp::Le => a <= b,
+        BinOp::Ge => a >= b,
+        _ => unreachable!(),
+    }
+}
+
+fn float_cmp(op: BinOp, a: f64, b: f64) -> bool {
+    match op {
+        BinOp::Eq => a == b,
+        BinOp::Ne => a != b,
+        BinOp::Lt => a < b,
+        BinOp::Gt => a > b,
+        BinOp::Le => a <= b,
+        BinOp::Ge => a >= b,
+        _ => unreachable!(),
+    }
+}
+
+/// Dense per-loop counters (footprints as interned-id vecs).
+#[derive(Debug, Default, Clone)]
+struct VmLoopSlot {
+    entries: u64,
+    trips: u64,
+    ops: OpCounts,
+    arrays_read: Vec<u32>,
+    arrays_written: Vec<u32>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Frame {
+    func: u16,
+    ret_func: u16,
+    ret_pc: u32,
+    base: u32,
+    loop_base: u32,
+}
+
+/// The VM. One instance per program run (like `Interp`); `call` may be
+/// invoked repeatedly and counters accumulate.
+pub struct Vm {
+    module: Module,
+    pub arena: Vec<ArrayObj>,
+    globals: Vec<Slot>,
+    total: OpCounts,
+    loop_slots: Vec<VmLoopSlot>,
+    /// Active loops (across call frames, like the tree-walker's stack):
+    /// id + op-count snapshot at entry.
+    loop_stack: Vec<(LoopId, OpCounts)>,
+    stack: Vec<Slot>,
+    locals: Vec<Slot>,
+    frames: Vec<Frame>,
+    steps: u64,
+}
+
+impl Vm {
+    /// Lower `prog` and materialize globals (running global
+    /// initializers under instrumentation, like `Interp::new`).
+    pub fn new(prog: &Program) -> Result<Self, MiniCError> {
+        Self::from_module(resolve::compile(prog)?)
+    }
+
+    /// Build a VM from an already-compiled module.
+    pub fn from_module(module: Module) -> Result<Self, MiniCError> {
+        let loop_count = module.loop_count as usize;
+        let mut vm = Vm {
+            arena: Vec::new(),
+            globals: Vec::with_capacity(module.globals.len()),
+            total: OpCounts::default(),
+            loop_slots: vec![VmLoopSlot::default(); loop_count],
+            loop_stack: Vec::with_capacity(16),
+            stack: Vec::with_capacity(64),
+            locals: Vec::with_capacity(256),
+            frames: Vec::with_capacity(16),
+            steps: 0,
+            module,
+        };
+        for g in &vm.module.globals {
+            let slot = match &g.kind {
+                super::bytecode::GlobalKind::DefineInt(v) => Slot::Int(*v),
+                super::bytecode::GlobalKind::DefineFloat(v) => {
+                    Slot::Float(*v)
+                }
+                super::bytecode::GlobalKind::ScalarInt => Slot::Int(0),
+                super::bytecode::GlobalKind::ScalarFloat => Slot::Float(0.0),
+                super::bytecode::GlobalKind::Array(elem, dims) => {
+                    vm.arena.push(ArrayObj::new(*elem, dims.clone()));
+                    Slot::Arr((vm.arena.len() - 1) as u32)
+                }
+            };
+            vm.globals.push(slot);
+        }
+        let init = vm.module.init_func;
+        vm.run_entry(init, &[])?;
+        Ok(vm)
+    }
+
+    /// Call a function by name with the given arguments (drop-in for
+    /// `Interp::call`, same error surface).
+    pub fn call(
+        &mut self,
+        name: &str,
+        args: &[Value],
+    ) -> Result<Value, MiniCError> {
+        let func = self.module.func(name).ok_or_else(|| {
+            MiniCError::Runtime(format!("no function `{name}`"))
+        })?;
+        let params = &self.module.funcs[func as usize].params;
+        if params.len() != args.len() {
+            return Err(MiniCError::Runtime(format!(
+                "`{name}` expects {} args, got {}",
+                params.len(),
+                args.len()
+            )));
+        }
+        for (p, a) in params.iter().zip(args) {
+            match (&p.ty, a) {
+                (Type::Ptr(_) | Type::Array(..), Value::Array(_)) => {}
+                (Type::Scalar(_), Value::Array(_)) => {
+                    return Err(MiniCError::Runtime(format!(
+                        "array passed to scalar param `{}`",
+                        p.name
+                    )))
+                }
+                (Type::Ptr(_) | Type::Array(..), _) => {
+                    return Err(MiniCError::Runtime(format!(
+                        "scalar passed to array param `{}`",
+                        p.name
+                    )))
+                }
+                _ => {}
+            }
+        }
+        let slots: Vec<Slot> = args.iter().map(slot_of_value).collect();
+        let v = self.run_entry(func, &slots)?;
+        Ok(value_of_slot(v))
+    }
+
+    /// Allocate an array in the arena (harness-side input setup).
+    pub fn alloc_array(&mut self, elem: Scalar, dims: Vec<usize>) -> ArrayRef {
+        self.arena.push(ArrayObj::new(elem, dims));
+        ArrayRef(self.arena.len() - 1)
+    }
+
+    pub fn array(&self, r: ArrayRef) -> &ArrayObj {
+        &self.arena[r.0]
+    }
+
+    pub fn array_mut(&mut self, r: ArrayRef) -> &mut ArrayObj {
+        &mut self.arena[r.0]
+    }
+
+    /// The global named `name`, if it is an array.
+    pub fn global_array(&self, name: &str) -> Option<ArrayRef> {
+        match self.global_slot(name)? {
+            Slot::Arr(a) => Some(ArrayRef(a as usize)),
+            _ => None,
+        }
+    }
+
+    /// The global named `name`, if it is a scalar.
+    pub fn global_scalar(&self, name: &str) -> Option<f64> {
+        match self.global_slot(name)? {
+            Slot::Int(v) => Some(v as f64),
+            Slot::Float(v) => Some(v),
+            Slot::Arr(_) => None,
+        }
+    }
+
+    fn global_slot(&self, name: &str) -> Option<Slot> {
+        let idx = self.module.global_names.get(name)?;
+        Some(self.globals[*idx as usize])
+    }
+
+    /// Assemble the public [`Profile`] (identical shape and contents to
+    /// the tree-walker's: never-entered loops omitted).
+    pub fn profile(&self) -> Profile {
+        let mut loops = HashMap::new();
+        for (i, slot) in self.loop_slots.iter().enumerate() {
+            if slot.entries == 0 {
+                continue;
+            }
+            loops.insert(
+                LoopId(i as u32),
+                LoopProfile {
+                    entries: slot.entries,
+                    trips: slot.trips,
+                    ops: slot.ops,
+                    arrays_read: slot
+                        .arrays_read
+                        .iter()
+                        .map(|id| self.module.names[*id as usize].clone())
+                        .collect(),
+                    arrays_written: slot
+                        .arrays_written
+                        .iter()
+                        .map(|id| self.module.names[*id as usize].clone())
+                        .collect(),
+                },
+            );
+        }
+        Profile {
+            total: self.total,
+            loops,
+        }
+    }
+
+    // ---- execution ----
+
+    fn run_entry(
+        &mut self,
+        func: u16,
+        args: &[Slot],
+    ) -> Result<Slot, MiniCError> {
+        let entry_depth = self.frames.len();
+        let stack_mark = self.stack.len();
+        let locals_mark = self.locals.len();
+        let loops_mark = self.loop_stack.len();
+
+        let n_slots = self.module.funcs[func as usize].n_slots as usize;
+        if self.frames.len() >= MAX_FRAMES {
+            return Err(MiniCError::Runtime("call depth exceeded".into()));
+        }
+        let base = self.locals.len();
+        self.frames.push(Frame {
+            func,
+            ret_func: 0,
+            ret_pc: 0,
+            base: base as u32,
+            loop_base: loops_mark as u32,
+        });
+        self.locals.resize(base + n_slots, Slot::Int(0));
+        self.locals[base..base + args.len()].copy_from_slice(args);
+
+        match self.run(entry_depth) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                // Leave the VM reusable after a runtime error: unwind to
+                // the pre-call state (counters keep whatever accrued,
+                // like the tree-walker's).
+                self.frames.truncate(entry_depth);
+                self.stack.truncate(stack_mark);
+                self.locals.truncate(locals_mark);
+                self.loop_stack.truncate(loops_mark);
+                Err(e)
+            }
+        }
+    }
+
+    fn run(&mut self, entry_depth: usize) -> Result<Slot, MiniCError> {
+        let mut func = self.frames.last().expect("entry frame").func as usize;
+        let mut base =
+            self.frames.last().expect("entry frame").base as usize;
+        let mut pc: usize = 0;
+
+        loop {
+            let instr = self.module.funcs[func].code[pc];
+            pc += 1;
+            self.steps += 1;
+            if self.steps > MAX_STEPS {
+                return Err(MiniCError::Runtime(format!(
+                    "step limit exceeded ({MAX_STEPS})"
+                )));
+            }
+            match instr {
+                Instr::ConstInt(v) => self.stack.push(Slot::Int(v)),
+                Instr::ConstFloat(v) => self.stack.push(Slot::Float(v)),
+                Instr::LoadLocal(s) => {
+                    let v = self.locals[base + s as usize];
+                    self.stack.push(v);
+                }
+                Instr::StoreLocal(s) => {
+                    let v = self.stack.pop().expect("store value");
+                    self.locals[base + s as usize] = v;
+                }
+                Instr::StoreLocalCoerce(s, sc) => {
+                    let v = self.stack.pop().expect("store value");
+                    self.locals[base + s as usize] = coerce(sc, v);
+                }
+                Instr::LoadGlobal(s) => {
+                    self.stack.push(self.globals[s as usize])
+                }
+                Instr::StoreGlobal(s) => {
+                    let v = self.stack.pop().expect("store value");
+                    self.globals[s as usize] = v;
+                }
+                Instr::CompoundLocal(s, op) => {
+                    let rhs = self.stack.pop().expect("rhs");
+                    let old = self.locals[base + s as usize];
+                    let new = self.apply_bin(op, old, rhs)?;
+                    self.locals[base + s as usize] = new;
+                }
+                Instr::CompoundGlobal(s, op) => {
+                    let rhs = self.stack.pop().expect("rhs");
+                    let old = self.globals[s as usize];
+                    let new = self.apply_bin(op, old, rhs)?;
+                    self.globals[s as usize] = new;
+                }
+                Instr::ZeroLocal(s, sc) => {
+                    self.locals[base + s as usize] = if sc == Scalar::Int {
+                        Slot::Int(0)
+                    } else {
+                        Slot::Float(0.0)
+                    };
+                }
+                Instr::AllocLocalArray { slot, dims } => {
+                    let (elem, d) =
+                        self.module.array_dims[dims as usize].clone();
+                    self.arena.push(ArrayObj::new(elem, d));
+                    self.locals[base + slot as usize] =
+                        Slot::Arr((self.arena.len() - 1) as u32);
+                }
+                Instr::LoadIndex { base: b, rank, name } => {
+                    let rank = rank as usize;
+                    let mut buf = [0i64; resolve::MAX_RANK];
+                    for i in (0..rank).rev() {
+                        let v = self.stack.pop().expect("index");
+                        buf[i] = slot_as_i64(v)?;
+                    }
+                    self.total.i_op += rank as u64;
+                    let aidx = self.array_of(b, base, name)?;
+                    let arr = &self.arena[aidx];
+                    let flat = arr.flat_index(&buf[..rank])?;
+                    let v = arr.data[flat];
+                    let elem = arr.elem;
+                    self.count_read(name, elem.size_bytes());
+                    self.stack.push(if elem == Scalar::Int {
+                        Slot::Int(v as i64)
+                    } else {
+                        Slot::Float(v)
+                    });
+                }
+                Instr::StoreIndex { base: b, rank, name, op } => {
+                    let rank = rank as usize;
+                    let mut buf = [0i64; resolve::MAX_RANK];
+                    for i in (0..rank).rev() {
+                        let v = self.stack.pop().expect("index");
+                        buf[i] = slot_as_i64(v)?;
+                    }
+                    let rhs = self.stack.pop().expect("rhs");
+                    self.total.i_op += rank as u64;
+                    let aidx = self.array_of(b, base, name)?;
+                    let (elem_size, flat) = {
+                        let arr = &self.arena[aidx];
+                        (arr.elem.size_bytes(), arr.flat_index(&buf[..rank])?)
+                    };
+                    let new = match op {
+                        super::ast::AssignOp::Set => rhs,
+                        compound => {
+                            let old = Slot::Float(self.arena[aidx].data[flat]);
+                            self.count_read(name, elem_size);
+                            let bin = match compound {
+                                super::ast::AssignOp::AddSet => BinOp::Add,
+                                super::ast::AssignOp::SubSet => BinOp::Sub,
+                                super::ast::AssignOp::MulSet => BinOp::Mul,
+                                super::ast::AssignOp::DivSet => BinOp::Div,
+                                super::ast::AssignOp::Set => unreachable!(),
+                            };
+                            self.apply_bin(bin, old, rhs)?
+                        }
+                    };
+                    self.arena[aidx].data[flat] = slot_as_f64(new)?;
+                    self.count_write(name, elem_size);
+                }
+                Instr::Bin(op) => {
+                    let r = self.stack.pop().expect("rhs");
+                    let l = self.stack.pop().expect("lhs");
+                    let v = self.apply_bin(op, l, r)?;
+                    self.stack.push(v);
+                }
+                Instr::Neg => {
+                    let v = self.stack.pop().expect("operand");
+                    let out = match v {
+                        Slot::Int(i) => {
+                            self.total.i_op += 1;
+                            Slot::Int(i.wrapping_neg())
+                        }
+                        Slot::Float(f) => {
+                            self.total.f_add += 1;
+                            Slot::Float(-f)
+                        }
+                        Slot::Arr(_) => {
+                            return Err(MiniCError::Runtime(
+                                "negating an array".into(),
+                            ))
+                        }
+                    };
+                    self.stack.push(out);
+                }
+                Instr::Not => {
+                    let v = self.stack.pop().expect("operand");
+                    self.total.cmp += 1;
+                    let out = Slot::Int(!truthy(v)? as i64);
+                    self.stack.push(out);
+                }
+                Instr::CastInt => {
+                    let v = self.stack.pop().expect("operand");
+                    let out = Slot::Int(slot_as_i64(v)?);
+                    self.stack.push(out);
+                }
+                Instr::CastFloat => {
+                    let v = self.stack.pop().expect("operand");
+                    let out = Slot::Float(slot_as_f64(v)?);
+                    self.stack.push(out);
+                }
+                Instr::BumpCmp => self.total.cmp += 1,
+                Instr::Jump(t) => pc = t as usize,
+                Instr::JumpIfFalse(t) => {
+                    let v = self.stack.pop().expect("cond");
+                    if !truthy(v)? {
+                        pc = t as usize;
+                    }
+                }
+                Instr::AndCheck(t) => {
+                    let v = self.stack.pop().expect("lhs");
+                    self.total.cmp += 1;
+                    if !truthy(v)? {
+                        self.stack.push(Slot::Int(0));
+                        pc = t as usize;
+                    }
+                }
+                Instr::OrCheck(t) => {
+                    let v = self.stack.pop().expect("lhs");
+                    self.total.cmp += 1;
+                    if truthy(v)? {
+                        self.stack.push(Slot::Int(1));
+                        pc = t as usize;
+                    }
+                }
+                Instr::ToBool => {
+                    let v = self.stack.pop().expect("operand");
+                    let out = Slot::Int(truthy(v)? as i64);
+                    self.stack.push(out);
+                }
+                Instr::Pop => {
+                    self.stack.pop().expect("pop");
+                }
+                Instr::LoopEnter(id) => {
+                    self.loop_stack.push((id, self.total));
+                    self.loop_slots[id.0 as usize].entries += 1;
+                }
+                Instr::LoopTrip(id) => {
+                    self.loop_slots[id.0 as usize].trips += 1;
+                }
+                Instr::LoopExit => {
+                    let (id, snapshot) =
+                        self.loop_stack.pop().expect("loop stack");
+                    let delta = self.total.delta_from(&snapshot);
+                    self.loop_slots[id.0 as usize].ops.accumulate(&delta);
+                }
+                Instr::Call { func: callee, argc } => {
+                    self.enter_call(callee, argc, func as u16, pc as u32)?;
+                    func = callee as usize;
+                    base = self.frames.last().expect("frame").base as usize;
+                    pc = 0;
+                }
+                Instr::Builtin1(b) => {
+                    let v = self.stack.pop().expect("arg");
+                    let x = slot_as_f64(v)?;
+                    self.total.f_trig += 1;
+                    self.stack.push(Slot::Float(b.eval(x)));
+                }
+                Instr::Builtin2(b) => {
+                    let rv = self.stack.pop().expect("arg");
+                    let lv = self.stack.pop().expect("arg");
+                    let a = slot_as_f64(lv)?;
+                    let x = slot_as_f64(rv)?;
+                    let out = match b {
+                        Builtin2::Fmin => {
+                            self.total.cmp += 1;
+                            a.min(x)
+                        }
+                        Builtin2::Fmax => {
+                            self.total.cmp += 1;
+                            a.max(x)
+                        }
+                        Builtin2::Pow => {
+                            self.total.f_trig += 1;
+                            a.powf(x)
+                        }
+                    };
+                    self.stack.push(Slot::Float(out));
+                }
+                Instr::Return => {
+                    let v = self.stack.pop().expect("return value");
+                    let frame = self.frames.pop().expect("frame");
+                    // Early returns leave loops open: attribute each, as
+                    // the tree-walker's unwinding exit_loop calls do.
+                    self.unwind_loops(frame.loop_base as usize);
+                    self.locals.truncate(frame.base as usize);
+                    if self.frames.len() == entry_depth {
+                        return Ok(v);
+                    }
+                    func = frame.ret_func as usize;
+                    pc = frame.ret_pc as usize;
+                    base = self.frames.last().expect("frame").base as usize;
+                    self.stack.push(v);
+                }
+                Instr::Trap(id) => {
+                    return Err(MiniCError::Runtime(
+                        self.module.traps[id as usize].clone(),
+                    ))
+                }
+            }
+        }
+    }
+
+    fn enter_call(
+        &mut self,
+        callee: u16,
+        argc: u8,
+        ret_func: u16,
+        ret_pc: u32,
+    ) -> Result<(), MiniCError> {
+        let argc = argc as usize;
+        let args_start = self.stack.len() - argc;
+        {
+            let f = &self.module.funcs[callee as usize];
+            for (p, a) in f.params.iter().zip(&self.stack[args_start..]) {
+                match (&p.ty, a) {
+                    (Type::Ptr(_) | Type::Array(..), Slot::Arr(_)) => {}
+                    (Type::Scalar(_), Slot::Arr(_)) => {
+                        return Err(MiniCError::Runtime(format!(
+                            "array passed to scalar param `{}`",
+                            p.name
+                        )))
+                    }
+                    (Type::Ptr(_) | Type::Array(..), _) => {
+                        return Err(MiniCError::Runtime(format!(
+                            "scalar passed to array param `{}`",
+                            p.name
+                        )))
+                    }
+                    _ => {}
+                }
+            }
+        }
+        if self.frames.len() >= MAX_FRAMES {
+            return Err(MiniCError::Runtime("call depth exceeded".into()));
+        }
+        let n_slots = self.module.funcs[callee as usize].n_slots as usize;
+        let base = self.locals.len();
+        self.frames.push(Frame {
+            func: callee,
+            ret_func,
+            ret_pc,
+            base: base as u32,
+            loop_base: self.loop_stack.len() as u32,
+        });
+        self.locals.resize(base + n_slots, Slot::Int(0));
+        for i in (0..argc).rev() {
+            let v = self.stack.pop().expect("argument");
+            self.locals[base + i] = v;
+        }
+        Ok(())
+    }
+
+    fn unwind_loops(&mut self, to: usize) {
+        while self.loop_stack.len() > to {
+            let (id, snapshot) = self.loop_stack.pop().expect("loop");
+            let delta = self.total.delta_from(&snapshot);
+            self.loop_slots[id.0 as usize].ops.accumulate(&delta);
+        }
+    }
+
+    fn array_of(
+        &self,
+        b: Storage,
+        base: usize,
+        name: u32,
+    ) -> Result<usize, MiniCError> {
+        let slot = match b {
+            Storage::Local(s) => self.locals[base + s as usize],
+            Storage::Global(s) => self.globals[s as usize],
+        };
+        match slot {
+            Slot::Arr(a) => Ok(a as usize),
+            _ => Err(MiniCError::Runtime(format!(
+                "`{}` is not an array",
+                self.module.names[name as usize]
+            ))),
+        }
+    }
+
+    fn count_read(&mut self, name: u32, elem_size: u64) {
+        self.total.reads += 1;
+        self.total.read_bytes += elem_size;
+        let (stack, slots) = (&self.loop_stack, &mut self.loop_slots);
+        for (id, _) in stack {
+            let set = &mut slots[id.0 as usize].arrays_read;
+            if !set.contains(&name) {
+                set.push(name);
+            }
+        }
+    }
+
+    fn count_write(&mut self, name: u32, elem_size: u64) {
+        self.total.writes += 1;
+        self.total.write_bytes += elem_size;
+        let (stack, slots) = (&self.loop_stack, &mut self.loop_slots);
+        for (id, _) in stack {
+            let set = &mut slots[id.0 as usize].arrays_written;
+            if !set.contains(&name) {
+                set.push(name);
+            }
+        }
+    }
+
+    fn apply_bin(
+        &mut self,
+        op: BinOp,
+        l: Slot,
+        r: Slot,
+    ) -> Result<Slot, MiniCError> {
+        use BinOp::*;
+        // Integer fast path (same typing rules as the tree-walker).
+        if let (Slot::Int(a), Slot::Int(b)) = (l, r) {
+            return Ok(match op {
+                Add | Sub | Mul | Div | Rem => {
+                    self.total.i_op += 1;
+                    match op {
+                        Add => Slot::Int(a.wrapping_add(b)),
+                        Sub => Slot::Int(a.wrapping_sub(b)),
+                        Mul => Slot::Int(a.wrapping_mul(b)),
+                        Div => {
+                            if b == 0 {
+                                return Err(MiniCError::Runtime(
+                                    "integer division by zero".into(),
+                                ));
+                            }
+                            Slot::Int(a / b)
+                        }
+                        Rem => {
+                            if b == 0 {
+                                return Err(MiniCError::Runtime(
+                                    "integer modulo by zero".into(),
+                                ));
+                            }
+                            Slot::Int(a % b)
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+                Eq | Ne | Lt | Gt | Le | Ge => {
+                    self.total.cmp += 1;
+                    Slot::Int(int_cmp(op, a, b) as i64)
+                }
+                And | Or => unreachable!("lowered to AndCheck/OrCheck"),
+            });
+        }
+        // Float path.
+        let a = slot_as_f64(l)?;
+        let b = slot_as_f64(r)?;
+        Ok(match op {
+            Add => {
+                self.total.f_add += 1;
+                Slot::Float(a + b)
+            }
+            Sub => {
+                self.total.f_add += 1;
+                Slot::Float(a - b)
+            }
+            Mul => {
+                self.total.f_mul += 1;
+                Slot::Float(a * b)
+            }
+            Div => {
+                self.total.f_div += 1;
+                Slot::Float(a / b)
+            }
+            Rem => {
+                self.total.f_div += 1;
+                Slot::Float(a % b)
+            }
+            Eq | Ne | Lt | Gt | Le | Ge => {
+                self.total.cmp += 1;
+                Slot::Int(float_cmp(op, a, b) as i64)
+            }
+            And | Or => unreachable!("lowered to AndCheck/OrCheck"),
+        })
+    }
+}
+
+fn coerce(sc: Scalar, v: Slot) -> Slot {
+    match (sc, v) {
+        (Scalar::Int, Slot::Float(f)) => Slot::Int(f as i64),
+        (s, Slot::Int(i)) if s.is_floating() => Slot::Float(i as f64),
+        (_, v) => v,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::parse;
+
+    fn run_main(src: &str) -> (Value, Profile) {
+        let prog = parse(src).unwrap();
+        let mut vm = Vm::new(&prog).unwrap();
+        let v = vm.call("main", &[]).unwrap();
+        (v, vm.profile())
+    }
+
+    #[test]
+    fn arithmetic_and_return() {
+        let (v, _) = run_main("int main() { return 2 + 3 * 4; }");
+        assert_eq!(v, Value::Int(14));
+    }
+
+    #[test]
+    fn float_promotion() {
+        let (v, _) = run_main(
+            "int main() { float x = 3 / 2.0; return (int)(x * 10.0); }",
+        );
+        assert_eq!(v, Value::Int(15));
+    }
+
+    #[test]
+    fn for_loop_profile_matches_interp_shape() {
+        let (v, prof) = run_main(
+            "int main() { int s = 0; for (int i = 0; i < 10; i++) { s += i; } return s; }",
+        );
+        assert_eq!(v, Value::Int(45));
+        let lp = prof.loop_profile(LoopId(0)).unwrap();
+        assert_eq!(lp.trips, 10);
+        assert_eq!(lp.entries, 1);
+    }
+
+    #[test]
+    fn early_return_attributes_open_loops() {
+        let (v, prof) = run_main(
+            "int main() { for (int i = 0; i < 100; i++) { if (i == 3) return i; } return -1; }",
+        );
+        assert_eq!(v, Value::Int(3));
+        assert_eq!(prof.loop_profile(LoopId(0)).unwrap().trips, 4);
+    }
+
+    #[test]
+    fn array_footprints_and_bounds() {
+        let (_, prof) = run_main(
+            "#define N 8\nfloat a[N]; float b[N];\n
+             int main() {
+               for (int i = 0; i < N; i++) { b[i] = a[i] * 2.0; }
+               return 0; }",
+        );
+        let lp = prof.loop_profile(LoopId(0)).unwrap();
+        assert!(lp.arrays_read.contains("a"));
+        assert!(lp.arrays_written.contains("b"));
+        assert!(!lp.arrays_written.contains("a"));
+    }
+
+    #[test]
+    fn out_of_bounds_errors_and_vm_survives() {
+        let prog = parse(
+            "#define N 4\nfloat a[N];\nint main() { a[9] = 1.0; return 0; }\nint ok() { return 7; }",
+        )
+        .unwrap();
+        let mut vm = Vm::new(&prog).unwrap();
+        assert!(vm.call("main", &[]).is_err());
+        // The VM unwinds to a reusable state after a runtime error.
+        assert_eq!(vm.call("ok", &[]).unwrap(), Value::Int(7));
+    }
+
+    #[test]
+    fn division_by_zero_errors() {
+        let prog =
+            parse("int main() { int x = 0; return 3 / x; }").unwrap();
+        let mut vm = Vm::new(&prog).unwrap();
+        assert!(vm.call("main", &[]).is_err());
+    }
+
+    #[test]
+    fn user_functions_and_globals() {
+        let (v, _) = run_main(
+            "int counter;\n
+             void bump() { counter = counter + 1; }\n
+             int main() { bump(); bump(); bump(); return counter; }",
+        );
+        assert_eq!(v, Value::Int(3));
+    }
+
+    #[test]
+    fn recursion_works() {
+        let (v, _) = run_main(
+            "int fib(int n) { if (n < 2) { return n; } return fib(n - 1) + fib(n - 2); }\n
+             int main() { return fib(10); }",
+        );
+        assert_eq!(v, Value::Int(55));
+    }
+
+    #[test]
+    fn profile_identical_to_tree_walker_on_mixed_program() {
+        let src = "
+#define N 24
+float a[N]; float b[N];
+float acc;
+void fill(float *x, int n) {
+    for (int i = 0; i < n; i++) { x[i] = i * 0.25 - 1.0; }
+}
+int main() {
+    fill(a, N);
+    for (int i = 0; i < N; i++) {
+        b[i] = sin(a[i]) * cos(a[i]) + sqrt(a[i] * a[i] + 1.0);
+    }
+    for (int i = 0; i < N; i++) { acc += b[i]; }
+    int odd = 0;
+    for (int i = 1; i < N; i += 2) { odd++; }
+    while (odd > 0) { odd--; }
+    return (int) acc;
+}";
+        let prog = parse(src).unwrap();
+        let mut interp = crate::minic::Interp::new(&prog).unwrap();
+        let vi = interp.call("main", &[]).unwrap();
+        let pi = interp.profile();
+        let mut vm = Vm::new(&prog).unwrap();
+        let vv = vm.call("main", &[]).unwrap();
+        let pv = vm.profile();
+        assert_eq!(vi, vv);
+        assert_eq!(pi.total, pv.total);
+        assert_eq!(pi.loops.len(), pv.loops.len());
+        for (id, lp) in &pi.loops {
+            let lv = pv.loop_profile(*id).unwrap();
+            assert_eq!(lp.entries, lv.entries, "{id}");
+            assert_eq!(lp.trips, lv.trips, "{id}");
+            assert_eq!(lp.ops, lv.ops, "{id}");
+            assert_eq!(lp.arrays_read, lv.arrays_read, "{id}");
+            assert_eq!(lp.arrays_written, lv.arrays_written, "{id}");
+        }
+        assert_eq!(
+            interp.global_scalar("acc"),
+            vm.global_scalar("acc")
+        );
+    }
+}

@@ -1,5 +1,7 @@
 //! Search configuration: the paper's experiment knobs (§5.1.2).
 
+use crate::minic::EngineKind;
+
 /// Tunable parameters of the offload search.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SearchConfig {
@@ -24,9 +26,12 @@ pub struct SearchConfig {
     pub build_machines: usize,
     /// Modeled sample-test measurement time per pattern, seconds.
     pub measure_seconds: f64,
-    /// Functionally verify each measured pattern via the interpreter
-    /// (numeric equivalence of the offloaded program).
+    /// Functionally verify each measured pattern (numeric equivalence
+    /// of the offloaded program).
     pub verify_numerics: bool,
+    /// Execution engine for verification runs (default: bytecode VM;
+    /// the tree-walking oracle stays selectable via `--engine interp`).
+    pub engine: EngineKind,
 }
 
 impl Default for SearchConfig {
@@ -42,6 +47,7 @@ impl Default for SearchConfig {
             build_machines: 1,
             measure_seconds: 120.0,
             verify_numerics: true,
+            engine: EngineKind::default(),
         }
     }
 }

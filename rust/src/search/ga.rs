@@ -16,6 +16,10 @@ use crate::minic::ast::LoopId;
 use crate::minic::Program;
 use crate::util::rng::Pcg32;
 
+/// Genome width: offload masks are `u64` bitmaps, so the gene space is
+/// capped at the 64 top-ranked candidate loops.
+pub const MAX_GENES: usize = 64;
+
 /// GA hyper-parameters (matched to [32]'s modest settings).
 #[derive(Debug, Clone)]
 pub struct GaConfig {
@@ -61,11 +65,24 @@ pub fn run(
     dev: &Device,
 ) -> GaResult {
     // Gene space: every offloadable candidate (no funnel narrowing).
-    let cands: Vec<(LoopId, SplitResult)> = analysis
+    let mut cands: Vec<(LoopId, SplitResult)> = analysis
         .ranked_candidates()
         .into_iter()
         .filter_map(|al| split(prog, al).ok().map(|s| (al.id(), s)))
         .collect();
+    // The genome is a u64 bitmask: with more than 64 candidates,
+    // `1u64 << b` shifts out of range (panic in debug, silent wraparound
+    // corrupting genes in release). Cap the gene space at the 64
+    // top-ranked candidates (`ranked_candidates` is score-descending),
+    // logging the truncation.
+    if cands.len() > MAX_GENES {
+        eprintln!(
+            "ga: truncating gene space from {} to {MAX_GENES} top-ranked \
+             candidates (u64 genome)",
+            cands.len()
+        );
+        cands.truncate(MAX_GENES);
+    }
     let n = cands.len();
     if n == 0 {
         return GaResult {
@@ -261,6 +278,39 @@ int main() {
         let b = run(&prog, &an, &GaConfig::default(), &XEON_BRONZE_3104, &ARRIA10_GX);
         assert_eq!(a.best_loops, b.best_loops);
         assert_eq!(a.measurements, b.measurements);
+    }
+
+    #[test]
+    fn gene_space_capped_at_64_candidates() {
+        // Regression: with > 64 offloadable loops the old code computed
+        // `1u64 << b` with b >= 64 (debug panic / release wraparound).
+        let mut src = String::from("#define N 8\n");
+        for i in 0..68 {
+            src.push_str(&format!("float a{i}[N];\n"));
+        }
+        src.push_str("int main() {\n");
+        for i in 0..68 {
+            src.push_str(&format!(
+                "    for (int i = 0; i < N; i++) {{ a{i}[i] = a{i}[i] * 1.01 + {i}.0; }}\n"
+            ));
+        }
+        src.push_str("    return 0;\n}\n");
+        let prog = parse(&src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        assert!(an.ranked_candidates().len() > MAX_GENES);
+        let ga = run(
+            &prog,
+            &an,
+            &GaConfig::default(),
+            &XEON_BRONZE_3104,
+            &ARRIA10_GX,
+        );
+        assert!(ga.measurements > 0);
+        // Any selected loop must come from the (capped) candidate space.
+        assert!(ga.best_loops.len() <= MAX_GENES);
+        for l in &ga.best_loops {
+            assert!(l.0 < 68);
+        }
     }
 
     #[test]

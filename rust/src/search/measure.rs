@@ -12,7 +12,7 @@ use std::sync::mpsc;
 
 use crate::analysis::Analysis;
 use crate::cpu::CpuModel;
-use crate::fpga::{self, verify_pattern, CompileJob};
+use crate::fpga::{self, verify_pattern_with, CompileJob};
 use crate::hls::{full_compile_seconds, Device, ResourceEstimate};
 use crate::minic::Program;
 
@@ -80,7 +80,7 @@ fn measure_one(
             .iter()
             .map(|&i| cands[i].split.clone())
             .collect();
-        let v = verify_pattern(prog, &splits, "main")
+        let v = verify_pattern_with(prog, &splits, "main", cfg.engine)
             .map_err(SearchError::Interp)?;
         Some(v.passed)
     } else {

@@ -59,6 +59,29 @@ pub fn vec_u32(
         .collect()
 }
 
+/// Uniform integer in `lo..hi` (generator helper for structured inputs
+/// like random-program shapes).
+pub fn int_in(rng: &mut Pcg32, lo: i64, hi: i64) -> i64 {
+    assert!(lo < hi, "int_in({lo}, {hi})");
+    lo + rng.below((hi - lo) as u32) as i64
+}
+
+/// Pick an index with the given relative weights (generator helper:
+/// lets a program generator prefer common constructs while still
+/// covering rare ones).
+pub fn weighted(rng: &mut Pcg32, weights: &[u32]) -> usize {
+    let total: u32 = weights.iter().sum();
+    assert!(total > 0, "weighted: all-zero weights");
+    let mut x = rng.below(total);
+    for (i, w) in weights.iter().enumerate() {
+        if x < *w {
+            return i;
+        }
+        x -= w;
+    }
+    unreachable!("weighted: out of range")
+}
+
 /// Generate a vec of f64 in `[lo, hi)` with length in `len_range`.
 pub fn vec_f64(
     rng: &mut Pcg32,
@@ -88,6 +111,18 @@ mod tests {
         check(64, |rng| {
             let v = vec_u32(rng, 1..8, 0..10);
             holds(v.iter().sum::<u32>() < 5, format!("{v:?}"))
+        });
+    }
+
+    #[test]
+    fn int_in_and_weighted_respect_bounds() {
+        check(128, |rng| {
+            let v = int_in(rng, -3, 9);
+            let w = weighted(rng, &[1, 0, 5, 2]);
+            holds(
+                (-3..9).contains(&v) && w < 4 && w != 1,
+                format!("v={v} w={w}"),
+            )
         });
     }
 

@@ -1,0 +1,179 @@
+/* Parboil MRI-Q — non-Cartesian MRI reconstruction, Q matrix
+ * computation (paper §5.1.2).
+ *
+ * For every voxel the Q value accumulates phiMag[k] * exp(i*phase)
+ * over the k-space trajectory; the phase is the dot product of the
+ * k-space vector and the voxel position.  The hot nest is compute_q():
+ * L4 (repetition), L5 (voxel), L6 (k-space MAC with sin/cos).  A
+ * while-based naive recheck of the first CHKV voxels folds the worst
+ * difference into `maxerr`; magnitude/histogram/decimation passes model
+ * the rest of the reconstruction chain.
+ *
+ * 16 loop statements (L0..L15), ids in source order.
+ */
+#include <math.h>
+
+#define KS 32
+#define X 1536
+#define X1 1535
+#define QREP 2
+#define CHKV 320
+#define DEC 128
+#define NB 16
+
+float kx[KS];
+float ky[KS];
+float kz[KS];
+float phiR[KS];
+float phiI[KS];
+float phiMag[KS];
+float x[X];
+float y[X];
+float z[X];
+float qr[X];
+float qi[X];
+float qmag[X];
+float qsm[X];
+float qdec[DEC];
+float hcount[NB];
+float maxerr;
+float q_energy;
+float qpeak;
+float qsum;
+
+/* Deterministic k-space trajectory and coil phases. */
+void gen_kspace() {
+    for (int k = 0; k < KS; k++) {                       /* L0 */
+        kx[k] = (k % 7) * 0.11 - 0.33;
+        ky[k] = (k % 5) * 0.17 - 0.34;
+        kz[k] = (k % 11) * 0.06 - 0.3;
+        phiR[k] = (k % 13) * 0.07 - 0.42;
+        phiI[k] = (k % 3) * 0.21 - 0.2;
+    }
+}
+
+void gen_phimag() {
+    for (int k = 0; k < KS; k++) {                       /* L1 */
+        phiMag[k] = phiR[k] * phiR[k] + phiI[k] * phiI[k];
+    }
+}
+
+void gen_voxels() {
+    for (int i = 0; i < X; i++) {                        /* L2 */
+        x[i] = (i % 53) * 0.021 - 0.55;
+        y[i] = (i % 47) * 0.023 - 0.52;
+        z[i] = (i % 43) * 0.026 - 0.56;
+    }
+}
+
+void clear_q() {
+    for (int i = 0; i < X; i++) {                        /* L3 */
+        qr[i] = 0.0;
+        qi[i] = 0.0;
+    }
+}
+
+/* The hot nest: Q accumulation over the k-space trajectory. */
+void compute_q() {
+    for (int r = 0; r < QREP; r++) {                     /* L4 */
+        for (int i = 0; i < X; i++) {                    /* L5 */
+            float xv = x[i];
+            float yv = y[i];
+            float zv = z[i];
+            float sr = 0.0;
+            float si = 0.0;
+            for (int k = 0; k < KS; k++) {               /* L6 */
+                float ph = kx[k] * xv + ky[k] * yv + kz[k] * zv;
+                float cs = cos(ph);
+                float sn = sin(ph);
+                sr += phiMag[k] * cs;
+                si += phiMag[k] * sn;
+            }
+            qr[i] = sr;
+            qi[i] = si;
+        }
+    }
+}
+
+/* Naive recheck of the first CHKV voxels (data-dependent control keeps
+ * this on the CPU — while loops are not offload candidates). */
+void check_ref() {
+    int ci = 0;
+    while (ci < CHKV) {                                  /* L7 */
+        float rr = 0.0;
+        float ri = 0.0;
+        int ck = 0;
+        while (ck < KS) {                                /* L8 */
+            float ph = kx[ck] * x[ci] + ky[ck] * y[ci] + kz[ck] * z[ci];
+            float cs = cos(ph);
+            float sn = sin(ph);
+            rr += phiMag[ck] * cs;
+            ri += phiMag[ck] * sn;
+            ck++;
+        }
+        maxerr = fmax(maxerr, fabs(qr[ci] - rr));
+        maxerr = fmax(maxerr, fabs(qi[ci] - ri));
+        ci++;
+    }
+}
+
+void energy() {
+    for (int i = 0; i < X; i++) {                        /* L9 */
+        q_energy += qr[i] * qr[i] + qi[i] * qi[i];
+    }
+}
+
+void magnitude() {
+    for (int i = 0; i < X; i++) {                        /* L10 */
+        qmag[i] = sqrt(qr[i] * qr[i] + qi[i] * qi[i]);
+    }
+}
+
+void peak() {
+    for (int i = 0; i < X; i++) {                        /* L11 */
+        qpeak = fmax(qpeak, qmag[i]);
+    }
+}
+
+void smooth() {
+    for (int i = 1; i < X1; i++) {                       /* L12 */
+        qsm[i] = (qmag[i - 1] + qmag[i] + qmag[i + 1]) * 0.333333;
+    }
+}
+
+void histogram() {
+    for (int i = 0; i < X; i++) {                        /* L13 */
+        int b = (int) fmin(qsm[i] * 4.0, 15.0);
+        hcount[b] += 1.0;
+    }
+}
+
+void decimate() {
+    for (int d = 0; d < DEC; d++) {                      /* L14 */
+        qdec[d] = qsm[d * 8];
+    }
+}
+
+void checksum() {
+    for (int d = 0; d < DEC; d++) {                      /* L15 */
+        qsum += qdec[d];
+    }
+}
+
+int main() {
+    gen_kspace();
+    gen_phimag();
+    gen_voxels();
+    clear_q();
+    compute_q();
+    check_ref();
+    energy();
+    magnitude();
+    peak();
+    smooth();
+    histogram();
+    decimate();
+    checksum();
+    printf("mriq maxerr=%f energy=%f\n", maxerr, q_energy);
+    return 0;
+}

@@ -1,0 +1,90 @@
+/* Sobel edge detection — the extra IoT-imaging workload.
+ *
+ * Synthetic H×W frame -> 3x3 box blur -> Sobel gradient magnitude
+ * (the hot nest, L4/L5: 3x3 stencil with a sqrt per pixel) ->
+ * thresholded edge count, row sums, and frame statistics.
+ *
+ * 12 loop statements (L0..L11), ids in source order.
+ */
+#include <math.h>
+
+#define H 96
+#define W 96
+#define H1 95
+#define W1 95
+
+float img[H][W];
+float tmp[H][W];
+float gmag[H][W];
+float rowsum[H];
+float gsum;
+float ecount;
+float pmax;
+
+void gen_frame() {
+    for (int y = 0; y < H; y++) {                        /* L0 */
+        for (int x = 0; x < W; x++) {                    /* L1 */
+            img[y][x] = (y * 13 + x * 7) % 31 * 0.08 - 1.2;
+        }
+    }
+}
+
+void blur() {
+    for (int y = 1; y < H1; y++) {                       /* L2 */
+        for (int x = 1; x < W1; x++) {                   /* L3 */
+            tmp[y][x] = (img[y][x] * 4.0 + img[y - 1][x] + img[y + 1][x]
+                + img[y][x - 1] + img[y][x + 1]) * 0.125;
+        }
+    }
+}
+
+/* The hot nest: Sobel gradient magnitude. */
+void gradient() {
+    for (int y = 1; y < H1; y++) {                       /* L4 */
+        for (int x = 1; x < W1; x++) {                   /* L5 */
+            float gx = (tmp[y - 1][x + 1] + tmp[y][x + 1] * 2.0 + tmp[y + 1][x + 1])
+                - (tmp[y - 1][x - 1] + tmp[y][x - 1] * 2.0 + tmp[y + 1][x - 1]);
+            float gy = (tmp[y + 1][x - 1] + tmp[y + 1][x] * 2.0 + tmp[y + 1][x + 1])
+                - (tmp[y - 1][x - 1] + tmp[y - 1][x] * 2.0 + tmp[y - 1][x + 1]);
+            gmag[y][x] = sqrt(gx * gx + gy * gy);
+        }
+    }
+}
+
+void threshold() {
+    for (int y = 0; y < H; y++) {                        /* L6 */
+        for (int x = 0; x < W; x++) {                    /* L7 */
+            if (gmag[y][x] > 1.5) {
+                ecount += 1.0;
+            }
+        }
+    }
+}
+
+void row_sums() {
+    for (int y = 0; y < H; y++) {                        /* L8 */
+        for (int x = 0; x < W; x++) {                    /* L9 */
+            rowsum[y] += gmag[y][x];
+        }
+    }
+}
+
+void stats() {
+    for (int y = 0; y < H; y++) {                        /* L10 */
+        gsum += rowsum[y];
+    }
+    for (int y = 0; y < H; y++) {                        /* L11 */
+        pmax = fmax(pmax, rowsum[y]);
+    }
+}
+
+int main() {
+    gen_frame();
+    blur();
+    gradient();
+    threshold();
+    row_sums();
+    stats();
+    printf("sobel edges=%f gsum=%f\n", ecount, gsum);
+    return 0;
+}

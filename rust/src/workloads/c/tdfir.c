@@ -1,0 +1,237 @@
+/* HPEC Challenge TDFIR — time-domain FIR filter bank (paper §5.1.2).
+ *
+ * M complex FIR filters of K taps each run over an N-sample complex
+ * input, repeated REP times (the HPEC harness repeats the kernel for
+ * timing).  The hot nest is fir_all(): loops L12 (repetition), L13
+ * (filter bank), L14 (output sample), L15 (tap MAC).  A while-based
+ * spot check recomputes CHK banks naively and folds the worst absolute
+ * difference into `maxerr`; post-processing passes (power, corner
+ * turn, peaks, histogram, checksums) model the rest of the pulse-
+ * compression pipeline and stay on the CPU.
+ *
+ * 36 loop statements (L0..L35), ids in source order.
+ */
+#include <math.h>
+
+#define M 8
+#define N 1024
+#define K 16
+#define K1 15
+#define REP 2
+#define NIN 1040
+#define CHK 3
+#define ND 256
+#define NB 16
+
+float xr[NIN];
+float xi[NIN];
+float scratch[NIN];
+float hr[M][K];
+float hi[M][K];
+float hrevr[M][K];
+float hrevi[M][K];
+float gain[M];
+float outr[M][N];
+float outi[M][N];
+float mag[M][N];
+float stager[N][M];
+float stagei[N][M];
+float bankpeak[M];
+float banksum[M];
+float dec[ND];
+float hist[NB];
+float maxerr;
+float out_energy;
+float chk;
+float dsum;
+
+/* Deterministic pseudo-random pulse (no libc rand in MiniC). */
+void gen_input() {
+    for (int i = 0; i < NIN; i++) {                      /* L0 */
+        xr[i] = (i % 37) * 0.053 - 0.9;
+        xi[i] = (i % 29) * 0.067 - 0.95;
+    }
+}
+
+void gen_coef() {
+    for (int m = 0; m < M; m++) {                        /* L1 */
+        for (int k = 0; k < K; k++) {                    /* L2 */
+            hr[m][k] = (m * 13 + k * 5) % 23 * 0.041 - 0.45;
+            hi[m][k] = (m * 7 + k * 11) % 19 * 0.049 - 0.43;
+        }
+    }
+}
+
+void clear_out() {
+    for (int m = 0; m < M; m++) {                        /* L3 */
+        for (int n = 0; n < N; n++) {                    /* L4 */
+            outr[m][n] = 0.0;
+            outi[m][n] = 0.0;
+        }
+    }
+}
+
+/* Raised-cosine-ish taper, arithmetic only. */
+void taper_input() {
+    for (int i = 0; i < NIN; i++) {                      /* L5 */
+        xr[i] = xr[i] * (0.9 + (i % 11) * 0.01);
+    }
+    for (int i = 0; i < NIN; i++) {                      /* L6 */
+        xi[i] = xi[i] * (0.9 + (i % 13) * 0.008);
+    }
+}
+
+/* Normalize each filter to roughly unit energy. */
+void norm_coef() {
+    for (int m = 0; m < M; m++) {                        /* L7 */
+        float g = 0.0;
+        for (int k = 0; k < K; k++) {                    /* L8 */
+            g += hr[m][k] * hr[m][k] + hi[m][k] * hi[m][k];
+        }
+        gain[m] = 1.0 / (sqrt(g) + 1.0);
+        for (int k = 0; k < K; k++) {                    /* L9 */
+            hr[m][k] = hr[m][k] * gain[m];
+            hi[m][k] = hi[m][k] * gain[m];
+        }
+    }
+}
+
+/* Tap reversal: convolution reads taps back to front. */
+void reverse_coef() {
+    for (int m = 0; m < M; m++) {                        /* L10 */
+        for (int k = 0; k < K; k++) {                    /* L11 */
+            hrevr[m][k] = hr[m][K1 - k];
+            hrevi[m][k] = hi[m][K1 - k];
+        }
+    }
+}
+
+/* The hot nest: complex FIR bank, repeated REP times. */
+void fir_all() {
+    for (int r = 0; r < REP; r++) {                      /* L12 */
+        for (int m = 0; m < M; m++) {                    /* L13 */
+            for (int n = 0; n < N; n++) {                /* L14 */
+                float accr = 0.0;
+                float acci = 0.0;
+                for (int k = 0; k < K; k++) {            /* L15 */
+                    accr += hrevr[m][k] * xr[n + k] - hrevi[m][k] * xi[n + k];
+                    acci += hrevr[m][k] * xi[n + k] + hrevi[m][k] * xr[n + k];
+                }
+                outr[m][n] = accr;
+                outi[m][n] = acci;
+            }
+        }
+    }
+}
+
+/* Naive recomputation of the first CHK banks (data-dependent control,
+ * so this stays on the CPU — while loops are not offload candidates). */
+void check_ref() {
+    int cm = 0;
+    while (cm < CHK) {                                   /* L16 */
+        int cn = 0;
+        while (cn < N) {                                 /* L17 */
+            float rr = 0.0;
+            float ri = 0.0;
+            int ck = 0;
+            while (ck < K) {                             /* L18 */
+                rr += hr[cm][K1 - ck] * xr[cn + ck] - hi[cm][K1 - ck] * xi[cn + ck];
+                ri += hr[cm][K1 - ck] * xi[cn + ck] + hi[cm][K1 - ck] * xr[cn + ck];
+                ck++;
+            }
+            maxerr = fmax(maxerr, fabs(outr[cm][cn] - rr));
+            maxerr = fmax(maxerr, fabs(outi[cm][cn] - ri));
+            cn++;
+        }
+        cm++;
+    }
+}
+
+void energy() {
+    for (int m = 0; m < M; m++) {                        /* L19 */
+        for (int n = 0; n < N; n++) {                    /* L20 */
+            out_energy += outr[m][n] * outr[m][n] + outi[m][n] * outi[m][n];
+        }
+    }
+}
+
+/* Power spectrum per bank. */
+void power_grid() {
+    for (int m = 0; m < M; m++) {                        /* L21 */
+        for (int n = 0; n < N; n++) {                    /* L22 */
+            mag[m][n] = outr[m][n] * outr[m][n] + outi[m][n] * outi[m][n];
+        }
+    }
+}
+
+/* Corner turn: sample-major staging for the next pipeline stage. */
+void corner_turn() {
+    for (int m = 0; m < M; m++) {                        /* L23 */
+        for (int n = 0; n < N; n++) {                    /* L24 */
+            stager[n][m] = outr[m][n];
+            stagei[n][m] = outi[m][n];
+        }
+    }
+}
+
+void peaks() {
+    for (int m = 0; m < M; m++) {                        /* L25 */
+        for (int n = 0; n < N; n++) {                    /* L26 */
+            bankpeak[m] = fmax(bankpeak[m], mag[m][n]);
+        }
+    }
+    for (int m = 0; m < M; m++) {                        /* L27 */
+        for (int n = 0; n < N; n++) {                    /* L28 */
+            banksum[m] += mag[m][n];
+        }
+    }
+}
+
+void decimate() {
+    for (int d = 0; d < ND; d++) {                       /* L29 */
+        dec[d] = stager[d * 4][0];
+    }
+}
+
+void histogram() {
+    for (int m = 0; m < M; m++) {                        /* L30 */
+        for (int n = 0; n < N; n++) {                    /* L31 */
+            int b = (int) fmin(mag[m][n] * 2.0, 15.0);
+            hist[b] += 1.0;
+        }
+    }
+}
+
+void checksum() {
+    for (int n = 0; n < N; n++) {                        /* L32 */
+        for (int m = 0; m < M; m++) {                    /* L33 */
+            chk += stager[n][m] - stagei[n][m];
+        }
+    }
+    for (int i = 0; i < NIN; i++) {                      /* L34 */
+        scratch[i] = xr[i] + xi[i];
+    }
+    for (int d = 0; d < ND; d++) {                       /* L35 */
+        dsum += dec[d];
+    }
+}
+
+int main() {
+    gen_input();
+    gen_coef();
+    clear_out();
+    taper_input();
+    norm_coef();
+    reverse_coef();
+    fir_all();
+    check_ref();
+    energy();
+    power_grid();
+    corner_turn();
+    peaks();
+    decimate();
+    histogram();
+    checksum();
+    printf("tdfir maxerr=%f energy=%f\n", maxerr, out_energy);
+    return 0;
+}

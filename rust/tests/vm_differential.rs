@@ -1,0 +1,527 @@
+//! Differential property test: the slot-resolved bytecode VM against
+//! the tree-walking oracle.
+//!
+//! Random MiniC programs (loops, nests, whiles, ifs, user calls,
+//! builtins, int/float mixing, compound assignment, printf, casts) are
+//! executed on both engines; the runs must agree on
+//!
+//! * the entry function's return value (bitwise for floats),
+//! * the final contents of every global (arrays bitwise),
+//! * the total [`OpCounts`], and
+//! * every per-loop profile (entries, trips, subtree ops, array
+//!   footprints),
+//!
+//! or both must fail with the same runtime error. This is the contract
+//! that lets the VM replace the interpreter on the profiling /
+//! verification hot paths without changing any downstream decision.
+
+use std::collections::BTreeSet;
+
+use fpga_offload::minic::ast::Stmt;
+use fpga_offload::minic::{parse, Engine, Interp, OpCounts, Value, Vm};
+use fpga_offload::util::prop::{check, holds, int_in, weighted, Outcome};
+use fpga_offload::util::rng::Pcg32;
+
+// ---- random program generator ----
+
+struct Gen<'r> {
+    rng: &'r mut Pcg32,
+    src: String,
+    /// Active counted-loop variables (name, exclusive bound).
+    loop_vars: Vec<(String, i64)>,
+    next_tmp: usize,
+    depth: usize,
+}
+
+const PRELUDE: &str = "\
+#define N 16
+#define M 4
+float ga[N];
+float gb[N];
+float gm[M][M];
+int gi[N];
+float acc;
+int cnt;
+float lim = 2.5;
+float mix(float u, float v) { return u * 0.5 + v * 0.25; }
+float clampf(float v) { return fmin(fmax(v, -8.0), 8.0); }
+int main() {
+";
+
+impl<'r> Gen<'r> {
+    fn new(rng: &'r mut Pcg32) -> Self {
+        Gen {
+            rng,
+            src: String::from(PRELUDE),
+            loop_vars: Vec::new(),
+            next_tmp: 0,
+            depth: 0,
+        }
+    }
+
+    fn finish(mut self) -> String {
+        self.src.push_str("    return cnt;\n}\n");
+        self.src
+    }
+
+    fn indent(&self) -> String {
+        "    ".repeat(self.depth + 1)
+    }
+
+    /// Index expression guaranteed in `[0, bound)`.
+    fn index(&mut self, bound: i64) -> String {
+        if !self.loop_vars.is_empty() && self.rng.chance(0.7) {
+            let (v, b) = self.loop_vars[self.rng.index(self.loop_vars.len())].clone();
+            if b <= bound && self.rng.chance(0.6) {
+                return v;
+            }
+            let off = int_in(self.rng, 0, bound);
+            return format!("({v} + {off}) % {bound}");
+        }
+        int_in(self.rng, 0, bound).to_string()
+    }
+
+    /// Integer-valued expression (safe: no division).
+    fn iexpr(&mut self, depth: usize) -> String {
+        let more = depth < 2;
+        match weighted(
+            self.rng,
+            &[3, 2, 2, if more { 3 } else { 0 }, if more { 2 } else { 0 }, 1],
+        ) {
+            0 => int_in(self.rng, 0, 8).to_string(),
+            1 => "cnt".to_string(),
+            2 => {
+                if self.loop_vars.is_empty() {
+                    int_in(self.rng, 0, 8).to_string()
+                } else {
+                    self.loop_vars[self.rng.index(self.loop_vars.len())]
+                        .0
+                        .clone()
+                }
+            }
+            3 => {
+                let a = self.iexpr(depth + 1);
+                let b = self.iexpr(depth + 1);
+                let op = *self.rng.choose(&["+", "-", "*"]);
+                format!("({a} {op} {b})")
+            }
+            4 => {
+                let a = self.iexpr(depth + 1);
+                let m = int_in(self.rng, 2, 9);
+                format!("({a} % {m})")
+            }
+            _ => {
+                let i = self.index(16);
+                format!("gi[{i}]")
+            }
+        }
+    }
+
+    /// Float-valued expression (safe: divisions guarded).
+    fn fexpr(&mut self, depth: usize) -> String {
+        let more = depth < 3;
+        match weighted(
+            self.rng,
+            &[
+                3,                       // literal
+                2,                       // acc / lim
+                2,                       // array read
+                1,                       // 2-D array read
+                1,                       // int in float context
+                if more { 4 } else { 0 }, // binary
+                if more { 2 } else { 0 }, // builtin1
+                if more { 1 } else { 0 }, // fmin/fmax
+                if more { 1 } else { 0 }, // user call
+                if more { 1 } else { 0 }, // guarded division
+                1,                       // cast
+            ],
+        ) {
+            0 => format!("{:.3}", (int_in(self.rng, -40, 40) as f64) * 0.125),
+            1 => (*self.rng.choose(&["acc", "lim"])).to_string(),
+            2 => {
+                let arr = *self.rng.choose(&["ga", "gb"]);
+                let i = self.index(16);
+                format!("{arr}[{i}]")
+            }
+            3 => {
+                let i = self.index(4);
+                let j = self.index(4);
+                format!("gm[{i}][{j}]")
+            }
+            4 => {
+                let e = self.iexpr(depth + 1);
+                format!("({e} * 0.25)")
+            }
+            5 => {
+                let a = self.fexpr(depth + 1);
+                let b = self.fexpr(depth + 1);
+                let op = *self.rng.choose(&["+", "-", "*"]);
+                format!("({a} {op} {b})")
+            }
+            6 => {
+                let f = *self.rng.choose(&["sin", "cos", "fabs", "floor"]);
+                let a = self.fexpr(depth + 1);
+                if f == "sin" && self.rng.chance(0.3) {
+                    format!("sqrt(fabs({a}))")
+                } else {
+                    format!("{f}({a})")
+                }
+            }
+            7 => {
+                let f = *self.rng.choose(&["fmin", "fmax"]);
+                let a = self.fexpr(depth + 1);
+                let b = self.fexpr(depth + 1);
+                format!("{f}({a}, {b})")
+            }
+            8 => {
+                let f = *self.rng.choose(&["mix", "clampf"]);
+                let a = self.fexpr(depth + 1);
+                if f == "mix" {
+                    let b = self.fexpr(depth + 1);
+                    format!("mix({a}, {b})")
+                } else {
+                    format!("clampf({a})")
+                }
+            }
+            9 => {
+                let a = self.fexpr(depth + 1);
+                let b = self.fexpr(depth + 1);
+                format!("({a} / (fabs({b}) + 1.5))")
+            }
+            _ => {
+                let e = self.iexpr(depth + 1);
+                format!("((float) {e})")
+            }
+        }
+    }
+
+    fn cond(&mut self) -> String {
+        let a = self.fexpr(2);
+        let b = self.fexpr(2);
+        let op = *self.rng.choose(&["<", ">", "<=", ">=", "==", "!="]);
+        if self.rng.chance(0.25) {
+            let c = self.fexpr(2);
+            let logic = *self.rng.choose(&["&&", "||"]);
+            format!("{a} {op} {b} {logic} {c} < 3.0")
+        } else {
+            format!("{a} {op} {b}")
+        }
+    }
+
+    fn stmt(&mut self) {
+        let nested_ok = self.depth < 3;
+        match weighted(
+            self.rng,
+            &[
+                4, // array store
+                3, // scalar update
+                2, // if
+                if nested_ok { 3 } else { 0 }, // for loop
+                if nested_ok { 1 } else { 0 }, // while loop
+                1, // local temp + use
+                1, // printf / bare call
+            ],
+        ) {
+            0 => self.array_store(),
+            1 => self.scalar_update(),
+            2 => self.if_stmt(),
+            3 => self.for_loop(),
+            4 => self.while_loop(),
+            5 => {
+                let t = format!("t{}", self.next_tmp);
+                self.next_tmp += 1;
+                let e = self.fexpr(1);
+                let ind = self.indent();
+                self.src.push_str(&format!("{ind}float {t} = {e};\n"));
+                self.src
+                    .push_str(&format!("{ind}acc += {t} * 0.5;\n"));
+            }
+            _ => {
+                let ind = self.indent();
+                if self.rng.chance(0.5) {
+                    let e = self.fexpr(1);
+                    self.src.push_str(&format!(
+                        "{ind}printf(\"v=%f\\n\", {e});\n"
+                    ));
+                } else {
+                    let a = self.fexpr(1);
+                    let b = self.fexpr(1);
+                    self.src
+                        .push_str(&format!("{ind}mix({a}, {b});\n"));
+                }
+            }
+        }
+    }
+
+    fn array_store(&mut self) {
+        let ind = self.indent();
+        let op = *self.rng.choose(&["=", "+=", "-=", "*="]);
+        match self.rng.index(4) {
+            0 => {
+                let i = self.index(16);
+                let e = self.fexpr(0);
+                self.src.push_str(&format!("{ind}ga[{i}] {op} {e};\n"));
+            }
+            1 => {
+                let i = self.index(16);
+                let e = self.fexpr(0);
+                self.src.push_str(&format!("{ind}gb[{i}] {op} {e};\n"));
+            }
+            2 => {
+                let i = self.index(4);
+                let j = self.index(4);
+                let e = self.fexpr(0);
+                self.src
+                    .push_str(&format!("{ind}gm[{i}][{j}] {op} {e};\n"));
+            }
+            _ => {
+                let i = self.index(16);
+                let e = self.iexpr(0);
+                self.src.push_str(&format!("{ind}gi[{i}] {op} {e};\n"));
+            }
+        }
+    }
+
+    fn scalar_update(&mut self) {
+        let ind = self.indent();
+        match self.rng.index(3) {
+            0 => {
+                let e = self.fexpr(0);
+                let op = *self.rng.choose(&["=", "+=", "*="]);
+                self.src.push_str(&format!("{ind}acc {op} {e};\n"));
+            }
+            1 => {
+                let e = self.iexpr(0);
+                self.src.push_str(&format!("{ind}cnt += {e};\n"));
+            }
+            _ => {
+                self.src.push_str(&format!("{ind}cnt++;\n"));
+            }
+        }
+    }
+
+    fn if_stmt(&mut self) {
+        let c = self.cond();
+        let ind = self.indent();
+        self.src.push_str(&format!("{ind}if ({c}) {{\n"));
+        self.depth += 1;
+        self.stmt();
+        self.depth -= 1;
+        if self.rng.chance(0.5) {
+            self.src.push_str(&format!("{ind}}} else {{\n"));
+            self.depth += 1;
+            self.stmt();
+            self.depth -= 1;
+        }
+        self.src.push_str(&format!("{ind}}}\n"));
+    }
+
+    fn for_loop(&mut self) {
+        let v = format!("i{}", self.loop_vars.len());
+        let bound = int_in(self.rng, 1, 11);
+        let ind = self.indent();
+        self.src.push_str(&format!(
+            "{ind}for (int {v} = 0; {v} < {bound}; {v}++) {{\n"
+        ));
+        self.loop_vars.push((v, bound));
+        self.depth += 1;
+        for _ in 0..(1 + self.rng.index(3)) {
+            self.stmt();
+        }
+        self.depth -= 1;
+        self.loop_vars.pop();
+        self.src.push_str(&format!("{ind}}}\n"));
+    }
+
+    fn while_loop(&mut self) {
+        let w = format!("w{}", self.next_tmp);
+        self.next_tmp += 1;
+        let bound = int_in(self.rng, 1, 6);
+        let ind = self.indent();
+        self.src
+            .push_str(&format!("{ind}int {w} = {bound};\n"));
+        self.src.push_str(&format!("{ind}while ({w} > 0) {{\n"));
+        self.depth += 1;
+        self.stmt();
+        let ind2 = self.indent();
+        self.src.push_str(&format!("{ind2}{w} = {w} - 1;\n"));
+        self.depth -= 1;
+        self.src.push_str(&format!("{ind}}}\n"));
+    }
+}
+
+fn gen_program(rng: &mut Pcg32) -> String {
+    let n = 3 + rng.index(6);
+    let mut g = Gen::new(rng);
+    for _ in 0..n {
+        g.stmt();
+    }
+    g.finish()
+}
+
+// ---- observation + comparison ----
+
+/// Everything observable about one run, normalized for comparison
+/// (floats bitwise, footprint sets ordered).
+#[derive(Debug, PartialEq, Eq)]
+struct Observed {
+    result: (u8, u64),
+    total: OpCounts,
+    loops: Vec<(u32, u64, u64, OpCounts, BTreeSet<String>, BTreeSet<String>)>,
+    arrays: Vec<(String, Vec<u64>)>,
+    scalars: Vec<(String, u64)>,
+}
+
+fn value_key(v: &Value) -> (u8, u64) {
+    match v {
+        Value::Int(i) => (0, *i as u64),
+        Value::Float(f) => (1, f.to_bits()),
+        Value::Array(r) => (2, r.0 as u64),
+    }
+}
+
+fn observe(
+    eng: &mut dyn Engine,
+    globals: &[(String, bool)],
+) -> Result<Observed, String> {
+    let r = eng.call("main", &[]).map_err(|e| e.to_string())?;
+    let profile = eng.profile();
+    let mut loops: Vec<_> = profile
+        .loops
+        .iter()
+        .map(|(id, lp)| {
+            (
+                id.0,
+                lp.entries,
+                lp.trips,
+                lp.ops,
+                lp.arrays_read.iter().cloned().collect::<BTreeSet<_>>(),
+                lp.arrays_written.iter().cloned().collect::<BTreeSet<_>>(),
+            )
+        })
+        .collect();
+    loops.sort_by_key(|l| l.0);
+    let mut arrays = Vec::new();
+    let mut scalars = Vec::new();
+    for (name, is_array) in globals {
+        if *is_array {
+            let r = eng
+                .global_array(name)
+                .ok_or_else(|| format!("missing array {name}"))?;
+            arrays.push((
+                name.clone(),
+                eng.array(r).data.iter().map(|x| x.to_bits()).collect(),
+            ));
+        } else {
+            let v = eng
+                .global_scalar(name)
+                .ok_or_else(|| format!("missing scalar {name}"))?;
+            scalars.push((name.clone(), v.to_bits()));
+        }
+    }
+    Ok(Observed {
+        result: value_key(&r),
+        total: profile.total,
+        loops,
+        arrays,
+        scalars,
+    })
+}
+
+fn diff(a: &Observed, b: &Observed) -> Option<String> {
+    if a.result != b.result {
+        return Some(format!("result {:?} vs {:?}", a.result, b.result));
+    }
+    if a.total != b.total {
+        return Some(format!("totals {:?} vs {:?}", a.total, b.total));
+    }
+    if a.loops != b.loops {
+        return Some(format!("loops {:?} vs {:?}", a.loops, b.loops));
+    }
+    if a.arrays != b.arrays {
+        for ((n1, d1), (_, d2)) in a.arrays.iter().zip(&b.arrays) {
+            if d1 != d2 {
+                return Some(format!("array {n1} differs"));
+            }
+        }
+        return Some("array set differs".into());
+    }
+    if a.scalars != b.scalars {
+        return Some(format!(
+            "scalars {:?} vs {:?}",
+            a.scalars, b.scalars
+        ));
+    }
+    None
+}
+
+fn engines_agree(src: &str) -> Result<(), String> {
+    let prog = parse(src).map_err(|e| format!("parse: {e}"))?;
+    let globals: Vec<(String, bool)> = prog
+        .globals
+        .iter()
+        .filter_map(|g| match g {
+            Stmt::Decl { name, ty, .. } => {
+                Some((name.clone(), ty.is_indexable()))
+            }
+            _ => None,
+        })
+        .collect();
+
+    let mut interp = Interp::new(&prog).map_err(|e| e.to_string())?;
+    let oracle = observe(&mut interp, &globals);
+    let mut vm = Vm::new(&prog).map_err(|e| e.to_string())?;
+    let fast = observe(&mut vm, &globals);
+
+    match (oracle, fast) {
+        (Ok(a), Ok(b)) => match diff(&a, &b) {
+            None => Ok(()),
+            Some(d) => Err(d),
+        },
+        (Err(a), Err(b)) => {
+            if a == b {
+                Ok(())
+            } else {
+                Err(format!("different errors: {a:?} vs {b:?}"))
+            }
+        }
+        (Ok(_), Err(e)) => Err(format!("vm failed, oracle passed: {e}")),
+        (Err(e), Ok(_)) => Err(format!("oracle failed, vm passed: {e}")),
+    }
+}
+
+// ---- tests ----
+
+#[test]
+fn vm_matches_oracle_on_random_programs() {
+    // ≥100 random programs: identical results, globals, OpCounts, and
+    // per-loop profiles.
+    check(128, |rng| {
+        let src = gen_program(rng);
+        match engines_agree(&src) {
+            Ok(()) => Outcome::Pass,
+            Err(d) => holds(false, format!("{d}\n--- program ---\n{src}")),
+        }
+    });
+}
+
+#[test]
+fn vm_matches_oracle_on_bundled_workloads() {
+    for app in fpga_offload::workloads::APPS {
+        let src = fpga_offload::workloads::source(app).unwrap();
+        engines_agree(src).unwrap_or_else(|d| panic!("{app}: {d}"));
+    }
+}
+
+#[test]
+fn vm_matches_oracle_on_error_programs() {
+    // Out-of-bounds and div-by-zero must fail identically.
+    for src in [
+        "#define N 4\nfloat a[N];\nint main() { a[9] = 1.0; return 0; }",
+        "int main() { int x = 0; return 3 / x; }",
+        "int main() { int x = 0; return 3 % x; }",
+        "#define N 4\nfloat a[N];\nint main() { return a[0][1]; }",
+    ] {
+        engines_agree(src).unwrap_or_else(|d| panic!("{src}: {d}"));
+    }
+}

@@ -1,0 +1,1205 @@
+#!/usr/bin/env python3
+"""Offline replica of the rust_pallas cost model.
+
+Used to design/re-tune the bundled workload .c files (rust/src/workloads/c/)
+so the integration-test speedup windows hold: it mirrors the MiniC
+interpreter op counting, loop analysis, HLS estimate/schedule, FPGA
+simulate, and the narrowing funnel + two measurement rounds.
+
+Usage: python3 tools/costmodel_check.py rust/src/workloads/c/tdfir.c
+"""
+import math, re, sys
+sys.setrecursionlimit(100000)
+
+# ------------------------- lexer -------------------------
+TOK_RE = re.compile(r"""
+  (?P<ws>\s+|//[^\n]*|(?s:/\*.*?\*/)|\#include[^\n]*)
+| (?P<define>\#define)
+| (?P<float>\d+\.\d*(e[+-]?\d+)?|\.\d+|\d+e[+-]?\d+)
+| (?P<int>\d+)
+| (?P<id>[A-Za-z_]\w*)
+| (?P<str>"(\\.|[^"\\])*")
+| (?P<op>\+\+|--|\+=|-=|\*=|/=|==|!=|<=|>=|&&|\|\||[-+*/%<>=!(){}\[\];,])
+""", re.VERBOSE)
+
+KEYWORDS = {"int","float","double","void","const","if","else","for","while","return"}
+
+def lex(src):
+    toks, i = [], 0
+    while i < len(src):
+        m = TOK_RE.match(src, i)
+        if not m:
+            raise SyntaxError(f"lex error at {src[i:i+20]!r}")
+        i = m.end()
+        if m.lastgroup == "ws":
+            continue
+        kind, val = m.lastgroup, m.group()
+        if kind == "id" and val in KEYWORDS:
+            kind = val
+        elif kind == "int":
+            kind = "ilit"
+        elif kind == "float":
+            kind = "flit"
+        toks.append((kind, val))
+    toks.append(("eof",""))
+    return toks
+
+# ------------------------- AST + parser -------------------------
+class P:
+    def __init__(self, src):
+        self.t = lex(src); self.i = 0
+        self.defines = []      # (name, float)
+        self.globals = []      # Decl stmts
+        self.funcs = {}        # name -> (params, body)  params: (name, ty)
+        self.funcorder = []
+        self.next_loop = 0
+    def peek(self, k=0): return self.t[self.i+k]
+    def bump(self):
+        tok = self.t[self.i]; self.i += 1; return tok
+    def accept(self, kind, val=None):
+        k,v = self.peek()
+        if k==kind and (val is None or v==val):
+            self.bump(); return True
+        return False
+    def expect(self, kind, val=None):
+        if not self.accept(kind,val):
+            raise SyntaxError(f"expected {kind} {val} got {self.peek()} @{self.i}")
+    def parse(self):
+        while self.peek()[0] != "eof":
+            if self.accept("define"):
+                name = self.bump()[1]
+                neg = self.accept("op","-")
+                k,v = self.bump()
+                x = float(v)
+                self.defines.append((name, -x if neg else x))
+            else:
+                self.top_item()
+        return self
+    def scalar_type(self):
+        self.accept("const")
+        k,v = self.bump()
+        assert k in ("int","float","double","void"), (k,v)
+        return v
+    def starts_type(self):
+        return self.peek()[0] in ("int","float","double","void","const")
+    def top_item(self):
+        sc = self.scalar_type()
+        is_ptr = self.accept("op","*")
+        name = self.bump()[1]
+        if self.peek() == ("op","("):
+            params = self.params()
+            body = self.block()
+            self.funcs[name] = (params, body)
+            self.funcorder.append(name)
+        else:
+            d = self.decl_rest(sc, is_ptr, name)
+            self.expect("op",";")
+            self.globals.append(d)
+    def params(self):
+        self.expect("op","(")
+        ps = []
+        if self.accept("op",")"): return ps
+        while True:
+            if self.peek()[0]=="void" and self.peek(1)==("op",")"):
+                self.bump(); break
+            sc = self.scalar_type()
+            is_ptr = self.accept("op","*")
+            pname = self.bump()[1]
+            dims = self.dims() if self.peek()==("op","[") else None
+            ty = ("ptr",sc) if is_ptr else (("arr",sc,dims) if dims else ("scalar",sc))
+            ps.append((pname,ty))
+            if not self.accept("op",","): break
+        self.expect("op",")")
+        return ps
+    def dims(self):
+        ds=[]
+        while self.accept("op","["):
+            ds.append(self.const_dim())
+            self.expect("op","]")
+        return ds
+    def const_dim(self):
+        acc = self.const_atom()
+        while True:
+            if self.accept("op","*"): acc *= self.const_atom()
+            elif self.accept("op","+"): acc += self.const_atom()
+            elif self.accept("op","-"): acc -= self.const_atom()
+            else: return acc
+    def const_atom(self):
+        k,v = self.bump()
+        if k=="ilit": return int(v)
+        if k=="id":
+            for n,x in reversed(self.defines):
+                if n==v: return int(x)
+            raise SyntaxError(f"dim {v} not a define")
+        raise SyntaxError(f"bad dim atom {k} {v}")
+    def decl_rest(self, sc, is_ptr, name):
+        if is_ptr: ty = ("ptr",sc)
+        elif self.peek()==("op","["): ty = ("arr",sc,self.dims())
+        else: ty = ("scalar",sc)
+        init = None
+        if self.accept("op","="):
+            init = self.expr()
+        return ("decl", name, ty, init)
+    def block(self):
+        self.expect("op","{")
+        out=[]
+        while not self.accept("op","}"):
+            out.append(self.stmt())
+        return out
+    def body(self):
+        if self.peek()==("op","{"): return self.block()
+        return [self.stmt()]
+    def stmt(self):
+        k,v = self.peek()
+        if k=="if": return self.if_stmt()
+        if k=="for": return self.for_stmt()
+        if k=="while": return self.while_stmt()
+        if k=="return":
+            self.bump()
+            val = None if self.peek()==("op",";") else self.expr()
+            self.expect("op",";")
+            return ("return", val)
+        if self.starts_type():
+            sc = self.scalar_type()
+            is_ptr = self.accept("op","*")
+            name = self.bump()[1]
+            d = self.decl_rest(sc,is_ptr,name)
+            self.expect("op",";")
+            return d
+        s = self.simple_stmt()
+        self.expect("op",";")
+        return s
+    def simple_stmt(self):
+        name = self.bump()[1]
+        if self.peek()==("op","("):
+            args = self.call_args()
+            return ("exprstmt", ("call",name,args))
+        if self.peek()==("op","["):
+            idx=[]
+            while self.accept("op","["):
+                idx.append(self.expr()); self.expect("op","]")
+            target=("index",name,idx)
+        else:
+            target=("var",name)
+        k,v = self.peek()
+        ops = {"=":"set","+=":"add","-=":"sub","*=":"mul","/=":"div"}
+        if v in ops:
+            self.bump(); return ("assign",target,ops[v],self.expr())
+        if v=="++": self.bump(); return ("assign",target,"add",("int",1))
+        if v=="--": self.bump(); return ("assign",target,"sub",("int",1))
+        raise SyntaxError(f"expected assignment at {self.peek()}")
+    def if_stmt(self):
+        self.expect("if"); self.expect("op","(")
+        c=self.expr(); self.expect("op",")")
+        th=self.body()
+        el=[]
+        if self.accept("else"):
+            el=[self.if_stmt()] if self.peek()[0]=="if" else self.body()
+        return ("if",c,th,el)
+    def for_stmt(self):
+        lid = self.next_loop; self.next_loop += 1
+        self.expect("for"); self.expect("op","(")
+        if self.peek()==("op",";"): init=None
+        elif self.starts_type():
+            sc=self.scalar_type(); name=self.bump()[1]
+            init=self.decl_rest(sc,False,name)
+        else: init=self.simple_stmt()
+        self.expect("op",";")
+        cond=None if self.peek()==("op",";") else self.expr()
+        self.expect("op",";")
+        step=None if self.peek()==("op",")") else self.simple_stmt()
+        self.expect("op",")")
+        body=self.body()
+        return ("for",lid,init,cond,step,body)
+    def while_stmt(self):
+        lid=self.next_loop; self.next_loop+=1
+        self.expect("while"); self.expect("op","(")
+        c=self.expr(); self.expect("op",")")
+        return ("while",lid,c,self.body())
+    # exprs
+    def expr(self): return self.or_()
+    def or_(self):
+        l=self.and_()
+        while self.accept("op","||"): l=("bin","or",l,self.and_())
+        return l
+    def and_(self):
+        l=self.eq()
+        while self.accept("op","&&"): l=("bin","and",l,self.eq())
+        return l
+    def eq(self):
+        l=self.rel()
+        while self.peek()[1] in ("==","!=") and self.peek()[0]=="op":
+            op=self.bump()[1]; l=("bin","eq" if op=="==" else "ne",l,self.rel())
+        return l
+    def rel(self):
+        l=self.add()
+        while self.peek()[0]=="op" and self.peek()[1] in ("<",">","<=",">="):
+            op=self.bump()[1]
+            m={"<":"lt",">":"gt","<=":"le",">=":"ge"}
+            l=("bin",m[op],l,self.add())
+        return l
+    def add(self):
+        l=self.mul()
+        while self.peek()[0]=="op" and self.peek()[1] in ("+","-"):
+            op=self.bump()[1]; l=("bin","add" if op=="+" else "sub",l,self.mul())
+        return l
+    def mul(self):
+        l=self.unary()
+        while self.peek()[0]=="op" and self.peek()[1] in ("*","/","%"):
+            op=self.bump()[1]
+            m={"*":"mul","/":"div","%":"rem"}
+            l=("bin",m[op],l,self.unary())
+        return l
+    def unary(self):
+        if self.peek()==("op","-"):
+            self.bump(); return ("neg",self.unary())
+        if self.peek()==("op","!"):
+            self.bump(); return ("not",self.unary())
+        if self.peek()==("op","(") and self.peek(1)[0] in ("int","float","double"):
+            self.bump(); sc=self.scalar_type(); self.expect("op",")")
+            return ("cast",sc,self.unary())
+        return self.postfix()
+    def postfix(self):
+        k,v=self.peek()
+        if k=="ilit": self.bump(); return ("int",int(v))
+        if k=="flit": self.bump(); return ("flt",float(v))
+        if k=="str": self.bump(); return ("strlit",v)
+        if v=="(" and k=="op":
+            self.bump(); e=self.expr(); self.expect("op",")"); return e
+        if k=="id":
+            self.bump()
+            if self.peek()==("op","("):
+                return ("call",v,self.call_args())
+            if self.peek()==("op","["):
+                idx=[]
+                while self.accept("op","["):
+                    idx.append(self.expr()); self.expect("op","]")
+                return ("index",v,idx)
+            return ("var",v)
+        raise SyntaxError(f"expected expression at {self.peek()}")
+    def call_args(self):
+        self.expect("op","(")
+        args=[]
+        if self.accept("op",")"): return args
+        while True:
+            args.append(self.expr())
+            if not self.accept("op",","): break
+        self.expect("op",")")
+        return args
+
+# ------------------------- interpreter with OpCounts -------------------------
+BUILTIN1 = {"sin":math.sin,"cos":math.cos,"tan":math.tan,"sqrt":math.sqrt,
+            "sqrtf":math.sqrt,"exp":math.exp,"log":math.log,"fabs":abs,
+            "floor":math.floor,"ceil":math.ceil}
+
+FIELDS = ("f_add","f_mul","f_div","f_trig","i_op","cmp","reads","writes","read_bytes","write_bytes")
+class Ops:
+    __slots__ = FIELDS
+    def __init__(self):
+        for f in FIELDS: setattr(self,f,0)
+    def snap(self): return tuple(getattr(self,f) for f in FIELDS)
+    def delta(self, s): return {f: getattr(self,f)-s[i] for i,f in enumerate(FIELDS)}
+    def asdict(self): return {f:getattr(self,f) for f in FIELDS}
+
+def size_of(sc): return 8 if sc=="double" else 4 if sc in ("int","float") else 0
+
+class Ret(Exception):
+    def __init__(self,v): self.v=v
+
+class Interp:
+    def __init__(self, prog):
+        self.p = prog
+        self.arena = []   # (elem, dims, data list)
+        self.globals = {}
+        self.total = Ops()
+        self.slots = [ {"entries":0,"trips":0,"snapbase":None,"ops":{f:0 for f in FIELDS},
+                        "ar":set(),"aw":set()} for _ in range(prog.next_loop)]
+        self.stack = []   # [(lid, snapshot)]
+        for n,v in prog.defines:
+            self.globals[n] = int(v) if v==int(v) else v
+        for (_,name,ty,init) in prog.globals:
+            if ty[0]=="arr":
+                elem,dims = ty[1],ty[2]
+                n = 1
+                for d in dims: n*=d
+                self.arena.append((elem,dims,[0.0]*n))
+                self.globals[name] = ("ARR",len(self.arena)-1)
+            else:
+                self.globals[name] = 0 if ty[1]=="int" else 0.0
+            if init is not None:
+                self.globals[name] = self.eval(init, [{}])
+    def call(self, name, args=()):
+        params, body = self.p.funcs[name]
+        env=[{}]
+        for (pn,ty),a in zip(params,args):
+            env[0][pn]=a
+        try:
+            self.exec_block(body, env)
+        except Ret as r:
+            return r.v
+        return 0
+    def exec_block(self, stmts, env):
+        needs = any(s[0]=="decl" for s in stmts)
+        if needs: env.append({})
+        try:
+            for s in stmts:
+                self.exec(s, env)
+        finally:
+            if needs: env.pop()
+    def lookup(self, name, env):
+        for sc in reversed(env):
+            if name in sc: return sc[name]
+        return self.globals.get(name)
+    def set_var(self, name, v, env):
+        for sc in reversed(env):
+            if name in sc:
+                sc[name]=v; return
+        if name in self.globals:
+            self.globals[name]=v; return
+        raise RuntimeError(f"undeclared {name}")
+    def exec(self, s, env):
+        t=self.total
+        k=s[0]
+        if k=="decl":
+            _,name,ty,init = s
+            if ty[0]=="arr":
+                elem,dims=ty[1],ty[2]
+                n=1
+                for d in dims:n*=d
+                self.arena.append((elem,dims,[0.0]*n))
+                env[-1][name]=("ARR",len(self.arena)-1)
+            else:
+                env[-1][name]= 0 if ty[1]=="int" else 0.0
+            if init is not None:
+                v=self.eval(init,env)
+                if ty[0]=="scalar":
+                    if ty[1]=="int" and isinstance(v,float): v=int(v)
+                    elif ty[1] in ("float","double") and isinstance(v,int): v=float(v)
+                self.set_var(name,v,env)
+        elif k=="assign":
+            _,target,op,value = s
+            rhs=self.eval(value,env)
+            if target[0]=="var":
+                name=target[1]
+                if op=="set": new=rhs
+                else:
+                    old=self.lookup(name,env)
+                    new=self.apply_bin(op,old,rhs)
+                self.set_var(name,new,env)
+            else:
+                _,base,indices=target
+                idx=[self.as_int(self.eval(e,env)) for e in indices]
+                t.i_op+=len(idx)
+                arr=self.lookup(base,env)
+                elem,dims,data=self.arena[arr[1]]
+                flat=self.flat(idx,dims)
+                esz=size_of(elem)
+                if op=="set": new=rhs
+                else:
+                    old=data[flat]  # always float
+                    self.count_read(base,esz)
+                    new=self.apply_bin(op,old,rhs)
+                data[flat]=float(new)
+                self.count_write(base,esz)
+        elif k=="if":
+            _,c,th,el=s
+            v=self.eval(c,env)
+            t.cmp+=1
+            self.exec_block(th if v!=0 else el, env)
+        elif k=="for":
+            _,lid,init,cond,step,body=s
+            env.append({})
+            try:
+                if init is not None: self.exec(init,env)
+                snap=self.total.snap()
+                self.stack.append(lid)
+                self.slots[lid]["entries"]+=1
+                try:
+                    while True:
+                        if cond is not None:
+                            t.cmp+=1
+                            if self.eval(cond,env)==0: break
+                        self.slots[lid]["trips"]+=1
+                        self.exec_block(body,env)
+                        if step is not None: self.exec(step,env)
+                finally:
+                    self.stack.pop()
+                    d=self.total.delta(snap)
+                    for f in FIELDS: self.slots[lid]["ops"][f]+=d[f]
+            finally:
+                env.pop()
+        elif k=="while":
+            _,lid,cond,body=s
+            snap=self.total.snap()
+            self.stack.append(lid)
+            self.slots[lid]["entries"]+=1
+            try:
+                while True:
+                    t.cmp+=1
+                    if self.eval(cond,env)==0: break
+                    self.slots[lid]["trips"]+=1
+                    self.exec_block(body,env)
+            finally:
+                self.stack.pop()
+                d=self.total.delta(snap)
+                for f in FIELDS: self.slots[lid]["ops"][f]+=d[f]
+        elif k=="return":
+            raise Ret(0 if s[1] is None else self.eval(s[1],env))
+        elif k=="exprstmt":
+            self.eval(s[1],env)
+        else:
+            raise RuntimeError(k)
+    def count_read(self,base,esz):
+        t=self.total
+        t.reads+=1; t.read_bytes+=esz
+        for lid in self.stack: self.slots[lid]["ar"].add(base)
+    def count_write(self,base,esz):
+        t=self.total
+        t.writes+=1; t.write_bytes+=esz
+        for lid in self.stack: self.slots[lid]["aw"].add(base)
+    def flat(self,idx,dims):
+        assert len(idx)==len(dims), (idx,dims)
+        f=0
+        for i,d in zip(idx,dims):
+            assert 0<=i<d, (idx,dims)
+            f=f*d+i
+        return f
+    def as_int(self,v): return v if isinstance(v,int) else int(v)
+    def apply_bin(self,op,l,r):
+        t=self.total
+        if isinstance(l,int) and isinstance(r,int):
+            if op in ("add","sub","mul","div","rem"):
+                t.i_op+=1
+                if op=="add": return l+r
+                if op=="sub": return l-r
+                if op=="mul": return l*r
+                if op=="div": return int(l/r) if r!=0 else 1/0
+                if op=="rem": return l-int(l/r)*r
+            t.cmp+=1
+            return int(CMP[op](l,r))
+        a=float(l); b=float(r)
+        if op in ("add","sub"): t.f_add+=1; return a+b if op=="add" else a-b
+        if op=="mul": t.f_mul+=1; return a*b
+        if op=="div": t.f_div+=1; return a/b
+        if op=="rem": t.f_div+=1; return math.fmod(a,b)
+        t.cmp+=1
+        return int(CMP[op](a,b))
+    def eval(self,e,env):
+        t=self.total
+        k=e[0]
+        if k=="int" or k=="flt": return e[1]
+        if k=="strlit": return 0
+        if k=="var":
+            v=self.lookup(e[1],env)
+            if v is None: raise RuntimeError(f"undeclared {e[1]}")
+            return v
+        if k=="index":
+            _,base,indices=e
+            idx=[self.as_int(self.eval(x,env)) for x in indices]
+            t.i_op+=len(idx)
+            arr=self.lookup(base,env)
+            elem,dims,data=self.arena[arr[1]]
+            v=data[self.flat(idx,dims)]
+            self.count_read(base,size_of(elem))
+            return int(v) if elem=="int" else v
+        if k=="bin":
+            _,op,l,r=e
+            if op=="and":
+                lv=self.eval(l,env); t.cmp+=1
+                if lv==0: return 0
+                return int(self.eval(r,env)!=0)
+            if op=="or":
+                lv=self.eval(l,env); t.cmp+=1
+                if lv!=0: return 1
+                return int(self.eval(r,env)!=0)
+            lv=self.eval(l,env); rv=self.eval(r,env)
+            return self.apply_bin(op,lv,rv)
+        if k=="neg":
+            v=self.eval(e[1],env)
+            if isinstance(v,int): t.i_op+=1; return -v
+            t.f_add+=1; return -v
+        if k=="not":
+            v=self.eval(e[1],env); t.cmp+=1; return int(v==0)
+        if k=="cast":
+            v=self.eval(e[2],env)
+            return int(v) if e[1]=="int" else float(v)
+        if k=="call":
+            _,name,args=e
+            if name in BUILTIN1:
+                v=float(self.eval(args[0],env)); t.f_trig+=1
+                return BUILTIN1[name](v)
+            if name=="printf":
+                for a in args[1:]: self.eval(a,env)
+                return 0
+            if name in ("fmin","fmax"):
+                a=float(self.eval(args[0],env)); b=float(self.eval(args[1],env))
+                t.cmp+=1
+                return min(a,b) if name=="fmin" else max(a,b)
+            if name=="pow":
+                a=float(self.eval(args[0],env)); b=float(self.eval(args[1],env))
+                t.f_trig+=1
+                return a**b
+            vals=[self.eval(a,env) for a in args]
+            return self.call(name,vals)
+        raise RuntimeError(k)
+
+CMP={"eq":lambda a,b:a==b,"ne":lambda a,b:a!=b,"lt":lambda a,b:a<b,
+     "gt":lambda a,b:a>b,"le":lambda a,b:a<=b,"ge":lambda a,b:a>=b}
+
+# ------------------------- static analysis -------------------------
+def walk_stmt(s, f):
+    f(s)
+    k=s[0]
+    if k=="if":
+        for x in s[2]+s[3]: walk_stmt(x,f)
+    elif k=="for":
+        if s[2] is not None: walk_stmt(s[2],f)
+        if s[4] is not None: walk_stmt(s[4],f)
+        for x in s[5]: walk_stmt(x,f)
+    elif k=="while":
+        for x in s[3]: walk_stmt(x,f)
+
+def walk_expr(e, f):
+    f(e)
+    k=e[0]
+    if k=="index":
+        for x in e[2]: walk_expr(x,f)
+    elif k=="bin":
+        walk_expr(e[2],f); walk_expr(e[3],f)
+    elif k in ("neg","not"):
+        walk_expr(e[1],f)
+    elif k=="cast":
+        walk_expr(e[2],f)
+    elif k=="call":
+        for x in e[2]: walk_expr(x,f)
+
+def loop_table(prog):
+    """[{id, func, depth, parent, children, induction, static_trips,
+        arrays_read, arrays_written, free_scalars, blocker}]"""
+    out={}
+    defmap=dict(prog.defines)
+    def is_array(name, params):
+        for (_,gn,ty,_) in prog.globals:
+            if gn==name and ty[0] in ("arr","ptr"): return True
+        for pn,ty in params:
+            if pn==name and ty[0] in ("arr","ptr"): return True
+        return False
+    def const_eval(e):
+        k=e[0]
+        if k=="int": return float(e[1])
+        if k=="flt": return e[1]
+        if k=="var": return defmap.get(e[1])
+        if k=="bin":
+            a=const_eval(e[2]); b=const_eval(e[3])
+            if a is None or b is None: return None
+            if e[1]=="add": return a+b
+            if e[1]=="sub": return a-b
+            if e[1]=="mul": return a*b
+            if e[1]=="div": return a/b if b!=0 else None
+            return None
+        if k=="neg":
+            v=const_eval(e[1]); return -v if v is not None else None
+        if k=="cast": return const_eval(e[2])
+        return None
+    def static_trips(init,cond,step):
+        def ivar(st):
+            if st is None: return None
+            if st[0]=="decl": return st[1]
+            if st[0]=="assign" and st[1][0]=="var": return st[1][1]
+            return None
+        v1=ivar(init);
+        v2=ivar(step)
+        if v1 is None or v1!=v2: return None
+        if init[0]=="decl":
+            if init[3] is None: return None
+            start=const_eval(init[3])
+        else: start=const_eval(init[3])
+        if start is None: return None
+        if step[0]!="assign": return None
+        if step[2]=="add": stride=const_eval(step[3])
+        elif step[2]=="set" and step[3][0]=="bin" and step[3][1]=="add" and step[3][2]==("var",v1):
+            stride=const_eval(step[3][3])
+        else: return None
+        if stride is None or stride<=0: return None
+        if cond is None or cond[0]!="bin": return None
+        if cond[2]!=("var",v1): return None
+        if cond[1]=="lt": bound=const_eval(cond[3]); inc=0.0
+        elif cond[1]=="le": bound=const_eval(cond[3]); inc=1.0
+        else: return None
+        if bound is None: return None
+        span=bound-start+inc
+        if span<=0: return 0
+        return math.ceil(span/stride)
+    def analyze_loop(s, fname, params, depth, parent):
+        lid=s[1]
+        declared=set()
+        if s[0]=="for" and s[2] is not None and s[2][0]=="decl":
+            declared.add(s[2][1])
+        body = s[5] if s[0]=="for" else s[3]
+        for st in body:
+            def cd(x):
+                if x[0]=="decl": declared.add(x[1])
+                if x[0]=="for" and x[2] is not None and x[2][0]=="decl":
+                    declared.add(x[2][1])
+            walk_stmt(st,cd)
+        info={"id":lid,"func":fname,"depth":depth,"parent":parent,"children":[],
+              "induction":None,"static_trips":None,"ar":set(),"aw":set(),
+              "free":set(),"blocker":None}
+        if s[0]=="while":
+            info["blocker"]="while"
+        else:
+            init,cond,step=s[2],s[3],s[4]
+            def ivar(st):
+                if st is None: return None
+                if st[0]=="decl": return st[1]
+                if st[0]=="assign" and st[1][0]=="var": return st[1][1]
+                return None
+            if ivar(init) is not None and ivar(init)==ivar(step):
+                info["induction"]=ivar(init)
+            info["static_trips"]=static_trips(init,cond,step)
+        def note_expr(e):
+            def g(x):
+                if x[0]=="index": info["ar"].add(x[1])
+                elif x[0]=="var":
+                    n=x[1]
+                    if n not in declared and not is_array(n,params) and n not in defmap:
+                        info["free"].add(n)
+                elif x[0]=="call":
+                    n=x[1]
+                    if n=="printf":
+                        info["blocker"]=info["blocker"] or "io"
+                    elif n not in BUILTIN1 and n not in ("fmin","fmax","pow") and n in prog.funcs:
+                        info["blocker"]=info["blocker"] or "usercall"
+            walk_expr(e,g)
+        if s[0]=="for":
+            if s[3] is not None: note_expr(s[3])
+            if s[4] is not None and s[4][0]=="assign": note_expr(s[4][3])
+        else:
+            note_expr(s[2])
+        for st in body:
+            def h(x):
+                k=x[0]
+                if k=="assign":
+                    tgt=x[1]
+                    if tgt[0]=="index":
+                        info["aw"].add(tgt[1])
+                        for i in tgt[2]: note_expr(i)
+                    else:
+                        if tgt[1] not in declared:
+                            info["free"].add(tgt[1])
+                    note_expr(x[3])
+                elif k=="decl":
+                    if x[3] is not None: note_expr(x[3])
+                elif k=="if": note_expr(x[1])
+                elif k=="for":
+                    if x[3] is not None: note_expr(x[3])
+                    if x[4] is not None and x[4][0]=="assign": note_expr(x[4][3])
+                elif k=="while": note_expr(x[2])
+                elif k=="return":
+                    info["blocker"]=info["blocker"] or "return"
+                elif k=="exprstmt": note_expr(x[1])
+            walk_stmt(st,h)
+        out[lid]=info
+        if parent is not None:
+            out[parent]["children"].append(lid)
+        for st in body:
+            def rec(x, d):
+                if x[0] in ("for","while"):
+                    analyze_loop(x,fname,params,d,lid)
+                    return True
+                return False
+            walk_top(st, lambda x: analyze_loop(x,fname,params,depth+1,lid))
+        # propagate child blockers
+        for c in out[lid]["children"]:
+            if out[c]["blocker"] is not None and out[lid]["blocker"] is None:
+                out[lid]["blocker"]="nested"
+        return info
+    def walk_top(s, on_loop):
+        """call on_loop for direct loop statements (not entering them)"""
+        k=s[0]
+        if k in ("for","while"):
+            on_loop(s)
+        elif k=="if":
+            for x in s[2]+s[3]: walk_top(x,on_loop)
+    for fname in prog.funcorder:
+        params,body=prog.funcs[fname]
+        for s in body:
+            def walk_ifs(x):
+                if x[0] in ("for","while"):
+                    analyze_loop(x,fname,params,0,None)
+                elif x[0]=="if":
+                    for y in x[2]+x[3]: walk_ifs(y)
+            walk_ifs(s)
+    # fix blocker propagation bottom-up (repeat to fixpoint)
+    changed=True
+    while changed:
+        changed=False
+        for lid,info in out.items():
+            for c in info["children"]:
+                if out[c]["blocker"] is not None and info["blocker"] is None:
+                    info["blocker"]="nested"; changed=True
+    return out
+
+# ------------------------- depend classify -------------------------
+def classify(loop_stmt):
+    body = loop_stmt[5] if loop_stmt[0]=="for" else loop_stmt[3]
+    induction=None
+    if loop_stmt[0]=="for":
+        init,step=loop_stmt[2],loop_stmt[4]
+        def ivar(st):
+            if st is None: return None
+            if st[0]=="decl": return st[1]
+            if st[0]=="assign" and st[1][0]=="var": return st[1][1]
+            return None
+        if ivar(init) is not None and ivar(init)==ivar(step):
+            induction=ivar(init)
+    local=set()
+    for st in body:
+        def cd(x):
+            if x[0]=="decl": local.add(x[1])
+            if x[0]=="for" and x[2] is not None:
+                if x[2][0]=="decl": local.add(x[2][1])
+                elif x[2][0]=="assign" and x[2][1][0]=="var": local.add(x[2][1][1])
+        walk_stmt(st,cd)
+    events=[]
+    def emit_expr(e):
+        def g(x):
+            if x[0]=="var": events.append(("rs",x[1]))
+            elif x[0]=="index": events.append(("ra",x[1],repr(x[2])))
+        walk_expr(e,g)
+    def self_update_rest(name, value):
+        # value == name op rest?
+        if value[0]=="bin" and value[1] in ("add","sub","mul","div"):
+            if value[2]==("var",name): return value[3]
+        return None
+    def emit_stmt(s):
+        k=s[0]
+        if k=="decl":
+            if s[3] is not None: emit_expr(s[3])
+        elif k=="assign":
+            _,tgt,op,value=s
+            if tgt[0]=="var":
+                name=tgt[1]
+                if op!="set":
+                    emit_expr(value); red=True
+                else:
+                    rest=self_update_rest(name,value)
+                    if rest is not None:
+                        emit_expr(rest); red=True
+                    else:
+                        emit_expr(value); red=False
+                events.append(("ws",name,red))
+            else:
+                emit_expr(value)
+                for i in tgt[2]: emit_expr(i)
+                if op!="set": events.append(("ra",tgt[1],repr(tgt[2])))
+                events.append(("wa",tgt[1],repr(tgt[2])))
+        elif k=="if":
+            emit_expr(s[1])
+            for x in s[2]+s[3]: emit_stmt(x)
+        elif k=="for":
+            if s[2] is not None: emit_stmt(s[2])
+            if s[3] is not None: emit_expr(s[3])
+            for x in s[5]: emit_stmt(x)
+            if s[4] is not None: emit_stmt(s[4])
+        elif k=="while":
+            emit_expr(s[2])
+            for x in s[3]: emit_stmt(x)
+        elif k=="return":
+            if s[1] is not None: emit_expr(s[1])
+        elif k=="exprstmt":
+            emit_expr(s[1])
+    for s in body: emit_stmt(s)
+    aw={}
+    for e in events:
+        if e[0]=="wa": aw.setdefault(e[1],[]).append(e[2])
+    for e in events:
+        if e[0]=="ra" and e[1] in aw:
+            if any(w!=e[2] for w in aw[e[1]]):
+                return ("carried",e[1])
+    tracked=lambda n: n not in local and n!=induction
+    state={}
+    for e in events:
+        if e[0]=="rs" and tracked(e[1]):
+            st=state.setdefault(e[1],{"rf":False,"w":False,"pw":False,"rw":False,"raw":False})
+            if st["w"]: st["raw"]=True
+            else: st["rf"]=True
+        elif e[0]=="ws" and tracked(e[1]):
+            st=state.setdefault(e[1],{"rf":False,"w":False,"pw":False,"rw":False,"raw":False})
+            st["w"]=True
+            if e[2]: st["rw"]=True
+            else: st["pw"]=True
+    reds=set()
+    for n,st in sorted(state.items()):
+        if not st["w"]: continue
+        if st["rw"] and not st["pw"] and not st["rf"] and not st["raw"]:
+            reds.add(n); continue
+        if st["rw"]: return ("carried",n)
+        if st["rf"]: return ("carried",n)
+    return ("reduction",reds) if reds else ("independent",)
+
+# ------------------------- hls inventory/estimate/schedule -------------------------
+SPATIAL_MAX=64
+INV_FIELDS=("f_add","f_mul","f_div","f_trig","i_op","cmp","loads","stores","inner_loops","ports")
+def inv_new(): return {f:0 for f in INV_FIELDS}
+def inv_add(a,b):
+    for f in INV_FIELDS: a[f]+=b[f]
+def inv_scale(a,t):
+    out=dict(a)
+    for f in INV_FIELDS:
+        if f not in ("inner_loops","ports"): out[f]=a[f]*t
+    return out
+
+def local_static_trips(s, defines):
+    if s[0]!="for": return None
+    defmap={}
+    for n,v in defines: defmap[n]=v
+    def ev(e):
+        k=e[0]
+        if k=="int": return float(e[1])
+        if k=="flt": return e[1]
+        if k=="var": return defmap.get(e[1])
+        if k=="bin":
+            a=ev(e[2]); b=ev(e[3])
+            if a is None or b is None: return None
+            return {"add":a+b,"sub":a-b,"mul":a*b,"div":a/b if b!=0 else None}.get(e[1])
+        if k=="neg":
+            v=ev(e[1]); return -v if v is not None else None
+        return None
+    init,cond,step=s[2],s[3],s[4]
+    if init is None or step is None or cond is None: return None
+    if init[0]=="decl":
+        var=init[1]; start=ev(init[3]) if init[3] is not None else None
+    elif init[0]=="assign" and init[1][0]=="var":
+        var=init[1][1]; start=ev(init[3])
+    else: return None
+    if start is None: return None
+    if step[0]=="assign" and step[2]=="add": stride=ev(step[3])
+    else: return None
+    if stride is None or stride<=0: return None
+    if cond[0]!="bin" or cond[2]!=("var",var): return None
+    if cond[1]=="lt": bound=ev(cond[3]); inc=0.0
+    elif cond[1]=="le": bound=ev(cond[3]); inc=1.0
+    else: return None
+    if bound is None: return None
+    span=bound-start+inc
+    if span<=0: return 0
+    return math.ceil(span/stride)
+
+def has_nested_loop(stmts):
+    found=[False]
+    for s in stmts:
+        def g(x):
+            if x[0] in ("for","while"): found[0]=True
+        walk_stmt(s,g)
+    return found[0]
+
+def expr_ops(e, inv, addr=False):
+    k=e[0]
+    if k=="bin":
+        op=e[1]
+        if addr: inv["i_op"]+=1
+        elif op in ("add","sub"): inv["f_add"]+=1
+        elif op=="mul": inv["f_mul"]+=1
+        elif op in ("div","rem"): inv["f_div"]+=1
+        else: inv["cmp"]+=1
+        expr_ops(e[2],inv,addr); expr_ops(e[3],inv,addr)
+    elif k=="neg":
+        if addr: inv["i_op"]+=1
+        else: inv["f_add"]+=1
+        expr_ops(e[1],inv,addr)
+    elif k=="not":
+        if addr: inv["i_op"]+=1
+        else: inv["cmp"]+=1
+        expr_ops(e[1],inv,addr)
+    elif k=="index":
+        inv["loads"]+=1
+        inv["i_op"]+=len(e[2])
+        for i in e[2]: expr_ops(i,inv,True)
+    elif k=="call":
+        if e[1]!="printf": inv["f_trig"]+=1
+        for a in e[2]: expr_ops(a,inv,addr)
+    elif k=="cast":
+        expr_ops(e[2],inv,addr)
+
+def stmt_ops(s, defines):
+    inv=inv_new()
+    k=s[0]
+    if k=="decl":
+        if s[3] is not None: expr_ops(s[3],inv)
+    elif k=="assign":
+        _,tgt,op,value=s
+        expr_ops(value,inv)
+        if tgt[0]=="index":
+            for i in tgt[2]: expr_ops(i,inv,True)
+            inv["i_op"]+=len(tgt[2])
+            inv["stores"]+=1
+            if op!="set":
+                inv["loads"]+=1
+                inv["f_add"]+=1
+        else:
+            if op!="set": inv["f_add"]+=1
+    elif k=="if":
+        expr_ops(s[1],inv)
+        for x in s[2]+s[3]: inv_add(inv,stmt_ops(x,defines))
+    elif k=="for":
+        body=s[5]
+        binv=inv_new()
+        nested=has_nested_loop(body)
+        for x in body: inv_add(binv,stmt_ops(x,defines))
+        t=local_static_trips(s,defines)
+        if t is not None and not nested and t<=SPATIAL_MAX:
+            inv_add(inv,inv_scale(binv,int(t)))
+        else:
+            inv["inner_loops"]+=1; inv["cmp"]+=1; inv["i_op"]+=1
+            if s[3] is not None: expr_ops(s[3],inv)
+            inv_add(inv,binv)
+    elif k=="while":
+        inv["inner_loops"]+=1
+        expr_ops(s[2],inv)
+        for x in s[3]: inv_add(inv,stmt_ops(x,defines))
+    elif k=="return":
+        if s[1] is not None: expr_ops(s[1],inv)
+    elif k=="exprstmt":
+        expr_ops(s[1],inv)
+    return inv
+
+def inventory(loop_stmt, defines):
+    inv=inv_new()
+    body = loop_stmt[5] if loop_stmt[0]=="for" else loop_stmt[3]
+    inv["cmp"]+=1; inv["i_op"]+=1
+    for s in body: inv_add(inv,stmt_ops(s,defines))
+    return inv
+
+def spatial_factor(loop_stmt, defines):
+    best=[1]
+    body = loop_stmt[5] if loop_stmt[0]=="for" else loop_stmt[3]
+    for s in body:
+        def g(x):
+            if x[0]=="for":
+                if not has_nested_loop(x[5]):
+                    t=local_static_trips(x,defines)
+                    if t is not None and t<=SPATIAL_MAX:
+                        best[0]=max(best[0],int(t))
+        walk_stmt(s,g)
+    return best[0]
+
+DEV=dict(luts=854400,ffs=1708800,dsps=1518,bram_bits=55562240,bsp=0.18,
+         clock=240e6,pcie=6e9,dma_lat=12e-6,launch=6e-6)
+def usable(x): return int(x*(1-DEV["bsp"]))
+LOCAL_CACHE_MAX=256*1024
+M20K=20480
+
+def estimate(loop_stmt, arrays, defines):
+    """arrays: list of (name, elem, dims, direction) kernel array params"""
+    inv=inventory(loop_stmt, defines)
+    lut=2400 + inv["f_add"]*110+inv["f_mul"]*100+inv["f_div"]*3000+inv["f_trig"]*5800+inv["i_op"]*64+inv["cmp"]*36
+    ff=3600 + inv["f_add"]*170+inv["f_mul"]*160+inv["f_div"]*3600+inv["f_trig"]*7200+inv["i_op"]*64+inv["cmp"]*18
+    dsp=inv["f_add"]+inv["f_mul"]+inv["f_trig"]*8
+    lut+=len(arrays)*1600; ff+=len(arrays)*2600
+    lut+=(inv["loads"]+inv["stores"])*210; ff+=(inv["loads"]+inv["stores"])*260
+    lut+=(1+inv["inner_loops"])*320; ff+=(1+inv["inner_loops"])*420
+    bram=0
+    for (name,elem,dims,_) in arrays:
+        nb=size_of(elem)
+        for d in dims: nb*=d
+        if nb<=LOCAL_CACHE_MAX:
+            bits=max(nb*8,M20K)
+            bram+=math.ceil(bits/M20K)*M20K
+    return dict(luts=lut,ffs=ff,dsps=dsp,bram_bits=bram,inv=inv)
+
+def util_max(est):
+    return max(est["luts"]/usable(DEV["luts"]),est["ffs"]/usable(DEV["ffs"]),
+               est["dsps"]/usable(DEV["dsps"]),est["bram_bits"]/usable(DEV["bram_bits"]))
+
+def body_latency(inv):
+    return (inv["f_add"]*4+inv["f_mul"]*4+inv["f_div"]*28+inv["f_trig"]*36
+            +(inv["loads"]+inv["stores"])*5+(inv["i_op"]+inv["cmp"])*1)
+
+def schedule(loop_stmt, dep, est_combined_util, defines):
+    inv=inventory(loop_stmt, defines)
+    lat=max(body_latency(inv),1)
+    mem_bound=max(math.ceil(inv["ports"]/4),1)
+    if dep[0]=="independent": ii=mem_bound
+    elif dep[0]=="reduction": ii=max(4,mem_bound)
+    else: ii=max(lat,mem_bound)
+    derate=1.0-0.28*est_combined_util**1.5
+    fmax=DEV["clock"]*min(max(derate,0.4),1.0)
+    return dict(ii=ii,depth=lat,fmax=fmax)
+
+CPU=dict(clock=1.7e9,ipc=1.6,fadd=1.0,fmul=1.0,fdiv=14.0,trig=42.0,iop=0.5,cmp=0.5,rd=1.1,wr=1.4)
+def cpu_time(ops):
+    raw=(ops["f_add"]*CPU["fadd"]+ops["f_mul"]*CPU["fmul"]+ops["f_div"]*CPU["fdiv"]
+         +ops["f_trig"]*CPU["trig"]+ops["i_op"]*CPU["iop"]+ops["cmp"]*CPU["cmp"]
+         +ops["reads"]*CPU["rd"]+ops["writes"]*CPU["wr"])
+    return raw/CPU["ipc"]/CPU["clock"]
+
+def dma(bytes_):
+    if bytes_==0: return 0.0
+    return DEV["dma_lat"]+bytes_/DEV["pcie"]
+
+TRIGW=24
+def weighted_flops(o): return o["f_add"]+o["f_mul"]+o["f_div"]+o["f_trig"]*TRIGW
+
+def run_model(src, verbose=True, top_a=5, top_c=3, first_round=3, max_patterns=4):
+    prog=P(src).parse()
+    interp=Interp(prog)
+    interp.call("main")
+    table=loop_table(prog)
+    total=interp.total.asdict()
+    # find loop stmts by id
+    loops_by_id={}
+    for fname in prog.funcorder:
+        _,body=prog.funcs[fname]
+        for s in body:
+            def g(x):
+                if x[0] in ("for","while"): loops_by_id[x[1]]=x
+            walk_stmt(s,g)
+    # intensity
+    ranked=[]
+    for lid,slot in enumerate(interp.slots):
+        if slot["entries"]==0: continue
+        work=weighted_flops(slot["ops"])
+        acc=slot["ops"]["reads"]+slot["ops"]["writes"]
+        inten=work/max(acc,1)
+        ranked.append(dict(id=lid,work=work,acc=acc,inten=inten,score=inten*work,
+                           trips=slot["trips"],entries=slot["entries"]))
+    ranked.sort(key=lambda r:(-r["score"],-r["work"],r["id"]))
+    # candidates
+    def candidate(lid):
+        return table[lid]["blocker"] is None and interp.slots[lid]["entries"]>0
+    cand_ranked=[r for r in ranked if candidate(r["id"])]
+    if verbose:
+        print(f"loops: {prog.next_loop} | total cpu time {cpu_time(total)*1e3:.3f} ms")
+        for r in cand_ranked[:8]:
+            print(f"  cand L{r['id']:<3} score {r['score']:.3e} work {r['work']:.3e} inten {r['inten']:.2f} entries {r['entries']}")
+    # split viability + kernel params
+    def split_ok(lid):
+        info=table[lid]
+        # arrays must be global arrays
+        garrs={}
+        for (_,gn,ty,_) in prog.globals:
+            if ty[0]=="arr": garrs[gn]=(ty[1],ty[2])
+        arrays=[]
+        for name in sorted(info["ar"]|info["aw"]):
+            if name not in garrs: return None
+            elem,dims=garrs[name]
+            if name in info["ar"] and name in info["aw"]: d="inout"
+            elif name in info["aw"]: d="out"
+            else: d="in"
+            arrays.append((name,elem,dims,d))
+        gscal={gn for (_,gn,ty,_) in prog.globals if ty[0]=="scalar"}
+        # free scalars: written -> must be global
+        loop_stmt=loops_by_id[lid]
+        written=set()
+        body = loop_stmt[5] if loop_stmt[0]=="for" else loop_stmt[3]
+        for st in body:
+            def w(x):
+                if x[0]=="assign" and x[1][0]=="var": written.add(x[1][1])
+            walk_stmt(st,w)
+        scal_params=[]
+        for name in sorted(info["free"]):
+            if name in written and name not in gscal:
+                return None  # ScalarWriteback
+            scal_params.append(name)
+        return dict(arrays=arrays,scalars=scal_params)
+    # funnel
+    survivors=[]
+    for r in cand_ranked[:top_a]:
+        lid=r["id"]
+        sp=split_ok(lid)
+        if sp is None:
+            if verbose: print(f"  split FAIL L{lid}")
+            continue
+        est=estimate(loops_by_id[lid],sp["arrays"],prog.defines)
+        u=util_max(est)
+        fits=u<=1.0
+        eff=(r["inten"]/u) if u>0 else 0.0
+        if verbose:
+            print(f"  precompile L{lid}: util {u*100:.1f}% eff {eff:.1f} fits {fits} dsp {est['dsps']} lut {est['luts']}")
+        if fits:
+            survivors.append(dict(id=lid,est=est,eff=eff,inten=r,sp=sp))
+    survivors.sort(key=lambda s:(-s["eff"],s["id"]))
+    survivors=survivors[:top_c]
+    if not survivors:
+        print("NO CANDIDATES"); return None
+    # subtree ids
+    def subtree(lid):
+        out=set([lid]); stk=[lid]
+        while stk:
+            c=stk.pop()
+            for ch in table[c]["children"]:
+                if ch not in out: out.add(ch); stk.append(ch)
+        return out
+    def simulate(pattern):
+        # pattern: list of survivor dicts
+        ids=[s["id"] for s in pattern]
+        for s in pattern:
+            st=subtree(s["id"])
+            for o in ids:
+                if o!=s["id"] and o in st: return None  # overlap
+        comb=dict(luts=0,ffs=0,dsps=0,bram_bits=0)
+        for s in pattern:
+            for f in comb: comb[f]+=s["est"][f]
+        cu=max(comb["luts"]/usable(DEV["luts"]),comb["ffs"]/usable(DEV["ffs"]),
+               comb["dsps"]/usable(DEV["dsps"]),comb["bram_bits"]/usable(DEV["bram_bits"]))
+        if cu>1.0: return None
+        base=cpu_time(total)
+        offops={f:0 for f in FIELDS}
+        fpga=0.0
+        detail=[]
+        for s in pattern:
+            lid=s["id"]
+            lp=interp.slots[lid]
+            for f in FIELDS: offops[f]+=lp["ops"][f]
+            dep=classify(loops_by_id[lid])
+            sched=schedule(loops_by_id[lid],dep,cu,prog.defines)
+            entries=max(lp["entries"],1)
+            inner_trips=max(interp.slots[i]["trips"] for i in subtree(lid))
+            sf=spatial_factor(loops_by_id[lid],prog.defines)
+            slots=max(math.ceil(inner_trips/sf),1)
+            fill=entries*sched["depth"]/sched["fmax"]
+            thr=slots*sched["ii"]/sched["fmax"]
+            bin_=sum((size_of(e)*math.prod(d)) for (n,e,d,dr) in s["sp"]["arrays"] if dr in ("in","inout"))
+            bin_+=4*len(s["sp"]["scalars"])
+            bout=sum((size_of(e)*math.prod(d)) for (n,e,d,dr) in s["sp"]["arrays"] if dr in ("out","inout"))
+            xfer=entries*(DEV["launch"]+dma(bin_)+dma(bout))
+            fpga+=fill+thr+xfer
+            detail.append((lid,dep[0],sched,entries,slots,sf,(fill+thr)*1e6,xfer*1e6))
+        rest={f:max(total[f]-offops[f],0) for f in FIELDS}
+        pat=cpu_time(rest)+fpga
+        return dict(speedup=base/pat,detail=detail,pattern=[s['id'] for s in pattern],
+                    rest_ms=cpu_time(rest)*1e3,fpga_us=fpga*1e6)
+    measurements=[]
+    accelerated=[]
+    for s in survivors[:first_round]:
+        m=simulate([s])
+        if m is None:
+            if verbose: print(f"  measure L{s['id']}: SIM FAIL")
+            continue
+        measurements.append(m)
+        if m["speedup"]>1.0: accelerated.append(s)
+        if verbose:
+            print(f"  round1 L{s['id']}: {m['speedup']:.2f}x rest {m['rest_ms']:.3f}ms fpga {m['fpga_us']:.1f}us {m['detail']}")
+    budget=max_patterns-len(measurements)
+    if len(accelerated)>=2 and budget>0:
+        import itertools
+        combos=[]
+        for r in range(2,len(accelerated)+1):
+            for c in itertools.combinations(accelerated,r):
+                m=simulate(list(c))
+                if m is not None:
+                    sc=sum(x["speedup"] for x in measurements if x["pattern"][0] in [y["id"] for y in c] and len(x["pattern"])==1)
+                    combos.append((sc,m))
+        combos.sort(key=lambda x:-x[0])
+        for sc,m in combos[:budget]:
+            measurements.append(m)
+            if verbose: print(f"  round2 {m['pattern']}: {m['speedup']:.2f}x")
+    best=max(measurements,key=lambda m:m["speedup"])
+    print(f"BEST pattern {best['pattern']} speedup {best['speedup']:.2f}x | "
+          f"measurements {len(measurements)} | baseline {cpu_time(total)*1e3:.3f} ms")
+    return dict(best=best,measurements=measurements,total=total,interp=interp,prog=prog)
+
+if __name__=="__main__":
+    src=open(sys.argv[1]).read()
+    run_model(src)
