@@ -1,17 +1,17 @@
 //! Bring-your-own-code: offload a user-supplied C application.
 //!
 //! The environment-adaptive premise (paper §1) is that developers write
-//! plain code once and the platform adapts it. This example writes a
-//! small Black-Scholes-style option pricer to a temp file, registers it
-//! as a new application, and runs the whole flow — exactly what
+//! plain code once and the platform adapts it. This example builds an
+//! [`OffloadRequest`] for a small Black-Scholes-style option pricer and
+//! runs it through the staged pipeline — exactly what
 //! `repro offload path/to/app.c` does.
 //!
 //! Run with: `cargo run --release --example custom_app`
 
 use fpga_offload::cpu::XEON_BRONZE_3104;
-use fpga_offload::envadapt::{run_flow, FlowOptions, TestCase, TestDb};
+use fpga_offload::envadapt::{OffloadRequest, Pipeline};
 use fpga_offload::hls::ARRIA10_GX;
-use fpga_offload::search::SearchConfig;
+use fpga_offload::search::{FpgaBackend, SearchConfig};
 
 const PRICER_C: &str = r#"
 /* Vectorized option pricer: trig/exp-dense loop over contracts, plus
@@ -49,25 +49,23 @@ int main() {
 fn main() -> anyhow::Result<()> {
     println!("== automatic FPGA offloading: custom application ==\n");
 
-    let mut testdb = TestDb::new();
-    testdb.register(TestCase {
-        app: "pricer".into(),
-        entry: "main".into(),
-        observed_arrays: vec!["price".into()],
-        pjrt_sample: None,
-        description: "user-supplied option pricer".into(),
-    });
-
-    let opts = FlowOptions {
-        config: SearchConfig::default(),
+    let backend = FpgaBackend {
         cpu: &XEON_BRONZE_3104,
         device: &ARRIA10_GX,
-        pattern_db: None,
-        runtime: None,
-        seed: 7,
     };
-    let report = run_flow("pricer", PRICER_C, &testdb, &opts)?;
-    let sol = &report.solution;
+    let pipeline = Pipeline::new(SearchConfig::default(), &backend)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let req = OffloadRequest::builder("pricer")
+        .source(PRICER_C)
+        .entry("main")
+        .seed(7)
+        .build()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let planned =
+        pipeline.solve(req).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let sol = planned.plan.solution().expect("fresh search");
 
     println!("loops: {} total, {} offloadable",
         sol.funnel.total_loops, sol.funnel.offloadable.len());
@@ -76,9 +74,12 @@ fn main() -> anyhow::Result<()> {
             m.round, m.label(), m.speedup(), m.verified);
     }
     println!("\nsolution: {} at {:.2}x vs all-CPU",
-        sol.best_measurement().label(), sol.speedup());
+        planned.plan.label(), planned.plan.speedup());
 
     // The exp/log-dense pricing loop must be the winner.
-    assert!(sol.speedup() > 2.0, "pricer loop should clearly win on FPGA");
+    assert!(
+        planned.plan.speedup() > 2.0,
+        "pricer loop should clearly win on FPGA"
+    );
     Ok(())
 }

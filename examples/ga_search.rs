@@ -4,40 +4,53 @@
 //! algorithm and many measurements — fine when compiles take minutes,
 //! ruinous at FPGA compile times (~3 h). This example runs both
 //! strategies on tdfir and prints the measurement/wall-clock gap the
-//! paper's funnel exists to close.
+//! paper's funnel exists to close. Both share ONE profiling run: the
+//! staged pipeline's artifacts keep program + analysis in hand, so the
+//! GA reuses them instead of re-profiling.
 //!
 //! Run with: `cargo run --release --example ga_search`
 
-use fpga_offload::analysis::analyze;
 use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::envadapt::{OffloadRequest, Pipeline};
 use fpga_offload::hls::ARRIA10_GX;
-use fpga_offload::minic::parse;
-use fpga_offload::search::{ga, search, GaConfig, SearchConfig};
+use fpga_offload::search::{ga, FpgaBackend, GaConfig, SearchConfig};
 use fpga_offload::workloads;
 
 fn main() -> anyhow::Result<()> {
     println!("== GA baseline [32] vs narrowing funnel (tdfir) ==\n");
-    let prog =
-        parse(workloads::TDFIR_C).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let an = analyze(&prog, "main").map_err(|e| anyhow::anyhow!("{e}"))?;
 
-    let funnel = search(
-        "tdfir",
-        &prog,
-        &an,
-        &SearchConfig::default(),
-        &XEON_BRONZE_3104,
-        &ARRIA10_GX,
-    )
-    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let backend = FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let pipeline = Pipeline::new(SearchConfig::default(), &backend)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let req = OffloadRequest::builder("tdfir")
+        .source(workloads::TDFIR_C)
+        .build()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // Stages 1–3 once; the GA reuses the profiled artifacts.
+    let parsed = pipeline.parse(req).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let analyzed =
+        pipeline.analyze(parsed).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let candidates =
+        pipeline.extract(analyzed).map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let ga_res = ga::run(
-        &prog,
-        &an,
+        &candidates.prog,
+        &candidates.analysis,
         &GaConfig::default(),
         &XEON_BRONZE_3104,
         &ARRIA10_GX,
     );
+
+    // Stages 4–5: the funnel's answer from the same artifacts.
+    let measured =
+        pipeline.measure(candidates).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let planned =
+        pipeline.select(measured).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let funnel = planned.plan.solution().expect("fresh search");
 
     println!("funnel : best {:<10} {:>6.2}x  {} measurements  ~{:>6.1} h",
         funnel.best_measurement().label(),

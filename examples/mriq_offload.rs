@@ -1,53 +1,58 @@
 //! MRI-Q offloading (Fig. 4, second row: 7.1x in the paper).
 //!
-//! Same flow as quickstart but for the Parboil MRI-Q application, plus a
-//! side-by-side of the funnel's choice against exhaustively simulating
-//! every single-loop pattern — showing the narrowing found the true
-//! optimum with 4 measurements instead of 16.
+//! Same staged pipeline as quickstart but for the Parboil MRI-Q
+//! application, plus a side-by-side of the funnel's choice against
+//! exhaustively simulating every single-loop pattern — showing the
+//! narrowing found the true optimum with 4 measurements instead of 16.
 //!
 //! Run with: `cargo run --release --example mriq_offload`
 
-use fpga_offload::analysis::analyze;
 use fpga_offload::codegen::split;
 use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::envadapt::{OffloadRequest, Pipeline};
 use fpga_offload::fpga::simulate;
 use fpga_offload::hls::ARRIA10_GX;
-use fpga_offload::minic::parse;
-use fpga_offload::search::{search, SearchConfig};
+use fpga_offload::search::{FpgaBackend, SearchConfig};
 use fpga_offload::workloads;
 
 fn main() -> anyhow::Result<()> {
     println!("== automatic FPGA offloading: MRI-Q ==\n");
-    let prog = parse(workloads::MRIQ_C).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let an = analyze(&prog, "main").map_err(|e| anyhow::anyhow!("{e}"))?;
 
-    // The paper's method.
-    let sol = search(
-        "mriq",
-        &prog,
-        &an,
-        &SearchConfig::default(),
-        &XEON_BRONZE_3104,
-        &ARRIA10_GX,
-    )
-    .map_err(|e| anyhow::anyhow!("{e}"))?;
-    println!("funnel solution: {} at {:.2}x (paper: 7.1x) with {} measurements",
-        sol.best_measurement().label(),
-        sol.speedup(),
-        sol.measurements.len());
+    let backend = FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let pipeline = Pipeline::new(SearchConfig::default(), &backend)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let req = OffloadRequest::builder("mriq")
+        .source(workloads::MRIQ_C)
+        .build()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // Stages 1–3: the funnel survivors, with program + analysis in hand
+    // for the exhaustive comparison below.
+    let parsed = pipeline.parse(req).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let analyzed =
+        pipeline.analyze(parsed).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let candidates =
+        pipeline.extract(analyzed).map_err(|e| anyhow::anyhow!("{e}"))?;
 
     // Exhaustive single-loop sweep (what skipping the narrowing costs:
     // every simulate() here would be a ~3 h compile on real hardware).
-    println!("\nexhaustive single-loop sweep (16 would-be compiles):");
+    println!("exhaustive single-loop sweep (16 would-be compiles):");
     let mut best = ("none".to_string(), 1.0f64);
     let mut compiles = 0;
-    for al in &an.loops {
+    for al in &candidates.analysis.loops {
         if !al.candidate() {
             continue;
         }
-        let Ok(sp) = split(&prog, al) else { continue };
-        let Ok(t) = simulate(&an, &[sp.kernel], &XEON_BRONZE_3104, &ARRIA10_GX)
-        else {
+        let Ok(sp) = split(&candidates.prog, al) else { continue };
+        let Ok(t) = simulate(
+            &candidates.analysis,
+            &[sp.kernel],
+            &XEON_BRONZE_3104,
+            &ARRIA10_GX,
+        ) else {
             continue;
         };
         compiles += 1;
@@ -56,6 +61,20 @@ fn main() -> anyhow::Result<()> {
             best = (al.id().to_string(), t.speedup);
         }
     }
+
+    // Stages 4–5: the paper's method.
+    let measured =
+        pipeline.measure(candidates).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let planned =
+        pipeline.select(measured).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let sol = planned.plan.solution().expect("fresh search");
+    println!(
+        "\nfunnel solution: {} at {:.2}x (paper: 7.1x) with {} measurements",
+        planned.plan.label(),
+        planned.plan.speedup(),
+        sol.measurements.len()
+    );
+
     println!(
         "\nexhaustive best: {} at {:.2}x after {} compiles (~{:.0} h of \
          place-and-route)\nfunnel matched it with {} measurements (~{:.0} h)",
@@ -67,7 +86,7 @@ fn main() -> anyhow::Result<()> {
         sol.automation_s / 3600.0
     );
     assert!(
-        sol.speedup() >= best.1 * 0.99,
+        planned.plan.speedup() >= best.1 * 0.99,
         "funnel must find the exhaustive optimum on MRI-Q"
     );
     Ok(())

@@ -1,37 +1,38 @@
-//! Quickstart: the END-TO-END driver (Fig. 4 headline, tdfir).
+//! Quickstart: the END-TO-END staged pipeline (Fig. 4 headline, tdfir).
 //!
-//! Exercises every layer of the reproduction on a real workload:
-//! 1. parses the bundled HPEC tdfir C source (36 loops),
-//! 2. profiles it under the instrumented interpreter (all-CPU baseline),
-//! 3. runs the paper's funnel (top-A intensity → pre-compile → top-C
-//!    resource efficiency) and the two measurement rounds on the Arria10
-//!    model,
-//! 4. persists the winning pattern to the code-pattern DB, and
-//! 5. executes the REAL tdfir kernels — the Pallas kernel lowered to HLO
-//!    at build time — through the PJRT runtime and checks the numerics
+//! Exercises every layer of the reproduction on a real workload, one
+//! pipeline stage at a time so each Fig.-1 artifact is visible:
+//! 1. `parse` + `analyze` — the bundled HPEC tdfir C source (36 loops),
+//!    profiled under the slot-resolved VM (all-CPU baseline),
+//! 2. `extract` — the paper's funnel (top-A intensity → pre-compile →
+//!    top-C resource efficiency),
+//! 3. `measure` — two measurement rounds on the Arria10 FPGA backend,
+//! 4. `select` — best pattern into the code-pattern DB, and
+//! 5. `deploy` — the REAL tdfir kernels (the Pallas kernel lowered to
+//!    HLO at build time) through the PJRT runtime, numerics checked
 //!    against the in-crate reference (proving L1→L2→L3 compose).
 //!
 //! Run with: `make artifacts && cargo run --release --example quickstart`
 
 use fpga_offload::cpu::XEON_BRONZE_3104;
-use fpga_offload::envadapt::{run_flow, FlowOptions, TestDb};
+use fpga_offload::envadapt::{OffloadRequest, Pipeline, TestDb};
 use fpga_offload::hls::ARRIA10_GX;
 use fpga_offload::runtime::{Artifacts, Runtime};
-use fpga_offload::search::SearchConfig;
+use fpga_offload::search::{FpgaBackend, SearchConfig};
 use fpga_offload::workloads;
 
 fn main() -> anyhow::Result<()> {
     println!("== automatic FPGA offloading: tdfir quickstart ==\n");
 
     // The PJRT runtime is optional: without artifacts we still search,
-    // we just skip the step-6 sample test.
+    // we just skip the step-6 deploy check.
     let cwd = std::env::current_dir()?;
     let artifacts = Artifacts::discover(&cwd).ok();
     let runtime = match &artifacts {
         Some(_) => Some(Runtime::cpu()?),
         None => {
             eprintln!("note: no artifacts/ found — run `make artifacts` to \
-                       enable the PJRT sample test");
+                       enable the PJRT deploy check");
             None
         }
     };
@@ -40,27 +41,45 @@ fn main() -> anyhow::Result<()> {
         _ => None,
     };
 
-    let db_dir = std::env::temp_dir().join("fpga-offload-quickstart-db");
-    let opts = FlowOptions {
-        config: SearchConfig::default(), // paper §5.1.2: A=5 B=1 C=3 D=4
+    // Paper §5.1.2 conditions: A=5 B=1 C=3 D=4, FPGA destination.
+    let backend = FpgaBackend {
         cpu: &XEON_BRONZE_3104,
         device: &ARRIA10_GX,
-        pattern_db: Some(&db_dir),
-        runtime: runtime_pair,
-        seed: 42,
     };
+    // Stable dir (not a self-deleting temp dir): the stored pattern must
+    // survive the run so a second invocation can inspect or reuse it.
+    let db_dir = std::env::temp_dir().join("fpga-offload-quickstart-db");
+    let pipeline = Pipeline::new(SearchConfig::default(), &backend)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .with_pattern_db(&db_dir);
 
     let testdb = TestDb::builtin();
-    let report = run_flow("tdfir", workloads::TDFIR_C, &testdb, &opts)?;
-    let sol = &report.solution;
+    let case = testdb.get("tdfir").expect("tdfir is builtin");
+    let req = OffloadRequest::from_case(case, workloads::TDFIR_C);
 
-    println!("funnel: {} loops → {} offloadable → top-A {} → top-C {}",
-        sol.funnel.total_loops,
-        sol.funnel.offloadable.len(),
-        sol.funnel.top_a.len(),
-        sol.funnel.top_c.len());
+    // Stages 1–5 one by one, artifacts in hand throughout.
+    let parsed = pipeline.parse(req).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let analyzed =
+        pipeline.analyze(parsed).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "analysis: {} loop statements profiled",
+        analyzed.analysis.loops.len()
+    );
+
+    let candidates =
+        pipeline.extract(analyzed).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "funnel: {} loops → {} offloadable → top-A {} → top-C {}",
+        candidates.trace.total_loops,
+        candidates.trace.offloadable.len(),
+        candidates.trace.top_a.len(),
+        candidates.trace.top_c.len()
+    );
+
+    let measured =
+        pipeline.measure(candidates).map_err(|e| anyhow::anyhow!("{e}"))?;
     println!("\nmeasured patterns:");
-    for m in &sol.measurements {
+    for m in &measured.set.measurements {
         println!(
             "  round {}  {:<10} {:>6.2}x  (compile {:.1} h, verified {:?})",
             m.round,
@@ -70,19 +89,35 @@ fn main() -> anyhow::Result<()> {
             m.verified
         );
     }
-    println!("\nsolution: {} at {:.2}x vs all-CPU (paper Fig. 4: 4.0x)",
-        sol.best_measurement().label(), sol.speedup());
-    println!("automation: {:.1} h modeled (paper §5.2: ~half a day)",
-        sol.automation_s / 3600.0);
-    if let Some(p) = &report.stored_at {
+
+    let planned =
+        pipeline.select(measured).map_err(|e| anyhow::anyhow!("{e}"))?;
+    println!(
+        "\nsolution: {} at {:.2}x vs all-CPU (paper Fig. 4: 4.0x)",
+        planned.plan.label(),
+        planned.plan.speedup()
+    );
+    println!(
+        "automation: {:.1} h modeled (paper §5.2: ~half a day)",
+        planned.plan.automation_s() / 3600.0
+    );
+    if let Some(p) = &planned.stored_at {
         println!("pattern DB: {}", p.display());
     }
-    if let Some(sr) = &report.sample_run {
-        println!(
-            "\nPJRT sample test (Pallas→HLO→Rust): exec {:?}, \
+
+    // Step 6: production deploy check on the real (Pallas→HLO) kernels.
+    let deployed = pipeline
+        .deploy(planned, runtime_pair)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    match &deployed.sample_run {
+        Some(sr) => println!(
+            "\nPJRT deploy check (Pallas→HLO→Rust): exec {:?}, \
              max|err| {:.2e} over {} outputs — stack verified",
             sr.exec_time, sr.max_abs_err, sr.checked
-        );
+        ),
+        None => {
+            println!("\nPJRT deploy check skipped (no artifacts/runtime)")
+        }
     }
     Ok(())
 }

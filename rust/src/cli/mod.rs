@@ -3,8 +3,10 @@
 //! ```text
 //! repro offload <app|file.c> [--explain] [--top-a N] [--unroll B]
 //!               [--top-c N] [--max-patterns D] [--machines N]
-//!               [--pattern-db DIR] [--pjrt] [--no-verify]
-//!               [--engine interp|vm]
+//!               [--pattern-db DIR] [--reuse] [--pjrt] [--no-verify]
+//!               [--engine interp|vm] [--backend fpga|cpu]
+//! repro batch [apps...] [--out FILE] [--pattern-db DIR] [--reuse]
+//!             [--backend fpga|cpu] + the offload search flags
 //! repro analyze <app|file.c>       loop table + intensity ranking
 //! repro estimate <app|file.c> [--unroll B]   pre-compile reports (top-A)
 //! repro opencl <app|file.c> --loop N [--unroll B]   emit kernel + host
@@ -12,20 +14,28 @@
 //! repro run-sample <tdfir|mriq>    PJRT sample test only
 //! repro apps                       list bundled applications
 //! ```
+//!
+//! `offload` and `batch` are thin drivers over the staged
+//! [`crate::envadapt::Pipeline`]; `batch` runs every requested app
+//! through one shared automation cycle and writes a
+//! [`crate::envadapt::BatchReport`] JSON.
 
 use crate::analysis::{analyze_with, Analysis};
 use crate::cpu::XEON_BRONZE_3104;
-use crate::envadapt::{FlowOptions, TestDb};
+use crate::envadapt::{Batch, OffloadRequest, Pipeline, TestDb};
 use crate::hls::{render, ARRIA10_GX};
 use crate::minic::{parse, typecheck, EngineKind, Program};
 use crate::runtime::{Artifacts, Runtime};
-use crate::search::{GaConfig, SearchConfig};
+use crate::search::{
+    Backend, CpuBaseline, FpgaBackend, GaConfig, SearchConfig,
+};
 use crate::workloads;
 
 /// Entry point. Returns the process exit code.
 pub fn run(args: &[String]) -> i32 {
     let result = match args.first().map(String::as_str) {
         Some("offload") => cmd_offload(&args[1..]),
+        Some("batch") => cmd_batch(&args[1..]),
         Some("analyze") => cmd_analyze(&args[1..]),
         Some("estimate") => cmd_estimate(&args[1..]),
         Some("opencl") => cmd_opencl(&args[1..]),
@@ -65,17 +75,27 @@ fn print_usage() {
          USAGE: repro <subcommand> [options]\n\
          \n\
          SUBCOMMANDS\n\
-           offload <app|file.c>   full flow: analyze → funnel → measure → pick\n\
+           offload <app|file.c>   full staged pipeline: parse → analyze →\n\
+                                  extract → measure → select → deploy\n\
              --explain            print the funnel trace and reports\n\
              --engine E           execution engine: vm (default) | interp\n\
+             --backend B          destination backend: fpga (default) | cpu\n\
              --top-a N            intensity narrowing (default 5)\n\
              --unroll B           loop expansion factor (default 1)\n\
              --top-c N            resource-efficiency narrowing (default 3)\n\
              --max-patterns D     measurement budget (default 4)\n\
              --machines N         verification build machines (default 1)\n\
              --pattern-db DIR     persist the solution\n\
+             --reuse              reuse a stored pattern when the source\n\
+                                  hash is unchanged (needs --pattern-db)\n\
              --pjrt               run the PJRT sample test (step 6)\n\
              --no-verify          skip functional verification\n\
+           batch [apps...]        one automation cycle over many apps\n\
+                                  (default: all bundled apps) — shares one\n\
+                                  config, runs funnels concurrently\n\
+             --out FILE           batch-report JSON path\n\
+                                  (default batch_report.json)\n\
+             + the offload flags above (except --explain/--pjrt)\n\
            analyze <app|file.c>   loop table with intensity ranking\n\
            estimate <app|file.c>  pre-compile resource reports (top-A)\n\
            opencl <app|file.c> --loop N   emit OpenCL kernel + host text\n\
@@ -126,18 +146,79 @@ fn engine_from_flags(f: &Flags) -> anyhow::Result<EngineKind> {
     }
 }
 
+/// The two bundled destination backends, selected by `--backend`.
+enum BackendChoice {
+    Fpga(FpgaBackend<'static>),
+    Cpu(CpuBaseline<'static>),
+}
+
+impl BackendChoice {
+    fn from_flags(f: &Flags) -> anyhow::Result<BackendChoice> {
+        match f.value("--backend") {
+            None | Some("fpga") => Ok(BackendChoice::Fpga(FpgaBackend {
+                cpu: &XEON_BRONZE_3104,
+                device: &ARRIA10_GX,
+            })),
+            Some("cpu") => Ok(BackendChoice::Cpu(CpuBaseline {
+                cpu: &XEON_BRONZE_3104,
+                device: &ARRIA10_GX,
+            })),
+            Some(v) => Err(anyhow::anyhow!(
+                "bad value for --backend: {v:?} (use fpga|cpu)"
+            )),
+        }
+    }
+
+    fn as_dyn(&self) -> &dyn Backend {
+        match self {
+            BackendChoice::Fpga(b) => b,
+            BackendChoice::Cpu(b) => b,
+        }
+    }
+}
+
 /// Tiny flag parser: positional args + `--key value` + `--switch`.
 struct Flags<'a> {
     args: &'a [String],
 }
 
+/// Value-taking flags, so positional scanning can skip their values.
+const VALUE_FLAGS: &[&str] = &[
+    "--engine",
+    "--backend",
+    "--top-a",
+    "--unroll",
+    "--top-c",
+    "--first-round",
+    "--max-patterns",
+    "--machines",
+    "--pattern-db",
+    "--seed",
+    "--loop",
+    "--out",
+];
+
 impl<'a> Flags<'a> {
     fn positional(&self, n: usize) -> Option<&'a str> {
-        self.args
-            .iter()
-            .filter(|a| !a.starts_with("--"))
-            .nth(n)
-            .map(String::as_str)
+        self.positionals().get(n).copied()
+    }
+
+    /// All positional args, skipping `--flag value` pairs.
+    fn positionals(&self) -> Vec<&'a str> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.args.len() {
+            let a = self.args[i].as_str();
+            if a.starts_with("--") {
+                if VALUE_FLAGS.contains(&a) {
+                    i += 1; // skip the flag's value too
+                }
+            } else {
+                out.push(a);
+            }
+            i += 1;
+        }
+        out
     }
 
     fn has(&self, name: &str) -> bool {
@@ -177,6 +258,32 @@ fn config_from_flags(f: &Flags) -> anyhow::Result<SearchConfig> {
     Ok(cfg)
 }
 
+/// A pipeline request for an app spec, entry/sample from the test-case
+/// DB when the app is registered there.
+fn request_for(
+    testdb: &TestDb,
+    app: &str,
+    src: &str,
+    seed: u64,
+    pjrt: bool,
+) -> OffloadRequest {
+    let mut req = match testdb.get(app) {
+        Some(case) => OffloadRequest::from_case(case, src),
+        None => OffloadRequest {
+            app: app.to_string(),
+            source: src.to_string(),
+            entry: "main".into(),
+            pjrt_sample: None,
+            seed,
+        },
+    };
+    req.seed = seed;
+    if !pjrt {
+        req.pjrt_sample = None;
+    }
+    req
+}
+
 fn cmd_offload(args: &[String]) -> anyhow::Result<()> {
     let f = Flags { args };
     let spec = f
@@ -184,17 +291,11 @@ fn cmd_offload(args: &[String]) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("usage: repro offload <app|file.c>"))?;
     let (app, src) = resolve_source(spec)?;
     let cfg = config_from_flags(&f)?;
+    let choice = BackendChoice::from_flags(&f)?;
 
-    let mut testdb = TestDb::builtin();
-    if testdb.get(&app).is_none() {
-        testdb.register(crate::envadapt::TestCase {
-            app: app.clone(),
-            entry: "main".into(),
-            observed_arrays: vec![],
-            pjrt_sample: None,
-            description: format!("user-supplied application {app}"),
-        });
-    }
+    let seed = f.num("--seed", 42u64)?;
+    let testdb = TestDb::builtin();
+    let req = request_for(&testdb, &app, &src, seed, f.has("--pjrt"));
 
     let (rt, art);
     let runtime_pair = if f.has("--pjrt") {
@@ -206,60 +307,130 @@ fn cmd_offload(args: &[String]) -> anyhow::Result<()> {
         None
     };
 
-    let pattern_db = f.value("--pattern-db").map(std::path::PathBuf::from);
-    let opts = FlowOptions {
-        config: cfg,
-        cpu: &XEON_BRONZE_3104,
-        device: &ARRIA10_GX,
-        pattern_db: pattern_db.as_deref(),
-        runtime: runtime_pair,
-        seed: f.num("--seed", 42u64)?,
-    };
-    let report = crate::envadapt::run_flow(&app, &src, &testdb, &opts)?;
-    let sol = &report.solution;
-
-    if f.has("--explain") {
-        println!("== funnel (Fig. 2) ==");
-        println!(
-            "loops {} → offloadable {} → top-A {} → top-C {}",
-            sol.funnel.total_loops,
-            sol.funnel.offloadable.len(),
-            sol.funnel.top_a.len(),
-            sol.funnel.top_c.len()
-        );
-        for r in &sol.funnel.reports {
-            println!("{}", render(r));
-        }
+    let mut pipeline = Pipeline::new(cfg, choice.as_dyn())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(dir) = f.value("--pattern-db") {
+        pipeline = pipeline
+            .with_pattern_db(dir)
+            .with_cache_reuse(f.has("--reuse"));
     }
 
-    println!("== measurements ==");
-    for m in &sol.measurements {
-        println!(
-            "round {} pattern {:<12} speedup {:>6.2}x  compile {:>4.1} h  verified {}",
-            m.round,
-            m.label(),
-            m.speedup(),
-            m.compile_s / 3600.0,
-            m.verified.map(|v| v.to_string()).unwrap_or("-".into()),
-        );
+    let deployed = pipeline
+        .run(req, runtime_pair)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    if let Some(sol) = deployed.plan.solution() {
+        if f.has("--explain") {
+            println!("== funnel (Fig. 2) ==");
+            println!(
+                "loops {} → offloadable {} → top-A {} → top-C {}",
+                sol.funnel.total_loops,
+                sol.funnel.offloadable.len(),
+                sol.funnel.top_a.len(),
+                sol.funnel.top_c.len()
+            );
+            for r in &sol.funnel.reports {
+                println!("{}", render(r));
+            }
+        }
+        println!("== measurements ==");
+        for m in &sol.measurements {
+            println!(
+                "round {} pattern {:<12} speedup {:>6.2}x  compile {:>4.1} h  verified {}",
+                m.round,
+                m.label(),
+                m.speedup(),
+                m.compile_s / 3600.0,
+                m.verified.map(|v| v.to_string()).unwrap_or("-".into()),
+            );
+        }
+    } else {
+        println!("== pattern reused from DB (source unchanged) ==");
     }
     println!("== solution ==");
     println!(
-        "{}: best pattern {} — {:.2}x vs all-CPU (automation {:.1} h)",
-        app,
-        sol.best_measurement().label(),
-        sol.speedup(),
-        sol.automation_s / 3600.0
+        "{}: best pattern {} — {:.2}x vs all-CPU (backend {}, automation {:.1} h)",
+        deployed.app,
+        deployed.plan.label(),
+        deployed.plan.speedup(),
+        deployed.backend,
+        deployed.plan.automation_s() / 3600.0
     );
-    if let Some(path) = &report.stored_at {
+    if let Some(path) = &deployed.stored_at {
         println!("pattern stored at {}", path.display());
     }
-    if let Some(sr) = &report.sample_run {
+    if let Some(sr) = &deployed.sample_run {
         println!(
             "PJRT sample test [{}]: exec {:?}, max|err| {:.2e} over {} outputs — OK",
             sr.app, sr.exec_time, sr.max_abs_err, sr.checked
         );
     }
+    Ok(())
+}
+
+fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let cfg = config_from_flags(&f)?;
+    let choice = BackendChoice::from_flags(&f)?;
+    let seed = f.num("--seed", 42u64)?;
+
+    let specs: Vec<String> = {
+        let given = f.positionals();
+        if given.is_empty() {
+            workloads::APPS.iter().map(|s| s.to_string()).collect()
+        } else {
+            given.iter().map(|s| s.to_string()).collect()
+        }
+    };
+
+    let testdb = TestDb::builtin();
+    let mut pipeline = Pipeline::new(cfg, choice.as_dyn())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(dir) = f.value("--pattern-db") {
+        pipeline = pipeline
+            .with_pattern_db(dir)
+            .with_cache_reuse(f.has("--reuse"));
+    }
+
+    let mut batch = Batch::new(&pipeline);
+    for spec in &specs {
+        let (app, src) = resolve_source(spec)?;
+        batch.push(request_for(&testdb, &app, &src, seed, false));
+    }
+
+    println!(
+        "batch: {} applications through one automation cycle (backend {})",
+        batch.len(),
+        choice.as_dyn().name()
+    );
+    let report = batch.run();
+
+    for e in &report.entries {
+        match (&e.plan, &e.error) {
+            (Some(plan), _) => println!(
+                "  {:<10} best {:<12} {:>6.2}x  automation {:>5.1} h{}",
+                e.app,
+                plan.label(),
+                plan.speedup(),
+                plan.automation_s() / 3600.0,
+                if plan.is_cached() { "  (cached)" } else { "" }
+            ),
+            (None, Some(err)) => println!("  {:<10} FAILED: {err}", e.app),
+            (None, None) => println!("  {:<10} FAILED", e.app),
+        }
+    }
+    println!(
+        "cycle: {}/{} solved, {} cache hits — automation {:.1} h serial / {:.1} h concurrent",
+        report.solved(),
+        report.entries.len(),
+        report.cache_hits(),
+        report.serial_automation_s / 3600.0,
+        report.concurrent_automation_s / 3600.0
+    );
+
+    let out = f.value("--out").unwrap_or("batch_report.json");
+    report.write_json(std::path::Path::new(out))?;
+    println!("batch report written to {out}");
     Ok(())
 }
 
@@ -402,6 +573,7 @@ fn cmd_run_sample(args: &[String]) -> anyhow::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::tempdir::TempDir;
 
     fn s(v: &[&str]) -> Vec<String> {
         v.iter().map(|x| x.to_string()).collect()
@@ -444,7 +616,45 @@ mod tests {
     }
 
     #[test]
+    fn positionals_skip_flag_values() {
+        let args = s(&["sobel", "--top-a", "3", "mriq", "--explain", "tdfir"]);
+        let f = Flags { args: &args };
+        assert_eq!(f.positionals(), vec!["sobel", "mriq", "tdfir"]);
+    }
+
+    #[test]
     fn opencl_emission_for_sobel() {
         assert_eq!(run(&s(&["opencl", "sobel", "--loop", "4"])), 0);
+    }
+
+    #[test]
+    fn offload_sobel_on_cpu_backend() {
+        assert_eq!(
+            run(&s(&["offload", "sobel", "--backend", "cpu"])),
+            0
+        );
+    }
+
+    #[test]
+    fn offload_rejects_bad_backend() {
+        assert_eq!(
+            run(&s(&["offload", "sobel", "--backend", "tpu"])),
+            1
+        );
+    }
+
+    #[test]
+    fn batch_runs_bundled_apps_and_writes_report() {
+        let dir = TempDir::new("fpga-offload-cli-batch").unwrap();
+        let out = dir.join("report.json");
+        let out_s = out.to_string_lossy().into_owned();
+        assert_eq!(
+            run(&s(&["batch", "sobel", "mriq", "--out", &out_s])),
+            0
+        );
+        let text = std::fs::read_to_string(&out).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get(&["apps"]).unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get(&["solved"]).unwrap().as_f64(), Some(2.0));
     }
 }

@@ -1,0 +1,334 @@
+//! Multi-application batch orchestration: one automation cycle, many
+//! applications.
+//!
+//! The ROADMAP's arXiv:2002.09541 evaluation runs *many* applications
+//! through the environment-adaptive cycle at once — cheap now that the
+//! slot-resolved VM made per-app profiling fast. A [`Batch`] shares one
+//! [`Pipeline`] (one `SearchConfig`, one backend, one measurement budget
+//! of `max_patterns` per app) across N requests, runs their funnels
+//! concurrently on scoped threads, and aggregates the outcomes into a
+//! [`BatchReport`] with per-app and cycle-level accounting.
+//!
+//! Concurrency does not change results: each app's search is
+//! deterministic under its seed, so a batch entry is identical to
+//! running that app through [`Pipeline::solve`] alone.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+use super::pipeline::{OffloadRequest, Pipeline, Plan, Planned};
+
+/// Outcome of one application in a batch.
+#[derive(Debug)]
+pub struct BatchEntry {
+    pub app: String,
+    /// The selected plan, when the app solved.
+    pub plan: Option<Plan>,
+    pub stored_at: Option<PathBuf>,
+    /// Stage-tagged error text, when the app failed.
+    pub error: Option<String>,
+}
+
+impl BatchEntry {
+    pub fn ok(&self) -> bool {
+        self.plan.is_some()
+    }
+
+    fn cached(&self) -> bool {
+        self.plan.as_ref().is_some_and(Plan::is_cached)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("app", Json::Str(self.app.clone())),
+            ("ok", Json::Bool(self.ok())),
+            ("cached", Json::Bool(self.cached())),
+        ];
+        match &self.plan {
+            Some(plan) => {
+                fields.push((
+                    "best_pattern",
+                    Json::Arr(
+                        plan.best_loops()
+                            .iter()
+                            .map(|&l| Json::Num(l as f64))
+                            .collect(),
+                    ),
+                ));
+                fields.push(("speedup", Json::Num(plan.speedup())));
+                fields.push((
+                    "automation_hours",
+                    Json::Num(plan.automation_s() / 3600.0),
+                ));
+            }
+            None => {
+                fields.push(("best_pattern", Json::Null));
+                fields.push(("speedup", Json::Null));
+                fields.push(("automation_hours", Json::Null));
+            }
+        }
+        fields.push((
+            "stored_at",
+            match &self.stored_at {
+                Some(p) => Json::Str(p.display().to_string()),
+                None => Json::Null,
+            },
+        ));
+        fields.push((
+            "error",
+            match &self.error {
+                Some(e) => Json::Str(e.clone()),
+                None => Json::Null,
+            },
+        ));
+        Json::obj(fields)
+    }
+}
+
+/// Aggregate report of one batch automation cycle.
+#[derive(Debug)]
+pub struct BatchReport {
+    pub entries: Vec<BatchEntry>,
+    /// Backend that ran the cycle ("fpga", "cpu", ...).
+    pub backend: &'static str,
+    /// Measurement budget per app (`SearchConfig::max_patterns`).
+    pub budget_per_app: usize,
+    /// Modeled automation wall clock if the apps ran one after another
+    /// on the shared verification environment, seconds.
+    pub serial_automation_s: f64,
+    /// Modeled automation wall clock with the apps' funnels running
+    /// concurrently (the batch's threads): the slowest app bounds the
+    /// cycle, seconds.
+    pub concurrent_automation_s: f64,
+}
+
+impl BatchReport {
+    fn new(
+        backend: &'static str,
+        budget_per_app: usize,
+        entries: Vec<BatchEntry>,
+    ) -> Self {
+        let times: Vec<f64> = entries
+            .iter()
+            .filter_map(|e| e.plan.as_ref().map(Plan::automation_s))
+            .collect();
+        BatchReport {
+            backend,
+            budget_per_app,
+            serial_automation_s: times.iter().sum(),
+            concurrent_automation_s: times.iter().fold(0.0, |a, &b| a.max(b)),
+            entries,
+        }
+    }
+
+    pub fn solved(&self) -> usize {
+        self.entries.iter().filter(|e| e.ok()).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.entries.len() - self.solved()
+    }
+
+    pub fn cache_hits(&self) -> usize {
+        self.entries.iter().filter(|e| e.cached()).count()
+    }
+
+    /// Serialize for `repro batch --out` and downstream tooling.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("backend", Json::Str(self.backend.to_string())),
+            ("apps", Json::Num(self.entries.len() as f64)),
+            ("solved", Json::Num(self.solved() as f64)),
+            ("failed", Json::Num(self.failed() as f64)),
+            ("cache_hits", Json::Num(self.cache_hits() as f64)),
+            (
+                "budget_per_app",
+                Json::Num(self.budget_per_app as f64),
+            ),
+            (
+                "serial_automation_hours",
+                Json::Num(self.serial_automation_s / 3600.0),
+            ),
+            (
+                "concurrent_automation_hours",
+                Json::Num(self.concurrent_automation_s / 3600.0),
+            ),
+            (
+                "results",
+                Json::Arr(
+                    self.entries.iter().map(BatchEntry::to_json).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the JSON report to a file.
+    pub fn write_json(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty()).map_err(|e| {
+            anyhow::anyhow!("writing batch report {path:?}: {e}")
+        })
+    }
+}
+
+/// N applications through one shared pipeline (see module docs).
+pub struct Batch<'a> {
+    pipeline: &'a Pipeline<'a>,
+    requests: Vec<OffloadRequest>,
+}
+
+impl<'a> Batch<'a> {
+    pub fn new(pipeline: &'a Pipeline<'a>) -> Self {
+        Batch {
+            pipeline,
+            requests: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, req: OffloadRequest) {
+        self.requests.push(req);
+    }
+
+    /// Builder-style [`push`](Self::push).
+    pub fn with(mut self, req: OffloadRequest) -> Self {
+        self.push(req);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Run every request through stages 1–5, concurrently. One failing
+    /// app does not abort the cycle — its entry carries the error.
+    pub fn run(&self) -> BatchReport {
+        let results: Vec<_> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .requests
+                .iter()
+                .map(|req| {
+                    let pipe = self.pipeline;
+                    let req = req.clone();
+                    scope.spawn(move || pipe.solve(req))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("batch worker panicked"))
+                .collect()
+        });
+
+        let entries = self
+            .requests
+            .iter()
+            .zip(results)
+            .map(|(req, res)| match res {
+                Ok(Planned {
+                    plan, stored_at, ..
+                }) => BatchEntry {
+                    app: req.app.clone(),
+                    plan: Some(plan),
+                    stored_at,
+                    error: None,
+                },
+                Err(e) => BatchEntry {
+                    app: req.app.clone(),
+                    plan: None,
+                    stored_at: None,
+                    error: Some(e.to_string()),
+                },
+            })
+            .collect();
+
+        BatchReport::new(
+            self.pipeline.backend().name(),
+            self.pipeline.config().max_patterns,
+            entries,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::XEON_BRONZE_3104;
+    use crate::hls::ARRIA10_GX;
+    use crate::search::{FpgaBackend, SearchConfig};
+
+    const GOOD: &str = "
+#define N 1024
+float a[N]; float out[N];
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.001 - 0.5; }
+    for (int i = 0; i < N; i++) { out[i] = sin(a[i]) * cos(a[i]); }
+    return 0;
+}";
+
+    fn backend() -> FpgaBackend<'static> {
+        FpgaBackend {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        }
+    }
+
+    fn req(app: &str, source: &str) -> OffloadRequest {
+        OffloadRequest::builder(app)
+            .source(source)
+            .seed(7)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn batch_isolates_per_app_failures() {
+        let b = backend();
+        let pipe = Pipeline::new(SearchConfig::default(), &b).unwrap();
+        let batch = Batch::new(&pipe)
+            .with(req("good", GOOD))
+            .with(req("noloop", "int main() { return 42; }"));
+        assert_eq!(batch.len(), 2);
+        assert!(!batch.is_empty());
+        let report = batch.run();
+        assert_eq!(report.solved(), 1);
+        assert_eq!(report.failed(), 1);
+        let bad = &report.entries[1];
+        assert_eq!(bad.app, "noloop");
+        assert!(bad.error.as_ref().unwrap().contains("funnel"));
+    }
+
+    #[test]
+    fn batch_matches_individual_runs() {
+        let b = backend();
+        let pipe = Pipeline::new(SearchConfig::default(), &b).unwrap();
+        let solo = pipe.solve(req("good", GOOD)).unwrap();
+        let report = Batch::new(&pipe).with(req("good", GOOD)).run();
+        let entry = &report.entries[0];
+        let plan = entry.plan.as_ref().unwrap();
+        assert_eq!(plan.best_loops(), solo.plan.best_loops());
+        assert!((plan.speedup() - solo.plan.speedup()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let b = backend();
+        let pipe = Pipeline::new(SearchConfig::default(), &b).unwrap();
+        let report = Batch::new(&pipe).with(req("good", GOOD)).run();
+        let j = report.to_json();
+        assert_eq!(j.get(&["apps"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get(&["solved"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get(&["backend"]).unwrap().as_str(), Some("fpga"));
+        let results = j.get(&["results"]).unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].get(&["app"]).unwrap().as_str(),
+            Some("good")
+        );
+        // Round-trips through the parser.
+        let text = j.pretty();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+}

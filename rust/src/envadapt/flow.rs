@@ -1,31 +1,28 @@
-//! The environment-adaptive-software flow (paper Fig. 1).
+//! The one-call flow (paper Fig. 1) — now a thin shim over the staged
+//! [`Pipeline`].
 //!
-//! Steps, as the paper numbers them:
-//! 1. **Code analysis** — parse + typecheck + loop extraction + profiling.
-//! 2. **Extraction of offloadable areas** — candidate filtering and the
-//!    intensity / resource-efficiency funnel.
-//! 3. **Conversion** — OpenCL-style kernel/host generation (inside the
-//!    funnel) and pattern generation.
-//! 4. **Verification-environment measurement** — simulate + functionally
-//!    verify each pattern, two rounds.
-//! 5. **Solution selection + DB store** — best pattern into the
-//!    code-pattern DB.
-//! 6. **Production deployment check** — the PJRT sample test: execute the
-//!    application's real kernels (Pallas→HLO artifacts) and validate
-//!    numerics, proving the deployable stack end to end.
+//! Historically this module *was* the API: `run_flow` ran all six steps
+//! behind one opaque call. The staged pipeline in [`super::pipeline`]
+//! replaced it — each Fig.-1 step is a typed stage there (step 1
+//! [`Pipeline::parse`] + [`Pipeline::analyze`], steps 2–3
+//! [`Pipeline::extract`], step 4 [`Pipeline::measure`], step 5
+//! [`Pipeline::select`], step 6 [`Pipeline::deploy`]) — and `run_flow`
+//! remains only so existing callers and tests keep working. New code
+//! should build a [`Pipeline`] (and a [`super::batch::Batch`] for many
+//! applications) directly.
 
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::analysis::{analyze, analyze_with, Analysis};
+use crate::analysis::{analyze, Analysis};
 use crate::cpu::CpuModel;
 use crate::hls::Device;
 use crate::minic::{parse, typecheck, Program};
-use crate::runtime::{self, Artifacts, Runtime, SampleRun};
-use crate::search::{search, OffloadSolution, SearchConfig};
+use crate::runtime::{Artifacts, Runtime, SampleRun};
+use crate::search::{FpgaBackend, OffloadSolution, SearchConfig};
 
-use super::patterndb::PatternDb;
+use super::pipeline::{OffloadRequest, Pipeline, Plan};
 use super::testdb::{TestCase, TestDb};
 
 /// Everything the flow produced for one application.
@@ -62,6 +59,14 @@ pub fn analyze_source(source: &str, entry: &str) -> Result<(Program, Analysis)> 
 }
 
 /// Run the full flow for one application.
+///
+/// Deprecated shim: builds a [`Pipeline`] on an [`FpgaBackend`] and runs
+/// the six stages exactly as the staged API would (cache reuse off, so
+/// behavior matches the original always-search flow).
+#[deprecated(
+    since = "0.2.0",
+    note = "use envadapt::Pipeline (stages) or envadapt::Batch (many apps)"
+)]
 pub fn run_flow(
     app: &str,
     source: &str,
@@ -72,51 +77,44 @@ pub fn run_flow(
         .get(app)
         .with_context(|| format!("no test case registered for {app:?}"))?;
 
-    // Steps 1–2: analysis (profiling runs on the configured engine).
-    let prog = parse(source).map_err(|e| anyhow::anyhow!("{e}"))?;
-    typecheck::check_ok(&prog).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let analysis = analyze_with(&prog, &case.entry, opts.config.engine)
+    let backend = FpgaBackend {
+        cpu: opts.cpu,
+        device: opts.device,
+    };
+    let mut pipeline = Pipeline::new(opts.config.clone(), &backend)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(dir) = opts.pattern_db {
+        pipeline = pipeline.with_pattern_db(dir);
+    }
+
+    let mut req = OffloadRequest::from_case(case, source);
+    req.seed = opts.seed;
+
+    let deployed = pipeline
+        .run(req, opts.runtime)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
 
-    // Steps 3–5: funnel, patterns, measurement, selection.
-    let solution = search(
-        app,
-        &prog,
-        &analysis,
-        &opts.config,
-        opts.cpu,
-        opts.device,
-    )
-    .map_err(|e| anyhow::anyhow!("{e}"))?;
-
-    // Step 5: persist to the code-pattern DB.
-    let stored_at = match opts.pattern_db {
-        Some(dir) => Some(PatternDb::open(dir)?.store(&solution)?),
-        None => None,
+    let solution = match deployed.plan {
+        Plan::Fresh(sol) => sol,
+        Plan::Cached(_) => {
+            anyhow::bail!("unexpected cached plan in run_flow")
+        }
     };
-
-    // Step 6: PJRT sample test — run the real (Pallas→HLO) kernels.
-    let sample_run = match (&case.pjrt_sample, opts.runtime) {
-        (Some(sample), Some((rt, art))) => Some(
-            runtime::run_app(rt, art, sample, opts.seed)
-                .context("PJRT sample test failed")?,
-        ),
-        _ => None,
-    };
-
     Ok(FlowReport {
-        app: app.to_string(),
+        app: deployed.app,
         solution,
-        stored_at,
-        sample_run,
+        stored_at: deployed.stored_at,
+        sample_run: deployed.sample_run,
     })
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::cpu::XEON_BRONZE_3104;
     use crate::hls::ARRIA10_GX;
+    use crate::util::tempdir::TempDir;
 
     const SRC: &str = "
 #define N 1024
@@ -154,8 +152,7 @@ int main() {
 
     #[test]
     fn flow_persists_to_pattern_db() {
-        let dir = std::env::temp_dir().join("fpga_offload_flow_test");
-        std::fs::remove_dir_all(&dir).ok();
+        let dir = TempDir::new("fpga-offload-flow").unwrap();
         let mut testdb = TestDb::new();
         testdb.register(TestCase {
             app: "mini".into(),
@@ -168,15 +165,20 @@ int main() {
             config: SearchConfig::default(),
             cpu: &XEON_BRONZE_3104,
             device: &ARRIA10_GX,
-            pattern_db: Some(&dir),
+            pattern_db: Some(dir.path()),
             runtime: None,
             seed: 1,
         };
         let report = run_flow("mini", SRC, &testdb, &opts).unwrap();
         assert!(report.stored_at.as_ref().unwrap().exists());
-        let db = PatternDb::open(&dir).unwrap();
+        let db = super::super::patterndb::PatternDb::open(dir.path()).unwrap();
         assert!(db.load("mini").unwrap().is_some());
-        std::fs::remove_dir_all(&dir).ok();
+        // The shim stores hash-carrying records like the pipeline does.
+        let rec = db.load_record("mini").unwrap().unwrap();
+        assert_eq!(
+            rec.source_hash,
+            Some(super::super::pipeline::source_fingerprint(SRC))
+        );
     }
 
     #[test]

@@ -1,16 +1,35 @@
-//! Environment-adaptive software (paper Fig. 1): the flow and its DBs.
+//! Environment-adaptive software (paper Fig. 1): the staged offload
+//! pipeline, batch orchestration, and the flow's DBs.
 //!
-//! * [`flow`] — steps 1–6 end to end for one application.
+//! * [`pipeline`] — the typed, staged API: `OffloadRequest` →
+//!   `Parsed → Analyzed → Candidates → Measured → Planned → Deployed`,
+//!   one stage per Fig.-1 step, measurement routed through a
+//!   [`crate::search::Backend`].
+//! * [`batch`] — N applications through one shared pipeline per
+//!   automation cycle, funnels running concurrently.
+//! * [`flow`] — the legacy one-call `run_flow`, now a shim over the
+//!   pipeline.
 //! * [`testdb`] — test-case DB (sample tests per app).
-//! * [`patterndb`] — code-pattern DB (persisted solutions).
+//! * [`patterndb`] — code-pattern DB (persisted solutions, source-hash
+//!   stamped for reuse).
 //! * [`facilitydb`] — facility-resource DB (Fig. 3 machines).
 
+pub mod batch;
 pub mod facilitydb;
 pub mod flow;
 pub mod patterndb;
+pub mod pipeline;
 pub mod testdb;
 
+pub use batch::{Batch, BatchEntry, BatchReport};
 pub use facilitydb::{Facility, FacilityDb, Role};
-pub use flow::{analyze_source, run_flow, FlowOptions, FlowReport};
-pub use patterndb::PatternDb;
+pub use flow::{analyze_source, FlowOptions, FlowReport};
+#[allow(deprecated)]
+pub use flow::run_flow;
+pub use patterndb::{PatternDb, StoredPattern};
+pub use pipeline::{
+    source_fingerprint, Analyzed, Candidates, Deployed, Measured,
+    OffloadRequest, OffloadRequestBuilder, Parsed, Pipeline, PipelineError,
+    Plan, Planned,
+};
 pub use testdb::{TestCase, TestDb};

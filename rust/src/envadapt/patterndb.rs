@@ -2,7 +2,10 @@
 //!
 //! Once the verification environment selects a pattern, the solution is
 //! stored so production deployment (and later re-adaptation) can reuse it
-//! without re-searching. File-backed JSON, one file per app.
+//! without re-searching. File-backed JSON, one file per app. Each record
+//! carries the FNV-1a fingerprint of the source it was searched for, so
+//! the pipeline's plan stage can prove "source unchanged" before reusing
+//! a stored pattern instead of re-running the funnel.
 
 use std::path::{Path, PathBuf};
 
@@ -10,6 +13,25 @@ use anyhow::{Context, Result};
 
 use crate::search::OffloadSolution;
 use crate::util::json::Json;
+
+/// Summary of a stored pattern record — enough to reuse the solution
+/// without re-measuring (the full measurement JSON stays on disk).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredPattern {
+    pub app: String,
+    /// Source fingerprint at store time (None for pre-hash records).
+    pub source_hash: Option<u64>,
+    /// Backend that measured the solution ("fpga", "cpu"; None for
+    /// pre-hash records). Reuse must not cross backends: a 4x FPGA plan
+    /// is not a CPU-baseline plan.
+    pub backend: Option<String>,
+    /// Entry function the solution was profiled under.
+    pub entry: Option<String>,
+    /// Offloaded loop ids of the selected pattern.
+    pub best_pattern: Vec<u32>,
+    pub speedup: f64,
+    pub automation_hours: f64,
+}
 
 /// File-backed pattern store.
 #[derive(Debug, Clone)]
@@ -27,21 +49,54 @@ impl PatternDb {
         })
     }
 
-    fn path_for(&self, app: &str) -> PathBuf {
+    /// Where an app's record lives (whether or not it exists yet).
+    pub fn path_of(&self, app: &str) -> PathBuf {
         self.dir.join(format!("{app}.pattern.json"))
     }
 
     /// Persist a solution (overwrites any previous one for the app).
     pub fn store(&self, sol: &OffloadSolution) -> Result<PathBuf> {
-        let path = self.path_for(&sol.app);
-        std::fs::write(&path, sol.to_json().pretty())
+        self.write_record(sol, None)
+    }
+
+    /// Persist a solution together with its reuse key (source
+    /// fingerprint + backend + entry), enabling cache reuse on unchanged
+    /// sources measured for the same destination.
+    pub fn store_hashed(
+        &self,
+        sol: &OffloadSolution,
+        source_hash: u64,
+        backend: &str,
+        entry: &str,
+    ) -> Result<PathBuf> {
+        self.write_record(sol, Some((source_hash, backend, entry)))
+    }
+
+    fn write_record(
+        &self,
+        sol: &OffloadSolution,
+        key: Option<(u64, &str, &str)>,
+    ) -> Result<PathBuf> {
+        let path = self.path_of(&sol.app);
+        let mut j = sol.to_json();
+        if let (Json::Obj(map), Some((hash, backend, entry))) = (&mut j, key)
+        {
+            // 64-bit hashes don't survive JSON's f64 numbers; store hex.
+            map.insert(
+                "source_hash".to_string(),
+                Json::Str(format!("{hash:016x}")),
+            );
+            map.insert("backend".to_string(), Json::Str(backend.into()));
+            map.insert("entry".to_string(), Json::Str(entry.into()));
+        }
+        std::fs::write(&path, j.pretty())
             .with_context(|| format!("writing {path:?}"))?;
         Ok(path)
     }
 
-    /// Load the stored solution summary for an app, if present.
+    /// Load the stored solution JSON for an app, if present.
     pub fn load(&self, app: &str) -> Result<Option<Json>> {
-        let path = self.path_for(app);
+        let path = self.path_of(app);
         if !path.exists() {
             return Ok(None);
         }
@@ -50,6 +105,50 @@ impl PatternDb {
         Ok(Some(
             Json::parse(&text).with_context(|| format!("parsing {path:?}"))?,
         ))
+    }
+
+    /// Load the stored record summary for an app, if present.
+    pub fn load_record(&self, app: &str) -> Result<Option<StoredPattern>> {
+        let Some(j) = self.load(app)? else {
+            return Ok(None);
+        };
+        let record = StoredPattern {
+            app: j
+                .get(&["app"])
+                .and_then(Json::as_str)
+                .unwrap_or(app)
+                .to_string(),
+            source_hash: j
+                .get(&["source_hash"])
+                .and_then(Json::as_str)
+                .and_then(|s| u64::from_str_radix(s, 16).ok()),
+            backend: j
+                .get(&["backend"])
+                .and_then(Json::as_str)
+                .map(String::from),
+            entry: j
+                .get(&["entry"])
+                .and_then(Json::as_str)
+                .map(String::from),
+            best_pattern: j
+                .get(&["best_pattern"])
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|v| v.as_f64().map(|n| n as u32))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            speedup: j
+                .get(&["speedup"])
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            automation_hours: j
+                .get(&["automation_hours"])
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+        };
+        Ok(Some(record))
     }
 
     /// Apps with stored patterns.
@@ -70,6 +169,7 @@ impl PatternDb {
 mod tests {
     use super::*;
     use crate::search::{FunnelTrace, PatternMeasurement};
+    use crate::util::tempdir::TempDir;
 
     fn dummy_solution(app: &str) -> OffloadSolution {
         OffloadSolution {
@@ -102,9 +202,8 @@ mod tests {
 
     #[test]
     fn store_and_load_roundtrip() {
-        let dir = std::env::temp_dir().join("fpga_offload_pdb_test");
-        std::fs::remove_dir_all(&dir).ok();
-        let db = PatternDb::open(&dir).unwrap();
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
         db.store(&dummy_solution("demo")).unwrap();
         let loaded = db.load("demo").unwrap().unwrap();
         assert_eq!(
@@ -112,15 +211,42 @@ mod tests {
             Some(4.0)
         );
         assert_eq!(db.list().unwrap(), vec!["demo".to_string()]);
-        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn missing_app_is_none() {
-        let dir = std::env::temp_dir().join("fpga_offload_pdb_test2");
-        std::fs::remove_dir_all(&dir).ok();
-        let db = PatternDb::open(&dir).unwrap();
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
         assert!(db.load("nope").unwrap().is_none());
-        std::fs::remove_dir_all(&dir).ok();
+        assert!(db.load_record("nope").unwrap().is_none());
+    }
+
+    #[test]
+    fn hashed_record_roundtrips_the_reuse_key() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        // A hash beyond f64's 2^53 integer range must survive exactly.
+        let hash = 0xdead_beef_cafe_f00d_u64;
+        db.store_hashed(&dummy_solution("demo"), hash, "fpga", "main")
+            .unwrap();
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert_eq!(rec.source_hash, Some(hash));
+        assert_eq!(rec.backend.as_deref(), Some("fpga"));
+        assert_eq!(rec.entry.as_deref(), Some("main"));
+        assert_eq!(rec.app, "demo");
+        assert_eq!(rec.best_pattern, vec![2]);
+        assert_eq!(rec.speedup, 4.0);
+        assert!((rec.automation_hours - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unhashed_record_has_no_reuse_key() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        db.store(&dummy_solution("demo")).unwrap();
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert_eq!(rec.source_hash, None);
+        assert_eq!(rec.backend, None);
+        assert_eq!(rec.entry, None);
     }
 }

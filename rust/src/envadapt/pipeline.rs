@@ -1,0 +1,709 @@
+//! The staged offload pipeline: the paper's Fig.-1 flow as a typed API.
+//!
+//! [`super::flow::run_flow`] ran all six steps behind one opaque call.
+//! This module exposes each step as a stage that consumes the previous
+//! stage's artifact, so callers can stop anywhere, inspect everything,
+//! and batch many applications through one automation cycle:
+//!
+//! | stage method         | artifact      | paper Fig. 1 step            |
+//! |----------------------|---------------|------------------------------|
+//! | [`Pipeline::parse`]  | [`Parsed`]    | 1 (code analysis, front)     |
+//! | [`Pipeline::analyze`]| [`Analyzed`]  | 1 (profiling, back)          |
+//! | [`Pipeline::extract`]| [`Candidates`]| 2–3 (extraction + conversion)|
+//! | [`Pipeline::measure`]| [`Measured`]  | 4 (verification measurement) |
+//! | [`Pipeline::select`] | [`Planned`]   | 5 (solution + DB store)      |
+//! | [`Pipeline::deploy`] | [`Deployed`]  | 6 (production deploy check)  |
+//!
+//! Steps 4 and 6 route through a [`Backend`]
+//! ([`crate::search::FpgaBackend`] is the paper's destination,
+//! [`crate::search::CpuBaseline`] the control; a GPU backend is the
+//! planned third — see ROADMAP), so the same staged flow serves a
+//! mixed-destination environment.
+//!
+//! The artifact types make stage order a *compile-time* property — you
+//! cannot measure what was never analyzed:
+//!
+//! ```compile_fail,E0308
+//! use fpga_offload::cpu::XEON_BRONZE_3104;
+//! use fpga_offload::envadapt::{OffloadRequest, Pipeline};
+//! use fpga_offload::hls::ARRIA10_GX;
+//! use fpga_offload::search::{FpgaBackend, SearchConfig};
+//!
+//! let backend = FpgaBackend { cpu: &XEON_BRONZE_3104, device: &ARRIA10_GX };
+//! let pipe = Pipeline::new(SearchConfig::default(), &backend).unwrap();
+//! let req = OffloadRequest::builder("app")
+//!     .source("int main() { return 0; }")
+//!     .build()
+//!     .unwrap();
+//! let parsed = pipe.parse(req).unwrap();
+//! let analyzed = pipe.analyze(parsed).unwrap();
+//! // `measure` wants `Candidates`, not `Analyzed`: does not compile.
+//! let _ = pipe.measure(analyzed);
+//! ```
+
+use std::path::PathBuf;
+
+use crate::analysis::{analyze_with, Analysis};
+use crate::minic::{parse as parse_minic, typecheck, Program};
+use crate::runtime::{Artifacts, Runtime, SampleRun};
+use crate::search::backend::Backend;
+use crate::search::{
+    funnel, measure, Candidate, FunnelTrace, MeasuredSet, OffloadSolution,
+    SearchConfig, SearchError,
+};
+
+use super::patterndb::{PatternDb, StoredPattern};
+use super::testdb::TestCase;
+
+/// FNV-1a fingerprint of an application's source text. Stored with each
+/// pattern-DB record so [`Pipeline::solve`] can prove the source is
+/// unchanged before reusing a stored solution.
+pub fn source_fingerprint(source: &str) -> u64 {
+    use std::hash::Hasher;
+    let mut h = crate::util::fnv::FnvHasher::default();
+    h.write(source.as_bytes());
+    h.finish()
+}
+
+/// Pipeline failure, tagged by the stage that produced it.
+#[derive(Debug)]
+pub enum PipelineError {
+    /// The request builder was given missing or invalid fields.
+    InvalidRequest(String),
+    /// The search configuration violates a funnel invariant.
+    InvalidConfig(String),
+    /// Parse or semantic failure in the application source.
+    Parse(String),
+    /// Profiling analysis failure.
+    Analysis(String),
+    /// Funnel, measurement or selection failure.
+    Search(SearchError),
+    /// Code-pattern DB I/O failure.
+    Db(String),
+    /// Step-6 deployment-check failure.
+    Deploy(String),
+}
+
+impl std::fmt::Display for PipelineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PipelineError::InvalidRequest(m) => {
+                write!(f, "invalid offload request: {m}")
+            }
+            PipelineError::InvalidConfig(m) => {
+                write!(f, "invalid search config: {m}")
+            }
+            PipelineError::Parse(m) => write!(f, "{m}"),
+            PipelineError::Analysis(m) => write!(f, "analysis: {m}"),
+            PipelineError::Search(e) => write!(f, "{e}"),
+            PipelineError::Db(m) => write!(f, "pattern db: {m}"),
+            PipelineError::Deploy(m) => write!(f, "deploy check: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PipelineError {}
+
+impl From<SearchError> for PipelineError {
+    fn from(e: SearchError) -> Self {
+        PipelineError::Search(e)
+    }
+}
+
+/// One application's offload request: what to offload and how to test it.
+#[derive(Debug, Clone)]
+pub struct OffloadRequest {
+    pub app: String,
+    /// MiniC (C-subset) source text.
+    pub source: String,
+    /// Entry function for profiling and verification runs.
+    pub entry: String,
+    /// PJRT sample-test id for the step-6 deploy check (None = CPU-only
+    /// verification, step 6 is skipped).
+    pub pjrt_sample: Option<String>,
+    pub seed: u64,
+}
+
+impl OffloadRequest {
+    /// Start a validated builder.
+    pub fn builder(app: impl Into<String>) -> OffloadRequestBuilder {
+        OffloadRequestBuilder {
+            app: app.into(),
+            source: None,
+            entry: "main".to_string(),
+            pjrt_sample: None,
+            seed: 42,
+        }
+    }
+
+    /// A request for a registered test case (the test-case DB knows the
+    /// entry point and the sample test; the caller supplies the source).
+    pub fn from_case(case: &TestCase, source: impl Into<String>) -> Self {
+        OffloadRequest {
+            app: case.app.clone(),
+            source: source.into(),
+            entry: case.entry.clone(),
+            pjrt_sample: case.pjrt_sample.clone(),
+            seed: 42,
+        }
+    }
+}
+
+/// Builder for [`OffloadRequest`]; [`build`](Self::build) validates.
+#[derive(Debug, Clone)]
+pub struct OffloadRequestBuilder {
+    app: String,
+    source: Option<String>,
+    entry: String,
+    pjrt_sample: Option<String>,
+    seed: u64,
+}
+
+impl OffloadRequestBuilder {
+    pub fn source(mut self, source: impl Into<String>) -> Self {
+        self.source = Some(source.into());
+        self
+    }
+
+    pub fn entry(mut self, entry: impl Into<String>) -> Self {
+        self.entry = entry.into();
+        self
+    }
+
+    pub fn pjrt_sample(mut self, sample: impl Into<String>) -> Self {
+        self.pjrt_sample = Some(sample.into());
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn build(self) -> Result<OffloadRequest, PipelineError> {
+        if self.app.trim().is_empty() {
+            return Err(PipelineError::InvalidRequest(
+                "application name must not be empty".into(),
+            ));
+        }
+        let source = match self.source {
+            Some(s) if !s.trim().is_empty() => s,
+            Some(_) => {
+                return Err(PipelineError::InvalidRequest(
+                    "source must not be empty".into(),
+                ))
+            }
+            None => {
+                return Err(PipelineError::InvalidRequest(
+                    "source is required (OffloadRequestBuilder::source)"
+                        .into(),
+                ))
+            }
+        };
+        if self.entry.trim().is_empty() {
+            return Err(PipelineError::InvalidRequest(
+                "entry function must not be empty".into(),
+            ));
+        }
+        Ok(OffloadRequest {
+            app: self.app,
+            source,
+            entry: self.entry,
+            pjrt_sample: self.pjrt_sample,
+            seed: self.seed,
+        })
+    }
+}
+
+/// Step-1 (front) artifact: parsed + semantically-checked program.
+pub struct Parsed {
+    pub req: OffloadRequest,
+    pub prog: Program,
+    /// [`source_fingerprint`] of the request source.
+    pub source_hash: u64,
+}
+
+/// Step-1 (back) artifact: the profiled loop analysis.
+pub struct Analyzed {
+    pub req: OffloadRequest,
+    pub prog: Program,
+    pub source_hash: u64,
+    pub analysis: Analysis,
+}
+
+/// Step-2/3 artifact: funnel survivors with generated kernels and
+/// pre-compile reports.
+pub struct Candidates {
+    pub req: OffloadRequest,
+    pub prog: Program,
+    pub source_hash: u64,
+    pub analysis: Analysis,
+    pub cands: Vec<Candidate>,
+    pub trace: FunnelTrace,
+}
+
+/// Step-4 artifact: measured patterns plus compile-job accounting.
+pub struct Measured {
+    pub req: OffloadRequest,
+    pub source_hash: u64,
+    pub trace: FunnelTrace,
+    pub set: MeasuredSet,
+}
+
+/// Step-5 output: the selected offload plan — freshly searched, or
+/// reused from the code-pattern DB when the source hash is unchanged.
+#[derive(Debug, Clone)]
+pub enum Plan {
+    Fresh(OffloadSolution),
+    Cached(StoredPattern),
+}
+
+impl Plan {
+    pub fn is_cached(&self) -> bool {
+        matches!(self, Plan::Cached(_))
+    }
+
+    /// The full solution, when this plan came from a fresh search.
+    pub fn solution(&self) -> Option<&OffloadSolution> {
+        match self {
+            Plan::Fresh(sol) => Some(sol),
+            Plan::Cached(_) => None,
+        }
+    }
+
+    /// Offloaded loop ids of the selected pattern.
+    pub fn best_loops(&self) -> Vec<u32> {
+        match self {
+            Plan::Fresh(sol) => sol
+                .best_measurement()
+                .loops
+                .iter()
+                .map(|l| l.0)
+                .collect(),
+            Plan::Cached(rec) => rec.best_pattern.clone(),
+        }
+    }
+
+    /// Selected pattern as a label ("L12+L13", or "all-CPU").
+    pub fn label(&self) -> String {
+        match self {
+            Plan::Fresh(sol) => sol.best_measurement().label(),
+            Plan::Cached(rec) => {
+                if rec.best_pattern.is_empty() {
+                    "all-CPU".to_string()
+                } else {
+                    rec.best_pattern
+                        .iter()
+                        .map(|l| format!("L{l}"))
+                        .collect::<Vec<_>>()
+                        .join("+")
+                }
+            }
+        }
+    }
+
+    pub fn speedup(&self) -> f64 {
+        match self {
+            Plan::Fresh(sol) => sol.speedup(),
+            Plan::Cached(rec) => rec.speedup,
+        }
+    }
+
+    /// Modeled automation wall clock spent producing this plan, seconds.
+    /// Zero for a cache hit — that is the entire point of the DB.
+    pub fn automation_s(&self) -> f64 {
+        match self {
+            Plan::Fresh(sol) => sol.automation_s,
+            Plan::Cached(_) => 0.0,
+        }
+    }
+}
+
+/// Step-5 artifact: a plan, possibly persisted.
+#[derive(Debug, Clone)]
+pub struct Planned {
+    pub req: OffloadRequest,
+    pub plan: Plan,
+    /// Where the pattern record lives, when a DB is configured.
+    pub stored_at: Option<PathBuf>,
+}
+
+/// Step-6 artifact: the final report for one application.
+#[derive(Debug)]
+pub struct Deployed {
+    pub app: String,
+    /// Backend that measured and deploy-checked the plan.
+    pub backend: &'static str,
+    pub plan: Plan,
+    pub stored_at: Option<PathBuf>,
+    /// PJRT sample-test result, when the request names a sample and a
+    /// runtime was supplied.
+    pub sample_run: Option<SampleRun>,
+}
+
+/// The staged flow for one destination backend. See the module docs for
+/// the stage table; [`solve`](Self::solve) and [`run`](Self::run) chain
+/// the stages for callers that want the old one-call ergonomics.
+pub struct Pipeline<'a> {
+    config: SearchConfig,
+    backend: &'a dyn Backend,
+    pattern_db: Option<PathBuf>,
+    reuse_cached: bool,
+}
+
+impl<'a> Pipeline<'a> {
+    /// A pipeline over a validated configuration.
+    pub fn new(
+        config: SearchConfig,
+        backend: &'a dyn Backend,
+    ) -> Result<Self, PipelineError> {
+        config.validate().map_err(PipelineError::InvalidConfig)?;
+        Ok(Pipeline {
+            config,
+            backend,
+            pattern_db: None,
+            reuse_cached: false,
+        })
+    }
+
+    /// Persist selected plans to (and reuse them from) this pattern-DB
+    /// directory.
+    pub fn with_pattern_db(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.pattern_db = Some(dir.into());
+        self
+    }
+
+    /// Reuse a stored plan when the app's source hash is unchanged
+    /// (skips the whole funnel; requires a pattern DB). Off by default.
+    pub fn with_cache_reuse(mut self, on: bool) -> Self {
+        self.reuse_cached = on;
+        self
+    }
+
+    pub fn config(&self) -> &SearchConfig {
+        &self.config
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend
+    }
+
+    /// Step 1 (front): parse + semantic check.
+    pub fn parse(&self, req: OffloadRequest) -> Result<Parsed, PipelineError> {
+        let prog = parse_minic(&req.source)
+            .map_err(|e| PipelineError::Parse(format!("{e}")))?;
+        typecheck::check_ok(&prog)
+            .map_err(|e| PipelineError::Parse(format!("{e}")))?;
+        let source_hash = source_fingerprint(&req.source);
+        Ok(Parsed {
+            req,
+            prog,
+            source_hash,
+        })
+    }
+
+    /// Step 1 (back): profiling analysis on the configured engine.
+    pub fn analyze(&self, p: Parsed) -> Result<Analyzed, PipelineError> {
+        let analysis =
+            analyze_with(&p.prog, &p.req.entry, self.config.engine)
+                .map_err(|e| PipelineError::Analysis(format!("{e}")))?;
+        Ok(Analyzed {
+            req: p.req,
+            prog: p.prog,
+            source_hash: p.source_hash,
+            analysis,
+        })
+    }
+
+    /// Steps 2–3: extraction of offloadable areas + conversion (the
+    /// narrowing funnel with OpenCL-style kernel generation inside).
+    pub fn extract(&self, a: Analyzed) -> Result<Candidates, PipelineError> {
+        let (cands, trace) = funnel::run(
+            &a.prog,
+            &a.analysis,
+            &self.config,
+            self.backend.device(),
+        )
+        .map_err(|e| PipelineError::Search(e.into()))?;
+        Ok(Candidates {
+            req: a.req,
+            prog: a.prog,
+            source_hash: a.source_hash,
+            analysis: a.analysis,
+            cands,
+            trace,
+        })
+    }
+
+    /// Step 4: verification-environment measurement through the backend
+    /// (two rounds: singles, then combinations).
+    pub fn measure(&self, c: Candidates) -> Result<Measured, PipelineError> {
+        let set = measure::measure_patterns(
+            &c.prog,
+            &c.analysis,
+            &c.cands,
+            &self.config,
+            self.backend,
+        )?;
+        Ok(Measured {
+            req: c.req,
+            source_hash: c.source_hash,
+            trace: c.trace,
+            set,
+        })
+    }
+
+    /// Step 5: solution selection, then persistence when a pattern DB is
+    /// configured.
+    pub fn select(&self, m: Measured) -> Result<Planned, PipelineError> {
+        let sol =
+            measure::select(&m.req.app, m.trace, m.set, &self.config)?;
+        let stored_at = match &self.pattern_db {
+            Some(dir) => {
+                let db = PatternDb::open(dir)
+                    .map_err(|e| PipelineError::Db(format!("{e:#}")))?;
+                Some(
+                    db.store_hashed(
+                        &sol,
+                        m.source_hash,
+                        self.backend.name(),
+                        &m.req.entry,
+                    )
+                    .map_err(|e| PipelineError::Db(format!("{e:#}")))?,
+                )
+            }
+            None => None,
+        };
+        Ok(Planned {
+            req: m.req,
+            plan: Plan::Fresh(sol),
+            stored_at,
+        })
+    }
+
+    /// Step 6: production deployment check. Runs the request's PJRT
+    /// sample test when a runtime + artifacts pair is supplied.
+    pub fn deploy(
+        &self,
+        p: Planned,
+        env: Option<(&Runtime, &Artifacts)>,
+    ) -> Result<Deployed, PipelineError> {
+        let sample_run = match (&p.req.pjrt_sample, env) {
+            (Some(sample), Some((rt, art))) => Some(
+                self.backend
+                    .deploy_check(sample, (rt, art), p.req.seed)
+                    .map_err(|e| PipelineError::Deploy(format!("{e:#}")))?,
+            ),
+            _ => None,
+        };
+        Ok(Deployed {
+            app: p.req.app,
+            backend: self.backend.name(),
+            plan: p.plan,
+            stored_at: p.stored_at,
+            sample_run,
+        })
+    }
+
+    /// Pattern-DB lookup for a parsed request: a stored plan whose reuse
+    /// key (source hash + backend + entry) matches, if cache reuse is
+    /// enabled. A plan measured on another backend or entry point is
+    /// never reused — a 4x FPGA plan says nothing about the CPU baseline.
+    pub fn cached_plan(
+        &self,
+        parsed: &Parsed,
+    ) -> Result<Option<Planned>, PipelineError> {
+        if !self.reuse_cached {
+            return Ok(None);
+        }
+        let Some(dir) = &self.pattern_db else {
+            return Ok(None);
+        };
+        let db = PatternDb::open(dir)
+            .map_err(|e| PipelineError::Db(format!("{e:#}")))?;
+        let Some(rec) = db
+            .load_record(&parsed.req.app)
+            .map_err(|e| PipelineError::Db(format!("{e:#}")))?
+        else {
+            return Ok(None);
+        };
+        if rec.source_hash != Some(parsed.source_hash)
+            || rec.backend.as_deref() != Some(self.backend.name())
+            || rec.entry.as_deref() != Some(parsed.req.entry.as_str())
+        {
+            return Ok(None);
+        }
+        let stored_at = Some(db.path_of(&parsed.req.app));
+        Ok(Some(Planned {
+            req: parsed.req.clone(),
+            plan: Plan::Cached(rec),
+            stored_at,
+        }))
+    }
+
+    /// Stages 1–5 (parse → select), with the pattern-DB cache shortcut
+    /// when the stored hash matches.
+    pub fn solve(
+        &self,
+        req: OffloadRequest,
+    ) -> Result<Planned, PipelineError> {
+        let parsed = self.parse(req)?;
+        if let Some(planned) = self.cached_plan(&parsed)? {
+            return Ok(planned);
+        }
+        let analyzed = self.analyze(parsed)?;
+        let candidates = self.extract(analyzed)?;
+        let measured = self.measure(candidates)?;
+        self.select(measured)
+    }
+
+    /// All six stages.
+    pub fn run(
+        &self,
+        req: OffloadRequest,
+        env: Option<(&Runtime, &Artifacts)>,
+    ) -> Result<Deployed, PipelineError> {
+        let planned = self.solve(req)?;
+        self.deploy(planned, env)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::XEON_BRONZE_3104;
+    use crate::hls::ARRIA10_GX;
+    use crate::search::FpgaBackend;
+    use crate::util::tempdir::TempDir;
+
+    const SRC: &str = "
+#define N 1024
+float a[N]; float outr[N]; float outi[N];
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.002 - 1.0; }
+    for (int i = 0; i < N; i++) { outr[i] = sin(a[i]) * cos(a[i]); }
+    for (int i = 0; i < N; i++) { outi[i] = sqrt(a[i] * a[i] + 1.0); }
+    return 0;
+}";
+
+    fn backend() -> FpgaBackend<'static> {
+        FpgaBackend {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        }
+    }
+
+    fn request(app: &str) -> OffloadRequest {
+        OffloadRequest::builder(app).source(SRC).seed(1).build().unwrap()
+    }
+
+    #[test]
+    fn builder_rejects_missing_source() {
+        let err = OffloadRequest::builder("x").build().unwrap_err();
+        assert!(matches!(err, PipelineError::InvalidRequest(_)), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_empty_app_and_entry() {
+        assert!(matches!(
+            OffloadRequest::builder("").source(SRC).build(),
+            Err(PipelineError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            OffloadRequest::builder("x").source(SRC).entry("").build(),
+            Err(PipelineError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            OffloadRequest::builder("x").source("   \n").build(),
+            Err(PipelineError::InvalidRequest(_))
+        ));
+    }
+
+    #[test]
+    fn pipeline_rejects_invalid_config() {
+        let b = backend();
+        let bad = SearchConfig {
+            top_a: 0,
+            ..Default::default()
+        };
+        assert!(matches!(
+            Pipeline::new(bad, &b),
+            Err(PipelineError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn staged_run_produces_a_plan() {
+        let b = backend();
+        let pipe = Pipeline::new(SearchConfig::default(), &b).unwrap();
+        let parsed = pipe.parse(request("mini")).unwrap();
+        let analyzed = pipe.analyze(parsed).unwrap();
+        let candidates = pipe.extract(analyzed).unwrap();
+        assert!(!candidates.cands.is_empty());
+        let measured = pipe.measure(candidates).unwrap();
+        assert!(!measured.set.measurements.is_empty());
+        let planned = pipe.select(measured).unwrap();
+        assert!(planned.plan.speedup() > 0.5);
+        assert!(!planned.plan.is_cached());
+        let deployed = pipe.deploy(planned, None).unwrap();
+        assert_eq!(deployed.backend, "fpga");
+        assert!(deployed.sample_run.is_none());
+    }
+
+    #[test]
+    fn cache_reuse_skips_the_funnel_on_unchanged_source() {
+        let b = backend();
+        let dir = TempDir::new("fpga-offload-pipe-cache").unwrap();
+        let pipe = Pipeline::new(SearchConfig::default(), &b)
+            .unwrap()
+            .with_pattern_db(dir.path())
+            .with_cache_reuse(true);
+
+        let first = pipe.solve(request("mini")).unwrap();
+        assert!(!first.plan.is_cached());
+        let second = pipe.solve(request("mini")).unwrap();
+        assert!(second.plan.is_cached());
+        assert_eq!(first.plan.best_loops(), second.plan.best_loops());
+        assert!((first.plan.speedup() - second.plan.speedup()).abs() < 1e-9);
+
+        // A changed source must invalidate the cache.
+        let changed = OffloadRequest::builder("mini")
+            .source(SRC.replace("0.002", "0.004"))
+            .seed(1)
+            .build()
+            .unwrap();
+        let third = pipe.solve(changed).unwrap();
+        assert!(!third.plan.is_cached());
+    }
+
+    #[test]
+    fn cache_reuse_never_crosses_backends() {
+        let fpga = backend();
+        let dir = TempDir::new("fpga-offload-pipe-xbackend").unwrap();
+        let pipe = Pipeline::new(SearchConfig::default(), &fpga)
+            .unwrap()
+            .with_pattern_db(dir.path())
+            .with_cache_reuse(true);
+        pipe.solve(request("mini")).unwrap();
+
+        // Same source, same DB, different destination: must re-search.
+        let cpu = crate::search::CpuBaseline {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        let cpu_pipe = Pipeline::new(SearchConfig::default(), &cpu)
+            .unwrap()
+            .with_pattern_db(dir.path())
+            .with_cache_reuse(true);
+        let plan = cpu_pipe.solve(request("mini")).unwrap();
+        assert!(!plan.plan.is_cached());
+        assert_eq!(plan.plan.speedup(), 1.0);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_source_sensitive() {
+        let a = source_fingerprint(SRC);
+        assert_eq!(a, source_fingerprint(SRC));
+        assert_ne!(a, source_fingerprint("int main() { return 0; }"));
+    }
+}

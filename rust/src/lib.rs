@@ -15,10 +15,14 @@
 //!    (FF/LUT/DSP/BRAM as % of an Arria10 GX) without full place-and-route.
 //! 5. [`search`] runs the paper's narrowing funnel — top-A arithmetic
 //!    intensity, top-C resource efficiency, ≤D measured patterns (singles
-//!    then combinations) — measuring each pattern on the [`fpga`]
-//!    simulator inside the verification environment.
+//!    then combinations) — measuring each pattern through a pluggable
+//!    [`search::Backend`] (the [`fpga`] simulator by default) inside the
+//!    verification environment.
 //! 6. [`envadapt`] wires the above into the Fig.-1 environment-adaptive
-//!    software flow with its test-case / code-pattern / facility DBs.
+//!    software flow as the staged [`envadapt::Pipeline`] (one typed stage
+//!    per Fig.-1 step), with [`envadapt::Batch`] orchestration for
+//!    many-application automation cycles and the test-case /
+//!    code-pattern / facility DBs.
 //!
 //! Numeric ground truth comes from the real stack: [`runtime`] loads the
 //! AOT-compiled HLO artifacts (JAX models wrapping Pallas kernels, lowered
@@ -38,5 +42,7 @@ pub mod search;
 pub mod util;
 pub mod workloads;
 
+pub use envadapt::{Batch, BatchReport, OffloadRequest, Pipeline};
+pub use search::backend::{Backend, CpuBaseline, FpgaBackend};
 pub use search::config::SearchConfig;
 pub use search::result::{OffloadSolution, PatternMeasurement};

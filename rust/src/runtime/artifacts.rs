@@ -119,7 +119,8 @@ mod tests {
 
     #[test]
     fn load_parses_shapes() {
-        let base = std::env::temp_dir().join("fpga_offload_art_test1");
+        let base =
+            crate::util::tempdir::TempDir::new("fpga-offload-art").unwrap();
         let dir = base.join("artifacts");
         write_meta(&dir);
         let art = Artifacts::load(&dir).unwrap();
@@ -128,26 +129,24 @@ mod tests {
             TdfirShape { m: 8, n: 1024, k: 32 }
         );
         assert_eq!(art.mriq_shape, MriqShape { k: 512, x: 1024 });
-        std::fs::remove_dir_all(&base).ok();
     }
 
     #[test]
     fn discover_walks_up() {
-        let base = std::env::temp_dir().join("fpga_offload_art_test2");
+        let base =
+            crate::util::tempdir::TempDir::new("fpga-offload-art").unwrap();
         let nested = base.join("a").join("b");
         std::fs::create_dir_all(&nested).unwrap();
         write_meta(&base.join("artifacts"));
         let art = Artifacts::discover(&nested).unwrap();
         assert!(art.dir.ends_with("artifacts"));
-        std::fs::remove_dir_all(&base).ok();
     }
 
     #[test]
     fn missing_artifacts_is_helpful_error() {
-        let base = std::env::temp_dir().join("fpga_offload_art_test3");
-        std::fs::create_dir_all(&base).unwrap();
-        let err = Artifacts::discover(&base).unwrap_err().to_string();
+        let base =
+            crate::util::tempdir::TempDir::new("fpga-offload-art").unwrap();
+        let err = Artifacts::discover(base.path()).unwrap_err().to_string();
         assert!(err.contains("make artifacts"), "{err}");
-        std::fs::remove_dir_all(&base).ok();
     }
 }

@@ -1,25 +1,34 @@
 //! The verification environment: measure offload patterns and select the
-//! solution (paper Fig. 1 steps 4–6 and §4's two measurement rounds).
+//! solution (paper Fig. 1 steps 4–5 and §4's two measurement rounds).
 //!
-//! Measurements run on a worker pool sized like the environment's build-
-//! machine pool (`cfg.build_machines`) — std threads + channels (no tokio
-//! in the offline crate set; the work is CPU-bound simulation anyway).
+//! Measurement and functional verification are destination-specific, so
+//! both route through a [`Backend`] (FPGA simulation by default, the CPU
+//! baseline as the control; see [`super::backend`]). Measurements run on
+//! a worker pool sized like the environment's build-machine pool
+//! (`cfg.build_machines`) — std threads + channels (no tokio in the
+//! offline crate set; the work is CPU-bound simulation anyway).
 //! Wall-clock accounting (the ~3 h compiles) is *modeled* via
 //! [`crate::fpga::compile_model`] so the half-day automation figure is
 //! reproducible in milliseconds.
+//!
+//! The stages are exposed separately — [`measure_patterns`] (step 4) and
+//! [`select`] (step 5) — so the staged [`crate::envadapt::Pipeline`] can
+//! own the intermediate artifacts; [`search`] and [`search_with_backend`]
+//! run funnel → measurement → selection end to end.
 
 use std::sync::mpsc;
 
 use crate::analysis::Analysis;
 use crate::cpu::CpuModel;
-use crate::fpga::{self, verify_pattern_with, CompileJob};
-use crate::hls::{full_compile_seconds, Device, ResourceEstimate};
+use crate::fpga::{self, CompileJob};
+use crate::hls::Device;
 use crate::minic::Program;
 
+use super::backend::{Backend, FpgaBackend};
 use super::config::SearchConfig;
 use super::funnel::{self, Candidate, FunnelError};
 use super::patterns::{self, Pattern};
-use super::result::{OffloadSolution, PatternMeasurement};
+use super::result::{FunnelTrace, OffloadSolution, PatternMeasurement};
 
 /// Search failure.
 #[derive(Debug)]
@@ -51,7 +60,18 @@ impl From<FunnelError> for SearchError {
     }
 }
 
-/// Measure one pattern (simulate + optional functional verification).
+/// Step-4 output: the measured patterns plus the per-round compile jobs
+/// that feed automation-time accounting in [`select`].
+#[derive(Debug, Clone)]
+pub struct MeasuredSet {
+    /// All successfully measured patterns, in measurement order.
+    pub measurements: Vec<PatternMeasurement>,
+    /// Compile jobs per measurement round (for the makespan model).
+    pub rounds: Vec<Vec<CompileJob>>,
+}
+
+/// Measure one pattern through the backend (performance + optional
+/// functional verification).
 fn measure_one(
     prog: &Program,
     analysis: &Analysis,
@@ -59,30 +79,12 @@ fn measure_one(
     pattern: &Pattern,
     round: u32,
     cfg: &SearchConfig,
-    cpu: &CpuModel,
-    dev: &Device,
+    backend: &dyn Backend,
 ) -> Result<PatternMeasurement, SearchError> {
-    let kernels: Vec<_> = pattern
-        .iter()
-        .map(|&i| cands[i].split.kernel.clone())
-        .collect();
-    let timing = fpga::simulate(analysis, &kernels, cpu, dev)
-        .map_err(SearchError::Sim)?;
-
-    let combined = pattern
-        .iter()
-        .map(|&i| cands[i].report.estimate)
-        .fold(ResourceEstimate::default(), |acc, e| acc.add(&e));
-    let compile_s = full_compile_seconds(&combined, dev);
+    let bm = backend.measure(prog, analysis, cands, pattern, cfg)?;
 
     let verified = if cfg.verify_numerics {
-        let splits: Vec<_> = pattern
-            .iter()
-            .map(|&i| cands[i].split.clone())
-            .collect();
-        let v = verify_pattern_with(prog, &splits, "main", cfg.engine)
-            .map_err(SearchError::Interp)?;
-        Some(v.passed)
+        Some(backend.verify(prog, cands, pattern, cfg)?)
     } else {
         None
     };
@@ -93,8 +95,8 @@ fn measure_one(
     Ok(PatternMeasurement {
         loops,
         round,
-        timing,
-        compile_s,
+        timing: bm.timing,
+        compile_s: bm.compile_s,
         verified,
     })
 }
@@ -108,15 +110,14 @@ fn measure_round(
     round_patterns: &[Pattern],
     round: u32,
     cfg: &SearchConfig,
-    cpu: &CpuModel,
-    dev: &Device,
+    backend: &dyn Backend,
 ) -> Vec<Result<PatternMeasurement, SearchError>> {
     let workers = cfg.build_machines.min(round_patterns.len()).max(1);
     if workers <= 1 || round_patterns.len() <= 1 {
         return round_patterns
             .iter()
             .map(|p| {
-                measure_one(prog, analysis, cands, p, round, cfg, cpu, dev)
+                measure_one(prog, analysis, cands, p, round, cfg, backend)
             })
             .collect();
     }
@@ -136,7 +137,7 @@ fn measure_round(
                     Ok((idx, pattern)) => {
                         let m = measure_one(
                             prog, analysis, cands, &pattern, round, cfg,
-                            cpu, dev,
+                            backend,
                         );
                         if res_tx.send((idx, m)).is_err() {
                             return;
@@ -164,29 +165,27 @@ fn measure_round(
     })
 }
 
-/// The full search: funnel → round-1 singles → round-2 combinations →
-/// best pattern (paper Fig. 2 end to end).
-pub fn search(
-    app: &str,
+/// Step 4: round-1 singles, then round-2 combinations within the
+/// remaining measurement budget, all through the backend.
+pub fn measure_patterns(
     prog: &Program,
     analysis: &Analysis,
+    cands: &[Candidate],
     cfg: &SearchConfig,
-    cpu: &CpuModel,
-    dev: &Device,
-) -> Result<OffloadSolution, SearchError> {
-    let (cands, trace) = funnel::run(prog, analysis, cfg, dev)?;
-
+    backend: &dyn Backend,
+) -> Result<MeasuredSet, SearchError> {
     // Round 1: singles.
-    let round1 = patterns::singles(&cands, cfg);
-    let r1 = measure_round(prog, analysis, &cands, &round1, 1, cfg, cpu, dev);
+    let round1 = patterns::singles(cands, cfg);
+    let r1 =
+        measure_round(prog, analysis, cands, &round1, 1, cfg, backend);
 
     let mut measurements: Vec<PatternMeasurement> = Vec::new();
     let mut accelerated: Vec<(usize, f64)> = Vec::new();
-    let mut rounds_jobs: Vec<Vec<CompileJob>> = vec![Vec::new()];
+    let mut rounds: Vec<Vec<CompileJob>> = vec![Vec::new()];
     for (pat, res) in round1.iter().zip(r1) {
         match res {
             Ok(m) => {
-                rounds_jobs[0].push(CompileJob {
+                rounds[0].push(CompileJob {
                     duration_s: m.compile_s,
                 });
                 if m.speedup() > 1.0 {
@@ -206,21 +205,21 @@ pub fn search(
     // Round 2: combinations within the remaining budget.
     let budget = cfg.max_patterns.saturating_sub(measurements.len());
     let round2 = patterns::combinations(
-        &cands,
+        cands,
         &accelerated,
         analysis,
         cfg,
-        dev,
+        backend.device(),
         budget,
     );
     if !round2.is_empty() {
         let r2 =
-            measure_round(prog, analysis, &cands, &round2, 2, cfg, cpu, dev);
-        rounds_jobs.push(Vec::new());
+            measure_round(prog, analysis, cands, &round2, 2, cfg, backend);
+        rounds.push(Vec::new());
         for res in r2 {
             match res {
                 Ok(m) => {
-                    rounds_jobs[1].push(CompileJob {
+                    rounds[1].push(CompileJob {
                         duration_s: m.compile_s,
                     });
                     measurements.push(m);
@@ -231,11 +230,25 @@ pub fn search(
         }
     }
 
-    if measurements.is_empty() {
+    Ok(MeasuredSet {
+        measurements,
+        rounds,
+    })
+}
+
+/// Step 5: pick the best measured pattern and account automation time.
+pub fn select(
+    app: &str,
+    trace: FunnelTrace,
+    set: MeasuredSet,
+    cfg: &SearchConfig,
+) -> Result<OffloadSolution, SearchError> {
+    if set.measurements.is_empty() {
         return Err(SearchError::NoMeasurements);
     }
 
-    let best = measurements
+    let best = set
+        .measurements
         .iter()
         .enumerate()
         .max_by(|a, b| {
@@ -247,7 +260,7 @@ pub fn search(
         .expect("nonempty");
 
     let automation_s = fpga::automation_time(
-        &rounds_jobs,
+        &set.rounds,
         cfg.build_machines,
         cfg.measure_seconds,
     );
@@ -255,10 +268,37 @@ pub fn search(
     Ok(OffloadSolution {
         app: app.to_string(),
         funnel: trace,
-        measurements,
+        measurements: set.measurements,
         best,
         automation_s,
     })
+}
+
+/// The full search against an explicit backend: funnel → round-1 singles
+/// → round-2 combinations → best pattern (paper Fig. 2 end to end).
+pub fn search_with_backend(
+    app: &str,
+    prog: &Program,
+    analysis: &Analysis,
+    cfg: &SearchConfig,
+    backend: &dyn Backend,
+) -> Result<OffloadSolution, SearchError> {
+    let (cands, trace) = funnel::run(prog, analysis, cfg, backend.device())?;
+    let set = measure_patterns(prog, analysis, &cands, cfg, backend)?;
+    select(app, trace, set, cfg)
+}
+
+/// The full search on the paper's FPGA destination.
+pub fn search(
+    app: &str,
+    prog: &Program,
+    analysis: &Analysis,
+    cfg: &SearchConfig,
+    cpu: &CpuModel,
+    dev: &Device,
+) -> Result<OffloadSolution, SearchError> {
+    let backend = FpgaBackend { cpu, device: dev };
+    search_with_backend(app, prog, analysis, cfg, &backend)
 }
 
 #[cfg(test)]
@@ -268,6 +308,7 @@ mod tests {
     use crate::cpu::XEON_BRONZE_3104;
     use crate::hls::ARRIA10_GX;
     use crate::minic::parse;
+    use crate::search::backend::CpuBaseline;
 
     const SRC: &str = "
 #define N 4096
@@ -386,5 +427,51 @@ int main() {
             .map(|m| m.speedup())
             .fold(f64::MIN, f64::max);
         assert!((sol.speedup() - max).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cpu_baseline_backend_never_accelerates() {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let backend = CpuBaseline {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        let sol = search_with_backend(
+            "test",
+            &prog,
+            &an,
+            &SearchConfig::default(),
+            &backend,
+        )
+        .unwrap();
+        assert_eq!(sol.speedup(), 1.0);
+        // No compiles → automation time is measurement time only.
+        let cfg = SearchConfig::default();
+        let expected: f64 =
+            sol.measurements.len() as f64 * cfg.measure_seconds;
+        assert!((sol.automation_s - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backend_search_matches_plain_search() {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let cfg = SearchConfig::default();
+        let via_fn =
+            search("t", &prog, &an, &cfg, &XEON_BRONZE_3104, &ARRIA10_GX)
+                .unwrap();
+        let backend = FpgaBackend {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        let via_backend =
+            search_with_backend("t", &prog, &an, &cfg, &backend).unwrap();
+        assert_eq!(via_fn.best, via_backend.best);
+        assert_eq!(
+            via_fn.best_measurement().loops,
+            via_backend.best_measurement().loops
+        );
+        assert!((via_fn.speedup() - via_backend.speedup()).abs() < 1e-12);
     }
 }

@@ -4,11 +4,14 @@
 //! * [`funnel`] — intensity → pre-compile → resource-efficiency narrowing.
 //! * [`patterns`] — single + combination pattern generation with the
 //!   resource-cap rule.
+//! * [`backend`] — the destination seam: measurement, verification and
+//!   deploy-check per target ([`FpgaBackend`], [`CpuBaseline`]).
 //! * [`measure`] — the verification environment: worker-pool measurement,
 //!   two rounds, best-pattern selection, automation-time accounting.
-//! * [`ga`] — the previous work's GA strategy [32], as the comparison
+//! * [`ga`] — the previous work's GA strategy \[32\], as the comparison
 //!   baseline.
 
+pub mod backend;
 pub mod config;
 pub mod funnel;
 pub mod ga;
@@ -16,8 +19,12 @@ pub mod measure;
 pub mod patterns;
 pub mod result;
 
+pub use backend::{Backend, BackendMeasurement, CpuBaseline, FpgaBackend};
 pub use config::SearchConfig;
 pub use funnel::{Candidate, FunnelError};
 pub use ga::{GaConfig, GaResult};
-pub use measure::{search, SearchError};
+pub use measure::{
+    measure_patterns, search, search_with_backend, select, MeasuredSet,
+    SearchError,
+};
 pub use result::{FunnelTrace, OffloadSolution, PatternMeasurement};

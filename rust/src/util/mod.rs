@@ -1,8 +1,10 @@
 //! Small self-contained substrates the offline build environment forces us
-//! to own: JSON, a seedable RNG, and a property-testing harness.
+//! to own: JSON, a seedable RNG, a property-testing harness, and unique
+//! self-cleaning temp dirs.
 
 pub mod bench;
 pub mod fnv;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod tempdir;

@@ -1,0 +1,63 @@
+//! Unique, self-cleaning temporary directories.
+//!
+//! Tests (and examples) used to share fixed-name directories under
+//! `std::env::temp_dir()` — e.g. `fpga_offload_flow_test` — which collide
+//! when the test harness runs them in parallel: one test's cleanup races
+//! another's `PatternDb` writes. A pid + process-global counter makes
+//! every instance unique, and `Drop` removes the tree so nothing leaks
+//! between runs even on panic-unwind.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A directory under the system temp dir that is removed on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `<system-tmp>/<prefix>-<pid>-<counter>`.
+    pub fn new(prefix: &str) -> std::io::Result<TempDir> {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("{prefix}-{}-{n}", std::process::id()));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// A path inside the directory.
+    pub fn join(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dirs_are_unique_and_cleaned() {
+        let a = TempDir::new("fpga-offload-tempdir").unwrap();
+        let b = TempDir::new("fpga-offload-tempdir").unwrap();
+        assert_ne!(a.path(), b.path());
+        assert!(a.path().is_dir());
+        let kept = a.path().to_path_buf();
+        std::fs::write(a.join("x.json"), "{}").unwrap();
+        drop(a);
+        assert!(!kept.exists());
+        assert!(b.path().is_dir());
+    }
+}

@@ -1,0 +1,233 @@
+//! Integration: the staged `Pipeline` API, `Batch` orchestration, and
+//! the `run_flow` shim.
+//!
+//! Covers the API-redesign guarantees:
+//! * builder validation errors,
+//! * stage artifacts flowing parse → analyze → extract → measure →
+//!   select → deploy (the typestate itself is enforced at compile time;
+//!   see the `compile_fail` doctest on `envadapt::pipeline`),
+//! * batch determinism under a fixed seed — a batch entry must equal an
+//!   individually-run pipeline solution,
+//! * pattern-DB cache reuse keyed on the source hash,
+//! * `run_flow` shim equivalence against the staged pipeline.
+
+#![allow(deprecated)]
+
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::envadapt::{
+    run_flow, Batch, FlowOptions, OffloadRequest, Pipeline, PipelineError,
+    TestDb,
+};
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::search::{CpuBaseline, FpgaBackend, SearchConfig};
+use fpga_offload::util::tempdir::TempDir;
+use fpga_offload::workloads;
+
+const SEED: u64 = 1234;
+
+fn fpga_backend() -> FpgaBackend<'static> {
+    FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    }
+}
+
+fn bundled_request(app: &str) -> OffloadRequest {
+    let testdb = TestDb::builtin();
+    let case = testdb.get(app).expect("bundled app");
+    let mut req =
+        OffloadRequest::from_case(case, workloads::source(app).unwrap());
+    req.seed = SEED;
+    req.pjrt_sample = None;
+    req
+}
+
+#[test]
+fn builder_validation_errors_are_typed() {
+    assert!(matches!(
+        OffloadRequest::builder("x").build(),
+        Err(PipelineError::InvalidRequest(_))
+    ));
+    assert!(matches!(
+        OffloadRequest::builder("").source("int main() {}").build(),
+        Err(PipelineError::InvalidRequest(_))
+    ));
+    assert!(matches!(
+        Pipeline::new(
+            SearchConfig {
+                first_round: 0,
+                ..Default::default()
+            },
+            &fpga_backend(),
+        ),
+        Err(PipelineError::InvalidConfig(_))
+    ));
+}
+
+#[test]
+fn staged_pipeline_runs_all_bundled_apps() {
+    let backend = fpga_backend();
+    let pipe = Pipeline::new(SearchConfig::default(), &backend).unwrap();
+    for app in workloads::APPS {
+        let parsed = pipe.parse(bundled_request(app)).unwrap();
+        let analyzed = pipe.analyze(parsed).unwrap();
+        let candidates = pipe.extract(analyzed).unwrap();
+        assert!(!candidates.cands.is_empty(), "{app}: no candidates");
+        let measured = pipe.measure(candidates).unwrap();
+        let planned = pipe.select(measured).unwrap();
+        assert!(
+            planned.plan.speedup() > 1.0,
+            "{app}: expected acceleration, got {:.2}x",
+            planned.plan.speedup()
+        );
+        let deployed = pipe.deploy(planned, None).unwrap();
+        assert_eq!(deployed.backend, "fpga");
+    }
+}
+
+/// The acceptance check: ≥3 registered workloads through one shared
+/// automation cycle, per-app solutions identical to individually-run
+/// pipelines under the same seed.
+#[test]
+fn batch_cycle_matches_individual_pipelines() {
+    let backend = fpga_backend();
+    let pipe = Pipeline::new(SearchConfig::default(), &backend).unwrap();
+
+    let mut batch = Batch::new(&pipe);
+    for app in workloads::APPS {
+        batch.push(bundled_request(app));
+    }
+    assert!(batch.len() >= 3, "need tdfir, mriq, sobel at least");
+    let report = batch.run();
+    assert_eq!(report.solved(), workloads::APPS.len());
+    assert_eq!(report.failed(), 0);
+
+    for (app, entry) in workloads::APPS.iter().zip(&report.entries) {
+        assert_eq!(&entry.app, app);
+        let solo = pipe.solve(bundled_request(app)).unwrap();
+        let batch_plan = entry.plan.as_ref().unwrap();
+        assert_eq!(
+            batch_plan.best_loops(),
+            solo.plan.best_loops(),
+            "{app}: batch and solo disagree on the pattern"
+        );
+        assert!(
+            (batch_plan.speedup() - solo.plan.speedup()).abs() < 1e-12,
+            "{app}: batch and solo disagree on the speedup"
+        );
+    }
+
+    // Aggregate accounting: concurrent cycle is bounded by the slowest
+    // app, serial by the sum.
+    assert!(report.concurrent_automation_s <= report.serial_automation_s);
+    assert!(report.concurrent_automation_s > 0.0);
+}
+
+#[test]
+fn batch_report_json_roundtrips_per_app_solutions() {
+    let backend = fpga_backend();
+    let pipe = Pipeline::new(SearchConfig::default(), &backend).unwrap();
+    let report = Batch::new(&pipe)
+        .with(bundled_request("sobel"))
+        .with(bundled_request("mriq"))
+        .run();
+
+    let dir = TempDir::new("fpga-offload-batch-json").unwrap();
+    let path = dir.join("report.json");
+    report.write_json(&path).unwrap();
+    let parsed = fpga_offload::util::json::Json::parse(
+        &std::fs::read_to_string(&path).unwrap(),
+    )
+    .unwrap();
+
+    assert_eq!(parsed.get(&["apps"]).unwrap().as_f64(), Some(2.0));
+    let results = parsed.get(&["results"]).unwrap().as_arr().unwrap();
+    for (entry, j) in report.entries.iter().zip(results) {
+        assert_eq!(
+            j.get(&["app"]).unwrap().as_str(),
+            Some(entry.app.as_str())
+        );
+        let plan = entry.plan.as_ref().unwrap();
+        assert!(
+            (j.get(&["speedup"]).unwrap().as_f64().unwrap()
+                - plan.speedup())
+            .abs()
+                < 1e-9
+        );
+    }
+}
+
+#[test]
+fn batch_runs_on_the_cpu_baseline_backend() {
+    let backend = CpuBaseline {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let pipe = Pipeline::new(SearchConfig::default(), &backend).unwrap();
+    let report = Batch::new(&pipe).with(bundled_request("sobel")).run();
+    assert_eq!(report.solved(), 1);
+    assert_eq!(report.backend, "cpu");
+    let plan = report.entries[0].plan.as_ref().unwrap();
+    assert_eq!(plan.speedup(), 1.0);
+}
+
+#[test]
+fn cache_reuse_is_keyed_on_source_hash() {
+    let backend = fpga_backend();
+    let dir = TempDir::new("fpga-offload-cache-int").unwrap();
+    let pipe = Pipeline::new(SearchConfig::default(), &backend)
+        .unwrap()
+        .with_pattern_db(dir.path())
+        .with_cache_reuse(true);
+
+    let fresh = pipe.solve(bundled_request("sobel")).unwrap();
+    assert!(!fresh.plan.is_cached());
+    let reused = pipe.solve(bundled_request("sobel")).unwrap();
+    assert!(reused.plan.is_cached());
+    assert_eq!(fresh.plan.best_loops(), reused.plan.best_loops());
+
+    // Same DB, reuse disabled: always a fresh search.
+    let no_reuse = Pipeline::new(SearchConfig::default(), &backend)
+        .unwrap()
+        .with_pattern_db(dir.path());
+    assert!(!no_reuse
+        .solve(bundled_request("sobel"))
+        .unwrap()
+        .plan
+        .is_cached());
+}
+
+#[test]
+fn run_flow_shim_is_equivalent_to_the_pipeline() {
+    let app = "sobel";
+    let src = workloads::source(app).unwrap();
+
+    let testdb = TestDb::builtin();
+    let opts = FlowOptions {
+        config: SearchConfig::default(),
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+        pattern_db: None,
+        runtime: None,
+        seed: SEED,
+    };
+    let report = run_flow(app, src, &testdb, &opts).unwrap();
+
+    let backend = fpga_backend();
+    let pipe = Pipeline::new(SearchConfig::default(), &backend).unwrap();
+    let planned = pipe.solve(bundled_request(app)).unwrap();
+    let sol = planned.plan.solution().unwrap();
+
+    assert_eq!(
+        report.solution.best_measurement().loops,
+        sol.best_measurement().loops
+    );
+    assert!((report.solution.speedup() - sol.speedup()).abs() < 1e-12);
+    assert_eq!(
+        report.solution.measurements.len(),
+        sol.measurements.len()
+    );
+    assert!(
+        (report.solution.automation_s - sol.automation_s).abs() < 1e-9
+    );
+}

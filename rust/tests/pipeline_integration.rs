@@ -107,13 +107,12 @@ fn measurement_budget_is_respected_everywhere() {
 #[test]
 fn solution_json_roundtrips_through_pattern_db() {
     use fpga_offload::envadapt::PatternDb;
-    let dir = std::env::temp_dir().join("fpga_offload_int_pdb");
-    std::fs::remove_dir_all(&dir).ok();
-    let db = PatternDb::open(&dir).unwrap();
+    use fpga_offload::util::tempdir::TempDir;
+    let dir = TempDir::new("fpga-offload-int-pdb").unwrap();
+    let db = PatternDb::open(dir.path()).unwrap();
     let sol = solve("sobel");
     db.store(&sol).unwrap();
     let loaded = db.load("sobel").unwrap().unwrap();
     let speedup = loaded.get(&["speedup"]).unwrap().as_f64().unwrap();
     assert!((speedup - sol.speedup()).abs() < 1e-9);
-    std::fs::remove_dir_all(&dir).ok();
 }
