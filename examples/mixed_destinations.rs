@@ -1,0 +1,114 @@
+//! Mixed-destination offloading: one automation cycle, three
+//! destinations (the arXiv:2011.12431 environment — every app lands on
+//! the best of FPGA / GPU / CPU).
+//!
+//! Builds one [`fpga_offload::Pipeline`] per destination backend over the
+//! same `SearchConfig`, registers every bundled application in a
+//! [`fpga_offload::Batch::mixed`] cycle, and prints where each app was
+//! routed and why — exactly what `repro batch --mixed` does.
+//!
+//! Run with: `cargo run --release --example mixed_destinations`
+
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::envadapt::{Batch, OffloadRequest, Pipeline, TestDb};
+use fpga_offload::gpu::TESLA_T4;
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::search::{
+    CpuBaseline, FpgaBackend, GpuBackend, SearchConfig,
+};
+use fpga_offload::workloads;
+
+fn main() -> anyhow::Result<()> {
+    println!("== mixed-destination automation cycle: fpga + gpu + cpu ==\n");
+
+    let fpga = FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let gpu = GpuBackend {
+        cpu: &XEON_BRONZE_3104,
+        gpu: &TESLA_T4,
+        device: &ARRIA10_GX,
+    };
+    let cpu = CpuBaseline {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let cfg = SearchConfig::default();
+    let pf = Pipeline::new(cfg.clone(), &fpga)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let pg = Pipeline::new(cfg.clone(), &gpu)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let pc =
+        Pipeline::new(cfg, &cpu).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let testdb = TestDb::builtin();
+    let mut batch = Batch::mixed(vec![&pf, &pg, &pc]);
+    for app in workloads::APPS {
+        let case = testdb.get(app).expect("bundled apps are registered");
+        let src = workloads::source(app).expect("bundled source");
+        let mut req = OffloadRequest::from_case(case, src);
+        req.pjrt_sample = None;
+        batch.push(req);
+    }
+
+    println!(
+        "{} applications × {} destinations, funnels in parallel\n",
+        batch.len(),
+        batch.backend_names().len()
+    );
+    let report = batch.run();
+
+    for e in &report.entries {
+        let Some(plan) = &e.plan else {
+            println!(
+                "  {:<8} FAILED: {}",
+                e.app,
+                e.error.as_deref().unwrap_or("?")
+            );
+            continue;
+        };
+        println!(
+            "  {:<8} → {:<5} best {:<10} {:>6.2}x",
+            e.app,
+            e.destination.unwrap_or("?"),
+            plan.label(),
+            plan.speedup()
+        );
+        for o in &e.outcomes {
+            match &o.plan {
+                Some(p) => println!(
+                    "             {:<5} {:>6.2}x  automation {:>5.1} h{}",
+                    o.backend,
+                    p.speedup(),
+                    p.automation_s() / 3600.0,
+                    if Some(o.backend) == e.destination {
+                        "  ← selected"
+                    } else {
+                        ""
+                    }
+                ),
+                None => println!(
+                    "             {:<5} failed: {}",
+                    o.backend,
+                    o.error.as_deref().unwrap_or("?")
+                ),
+            }
+        }
+    }
+
+    let split: Vec<String> = report
+        .destination_counts()
+        .iter()
+        .map(|(b, n)| format!("{b} {n}"))
+        .collect();
+    println!("\ndestination split: {}", split.join(" / "));
+    println!(
+        "cycle automation: {:.1} h serial, {:.1} h concurrent \
+         (the GPU destination compiles in minutes — its patterns barely \
+         register next to the FPGA's ~3 h place-and-route jobs)",
+        report.serial_automation_s / 3600.0,
+        report.concurrent_automation_s / 3600.0
+    );
+    Ok(())
+}

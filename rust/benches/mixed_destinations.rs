@@ -1,0 +1,148 @@
+//! Mixed-destination split: where does each bundled application land
+//! when one automation cycle measures it against FPGA, GPU and CPU?
+//!
+//! Records the per-app destination and per-backend speedups as the
+//! `BENCH_mixed.json` series (target/bench-results/), so the
+//! GPU-vs-FPGA routing trajectory is tracked across changes to either
+//! performance model. Asserts only the *shape* the models are calibrated
+//! for: every app routed, the control never beats a real destination,
+//! and both real destinations win at least one bundled app.
+
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::envadapt::{Batch, OffloadRequest, Pipeline, TestDb};
+use fpga_offload::gpu::TESLA_T4;
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::search::{
+    CpuBaseline, FpgaBackend, GpuBackend, SearchConfig,
+};
+use fpga_offload::util::bench::{save_results, Table};
+use fpga_offload::util::json::Json;
+use fpga_offload::workloads;
+
+fn main() {
+    println!("== mixed destinations: per-app routing across fpga/gpu/cpu ==\n");
+
+    let fpga = FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let gpu = GpuBackend {
+        cpu: &XEON_BRONZE_3104,
+        gpu: &TESLA_T4,
+        device: &ARRIA10_GX,
+    };
+    let cpu = CpuBaseline {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let cfg = SearchConfig::default();
+    let pf = Pipeline::new(cfg.clone(), &fpga).expect("fpga pipeline");
+    let pg = Pipeline::new(cfg.clone(), &gpu).expect("gpu pipeline");
+    let pc = Pipeline::new(cfg, &cpu).expect("cpu pipeline");
+
+    let testdb = TestDb::builtin();
+    let mut batch = Batch::mixed(vec![&pf, &pg, &pc]);
+    for app in workloads::APPS {
+        let case = testdb.get(app).expect("registered");
+        let mut req =
+            OffloadRequest::from_case(case, workloads::source(app).unwrap());
+        req.pjrt_sample = None;
+        batch.push(req);
+    }
+    let report = batch.run();
+
+    let mut table = Table::new(&[
+        "application",
+        "destination",
+        "fpga",
+        "gpu",
+        "cpu",
+        "winner",
+    ]);
+    let mut apps_json = Vec::new();
+    for e in &report.entries {
+        let plan = e.plan.as_ref().expect("every bundled app solves");
+        let dest = e.destination.expect("every bundled app routed");
+        let speedup_of = |backend: &str| -> f64 {
+            e.outcomes
+                .iter()
+                .find(|o| o.backend == backend)
+                .and_then(|o| o.plan.as_ref())
+                .map(|p| p.speedup())
+                .unwrap_or(0.0)
+        };
+        let (sf, sg, sc) =
+            (speedup_of("fpga"), speedup_of("gpu"), speedup_of("cpu"));
+        table.row(&[
+            e.app.clone(),
+            dest.to_string(),
+            format!("{sf:.2}x"),
+            format!("{sg:.2}x"),
+            format!("{sc:.2}x"),
+            format!("{:.2}x", plan.speedup()),
+        ]);
+        apps_json.push(Json::obj(vec![
+            ("app", Json::Str(e.app.clone())),
+            ("destination", Json::Str(dest.to_string())),
+            ("fpga_speedup", Json::Num(sf)),
+            ("gpu_speedup", Json::Num(sg)),
+            ("cpu_speedup", Json::Num(sc)),
+            ("selected_speedup", Json::Num(plan.speedup())),
+        ]));
+
+        // Shape: the all-CPU control is exactly 1x and never wins a
+        // routed app outright.
+        assert!((sc - 1.0).abs() < 1e-9, "{}: cpu control {sc}", e.app);
+        assert!(plan.speedup() >= 1.0, "{}: routed below 1x", e.app);
+    }
+
+    table.print();
+
+    let counts = report.destination_counts();
+    let split: Vec<String> = counts
+        .iter()
+        .map(|(b, n)| format!("{b} {n}"))
+        .collect();
+    println!("\ndestination split: {}", split.join(" / "));
+
+    let n_fpga = counts
+        .iter()
+        .find(|(b, _)| *b == "fpga")
+        .map(|(_, n)| *n)
+        .unwrap_or(0);
+    let n_gpu = counts
+        .iter()
+        .find(|(b, _)| *b == "gpu")
+        .map(|(_, n)| *n)
+        .unwrap_or(0);
+    assert!(
+        n_fpga >= 1,
+        "mixed environment degenerated: no app on the FPGA"
+    );
+    assert!(
+        n_gpu >= 1,
+        "mixed environment degenerated: no app on the GPU"
+    );
+
+    let mut destinations = std::collections::BTreeMap::new();
+    for (b, n) in &counts {
+        destinations.insert(b.to_string(), Json::Num(*n as f64));
+    }
+    save_results(
+        "BENCH_mixed",
+        &Json::obj(vec![
+            ("apps", Json::Arr(apps_json)),
+            ("destinations", Json::Obj(destinations)),
+            (
+                "serial_automation_hours",
+                Json::Num(report.serial_automation_s / 3600.0),
+            ),
+            (
+                "concurrent_automation_hours",
+                Json::Num(report.concurrent_automation_s / 3600.0),
+            ),
+        ]),
+    );
+    println!("\nseries recorded: target/bench-results/BENCH_mixed.json");
+    println!("mixed-destination shape: PASS");
+}

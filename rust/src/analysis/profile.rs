@@ -42,6 +42,10 @@ impl AnalyzedLoop {
 pub struct Analysis {
     pub loops: Vec<AnalyzedLoop>,
     pub profile: Profile,
+    /// Entry function the profiling run executed. Verification must run
+    /// the *same* entry — a pattern profiled under `compute()` proves
+    /// nothing when verified against `main()`.
+    pub entry: String,
 }
 
 impl Analysis {
@@ -110,7 +114,11 @@ pub fn analyze_with(
         })
         .collect();
 
-    Ok(Analysis { loops, profile })
+    Ok(Analysis {
+        loops,
+        profile,
+        entry: entry.to_string(),
+    })
 }
 
 /// Find the loop body in the program and classify its dependence.

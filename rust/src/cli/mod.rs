@@ -4,9 +4,11 @@
 //! repro offload <app|file.c> [--explain] [--top-a N] [--unroll B]
 //!               [--top-c N] [--max-patterns D] [--machines N]
 //!               [--pattern-db DIR] [--reuse] [--pjrt] [--no-verify]
-//!               [--engine interp|vm] [--backend fpga|cpu]
+//!               [--engine interp|vm] [--backend fpga|gpu|cpu]
+//!               [--entry FN]
 //! repro batch [apps...] [--out FILE] [--pattern-db DIR] [--reuse]
-//!             [--backend fpga|cpu] + the offload search flags
+//!             [--backend fpga|gpu|cpu] [--mixed]
+//!             + the offload search flags
 //! repro analyze <app|file.c>       loop table + intensity ranking
 //! repro estimate <app|file.c> [--unroll B]   pre-compile reports (top-A)
 //! repro opencl <app|file.c> --loop N [--unroll B]   emit kernel + host
@@ -18,16 +20,20 @@
 //! `offload` and `batch` are thin drivers over the staged
 //! [`crate::envadapt::Pipeline`]; `batch` runs every requested app
 //! through one shared automation cycle and writes a
-//! [`crate::envadapt::BatchReport`] JSON.
+//! [`crate::envadapt::BatchReport`] JSON. `batch --mixed` measures every
+//! app against all three destinations (FPGA, GPU, CPU control) in one
+//! cycle and routes each app to the best verified speedup — the
+//! mixed-destination environment of arXiv:2011.12431.
 
 use crate::analysis::{analyze_with, Analysis};
 use crate::cpu::XEON_BRONZE_3104;
 use crate::envadapt::{Batch, OffloadRequest, Pipeline, TestDb};
+use crate::gpu::TESLA_T4;
 use crate::hls::{render, ARRIA10_GX};
 use crate::minic::{parse, typecheck, EngineKind, Program};
 use crate::runtime::{Artifacts, Runtime};
 use crate::search::{
-    Backend, CpuBaseline, FpgaBackend, GaConfig, SearchConfig,
+    Backend, CpuBaseline, FpgaBackend, GaConfig, GpuBackend, SearchConfig,
 };
 use crate::workloads;
 
@@ -79,20 +85,27 @@ fn print_usage() {
                                   extract → measure → select → deploy\n\
              --explain            print the funnel trace and reports\n\
              --engine E           execution engine: vm (default) | interp\n\
-             --backend B          destination backend: fpga (default) | cpu\n\
+             --backend B          destination: fpga (default) | gpu | cpu\n\
+             --entry FN           entry function for profiling and\n\
+                                  verification (default: test-case DB\n\
+                                  entry, else main)\n\
              --top-a N            intensity narrowing (default 5)\n\
              --unroll B           loop expansion factor (default 1)\n\
              --top-c N            resource-efficiency narrowing (default 3)\n\
              --max-patterns D     measurement budget (default 4)\n\
              --machines N         verification build machines (default 1)\n\
              --pattern-db DIR     persist the solution\n\
-             --reuse              reuse a stored pattern when the source\n\
-                                  hash is unchanged (needs --pattern-db)\n\
+             --reuse              reuse a stored pattern when source,\n\
+                                  backend, entry, device and config are\n\
+                                  all unchanged (needs --pattern-db)\n\
              --pjrt               run the PJRT sample test (step 6)\n\
              --no-verify          skip functional verification\n\
            batch [apps...]        one automation cycle over many apps\n\
                                   (default: all bundled apps) — shares one\n\
                                   config, runs funnels concurrently\n\
+             --mixed              measure every app on fpga+gpu+cpu and\n\
+                                  route each to its best verified speedup\n\
+                                  (per-app `destination` in the report)\n\
              --out FILE           batch-report JSON path\n\
                                   (default batch_report.json)\n\
              + the offload flags above (except --explain/--pjrt)\n\
@@ -146,25 +159,43 @@ fn engine_from_flags(f: &Flags) -> anyhow::Result<EngineKind> {
     }
 }
 
-/// The two bundled destination backends, selected by `--backend`.
+/// The bundled destination backends, selected by `--backend`.
 enum BackendChoice {
     Fpga(FpgaBackend<'static>),
+    Gpu(GpuBackend<'static>),
     Cpu(CpuBaseline<'static>),
+}
+
+fn fpga_backend() -> FpgaBackend<'static> {
+    FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    }
+}
+
+fn gpu_backend() -> GpuBackend<'static> {
+    GpuBackend {
+        cpu: &XEON_BRONZE_3104,
+        gpu: &TESLA_T4,
+        device: &ARRIA10_GX,
+    }
+}
+
+fn cpu_backend() -> CpuBaseline<'static> {
+    CpuBaseline {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    }
 }
 
 impl BackendChoice {
     fn from_flags(f: &Flags) -> anyhow::Result<BackendChoice> {
         match f.value("--backend") {
-            None | Some("fpga") => Ok(BackendChoice::Fpga(FpgaBackend {
-                cpu: &XEON_BRONZE_3104,
-                device: &ARRIA10_GX,
-            })),
-            Some("cpu") => Ok(BackendChoice::Cpu(CpuBaseline {
-                cpu: &XEON_BRONZE_3104,
-                device: &ARRIA10_GX,
-            })),
+            None | Some("fpga") => Ok(BackendChoice::Fpga(fpga_backend())),
+            Some("gpu") => Ok(BackendChoice::Gpu(gpu_backend())),
+            Some("cpu") => Ok(BackendChoice::Cpu(cpu_backend())),
             Some(v) => Err(anyhow::anyhow!(
-                "bad value for --backend: {v:?} (use fpga|cpu)"
+                "bad value for --backend: {v:?} (use fpga|gpu|cpu)"
             )),
         }
     }
@@ -172,6 +203,7 @@ impl BackendChoice {
     fn as_dyn(&self) -> &dyn Backend {
         match self {
             BackendChoice::Fpga(b) => b,
+            BackendChoice::Gpu(b) => b,
             BackendChoice::Cpu(b) => b,
         }
     }
@@ -186,6 +218,7 @@ struct Flags<'a> {
 const VALUE_FLAGS: &[&str] = &[
     "--engine",
     "--backend",
+    "--entry",
     "--top-a",
     "--unroll",
     "--top-c",
@@ -258,14 +291,16 @@ fn config_from_flags(f: &Flags) -> anyhow::Result<SearchConfig> {
     Ok(cfg)
 }
 
-/// A pipeline request for an app spec, entry/sample from the test-case
-/// DB when the app is registered there.
+/// A pipeline request for an app spec: entry/sample from the test-case
+/// DB when the app is registered there, with `--entry` overriding both
+/// the DB's entry and the `main` default.
 fn request_for(
     testdb: &TestDb,
     app: &str,
     src: &str,
     seed: u64,
     pjrt: bool,
+    entry_override: Option<&str>,
 ) -> OffloadRequest {
     let mut req = match testdb.get(app) {
         Some(case) => OffloadRequest::from_case(case, src),
@@ -278,6 +313,9 @@ fn request_for(
         },
     };
     req.seed = seed;
+    if let Some(entry) = entry_override {
+        req.entry = entry.to_string();
+    }
     if !pjrt {
         req.pjrt_sample = None;
     }
@@ -295,7 +333,14 @@ fn cmd_offload(args: &[String]) -> anyhow::Result<()> {
 
     let seed = f.num("--seed", 42u64)?;
     let testdb = TestDb::builtin();
-    let req = request_for(&testdb, &app, &src, seed, f.has("--pjrt"));
+    let req = request_for(
+        &testdb,
+        &app,
+        &src,
+        seed,
+        f.has("--pjrt"),
+        f.value("--entry"),
+    );
 
     let (rt, art);
     let runtime_pair = if f.has("--pjrt") {
@@ -371,7 +416,7 @@ fn cmd_offload(args: &[String]) -> anyhow::Result<()> {
 fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
     let f = Flags { args };
     let cfg = config_from_flags(&f)?;
-    let choice = BackendChoice::from_flags(&f)?;
+    let mixed = f.has("--mixed");
     let seed = f.num("--seed", 42u64)?;
 
     let specs: Vec<String> = {
@@ -382,42 +427,109 @@ fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
             given.iter().map(|s| s.to_string()).collect()
         }
     };
-
     let testdb = TestDb::builtin();
-    let mut pipeline = Pipeline::new(cfg, choice.as_dyn())
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
-    if let Some(dir) = f.value("--pattern-db") {
-        pipeline = pipeline
-            .with_pattern_db(dir)
-            .with_cache_reuse(f.has("--reuse"));
-    }
 
-    let mut batch = Batch::new(&pipeline);
+    // Backends and pipelines live here so both branches can borrow them.
+    let fpga = fpga_backend();
+    let gpu = gpu_backend();
+    let cpu = cpu_backend();
+    let choice;
+    let (pipelines, label): (Vec<Pipeline>, String) = if mixed {
+        if f.value("--pattern-db").is_some() || f.has("--reuse") {
+            anyhow::bail!(
+                "--mixed re-measures every destination and does not \
+                 combine with --pattern-db/--reuse"
+            );
+        }
+        if f.value("--backend").is_some() {
+            anyhow::bail!(
+                "--mixed always measures fpga+gpu+cpu; drop --backend \
+                 (or drop --mixed for a single-destination batch)"
+            );
+        }
+        // One pipeline per destination; registration order breaks ties
+        // (prefer the paper's FPGA, then the GPU, then the control).
+        let pipes = vec![
+            Pipeline::new(cfg.clone(), &fpga)
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+            Pipeline::new(cfg.clone(), &gpu)
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+            Pipeline::new(cfg, &cpu).map_err(|e| anyhow::anyhow!("{e}"))?,
+        ];
+        (pipes, "mixed fpga+gpu+cpu".to_string())
+    } else {
+        choice = BackendChoice::from_flags(&f)?;
+        let mut pipeline = Pipeline::new(cfg, choice.as_dyn())
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if let Some(dir) = f.value("--pattern-db") {
+            pipeline = pipeline
+                .with_pattern_db(dir)
+                .with_cache_reuse(f.has("--reuse"));
+        }
+        let label = pipeline.backend().name().to_string();
+        (vec![pipeline], label)
+    };
+
+    let mut batch = Batch::mixed(pipelines.iter().collect());
     for spec in &specs {
         let (app, src) = resolve_source(spec)?;
-        batch.push(request_for(&testdb, &app, &src, seed, false));
+        batch.push(request_for(
+            &testdb,
+            &app,
+            &src,
+            seed,
+            false,
+            f.value("--entry"),
+        ));
     }
 
     println!(
-        "batch: {} applications through one automation cycle (backend {})",
+        "batch: {} applications through one automation cycle (backend {label})",
         batch.len(),
-        choice.as_dyn().name()
     );
     let report = batch.run();
 
     for e in &report.entries {
         match (&e.plan, &e.error) {
-            (Some(plan), _) => println!(
-                "  {:<10} best {:<12} {:>6.2}x  automation {:>5.1} h{}",
-                e.app,
-                plan.label(),
-                plan.speedup(),
-                plan.automation_s() / 3600.0,
-                if plan.is_cached() { "  (cached)" } else { "" }
-            ),
+            (Some(plan), _) => {
+                let alternatives = if report.is_mixed() {
+                    let others: Vec<String> = e
+                        .outcomes
+                        .iter()
+                        .filter(|o| Some(o.backend) != e.destination)
+                        .map(|o| match &o.plan {
+                            Some(p) => {
+                                format!("{} {:.2}x", o.backend, p.speedup())
+                            }
+                            None => format!("{} failed", o.backend),
+                        })
+                        .collect();
+                    format!("  ({})", others.join(", "))
+                } else {
+                    String::new()
+                };
+                println!(
+                    "  {:<10} → {:<5} best {:<12} {:>6.2}x  automation {:>5.1} h{}{}",
+                    e.app,
+                    e.destination.unwrap_or("?"),
+                    plan.label(),
+                    plan.speedup(),
+                    plan.automation_s() / 3600.0,
+                    if plan.is_cached() { "  (cached)" } else { "" },
+                    alternatives,
+                );
+            }
             (None, Some(err)) => println!("  {:<10} FAILED: {err}", e.app),
             (None, None) => println!("  {:<10} FAILED", e.app),
         }
+    }
+    if report.is_mixed() {
+        let split: Vec<String> = report
+            .destination_counts()
+            .iter()
+            .map(|(b, n)| format!("{b} {n}"))
+            .collect();
+        println!("destination split: {}", split.join(" / "));
     }
     println!(
         "cycle: {}/{} solved, {} cache hits — automation {:.1} h serial / {:.1} h concurrent",
@@ -633,6 +745,50 @@ mod tests {
             run(&s(&["offload", "sobel", "--backend", "cpu"])),
             0
         );
+    }
+
+    #[test]
+    fn offload_sobel_on_gpu_backend() {
+        assert_eq!(
+            run(&s(&["offload", "sobel", "--backend", "gpu"])),
+            0
+        );
+    }
+
+    #[test]
+    fn mixed_batch_rejects_pattern_db() {
+        assert_eq!(
+            run(&s(&["batch", "sobel", "--mixed", "--pattern-db", "/tmp/x"])),
+            1
+        );
+    }
+
+    #[test]
+    fn mixed_batch_rejects_backend_flag() {
+        assert_eq!(
+            run(&s(&["batch", "sobel", "--mixed", "--backend", "cpu"])),
+            1
+        );
+    }
+
+    #[test]
+    fn mixed_batch_writes_destination_report() {
+        let dir = TempDir::new("fpga-offload-cli-mixed").unwrap();
+        let out = dir.join("mixed.json");
+        let out_s = out.to_string_lossy().into_owned();
+        assert_eq!(
+            run(&s(&["batch", "sobel", "mriq", "--mixed", "--out", &out_s])),
+            0
+        );
+        let text = std::fs::read_to_string(&out).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get(&["mixed"]).unwrap().as_bool(), Some(true));
+        assert_eq!(j.get(&["apps"]).unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get(&["solved"]).unwrap().as_f64(), Some(2.0));
+        let results = j.get(&["results"]).unwrap().as_arr().unwrap();
+        for r in results {
+            assert!(r.get(&["destination"]).unwrap().as_str().is_some());
+        }
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Multi-application batch orchestration: one automation cycle, many
-//! applications.
+//! applications — and, in mixed mode, many destinations.
 //!
 //! The ROADMAP's arXiv:2002.09541 evaluation runs *many* applications
 //! through the environment-adaptive cycle at once — cheap now that the
@@ -9,9 +9,19 @@
 //! concurrently on scoped threads, and aggregates the outcomes into a
 //! [`BatchReport`] with per-app and cycle-level accounting.
 //!
+//! **Mixed destinations** (arXiv:2011.12431): [`Batch::mixed`] registers
+//! one pipeline per destination backend. One cycle then measures every
+//! app against every destination — reusing each backend's own funnel
+//! candidates — and picks the best destination per app by *verified*
+//! speedup: the [`BatchEntry`] carries the winning `destination`, the
+//! winning plan, and the per-destination [`DestinationOutcome`]s, and the
+//! report aggregates the environment's destination split.
+//!
 //! Concurrency does not change results: each app's search is
 //! deterministic under its seed, so a batch entry is identical to
-//! running that app through [`Pipeline::solve`] alone.
+//! running that app through [`Pipeline::solve`] alone on the same
+//! backend. A panicking or failing app degrades to an error entry (or a
+//! lost destination in mixed mode) — it never aborts the cycle.
 
 use std::path::{Path, PathBuf};
 
@@ -19,15 +29,32 @@ use crate::util::json::Json;
 
 use super::pipeline::{OffloadRequest, Pipeline, Plan, Planned};
 
+/// One destination's result for one application in a mixed cycle.
+#[derive(Debug)]
+pub struct DestinationOutcome {
+    /// Backend name ("fpga", "gpu", "cpu").
+    pub backend: &'static str,
+    /// The plan this destination produced, when it solved.
+    pub plan: Option<Plan>,
+    pub stored_at: Option<PathBuf>,
+    /// Stage-tagged error text (or panic message), when it failed.
+    pub error: Option<String>,
+}
+
 /// Outcome of one application in a batch.
 #[derive(Debug)]
 pub struct BatchEntry {
     pub app: String,
-    /// The selected plan, when the app solved.
+    /// Winning destination backend, when any destination solved.
+    pub destination: Option<&'static str>,
+    /// The selected (winning) plan, when the app solved anywhere.
     pub plan: Option<Plan>,
     pub stored_at: Option<PathBuf>,
-    /// Stage-tagged error text, when the app failed.
+    /// Combined error text, when every destination failed.
     pub error: Option<String>,
+    /// Every measured destination, in backend registration order
+    /// (exactly one for a single-backend batch).
+    pub outcomes: Vec<DestinationOutcome>,
 }
 
 impl BatchEntry {
@@ -44,6 +71,13 @@ impl BatchEntry {
             ("app", Json::Str(self.app.clone())),
             ("ok", Json::Bool(self.ok())),
             ("cached", Json::Bool(self.cached())),
+            (
+                "destination",
+                match self.destination {
+                    Some(d) => Json::Str(d.to_string()),
+                    None => Json::Null,
+                },
+            ),
         ];
         match &self.plan {
             Some(plan) => {
@@ -82,6 +116,18 @@ impl BatchEntry {
                 None => Json::Null,
             },
         ));
+        // Per-destination speedups (null where that destination failed).
+        let mut backends = std::collections::BTreeMap::new();
+        for o in &self.outcomes {
+            backends.insert(
+                o.backend.to_string(),
+                match &o.plan {
+                    Some(p) => Json::Num(p.speedup()),
+                    None => Json::Null,
+                },
+            );
+        }
+        fields.push(("backends", Json::Obj(backends)));
         Json::obj(fields)
     }
 }
@@ -90,36 +136,47 @@ impl BatchEntry {
 #[derive(Debug)]
 pub struct BatchReport {
     pub entries: Vec<BatchEntry>,
-    /// Backend that ran the cycle ("fpga", "cpu", ...).
+    /// Backend that ran the cycle ("fpga", "cpu", ... — "mixed" for a
+    /// multi-destination cycle).
     pub backend: &'static str,
+    /// All destination backends measured, in registration order.
+    pub backends: Vec<&'static str>,
     /// Measurement budget per app (`SearchConfig::max_patterns`).
     pub budget_per_app: usize,
-    /// Modeled automation wall clock if the apps ran one after another
-    /// on the shared verification environment, seconds.
+    /// Modeled automation wall clock if all (app × destination)
+    /// measurements ran one after another on the shared verification
+    /// environment, seconds.
     pub serial_automation_s: f64,
-    /// Modeled automation wall clock with the apps' funnels running
-    /// concurrently (the batch's threads): the slowest app bounds the
-    /// cycle, seconds.
+    /// Modeled automation wall clock with all funnels running
+    /// concurrently (the batch's threads): the slowest measurement
+    /// bounds the cycle, seconds.
     pub concurrent_automation_s: f64,
 }
 
 impl BatchReport {
     fn new(
         backend: &'static str,
+        backends: Vec<&'static str>,
         budget_per_app: usize,
         entries: Vec<BatchEntry>,
     ) -> Self {
         let times: Vec<f64> = entries
             .iter()
-            .filter_map(|e| e.plan.as_ref().map(Plan::automation_s))
+            .flat_map(|e| e.outcomes.iter())
+            .filter_map(|o| o.plan.as_ref().map(Plan::automation_s))
             .collect();
         BatchReport {
             backend,
+            backends,
             budget_per_app,
             serial_automation_s: times.iter().sum(),
             concurrent_automation_s: times.iter().fold(0.0, |a, &b| a.max(b)),
             entries,
         }
+    }
+
+    pub fn is_mixed(&self) -> bool {
+        self.backends.len() > 1
     }
 
     pub fn solved(&self) -> usize {
@@ -134,10 +191,41 @@ impl BatchReport {
         self.entries.iter().filter(|e| e.cached()).count()
     }
 
+    /// How many apps each destination won, in backend registration
+    /// order (destinations that won nothing included with 0).
+    pub fn destination_counts(&self) -> Vec<(&'static str, usize)> {
+        self.backends
+            .iter()
+            .map(|&b| {
+                let n = self
+                    .entries
+                    .iter()
+                    .filter(|e| e.destination == Some(b))
+                    .count();
+                (b, n)
+            })
+            .collect()
+    }
+
     /// Serialize for `repro batch --out` and downstream tooling.
     pub fn to_json(&self) -> Json {
+        let mut destinations = std::collections::BTreeMap::new();
+        for (b, n) in self.destination_counts() {
+            destinations.insert(b.to_string(), Json::Num(n as f64));
+        }
         Json::obj(vec![
             ("backend", Json::Str(self.backend.to_string())),
+            ("mixed", Json::Bool(self.is_mixed())),
+            (
+                "backends",
+                Json::Arr(
+                    self.backends
+                        .iter()
+                        .map(|b| Json::Str(b.to_string()))
+                        .collect(),
+                ),
+            ),
+            ("destinations", Json::Obj(destinations)),
             ("apps", Json::Num(self.entries.len() as f64)),
             ("solved", Json::Num(self.solved() as f64)),
             ("failed", Json::Num(self.failed() as f64)),
@@ -171,16 +259,35 @@ impl BatchReport {
     }
 }
 
-/// N applications through one shared pipeline (see module docs).
+/// N applications through one shared pipeline — or through one pipeline
+/// per destination in mixed mode (see module docs).
 pub struct Batch<'a> {
-    pipeline: &'a Pipeline<'a>,
+    pipelines: Vec<&'a Pipeline<'a>>,
     requests: Vec<OffloadRequest>,
 }
 
 impl<'a> Batch<'a> {
+    /// A single-destination batch (the PR-2 shape): every app measured
+    /// on one backend.
     pub fn new(pipeline: &'a Pipeline<'a>) -> Self {
         Batch {
-            pipeline,
+            pipelines: vec![pipeline],
+            requests: Vec::new(),
+        }
+    }
+
+    /// A mixed-destination batch: one pipeline per destination backend.
+    /// Every app is measured against every destination, and the best
+    /// verified speedup picks its destination. Registration order breaks
+    /// ties (put the preferred destination first).
+    ///
+    /// Routing and the report are keyed by [`crate::search::Backend::name`]
+    /// ("fpga", "gpu", "cpu") — register at most one pipeline per backend
+    /// *kind*; two same-kind backends on different boards would collide
+    /// in the per-app `backends` map and the destination split.
+    pub fn mixed(pipelines: Vec<&'a Pipeline<'a>>) -> Self {
+        Batch {
+            pipelines,
             requests: Vec::new(),
         }
     }
@@ -203,52 +310,158 @@ impl<'a> Batch<'a> {
         self.requests.is_empty()
     }
 
-    /// Run every request through stages 1–5, concurrently. One failing
-    /// app does not abort the cycle — its entry carries the error.
+    /// Destination backends this batch measures, in registration order.
+    pub fn backend_names(&self) -> Vec<&'static str> {
+        self.pipelines.iter().map(|p| p.backend().name()).collect()
+    }
+
+    /// Run every (request × destination) through stages 1–5,
+    /// concurrently, then pick each app's destination. One failing or
+    /// *panicking* app does not abort the cycle — its entry carries the
+    /// error and the remaining apps still solve.
     pub fn run(&self) -> BatchReport {
-        let results: Vec<_> = std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .requests
-                .iter()
-                .map(|req| {
-                    let pipe = self.pipeline;
-                    let req = req.clone();
-                    scope.spawn(move || pipe.solve(req))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("batch worker panicked"))
-                .collect()
-        });
+        let results: Vec<Vec<Result<Planned, String>>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<Vec<_>> = self
+                    .requests
+                    .iter()
+                    .map(|req| {
+                        self.pipelines
+                            .iter()
+                            .map(|&pipe| {
+                                let req = req.clone();
+                                scope.spawn(move || pipe.solve(req))
+                            })
+                            .collect()
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|per_app| {
+                        per_app
+                            .into_iter()
+                            .map(|h| match h.join() {
+                                Ok(Ok(planned)) => Ok(planned),
+                                Ok(Err(e)) => Err(e.to_string()),
+                                Err(payload) => Err(format!(
+                                    "worker panicked: {}",
+                                    panic_message(payload.as_ref())
+                                )),
+                            })
+                            .collect()
+                    })
+                    .collect()
+            });
 
         let entries = self
             .requests
             .iter()
             .zip(results)
-            .map(|(req, res)| match res {
-                Ok(Planned {
-                    plan, stored_at, ..
-                }) => BatchEntry {
-                    app: req.app.clone(),
-                    plan: Some(plan),
-                    stored_at,
-                    error: None,
-                },
-                Err(e) => BatchEntry {
-                    app: req.app.clone(),
-                    plan: None,
-                    stored_at: None,
-                    error: Some(e.to_string()),
-                },
+            .map(|(req, per_app)| {
+                let outcomes: Vec<DestinationOutcome> = self
+                    .pipelines
+                    .iter()
+                    .zip(per_app)
+                    .map(|(pipe, res)| match res {
+                        Ok(Planned {
+                            plan, stored_at, ..
+                        }) => DestinationOutcome {
+                            backend: pipe.backend().name(),
+                            plan: Some(plan),
+                            stored_at,
+                            error: None,
+                        },
+                        Err(e) => DestinationOutcome {
+                            backend: pipe.backend().name(),
+                            plan: None,
+                            stored_at: None,
+                            error: Some(e),
+                        },
+                    })
+                    .collect();
+                select_destination(&req.app, outcomes)
             })
             .collect();
 
-        BatchReport::new(
-            self.pipeline.backend().name(),
-            self.pipeline.config().max_patterns,
-            entries,
-        )
+        let backends = self.backend_names();
+        let label = if backends.len() > 1 {
+            "mixed"
+        } else {
+            backends.first().copied().unwrap_or("none")
+        };
+        let budget = self
+            .pipelines
+            .first()
+            .map(|p| p.config().max_patterns)
+            .unwrap_or(0);
+        BatchReport::new(label, backends, budget, entries)
+    }
+}
+
+/// Pick the winning destination for one app: verified plans beat
+/// unverified ones, then higher speedup wins; earlier registration
+/// breaks exact ties.
+fn select_destination(
+    app: &str,
+    outcomes: Vec<DestinationOutcome>,
+) -> BatchEntry {
+    let mut winner: Option<usize> = None;
+    for (i, o) in outcomes.iter().enumerate() {
+        let Some(plan) = &o.plan else { continue };
+        let better = match winner {
+            None => true,
+            Some(w) => {
+                let best = outcomes[w].plan.as_ref().expect("winner solved");
+                (plan.verified_ok() && !best.verified_ok())
+                    || (plan.verified_ok() == best.verified_ok()
+                        && plan.speedup() > best.speedup())
+            }
+        };
+        if better {
+            winner = Some(i);
+        }
+    }
+    match winner {
+        Some(i) => BatchEntry {
+            app: app.to_string(),
+            destination: Some(outcomes[i].backend),
+            plan: outcomes[i].plan.clone(),
+            stored_at: outcomes[i].stored_at.clone(),
+            error: None,
+            outcomes,
+        },
+        None => {
+            let error = outcomes
+                .iter()
+                .map(|o| {
+                    format!(
+                        "{}: {}",
+                        o.backend,
+                        o.error.as_deref().unwrap_or("no plan")
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join("; ");
+            BatchEntry {
+                app: app.to_string(),
+                destination: None,
+                plan: None,
+                stored_at: None,
+                error: Some(error),
+                outcomes,
+            }
+        }
+    }
+}
+
+/// Best-effort text of a worker panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -256,8 +469,11 @@ impl<'a> Batch<'a> {
 mod tests {
     use super::*;
     use crate::cpu::XEON_BRONZE_3104;
+    use crate::gpu::TESLA_T4;
     use crate::hls::ARRIA10_GX;
-    use crate::search::{FpgaBackend, SearchConfig};
+    use crate::search::{
+        Backend, CpuBaseline, FpgaBackend, GpuBackend, SearchConfig,
+    };
 
     const GOOD: &str = "
 #define N 1024
@@ -298,6 +514,9 @@ int main() {
         let bad = &report.entries[1];
         assert_eq!(bad.app, "noloop");
         assert!(bad.error.as_ref().unwrap().contains("funnel"));
+        assert!(bad.destination.is_none());
+        let good = &report.entries[0];
+        assert_eq!(good.destination, Some("fpga"));
     }
 
     #[test]
@@ -321,14 +540,163 @@ int main() {
         assert_eq!(j.get(&["apps"]).unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get(&["solved"]).unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get(&["backend"]).unwrap().as_str(), Some("fpga"));
+        assert_eq!(j.get(&["mixed"]).unwrap().as_bool(), Some(false));
+        assert_eq!(
+            j.get(&["destinations", "fpga"]).unwrap().as_f64(),
+            Some(1.0)
+        );
         let results = j.get(&["results"]).unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 1);
         assert_eq!(
             results[0].get(&["app"]).unwrap().as_str(),
             Some("good")
         );
+        assert_eq!(
+            results[0].get(&["destination"]).unwrap().as_str(),
+            Some("fpga")
+        );
+        assert!(results[0]
+            .get(&["backends", "fpga"])
+            .unwrap()
+            .as_f64()
+            .is_some());
         // Round-trips through the parser.
         let text = j.pretty();
         assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    /// A backend that panics while measuring any program with a global
+    /// named `boom` — the failure-injection seam for the isolation test.
+    struct PanickyBackend<'a>(CpuBaseline<'a>);
+
+    impl Backend for PanickyBackend<'_> {
+        fn name(&self) -> &'static str {
+            "cpu"
+        }
+
+        fn device(&self) -> &crate::hls::Device {
+            self.0.device
+        }
+
+        fn measure(
+            &self,
+            prog: &crate::minic::Program,
+            analysis: &crate::analysis::Analysis,
+            cands: &[crate::search::Candidate],
+            pattern: &crate::search::patterns::Pattern,
+            cfg: &SearchConfig,
+        ) -> Result<
+            crate::search::BackendMeasurement,
+            crate::search::SearchError,
+        > {
+            let has_boom = prog.globals.iter().any(|g| {
+                matches!(
+                    g,
+                    crate::minic::ast::Stmt::Decl { name, .. }
+                        if name == "boom"
+                )
+            });
+            if has_boom {
+                panic!("injected measurement panic");
+            }
+            self.0.measure(prog, analysis, cands, pattern, cfg)
+        }
+
+        fn verify(
+            &self,
+            prog: &crate::minic::Program,
+            cands: &[crate::search::Candidate],
+            pattern: &crate::search::patterns::Pattern,
+            entry: &str,
+            cfg: &SearchConfig,
+        ) -> Result<bool, crate::search::SearchError> {
+            self.0.verify(prog, cands, pattern, entry, cfg)
+        }
+
+        fn deploy_check(
+            &self,
+            sample: &str,
+            env: (&crate::runtime::Runtime, &crate::runtime::Artifacts),
+            seed: u64,
+        ) -> anyhow::Result<crate::runtime::SampleRun> {
+            self.0.deploy_check(sample, env, seed)
+        }
+    }
+
+    #[test]
+    fn panicking_app_degrades_to_an_error_entry() {
+        const BOOM: &str = "
+#define N 512
+float boom[N]; float o[N];
+int main() {
+    for (int i = 0; i < N; i++) { boom[i] = i * 0.01; }
+    for (int i = 0; i < N; i++) { o[i] = sin(boom[i]); }
+    return 0;
+}";
+        let b = PanickyBackend(CpuBaseline {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        });
+        let pipe = Pipeline::new(SearchConfig::default(), &b).unwrap();
+        let report = Batch::new(&pipe)
+            .with(req("good", GOOD))
+            .with(req("boom", BOOM))
+            .run();
+        // The panicking app becomes an error entry; the rest still solve.
+        assert_eq!(report.solved(), 1);
+        assert_eq!(report.failed(), 1);
+        let bad = &report.entries[1];
+        assert_eq!(bad.app, "boom");
+        let err = bad.error.as_ref().unwrap();
+        assert!(err.contains("panicked"), "{err}");
+        assert!(err.contains("injected measurement panic"), "{err}");
+        assert!(report.entries[0].ok());
+    }
+
+    #[test]
+    fn mixed_batch_picks_a_destination_per_app() {
+        let fpga = backend();
+        let gpu = GpuBackend {
+            cpu: &XEON_BRONZE_3104,
+            gpu: &TESLA_T4,
+            device: &ARRIA10_GX,
+        };
+        let cpu = CpuBaseline {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        let pf = Pipeline::new(SearchConfig::default(), &fpga).unwrap();
+        let pg = Pipeline::new(SearchConfig::default(), &gpu).unwrap();
+        let pc = Pipeline::new(SearchConfig::default(), &cpu).unwrap();
+        let report = Batch::mixed(vec![&pf, &pg, &pc])
+            .with(req("good", GOOD))
+            .run();
+        assert!(report.is_mixed());
+        assert_eq!(report.backend, "mixed");
+        assert_eq!(report.backends, vec!["fpga", "gpu", "cpu"]);
+        let entry = &report.entries[0];
+        assert_eq!(entry.outcomes.len(), 3);
+        // Every destination solved this trivially offloadable app...
+        assert!(entry.outcomes.iter().all(|o| o.plan.is_some()));
+        // ...and the winner beats (or equals) the all-CPU control.
+        let dest = entry.destination.unwrap();
+        assert!(dest == "fpga" || dest == "gpu", "picked {dest}");
+        let win = entry.plan.as_ref().unwrap();
+        assert!(win.verified_ok());
+        for o in &entry.outcomes {
+            assert!(
+                win.speedup() >= o.plan.as_ref().unwrap().speedup() - 1e-12
+            );
+        }
+        // The winning destination's result is identical to a solo run on
+        // that backend alone.
+        let solo_pipe = match dest {
+            "fpga" => &pf,
+            "gpu" => &pg,
+            _ => &pc,
+        };
+        let solo = solo_pipe.solve(req("good", GOOD)).unwrap();
+        assert_eq!(win.best_loops(), solo.plan.best_loops());
+        assert!((win.speedup() - solo.plan.speedup()).abs() < 1e-12);
     }
 }

@@ -6,7 +6,9 @@
 //!   one stage per Fig.-1 step, measurement routed through a
 //!   [`crate::search::Backend`].
 //! * [`batch`] — N applications through one shared pipeline per
-//!   automation cycle, funnels running concurrently.
+//!   automation cycle, funnels running concurrently; in mixed mode one
+//!   pipeline per destination backend (FPGA / GPU / CPU), with the best
+//!   verified speedup picking each app's destination.
 //! * [`flow`] — the legacy one-call `run_flow`, now a shim over the
 //!   pipeline.
 //! * [`testdb`] — test-case DB (sample tests per app).
@@ -21,12 +23,12 @@ pub mod patterndb;
 pub mod pipeline;
 pub mod testdb;
 
-pub use batch::{Batch, BatchEntry, BatchReport};
+pub use batch::{Batch, BatchEntry, BatchReport, DestinationOutcome};
 pub use facilitydb::{Facility, FacilityDb, Role};
 pub use flow::{analyze_source, FlowOptions, FlowReport};
 #[allow(deprecated)]
 pub use flow::run_flow;
-pub use patterndb::{PatternDb, StoredPattern};
+pub use patterndb::{PatternDb, ReuseKey, StoredPattern};
 pub use pipeline::{
     source_fingerprint, Analyzed, Candidates, Deployed, Measured,
     OffloadRequest, OffloadRequestBuilder, Parsed, Pipeline, PipelineError,

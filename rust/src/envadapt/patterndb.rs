@@ -3,9 +3,13 @@
 //! Once the verification environment selects a pattern, the solution is
 //! stored so production deployment (and later re-adaptation) can reuse it
 //! without re-searching. File-backed JSON, one file per app. Each record
-//! carries the FNV-1a fingerprint of the source it was searched for, so
-//! the pipeline's plan stage can prove "source unchanged" before reusing
-//! a stored pattern instead of re-running the funnel.
+//! carries the full [`ReuseKey`] it was searched under — source
+//! fingerprint, backend, entry function, destination device, and a
+//! [`crate::search::SearchConfig`] fingerprint — so the pipeline's plan
+//! stage can prove "nothing that shaped this plan has changed" before
+//! reusing it instead of re-running the funnel. Records written before a
+//! key component existed are missing that field and therefore never
+//! match: stale plans degrade to a re-search, never to silent reuse.
 
 use std::path::{Path, PathBuf};
 
@@ -14,6 +18,24 @@ use anyhow::{Context, Result};
 use crate::search::OffloadSolution;
 use crate::util::json::Json;
 
+/// Everything a stored plan's validity depends on. All components must
+/// match for [`crate::envadapt::Pipeline`] to reuse the record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReuseKey {
+    /// FNV-1a fingerprint of the application source.
+    pub source_hash: u64,
+    /// Backend that measured the solution ("fpga", "gpu", "cpu").
+    pub backend: String,
+    /// Entry function the solution was profiled and verified under.
+    pub entry: String,
+    /// Destination device the solution was measured for (the board, not
+    /// the funnel-narrowing model) — a plan searched for an Arria10 says
+    /// nothing about a T4.
+    pub device: String,
+    /// [`crate::search::SearchConfig::fingerprint`] at search time.
+    pub config_fp: u64,
+}
+
 /// Summary of a stored pattern record — enough to reuse the solution
 /// without re-measuring (the full measurement JSON stays on disk).
 #[derive(Debug, Clone, PartialEq)]
@@ -21,16 +43,37 @@ pub struct StoredPattern {
     pub app: String,
     /// Source fingerprint at store time (None for pre-hash records).
     pub source_hash: Option<u64>,
-    /// Backend that measured the solution ("fpga", "cpu"; None for
-    /// pre-hash records). Reuse must not cross backends: a 4x FPGA plan
-    /// is not a CPU-baseline plan.
+    /// Backend that measured the solution ("fpga", "gpu", "cpu"; None
+    /// for pre-hash records). Reuse must not cross backends: a 4x FPGA
+    /// plan is not a CPU-baseline plan.
     pub backend: Option<String>,
     /// Entry function the solution was profiled under.
     pub entry: Option<String>,
+    /// Destination device name (None for pre-device records, which
+    /// never match the reuse check).
+    pub device: Option<String>,
+    /// Search-config fingerprint (None for pre-fingerprint records,
+    /// which never match the reuse check).
+    pub config_fp: Option<u64>,
     /// Offloaded loop ids of the selected pattern.
     pub best_pattern: Vec<u32>,
     pub speedup: f64,
     pub automation_hours: f64,
+    /// Verification outcome of the selected pattern at store time
+    /// (None = verification was off, or a pre-PR-3 record).
+    pub verified: Option<bool>,
+}
+
+impl StoredPattern {
+    /// Whether this record was stored under exactly `key`. Records
+    /// missing any component (older schema) never match.
+    pub fn matches(&self, key: &ReuseKey) -> bool {
+        self.source_hash == Some(key.source_hash)
+            && self.backend.as_deref() == Some(key.backend.as_str())
+            && self.entry.as_deref() == Some(key.entry.as_str())
+            && self.device.as_deref() == Some(key.device.as_str())
+            && self.config_fp == Some(key.config_fp)
+    }
 }
 
 /// File-backed pattern store.
@@ -55,39 +98,60 @@ impl PatternDb {
     }
 
     /// Persist a solution (overwrites any previous one for the app).
+    /// Records stored this way carry no reuse key and are never reused.
     pub fn store(&self, sol: &OffloadSolution) -> Result<PathBuf> {
         self.write_record(sol, None)
     }
 
-    /// Persist a solution together with its reuse key (source
-    /// fingerprint + backend + entry), enabling cache reuse on unchanged
-    /// sources measured for the same destination.
+    /// Persist a solution together with its full [`ReuseKey`], enabling
+    /// cache reuse when source, backend, entry, destination device and
+    /// search config are all unchanged.
     pub fn store_hashed(
         &self,
         sol: &OffloadSolution,
-        source_hash: u64,
-        backend: &str,
-        entry: &str,
+        key: &ReuseKey,
     ) -> Result<PathBuf> {
-        self.write_record(sol, Some((source_hash, backend, entry)))
+        self.write_record(sol, Some(key))
     }
 
     fn write_record(
         &self,
         sol: &OffloadSolution,
-        key: Option<(u64, &str, &str)>,
+        key: Option<&ReuseKey>,
     ) -> Result<PathBuf> {
         let path = self.path_of(&sol.app);
         let mut j = sol.to_json();
-        if let (Json::Obj(map), Some((hash, backend, entry))) = (&mut j, key)
-        {
+        if let Json::Obj(map) = &mut j {
+            // Verification outcome of the *selected* pattern, hoisted to
+            // the top level so a cached plan keeps its verified status
+            // instead of laundering a failed check into "trusted".
+            map.insert(
+                "verified".to_string(),
+                match sol.best_measurement().verified {
+                    Some(v) => Json::Bool(v),
+                    None => Json::Null,
+                },
+            );
+        }
+        if let (Json::Obj(map), Some(key)) = (&mut j, key) {
             // 64-bit hashes don't survive JSON's f64 numbers; store hex.
             map.insert(
                 "source_hash".to_string(),
-                Json::Str(format!("{hash:016x}")),
+                Json::Str(format!("{:016x}", key.source_hash)),
             );
-            map.insert("backend".to_string(), Json::Str(backend.into()));
-            map.insert("entry".to_string(), Json::Str(entry.into()));
+            map.insert(
+                "backend".to_string(),
+                Json::Str(key.backend.clone()),
+            );
+            map.insert("entry".to_string(), Json::Str(key.entry.clone()));
+            map.insert(
+                "device".to_string(),
+                Json::Str(key.device.clone()),
+            );
+            map.insert(
+                "config_fp".to_string(),
+                Json::Str(format!("{:016x}", key.config_fp)),
+            );
         }
         std::fs::write(&path, j.pretty())
             .with_context(|| format!("writing {path:?}"))?;
@@ -130,6 +194,14 @@ impl PatternDb {
                 .get(&["entry"])
                 .and_then(Json::as_str)
                 .map(String::from),
+            device: j
+                .get(&["device"])
+                .and_then(Json::as_str)
+                .map(String::from),
+            config_fp: j
+                .get(&["config_fp"])
+                .and_then(Json::as_str)
+                .and_then(|s| u64::from_str_radix(s, 16).ok()),
             best_pattern: j
                 .get(&["best_pattern"])
                 .and_then(Json::as_arr)
@@ -147,6 +219,7 @@ impl PatternDb {
                 .get(&["automation_hours"])
                 .and_then(Json::as_f64)
                 .unwrap_or(0.0),
+            verified: j.get(&["verified"]).and_then(Json::as_bool),
         };
         Ok(Some(record))
     }
@@ -221,26 +294,58 @@ mod tests {
         assert!(db.load_record("nope").unwrap().is_none());
     }
 
+    fn key() -> ReuseKey {
+        ReuseKey {
+            // A hash beyond f64's 2^53 integer range must survive exactly.
+            source_hash: 0xdead_beef_cafe_f00d_u64,
+            backend: "fpga".into(),
+            entry: "main".into(),
+            device: "Intel PAC Arria10 GX 1150".into(),
+            config_fp: 0xfeed_face_0123_4567_u64,
+        }
+    }
+
     #[test]
     fn hashed_record_roundtrips_the_reuse_key() {
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
         let db = PatternDb::open(dir.path()).unwrap();
-        // A hash beyond f64's 2^53 integer range must survive exactly.
-        let hash = 0xdead_beef_cafe_f00d_u64;
-        db.store_hashed(&dummy_solution("demo"), hash, "fpga", "main")
-            .unwrap();
+        let k = key();
+        db.store_hashed(&dummy_solution("demo"), &k).unwrap();
         let rec = db.load_record("demo").unwrap().unwrap();
-        assert_eq!(rec.source_hash, Some(hash));
+        assert_eq!(rec.source_hash, Some(k.source_hash));
         assert_eq!(rec.backend.as_deref(), Some("fpga"));
         assert_eq!(rec.entry.as_deref(), Some("main"));
+        assert_eq!(rec.device.as_deref(), Some(k.device.as_str()));
+        assert_eq!(rec.config_fp, Some(k.config_fp));
+        assert!(rec.matches(&k));
         assert_eq!(rec.app, "demo");
         assert_eq!(rec.best_pattern, vec![2]);
         assert_eq!(rec.speedup, 4.0);
         assert!((rec.automation_hours - 12.0).abs() < 1e-9);
+        // The selected pattern's verification outcome survives storage.
+        assert_eq!(rec.verified, Some(true));
     }
 
     #[test]
-    fn unhashed_record_has_no_reuse_key() {
+    fn any_changed_key_component_misses() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        let k = key();
+        db.store_hashed(&dummy_solution("demo"), &k).unwrap();
+        let rec = db.load_record("demo").unwrap().unwrap();
+        for changed in [
+            ReuseKey { source_hash: 1, ..k.clone() },
+            ReuseKey { backend: "gpu".into(), ..k.clone() },
+            ReuseKey { entry: "compute".into(), ..k.clone() },
+            ReuseKey { device: "NVIDIA Tesla T4".into(), ..k.clone() },
+            ReuseKey { config_fp: 2, ..k.clone() },
+        ] {
+            assert!(!rec.matches(&changed), "{changed:?}");
+        }
+    }
+
+    #[test]
+    fn unhashed_record_has_no_reuse_key_and_never_matches() {
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
         let db = PatternDb::open(dir.path()).unwrap();
         db.store(&dummy_solution("demo")).unwrap();
@@ -248,5 +353,30 @@ mod tests {
         assert_eq!(rec.source_hash, None);
         assert_eq!(rec.backend, None);
         assert_eq!(rec.entry, None);
+        assert_eq!(rec.device, None);
+        assert_eq!(rec.config_fp, None);
+        assert!(!rec.matches(&key()));
+    }
+
+    #[test]
+    fn pre_device_schema_record_never_matches() {
+        // Simulate a PR-2-era record: source_hash + backend + entry but
+        // no device / config fingerprint. It must be re-searched, never
+        // reused.
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        let k = key();
+        db.store_hashed(&dummy_solution("demo"), &k).unwrap();
+        let path = db.path_of("demo");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let Json::Obj(mut map) = Json::parse(&text).unwrap() else {
+            panic!("record is an object");
+        };
+        map.remove("device");
+        map.remove("config_fp");
+        std::fs::write(&path, Json::Obj(map).pretty()).unwrap();
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert_eq!(rec.source_hash, Some(k.source_hash));
+        assert!(!rec.matches(&k));
     }
 }

@@ -52,7 +52,7 @@ use crate::search::{
     SearchConfig, SearchError,
 };
 
-use super::patterndb::{PatternDb, StoredPattern};
+use super::patterndb::{PatternDb, ReuseKey, StoredPattern};
 use super::testdb::TestCase;
 
 /// FNV-1a fingerprint of an application's source text. Stored with each
@@ -309,6 +309,21 @@ impl Plan {
         }
     }
 
+    /// Whether the selected pattern passed functional verification. A
+    /// plan whose best measurement failed verification is not
+    /// trustworthy — cached plans carry the outcome recorded at store
+    /// time, so reuse cannot launder a failed check. Plans measured with
+    /// verification disabled (`None`) count as ok. The mixed-destination
+    /// selector only routes apps to destinations whose plan holds up.
+    pub fn verified_ok(&self) -> bool {
+        match self {
+            Plan::Fresh(sol) => {
+                sol.best_measurement().verified != Some(false)
+            }
+            Plan::Cached(rec) => rec.verified != Some(false),
+        }
+    }
+
     /// Modeled automation wall clock spent producing this plan, seconds.
     /// Zero for a cache hit — that is the entire point of the DB.
     pub fn automation_s(&self) -> f64 {
@@ -453,6 +468,19 @@ impl<'a> Pipeline<'a> {
         })
     }
 
+    /// The reuse key this pipeline stores records under and demands back
+    /// before replaying one: source hash + backend + entry + destination
+    /// device + search-config fingerprint.
+    fn reuse_key(&self, source_hash: u64, entry: &str) -> ReuseKey {
+        ReuseKey {
+            source_hash,
+            backend: self.backend.name().to_string(),
+            entry: entry.to_string(),
+            device: self.backend.destination().to_string(),
+            config_fp: self.config.fingerprint(),
+        }
+    }
+
     /// Step 5: solution selection, then persistence when a pattern DB is
     /// configured.
     pub fn select(&self, m: Measured) -> Result<Planned, PipelineError> {
@@ -462,14 +490,10 @@ impl<'a> Pipeline<'a> {
             Some(dir) => {
                 let db = PatternDb::open(dir)
                     .map_err(|e| PipelineError::Db(format!("{e:#}")))?;
+                let key = self.reuse_key(m.source_hash, &m.req.entry);
                 Some(
-                    db.store_hashed(
-                        &sol,
-                        m.source_hash,
-                        self.backend.name(),
-                        &m.req.entry,
-                    )
-                    .map_err(|e| PipelineError::Db(format!("{e:#}")))?,
+                    db.store_hashed(&sol, &key)
+                        .map_err(|e| PipelineError::Db(format!("{e:#}")))?,
                 )
             }
             None => None,
@@ -505,10 +529,14 @@ impl<'a> Pipeline<'a> {
         })
     }
 
-    /// Pattern-DB lookup for a parsed request: a stored plan whose reuse
-    /// key (source hash + backend + entry) matches, if cache reuse is
-    /// enabled. A plan measured on another backend or entry point is
-    /// never reused — a 4x FPGA plan says nothing about the CPU baseline.
+    /// Pattern-DB lookup for a parsed request: a stored plan whose full
+    /// reuse key (source hash + backend + entry + destination device +
+    /// config fingerprint) matches, if cache reuse is enabled. A plan
+    /// measured on another backend, entry point, board, or under another
+    /// search configuration is never reused — a 4x FPGA plan says
+    /// nothing about the CPU baseline, an Arria10 plan nothing about a
+    /// T4, and records from before the key carried device/config fields
+    /// never match at all.
     pub fn cached_plan(
         &self,
         parsed: &Parsed,
@@ -527,10 +555,8 @@ impl<'a> Pipeline<'a> {
         else {
             return Ok(None);
         };
-        if rec.source_hash != Some(parsed.source_hash)
-            || rec.backend.as_deref() != Some(self.backend.name())
-            || rec.entry.as_deref() != Some(parsed.req.entry.as_str())
-        {
+        let key = self.reuse_key(parsed.source_hash, &parsed.req.entry);
+        if !rec.matches(&key) {
             return Ok(None);
         }
         let stored_at = Some(db.path_of(&parsed.req.app));

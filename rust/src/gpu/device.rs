@@ -1,0 +1,156 @@
+//! GPU device models (the mixed-destination evaluation's second board).
+//!
+//! The follow-on evaluations (arXiv:2011.12431) put an NVIDIA data-center
+//! board next to the Arria10 in the verification environment. The model
+//! here is deliberately coarse — SM/core counts, clock, memory and PCIe
+//! bandwidth, launch/DMA latencies, and an *automatic-offload* efficiency
+//! factor — because the point is destination *selection*, not cycle
+//! accuracy: what matters is that trig-dense, massively parallel loops
+//! land on the GPU while deep spatialized MAC pipelines stay on the FPGA.
+
+use crate::minic::OpCounts;
+
+/// Static description of a GPU destination.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuDevice {
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub sms: u64,
+    /// FP32 cores per SM.
+    pub cores_per_sm: u64,
+    /// Sustained SM clock, Hz.
+    pub clock_hz: f64,
+    /// Resident threads per SM at full occupancy.
+    pub threads_per_sm: u64,
+    /// Effective device-memory bandwidth, bytes/s.
+    pub mem_bytes_per_sec: f64,
+    /// Effective host↔device bandwidth (PCIe), bytes/s.
+    pub pcie_bytes_per_sec: f64,
+    /// Fixed per-DMA-transfer latency, seconds.
+    pub dma_latency_s: f64,
+    /// Fixed kernel-launch overhead, seconds.
+    pub launch_latency_s: f64,
+    /// Fraction of peak ALU throughput an *automatically* generated
+    /// (OpenACC-style, no hand tuning) kernel sustains.
+    pub auto_efficiency: f64,
+    /// Dependent-chain expansion: issue cycles × this factor is the
+    /// latency of one thread's serial chain (no ILP, exposed memory
+    /// latency at low occupancy).
+    pub latency_expansion: f64,
+    /// Modeled destination build time per pattern, seconds — an nvcc /
+    /// OpenACC compile, not a place-and-route: minutes, not hours.
+    pub build_seconds: f64,
+}
+
+/// NVIDIA Tesla T4 (Turing TU104, the NFV-server inference board of the
+/// mixed-destination papers' era): 40 SMs × 64 FP32 cores, 16 GB GDDR6.
+pub const TESLA_T4: GpuDevice = GpuDevice {
+    name: "NVIDIA Tesla T4",
+    sms: 40,
+    cores_per_sm: 64,
+    clock_hz: 1.59e9,
+    threads_per_sm: 1024,
+    mem_bytes_per_sec: 240.0e9, // ~75% of the 320 GB/s GDDR6 peak
+    pcie_bytes_per_sec: 12.0e9, // PCIe Gen3 x16 effective
+    dma_latency_s: 5.0e-6,
+    launch_latency_s: 5.0e-6,
+    auto_efficiency: 0.25,
+    latency_expansion: 8.0,
+    build_seconds: 60.0,
+};
+
+// Per-op issue costs in SM cycles (per thread, FP32). Transcendentals hit
+// the special-function units — the structural edge over both the CPU
+// (42-cycle libm calls) and the FPGA (CORDIC pipelines burning soft
+// logic): trig-dense loops are where the GPU destination wins.
+const CYC_FADD: f64 = 1.0;
+const CYC_FMUL: f64 = 1.0;
+const CYC_FDIV: f64 = 8.0;
+const CYC_TRIG: f64 = 4.0;
+const CYC_IOP: f64 = 0.5;
+const CYC_CMP: f64 = 0.5;
+const CYC_READ: f64 = 2.0; // coalesced global load, amortized
+const CYC_WRITE: f64 = 2.0;
+
+impl GpuDevice {
+    /// Total FP32 cores.
+    pub fn cores(&self) -> u64 {
+        self.sms * self.cores_per_sm
+    }
+
+    /// Cores an automatically generated kernel effectively keeps busy.
+    pub fn effective_lanes(&self) -> f64 {
+        (self.cores() as f64 * self.auto_efficiency).max(1.0)
+    }
+
+    /// Threads resident across the device at full occupancy.
+    pub fn resident_threads(&self) -> u64 {
+        self.sms * self.threads_per_sm
+    }
+
+    /// Issue cycles for an op-count record (throughput view, one lane).
+    pub fn issue_cycles(&self, ops: &OpCounts) -> f64 {
+        ops.f_add as f64 * CYC_FADD
+            + ops.f_mul as f64 * CYC_FMUL
+            + ops.f_div as f64 * CYC_FDIV
+            + ops.f_trig as f64 * CYC_TRIG
+            + ops.i_op as f64 * CYC_IOP
+            + ops.cmp as f64 * CYC_CMP
+            + ops.reads as f64 * CYC_READ
+            + ops.writes as f64 * CYC_WRITE
+    }
+
+    /// One direction of a host↔device DMA.
+    pub fn dma_time(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.dma_latency_s + bytes as f64 / self.pcie_bytes_per_sec
+    }
+
+    /// Full launch overhead for one kernel invocation moving `bytes_in`
+    /// then `bytes_out`.
+    pub fn launch_overhead(&self, bytes_in: u64, bytes_out: u64) -> f64 {
+        self.launch_latency_s
+            + self.dma_time(bytes_in)
+            + self.dma_time(bytes_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t4_figures_sane() {
+        let g = &TESLA_T4;
+        assert_eq!(g.cores(), 2560);
+        assert_eq!(g.resident_threads(), 40960);
+        assert!(g.effective_lanes() > 100.0);
+        assert!(g.effective_lanes() < g.cores() as f64);
+        assert!(g.build_seconds < 3600.0, "GPU builds are not HLS compiles");
+    }
+
+    #[test]
+    fn trig_is_cheap_relative_to_cpu() {
+        // The SFU edge: a trig op costs 4 issue cycles here vs 42 on the
+        // modeled Xeon — the discriminator that routes trig-dense loops
+        // to the GPU destination.
+        let ops = OpCounts {
+            f_trig: 100,
+            ..Default::default()
+        };
+        let g = &TESLA_T4;
+        assert_eq!(g.issue_cycles(&ops), 400.0);
+    }
+
+    #[test]
+    fn launch_overhead_sums_parts() {
+        let g = &TESLA_T4;
+        let t = g.launch_overhead(1_000, 2_000);
+        let expect =
+            g.launch_latency_s + g.dma_time(1_000) + g.dma_time(2_000);
+        assert!((t - expect).abs() < 1e-12);
+        assert_eq!(g.dma_time(0), 0.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! GPU destination: the mixed-environment board next to the FPGA
+//! (ROADMAP item, arXiv:2011.12431 direction), built as simulation like
+//! [`crate::fpga`].
+//!
+//! * [`device`] — the board model ([`TESLA_T4`]): SMs, clocks,
+//!   bandwidths, launch/DMA latencies, and the automatic-offload
+//!   efficiency factor.
+//! * [`sim`] — the per-pattern performance model: one CUDA thread per
+//!   iteration of the offloaded loop, worst-of (throughput, chain
+//!   latency × waves, memory bandwidth) per launch, PCIe transfers per
+//!   entry.
+//!
+//! **Model assumptions** (kept deliberately coarse — the funnel needs a
+//! *ranking*, not cycle accuracy):
+//!
+//! 1. Automatic offloading does not restructure loops: the annotated
+//!    loop's iterations become the grid; nested loops run serially per
+//!    thread (OpenACC `parallel loop` without `collapse`).
+//! 2. Transcendentals run on the SFUs (4 issue cycles) — the GPU's
+//!    structural edge over the Xeon's 42-cycle libm calls and the
+//!    FPGA's soft-logic CORDIC pipelines.
+//! 3. Carried loops serialize into one thread; reductions pay a 2×
+//!    tree/atomics penalty; only `Independent` loops parallelize fully.
+//! 4. There is no resource-fit failure mode and no hours-long compile:
+//!    a pattern's destination build is ~a minute of nvcc, so GPU
+//!    automation cycles are minutes where FPGA cycles are half a day.
+//!
+//! Functional verification is destination-independent (outlined-kernel
+//! interpretation, [`crate::fpga::exec`]) and is shared by all backends.
+
+pub mod device;
+pub mod sim;
+
+pub use device::{GpuDevice, TESLA_T4};
+pub use sim::simulate;

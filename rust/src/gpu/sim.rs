@@ -1,0 +1,264 @@
+//! GPU performance simulator: the verification-environment measurement
+//! of one offload pattern on a GPU destination, mirroring
+//! [`crate::fpga::sim`] in shape (same [`PatternTiming`] output, same
+//! per-loop `entries × [launch + DMA + compute]` decomposition) but not
+//! in physics.
+//!
+//! Automatic offloading maps the *offloaded loop's own iterations* to
+//! CUDA threads — an OpenACC `parallel loop` on the annotated statement,
+//! no restructuring, no `collapse` — so everything nested inside one
+//! iteration runs serially in its thread. Per launch the model takes the
+//! worst of three bounds:
+//!
+//! * **throughput** — total issue cycles over the lanes an automatically
+//!   generated kernel keeps busy ([`GpuDevice::effective_lanes`]);
+//! * **latency** — one thread's dependent chain
+//!   (`issue × latency_expansion`), times the number of occupancy waves;
+//! * **memory** — subtree bytes over effective device bandwidth.
+//!
+//! Dependence classes from [`crate::analysis::depend`] steer the mapping:
+//! `Independent` parallelizes fully, `Reduction` pays a tree/atomics
+//! factor, and `Carried` loops collapse to a single serial thread — a
+//! GPU catastrophe the funnel's verified speedup will reject, which is
+//! exactly the right answer for a carried loop.
+//!
+//! What this model deliberately has that the FPGA's does not: no resource
+//! fit check (grids always "fit") and no hours-long compile — the
+//! destination build is [`GpuDevice::build_seconds`] of nvcc, so a GPU
+//! automation cycle is minutes, not half a day.
+
+use crate::analysis::{Analysis, Dependence};
+use crate::codegen::KernelIr;
+use crate::cpu::CpuModel;
+use crate::fpga::{subtree_ids, LoopTiming, PatternTiming, SimError};
+use crate::hls::ResourceEstimate;
+use crate::minic::ast::LoopId;
+use crate::minic::OpCounts;
+
+use super::device::GpuDevice;
+
+/// Extra issue/latency factor for reduction loops (tree combine +
+/// atomics on the way out).
+const REDUCTION_PENALTY: f64 = 2.0;
+
+/// Simulate a pattern of offloaded kernels on a GPU destination.
+///
+/// Returns the same [`PatternTiming`] the FPGA simulator produces so the
+/// measurement funnel and the mixed-destination selector can compare the
+/// two directly; `combined` stays at the zero [`ResourceEstimate`] — a
+/// GPU pattern consumes no FPGA fabric.
+pub fn simulate(
+    analysis: &Analysis,
+    kernels: &[KernelIr],
+    cpu: &CpuModel,
+    gpu: &GpuDevice,
+) -> Result<PatternTiming, SimError> {
+    // Disjointness: no offloaded loop may contain another offloaded loop
+    // (same rule as the FPGA destination — one kernel per region).
+    let offloaded: Vec<LoopId> = kernels.iter().map(|k| k.loop_id).collect();
+    for k in kernels {
+        let subtree = subtree_ids(analysis, k.loop_id);
+        for other in &offloaded {
+            if *other != k.loop_id && subtree.contains(other) {
+                return Err(SimError::OverlappingLoops(k.loop_id, *other));
+            }
+        }
+    }
+
+    let cpu_baseline_s = cpu.time(&analysis.profile.total);
+
+    let mut offloaded_ops = OpCounts::default();
+    let mut loops = Vec::new();
+    for k in kernels {
+        let lp = analysis
+            .profile
+            .loop_profile(k.loop_id)
+            .ok_or(SimError::ColdLoop(k.loop_id))?;
+        offloaded_ops = offloaded_ops.plus(&lp.ops);
+
+        let entries = lp.entries.max(1);
+        // Grid size: iterations of the offloaded loop itself per launch.
+        let threads = (lp.trips / entries).max(1);
+        // Issue cycles of one launch's whole subtree, and of one thread.
+        let issue_launch = gpu.issue_cycles(&lp.ops) / entries as f64;
+        let per_thread = issue_launch / threads as f64;
+
+        let penalty = match &k.dependence {
+            Dependence::Reduction(_) => REDUCTION_PENALTY,
+            _ => 1.0,
+        };
+
+        // Throughput bound: lanes cap at both the hardware and the
+        // launch's actual thread count (8 threads use 8 cores, period).
+        let lanes = gpu.effective_lanes().min(threads as f64);
+        let alu_s = issue_launch * penalty / (lanes * gpu.clock_hz);
+
+        // Latency bound: one thread's dependent chain per wave; a
+        // carried loop serializes the entire launch into one chain.
+        let lat_s = match &k.dependence {
+            Dependence::Carried(_) => {
+                issue_launch * gpu.latency_expansion / gpu.clock_hz
+            }
+            _ => {
+                let waves = threads.div_ceil(gpu.resident_threads()).max(1);
+                per_thread * gpu.latency_expansion * penalty
+                    * waves as f64
+                    / gpu.clock_hz
+            }
+        };
+
+        // Memory bound: subtree traffic per launch at device bandwidth.
+        let mem_s = (lp.ops.bytes() as f64 / entries as f64)
+            / gpu.mem_bytes_per_sec;
+
+        let compute_s = alu_s.max(lat_s).max(mem_s) * entries as f64;
+        let transfer_s = entries as f64
+            * gpu.launch_overhead(k.bytes_in(), k.bytes_out());
+
+        loops.push(LoopTiming {
+            loop_id: k.loop_id,
+            entries,
+            slots: threads,
+            compute_s,
+            transfer_s,
+            total_s: compute_s + transfer_s,
+        });
+    }
+
+    let rest_ops = analysis.profile.total.saturating_sub(&offloaded_ops);
+    let cpu_rest_s = cpu.time(&rest_ops);
+    let gpu_s: f64 = loops.iter().map(|l| l.total_s).sum();
+    let pattern_s = cpu_rest_s + gpu_s;
+    let speedup = if pattern_s > 0.0 {
+        cpu_baseline_s / pattern_s
+    } else {
+        f64::INFINITY
+    };
+
+    Ok(PatternTiming {
+        cpu_baseline_s,
+        cpu_rest_s,
+        loops,
+        pattern_s,
+        speedup,
+        combined: ResourceEstimate::default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::codegen::split;
+    use crate::cpu::XEON_BRONZE_3104;
+    use crate::gpu::TESLA_T4;
+    use crate::minic::parse;
+
+    /// A trig-dense wide loop (GPU-friendly), a tiny frequently-entered
+    /// copy loop (transfer-dominated), and a carried recurrence
+    /// (GPU-hostile).
+    const SRC: &str = "
+#define N 4096
+#define REP 64
+float a[N]; float b[N]; float c[N]; float acc[N];
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.0004 - 0.8; }       // L0 init
+    for (int i = 0; i < N; i++) {                                  // L1 trig
+        b[i] = sin(a[i]) * cos(a[i]) + sqrt(a[i] * a[i] + 1.0);
+    }
+    for (int r = 0; r < REP; r++) {                                // L2 outer
+        for (int i = 0; i < 8; i++) { c[i] = b[i]; }               // L3 tiny copy
+    }
+    for (int i = 1; i < N; i++) { acc[i] = acc[i - 1] + b[i]; }    // L4 carried
+    return 0;
+}";
+
+    fn setup() -> (crate::minic::Program, Analysis) {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        (prog, an)
+    }
+
+    fn kernel(
+        prog: &crate::minic::Program,
+        an: &Analysis,
+        id: u32,
+    ) -> KernelIr {
+        split(prog, an.loop_by_id(LoopId(id)).unwrap())
+            .unwrap()
+            .kernel
+    }
+
+    #[test]
+    fn wide_trig_loop_speeds_up() {
+        let (prog, an) = setup();
+        let k = kernel(&prog, &an, 1);
+        let t = simulate(&an, &[k], &XEON_BRONZE_3104, &TESLA_T4).unwrap();
+        assert!(
+            t.speedup > 1.2,
+            "wide trig loop should win on the GPU: {:.2}x",
+            t.speedup
+        );
+        assert_eq!(t.loops[0].entries, 1);
+        assert_eq!(t.loops[0].slots, 4096);
+    }
+
+    #[test]
+    fn frequently_entered_tiny_loop_pays_launch_tax() {
+        let (prog, an) = setup();
+        let k = kernel(&prog, &an, 3);
+        let t = simulate(&an, &[k], &XEON_BRONZE_3104, &TESLA_T4).unwrap();
+        assert_eq!(t.loops[0].entries, 64);
+        // 64 launches of an 8-element copy: transfers dwarf compute and
+        // the pattern must lose.
+        assert!(t.loops[0].transfer_s > t.loops[0].compute_s * 10.0);
+        assert!(t.speedup < 1.0, "got {:.3}x", t.speedup);
+    }
+
+    #[test]
+    fn carried_loop_serializes_and_loses() {
+        let (prog, an) = setup();
+        let k4 = kernel(&prog, &an, 4);
+        assert!(matches!(k4.dependence, Dependence::Carried(_)));
+        let t4 =
+            simulate(&an, &[k4], &XEON_BRONZE_3104, &TESLA_T4).unwrap();
+        // One serial GPU thread is far slower than the Xeon on the same
+        // chain; the carried pattern must not be selected.
+        assert!(t4.speedup < 1.0, "got {:.3}x", t4.speedup);
+        let t1 = simulate(
+            &an,
+            &[kernel(&prog, &an, 1)],
+            &XEON_BRONZE_3104,
+            &TESLA_T4,
+        )
+        .unwrap();
+        assert!(t1.loops[0].compute_s < t4.loops[0].compute_s);
+    }
+
+    #[test]
+    fn overlapping_pattern_rejected() {
+        let (prog, an) = setup();
+        let k2 = kernel(&prog, &an, 2);
+        let k3 = kernel(&prog, &an, 3);
+        let err = simulate(&an, &[k2, k3], &XEON_BRONZE_3104, &TESLA_T4)
+            .unwrap_err();
+        assert!(matches!(err, SimError::OverlappingLoops(..)));
+    }
+
+    #[test]
+    fn empty_pattern_is_baseline() {
+        let (_prog, an) = setup();
+        let t = simulate(&an, &[], &XEON_BRONZE_3104, &TESLA_T4).unwrap();
+        assert!((t.speedup - 1.0).abs() < 1e-9);
+        assert_eq!(t.loops.len(), 0);
+        assert_eq!(t.combined, ResourceEstimate::default());
+    }
+
+    #[test]
+    fn gpu_pattern_consumes_no_fpga_fabric() {
+        let (prog, an) = setup();
+        let k = kernel(&prog, &an, 1);
+        let t = simulate(&an, &[k], &XEON_BRONZE_3104, &TESLA_T4).unwrap();
+        assert_eq!(t.combined, ResourceEstimate::default());
+    }
+}

@@ -16,8 +16,9 @@
 //! 5. [`search`] runs the paper's narrowing funnel — top-A arithmetic
 //!    intensity, top-C resource efficiency, ≤D measured patterns (singles
 //!    then combinations) — measuring each pattern through a pluggable
-//!    [`search::Backend`] (the [`fpga`] simulator by default) inside the
-//!    verification environment.
+//!    [`search::Backend`] inside the verification environment: the
+//!    [`fpga`] simulator (the paper's destination), the [`gpu`] model
+//!    (the mixed-environment board), or the CPU control.
 //! 6. [`envadapt`] wires the above into the Fig.-1 environment-adaptive
 //!    software flow as the staged [`envadapt::Pipeline`] (one typed stage
 //!    per Fig.-1 step), with [`envadapt::Batch`] orchestration for
@@ -35,6 +36,7 @@ pub mod codegen;
 pub mod cpu;
 pub mod envadapt;
 pub mod fpga;
+pub mod gpu;
 pub mod hls;
 pub mod minic;
 pub mod runtime;
@@ -43,6 +45,6 @@ pub mod util;
 pub mod workloads;
 
 pub use envadapt::{Batch, BatchReport, OffloadRequest, Pipeline};
-pub use search::backend::{Backend, CpuBaseline, FpgaBackend};
+pub use search::backend::{Backend, CpuBaseline, FpgaBackend, GpuBackend};
 pub use search::config::SearchConfig;
 pub use search::result::{OffloadSolution, PatternMeasurement};

@@ -18,10 +18,10 @@
 //!   check (the PJRT sample test for destinations that have real
 //!   artifacts).
 //!
-//! Implementations: [`FpgaBackend`] (the paper's path) and
+//! Implementations: [`FpgaBackend`] (the paper's path), [`GpuBackend`]
+//! (the mixed-environment board, measured by [`crate::gpu::sim`]) and
 //! [`CpuBaseline`] (a control destination that offloads nothing — the
-//! all-CPU denominator as a first-class backend). A GPU backend slots in
-//! here without touching the funnel or the pipeline.
+//! all-CPU denominator as a first-class backend).
 //!
 //! Backends are `Sync`: the verification environment's worker pool and
 //! the batch orchestrator share one backend across threads.
@@ -29,6 +29,7 @@
 use crate::analysis::Analysis;
 use crate::cpu::CpuModel;
 use crate::fpga::{self, verify_pattern_with, PatternTiming};
+use crate::gpu::{self, GpuDevice};
 use crate::hls::{full_compile_seconds, Device, ResourceEstimate};
 use crate::minic::Program;
 use crate::runtime::{self, Artifacts, Runtime, SampleRun};
@@ -49,12 +50,23 @@ pub struct BackendMeasurement {
 
 /// A measurement/verification/deployment destination (see module docs).
 pub trait Backend: Sync {
-    /// Short identifier used in reports and CLI flags ("fpga", "cpu").
+    /// Short identifier used in reports and CLI flags ("fpga", "gpu",
+    /// "cpu").
     fn name(&self) -> &'static str;
 
     /// The device whose resource model narrows the funnel (pre-compile
     /// estimates are destination-specific even when execution is not).
     fn device(&self) -> &Device;
+
+    /// Name of the physical destination a plan is measured for — part of
+    /// the pattern-DB reuse key, so a plan searched for one board is
+    /// never replayed on another. Defaults to the funnel device's name;
+    /// backends whose funnel device is only a stand-in (the GPU narrows
+    /// with the FPGA resource model to keep candidate sets comparable)
+    /// must override it.
+    fn destination(&self) -> &'static str {
+        self.device().name
+    }
 
     /// Step 4: performance-measure one offload pattern.
     fn measure(
@@ -66,12 +78,15 @@ pub trait Backend: Sync {
         cfg: &SearchConfig,
     ) -> Result<BackendMeasurement, SearchError>;
 
-    /// Step 4: functionally verify the offloaded program.
+    /// Step 4: functionally verify the offloaded program against the
+    /// unmodified baseline, both running `entry` — the same entry the
+    /// profiling run used, never a hard-coded `main`.
     fn verify(
         &self,
         prog: &Program,
         cands: &[Candidate],
         pattern: &Pattern,
+        entry: &str,
         cfg: &SearchConfig,
     ) -> Result<bool, SearchError>;
 
@@ -130,13 +145,92 @@ impl Backend for FpgaBackend<'_> {
         prog: &Program,
         cands: &[Candidate],
         pattern: &Pattern,
+        entry: &str,
         cfg: &SearchConfig,
     ) -> Result<bool, SearchError> {
         let splits: Vec<_> = pattern
             .iter()
             .map(|&i| cands[i].split.clone())
             .collect();
-        let v = verify_pattern_with(prog, &splits, "main", cfg.engine)
+        let v = verify_pattern_with(prog, &splits, entry, cfg.engine)
+            .map_err(SearchError::Interp)?;
+        Ok(v.passed)
+    }
+
+    fn deploy_check(
+        &self,
+        sample: &str,
+        env: (&Runtime, &Artifacts),
+        seed: u64,
+    ) -> anyhow::Result<SampleRun> {
+        let (rt, art) = env;
+        runtime::run_app(rt, art, sample, seed)
+    }
+}
+
+/// The mixed-environment GPU destination (ROADMAP / arXiv:2011.12431):
+/// measured by the [`crate::gpu::sim`] occupancy/roofline model, verified
+/// by the same outlined-kernel interpretation as every destination, and
+/// deploy-checked by the PJRT sample test. The funnel narrows with the
+/// FPGA resource model (`device`) so all destinations rank the *same*
+/// candidate set and the mixed-destination selector compares like with
+/// like.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuBackend<'a> {
+    pub cpu: &'a CpuModel,
+    pub gpu: &'a GpuDevice,
+    /// Funnel-narrowing device model only; the destination is `gpu`.
+    pub device: &'a Device,
+}
+
+impl Backend for GpuBackend<'_> {
+    fn name(&self) -> &'static str {
+        "gpu"
+    }
+
+    fn device(&self) -> &Device {
+        self.device
+    }
+
+    fn destination(&self) -> &'static str {
+        self.gpu.name
+    }
+
+    fn measure(
+        &self,
+        _prog: &Program,
+        analysis: &Analysis,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        _cfg: &SearchConfig,
+    ) -> Result<BackendMeasurement, SearchError> {
+        let kernels: Vec<_> = pattern
+            .iter()
+            .map(|&i| cands[i].split.kernel.clone())
+            .collect();
+        let timing = gpu::simulate(analysis, &kernels, self.cpu, self.gpu)
+            .map_err(SearchError::Sim)?;
+        // No place-and-route on this destination: the build is an
+        // nvcc/OpenACC compile, minutes not hours.
+        Ok(BackendMeasurement {
+            timing,
+            compile_s: self.gpu.build_seconds,
+        })
+    }
+
+    fn verify(
+        &self,
+        prog: &Program,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        entry: &str,
+        cfg: &SearchConfig,
+    ) -> Result<bool, SearchError> {
+        let splits: Vec<_> = pattern
+            .iter()
+            .map(|&i| cands[i].split.clone())
+            .collect();
+        let v = verify_pattern_with(prog, &splits, entry, cfg.engine)
             .map_err(SearchError::Interp)?;
         Ok(v.passed)
     }
@@ -175,6 +269,11 @@ impl Backend for CpuBaseline<'_> {
         self.device
     }
 
+    fn destination(&self) -> &'static str {
+        // The funnel device is only a stand-in; nothing leaves the CPU.
+        self.cpu.name
+    }
+
     fn measure(
         &self,
         _prog: &Program,
@@ -202,13 +301,14 @@ impl Backend for CpuBaseline<'_> {
         prog: &Program,
         cands: &[Candidate],
         pattern: &Pattern,
+        entry: &str,
         cfg: &SearchConfig,
     ) -> Result<bool, SearchError> {
         let splits: Vec<_> = pattern
             .iter()
             .map(|&i| cands[i].split.clone())
             .collect();
-        let v = verify_pattern_with(prog, &splits, "main", cfg.engine)
+        let v = verify_pattern_with(prog, &splits, entry, cfg.engine)
             .map_err(SearchError::Interp)?;
         Ok(v.passed)
     }
@@ -263,7 +363,26 @@ int main() {
         let m = b.measure(&prog, &an, &cands, &vec![0], &cfg).unwrap();
         assert!(m.timing.speedup > 0.0);
         assert!(m.compile_s > 0.0);
-        assert!(b.verify(&prog, &cands, &vec![0], &cfg).unwrap());
+        assert!(b.verify(&prog, &cands, &vec![0], "main", &cfg).unwrap());
+    }
+
+    #[test]
+    fn gpu_backend_measures_and_verifies() {
+        let (prog, an, cands) = setup();
+        let b = GpuBackend {
+            cpu: &XEON_BRONZE_3104,
+            gpu: &crate::gpu::TESLA_T4,
+            device: &ARRIA10_GX,
+        };
+        let cfg = SearchConfig::default();
+        let m = b.measure(&prog, &an, &cands, &vec![0], &cfg).unwrap();
+        assert!(m.timing.speedup > 0.0);
+        // GPU builds are minutes (nvcc), not the FPGA's hours.
+        assert!(m.compile_s > 0.0);
+        assert!(m.compile_s < 3600.0);
+        assert!(b.verify(&prog, &cands, &vec![0], "main", &cfg).unwrap());
+        assert_eq!(b.name(), "gpu");
+        assert_eq!(b.destination(), crate::gpu::TESLA_T4.name);
     }
 
     #[test]
@@ -278,13 +397,49 @@ int main() {
         assert_eq!(m.timing.speedup, 1.0);
         assert_eq!(m.compile_s, 0.0);
         assert_eq!(m.timing.cpu_baseline_s, m.timing.pattern_s);
-        assert!(b.verify(&prog, &cands, &vec![0], &cfg).unwrap());
+        assert!(b.verify(&prog, &cands, &vec![0], "main", &cfg).unwrap());
     }
 
     #[test]
-    fn backend_names_are_distinct() {
+    fn verify_runs_the_requested_entry() {
+        // A program whose loops live under a non-`main` entry: with the
+        // old hard-coded "main" this verified the wrong function (or
+        // failed outright when no `main` existed).
+        const ENTRY_SRC: &str = "
+#define N 256
+float a[N]; float out[N];
+int compute() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.01 - 1.0; }
+    for (int i = 0; i < N; i++) { out[i] = sin(a[i]) * 2.0; }
+    return 0;
+}";
+        let prog = parse(ENTRY_SRC).unwrap();
+        let an = analyze(&prog, "compute").unwrap();
+        let (cands, _trace) =
+            funnel::run(&prog, &an, &SearchConfig::default(), &ARRIA10_GX)
+                .unwrap();
+        let b = FpgaBackend {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        let cfg = SearchConfig::default();
+        assert!(b
+            .verify(&prog, &cands, &vec![0], "compute", &cfg)
+            .unwrap());
+        // The old behavior is now an explicit error, not a silent wrong
+        // answer: "main" does not exist in this program.
+        assert!(b.verify(&prog, &cands, &vec![0], "main", &cfg).is_err());
+    }
+
+    #[test]
+    fn backend_names_and_destinations_are_distinct() {
         let f = FpgaBackend {
             cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        let g = GpuBackend {
+            cpu: &XEON_BRONZE_3104,
+            gpu: &crate::gpu::TESLA_T4,
             device: &ARRIA10_GX,
         };
         let c = CpuBaseline {
@@ -292,6 +447,14 @@ int main() {
             device: &ARRIA10_GX,
         };
         assert_ne!(f.name(), c.name());
+        assert_ne!(f.name(), g.name());
+        assert_ne!(g.name(), c.name());
+        // All three narrow the funnel with the same device model, but
+        // their *destinations* (the pattern-DB key) differ.
         assert_eq!(f.device().name, c.device().name);
+        assert_eq!(f.device().name, g.device().name);
+        assert_eq!(f.destination(), ARRIA10_GX.name);
+        assert_eq!(g.destination(), crate::gpu::TESLA_T4.name);
+        assert_eq!(c.destination(), XEON_BRONZE_3104.name);
     }
 }

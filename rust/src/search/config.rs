@@ -53,6 +53,30 @@ impl Default for SearchConfig {
 }
 
 impl SearchConfig {
+    /// Stable FNV-1a fingerprint over every search-relevant knob. Stored
+    /// with each pattern-DB record: a plan searched under one
+    /// configuration (budget, narrowing widths, engine, ...) must not be
+    /// silently reused after the configuration changes.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::Hasher;
+        let canonical = format!(
+            "a={};b={};c={};r={};d={};cap={:016x};m={};t={:016x};v={};e={:?}",
+            self.top_a,
+            self.unroll,
+            self.top_c,
+            self.first_round,
+            self.max_patterns,
+            self.resource_cap.to_bits(),
+            self.build_machines,
+            self.measure_seconds.to_bits(),
+            self.verify_numerics,
+            self.engine,
+        );
+        let mut h = crate::util::fnv::FnvHasher::default();
+        h.write(canonical.as_bytes());
+        h.finish()
+    }
+
     /// Validate the invariants the funnel relies on.
     pub fn validate(&self) -> Result<(), String> {
         if self.top_a == 0 {
@@ -95,6 +119,33 @@ mod tests {
         assert_eq!(c.first_round, 3);
         assert_eq!(c.max_patterns, 4);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_knob_sensitive() {
+        let base = SearchConfig::default();
+        assert_eq!(base.fingerprint(), SearchConfig::default().fingerprint());
+        for changed in [
+            SearchConfig { top_a: 4, ..base.clone() },
+            SearchConfig { unroll: 2, ..base.clone() },
+            SearchConfig { top_c: 2, ..base.clone() },
+            SearchConfig { first_round: 2, ..base.clone() },
+            SearchConfig { max_patterns: 5, ..base.clone() },
+            SearchConfig { resource_cap: 0.9, ..base.clone() },
+            SearchConfig { build_machines: 2, ..base.clone() },
+            SearchConfig { measure_seconds: 60.0, ..base.clone() },
+            SearchConfig { verify_numerics: false, ..base.clone() },
+            SearchConfig {
+                engine: EngineKind::TreeWalk,
+                ..base.clone()
+            },
+        ] {
+            assert_ne!(
+                changed.fingerprint(),
+                base.fingerprint(),
+                "{changed:?}"
+            );
+        }
     }
 
     #[test]

@@ -84,7 +84,10 @@ fn measure_one(
     let bm = backend.measure(prog, analysis, cands, pattern, cfg)?;
 
     let verified = if cfg.verify_numerics {
-        Some(backend.verify(prog, cands, pattern, cfg)?)
+        // Verify under the entry the profiling run executed — requests
+        // with a non-`main` entry must be checked against *their own*
+        // entry function.
+        Some(backend.verify(prog, cands, pattern, &analysis.entry, cfg)?)
     } else {
         None
     };

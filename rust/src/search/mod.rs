@@ -5,7 +5,8 @@
 //! * [`patterns`] — single + combination pattern generation with the
 //!   resource-cap rule.
 //! * [`backend`] — the destination seam: measurement, verification and
-//!   deploy-check per target ([`FpgaBackend`], [`CpuBaseline`]).
+//!   deploy-check per target ([`FpgaBackend`], [`GpuBackend`],
+//!   [`CpuBaseline`]).
 //! * [`measure`] — the verification environment: worker-pool measurement,
 //!   two rounds, best-pattern selection, automation-time accounting.
 //! * [`ga`] — the previous work's GA strategy \[32\], as the comparison
@@ -19,7 +20,9 @@ pub mod measure;
 pub mod patterns;
 pub mod result;
 
-pub use backend::{Backend, BackendMeasurement, CpuBaseline, FpgaBackend};
+pub use backend::{
+    Backend, BackendMeasurement, CpuBaseline, FpgaBackend, GpuBackend,
+};
 pub use config::SearchConfig;
 pub use funnel::{Candidate, FunnelError};
 pub use ga::{GaConfig, GaResult};

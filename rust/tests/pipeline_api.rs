@@ -8,7 +8,12 @@
 //!   see the `compile_fail` doctest on `envadapt::pipeline`),
 //! * batch determinism under a fixed seed — a batch entry must equal an
 //!   individually-run pipeline solution,
-//! * pattern-DB cache reuse keyed on the source hash,
+//! * pattern-DB cache reuse keyed on the full reuse key (source hash +
+//!   backend + entry + destination device + config fingerprint), and
+//!   cache *invalidation* when the device or config changes,
+//! * end-to-end offload of a request with a non-`main` entry,
+//! * mixed-destination batches routing each app to its best verified
+//!   destination (FPGA / GPU / CPU),
 //! * `run_flow` shim equivalence against the staged pipeline.
 
 #![allow(deprecated)]
@@ -18,8 +23,11 @@ use fpga_offload::envadapt::{
     run_flow, Batch, FlowOptions, OffloadRequest, Pipeline, PipelineError,
     TestDb,
 };
-use fpga_offload::hls::ARRIA10_GX;
-use fpga_offload::search::{CpuBaseline, FpgaBackend, SearchConfig};
+use fpga_offload::gpu::TESLA_T4;
+use fpga_offload::hls::{Device, ARRIA10_GX};
+use fpga_offload::search::{
+    CpuBaseline, FpgaBackend, GpuBackend, SearchConfig,
+};
 use fpga_offload::util::tempdir::TempDir;
 use fpga_offload::workloads;
 
@@ -27,6 +35,21 @@ const SEED: u64 = 1234;
 
 fn fpga_backend() -> FpgaBackend<'static> {
     FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    }
+}
+
+fn gpu_backend() -> GpuBackend<'static> {
+    GpuBackend {
+        cpu: &XEON_BRONZE_3104,
+        gpu: &TESLA_T4,
+        device: &ARRIA10_GX,
+    }
+}
+
+fn cpu_backend() -> CpuBaseline<'static> {
+    CpuBaseline {
         cpu: &XEON_BRONZE_3104,
         device: &ARRIA10_GX,
     }
@@ -195,6 +218,190 @@ fn cache_reuse_is_keyed_on_source_hash() {
         .unwrap()
         .plan
         .is_cached());
+}
+
+/// A workload whose loops live under a non-`main` entry — there is no
+/// `main` at all, so the old hard-coded-`"main"` verification would have
+/// failed the whole pipeline instead of verifying `run_filter`.
+const NON_MAIN_SRC: &str = "
+#define N 1024
+#define K 8
+#define NK 1016
+float x[N]; float h[K]; float y[N];
+int run_filter() {
+    for (int i = 0; i < N; i++) { x[i] = i * 0.003 - 1.4; }
+    for (int k = 0; k < K; k++) { h[k] = (k % 3) * 0.2 + 0.1; }
+    for (int n = 0; n < NK; n++) {
+        float acc = 0.0;
+        for (int k = 0; k < K; k++) {
+            acc += h[k] * sin(x[n + k]);
+        }
+        y[n] = acc;
+    }
+    return 0;
+}";
+
+#[test]
+fn non_main_entry_offloads_end_to_end() {
+    let backend = fpga_backend();
+    let pipe = Pipeline::new(SearchConfig::default(), &backend).unwrap();
+    let req = OffloadRequest::builder("filterbank")
+        .source(NON_MAIN_SRC)
+        .entry("run_filter")
+        .seed(SEED)
+        .build()
+        .unwrap();
+    let planned = pipe.solve(req).unwrap();
+    let sol = planned.plan.solution().expect("fresh plan");
+    // Every measured pattern was functionally verified — against
+    // `run_filter`, the only entry this program has.
+    assert!(!sol.measurements.is_empty());
+    for m in &sol.measurements {
+        assert_eq!(m.verified, Some(true), "{}", m.label());
+    }
+    assert!(planned.plan.speedup() > 0.5);
+
+    // The same request on the GPU destination also verifies end to end.
+    let gpu = gpu_backend();
+    let gpipe = Pipeline::new(SearchConfig::default(), &gpu).unwrap();
+    let greq = OffloadRequest::builder("filterbank")
+        .source(NON_MAIN_SRC)
+        .entry("run_filter")
+        .seed(SEED)
+        .build()
+        .unwrap();
+    let gplanned = gpipe.solve(greq).unwrap();
+    let gsol = gplanned.plan.solution().expect("fresh plan");
+    for m in &gsol.measurements {
+        assert_eq!(m.verified, Some(true), "gpu {}", m.label());
+    }
+}
+
+/// The complement of the reuse tests: a stored plan must be *invalidated*
+/// when the destination device changes, even though app, source, backend
+/// name, entry and config all stay the same.
+#[test]
+fn cache_invalidated_on_device_change() {
+    let dir = TempDir::new("fpga-offload-cache-dev").unwrap();
+    let backend = fpga_backend();
+    let pipe = Pipeline::new(SearchConfig::default(), &backend)
+        .unwrap()
+        .with_pattern_db(dir.path())
+        .with_cache_reuse(true);
+    assert!(!pipe.solve(bundled_request("sobel")).unwrap().plan.is_cached());
+    assert!(pipe.solve(bundled_request("sobel")).unwrap().plan.is_cached());
+
+    // Same backend name ("fpga"), different board.
+    let rev_b = Device {
+        name: "Intel PAC Arria10 GX 1150 (rev B)",
+        ..ARRIA10_GX
+    };
+    let backend_b = FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &rev_b,
+    };
+    let pipe_b = Pipeline::new(SearchConfig::default(), &backend_b)
+        .unwrap()
+        .with_pattern_db(dir.path())
+        .with_cache_reuse(true);
+    let plan_b = pipe_b.solve(bundled_request("sobel")).unwrap();
+    assert!(
+        !plan_b.plan.is_cached(),
+        "a plan searched for one device must not be replayed on another"
+    );
+}
+
+/// ... and when the search configuration changes.
+#[test]
+fn cache_invalidated_on_config_change() {
+    let dir = TempDir::new("fpga-offload-cache-cfg").unwrap();
+    let backend = fpga_backend();
+    let pipe = Pipeline::new(SearchConfig::default(), &backend)
+        .unwrap()
+        .with_pattern_db(dir.path())
+        .with_cache_reuse(true);
+    assert!(!pipe.solve(bundled_request("sobel")).unwrap().plan.is_cached());
+    assert!(pipe.solve(bundled_request("sobel")).unwrap().plan.is_cached());
+
+    let tighter = SearchConfig {
+        max_patterns: 3,
+        ..Default::default()
+    };
+    let pipe_cfg = Pipeline::new(tighter, &backend)
+        .unwrap()
+        .with_pattern_db(dir.path())
+        .with_cache_reuse(true);
+    let plan_cfg = pipe_cfg.solve(bundled_request("sobel")).unwrap();
+    assert!(
+        !plan_cfg.plan.is_cached(),
+        "a plan searched under one config must not survive a config change"
+    );
+}
+
+/// The mixed-destination acceptance check: one cycle over the bundled
+/// workloads routes every app to a destination, the FPGA entries are
+/// identical to solo FPGA runs, and across the workload set both real
+/// destinations win at least one app (the Sobel stencil's sqrt-per-pixel
+/// parallelism suits the T4; the tdfir K-tap MAC suits the Arria10's
+/// spatialized pipeline).
+#[test]
+fn mixed_batch_routes_each_app_to_its_best_destination() {
+    let fpga = fpga_backend();
+    let gpu = gpu_backend();
+    let cpu = cpu_backend();
+    let pf = Pipeline::new(SearchConfig::default(), &fpga).unwrap();
+    let pg = Pipeline::new(SearchConfig::default(), &gpu).unwrap();
+    let pc = Pipeline::new(SearchConfig::default(), &cpu).unwrap();
+
+    let mut batch = Batch::mixed(vec![&pf, &pg, &pc]);
+    for app in workloads::APPS {
+        batch.push(bundled_request(app));
+    }
+    let report = batch.run();
+    assert!(report.is_mixed());
+    assert_eq!(report.solved(), workloads::APPS.len());
+
+    for (app, entry) in workloads::APPS.iter().zip(&report.entries) {
+        assert_eq!(&entry.app, app);
+        let dest = entry.destination.expect("every app routed");
+        let win = entry.plan.as_ref().unwrap();
+        assert!(win.verified_ok(), "{app}: unverified winner");
+        // The winner is at least as fast as every other destination.
+        for o in &entry.outcomes {
+            if let Some(p) = &o.plan {
+                assert!(
+                    win.speedup() >= p.speedup() - 1e-12,
+                    "{app}: {dest} lost to {}",
+                    o.backend
+                );
+            }
+        }
+        // Solo-run equivalence on the FPGA destination (outcome 0): the
+        // mixed cycle must not perturb single-backend results.
+        let fpga_outcome = &entry.outcomes[0];
+        assert_eq!(fpga_outcome.backend, "fpga");
+        let fpga_plan = fpga_outcome.plan.as_ref().unwrap();
+        let solo = pf.solve(bundled_request(app)).unwrap();
+        assert_eq!(fpga_plan.best_loops(), solo.plan.best_loops());
+        assert!(
+            (fpga_plan.speedup() - solo.plan.speedup()).abs() < 1e-12,
+            "{app}: mixed fpga outcome differs from solo run"
+        );
+    }
+
+    let dests: Vec<_> = report
+        .entries
+        .iter()
+        .filter_map(|e| e.destination)
+        .collect();
+    assert!(
+        dests.contains(&"fpga"),
+        "no app landed on the FPGA: {dests:?}"
+    );
+    assert!(
+        dests.contains(&"gpu"),
+        "no app landed on the GPU: {dests:?}"
+    );
 }
 
 #[test]
