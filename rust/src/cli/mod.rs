@@ -5,9 +5,9 @@
 //!               [--top-c N] [--max-patterns D] [--machines N]
 //!               [--pattern-db DIR] [--reuse] [--pjrt] [--no-verify]
 //!               [--engine interp|vm] [--backend fpga|gpu|cpu]
-//!               [--entry FN]
+//!               [--entry FN] [--func-blocks]
 //! repro batch [apps...] [--out FILE] [--pattern-db DIR] [--reuse]
-//!             [--backend fpga|gpu|cpu] [--mixed]
+//!             [--backend fpga|gpu|cpu] [--mixed] [--func-blocks]
 //!             + the offload search flags
 //! repro analyze <app|file.c>       loop table + intensity ranking
 //! repro estimate <app|file.c> [--unroll B]   pre-compile reports (top-A)
@@ -89,6 +89,11 @@ fn print_usage() {
              --entry FN           entry function for profiling and\n\
                                   verification (default: test-case DB\n\
                                   entry, else main)\n\
+             --func-blocks        detect whole algorithmic blocks (FIR,\n\
+                                  matmul, stencil, sqrt-magnitude), confirm\n\
+                                  them by VM sample test, and replace them\n\
+                                  with catalogued IP cores before the loop\n\
+                                  funnel runs\n\
              --top-a N            intensity narrowing (default 5)\n\
              --unroll B           loop expansion factor (default 1)\n\
              --top-c N            resource-efficiency narrowing (default 3)\n\
@@ -106,6 +111,8 @@ fn print_usage() {
              --mixed              measure every app on fpga+gpu+cpu and\n\
                                   route each to its best verified speedup\n\
                                   (per-app `destination` in the report)\n\
+             --func-blocks        enable the function-block path for\n\
+                                  every app in the cycle\n\
              --out FILE           batch-report JSON path\n\
                                   (default batch_report.json)\n\
              + the offload flags above (except --explain/--pjrt)\n\
@@ -301,6 +308,7 @@ fn request_for(
     seed: u64,
     pjrt: bool,
     entry_override: Option<&str>,
+    func_blocks: bool,
 ) -> OffloadRequest {
     let mut req = match testdb.get(app) {
         Some(case) => OffloadRequest::from_case(case, src),
@@ -310,9 +318,11 @@ fn request_for(
             entry: "main".into(),
             pjrt_sample: None,
             seed,
+            func_blocks: false,
         },
     };
     req.seed = seed;
+    req.func_blocks = func_blocks;
     if let Some(entry) = entry_override {
         req.entry = entry.to_string();
     }
@@ -340,6 +350,7 @@ fn cmd_offload(args: &[String]) -> anyhow::Result<()> {
         seed,
         f.has("--pjrt"),
         f.value("--entry"),
+        f.has("--func-blocks"),
     );
 
     let (rt, art);
@@ -365,6 +376,26 @@ fn cmd_offload(args: &[String]) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!("{e}"))?;
 
     if let Some(sol) = deployed.plan.solution() {
+        if !sol.blocks.is_empty() {
+            println!("== function blocks ==");
+            for b in &sol.blocks {
+                println!(
+                    "{}: {} ({}) — loops {}, {:.2}x over the naive nest \
+                     (cpu {:.3} ms → core {:.3} ms), sample-test confirmed",
+                    b.func,
+                    b.kind,
+                    b.ip_name,
+                    b.loops
+                        .iter()
+                        .map(|l| format!("L{}", l.0))
+                        .collect::<Vec<_>>()
+                        .join("+"),
+                    b.speedup(),
+                    b.cpu_s * 1e3,
+                    b.accel_s * 1e3,
+                );
+            }
+        }
         if f.has("--explain") {
             println!("== funnel (Fig. 2) ==");
             println!(
@@ -480,6 +511,7 @@ fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
             seed,
             false,
             f.value("--entry"),
+            f.has("--func-blocks"),
         ));
     }
 
@@ -508,14 +540,19 @@ fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
                 } else {
                     String::new()
                 };
+                let blocks = match plan.block_count() {
+                    0 => String::new(),
+                    n => format!("  ({n} block{})", if n == 1 { "" } else { "s" }),
+                };
                 println!(
-                    "  {:<10} → {:<5} best {:<12} {:>6.2}x  automation {:>5.1} h{}{}",
+                    "  {:<10} → {:<5} best {:<12} {:>6.2}x  automation {:>5.1} h{}{}{}",
                     e.app,
                     e.destination.unwrap_or("?"),
                     plan.label(),
                     plan.speedup(),
                     plan.automation_s() / 3600.0,
                     if plan.is_cached() { "  (cached)" } else { "" },
+                    blocks,
                     alternatives,
                 );
             }
@@ -752,6 +789,31 @@ mod tests {
         assert_eq!(
             run(&s(&["offload", "sobel", "--backend", "gpu"])),
             0
+        );
+    }
+
+    #[test]
+    fn offload_sobel_with_func_blocks() {
+        assert_eq!(run(&s(&["offload", "sobel", "--func-blocks"])), 0);
+    }
+
+    #[test]
+    fn batch_func_blocks_reports_block_counts() {
+        let dir = TempDir::new("fpga-offload-cli-funcblock").unwrap();
+        let out = dir.join("fb.json");
+        let out_s = out.to_string_lossy().into_owned();
+        assert_eq!(
+            run(&s(&["batch", "sobel", "--func-blocks", "--out", &out_s])),
+            0
+        );
+        let text = std::fs::read_to_string(&out).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get(&["solved"]).unwrap().as_f64(), Some(1.0));
+        let results = j.get(&["results"]).unwrap().as_arr().unwrap();
+        // The sobel gradient stencil is replaced on the FPGA backend.
+        assert_eq!(
+            results[0].get(&["blocks"]).unwrap().as_f64(),
+            Some(1.0)
         );
     }
 

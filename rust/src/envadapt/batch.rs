@@ -92,6 +92,10 @@ impl BatchEntry {
                 ));
                 fields.push(("speedup", Json::Num(plan.speedup())));
                 fields.push((
+                    "blocks",
+                    Json::Num(plan.block_count() as f64),
+                ));
+                fields.push((
                     "automation_hours",
                     Json::Num(plan.automation_s() / 3600.0),
                 ));
@@ -99,6 +103,7 @@ impl BatchEntry {
             None => {
                 fields.push(("best_pattern", Json::Null));
                 fields.push(("speedup", Json::Null));
+                fields.push(("blocks", Json::Null));
                 fields.push(("automation_hours", Json::Null));
             }
         }
@@ -315,40 +320,52 @@ impl<'a> Batch<'a> {
         self.pipelines.iter().map(|p| p.backend().name()).collect()
     }
 
+    /// Whether the destination pipelines can share one funnel run per
+    /// app: identical search configuration (fingerprint covers every
+    /// knob, the execution engine included) and identical narrowing
+    /// device. The bundled mixed cycle (fpga+gpu+cpu over one config,
+    /// all narrowing on the FPGA resource model) always qualifies.
+    fn sharable(&self) -> bool {
+        self.pipelines.len() > 1
+            && self.pipelines.windows(2).all(|w| {
+                w[0].config().fingerprint() == w[1].config().fingerprint()
+                    && w[0].backend().device().name
+                        == w[1].backend().device().name
+            })
+    }
+
     /// Run every (request × destination) through stages 1–5,
-    /// concurrently, then pick each app's destination. One failing or
-    /// *panicking* app does not abort the cycle — its entry carries the
-    /// error and the remaining apps still solve.
+    /// concurrently, then pick each app's destination. In a sharable
+    /// mixed cycle, parse / profiling analysis / candidate extraction
+    /// run **once per app** and fan out to every destination (only
+    /// measurement and selection are per-backend); otherwise each
+    /// destination runs its own full funnel. One failing or *panicking*
+    /// app does not abort the cycle — its entry carries the error and
+    /// the remaining apps still solve.
     pub fn run(&self) -> BatchReport {
         let results: Vec<Vec<Result<Planned, String>>> =
             std::thread::scope(|scope| {
-                let handles: Vec<Vec<_>> = self
+                let handles: Vec<_> = self
                     .requests
                     .iter()
-                    .map(|req| {
-                        self.pipelines
-                            .iter()
-                            .map(|&pipe| {
-                                let req = req.clone();
-                                scope.spawn(move || pipe.solve(req))
-                            })
-                            .collect()
-                    })
+                    .map(|req| scope.spawn(move || self.solve_app(req)))
                     .collect();
                 handles
                     .into_iter()
-                    .map(|per_app| {
-                        per_app
-                            .into_iter()
-                            .map(|h| match h.join() {
-                                Ok(Ok(planned)) => Ok(planned),
-                                Ok(Err(e)) => Err(e.to_string()),
-                                Err(payload) => Err(format!(
-                                    "worker panicked: {}",
-                                    panic_message(payload.as_ref())
-                                )),
-                            })
-                            .collect()
+                    .map(|h| match h.join() {
+                        Ok(per_dest) => per_dest,
+                        Err(payload) => {
+                            // The shared prefix (parse / analysis)
+                            // panicked: every destination loses this app.
+                            let msg = format!(
+                                "worker panicked: {}",
+                                panic_message(payload.as_ref())
+                            );
+                            self.pipelines
+                                .iter()
+                                .map(|_| Err(msg.clone()))
+                                .collect()
+                        }
                     })
                     .collect()
             });
@@ -395,6 +412,155 @@ impl<'a> Batch<'a> {
             .map(|p| p.config().max_patterns)
             .unwrap_or(0);
         BatchReport::new(label, backends, budget, entries)
+    }
+
+    /// One application across every destination, funnel shared where
+    /// the pipelines allow it (see `sharable`).
+    fn solve_app(
+        &self,
+        req: &OffloadRequest,
+    ) -> Vec<Result<Planned, String>> {
+        if !self.sharable() {
+            // Independent full solves, each isolated on its own thread
+            // so a panicking backend only loses its own destination.
+            return std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .pipelines
+                    .iter()
+                    .map(|&pipe| {
+                        let req = req.clone();
+                        scope.spawn(move || pipe.solve(req))
+                    })
+                    .collect();
+                handles.into_iter().map(join_solve).collect()
+            });
+        }
+
+        // Shared prefix: parse + profiling analysis once per app.
+        let first = self.pipelines[0];
+        let parsed = match first.parse(req.clone()) {
+            Ok(p) => p,
+            Err(e) => return self.every_destination_fails(e.to_string()),
+        };
+        // Per-destination cache lookups against the shared parse.
+        let cached: Vec<Result<Option<Planned>, String>> = self
+            .pipelines
+            .iter()
+            .map(|p| p.cached_plan(&parsed).map_err(|e| e.to_string()))
+            .collect();
+        let all_cached = cached
+            .iter()
+            .all(|c| matches!(c, Ok(Some(_)) | Err(_)));
+        let analyzed = if all_cached {
+            None
+        } else {
+            match first.analyze(parsed) {
+                Ok(a) => Some(a),
+                Err(e) => {
+                    return self.every_destination_fails(e.to_string())
+                }
+            }
+        };
+        // Candidate extraction is destination-independent here (shared
+        // narrowing device), *unless* the function-block stage is on:
+        // block pricing — and therefore the claimed-loop set the funnel
+        // must skip — is per-destination. Block detection + sample-test
+        // confirmation, however, are destination-independent and run
+        // once here even then.
+        let shared_cands = match &analyzed {
+            Some(a) if !req.func_blocks => {
+                match first.extract(a.clone()) {
+                    Ok(c) => Some(c),
+                    Err(e) => {
+                        return self
+                            .every_destination_fails(e.to_string())
+                    }
+                }
+            }
+            _ => None,
+        };
+        let shared_blocks = match &analyzed {
+            Some(a) if req.func_blocks => {
+                Some(first.confirm_blocks(a))
+            }
+            _ => None,
+        };
+
+        std::thread::scope(|scope| {
+            let analyzed = &analyzed;
+            let shared_cands = &shared_cands;
+            let shared_blocks = &shared_blocks;
+            let handles: Vec<_> = self
+                .pipelines
+                .iter()
+                .zip(cached)
+                .map(|(&pipe, cache_hit)| {
+                    scope.spawn(move || match cache_hit {
+                        Ok(Some(planned)) => Ok(planned),
+                        Err(e) => Err(PipelineErrorText(e)),
+                        Ok(None) => {
+                            let r = match (shared_cands, shared_blocks) {
+                                (Some(c), _) => pipe
+                                    .solve_from_candidates(c.clone()),
+                                (None, Some(blocks)) => {
+                                    let a = analyzed
+                                        .as_ref()
+                                        .expect("not all cached")
+                                        .clone();
+                                    pipe.solve_from_blocked(
+                                        pipe.price_blocks(a, blocks),
+                                    )
+                                }
+                                (None, None) => pipe.solve_from_analyzed(
+                                    analyzed
+                                        .as_ref()
+                                        .expect("not all cached")
+                                        .clone(),
+                                ),
+                            };
+                            r.map_err(|e| PipelineErrorText(e.to_string()))
+                        }
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| match h.join() {
+                    Ok(Ok(planned)) => Ok(planned),
+                    Ok(Err(PipelineErrorText(e))) => Err(e),
+                    Err(payload) => Err(format!(
+                        "worker panicked: {}",
+                        panic_message(payload.as_ref())
+                    )),
+                })
+                .collect()
+        })
+    }
+
+    fn every_destination_fails(
+        &self,
+        msg: String,
+    ) -> Vec<Result<Planned, String>> {
+        self.pipelines.iter().map(|_| Err(msg.clone())).collect()
+    }
+}
+
+/// Error text carried across the per-destination worker boundary.
+struct PipelineErrorText(String);
+
+fn join_solve(
+    h: std::thread::ScopedJoinHandle<
+        '_,
+        Result<Planned, super::pipeline::PipelineError>,
+    >,
+) -> Result<Planned, String> {
+    match h.join() {
+        Ok(Ok(planned)) => Ok(planned),
+        Ok(Err(e)) => Err(e.to_string()),
+        Err(payload) => Err(format!(
+            "worker panicked: {}",
+            panic_message(payload.as_ref())
+        )),
     }
 }
 
@@ -651,6 +817,117 @@ int main() {
         assert!(err.contains("panicked"), "{err}");
         assert!(err.contains("injected measurement panic"), "{err}");
         assert!(report.entries[0].ok());
+    }
+
+    /// A second app with a different winner profile, to exercise the
+    /// shared-funnel path across more than one request.
+    const GOOD2: &str = "
+#define N 512
+#define REP 8
+float x[N]; float y[N];
+int main() {
+    for (int i = 0; i < N; i++) { x[i] = i * 0.002 - 0.5; }
+    for (int r = 0; r < REP; r++) {
+        for (int i = 0; i < N; i++) {
+            y[i] = sqrt(x[i] * x[i] + 1.0) + sin(x[i]);
+        }
+    }
+    return 0;
+}";
+
+    #[test]
+    fn shared_funnel_routing_matches_independent_solves() {
+        // The mixed cycle shares parse/analysis/extraction per app
+        // across the three destination pipelines. Routing and every
+        // per-destination figure must be identical to running each
+        // (app × backend) solve independently — the PR-3 behavior.
+        let fpga = backend();
+        let gpu = GpuBackend {
+            cpu: &XEON_BRONZE_3104,
+            gpu: &TESLA_T4,
+            device: &ARRIA10_GX,
+        };
+        let cpu = CpuBaseline {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        let pf = Pipeline::new(SearchConfig::default(), &fpga).unwrap();
+        let pg = Pipeline::new(SearchConfig::default(), &gpu).unwrap();
+        let pc = Pipeline::new(SearchConfig::default(), &cpu).unwrap();
+        let batch = Batch::mixed(vec![&pf, &pg, &pc])
+            .with(req("good", GOOD))
+            .with(req("good2", GOOD2));
+        assert!(batch.sharable());
+        let report = batch.run();
+        assert_eq!(report.solved(), 2);
+
+        for (entry, source) in
+            report.entries.iter().zip([GOOD, GOOD2])
+        {
+            for (outcome, pipe) in
+                entry.outcomes.iter().zip([&pf, &pg, &pc])
+            {
+                let solo = pipe.solve(req(&entry.app, source)).unwrap();
+                let shared = outcome.plan.as_ref().unwrap();
+                assert_eq!(
+                    shared.best_loops(),
+                    solo.plan.best_loops(),
+                    "{}@{}",
+                    entry.app,
+                    outcome.backend
+                );
+                assert!(
+                    (shared.speedup() - solo.plan.speedup()).abs()
+                        < 1e-12,
+                    "{}@{}",
+                    entry.app,
+                    outcome.backend
+                );
+            }
+            // The winner is whatever an independent comparison picks.
+            let best = entry
+                .outcomes
+                .iter()
+                .max_by(|a, b| {
+                    a.plan
+                        .as_ref()
+                        .unwrap()
+                        .speedup()
+                        .partial_cmp(&b.plan.as_ref().unwrap().speedup())
+                        .unwrap()
+                })
+                .unwrap();
+            assert!(
+                entry.plan.as_ref().unwrap().speedup() + 1e-12
+                    >= best.plan.as_ref().unwrap().speedup()
+            );
+        }
+    }
+
+    #[test]
+    fn different_configs_fall_back_to_independent_funnels() {
+        let fpga = backend();
+        let cpu = CpuBaseline {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        let pf = Pipeline::new(SearchConfig::default(), &fpga).unwrap();
+        let pc = Pipeline::new(
+            SearchConfig {
+                max_patterns: 5,
+                ..Default::default()
+            },
+            &cpu,
+        )
+        .unwrap();
+        let batch = Batch::mixed(vec![&pf, &pc]).with(req("good", GOOD));
+        assert!(!batch.sharable());
+        let report = batch.run();
+        assert_eq!(report.solved(), 1);
+        assert!(report.entries[0]
+            .outcomes
+            .iter()
+            .all(|o| o.plan.is_some()));
     }
 
     #[test]

@@ -30,8 +30,8 @@ pub use flow::{analyze_source, FlowOptions, FlowReport};
 pub use flow::run_flow;
 pub use patterndb::{PatternDb, ReuseKey, StoredPattern};
 pub use pipeline::{
-    source_fingerprint, Analyzed, Candidates, Deployed, Measured,
-    OffloadRequest, OffloadRequestBuilder, Parsed, Pipeline, PipelineError,
-    Plan, Planned,
+    source_fingerprint, Analyzed, Candidates, Deployed, FuncBlocked,
+    Measured, OffloadRequest, OffloadRequestBuilder, Parsed, Pipeline,
+    PipelineError, Plan, Planned,
 };
 pub use testdb::{TestCase, TestDb};

@@ -34,6 +34,11 @@ pub struct ReuseKey {
     pub device: String,
     /// [`crate::search::SearchConfig::fingerprint`] at search time.
     pub config_fp: u64,
+    /// [`crate::funcblock::Catalog::fingerprint`] when the request ran
+    /// with function blocks enabled, 0 for loop-only requests. A plan
+    /// whose block replacements came from one catalog must not be
+    /// replayed under another (or under a blocks-off request).
+    pub catalog_fp: u64,
 }
 
 /// Summary of a stored pattern record — enough to reuse the solution
@@ -55,8 +60,18 @@ pub struct StoredPattern {
     /// Search-config fingerprint (None for pre-fingerprint records,
     /// which never match the reuse check).
     pub config_fp: Option<u64>,
+    /// Function-block catalog fingerprint (0 = loop-only request; None
+    /// for pre-funcblock records, which never match the reuse check).
+    pub catalog_fp: Option<u64>,
+    /// Unix seconds when the record was stored (None for pre-age
+    /// records). Not part of [`matches`](Self::matches) — age is a
+    /// *policy*, enforced by the pipeline's `max_age`, so operators can
+    /// tune re-search cadence without invalidating every record.
+    pub stored_at: Option<u64>,
     /// Offloaded loop ids of the selected pattern.
     pub best_pattern: Vec<u32>,
+    /// Function-block replacements stored with the plan.
+    pub blocks: u64,
     pub speedup: f64,
     pub automation_hours: f64,
     /// Verification outcome of the selected pattern at store time
@@ -73,7 +88,23 @@ impl StoredPattern {
             && self.entry.as_deref() == Some(key.entry.as_str())
             && self.device.as_deref() == Some(key.device.as_str())
             && self.config_fp == Some(key.config_fp)
+            && self.catalog_fp == Some(key.catalog_fp)
     }
+
+    /// Record age in seconds at `now` (unix seconds). `None` when the
+    /// record predates age stamping — such records count as infinitely
+    /// old under any age policy.
+    pub fn age_secs(&self, now: u64) -> Option<u64> {
+        self.stored_at.map(|t| now.saturating_sub(t))
+    }
+}
+
+/// Current unix time in whole seconds.
+pub(crate) fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
 }
 
 /// File-backed pattern store.
@@ -152,6 +183,18 @@ impl PatternDb {
                 "config_fp".to_string(),
                 Json::Str(format!("{:016x}", key.config_fp)),
             );
+            map.insert(
+                "catalog_fp".to_string(),
+                Json::Str(format!("{:016x}", key.catalog_fp)),
+            );
+            // Age stamp for the re-search policy (unix seconds; decimal
+            // string — the value exceeds f64's exact-integer comfort
+            // zone in no plausible timeframe, but stay consistent with
+            // the other stamps).
+            map.insert(
+                "stored_at".to_string(),
+                Json::Str(format!("{}", unix_now())),
+            );
         }
         std::fs::write(&path, j.pretty())
             .with_context(|| format!("writing {path:?}"))?;
@@ -202,6 +245,19 @@ impl PatternDb {
                 .get(&["config_fp"])
                 .and_then(Json::as_str)
                 .and_then(|s| u64::from_str_radix(s, 16).ok()),
+            catalog_fp: j
+                .get(&["catalog_fp"])
+                .and_then(Json::as_str)
+                .and_then(|s| u64::from_str_radix(s, 16).ok()),
+            stored_at: j
+                .get(&["stored_at"])
+                .and_then(Json::as_str)
+                .and_then(|s| s.parse().ok()),
+            blocks: j
+                .get(&["blocks"])
+                .and_then(Json::as_arr)
+                .map(|arr| arr.len() as u64)
+                .unwrap_or(0),
             best_pattern: j
                 .get(&["best_pattern"])
                 .and_then(Json::as_arr)
@@ -269,6 +325,7 @@ mod tests {
                 verified: Some(true),
             }],
             best: 0,
+            blocks: Vec::new(),
             automation_s: 43200.0,
         }
     }
@@ -302,6 +359,7 @@ mod tests {
             entry: "main".into(),
             device: "Intel PAC Arria10 GX 1150".into(),
             config_fp: 0xfeed_face_0123_4567_u64,
+            catalog_fp: 0x0bad_cafe_dead_10cc_u64,
         }
     }
 
@@ -317,13 +375,18 @@ mod tests {
         assert_eq!(rec.entry.as_deref(), Some("main"));
         assert_eq!(rec.device.as_deref(), Some(k.device.as_str()));
         assert_eq!(rec.config_fp, Some(k.config_fp));
+        assert_eq!(rec.catalog_fp, Some(k.catalog_fp));
         assert!(rec.matches(&k));
         assert_eq!(rec.app, "demo");
         assert_eq!(rec.best_pattern, vec![2]);
+        assert_eq!(rec.blocks, 0);
         assert_eq!(rec.speedup, 4.0);
         assert!((rec.automation_hours - 12.0).abs() < 1e-9);
         // The selected pattern's verification outcome survives storage.
         assert_eq!(rec.verified, Some(true));
+        // The age stamp is present and sane (no time travel).
+        let age = rec.age_secs(super::unix_now()).expect("stamped");
+        assert!(age < 3600, "record claims to be {age}s old");
     }
 
     #[test]
@@ -339,6 +402,7 @@ mod tests {
             ReuseKey { entry: "compute".into(), ..k.clone() },
             ReuseKey { device: "NVIDIA Tesla T4".into(), ..k.clone() },
             ReuseKey { config_fp: 2, ..k.clone() },
+            ReuseKey { catalog_fp: 3, ..k.clone() },
         ] {
             assert!(!rec.matches(&changed), "{changed:?}");
         }
@@ -355,7 +419,31 @@ mod tests {
         assert_eq!(rec.entry, None);
         assert_eq!(rec.device, None);
         assert_eq!(rec.config_fp, None);
+        assert_eq!(rec.catalog_fp, None);
+        assert_eq!(rec.stored_at, None);
         assert!(!rec.matches(&key()));
+        // Unstamped records count as infinitely old under any policy.
+        assert_eq!(rec.age_secs(super::unix_now()), None);
+    }
+
+    #[test]
+    fn pre_funcblock_schema_record_never_matches() {
+        // Simulate a PR-3-era record: every key component except the
+        // catalog fingerprint. It must re-search, never reuse.
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        let k = key();
+        db.store_hashed(&dummy_solution("demo"), &k).unwrap();
+        let path = db.path_of("demo");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let Json::Obj(mut map) = Json::parse(&text).unwrap() else {
+            panic!("record is an object");
+        };
+        map.remove("catalog_fp");
+        std::fs::write(&path, Json::Obj(map).pretty()).unwrap();
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert_eq!(rec.config_fp, Some(k.config_fp));
+        assert!(!rec.matches(&k));
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! |----------------------|---------------|------------------------------|
 //! | [`Pipeline::parse`]  | [`Parsed`]    | 1 (code analysis, front)     |
 //! | [`Pipeline::analyze`]| [`Analyzed`]  | 1 (profiling, back)          |
-//! | [`Pipeline::extract`]| [`Candidates`]| 2–3 (extraction + conversion)|
+//! | [`Pipeline::detect_blocks`] | [`FuncBlocked`] | function-block path (arXiv:2004.09883; no-op unless requested) |
+//! | [`Pipeline::extract`] / [`Pipeline::extract_blocked`] | [`Candidates`] | 2–3 (extraction + conversion) |
 //! | [`Pipeline::measure`]| [`Measured`]  | 4 (verification measurement) |
 //! | [`Pipeline::select`] | [`Planned`]   | 5 (solution + DB store)      |
 //! | [`Pipeline::deploy`] | [`Deployed`]  | 6 (production deploy check)  |
@@ -42,17 +43,20 @@
 //! ```
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use crate::analysis::{analyze_with, Analysis};
+use crate::funcblock::{self, BlockReplacement, Catalog};
+use crate::minic::ast::LoopId;
 use crate::minic::{parse as parse_minic, typecheck, Program};
 use crate::runtime::{Artifacts, Runtime, SampleRun};
 use crate::search::backend::Backend;
 use crate::search::{
     funnel, measure, Candidate, FunnelTrace, MeasuredSet, OffloadSolution,
-    SearchConfig, SearchError,
+    PatternMeasurement, SearchConfig, SearchError,
 };
 
-use super::patterndb::{PatternDb, ReuseKey, StoredPattern};
+use super::patterndb::{unix_now, PatternDb, ReuseKey, StoredPattern};
 use super::testdb::TestCase;
 
 /// FNV-1a fingerprint of an application's source text. Stored with each
@@ -122,6 +126,9 @@ pub struct OffloadRequest {
     /// verification, step 6 is skipped).
     pub pjrt_sample: Option<String>,
     pub seed: u64,
+    /// Run the function-block path (detect → confirm → replace with
+    /// catalogued IP cores) before the loop funnel. Off by default.
+    pub func_blocks: bool,
 }
 
 impl OffloadRequest {
@@ -133,6 +140,7 @@ impl OffloadRequest {
             entry: "main".to_string(),
             pjrt_sample: None,
             seed: 42,
+            func_blocks: false,
         }
     }
 
@@ -145,7 +153,15 @@ impl OffloadRequest {
             entry: case.entry.clone(),
             pjrt_sample: case.pjrt_sample.clone(),
             seed: 42,
+            func_blocks: false,
         }
+    }
+
+    /// Enable (or disable) the function-block path on an existing
+    /// request.
+    pub fn with_func_blocks(mut self, on: bool) -> Self {
+        self.func_blocks = on;
+        self
     }
 }
 
@@ -157,11 +173,19 @@ pub struct OffloadRequestBuilder {
     entry: String,
     pjrt_sample: Option<String>,
     seed: u64,
+    func_blocks: bool,
 }
 
 impl OffloadRequestBuilder {
     pub fn source(mut self, source: impl Into<String>) -> Self {
         self.source = Some(source.into());
+        self
+    }
+
+    /// Enable the function-block path (see
+    /// [`OffloadRequest::with_func_blocks`]).
+    pub fn func_blocks(mut self, on: bool) -> Self {
+        self.func_blocks = on;
         self
     }
 
@@ -211,11 +235,13 @@ impl OffloadRequestBuilder {
             entry: self.entry,
             pjrt_sample: self.pjrt_sample,
             seed: self.seed,
+            func_blocks: self.func_blocks,
         })
     }
 }
 
 /// Step-1 (front) artifact: parsed + semantically-checked program.
+#[derive(Clone)]
 pub struct Parsed {
     pub req: OffloadRequest,
     pub prog: Program,
@@ -224,6 +250,7 @@ pub struct Parsed {
 }
 
 /// Step-1 (back) artifact: the profiled loop analysis.
+#[derive(Clone)]
 pub struct Analyzed {
     pub req: OffloadRequest,
     pub prog: Program,
@@ -231,8 +258,23 @@ pub struct Analyzed {
     pub analysis: Analysis,
 }
 
+/// Function-block stage artifact (between [`Analyzed`] and
+/// [`Candidates`]): confirmed, priced, strictly-profitable block
+/// replacements whose loops are pre-claimed away from the loop funnel.
+/// Empty when the request runs loop-only.
+#[derive(Clone)]
+pub struct FuncBlocked {
+    pub req: OffloadRequest,
+    pub prog: Program,
+    pub source_hash: u64,
+    pub analysis: Analysis,
+    pub blocks: Vec<BlockReplacement>,
+}
+
 /// Step-2/3 artifact: funnel survivors with generated kernels and
-/// pre-compile reports.
+/// pre-compile reports (plus any function-block replacements riding
+/// along from the [`FuncBlocked`] stage).
+#[derive(Clone)]
 pub struct Candidates {
     pub req: OffloadRequest,
     pub prog: Program,
@@ -240,6 +282,7 @@ pub struct Candidates {
     pub analysis: Analysis,
     pub cands: Vec<Candidate>,
     pub trace: FunnelTrace,
+    pub blocks: Vec<BlockReplacement>,
 }
 
 /// Step-4 artifact: measured patterns plus compile-job accounting.
@@ -248,6 +291,7 @@ pub struct Measured {
     pub source_hash: u64,
     pub trace: FunnelTrace,
     pub set: MeasuredSet,
+    pub blocks: Vec<BlockReplacement>,
 }
 
 /// Step-5 output: the selected offload plan — freshly searched, or
@@ -332,6 +376,24 @@ impl Plan {
             Plan::Cached(_) => 0.0,
         }
     }
+
+    /// Function-block replacements in this plan (cached plans carry only
+    /// the stored count; the full list lives in the record JSON).
+    pub fn block_count(&self) -> usize {
+        match self {
+            Plan::Fresh(sol) => sol.blocks.len(),
+            Plan::Cached(rec) => rec.blocks as usize,
+        }
+    }
+
+    /// The full replacement list, when this plan came from a fresh
+    /// search.
+    pub fn block_replacements(&self) -> &[BlockReplacement] {
+        match self {
+            Plan::Fresh(sol) => &sol.blocks,
+            Plan::Cached(_) => &[],
+        }
+    }
 }
 
 /// Step-5 artifact: a plan, possibly persisted.
@@ -364,6 +426,7 @@ pub struct Pipeline<'a> {
     backend: &'a dyn Backend,
     pattern_db: Option<PathBuf>,
     reuse_cached: bool,
+    max_age: Option<Duration>,
 }
 
 impl<'a> Pipeline<'a> {
@@ -378,6 +441,7 @@ impl<'a> Pipeline<'a> {
             backend,
             pattern_db: None,
             reuse_cached: false,
+            max_age: None,
         })
     }
 
@@ -392,6 +456,17 @@ impl<'a> Pipeline<'a> {
     /// (skips the whole funnel; requires a pattern DB). Off by default.
     pub fn with_cache_reuse(mut self, on: bool) -> Self {
         self.reuse_cached = on;
+        self
+    }
+
+    /// Age-based re-search policy (ROADMAP): a stored plan older than
+    /// `max_age` is treated as a cache miss — the funnel re-measures and
+    /// the record is refreshed — instead of being reused blindly
+    /// forever. Records without an age stamp (pre-policy schema) count
+    /// as infinitely old. `None` (the default) keeps the old behavior:
+    /// matching records never expire.
+    pub fn with_max_age(mut self, max_age: Duration) -> Self {
+        self.max_age = Some(max_age);
         self
     }
 
@@ -430,67 +505,256 @@ impl<'a> Pipeline<'a> {
         })
     }
 
-    /// Steps 2–3: extraction of offloadable areas + conversion (the
-    /// narrowing funnel with OpenCL-style kernel generation inside).
-    pub fn extract(&self, a: Analyzed) -> Result<Candidates, PipelineError> {
-        let (cands, trace) = funnel::run(
+    /// Function-block stage (between [`Analyzed`] and [`Candidates`]):
+    /// detect catalog matches, behaviorally confirm each through the VM
+    /// sample test ([`confirm_blocks`](Self::confirm_blocks)), price the
+    /// confirmed blocks on this pipeline's destination
+    /// ([`price_blocks`](Self::price_blocks)), and keep the strictly
+    /// profitable ones. A no-op (empty block list) when the request runs
+    /// loop-only.
+    pub fn detect_blocks(
+        &self,
+        a: Analyzed,
+    ) -> Result<FuncBlocked, PipelineError> {
+        let confirmed = self.confirm_blocks(&a);
+        Ok(self.price_blocks(a, &confirmed))
+    }
+
+    /// Destination-*independent* half of the function-block stage:
+    /// detection + VM sample-test confirmation. The result can be shared
+    /// across every destination pipeline of a mixed cycle (the batch
+    /// orchestrator does exactly that); only pricing is per-backend.
+    /// Empty when the request runs loop-only.
+    pub fn confirm_blocks(
+        &self,
+        a: &Analyzed,
+    ) -> Vec<funcblock::ConfirmedBlock> {
+        if !a.req.func_blocks {
+            return Vec::new();
+        }
+        funcblock::find_blocks(
             &a.prog,
             &a.analysis,
-            &self.config,
-            self.backend.device(),
+            Catalog::shared(),
+            self.config.engine,
+            a.req.seed,
         )
-        .map_err(|e| PipelineError::Search(e.into()))?;
-        Ok(Candidates {
+    }
+
+    /// Destination-*specific* half of the function-block stage: price
+    /// each confirmed block on this backend and keep the strictly
+    /// profitable replacements.
+    pub fn price_blocks(
+        &self,
+        a: Analyzed,
+        confirmed: &[funcblock::ConfirmedBlock],
+    ) -> FuncBlocked {
+        let catalog = Catalog::shared();
+        let blocks = confirmed
+            .iter()
+            .filter_map(|cb| {
+                let cost = self.backend.price_block(cb, catalog)?;
+                if !cost.profitable() {
+                    return None;
+                }
+                Some(BlockReplacement {
+                    kind: cb.kind,
+                    func: cb.func.clone(),
+                    ip_name: catalog.spec(cb.kind).ip_name,
+                    loops: cb.loops.clone(),
+                    cpu_s: cost.cpu_s,
+                    accel_s: cost.accel_s,
+                    build_s: cost.build_s,
+                    confirmed: true,
+                })
+            })
+            .collect();
+        FuncBlocked {
             req: a.req,
             prog: a.prog,
             source_hash: a.source_hash,
             analysis: a.analysis,
+            blocks,
+        }
+    }
+
+    /// Steps 2–3: extraction of offloadable areas + conversion (the
+    /// narrowing funnel with OpenCL-style kernel generation inside).
+    pub fn extract(&self, a: Analyzed) -> Result<Candidates, PipelineError> {
+        self.extract_blocked(FuncBlocked {
+            req: a.req,
+            prog: a.prog,
+            source_hash: a.source_hash,
+            analysis: a.analysis,
+            blocks: Vec::new(),
+        })
+    }
+
+    /// Steps 2–3 over a [`FuncBlocked`] stage: the funnel runs only over
+    /// the loops no block replacement claimed. When the blocks swallow
+    /// every candidate loop, the stage degrades to an empty candidate
+    /// set (the plan is then blocks + all-CPU remainder) instead of the
+    /// loop-only "no candidates" failure.
+    pub fn extract_blocked(
+        &self,
+        f: FuncBlocked,
+    ) -> Result<Candidates, PipelineError> {
+        let claimed: std::collections::BTreeSet<LoopId> = f
+            .blocks
+            .iter()
+            .flat_map(|b| b.loops.iter().copied())
+            .collect();
+        let run = funnel::run_excluding(
+            &f.prog,
+            &f.analysis,
+            &self.config,
+            self.backend.device(),
+            &claimed,
+        );
+        let (cands, trace) = match run {
+            Ok(pair) => pair,
+            Err(funnel::FunnelError::NoCandidates)
+                if !f.blocks.is_empty() =>
+            {
+                (
+                    Vec::new(),
+                    FunnelTrace {
+                        total_loops: f.analysis.loops.len(),
+                        offloadable: Vec::new(),
+                        top_a: Vec::new(),
+                        reports: Vec::new(),
+                        top_c: Vec::new(),
+                    },
+                )
+            }
+            Err(e) => return Err(PipelineError::Search(e.into())),
+        };
+        Ok(Candidates {
+            req: f.req,
+            prog: f.prog,
+            source_hash: f.source_hash,
+            analysis: f.analysis,
             cands,
             trace,
+            blocks: f.blocks,
         })
     }
 
     /// Step 4: verification-environment measurement through the backend
-    /// (two rounds: singles, then combinations).
+    /// (two rounds: singles, then combinations). When block replacements
+    /// are present, the **empty** loop pattern is measured too: the
+    /// blocks stand on their own, so "replace the blocks and offload no
+    /// further loop" must be a selectable plan — without it, a cycle
+    /// whose only winning region was swallowed by a block would be
+    /// forced onto the least-bad *losing* loop pattern.
     pub fn measure(&self, c: Candidates) -> Result<Measured, PipelineError> {
-        let set = measure::measure_patterns(
-            &c.prog,
-            &c.analysis,
-            &c.cands,
-            &self.config,
-            self.backend,
-        )?;
+        let mut set = if c.cands.is_empty() {
+            // Every candidate loop was claimed by a block (extract only
+            // degrades to an empty set when blocks exist).
+            MeasuredSet {
+                measurements: Vec::new(),
+                rounds: vec![Vec::new()],
+            }
+        } else {
+            measure::measure_patterns(
+                &c.prog,
+                &c.analysis,
+                &c.cands,
+                &self.config,
+                self.backend,
+            )?
+        };
+        if !c.blocks.is_empty() {
+            let empty: crate::search::patterns::Pattern = Vec::new();
+            let bm = self
+                .backend
+                .measure(&c.prog, &c.analysis, &[], &empty, &self.config)
+                .map_err(PipelineError::Search)?;
+            let verified = if self.config.verify_numerics {
+                Some(
+                    self.backend
+                        .verify(
+                            &c.prog,
+                            &[],
+                            &empty,
+                            &c.analysis.entry,
+                            &self.config,
+                        )
+                        .map_err(PipelineError::Search)?,
+                )
+            } else {
+                None
+            };
+            set.measurements.push(PatternMeasurement {
+                loops: Vec::new(),
+                round: 1,
+                timing: bm.timing,
+                // The empty pattern builds nothing — the blocks' own
+                // core-integration builds are accounted at selection.
+                compile_s: 0.0,
+                verified,
+            });
+            // ...but its verification-environment *measurement* slot is
+            // real wall clock like any other pattern's: account it in
+            // the round's job list (a zero-duration compile job adds
+            // one measure_seconds slot to automation time).
+            if let Some(round) = set.rounds.first_mut() {
+                round.push(crate::fpga::CompileJob { duration_s: 0.0 });
+            }
+        }
         Ok(Measured {
             req: c.req,
             source_hash: c.source_hash,
             trace: c.trace,
             set,
+            blocks: c.blocks,
         })
     }
 
     /// The reuse key this pipeline stores records under and demands back
     /// before replaying one: source hash + backend + entry + destination
-    /// device + search-config fingerprint.
-    fn reuse_key(&self, source_hash: u64, entry: &str) -> ReuseKey {
+    /// device + search-config fingerprint + function-block catalog
+    /// fingerprint (0 for loop-only requests).
+    fn reuse_key(
+        &self,
+        source_hash: u64,
+        entry: &str,
+        func_blocks: bool,
+    ) -> ReuseKey {
         ReuseKey {
             source_hash,
             backend: self.backend.name().to_string(),
             entry: entry.to_string(),
             device: self.backend.destination().to_string(),
             config_fp: self.config.fingerprint(),
+            catalog_fp: if func_blocks {
+                Catalog::shared_fingerprint()
+            } else {
+                0
+            },
         }
     }
 
-    /// Step 5: solution selection, then persistence when a pattern DB is
-    /// configured.
+    /// Step 5: solution selection (loop pattern + block replacements),
+    /// then persistence when a pattern DB is configured.
     pub fn select(&self, m: Measured) -> Result<Planned, PipelineError> {
-        let sol =
+        let mut sol =
             measure::select(&m.req.app, m.trace, m.set, &self.config)?;
+        // Fold the block replacements into the solution: combined
+        // speedup, and the cores' integration builds on the automation
+        // clock.
+        sol.automation_s +=
+            m.blocks.iter().map(|b| b.build_s).sum::<f64>();
+        sol.blocks = m.blocks;
         let stored_at = match &self.pattern_db {
             Some(dir) => {
                 let db = PatternDb::open(dir)
                     .map_err(|e| PipelineError::Db(format!("{e:#}")))?;
-                let key = self.reuse_key(m.source_hash, &m.req.entry);
+                let key = self.reuse_key(
+                    m.source_hash,
+                    &m.req.entry,
+                    m.req.func_blocks,
+                );
                 Some(
                     db.store_hashed(&sol, &key)
                         .map_err(|e| PipelineError::Db(format!("{e:#}")))?,
@@ -555,9 +819,22 @@ impl<'a> Pipeline<'a> {
         else {
             return Ok(None);
         };
-        let key = self.reuse_key(parsed.source_hash, &parsed.req.entry);
+        let key = self.reuse_key(
+            parsed.source_hash,
+            &parsed.req.entry,
+            parsed.req.func_blocks,
+        );
         if !rec.matches(&key) {
             return Ok(None);
+        }
+        // Age policy: a matching-but-stale record triggers re-search
+        // (re-verification through the full funnel) instead of blind
+        // reuse; unstamped records count as infinitely old.
+        if let Some(max_age) = self.max_age {
+            match rec.age_secs(unix_now()) {
+                Some(age) if age <= max_age.as_secs() => {}
+                _ => return Ok(None),
+            }
         }
         let stored_at = Some(db.path_of(&parsed.req.app));
         Ok(Some(Planned {
@@ -568,7 +845,8 @@ impl<'a> Pipeline<'a> {
     }
 
     /// Stages 1–5 (parse → select), with the pattern-DB cache shortcut
-    /// when the stored hash matches.
+    /// when the stored hash matches, and the function-block stage when
+    /// the request asks for it.
     pub fn solve(
         &self,
         req: OffloadRequest,
@@ -578,7 +856,41 @@ impl<'a> Pipeline<'a> {
             return Ok(planned);
         }
         let analyzed = self.analyze(parsed)?;
-        let candidates = self.extract(analyzed)?;
+        self.solve_from_analyzed(analyzed)
+    }
+
+    /// Stages 2–5 from an existing analysis artifact. Exposed so the
+    /// batch orchestrator can run parse/analysis once per application
+    /// and fan the shared artifact out across destination pipelines.
+    pub fn solve_from_analyzed(
+        &self,
+        analyzed: Analyzed,
+    ) -> Result<Planned, PipelineError> {
+        let blocked = self.detect_blocks(analyzed)?;
+        self.solve_from_blocked(blocked)
+    }
+
+    /// Stages 3–5 from a priced function-block stage. Exposed for the
+    /// mixed-cycle batch path: block detection + confirmation are
+    /// destination-independent and run once per app; each destination
+    /// then prices, extracts, measures and selects on its own.
+    pub fn solve_from_blocked(
+        &self,
+        blocked: FuncBlocked,
+    ) -> Result<Planned, PipelineError> {
+        let candidates = self.extract_blocked(blocked)?;
+        let measured = self.measure(candidates)?;
+        self.select(measured)
+    }
+
+    /// Stages 4–5 from an existing candidate set. Exposed for the
+    /// mixed-cycle batch path: when every destination shares one funnel
+    /// configuration and narrowing device, candidate extraction runs
+    /// once and each backend only re-measures.
+    pub fn solve_from_candidates(
+        &self,
+        candidates: Candidates,
+    ) -> Result<Planned, PipelineError> {
         let measured = self.measure(candidates)?;
         self.select(measured)
     }
@@ -731,5 +1043,95 @@ int main() {
         let a = source_fingerprint(SRC);
         assert_eq!(a, source_fingerprint(SRC));
         assert_ne!(a, source_fingerprint("int main() { return 0; }"));
+    }
+
+    #[test]
+    fn stale_record_triggers_re_search() {
+        let b = backend();
+        let dir = TempDir::new("fpga-offload-pipe-age").unwrap();
+        let pipe = Pipeline::new(SearchConfig::default(), &b)
+            .unwrap()
+            .with_pattern_db(dir.path())
+            .with_cache_reuse(true)
+            .with_max_age(Duration::from_secs(3600));
+
+        let first = pipe.solve(request("mini")).unwrap();
+        assert!(!first.plan.is_cached());
+        // Fresh record: well inside the age budget, so it is reused.
+        let second = pipe.solve(request("mini")).unwrap();
+        assert!(second.plan.is_cached());
+
+        // Age the record past max_age: the hit must degrade to a fresh
+        // re-measurement, not blind reuse.
+        let path = first.stored_at.clone().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let crate::util::json::Json::Obj(mut map) =
+            crate::util::json::Json::parse(&text).unwrap()
+        else {
+            panic!("record is an object");
+        };
+        map.insert(
+            "stored_at".to_string(),
+            crate::util::json::Json::Str(format!(
+                "{}",
+                crate::envadapt::patterndb::unix_now() - 7200
+            )),
+        );
+        std::fs::write(&path, crate::util::json::Json::Obj(map).pretty())
+            .unwrap();
+
+        let third = pipe.solve(request("mini")).unwrap();
+        assert!(!third.plan.is_cached(), "aged record must re-measure");
+        // The re-search refreshed the stamp: reuse works again.
+        let fourth = pipe.solve(request("mini")).unwrap();
+        assert!(fourth.plan.is_cached());
+
+        // A pipeline without an age policy reuses the aged record.
+        std::fs::write(&path, text).unwrap();
+        let lax = Pipeline::new(SearchConfig::default(), &b)
+            .unwrap()
+            .with_pattern_db(dir.path())
+            .with_cache_reuse(true);
+        assert!(lax.solve(request("mini")).unwrap().plan.is_cached());
+    }
+
+    #[test]
+    fn func_blocks_flag_is_part_of_the_reuse_key() {
+        // A plan searched loop-only must not be replayed for a
+        // func-blocks request (and vice versa): the catalog fingerprint
+        // component differs.
+        let b = backend();
+        let dir = TempDir::new("fpga-offload-pipe-fbkey").unwrap();
+        let pipe = Pipeline::new(SearchConfig::default(), &b)
+            .unwrap()
+            .with_pattern_db(dir.path())
+            .with_cache_reuse(true);
+        let loop_only = pipe.solve(request("mini")).unwrap();
+        assert!(!loop_only.plan.is_cached());
+        let blocked = pipe
+            .solve(request("mini").with_func_blocks(true))
+            .unwrap();
+        assert!(
+            !blocked.plan.is_cached(),
+            "blocks-on request must not reuse the loop-only record"
+        );
+        // Same flavor again: now it reuses.
+        let again = pipe
+            .solve(request("mini").with_func_blocks(true))
+            .unwrap();
+        assert!(again.plan.is_cached());
+    }
+
+    #[test]
+    fn detect_blocks_is_a_no_op_when_disabled() {
+        let b = backend();
+        let pipe = Pipeline::new(SearchConfig::default(), &b).unwrap();
+        let parsed = pipe.parse(request("mini")).unwrap();
+        let analyzed = pipe.analyze(parsed).unwrap();
+        let blocked = pipe.detect_blocks(analyzed).unwrap();
+        assert!(blocked.blocks.is_empty());
+        let candidates = pipe.extract_blocked(blocked).unwrap();
+        assert!(!candidates.cands.is_empty());
+        assert!(candidates.blocks.is_empty());
     }
 }

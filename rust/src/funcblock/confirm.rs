@@ -1,0 +1,279 @@
+//! Behavioral confirmation of proposed block replacements — the paper's
+//! "verify by sample test" discipline applied to function blocks.
+//!
+//! A structural match proves nothing: a function can be FIR-*shaped* and
+//! still compute something else (a saturating accumulator, a scaled
+//! variant, a transposed access). Before any replacement is planned, the
+//! candidate function and the catalog's reference semantics are both
+//! executed through the slot-resolved VM ([`crate::minic::Vm`] via
+//! [`EngineKind`]) on deterministically sampled inputs:
+//!
+//! 1. fill the candidate's input arrays with seeded PCG32 samples,
+//! 2. call the candidate function (zero-argument, operating on globals),
+//! 3. instantiate the catalog reference program for the extracted
+//!    binding, fill its inputs with the *same* samples, run `block()`,
+//! 4. compare every output array elementwise.
+//!
+//! Multiple sample rounds with distinct fills guard against coincidental
+//! agreement (e.g. clamps that only engage on large values). Any
+//! disagreement, any runtime error, and any parse failure of the
+//! reference all reject the proposal — replacements are conservative by
+//! construction.
+
+use crate::minic::{parse, EngineKind, MiniCError};
+use crate::util::rng::Pcg32;
+
+use super::catalog::Catalog;
+use super::detect::BlockMatch;
+
+/// Outcome of one confirmation run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Confirmation {
+    /// All sample rounds agreed (max |err| over all rounds attached).
+    Confirmed { max_abs_err: f64 },
+    /// Outputs disagreed on some sample (worst element difference).
+    Mismatch { max_abs_err: f64 },
+    /// The candidate or the reference failed to run.
+    Error(String),
+}
+
+impl Confirmation {
+    pub fn is_confirmed(&self) -> bool {
+        matches!(self, Confirmation::Confirmed { .. })
+    }
+}
+
+/// Tolerance for output agreement. Candidate and reference run in the
+/// same VM arithmetic; a true match accumulates in the same order, so
+/// this is a guard band, not a fudge factor.
+pub const TOLERANCE: f64 = 1e-9;
+
+/// Sample rounds per confirmation (distinct fills each).
+pub const SAMPLE_ROUNDS: u64 = 3;
+
+/// Confirm one proposed match against the catalog's reference semantics.
+pub fn confirm(
+    prog: &crate::minic::Program,
+    m: &BlockMatch,
+    catalog: &Catalog,
+    engine: EngineKind,
+    seed: u64,
+) -> Confirmation {
+    let ref_src = catalog.reference_source(&m.binding);
+    let ref_prog = match parse(&ref_src) {
+        Ok(p) => p,
+        Err(e) => {
+            return Confirmation::Error(format!(
+                "catalog reference failed to parse: {e}"
+            ))
+        }
+    };
+
+    let mut worst = 0.0f64;
+    for round in 0..SAMPLE_ROUNDS {
+        match confirm_round(prog, &ref_prog, m, engine, seed ^ round) {
+            Ok(err) if err <= TOLERANCE => worst = worst.max(err),
+            Ok(err) => return Confirmation::Mismatch { max_abs_err: err },
+            Err(e) => return Confirmation::Error(format!("{e}")),
+        }
+    }
+    Confirmation::Confirmed { max_abs_err: worst }
+}
+
+fn confirm_round(
+    prog: &crate::minic::Program,
+    ref_prog: &crate::minic::Program,
+    m: &BlockMatch,
+    engine: EngineKind,
+    seed: u64,
+) -> Result<f64, MiniCError> {
+    // Fresh engines per round: globals re-zeroed, no state bleed.
+    let mut cand = engine.build(prog)?;
+    let mut refr = engine.build(ref_prog)?;
+
+    // One sample vector per *unique* candidate input array (an array
+    // playing two roles — e.g. sqrt-mag of a single array — must feed
+    // both reference inputs with the same values).
+    let mut rng = Pcg32::new(seed, 0x666e_6263); // "fnbc"
+    let inputs = m.binding.inputs();
+    let mut fills: Vec<(String, Vec<f64>)> = Vec::new();
+    for name in &inputs {
+        if fills.iter().any(|(n, _)| n == name) {
+            continue;
+        }
+        let r = cand.global_array(name).ok_or_else(|| {
+            MiniCError::Runtime(format!(
+                "block input `{name}` is not a global array"
+            ))
+        })?;
+        let len = cand.array(r).data.len();
+        let vals: Vec<f64> = (0..len)
+            .map(|_| rng.next_u32() as f64 / u32::MAX as f64 * 2.0 - 1.0)
+            .collect();
+        cand.array_mut(r).data.copy_from_slice(&vals);
+        fills.push((name.to_string(), vals));
+    }
+    for (name, ref_name) in
+        inputs.iter().zip(m.binding.reference_inputs())
+    {
+        let vals = &fills
+            .iter()
+            .find(|(n, _)| n == name)
+            .expect("filled above")
+            .1;
+        let r = refr.global_array(ref_name).ok_or_else(|| {
+            MiniCError::Runtime(format!(
+                "reference input `{ref_name}` missing"
+            ))
+        })?;
+        let data = &mut refr.array_mut(r).data;
+        if data.len() != vals.len() {
+            return Err(MiniCError::Runtime(format!(
+                "reference `{ref_name}` extent {} != candidate `{name}` {}",
+                data.len(),
+                vals.len()
+            )));
+        }
+        data.copy_from_slice(vals);
+    }
+
+    cand.call(&m.func, &[])?;
+    refr.call("block", &[])?;
+
+    let mut max_err = 0.0f64;
+    for (out, ref_out) in m
+        .binding
+        .outputs()
+        .iter()
+        .zip(m.binding.reference_outputs())
+    {
+        let co = cand.global_array(out).ok_or_else(|| {
+            MiniCError::Runtime(format!(
+                "block output `{out}` is not a global array"
+            ))
+        })?;
+        let ro = refr.global_array(ref_out).ok_or_else(|| {
+            MiniCError::Runtime(format!(
+                "reference output `{ref_out}` missing"
+            ))
+        })?;
+        let cd = &cand.array(co).data;
+        let rd = &refr.array(ro).data;
+        if cd.len() != rd.len() {
+            return Err(MiniCError::Runtime(format!(
+                "output `{out}` extent {} != reference {}",
+                cd.len(),
+                rd.len()
+            )));
+        }
+        for (c, r) in cd.iter().zip(rd) {
+            max_err = max_err.max((c - r).abs());
+        }
+    }
+    Ok(max_err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::funcblock::catalog::BlockKind;
+    use crate::funcblock::detect::detect;
+    use crate::minic::parse;
+    use crate::workloads;
+
+    fn confirm_kind(src: &str, kind: BlockKind) -> Confirmation {
+        let prog = parse(src).unwrap();
+        let catalog = Catalog::builtin();
+        let m = detect(&prog, &catalog)
+            .into_iter()
+            .find(|m| m.kind == kind)
+            .expect("proposed");
+        confirm(&prog, &m, &catalog, EngineKind::default(), 42)
+    }
+
+    #[test]
+    fn tdfir_fir_bank_confirms() {
+        let c = confirm_kind(workloads::TDFIR_C, BlockKind::Fir);
+        assert!(c.is_confirmed(), "{c:?}");
+    }
+
+    #[test]
+    fn mriq_sqrt_magnitude_confirms() {
+        let c = confirm_kind(workloads::MRIQ_C, BlockKind::SqrtMag);
+        assert!(c.is_confirmed(), "{c:?}");
+    }
+
+    #[test]
+    fn sobel_gradient_confirms() {
+        let c = confirm_kind(workloads::SOBEL_C, BlockKind::Stencil2d);
+        assert!(c.is_confirmed(), "{c:?}");
+    }
+
+    #[test]
+    fn synthetic_gemm_confirms() {
+        let src = "
+#define NI 5
+#define NJ 7
+#define NK 3
+float a[NI][NK]; float b[NK][NJ]; float c[NI][NJ];
+void gemm() {
+    for (int i = 0; i < NI; i++) {
+        for (int j = 0; j < NJ; j++) {
+            for (int k = 0; k < NK; k++) {
+                c[i][j] += a[i][k] * b[k][j];
+            }
+        }
+    }
+}
+int main() { gemm(); return 0; }";
+        let c = confirm_kind(src, BlockKind::MatMul);
+        assert!(c.is_confirmed(), "{c:?}");
+    }
+
+    #[test]
+    fn saturating_fir_is_rejected_by_the_sample_test() {
+        // The headline false-positive case: structurally FIR-shaped,
+        // behaviorally different (saturating accumulate). The detector
+        // proposes it; the sample test must kill it.
+        let c = confirm_kind(crate::funcblock::SAT_FIR_SRC, BlockKind::Fir);
+        assert!(
+            matches!(c, Confirmation::Mismatch { .. }),
+            "saturating FIR must be a mismatch, got {c:?}"
+        );
+    }
+
+    #[test]
+    fn scaled_sqrt_magnitude_is_rejected() {
+        // sqrt(a^2 + b^2) * 0.5 written as sqrt((a*0.5)^2 + ...) would
+        // not bind; a plain scaled copy binds structurally via an inner
+        // sqrt but disagrees numerically.
+        let src = "
+#define N 32
+float a[N]; float b[N]; float o[N];
+void mag_biased() {
+    for (int i = 0; i < N; i++) {
+        o[i] = sqrt(a[i] * a[i] + b[i] * b[i]);
+        o[i] = o[i] + 0.001;
+    }
+}
+int main() { mag_biased(); return 0; }";
+        let c = confirm_kind(src, BlockKind::SqrtMag);
+        assert!(
+            matches!(c, Confirmation::Mismatch { .. }),
+            "biased magnitude must mismatch, got {c:?}"
+        );
+    }
+
+    #[test]
+    fn confirmation_is_deterministic_under_a_seed() {
+        let prog = parse(workloads::MRIQ_C).unwrap();
+        let catalog = Catalog::builtin();
+        let m = detect(&prog, &catalog)
+            .into_iter()
+            .find(|m| m.kind == BlockKind::SqrtMag)
+            .unwrap();
+        let a = confirm(&prog, &m, &catalog, EngineKind::default(), 7);
+        let b = confirm(&prog, &m, &catalog, EngineKind::default(), 7);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,612 @@
+//! Function-block detection: propose catalog matches for whole MiniC
+//! functions.
+//!
+//! Two phases, both cheap and both allowed to over-propose:
+//!
+//! 1. **Structural** — the normalized [`FnShape`] is checked against
+//!    each [`super::catalog::BlockSpec`]'s gates (nest depth, operation
+//!    multiset).
+//! 2. **Binding extraction** — the function's loop nest is pattern-
+//!    matched to recover the block's *roles*: which arrays are
+//!    coefficients, inputs, outputs, and what the dimensions are. The
+//!    extraction is deliberately tolerant of extra statements (a
+//!    structurally-FIR-shaped function with, say, a saturating clamp in
+//!    the tap loop still *binds*) because the authority on semantics is
+//!    the sample-test confirmation in [`super::confirm`], never the
+//!    matcher.
+//!
+//! A [`BlockMatch`] is therefore only a *candidate replacement*; nothing
+//! is swapped until the candidate function and the catalog's reference
+//! semantics agree through the VM on sampled inputs.
+
+use crate::minic::ast::{
+    AssignOp, BinOp, Expr, Function, LValue, Stmt, Type,
+};
+use crate::minic::Program;
+
+use super::catalog::{BlockKind, Catalog};
+use super::shape::{shape_of, FnShape};
+
+/// Role assignment of a matched block: candidate array names plus the
+/// dimensions the reference program is instantiated with.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BlockBinding {
+    MatMul {
+        a: String,
+        b: String,
+        out: String,
+        n_i: usize,
+        n_j: usize,
+        n_k: usize,
+    },
+    Fir {
+        coef_r: String,
+        coef_i: String,
+        in_r: String,
+        in_i: String,
+        out_r: String,
+        out_i: String,
+        banks: usize,
+        taps: usize,
+        n_out: usize,
+        n_in: usize,
+    },
+    Stencil2d {
+        input: String,
+        out: String,
+        h: usize,
+        w: usize,
+    },
+    SqrtMag {
+        in_a: String,
+        in_b: String,
+        out: String,
+        n: usize,
+    },
+}
+
+impl BlockBinding {
+    /// Candidate input arrays, in the reference program's fill order
+    /// (may contain duplicates when one array plays two roles).
+    pub fn inputs(&self) -> Vec<&str> {
+        match self {
+            BlockBinding::MatMul { a, b, .. } => vec![a, b],
+            BlockBinding::Fir {
+                coef_r,
+                coef_i,
+                in_r,
+                in_i,
+                ..
+            } => vec![coef_r, coef_i, in_r, in_i],
+            BlockBinding::Stencil2d { input, .. } => vec![input],
+            BlockBinding::SqrtMag { in_a, in_b, .. } => vec![in_a, in_b],
+        }
+    }
+
+    /// Candidate output arrays, in the reference program's compare order.
+    pub fn outputs(&self) -> Vec<&str> {
+        match self {
+            BlockBinding::MatMul { out, .. } => vec![out],
+            BlockBinding::Fir { out_r, out_i, .. } => vec![out_r, out_i],
+            BlockBinding::Stencil2d { out, .. } => vec![out],
+            BlockBinding::SqrtMag { out, .. } => vec![out],
+        }
+    }
+
+    /// The reference program's input array names, aligned with
+    /// [`inputs`](Self::inputs).
+    pub fn reference_inputs(&self) -> Vec<&'static str> {
+        match self {
+            BlockBinding::MatMul { .. } => vec!["fb_a", "fb_b"],
+            BlockBinding::Fir { .. } => {
+                vec!["fb_cr", "fb_ci", "fb_xr", "fb_xi"]
+            }
+            BlockBinding::Stencil2d { .. } => vec!["fb_in"],
+            BlockBinding::SqrtMag { .. } => vec!["fb_a", "fb_b"],
+        }
+    }
+
+    /// The reference program's output array names, aligned with
+    /// [`outputs`](Self::outputs).
+    pub fn reference_outputs(&self) -> Vec<&'static str> {
+        match self {
+            BlockBinding::MatMul { .. } => vec!["fb_c"],
+            BlockBinding::Fir { .. } => vec!["fb_or", "fb_oi"],
+            BlockBinding::Stencil2d { .. } => vec!["fb_out"],
+            BlockBinding::SqrtMag { .. } => vec!["fb_o"],
+        }
+    }
+}
+
+/// A proposed (not yet confirmed) replacement of one function by one
+/// catalog block.
+#[derive(Debug, Clone)]
+pub struct BlockMatch {
+    pub kind: BlockKind,
+    pub func: String,
+    pub binding: BlockBinding,
+    pub shape: FnShape,
+}
+
+/// Detect catalog matches across a whole program. At most one match per
+/// function (first catalog entry that binds wins, in catalog order).
+pub fn detect(prog: &Program, catalog: &Catalog) -> Vec<BlockMatch> {
+    let mut out = Vec::new();
+    for f in &prog.functions {
+        let shape = shape_of(f);
+        for spec in catalog.specs() {
+            if !spec.structural_match(&shape) {
+                continue;
+            }
+            let binding = match spec.kind {
+                BlockKind::MatMul => bind_matmul(prog, f),
+                BlockKind::Fir => bind_fir(prog, f),
+                BlockKind::Stencil2d => bind_stencil2d(prog, f),
+                BlockKind::SqrtMag => bind_sqrtmag(prog, f),
+            };
+            if let Some(binding) = binding {
+                out.push(BlockMatch {
+                    kind: spec.kind,
+                    func: f.name.clone(),
+                    binding,
+                    shape: shape.clone(),
+                });
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Dimensions of a global array declaration.
+fn global_dims(prog: &Program, name: &str) -> Option<Vec<usize>> {
+    prog.globals.iter().find_map(|g| match g {
+        Stmt::Decl {
+            name: n,
+            ty: Type::Array(_, dims),
+            ..
+        } if n == name => Some(dims.clone()),
+        _ => None,
+    })
+}
+
+/// `base[...]` with the given rank.
+fn index_of(e: &Expr, rank: usize) -> Option<&str> {
+    match e {
+        Expr::Index { base, indices } if indices.len() == rank => {
+            Some(base)
+        }
+        _ => None,
+    }
+}
+
+fn as_mul(e: &Expr) -> Option<(&Expr, &Expr)> {
+    match e {
+        Expr::Bin {
+            op: BinOp::Mul,
+            lhs,
+            rhs,
+        } => Some((lhs, rhs)),
+        _ => None,
+    }
+}
+
+/// The chain of singly-nested `for` loops starting at `body` (each
+/// level's *first* `for` statement). Returns each level's body.
+fn loop_chain(body: &[Stmt]) -> Vec<&[Stmt]> {
+    let mut chain: Vec<&[Stmt]> = Vec::new();
+    let mut cur = body;
+    loop {
+        let next = cur.iter().find_map(|s| match s {
+            Stmt::For { body, .. } => Some(body.as_slice()),
+            _ => None,
+        });
+        match next {
+            Some(b) => {
+                chain.push(b);
+                cur = b;
+            }
+            None => return chain,
+        }
+    }
+}
+
+/// `acc += c[·][·] * x[·] (±) c[·][·] * x[·]` — the complex-MAC shape.
+/// Returns (coef, input, coef2, input2) base names.
+fn fir_products(e: &Expr) -> Option<(&str, &str, &str, &str)> {
+    let Expr::Bin {
+        op: BinOp::Add | BinOp::Sub,
+        lhs,
+        rhs,
+    } = e
+    else {
+        return None;
+    };
+    let (c1e, x1e) = as_mul(lhs)?;
+    let (c2e, x2e) = as_mul(rhs)?;
+    Some((
+        index_of(c1e, 2)?,
+        index_of(x1e, 1)?,
+        index_of(c2e, 2)?,
+        index_of(x2e, 1)?,
+    ))
+}
+
+fn bind_fir(prog: &Program, f: &Function) -> Option<BlockBinding> {
+    let chain = loop_chain(&f.body);
+    if chain.len() < 3 {
+        return None;
+    }
+    let inner = chain[chain.len() - 1];
+    let sample = chain[chain.len() - 2];
+
+    // The two complex accumulators in the tap loop. Extra statements
+    // (clamps, debugging) are tolerated — the sample test judges them.
+    let mut accs = inner.iter().filter_map(|s| match s {
+        Stmt::Assign {
+            target: LValue::Var(v),
+            op: AssignOp::AddSet,
+            value,
+            ..
+        } => Some((v.as_str(), value)),
+        _ => None,
+    });
+    let (v_r, e_r) = accs.next()?;
+    let (v_i, e_i) = accs.next()?;
+    let (coef_r, in_r, coef_i, in_i) = fir_products(e_r)?;
+    fir_products(e_i)?;
+
+    // Output write-back in the sample loop: out[·][·] = acc.
+    let out_r = writeback_target(sample, v_r)?;
+    let out_i = writeback_target(sample, v_i)?;
+
+    let cd = global_dims(prog, coef_r)?;
+    let xd = global_dims(prog, in_r)?;
+    let od = global_dims(prog, out_r)?;
+    if cd.len() != 2 || xd.len() != 1 || od.len() != 2 {
+        return None;
+    }
+    if global_dims(prog, coef_i)? != cd
+        || global_dims(prog, in_i)? != xd
+        || global_dims(prog, out_i)? != od
+        || od[0] != cd[0]
+        || xd[0] < od[1] + cd[1] - 1
+    {
+        return None;
+    }
+    Some(BlockBinding::Fir {
+        coef_r: coef_r.into(),
+        coef_i: coef_i.into(),
+        in_r: in_r.into(),
+        in_i: in_i.into(),
+        out_r: out_r.into(),
+        out_i: out_i.into(),
+        banks: cd[0],
+        taps: cd[1],
+        n_out: od[1],
+        n_in: xd[0],
+    })
+}
+
+/// `out[·][·] = acc` in a statement list: the accumulator's write-back
+/// array.
+fn writeback_target<'a>(stmts: &'a [Stmt], acc: &str) -> Option<&'a str> {
+    stmts.iter().find_map(|s| match s {
+        Stmt::Assign {
+            target: LValue::Index { base, indices },
+            op: AssignOp::Set,
+            value: Expr::Var(v),
+            ..
+        } if indices.len() == 2 && v == acc => Some(base.as_str()),
+        _ => None,
+    })
+}
+
+fn bind_matmul(prog: &Program, f: &Function) -> Option<BlockBinding> {
+    let chain = loop_chain(&f.body);
+    if chain.len() < 3 {
+        return None;
+    }
+    let inner = chain[chain.len() - 1];
+    let (out, a, b) = inner.iter().find_map(|s| match s {
+        Stmt::Assign {
+            target: LValue::Index { base, indices },
+            op: AssignOp::AddSet,
+            value,
+            ..
+        } if indices.len() == 2 => {
+            let (ae, be) = as_mul(value)?;
+            Some((base.as_str(), index_of(ae, 2)?, index_of(be, 2)?))
+        }
+        _ => None,
+    })?;
+    let ad = global_dims(prog, a)?;
+    let bd = global_dims(prog, b)?;
+    let od = global_dims(prog, out)?;
+    if ad.len() != 2 || bd.len() != 2 || od.len() != 2 {
+        return None;
+    }
+    // C[i][j] += A[i][k] * B[k][j]: dims must chain.
+    if ad[0] != od[0] || bd[1] != od[1] || ad[1] != bd[0] {
+        return None;
+    }
+    Some(BlockBinding::MatMul {
+        a: a.into(),
+        b: b.into(),
+        out: out.into(),
+        n_i: od[0],
+        n_j: od[1],
+        n_k: ad[1],
+    })
+}
+
+fn bind_stencil2d(prog: &Program, f: &Function) -> Option<BlockBinding> {
+    let chain = loop_chain(&f.body);
+    if chain.len() != 2 {
+        return None;
+    }
+    let inner = chain[1];
+
+    // The gradient accumulator declarations read the input array.
+    let input = inner.iter().find_map(|s| match s {
+        Stmt::Decl {
+            init: Some(e), ..
+        } => {
+            let mut found = None;
+            e.walk(&mut |sub| {
+                if found.is_none() {
+                    if let Some(base) = index_of(sub, 2) {
+                        found = Some(base.to_string());
+                    }
+                }
+            });
+            found
+        }
+        _ => None,
+    })?;
+
+    // The magnitude write: out[y][x] = sqrt(g1*g1 + g2*g2).
+    let out = inner.iter().find_map(|s| match s {
+        Stmt::Assign {
+            target: LValue::Index { base, indices },
+            op: AssignOp::Set,
+            value:
+                Expr::Call {
+                    name,
+                    args,
+                },
+            ..
+        } if indices.len() == 2 && name == "sqrt" && args.len() == 1 => {
+            let Expr::Bin {
+                op: BinOp::Add,
+                lhs,
+                rhs,
+            } = &args[0]
+            else {
+                return None;
+            };
+            as_mul(lhs)?;
+            as_mul(rhs)?;
+            Some(base.as_str())
+        }
+        _ => None,
+    })?;
+
+    let id = global_dims(prog, &input)?;
+    let od = global_dims(prog, out)?;
+    if id.len() != 2 || od != id || id[0] < 3 || id[1] < 3 {
+        return None;
+    }
+    Some(BlockBinding::Stencil2d {
+        input,
+        out: out.into(),
+        h: id[0],
+        w: id[1],
+    })
+}
+
+fn bind_sqrtmag(prog: &Program, f: &Function) -> Option<BlockBinding> {
+    let chain = loop_chain(&f.body);
+    if chain.len() != 1 {
+        return None;
+    }
+    let (out, a, b) = chain[0].iter().find_map(|s| match s {
+        Stmt::Assign {
+            target: LValue::Index { base, indices },
+            op: AssignOp::Set,
+            value: Expr::Call { name, args },
+            ..
+        } if indices.len() == 1 && name == "sqrt" && args.len() == 1 => {
+            let Expr::Bin {
+                op: BinOp::Add,
+                lhs,
+                rhs,
+            } = &args[0]
+            else {
+                return None;
+            };
+            let (a1, a2) = as_mul(lhs)?;
+            let (b1, b2) = as_mul(rhs)?;
+            let a = index_of(a1, 1)?;
+            let b = index_of(b1, 1)?;
+            if index_of(a2, 1)? != a || index_of(b2, 1)? != b {
+                return None;
+            }
+            Some((base.as_str(), a, b))
+        }
+        _ => None,
+    })?;
+    let od = global_dims(prog, out)?;
+    let ad = global_dims(prog, a)?;
+    let bd = global_dims(prog, b)?;
+    if od.len() != 1 || ad.len() != 1 || bd.len() != 1 {
+        return None;
+    }
+    let n = od[0];
+    if ad[0] < n || bd[0] < n {
+        return None;
+    }
+    Some(BlockBinding::SqrtMag {
+        in_a: a.into(),
+        in_b: b.into(),
+        out: out.into(),
+        n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::parse;
+    use crate::workloads;
+
+    fn detect_in(src: &str) -> Vec<BlockMatch> {
+        detect(&parse(src).unwrap(), &Catalog::builtin())
+    }
+
+    #[test]
+    fn tdfir_proposes_the_fir_bank() {
+        let ms = detect_in(workloads::TDFIR_C);
+        let fir = ms
+            .iter()
+            .find(|m| m.kind == BlockKind::Fir)
+            .expect("fir_all proposed");
+        assert_eq!(fir.func, "fir_all");
+        let BlockBinding::Fir {
+            coef_r,
+            in_r,
+            out_r,
+            banks,
+            taps,
+            n_out,
+            n_in,
+            ..
+        } = &fir.binding
+        else {
+            panic!("fir binding");
+        };
+        assert_eq!(coef_r, "hrevr");
+        assert_eq!(in_r, "xr");
+        assert_eq!(out_r, "outr");
+        assert_eq!((*banks, *taps, *n_out, *n_in), (8, 16, 1024, 1040));
+    }
+
+    #[test]
+    fn mriq_proposes_sqrt_magnitude() {
+        let ms = detect_in(workloads::MRIQ_C);
+        let m = ms
+            .iter()
+            .find(|m| m.kind == BlockKind::SqrtMag)
+            .expect("magnitude proposed");
+        assert_eq!(m.func, "magnitude");
+        assert_eq!(
+            m.binding,
+            BlockBinding::SqrtMag {
+                in_a: "qr".into(),
+                in_b: "qi".into(),
+                out: "qmag".into(),
+                n: 1536,
+            }
+        );
+    }
+
+    #[test]
+    fn sobel_proposes_the_gradient_stencil() {
+        let ms = detect_in(workloads::SOBEL_C);
+        let m = ms
+            .iter()
+            .find(|m| m.kind == BlockKind::Stencil2d)
+            .expect("gradient proposed");
+        assert_eq!(m.func, "gradient");
+        assert_eq!(
+            m.binding,
+            BlockBinding::Stencil2d {
+                input: "tmp".into(),
+                out: "gmag".into(),
+                h: 96,
+                w: 96,
+            }
+        );
+        // blur has no sqrt: it must not be proposed as a stencil core.
+        assert!(ms.iter().all(|m| m.func != "blur"));
+    }
+
+    #[test]
+    fn matmul_binds_on_a_synthetic_gemm() {
+        let src = "
+#define NI 8
+#define NJ 12
+#define NK 6
+float a[NI][NK]; float b[NK][NJ]; float c[NI][NJ];
+void gemm() {
+    for (int i = 0; i < NI; i++) {
+        for (int j = 0; j < NJ; j++) {
+            for (int k = 0; k < NK; k++) {
+                c[i][j] += a[i][k] * b[k][j];
+            }
+        }
+    }
+}
+int main() { gemm(); return 0; }";
+        let ms = detect_in(src);
+        let m = ms
+            .iter()
+            .find(|m| m.kind == BlockKind::MatMul)
+            .expect("gemm proposed");
+        assert_eq!(
+            m.binding,
+            BlockBinding::MatMul {
+                a: "a".into(),
+                b: "b".into(),
+                out: "c".into(),
+                n_i: 8,
+                n_j: 12,
+                n_k: 6,
+            }
+        );
+    }
+
+    #[test]
+    fn mismatched_gemm_dims_do_not_bind() {
+        let src = "
+#define NI 8
+#define NJ 12
+#define NK 6
+float a[NI][NK]; float b[NJ][NK]; float c[NI][NJ];
+void gemm() {
+    for (int i = 0; i < NI; i++) {
+        for (int j = 0; j < NJ; j++) {
+            for (int k = 0; k < NK; k++) {
+                c[i][j] += a[i][k] * b[j][k];
+            }
+        }
+    }
+}
+int main() { gemm(); return 0; }";
+        assert!(detect_in(src)
+            .iter()
+            .all(|m| m.kind != BlockKind::MatMul));
+    }
+
+    #[test]
+    fn scalar_side_effects_disqualify_a_function() {
+        // energy() is loop-shaped but folds into a global scalar — its
+        // effect is invisible to array comparison, so it is never
+        // proposed.
+        let ms = detect_in(workloads::TDFIR_C);
+        assert!(ms.iter().all(|m| m.func != "energy"));
+    }
+
+    #[test]
+    fn saturating_fir_is_still_proposed() {
+        // Structurally FIR-shaped with an extra clamp: the detector must
+        // propose it (rejection is the sample test's job — see
+        // funcblock::confirm tests).
+        let ms = detect_in(crate::funcblock::SAT_FIR_SRC);
+        let m = ms
+            .iter()
+            .find(|m| m.kind == BlockKind::Fir)
+            .expect("saturating fir proposed");
+        assert_eq!(m.func, "fir_sat");
+    }
+}

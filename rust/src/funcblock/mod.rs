@@ -1,0 +1,68 @@
+//! Function-block offloading (arXiv:2004.09883 / arXiv:2005.04174): the
+//! follow-on to loop-statement offloading that recognizes *whole
+//! algorithmic blocks* and swaps in catalogued FPGA IP cores / GPU
+//! libraries instead of GA-searching loop subsets.
+//!
+//! The subsystem composes with — never replaces — the loop funnel:
+//!
+//! 1. [`shape`] normalizes every function (interned names, loop
+//!    skeleton, operation multiset);
+//! 2. [`detect`] proposes [`catalog`] matches and extracts role
+//!    bindings (which arrays are coefficients / inputs / outputs);
+//! 3. [`confirm`] behaviorally verifies each proposal by running the
+//!    candidate function and the catalog's reference semantics through
+//!    the slot-resolved VM on sampled inputs — the paper's "verify by
+//!    sample test" discipline, so structurally-similar-but-semantically-
+//!    different functions are never replaced;
+//! 4. [`plan`] gathers profiled figures per confirmed block; each
+//!    [`crate::search::Backend`] prices it for its destination, and the
+//!    staged [`crate::envadapt::Pipeline`] claims the block's loops away
+//!    from the loop funnel and folds the core's time into the combined
+//!    plan.
+//!
+//! Enable per request via
+//! [`crate::envadapt::OffloadRequestBuilder::func_blocks`] (CLI:
+//! `repro offload --func-blocks`, `repro batch --func-blocks`).
+
+pub mod catalog;
+pub mod confirm;
+pub mod detect;
+pub mod plan;
+pub mod shape;
+
+pub use catalog::{
+    BlockKind, BlockSpec, Catalog, CpuLibModel, FpgaCoreModel, GpuLibModel,
+};
+pub use confirm::{confirm, Confirmation};
+pub use detect::{detect, BlockBinding, BlockMatch};
+pub use plan::{find_blocks, BlockCost, BlockReplacement, ConfirmedBlock};
+pub use shape::{shape_of, FnShape, OpMultiset};
+
+/// Structurally FIR-shaped, behaviorally different (saturating
+/// accumulate) — the canonical false-positive fixture shared by the
+/// detect / confirm / plan test suites.
+#[cfg(test)]
+pub(crate) const SAT_FIR_SRC: &str = "
+#define M 4
+#define K 8
+#define N 64
+#define NIN 71
+float cr[M][K]; float ci[M][K];
+float xr[NIN]; float xi[NIN];
+float outr[M][N]; float outi[M][N];
+void fir_sat() {
+    for (int m = 0; m < M; m++) {
+        for (int n = 0; n < N; n++) {
+            float ar = 0.0;
+            float ai = 0.0;
+            for (int k = 0; k < K; k++) {
+                ar += cr[m][k] * xr[n + k] - ci[m][k] * xi[n + k];
+                ai += cr[m][k] * xi[n + k] + ci[m][k] * xr[n + k];
+                ar = fmin(ar, 0.5);
+            }
+            outr[m][n] = ar;
+            outi[m][n] = ai;
+        }
+    }
+}
+int main() { fir_sat(); return 0; }";

@@ -1,0 +1,390 @@
+//! The replacement planner: turn confirmed block matches into priced,
+//! claim-carrying replacements the offload pipeline can act on.
+//!
+//! Detection proposes, confirmation verifies, and this module decides:
+//! for each behaviorally-confirmed block it gathers the *dynamic*
+//! figures a pricing model needs (profiled op counts, innermost
+//! iteration totals, invocation counts, transfer footprints) into a
+//! [`ConfirmedBlock`], and exposes the profitability arithmetic shared
+//! by every destination's [`crate::search::Backend`] pricing hook.
+//!
+//! A replacement **claims** every loop of its function: the narrowing
+//! funnel must not offer those loops to the GA/funnel loop search again
+//! (they are pre-claimed regions), and the combined plan accounts the
+//! block's time instead of their CPU time.
+
+use crate::analysis::Analysis;
+use crate::minic::ast::LoopId;
+use crate::minic::{EngineKind, OpCounts, Program};
+
+use super::catalog::{BlockKind, Catalog};
+use super::confirm::{confirm, Confirmation};
+use super::detect::{detect, BlockBinding, BlockMatch};
+
+/// A behaviorally-confirmed block with the dynamic figures pricing
+/// needs. Destination-independent — one of these is priced once per
+/// backend.
+#[derive(Debug, Clone)]
+pub struct ConfirmedBlock {
+    pub kind: BlockKind,
+    pub func: String,
+    pub binding: BlockBinding,
+    /// Every loop of the replaced function — the pre-claimed region the
+    /// loop funnel must skip.
+    pub loops: Vec<LoopId>,
+    /// Profiled op counts of the function's top-level loops (nested
+    /// loops included via the profiler's subtree attribution).
+    pub ops: OpCounts,
+    /// Total innermost iterations across the profiling run (the work
+    /// units a spatial core consumes).
+    pub inner_units: u64,
+    /// Outer-loop entries — how many times the block's buffers cross
+    /// the PCIe boundary.
+    pub entries: u64,
+    /// Input / output transfer footprints, bytes.
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Worst sample-test error observed during confirmation.
+    pub max_abs_err: f64,
+}
+
+/// What one destination charges for one confirmed block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockCost {
+    /// Naive loop-nest time on the all-CPU baseline, seconds.
+    pub cpu_s: f64,
+    /// IP-core / library time on the destination (compute + transfers),
+    /// seconds.
+    pub accel_s: f64,
+    /// Destination build (core integration / library link), seconds.
+    pub build_s: f64,
+}
+
+impl BlockCost {
+    /// A replacement is planned only when the destination strictly
+    /// beats the naive nest.
+    pub fn profitable(&self) -> bool {
+        self.accel_s < self.cpu_s
+    }
+}
+
+/// A priced replacement bound for one destination — what the pipeline
+/// carries into the solution and the pattern DB.
+#[derive(Debug, Clone)]
+pub struct BlockReplacement {
+    pub kind: BlockKind,
+    pub func: String,
+    pub ip_name: &'static str,
+    /// Claimed loops (the whole function's).
+    pub loops: Vec<LoopId>,
+    pub cpu_s: f64,
+    pub accel_s: f64,
+    pub build_s: f64,
+    /// Sample-test outcome. Always `true` for planned replacements —
+    /// unconfirmed matches never reach this type — recorded so reports
+    /// and the pattern DB state it explicitly.
+    pub confirmed: bool,
+}
+
+impl BlockReplacement {
+    /// Block-local speedup (naive nest vs core).
+    pub fn speedup(&self) -> f64 {
+        if self.accel_s > 0.0 {
+            self.cpu_s / self.accel_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Detect, confirm, and measure every function block in a program.
+/// Returns destination-independent confirmed blocks; pricing is the
+/// backend's job. Conservative by construction:
+///
+/// * the profiled entry function itself is never replaced;
+/// * every loop of the function must have executed under the profiling
+///   run (a cold block has no figures to price);
+/// * the function's observable arrays must be fully covered by the
+///   binding (no hidden inputs or outputs);
+/// * the sample test must confirm behavior.
+pub fn find_blocks(
+    prog: &Program,
+    analysis: &Analysis,
+    catalog: &Catalog,
+    engine: EngineKind,
+    seed: u64,
+) -> Vec<ConfirmedBlock> {
+    let mut out: Vec<ConfirmedBlock> = Vec::new();
+    for m in detect(prog, catalog) {
+        if m.func == analysis.entry {
+            continue;
+        }
+        let Some(cb) = measure_block(prog, analysis, &m) else {
+            continue;
+        };
+        // One claim per loop: a function already claimed (two catalog
+        // kinds binding the same body) keeps its first match.
+        if cb
+            .loops
+            .iter()
+            .any(|l| out.iter().any(|o| o.loops.contains(l)))
+        {
+            continue;
+        }
+        match confirm(prog, &m, catalog, engine, seed) {
+            Confirmation::Confirmed { max_abs_err } => {
+                out.push(ConfirmedBlock {
+                    max_abs_err,
+                    ..cb
+                });
+            }
+            Confirmation::Mismatch { .. } | Confirmation::Error(_) => {}
+        }
+    }
+    out
+}
+
+/// Dynamic figures for one match, or `None` when the block is not
+/// soundly replaceable (cold loops, uncovered arrays).
+fn measure_block(
+    prog: &Program,
+    analysis: &Analysis,
+    m: &BlockMatch,
+) -> Option<ConfirmedBlock> {
+    let loops: Vec<LoopId> = analysis
+        .loops
+        .iter()
+        .filter(|l| l.info.function == m.func)
+        .map(|l| l.id())
+        .collect();
+    if loops.is_empty() {
+        return None;
+    }
+
+    // Top-level loops of the function: their profiles subsume nested
+    // work via the profiler's delta attribution.
+    let tops: Vec<LoopId> = analysis
+        .loops
+        .iter()
+        .filter(|l| l.info.function == m.func && l.info.parent.is_none())
+        .map(|l| l.id())
+        .collect();
+
+    let mut ops = OpCounts::default();
+    let mut entries = 0u64;
+    for id in &tops {
+        let lp = analysis.profile.loop_profile(*id)?;
+        ops = ops.plus(&lp.ops);
+        entries = entries.max(lp.entries);
+    }
+    // Every claimed loop must have run (cold loops make the block's
+    // behavior unobserved along some path — do not replace).
+    let mut inner_units = 0u64;
+    for id in &loops {
+        let lp = analysis.profile.loop_profile(*id)?;
+        inner_units = inner_units.max(lp.trips);
+    }
+
+    // Full coverage of the observable state: everything the function's
+    // loops touch must be a bound input or output, and the nest must
+    // not depend on *free* global scalars — the sample test zero-fills
+    // everything except the bound input arrays, so a caller-set scalar
+    // (a shift, a scale) would be confirmed against its zero value and
+    // silently mis-replaced in production.
+    let inputs = m.binding.inputs();
+    let outputs = m.binding.outputs();
+    for id in &tops {
+        let info = &analysis.loop_by_id(*id)?.info;
+        if !info.free_scalars.is_empty() {
+            return None;
+        }
+        for r in &info.arrays_read {
+            if !inputs.contains(&r.as_str())
+                && !outputs.contains(&r.as_str())
+            {
+                return None;
+            }
+        }
+        for w in &info.arrays_written {
+            if !outputs.contains(&w.as_str()) {
+                return None;
+            }
+        }
+    }
+
+    let array_bytes = |name: &str| -> u64 {
+        global_array_bytes(prog, name).unwrap_or(0)
+    };
+    let mut seen: Vec<&str> = Vec::new();
+    let mut bytes_in = 0u64;
+    for &name in &inputs {
+        if !seen.contains(&name) {
+            seen.push(name);
+            bytes_in += array_bytes(name);
+        }
+    }
+    let bytes_out: u64 = outputs.iter().map(|n| array_bytes(n)).sum();
+
+    Some(ConfirmedBlock {
+        kind: m.kind,
+        func: m.func.clone(),
+        binding: m.binding.clone(),
+        loops,
+        ops,
+        inner_units,
+        entries: entries.max(1),
+        bytes_in,
+        bytes_out,
+        max_abs_err: 0.0,
+    })
+}
+
+/// Byte size of a global array declaration.
+fn global_array_bytes(prog: &Program, name: &str) -> Option<u64> {
+    prog.globals.iter().find_map(|g| match g {
+        crate::minic::ast::Stmt::Decl {
+            name: n,
+            ty: crate::minic::ast::Type::Array(elem, dims),
+            ..
+        } if n == name => Some(
+            dims.iter().product::<usize>() as u64 * elem.size_bytes(),
+        ),
+        _ => None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::minic::parse;
+    use crate::workloads;
+
+    fn blocks_for(src: &str) -> (Program, Analysis, Vec<ConfirmedBlock>) {
+        let prog = parse(src).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let blocks = find_blocks(
+            &prog,
+            &an,
+            &Catalog::builtin(),
+            EngineKind::default(),
+            42,
+        );
+        (prog, an, blocks)
+    }
+
+    #[test]
+    fn tdfir_plans_the_fir_bank_with_profiled_figures() {
+        let (_p, an, blocks) = blocks_for(workloads::TDFIR_C);
+        let fir = blocks
+            .iter()
+            .find(|b| b.kind == BlockKind::Fir)
+            .expect("fir bank planned");
+        assert_eq!(fir.func, "fir_all");
+        // fir_all is L12..L15.
+        assert_eq!(
+            fir.loops,
+            vec![LoopId(12), LoopId(13), LoopId(14), LoopId(15)]
+        );
+        // REP * M * N * K innermost iterations.
+        assert_eq!(fir.inner_units, 2 * 8 * 1024 * 16);
+        assert_eq!(fir.entries, 1);
+        // Coef (2 × 8×16) + input (2 × 1040) floats in, 2 × 8×1024 out.
+        assert_eq!(fir.bytes_in, (2 * 8 * 16 + 2 * 1040) * 4);
+        assert_eq!(fir.bytes_out, 2 * 8 * 1024 * 4);
+        assert!(fir.ops.f_mul > 0);
+        // The claimed ops are a strict subset of the whole program's.
+        assert!(fir.ops.f_mul < an.profile.total.f_mul);
+    }
+
+    #[test]
+    fn every_bundled_app_plans_at_least_one_block() {
+        for app in workloads::APPS {
+            let (_p, _an, blocks) =
+                blocks_for(workloads::source(app).unwrap());
+            assert!(
+                !blocks.is_empty(),
+                "{app}: no confirmed block — catalog no longer covers it"
+            );
+        }
+    }
+
+    #[test]
+    fn saturating_fir_never_reaches_the_plan() {
+        let (_p, _an, blocks) = blocks_for(crate::funcblock::SAT_FIR_SRC);
+        assert!(
+            blocks.is_empty(),
+            "behaviorally-different FIR must not be planned: {blocks:?}"
+        );
+    }
+
+    #[test]
+    fn entry_function_is_never_replaced() {
+        // A program whose entry itself is a perfect sqrt-mag block: the
+        // entry is the thing being offloaded, not a callee to replace.
+        let src = "
+#define N 16
+float a[N]; float b[N]; float o[N];
+int main() {
+    for (int i = 0; i < N; i++) { o[i] = sqrt(a[i] * a[i] + b[i] * b[i]); }
+    return 0;
+}";
+        let (_p, _an, blocks) = blocks_for(src);
+        assert!(blocks.is_empty());
+    }
+
+    #[test]
+    fn free_scalar_dependence_is_never_replaced() {
+        // Behavior depends on a caller-set global scalar: the sample
+        // test would only ever see its zero value (candidate and
+        // reference agree under shift == 0), so without the free-scalar
+        // gate this would be confirmed — and then mis-replaced for the
+        // production run where main() sets shift = 1.
+        let src = "
+#define N 16
+int shift;
+float a[N]; float b[N]; float o[N];
+void mag() {
+    for (int i = 0; i < N; i++) {
+        o[i] = sqrt(a[(i + shift) % N] * a[(i + shift) % N] + b[i] * b[i]);
+    }
+}
+int main() { shift = 1; mag(); return 0; }";
+        let (_p, _an, blocks) = blocks_for(src);
+        assert!(
+            blocks.is_empty(),
+            "free-scalar-dependent block must not be replaced: {blocks:?}"
+        );
+    }
+
+    #[test]
+    fn cold_blocks_are_not_planned() {
+        // The block function never runs under the profiling entry: no
+        // figures, no replacement.
+        let src = "
+#define N 16
+float a[N]; float b[N]; float o[N];
+void mag() {
+    for (int i = 0; i < N; i++) { o[i] = sqrt(a[i] * a[i] + b[i] * b[i]); }
+}
+int main() { return 0; }";
+        let (_p, _an, blocks) = blocks_for(src);
+        assert!(blocks.is_empty());
+    }
+
+    #[test]
+    fn block_cost_profitability() {
+        let c = BlockCost {
+            cpu_s: 1.0,
+            accel_s: 0.2,
+            build_s: 60.0,
+        };
+        assert!(c.profitable());
+        let flat = BlockCost {
+            cpu_s: 1.0,
+            accel_s: 1.0,
+            build_s: 0.0,
+        };
+        assert!(!flat.profitable());
+    }
+}

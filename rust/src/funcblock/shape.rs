@@ -1,0 +1,329 @@
+//! Resolve-level canonicalization of MiniC function bodies.
+//!
+//! Function-block detection (arXiv:2004.09883 §III: "detection of offload
+//! target function blocks") must not depend on identifier spelling or
+//! statement noise, so every function is first normalized into a
+//! [`FnShape`]:
+//!
+//! * **interned names** — array identifiers become dense `u32` ids in a
+//!   per-function intern table (the same trick [`crate::minic::resolve`]
+//!   plays for the VM), so two FIR banks with differently named taps
+//!   normalize identically;
+//! * **loop-structure skeleton** — the nest shape as a paren string
+//!   (`"(((())))"` for a four-deep nest), which is what separates a
+//!   matmul from an elementwise map long before any semantics run;
+//! * **operation multiset** — static counts of multiplies, adds,
+//!   divides, `sqrt`, transcendentals, min/max and comparisons over the
+//!   whole body.
+//!
+//! The shape is deliberately lossy: it exists to *propose* catalog
+//! matches cheaply. Every proposal is then behaviorally confirmed by
+//! [`super::confirm`] — the paper's "verify by sample test" discipline —
+//! so a shape that over-matches costs a confirmation run, never a wrong
+//! replacement.
+
+use crate::minic::ast::{Expr, Function, LValue, LoopId, Stmt};
+
+/// Static operation multiset of a function body (syntactic counts — the
+/// dynamic profile is the planner's job, not the detector's).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpMultiset {
+    pub mul: u32,
+    pub add_sub: u32,
+    pub div: u32,
+    pub sqrt: u32,
+    /// sin/cos/tan/exp/log/pow.
+    pub trig: u32,
+    /// fmin/fmax/fabs/floor/ceil.
+    pub minmax: u32,
+    pub cmp: u32,
+    /// Calls to user-defined (non-builtin) functions.
+    pub user_calls: u32,
+}
+
+/// Canonical form of one function: what block detection matches against.
+#[derive(Debug, Clone)]
+pub struct FnShape {
+    pub func: String,
+    pub params: usize,
+    /// Loop-nest skeleton: one `(` ... `)` pair per loop statement,
+    /// nesting mirrored, siblings adjacent.
+    pub skeleton: String,
+    /// Deepest loop nesting level (1 = a single non-nested loop).
+    pub max_depth: usize,
+    pub ops: OpMultiset,
+    /// Intern table: array names referenced anywhere in the body.
+    pub arrays: Vec<String>,
+    /// Interned ids of arrays read (indexed loads).
+    pub reads: Vec<u32>,
+    /// Interned ids of arrays written (indexed stores).
+    pub writes: Vec<u32>,
+    /// Every loop statement in the body, in source order.
+    pub loops: Vec<LoopId>,
+    /// Whether the body assigns to a bare (non-indexed) name that is not
+    /// declared locally — i.e. mutates a global scalar. Such side
+    /// effects are invisible to array-output comparison, so the detector
+    /// refuses to propose these functions.
+    pub writes_outer_scalar: bool,
+}
+
+impl FnShape {
+    pub fn intern_id(&self, name: &str) -> Option<u32> {
+        self.arrays
+            .iter()
+            .position(|a| a == name)
+            .map(|i| i as u32)
+    }
+
+    pub fn reads_array(&self, name: &str) -> bool {
+        self.intern_id(name)
+            .is_some_and(|id| self.reads.contains(&id))
+    }
+
+    pub fn writes_array(&self, name: &str) -> bool {
+        self.intern_id(name)
+            .is_some_and(|id| self.writes.contains(&id))
+    }
+}
+
+/// Normalize one function.
+pub fn shape_of(f: &Function) -> FnShape {
+    let mut sh = Shaper {
+        shape: FnShape {
+            func: f.name.clone(),
+            params: f.params.len(),
+            skeleton: String::new(),
+            max_depth: 0,
+            ops: OpMultiset::default(),
+            arrays: Vec::new(),
+            reads: Vec::new(),
+            writes: Vec::new(),
+            loops: Vec::new(),
+            writes_outer_scalar: false,
+        },
+        depth: 0,
+        locals: Vec::new(),
+    };
+    sh.locals
+        .extend(f.params.iter().map(|p| p.name.clone()));
+    for s in &f.body {
+        sh.stmt(s);
+    }
+    sh.shape
+}
+
+struct Shaper {
+    shape: FnShape,
+    depth: usize,
+    /// Names declared in the body so far (flat — canonicalization does
+    /// not need scope-exact resolution, only local-vs-outer).
+    locals: Vec<String>,
+}
+
+impl Shaper {
+    fn intern(&mut self, name: &str) -> u32 {
+        if let Some(id) = self.shape.intern_id(name) {
+            return id;
+        }
+        self.shape.arrays.push(name.to_string());
+        (self.shape.arrays.len() - 1) as u32
+    }
+
+    fn note_read(&mut self, name: &str) {
+        let id = self.intern(name);
+        if !self.shape.reads.contains(&id) {
+            self.shape.reads.push(id);
+        }
+    }
+
+    fn note_write(&mut self, name: &str) {
+        let id = self.intern(name);
+        if !self.shape.writes.contains(&id) {
+            self.shape.writes.push(id);
+        }
+    }
+
+    fn stmt(&mut self, s: &Stmt) {
+        match s {
+            Stmt::Decl { name, init, .. } => {
+                self.locals.push(name.clone());
+                if let Some(e) = init {
+                    self.expr(e);
+                }
+            }
+            Stmt::Assign { target, op, value, .. } => {
+                self.expr(value);
+                if *op != crate::minic::ast::AssignOp::Set {
+                    self.shape.ops.add_sub += 1;
+                }
+                match target {
+                    LValue::Var(n) => {
+                        if !self.locals.iter().any(|l| l == n) {
+                            self.shape.writes_outer_scalar = true;
+                        }
+                    }
+                    LValue::Index { base, indices } => {
+                        for i in indices {
+                            self.expr(i);
+                        }
+                        self.note_write(base);
+                    }
+                }
+            }
+            Stmt::If { cond, then_branch, else_branch, .. } => {
+                self.expr(cond);
+                self.shape.ops.cmp += 1;
+                for s in then_branch.iter().chain(else_branch) {
+                    self.stmt(s);
+                }
+            }
+            Stmt::For { id, init, cond, step, body, .. } => {
+                self.shape.loops.push(*id);
+                if let Some(s) = init {
+                    self.stmt(s);
+                }
+                if let Some(e) = cond {
+                    self.expr(e);
+                }
+                self.open_loop(body, step.as_deref());
+            }
+            Stmt::While { id, cond, body, .. } => {
+                self.shape.loops.push(*id);
+                self.expr(cond);
+                self.open_loop(body, None);
+            }
+            Stmt::Return { value, .. } => {
+                if let Some(e) = value {
+                    self.expr(e);
+                }
+            }
+            Stmt::ExprStmt { expr, .. } => self.expr(expr),
+        }
+    }
+
+    fn open_loop(&mut self, body: &[Stmt], step: Option<&Stmt>) {
+        self.depth += 1;
+        self.shape.max_depth = self.shape.max_depth.max(self.depth);
+        self.shape.skeleton.push('(');
+        for s in body {
+            self.stmt(s);
+        }
+        if let Some(s) = step {
+            self.stmt(s);
+        }
+        self.shape.skeleton.push(')');
+        self.depth -= 1;
+    }
+
+    fn expr(&mut self, e: &Expr) {
+        use crate::minic::ast::BinOp::*;
+        match e {
+            Expr::Index { base, indices } => {
+                for i in indices {
+                    self.expr(i);
+                }
+                self.note_read(base);
+            }
+            Expr::Bin { op, lhs, rhs } => {
+                self.expr(lhs);
+                self.expr(rhs);
+                match op {
+                    Mul => self.shape.ops.mul += 1,
+                    Add | Sub => self.shape.ops.add_sub += 1,
+                    Div | Rem => self.shape.ops.div += 1,
+                    Eq | Ne | Lt | Gt | Le | Ge => self.shape.ops.cmp += 1,
+                    And | Or => self.shape.ops.cmp += 1,
+                }
+            }
+            Expr::Un { operand, .. } | Expr::Cast { operand, .. } => {
+                self.expr(operand)
+            }
+            Expr::Call { name, args } => {
+                for a in args {
+                    self.expr(a);
+                }
+                match name.as_str() {
+                    "sqrt" | "sqrtf" => self.shape.ops.sqrt += 1,
+                    "sin" | "cos" | "tan" | "exp" | "log" | "pow" => {
+                        self.shape.ops.trig += 1
+                    }
+                    "fmin" | "fmax" | "fabs" | "floor" | "ceil" => {
+                        self.shape.ops.minmax += 1
+                    }
+                    "printf" => {}
+                    _ => self.shape.ops.user_calls += 1,
+                }
+            }
+            Expr::IntLit(_)
+            | Expr::FloatLit(_)
+            | Expr::StrLit(_)
+            | Expr::Var(_) => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::parse;
+    use crate::workloads;
+
+    fn shape(src: &str, func: &str) -> FnShape {
+        let prog = parse(src).unwrap();
+        shape_of(prog.function(func).unwrap())
+    }
+
+    #[test]
+    fn fir_all_skeleton_is_a_four_deep_nest() {
+        let s = shape(workloads::TDFIR_C, "fir_all");
+        assert_eq!(s.skeleton, "(((())))");
+        assert_eq!(s.max_depth, 4);
+        assert!(s.ops.mul >= 4);
+        assert!(s.ops.add_sub >= 4);
+        assert!(!s.writes_outer_scalar);
+        assert_eq!(s.loops.len(), 4);
+    }
+
+    #[test]
+    fn magnitude_is_a_single_sqrt_loop() {
+        let s = shape(workloads::MRIQ_C, "magnitude");
+        assert_eq!(s.skeleton, "()");
+        assert_eq!(s.max_depth, 1);
+        assert_eq!(s.ops.sqrt, 1);
+        assert!(s.reads_array("qr") && s.reads_array("qi"));
+        assert!(s.writes_array("qmag"));
+    }
+
+    #[test]
+    fn interning_is_spelling_independent() {
+        let a = shape(
+            "#define N 8\nfloat x[N]; float y[N];\n\
+             void f() { for (int i = 0; i < N; i++) { y[i] = x[i] * 2.0; } }",
+            "f",
+        );
+        let b = shape(
+            "#define N 8\nfloat alpha[N]; float beta[N];\n\
+             void f() { for (int i = 0; i < N; i++) { beta[i] = alpha[i] * 2.0; } }",
+            "f",
+        );
+        assert_eq!(a.skeleton, b.skeleton);
+        assert_eq!(a.ops, b.ops);
+        assert_eq!(a.reads, b.reads);
+        assert_eq!(a.writes, b.writes);
+    }
+
+    #[test]
+    fn global_scalar_writes_are_flagged() {
+        let s = shape(workloads::TDFIR_C, "energy");
+        assert!(s.writes_outer_scalar);
+        let ok = shape(workloads::TDFIR_C, "clear_out");
+        assert!(!ok.writes_outer_scalar);
+    }
+
+    #[test]
+    fn siblings_sit_adjacent_in_the_skeleton() {
+        let s = shape(workloads::SOBEL_C, "stats");
+        assert_eq!(s.skeleton, "()()");
+        assert_eq!(s.max_depth, 1);
+    }
+}

@@ -25,10 +25,36 @@
 //!    many-application automation cycles and the test-case /
 //!    code-pattern / facility DBs.
 //!
+//! Beyond the paper's loop funnel, [`funcblock`] adds the follow-on
+//! papers' function-block path (arXiv:2004.09883): whole algorithmic
+//! blocks (matmul, FIR bank, 2D stencil, sqrt-magnitude) are detected,
+//! behaviorally confirmed by VM sample tests, and replaced with
+//! catalogued FPGA IP cores / GPU libraries; the loop search then runs
+//! only over the loops no block claimed.
+//!
 //! Numeric ground truth comes from the real stack: [`runtime`] loads the
 //! AOT-compiled HLO artifacts (JAX models wrapping Pallas kernels, lowered
 //! once at build time by `python/compile/aot.py`) and executes them via
 //! PJRT — Python is never on the request path.
+//!
+//! # Module map
+//!
+//! The crate is eight subsystems plus shared support code:
+//!
+//! | subsystem    | role                                                   |
+//! |--------------|--------------------------------------------------------|
+//! | [`minic`]    | C-subset frontend + two execution engines (tree-walker oracle, slot-resolved bytecode VM) |
+//! | [`analysis`] | static loop table, dynamic profiling, arithmetic intensity, dependence classes |
+//! | [`codegen`]  | kernel/host splitting, OpenCL emission, unrolling      |
+//! | [`hls`]      | pre-compile resource/schedule model of the FPGA toolchain (`fpga` and `cpu` hold the device/CPU cost models it prices against) |
+//! | [`gpu`]      | the mixed-environment GPU destination model            |
+//! | [`search`]   | the narrowing funnel, measurement backends, GA baseline |
+//! | [`funcblock`]| function-block catalog, detection, sample-test confirmation, replacement planning |
+//! | [`envadapt`] | the staged Fig.-1 pipeline, batch orchestration, test-case / code-pattern / facility DBs |
+//!
+//! Support: [`cpu`] (CPU cost model), [`fpga`] (FPGA simulator +
+//! transfer model), [`runtime`] (PJRT artifacts), [`workloads`]
+//! (bundled applications), [`cli`], and [`util`].
 
 pub mod analysis;
 pub mod cli;
@@ -36,6 +62,7 @@ pub mod codegen;
 pub mod cpu;
 pub mod envadapt;
 pub mod fpga;
+pub mod funcblock;
 pub mod gpu;
 pub mod hls;
 pub mod minic;

@@ -114,6 +114,13 @@ pub enum Instr {
     /// *after* the rhs evaluates).
     CompoundLocal(u16, BinOp),
     CompoundGlobal(u16, BinOp),
+    /// Superinstruction for the workloads' MAC pattern
+    /// (`acc += a[i] * b[j]`): fuses `Bin(Mul)` + `CompoundLocal(s, Add)`
+    /// into one dispatch. Pops the two product operands, multiplies,
+    /// and compound-adds into the local — operand typing, op counts and
+    /// error order are byte-identical to the unfused pair (the
+    /// differential test holds across the fusion).
+    MacLocal(u16),
     /// Re-zero a declared scalar slot (a `Decl` re-executes per loop
     /// iteration in the tree-walker, resetting the variable).
     ZeroLocal(u16, Scalar),

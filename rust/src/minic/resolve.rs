@@ -426,6 +426,28 @@ impl FnCompiler {
         op: AssignOp,
         value: &Expr,
     ) {
+        // MAC superinstruction: `local += e1 * e2` fuses the multiply
+        // and the compound add into one dispatch — the pattern the
+        // workloads' hot tap/voxel loops are made of. Only the final
+        // two instructions fuse, so operand evaluation order, counts,
+        // and error behavior are untouched.
+        if let (
+            AssignOp::AddSet,
+            LValue::Var(name),
+            Expr::Bin {
+                op: BinOp::Mul,
+                lhs,
+                rhs,
+            },
+        ) = (op, target, value)
+        {
+            if let Some(slot) = self.resolve_local(name) {
+                self.expr(c, lhs);
+                self.expr(c, rhs);
+                self.code.push(Instr::MacLocal(slot));
+                return;
+            }
+        }
         // Rhs evaluates before the target is resolved or read.
         self.expr(c, value);
         match target {
@@ -685,6 +707,60 @@ mod tests {
         assert!(main.code.contains(&Instr::LoopEnter(LoopId(0))));
         assert!(main.code.contains(&Instr::LoopTrip(LoopId(0))));
         assert!(main.code.contains(&Instr::LoopExit));
+    }
+
+    #[test]
+    fn mac_pattern_fuses_to_a_superinstruction() {
+        let prog = parse(
+            "#define N 8\nfloat a[N]; float b[N];\n\
+             int main() {\n\
+                 float acc = 0.0;\n\
+                 for (int i = 0; i < N; i++) { acc += a[i] * b[i]; }\n\
+                 return (int) acc;\n\
+             }",
+        )
+        .unwrap();
+        let m = compile(&prog).unwrap();
+        let main = &m.funcs[m.func("main").unwrap() as usize];
+        assert_eq!(
+            main.code
+                .iter()
+                .filter(|i| matches!(i, Instr::MacLocal(_)))
+                .count(),
+            1
+        );
+        // The fused pair is gone: the multiply no longer appears as a
+        // standalone Bin instruction (the only Bin left is the loop
+        // condition's compare).
+        assert!(!main
+            .code
+            .iter()
+            .any(|i| matches!(i, Instr::Bin(BinOp::Mul))));
+    }
+
+    #[test]
+    fn mac_on_globals_and_non_mul_rhs_stay_unfused() {
+        // Global accumulator: CompoundGlobal, not MacLocal.
+        let prog = parse(
+            "#define N 4\nfloat a[N]; float acc;\n\
+             int main() { for (int i = 0; i < N; i++) { acc += a[i] * 2.0; } return 0; }",
+        )
+        .unwrap();
+        let m = compile(&prog).unwrap();
+        let main = &m.funcs[m.func("main").unwrap() as usize];
+        assert!(!main.code.iter().any(|i| matches!(i, Instr::MacLocal(_))));
+        assert!(main
+            .code
+            .iter()
+            .any(|i| matches!(i, Instr::CompoundGlobal(_, BinOp::Add))));
+        // Additive (non-multiply) rhs: plain compound add.
+        let prog2 = parse(
+            "int main() { int s = 0; for (int i = 0; i < 4; i++) { s += i; } return s; }",
+        )
+        .unwrap();
+        let m2 = compile(&prog2).unwrap();
+        let main2 = &m2.funcs[m2.func("main").unwrap() as usize];
+        assert!(!main2.code.iter().any(|i| matches!(i, Instr::MacLocal(_))));
     }
 
     #[test]

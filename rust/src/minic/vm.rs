@@ -377,6 +377,16 @@ impl Vm {
                     let new = self.apply_bin(op, old, rhs)?;
                     self.locals[base + s as usize] = new;
                 }
+                Instr::MacLocal(s) => {
+                    // Fused `Bin(Mul)` + `CompoundLocal(s, Add)`: same
+                    // pops, same typing/count rules, same error order.
+                    let r = self.stack.pop().expect("mac rhs");
+                    let l = self.stack.pop().expect("mac lhs");
+                    let prod = self.apply_bin(BinOp::Mul, l, r)?;
+                    let old = self.locals[base + s as usize];
+                    let new = self.apply_bin(BinOp::Add, old, prod)?;
+                    self.locals[base + s as usize] = new;
+                }
                 Instr::CompoundGlobal(s, op) => {
                     let rhs = self.stack.pop().expect("rhs");
                     let old = self.globals[s as usize];
@@ -873,6 +883,56 @@ mod tests {
              int main() { return fib(10); }",
         );
         assert_eq!(v, Value::Int(55));
+    }
+
+    #[test]
+    fn mac_superinstruction_matches_tree_walker_exactly() {
+        // The MAC-fused path must keep results, totals and per-loop
+        // profiles bit-identical to the oracle — including the int
+        // fast path and mixed int/float operands.
+        let src = "
+#define N 32
+float a[N]; float b[N];
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.125 - 1.0; b[i] = i * 0.25; }
+    float acc = 0.0;
+    int iacc = 0;
+    for (int i = 0; i < N; i++) {
+        acc += a[i] * b[i];
+        iacc += i * 3;
+        acc += b[i] * 2;
+    }
+    return (int) (acc + iacc);
+}";
+        let prog = parse(src).unwrap();
+        let mut interp = crate::minic::Interp::new(&prog).unwrap();
+        let vi = interp.call("main", &[]).unwrap();
+        let pi = interp.profile();
+        let mut vm = Vm::new(&prog).unwrap();
+        let vv = vm.call("main", &[]).unwrap();
+        let pv = vm.profile();
+        assert_eq!(vi, vv);
+        assert_eq!(pi.total, pv.total);
+        for (id, lp) in &pi.loops {
+            let lv = pv.loop_profile(*id).unwrap();
+            assert_eq!(lp.ops, lv.ops, "{id}");
+        }
+    }
+
+    #[test]
+    fn mac_error_order_matches_unfused() {
+        // `acc += a * b` where the multiply faults (array used as a
+        // scalar): the error must surface exactly as without fusion,
+        // leaving the VM reusable.
+        let src = "
+#define N 4
+float a[N];
+int main() { float acc = 0.0; acc += a * 2.0; return 0; }
+int ok() { return 3; }";
+        let prog = parse(src).unwrap();
+        let mut vm = Vm::new(&prog).unwrap();
+        assert!(vm.call("main", &[]).is_err());
+        assert_eq!(vm.call("ok", &[]).unwrap(), Value::Int(3));
     }
 
     #[test]

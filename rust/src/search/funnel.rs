@@ -58,18 +58,33 @@ pub fn run(
     cfg: &SearchConfig,
     dev: &Device,
 ) -> Result<(Vec<Candidate>, FunnelTrace), FunnelError> {
+    run_excluding(prog, analysis, cfg, dev, &std::collections::BTreeSet::new())
+}
+
+/// [`run`], with a pre-claimed region: loops in `claimed` (typically
+/// swallowed by a [`crate::funcblock`] replacement) never enter the
+/// funnel — not as offloadable, not as top-A, not as candidates — so
+/// the loop search runs only over what no block replacement claimed.
+pub fn run_excluding(
+    prog: &Program,
+    analysis: &Analysis,
+    cfg: &SearchConfig,
+    dev: &Device,
+    claimed: &std::collections::BTreeSet<LoopId>,
+) -> Result<(Vec<Candidate>, FunnelTrace), FunnelError> {
     cfg.validate().map_err(FunnelError::Config)?;
 
     let total_loops = analysis.loops.len();
     let offloadable: Vec<LoopId> = analysis
         .loops
         .iter()
-        .filter(|l| l.candidate())
+        .filter(|l| l.candidate() && !claimed.contains(&l.id()))
         .map(|l| l.id())
         .collect();
 
     // Stage 1: arithmetic-intensity narrowing (top A).
-    let ranked = analysis.ranked_candidates();
+    let mut ranked = analysis.ranked_candidates();
+    ranked.retain(|l| !claimed.contains(&l.id()));
     let top_a_loops: Vec<LoopId> = ranked
         .iter()
         .take(cfg.top_a)
@@ -211,6 +226,27 @@ int main() {
         };
         let (cands, _) = run_funnel(&cfg);
         assert!(cands.iter().all(|c| c.split.kernel.unroll == 4));
+    }
+
+    #[test]
+    fn claimed_loops_never_enter_the_funnel() {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let claimed: std::collections::BTreeSet<LoopId> =
+            [LoopId(2), LoopId(3)].into_iter().collect();
+        let (cands, trace) = run_excluding(
+            &prog,
+            &an,
+            &SearchConfig::default(),
+            &ARRIA10_GX,
+            &claimed,
+        )
+        .unwrap();
+        assert!(trace.offloadable.iter().all(|l| !claimed.contains(l)));
+        assert!(trace.top_a.iter().all(|l| !claimed.contains(l)));
+        assert!(cands.iter().all(|c| !claimed.contains(&c.loop_id())));
+        // The unclaimed loops still funnel normally.
+        assert!(!cands.is_empty());
     }
 
     #[test]

@@ -273,6 +273,9 @@ pub fn select(
         funnel: trace,
         measurements: set.measurements,
         best,
+        // Block replacements are a pipeline-level concern: the staged
+        // pipeline folds its confirmed blocks in after selection.
+        blocks: Vec::new(),
         automation_s,
     })
 }

@@ -1,6 +1,7 @@
 //! Result types for the offload search.
 
 use crate::fpga::PatternTiming;
+use crate::funcblock::BlockReplacement;
 use crate::hls::PrecompileReport;
 use crate::minic::ast::LoopId;
 use crate::util::json::Json;
@@ -61,8 +62,12 @@ pub struct OffloadSolution {
     pub measurements: Vec<PatternMeasurement>,
     /// Index into `measurements` of the selected pattern.
     pub best: usize,
+    /// Confirmed-and-profitable function-block replacements (empty when
+    /// the request ran loop-only). Their loops were pre-claimed away
+    /// from the funnel, so the measured patterns never overlap them.
+    pub blocks: Vec<BlockReplacement>,
     /// Modeled end-to-end automation wall clock, seconds (compiles +
-    /// measurements per round).
+    /// measurements per round, plus block core builds).
     pub automation_s: f64,
 }
 
@@ -71,9 +76,27 @@ impl OffloadSolution {
         &self.measurements[self.best]
     }
 
-    /// Headline number: speedup of the chosen pattern vs all-CPU.
-    pub fn speedup(&self) -> f64 {
+    /// Speedup of the chosen loop pattern alone (block replacements
+    /// excluded) — the PR-3 headline number.
+    pub fn loop_speedup(&self) -> f64 {
         self.best_measurement().speedup()
+    }
+
+    /// Headline number: combined speedup vs all-CPU. The measured
+    /// pattern time still carries the claimed block nests at CPU speed
+    /// (the funnel never offloaded them), so the combination swaps that
+    /// CPU time for the cores' accelerated time.
+    pub fn speedup(&self) -> f64 {
+        if self.blocks.is_empty() {
+            return self.loop_speedup();
+        }
+        let t = &self.best_measurement().timing;
+        let block_cpu: f64 = self.blocks.iter().map(|b| b.cpu_s).sum();
+        let block_accel: f64 =
+            self.blocks.iter().map(|b| b.accel_s).sum();
+        let combined_s =
+            (t.pattern_s - block_cpu + block_accel).max(f64::MIN_POSITIVE);
+        t.cpu_baseline_s / combined_s
     }
 
     /// Serialize for the code-pattern DB.
@@ -91,6 +114,50 @@ impl OffloadSolution {
                 ),
             ),
             ("speedup", Json::Num(self.speedup())),
+            ("loop_speedup", Json::Num(self.loop_speedup())),
+            (
+                "blocks",
+                Json::Arr(
+                    self.blocks
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                (
+                                    "kind",
+                                    Json::Str(b.kind.name().to_string()),
+                                ),
+                                (
+                                    "function",
+                                    Json::Str(b.func.clone()),
+                                ),
+                                (
+                                    "ip",
+                                    Json::Str(b.ip_name.to_string()),
+                                ),
+                                (
+                                    "loops",
+                                    Json::Arr(
+                                        b.loops
+                                            .iter()
+                                            .map(|l| Json::Num(l.0 as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                                ("cpu_s", Json::Num(b.cpu_s)),
+                                ("accel_s", Json::Num(b.accel_s)),
+                                (
+                                    "block_speedup",
+                                    Json::Num(b.speedup()),
+                                ),
+                                (
+                                    "confirmed",
+                                    Json::Bool(b.confirmed),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("automation_hours", Json::Num(self.automation_s / 3600.0)),
             (
                 "measurements",

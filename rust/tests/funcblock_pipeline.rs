@@ -1,0 +1,203 @@
+//! End-to-end function-block offloading: the staged pipeline with
+//! `func_blocks` on, against the bundled workloads.
+//!
+//! The acceptance bar (ISSUE 4): with blocks enabled at least one
+//! bundled workload achieves a *strictly* higher verified speedup than
+//! its loop-only result under the same seed; every accepted replacement
+//! is behaviorally confirmed; structurally-similar-but-semantically-
+//! different functions are never replaced.
+
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::envadapt::{Batch, OffloadRequest, Pipeline, TestDb};
+use fpga_offload::gpu::TESLA_T4;
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::search::{
+    CpuBaseline, FpgaBackend, GpuBackend, SearchConfig,
+};
+use fpga_offload::workloads;
+
+fn fpga_backend() -> FpgaBackend<'static> {
+    FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    }
+}
+
+fn request(app: &str, func_blocks: bool) -> OffloadRequest {
+    let testdb = TestDb::builtin();
+    let case = testdb.get(app).expect("bundled app");
+    let mut req =
+        OffloadRequest::from_case(case, workloads::source(app).unwrap());
+    req.pjrt_sample = None;
+    req.with_func_blocks(func_blocks)
+}
+
+#[test]
+fn tdfir_blocks_strictly_beat_loop_only_on_the_fpga() {
+    let b = fpga_backend();
+    let pipe = Pipeline::new(SearchConfig::default(), &b).unwrap();
+
+    let loop_only = pipe.solve(request("tdfir", false)).unwrap();
+    let blocked = pipe.solve(request("tdfir", true)).unwrap();
+
+    assert_eq!(loop_only.plan.block_count(), 0);
+    assert!(
+        blocked.plan.block_count() >= 1,
+        "the fir bank must be replaced"
+    );
+    assert!(blocked.plan.verified_ok());
+    assert!(loop_only.plan.verified_ok());
+    assert!(
+        blocked.plan.speedup() > loop_only.plan.speedup(),
+        "blocks {:.3}x must strictly beat loop-only {:.3}x",
+        blocked.plan.speedup(),
+        loop_only.plan.speedup()
+    );
+
+    // Every accepted replacement is sample-test confirmed, and the
+    // claimed loops never reappear in the measured loop patterns.
+    let sol = blocked.plan.solution().unwrap();
+    for block in &sol.blocks {
+        assert!(block.confirmed, "{}", block.func);
+        for m in &sol.measurements {
+            for l in &m.loops {
+                assert!(
+                    !block.loops.contains(l),
+                    "claimed loop {l} was measured as a loop pattern"
+                );
+            }
+        }
+    }
+    // The fir bank's own nest (L12..L15) is claimed.
+    let fir = sol.blocks.iter().find(|b| b.func == "fir_all").unwrap();
+    assert_eq!(
+        fir.loops.iter().map(|l| l.0).collect::<Vec<_>>(),
+        vec![12, 13, 14, 15]
+    );
+}
+
+#[test]
+fn every_bundled_app_solves_with_blocks_enabled() {
+    let b = fpga_backend();
+    let pipe = Pipeline::new(SearchConfig::default(), &b).unwrap();
+    for app in workloads::APPS {
+        let loop_only = pipe.solve(request(app, false)).unwrap();
+        let blocked = pipe.solve(request(app, true)).unwrap();
+        assert!(blocked.plan.verified_ok(), "{app}");
+        // Blocks may or may not be profitable per app/destination, but
+        // they must not make the combined plan worse than loop-only: an
+        // unprofitable block is simply not planned, and the blocks-only
+        // (empty loop pattern) plan is always selectable.
+        assert!(
+            blocked.plan.speedup() >= loop_only.plan.speedup() * 0.999,
+            "{app}: blocks regressed {:.3}x -> {:.3}x",
+            loop_only.plan.speedup(),
+            blocked.plan.speedup()
+        );
+    }
+}
+
+/// Structurally FIR-shaped, behaviorally a saturating accumulator: the
+/// detector proposes it, the sample test must reject it, and the
+/// pipeline must solve the program loop-only.
+const SAT_FIR_SRC: &str = "
+#define M 4
+#define K 8
+#define N 64
+#define NIN 71
+float cr[M][K]; float ci[M][K];
+float xr[NIN]; float xi[NIN];
+float outr[M][N]; float outi[M][N];
+void fir_sat() {
+    for (int m = 0; m < M; m++) {
+        for (int n = 0; n < N; n++) {
+            float ar = 0.0;
+            float ai = 0.0;
+            for (int k = 0; k < K; k++) {
+                ar += cr[m][k] * xr[n + k] - ci[m][k] * xi[n + k];
+                ai += cr[m][k] * xi[n + k] + ci[m][k] * xr[n + k];
+                ar = fmin(ar, 0.5);
+            }
+            outr[m][n] = ar;
+            outi[m][n] = ai;
+        }
+    }
+}
+int main() { fir_sat(); return 0; }";
+
+#[test]
+fn semantically_different_lookalike_is_never_replaced() {
+    let b = fpga_backend();
+    let pipe = Pipeline::new(SearchConfig::default(), &b).unwrap();
+    let req = OffloadRequest::builder("satfir")
+        .source(SAT_FIR_SRC)
+        .func_blocks(true)
+        .build()
+        .unwrap();
+    let planned = pipe.solve(req).unwrap();
+    assert_eq!(
+        planned.plan.block_count(),
+        0,
+        "saturating FIR must never be swapped for the catalog core"
+    );
+    // The program still offloads through the ordinary loop funnel.
+    assert!(planned.plan.verified_ok());
+    assert!(!planned.plan.best_loops().is_empty());
+}
+
+#[test]
+fn mixed_batch_routes_on_combined_block_plus_loop_speedup() {
+    let fpga = fpga_backend();
+    let gpu = GpuBackend {
+        cpu: &XEON_BRONZE_3104,
+        gpu: &TESLA_T4,
+        device: &ARRIA10_GX,
+    };
+    let cpu = CpuBaseline {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let pf = Pipeline::new(SearchConfig::default(), &fpga).unwrap();
+    let pg = Pipeline::new(SearchConfig::default(), &gpu).unwrap();
+    let pc = Pipeline::new(SearchConfig::default(), &cpu).unwrap();
+    let report = Batch::mixed(vec![&pf, &pg, &pc])
+        .with(request("tdfir", true))
+        .with(request("sobel", true))
+        .run();
+    assert_eq!(report.solved(), 2);
+    for entry in &report.entries {
+        let plan = entry.plan.as_ref().unwrap();
+        assert!(plan.verified_ok(), "{}", entry.app);
+        // The winner's combined speedup dominates every destination's.
+        for o in &entry.outcomes {
+            if let Some(p) = &o.plan {
+                assert!(
+                    plan.speedup() >= p.speedup() - 1e-12,
+                    "{}: winner {:.3}x < {} {:.3}x",
+                    entry.app,
+                    plan.speedup(),
+                    o.backend,
+                    p.speedup()
+                );
+            }
+        }
+        // The control never carries a block replacement.
+        let cpu_outcome = entry
+            .outcomes
+            .iter()
+            .find(|o| o.backend == "cpu")
+            .unwrap();
+        if let Some(p) = &cpu_outcome.plan {
+            assert_eq!(p.block_count(), 0, "{}", entry.app);
+            assert!((p.speedup() - 1.0).abs() < 1e-9);
+        }
+    }
+    // tdfir's FPGA outcome carries the fir-bank replacement.
+    let tdfir = &report.entries[0];
+    let fpga_outcome = tdfir
+        .outcomes
+        .iter()
+        .find(|o| o.backend == "fpga")
+        .unwrap();
+    assert!(fpga_outcome.plan.as_ref().unwrap().block_count() >= 1);
+}
