@@ -1,6 +1,6 @@
-//! Mixed-destination offloading: one automation cycle, three
+//! Mixed-destination offloading: one automation cycle, four
 //! destinations (the arXiv:2011.12431 environment — every app lands on
-//! the best of FPGA / GPU / CPU).
+//! the best of FPGA / GPU / many-core OpenMP / CPU).
 //!
 //! Builds one [`fpga_offload::Pipeline`] per destination backend over the
 //! same `SearchConfig`, registers every bundled application in a
@@ -9,17 +9,19 @@
 //!
 //! Run with: `cargo run --release --example mixed_destinations`
 
-use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
 use fpga_offload::envadapt::{Batch, OffloadRequest, Pipeline, TestDb};
 use fpga_offload::gpu::TESLA_T4;
 use fpga_offload::hls::ARRIA10_GX;
 use fpga_offload::search::{
-    CpuBaseline, FpgaBackend, GpuBackend, SearchConfig,
+    CpuBaseline, FpgaBackend, GpuBackend, OmpBackend, SearchConfig,
 };
 use fpga_offload::workloads;
 
 fn main() -> anyhow::Result<()> {
-    println!("== mixed-destination automation cycle: fpga + gpu + cpu ==\n");
+    println!(
+        "== mixed-destination automation cycle: fpga + gpu + omp + cpu ==\n"
+    );
 
     let fpga = FpgaBackend {
         cpu: &XEON_BRONZE_3104,
@@ -28,6 +30,11 @@ fn main() -> anyhow::Result<()> {
     let gpu = GpuBackend {
         cpu: &XEON_BRONZE_3104,
         gpu: &TESLA_T4,
+        device: &ARRIA10_GX,
+    };
+    let omp = OmpBackend {
+        cpu: &XEON_BRONZE_3104,
+        omp: &XEON_GOLD_6130,
         device: &ARRIA10_GX,
     };
     let cpu = CpuBaseline {
@@ -39,11 +46,13 @@ fn main() -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!("{e}"))?;
     let pg = Pipeline::new(cfg.clone(), &gpu)
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let po = Pipeline::new(cfg.clone(), &omp)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
     let pc =
         Pipeline::new(cfg, &cpu).map_err(|e| anyhow::anyhow!("{e}"))?;
 
     let testdb = TestDb::builtin();
-    let mut batch = Batch::mixed(vec![&pf, &pg, &pc]);
+    let mut batch = Batch::mixed(vec![&pf, &pg, &po, &pc]);
     for app in workloads::APPS {
         let case = testdb.get(app).expect("bundled apps are registered");
         let src = workloads::source(app).expect("bundled source");
@@ -105,8 +114,9 @@ fn main() -> anyhow::Result<()> {
     println!("\ndestination split: {}", split.join(" / "));
     println!(
         "cycle automation: {:.1} h serial, {:.1} h concurrent \
-         (the GPU destination compiles in minutes — its patterns barely \
-         register next to the FPGA's ~3 h place-and-route jobs)",
+         (the GPU destination compiles in minutes and the OpenMP one in \
+         seconds — their patterns barely register next to the FPGA's \
+         ~3 h place-and-route jobs)",
         report.serial_automation_s / 3600.0,
         report.concurrent_automation_s / 3600.0
     );

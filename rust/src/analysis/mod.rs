@@ -8,6 +8,29 @@
 //! * [`intensity`] — the arithmetic-intensity indicator (PGI analog).
 //! * [`depend`] — loop-carried dependence classification feeding the HLS
 //!   pipeline model.
+//!
+//! One call profiles an entry function and joins every view:
+//!
+//! ```
+//! use fpga_offload::analysis::analyze;
+//! use fpga_offload::minic::parse;
+//!
+//! let prog = parse(
+//!     "#define N 64\n\
+//!      float a[N]; float out[N];\n\
+//!      int main() {\n\
+//!          for (int i = 0; i < N; i++) { a[i] = i * 0.1; }\n\
+//!          for (int i = 0; i < N; i++) { out[i] = sin(a[i]); }\n\
+//!          return 0;\n\
+//!      }",
+//! )
+//! .unwrap();
+//! let an = analyze(&prog, "main").unwrap();
+//! assert_eq!(an.loops.len(), 2);
+//! assert_eq!(an.entry, "main");
+//! // The profiling run counted real work for the baseline model.
+//! assert!(an.profile.total.f_trig >= 64);
+//! ```
 
 pub mod depend;
 pub mod intensity;

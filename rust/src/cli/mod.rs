@@ -4,10 +4,10 @@
 //! repro offload <app|file.c> [--explain] [--top-a N] [--unroll B]
 //!               [--top-c N] [--max-patterns D] [--machines N]
 //!               [--pattern-db DIR] [--reuse] [--pjrt] [--no-verify]
-//!               [--engine interp|vm] [--backend fpga|gpu|cpu]
+//!               [--engine interp|vm] [--backend fpga|gpu|omp|cpu]
 //!               [--entry FN] [--func-blocks]
 //! repro batch [apps...] [--out FILE] [--pattern-db DIR] [--reuse]
-//!             [--backend fpga|gpu|cpu] [--mixed] [--func-blocks]
+//!             [--backend fpga|gpu|omp|cpu] [--mixed] [--func-blocks]
 //!             + the offload search flags
 //! repro analyze <app|file.c>       loop table + intensity ranking
 //! repro estimate <app|file.c> [--unroll B]   pre-compile reports (top-A)
@@ -21,19 +21,20 @@
 //! [`crate::envadapt::Pipeline`]; `batch` runs every requested app
 //! through one shared automation cycle and writes a
 //! [`crate::envadapt::BatchReport`] JSON. `batch --mixed` measures every
-//! app against all three destinations (FPGA, GPU, CPU control) in one
-//! cycle and routes each app to the best verified speedup — the
-//! mixed-destination environment of arXiv:2011.12431.
+//! app against all four destinations (FPGA, GPU, many-core OpenMP, CPU
+//! control) in one cycle and routes each app to the best verified
+//! speedup — the mixed-destination environment of arXiv:2011.12431.
 
 use crate::analysis::{analyze_with, Analysis};
-use crate::cpu::XEON_BRONZE_3104;
+use crate::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
 use crate::envadapt::{Batch, OffloadRequest, Pipeline, TestDb};
 use crate::gpu::TESLA_T4;
 use crate::hls::{render, ARRIA10_GX};
 use crate::minic::{parse, typecheck, EngineKind, Program};
 use crate::runtime::{Artifacts, Runtime};
 use crate::search::{
-    Backend, CpuBaseline, FpgaBackend, GaConfig, GpuBackend, SearchConfig,
+    Backend, CpuBaseline, FpgaBackend, GaConfig, GpuBackend, OmpBackend,
+    SearchConfig,
 };
 use crate::workloads;
 
@@ -85,7 +86,8 @@ fn print_usage() {
                                   extract → measure → select → deploy\n\
              --explain            print the funnel trace and reports\n\
              --engine E           execution engine: vm (default) | interp\n\
-             --backend B          destination: fpga (default) | gpu | cpu\n\
+             --backend B          destination: fpga (default) | gpu |\n\
+                                  omp (many-core OpenMP) | cpu (control)\n\
              --entry FN           entry function for profiling and\n\
                                   verification (default: test-case DB\n\
                                   entry, else main)\n\
@@ -108,9 +110,12 @@ fn print_usage() {
            batch [apps...]        one automation cycle over many apps\n\
                                   (default: all bundled apps) — shares one\n\
                                   config, runs funnels concurrently\n\
-             --mixed              measure every app on fpga+gpu+cpu and\n\
-                                  route each to its best verified speedup\n\
-                                  (per-app `destination` in the report)\n\
+             --backend B          destination: fpga (default) | gpu |\n\
+                                  omp (many-core OpenMP) | cpu (control)\n\
+             --mixed              measure every app on fpga+gpu+omp+cpu\n\
+                                  and route each to its best verified\n\
+                                  speedup (per-app `destination` in the\n\
+                                  report)\n\
              --func-blocks        enable the function-block path for\n\
                                   every app in the cycle\n\
              --out FILE           batch-report JSON path\n\
@@ -170,6 +175,7 @@ fn engine_from_flags(f: &Flags) -> anyhow::Result<EngineKind> {
 enum BackendChoice {
     Fpga(FpgaBackend<'static>),
     Gpu(GpuBackend<'static>),
+    Omp(OmpBackend<'static>),
     Cpu(CpuBaseline<'static>),
 }
 
@@ -188,6 +194,14 @@ fn gpu_backend() -> GpuBackend<'static> {
     }
 }
 
+fn omp_backend() -> OmpBackend<'static> {
+    OmpBackend {
+        cpu: &XEON_BRONZE_3104,
+        omp: &XEON_GOLD_6130,
+        device: &ARRIA10_GX,
+    }
+}
+
 fn cpu_backend() -> CpuBaseline<'static> {
     CpuBaseline {
         cpu: &XEON_BRONZE_3104,
@@ -200,9 +214,10 @@ impl BackendChoice {
         match f.value("--backend") {
             None | Some("fpga") => Ok(BackendChoice::Fpga(fpga_backend())),
             Some("gpu") => Ok(BackendChoice::Gpu(gpu_backend())),
+            Some("omp") => Ok(BackendChoice::Omp(omp_backend())),
             Some("cpu") => Ok(BackendChoice::Cpu(cpu_backend())),
             Some(v) => Err(anyhow::anyhow!(
-                "bad value for --backend: {v:?} (use fpga|gpu|cpu)"
+                "bad value for --backend: {v:?} (use fpga|gpu|omp|cpu)"
             )),
         }
     }
@@ -211,6 +226,7 @@ impl BackendChoice {
         match self {
             BackendChoice::Fpga(b) => b,
             BackendChoice::Gpu(b) => b,
+            BackendChoice::Omp(b) => b,
             BackendChoice::Cpu(b) => b,
         }
     }
@@ -463,6 +479,7 @@ fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
     // Backends and pipelines live here so both branches can borrow them.
     let fpga = fpga_backend();
     let gpu = gpu_backend();
+    let omp = omp_backend();
     let cpu = cpu_backend();
     let choice;
     let (pipelines, label): (Vec<Pipeline>, String) = if mixed {
@@ -474,20 +491,23 @@ fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
         }
         if f.value("--backend").is_some() {
             anyhow::bail!(
-                "--mixed always measures fpga+gpu+cpu; drop --backend \
+                "--mixed always measures fpga+gpu+omp+cpu; drop --backend \
                  (or drop --mixed for a single-destination batch)"
             );
         }
         // One pipeline per destination; registration order breaks ties
-        // (prefer the paper's FPGA, then the GPU, then the control).
+        // (prefer the paper's FPGA, then the GPU, then the many-core,
+        // then the control).
         let pipes = vec![
             Pipeline::new(cfg.clone(), &fpga)
                 .map_err(|e| anyhow::anyhow!("{e}"))?,
             Pipeline::new(cfg.clone(), &gpu)
                 .map_err(|e| anyhow::anyhow!("{e}"))?,
+            Pipeline::new(cfg.clone(), &omp)
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
             Pipeline::new(cfg, &cpu).map_err(|e| anyhow::anyhow!("{e}"))?,
         ];
-        (pipes, "mixed fpga+gpu+cpu".to_string())
+        (pipes, "mixed fpga+gpu+omp+cpu".to_string())
     } else {
         choice = BackendChoice::from_flags(&f)?;
         let mut pipeline = Pipeline::new(cfg, choice.as_dyn())
@@ -793,6 +813,14 @@ mod tests {
     }
 
     #[test]
+    fn offload_sobel_on_omp_backend() {
+        assert_eq!(
+            run(&s(&["offload", "sobel", "--backend", "omp"])),
+            0
+        );
+    }
+
+    #[test]
     fn offload_sobel_with_func_blocks() {
         assert_eq!(run(&s(&["offload", "sobel", "--func-blocks"])), 0);
     }
@@ -847,9 +875,16 @@ mod tests {
         assert_eq!(j.get(&["mixed"]).unwrap().as_bool(), Some(true));
         assert_eq!(j.get(&["apps"]).unwrap().as_f64(), Some(2.0));
         assert_eq!(j.get(&["solved"]).unwrap().as_f64(), Some(2.0));
+        // Four destinations measured: fpga + gpu + omp + cpu.
+        let backends = j.get(&["backends"]).unwrap().as_arr().unwrap();
+        let names: Vec<_> =
+            backends.iter().filter_map(|b| b.as_str()).collect();
+        assert_eq!(names, vec!["fpga", "gpu", "omp", "cpu"]);
+        assert!(j.get(&["destinations", "omp"]).unwrap().as_f64().is_some());
         let results = j.get(&["results"]).unwrap().as_arr().unwrap();
         for r in results {
             assert!(r.get(&["destination"]).unwrap().as_str().is_some());
+            assert!(r.get(&["backends", "omp"]).unwrap().as_f64().is_some());
         }
     }
 

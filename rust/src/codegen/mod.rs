@@ -7,6 +7,30 @@
 //! * [`unroll`] — loop expansion by factor B (the paper's speed-up
 //!   technique).
 //! * [`opencl`] — OpenCL-C text emission (kernel + the ten host steps).
+//!
+//! ```
+//! use fpga_offload::analysis::analyze;
+//! use fpga_offload::codegen::split;
+//! use fpga_offload::minic::ast::LoopId;
+//! use fpga_offload::minic::parse;
+//!
+//! let prog = parse(
+//!     "#define N 32\n\
+//!      float a[N]; float out[N];\n\
+//!      int main() {\n\
+//!          for (int i = 0; i < N; i++) { a[i] = i * 0.1; }\n\
+//!          for (int i = 0; i < N; i++) { out[i] = a[i] * 2.0; }\n\
+//!          return 0;\n\
+//!      }",
+//! )
+//! .unwrap();
+//! let an = analyze(&prog, "main").unwrap();
+//! let sp = split(&prog, an.loop_by_id(LoopId(1)).unwrap()).unwrap();
+//! // The kernel reads `a`, writes `out` — both cross the device boundary.
+//! assert_eq!(sp.kernel.loop_id, LoopId(1));
+//! assert!(sp.kernel.bytes_in() > 0);
+//! assert!(sp.kernel.bytes_out() > 0);
+//! ```
 
 pub mod kernel_ir;
 pub mod opencl;

@@ -1,12 +1,31 @@
-//! CPU cost model — the "all CPU processing" baseline (paper Fig. 3:
-//! Intel Xeon Bronze 3104, 1.7 GHz, no turbo).
+//! CPU cost models: the "all CPU processing" baseline (paper Fig. 3:
+//! Intel Xeon Bronze 3104, 1.7 GHz, no turbo) and, in [`omp`], the
+//! many-core OpenMP destination built on top of it.
 //!
-//! Converts the interpreter's dynamic op counts into modeled single-thread
-//! wall-clock. Per-op costs are in cycles and folded through an effective
-//! superscalar factor; memory traffic is priced separately so
-//! access-heavy loops are slower than flop-heavy loops of equal op count
-//! (which is what makes offloading access-light/compute-dense loops pay
-//! off — the paper's selection signal).
+//! [`CpuModel`] converts the interpreter's dynamic op counts into modeled
+//! single-thread wall-clock. Per-op costs are in cycles and folded
+//! through an effective superscalar factor; memory traffic is priced
+//! separately so access-heavy loops are slower than flop-heavy loops of
+//! equal op count (which is what makes offloading
+//! access-light/compute-dense loops pay off — the paper's selection
+//! signal).
+//!
+//! Every destination's speedup figure is a ratio against this model, so
+//! it must be deterministic and strictly monotone in work:
+//!
+//! ```
+//! use fpga_offload::cpu::XEON_BRONZE_3104;
+//! use fpga_offload::minic::OpCounts;
+//!
+//! let light = OpCounts { f_add: 1_000, reads: 1_000, ..Default::default() };
+//! let heavy = OpCounts { f_add: 2_000, reads: 2_000, ..Default::default() };
+//! assert!(XEON_BRONZE_3104.time(&light) > 0.0);
+//! assert!(XEON_BRONZE_3104.time(&heavy) > XEON_BRONZE_3104.time(&light));
+//! ```
+
+pub mod omp;
+
+pub use omp::{OmpDevice, XEON_GOLD_6130};
 
 use crate::minic::OpCounts;
 

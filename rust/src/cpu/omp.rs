@@ -1,0 +1,399 @@
+//! Many-core (OpenMP) performance model: the fourth destination of the
+//! mixed environment (arXiv:2011.12431 names many-core CPU next to GPU
+//! and FPGA), mirroring [`crate::gpu::sim`] in shape — the same
+//! [`PatternTiming`] output, the same per-loop
+//! `entries × [overhead + compute]` decomposition — but with shared-memory
+//! physics:
+//!
+//! * **No PCIe.** The worker threads see the host's arrays directly, so a
+//!   pattern pays *no* DMA at all — only a fixed fork/join cost per
+//!   parallel-region entry ([`OmpDevice::fork_join_s`], the libgomp
+//!   static-schedule barrier pair). This is the structural edge over both
+//!   accelerator destinations: a memory-heavy loop whose per-element work
+//!   is too light to amortize a PCIe crossing still parallelizes cleanly
+//!   over shared memory (the bundled Sobel stencil routes here for
+//!   exactly this reason).
+//! * **Modest parallelism.** An automatically inserted `#pragma omp
+//!   parallel for` on an unrestructured loop sustains
+//!   [`OmpDevice::parallel_lanes`] ≈ cores × SMT yield × efficiency —
+//!   tens of lanes, not the GPU's hundreds. Carried loops cannot be
+//!   annotated at all and run serially; reductions parallelize but pay a
+//!   log-tree combine per region ([`OmpDevice::combine_latency_s`] per
+//!   level).
+//! * **A shared bandwidth ceiling.** All cores drain one memory system:
+//!   per parallel region the model floors compute time at subtree bytes
+//!   over [`OmpDevice::mem_bytes_per_sec`], so streaming loops stop
+//!   scaling well before the lane count.
+//! * **Near-zero build.** The destination build is seconds of
+//!   `gcc -fopenmp` ([`OmpDevice::build_seconds`]) — against the GPU's
+//!   ~1 min nvcc and the FPGA's ~3 h place-and-route, a many-core
+//!   automation cycle is essentially free.
+//!
+//! ```
+//! use fpga_offload::cpu::XEON_GOLD_6130;
+//!
+//! // Tens of lanes, seconds of build — the many-core destination trades
+//! // peak parallelism for zero transfer cost and instant turnaround.
+//! let omp = &XEON_GOLD_6130;
+//! assert!(omp.parallel_lanes() > 8.0);
+//! assert!(omp.parallel_lanes() < omp.cores as f64 * 2.0);
+//! assert!(omp.build_seconds < 60.0);
+//! ```
+
+use crate::analysis::{Analysis, Dependence};
+use crate::codegen::KernelIr;
+use crate::fpga::{subtree_ids, LoopTiming, PatternTiming, SimError};
+use crate::hls::ResourceEstimate;
+use crate::minic::ast::LoopId;
+use crate::minic::OpCounts;
+
+use super::CpuModel;
+
+/// Static description of a many-core OpenMP destination. Per-thread
+/// scalar throughput is modeled with the *baseline* [`CpuModel`] (base
+/// clocks converge under all-core load; keeping one scalar model also
+/// keeps the all-CPU denominator exact) — this struct describes only
+/// what parallel execution adds and costs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OmpDevice {
+    pub name: &'static str,
+    /// Physical worker cores.
+    pub cores: u64,
+    /// Throughput yield of 2-way SMT over the physical cores (> 1.0).
+    pub smt_yield: f64,
+    /// Fraction of linear scaling an *automatically* annotated
+    /// `parallel for` sustains (scheduling skew, NUMA, false sharing).
+    pub par_efficiency: f64,
+    /// Fork/join cost per parallel-region entry, seconds (libgomp
+    /// static schedule: team wake + end barrier).
+    pub fork_join_s: f64,
+    /// Effective memory bandwidth shared across all cores, bytes/s.
+    pub mem_bytes_per_sec: f64,
+    /// Per-level cost of the log-tree reduction combine, seconds.
+    pub combine_latency_s: f64,
+    /// Modeled destination build per pattern, seconds — a `gcc
+    /// -fopenmp` compile, not a place-and-route.
+    pub build_seconds: f64,
+}
+
+/// Intel Xeon Gold 6130 (Skylake-SP, 16C/32T): the many-core board the
+/// mixed-destination follow-on puts beside the Arria10 and the T4 in
+/// the verification environment.
+pub const XEON_GOLD_6130: OmpDevice = OmpDevice {
+    name: "Intel Xeon Gold 6130 (16C/32T, OpenMP)",
+    cores: 16,
+    smt_yield: 1.15,
+    par_efficiency: 0.75,
+    fork_join_s: 4.0e-6,
+    mem_bytes_per_sec: 8.0e10, // 6-ch DDR4-2666, STREAM-class effective
+    combine_latency_s: 5.0e-7,
+    build_seconds: 5.0,
+};
+
+impl OmpDevice {
+    /// Lanes an automatically parallelized loop effectively keeps busy:
+    /// cores × SMT yield × parallel efficiency (never below one).
+    pub fn parallel_lanes(&self) -> f64 {
+        (self.cores as f64 * self.smt_yield * self.par_efficiency).max(1.0)
+    }
+
+    /// Levels of the log-tree combine a reduction pays when `threads`
+    /// lanes fold their partial values.
+    pub fn combine_levels(&self, lanes: f64) -> f64 {
+        lanes.max(2.0).log2().ceil()
+    }
+}
+
+/// Simulate a pattern of offloaded loops on a many-core OpenMP
+/// destination.
+///
+/// Returns the same [`PatternTiming`] the FPGA and GPU simulators
+/// produce so the funnel and the mixed-destination selector compare all
+/// destinations directly; `combined` stays at the zero
+/// [`ResourceEstimate`] — an OpenMP pattern consumes no FPGA fabric.
+pub fn simulate(
+    analysis: &Analysis,
+    kernels: &[KernelIr],
+    cpu: &CpuModel,
+    omp: &OmpDevice,
+) -> Result<PatternTiming, SimError> {
+    // Disjointness: no offloaded loop may contain another offloaded loop
+    // (same rule as every destination — one parallel region per nest).
+    let offloaded: Vec<LoopId> = kernels.iter().map(|k| k.loop_id).collect();
+    for k in kernels {
+        let subtree = subtree_ids(analysis, k.loop_id);
+        for other in &offloaded {
+            if *other != k.loop_id && subtree.contains(other) {
+                return Err(SimError::OverlappingLoops(k.loop_id, *other));
+            }
+        }
+    }
+
+    let cpu_baseline_s = cpu.time(&analysis.profile.total);
+
+    let mut offloaded_ops = OpCounts::default();
+    let mut loops = Vec::new();
+    for k in kernels {
+        let lp = analysis
+            .profile
+            .loop_profile(k.loop_id)
+            .ok_or(SimError::ColdLoop(k.loop_id))?;
+        offloaded_ops = offloaded_ops.plus(&lp.ops);
+
+        let entries = lp.entries.max(1);
+        // Work distribution: iterations of the annotated loop itself
+        // across the team (static schedule, no restructuring).
+        let threads = (lp.trips / entries).max(1);
+        // One region's whole subtree, serially, on the baseline core.
+        let serial_s = cpu.time(&lp.ops) / entries as f64;
+        let lanes = omp.parallel_lanes().min(threads as f64);
+
+        let compute_per_entry = match &k.dependence {
+            // A carried loop cannot be annotated: the region runs on
+            // one thread at exactly the serial time, so the fork/join
+            // below makes the pattern a strict loss — which is the
+            // right verified answer for a carried loop.
+            Dependence::Carried(_) => serial_s,
+            dep => {
+                let mut t = serial_s / lanes;
+                if matches!(dep, Dependence::Reduction(_)) {
+                    t += omp.combine_levels(lanes) * omp.combine_latency_s;
+                }
+                // Shared bandwidth ceiling: all lanes drain one memory
+                // system.
+                let mem_s = (lp.ops.bytes() as f64 / entries as f64)
+                    / omp.mem_bytes_per_sec;
+                t.max(mem_s)
+            }
+        };
+
+        let compute_s = compute_per_entry * entries as f64;
+        // No PCIe: the only per-entry overhead is the fork/join pair.
+        let transfer_s = entries as f64 * omp.fork_join_s;
+
+        loops.push(LoopTiming {
+            loop_id: k.loop_id,
+            entries,
+            slots: threads,
+            compute_s,
+            transfer_s,
+            total_s: compute_s + transfer_s,
+        });
+    }
+
+    let rest_ops = analysis.profile.total.saturating_sub(&offloaded_ops);
+    let cpu_rest_s = cpu.time(&rest_ops);
+    let omp_s: f64 = loops.iter().map(|l| l.total_s).sum();
+    let pattern_s = cpu_rest_s + omp_s;
+    let speedup = if pattern_s > 0.0 {
+        cpu_baseline_s / pattern_s
+    } else {
+        f64::INFINITY
+    };
+
+    Ok(PatternTiming {
+        cpu_baseline_s,
+        cpu_rest_s,
+        loops,
+        pattern_s,
+        speedup,
+        combined: ResourceEstimate::default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::codegen::split;
+    use crate::cpu::XEON_BRONZE_3104;
+    use crate::minic::parse;
+
+    /// A trig-dense wide loop (parallel-friendly), a streaming
+    /// double-precision copy (bandwidth-ceiling probe), a carried
+    /// recurrence (serializes), and a wide scalar reduction.
+    const SRC: &str = "
+#define N 4096
+#define M 65536
+float a[N]; float b[N]; float acc[N];
+double src[M]; double dst[M];
+float total;
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.0004 - 0.8; }       // L0 init
+    for (int i = 0; i < N; i++) {                                  // L1 trig
+        b[i] = sin(a[i]) * cos(a[i]) + sqrt(a[i] * a[i] + 1.0);
+    }
+    for (int i = 0; i < M; i++) { dst[i] = src[i]; }               // L2 copy
+    for (int i = 1; i < N; i++) { acc[i] = acc[i - 1] + b[i]; }    // L3 carried
+    for (int i = 0; i < N; i++) { total += b[i] * b[i]; }          // L4 reduce
+    return 0;
+}";
+
+    fn setup() -> (crate::minic::Program, Analysis) {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        (prog, an)
+    }
+
+    fn kernel(
+        prog: &crate::minic::Program,
+        an: &Analysis,
+        id: u32,
+    ) -> KernelIr {
+        split(prog, an.loop_by_id(LoopId(id)).unwrap())
+            .unwrap()
+            .kernel
+    }
+
+    #[test]
+    fn device_figures_sane() {
+        let d = &XEON_GOLD_6130;
+        assert!(d.parallel_lanes() > 8.0);
+        assert!(d.parallel_lanes() < d.cores as f64 * d.smt_yield);
+        assert!(d.build_seconds < 60.0, "an OpenMP build is gcc, not HLS");
+        assert_eq!(d.combine_levels(16.0), 4.0);
+        assert_eq!(d.combine_levels(1.0), 1.0);
+    }
+
+    #[test]
+    fn wide_trig_loop_scales_to_the_lanes() {
+        let (prog, an) = setup();
+        let k = kernel(&prog, &an, 1);
+        let t = simulate(&an, &[k], &XEON_BRONZE_3104, &XEON_GOLD_6130)
+            .unwrap();
+        assert!(
+            t.speedup > 1.2,
+            "wide trig loop should win on the many-core: {:.2}x",
+            t.speedup
+        );
+        assert_eq!(t.loops[0].entries, 1);
+        assert_eq!(t.loops[0].slots, 4096);
+        // Compute-dense: the lane split, not the bandwidth ceiling,
+        // decides this loop.
+        let lp = an.profile.loop_profile(LoopId(1)).unwrap();
+        let expected =
+            XEON_BRONZE_3104.time(&lp.ops) / XEON_GOLD_6130.parallel_lanes();
+        assert!((t.loops[0].compute_s - expected).abs() < expected * 1e-9);
+    }
+
+    #[test]
+    fn no_pcie_only_fork_join() {
+        let (prog, an) = setup();
+        let k = kernel(&prog, &an, 1);
+        // The kernel does move real array footprints on accelerator
+        // destinations...
+        assert!(k.bytes_in() + k.bytes_out() > 0);
+        let t = simulate(&an, &[k], &XEON_BRONZE_3104, &XEON_GOLD_6130)
+            .unwrap();
+        // ...but shared memory pays only the fork/join pair per entry.
+        let expected =
+            t.loops[0].entries as f64 * XEON_GOLD_6130.fork_join_s;
+        assert!((t.loops[0].transfer_s - expected).abs() < 1e-15);
+    }
+
+    #[test]
+    fn streaming_copy_hits_the_bandwidth_ceiling() {
+        let (prog, an) = setup();
+        let k = kernel(&prog, &an, 2);
+        let t = simulate(&an, &[k], &XEON_BRONZE_3104, &XEON_GOLD_6130)
+            .unwrap();
+        let lp = an.profile.loop_profile(LoopId(2)).unwrap();
+        let mem_floor =
+            lp.ops.bytes() as f64 / XEON_GOLD_6130.mem_bytes_per_sec;
+        let lane_split =
+            XEON_BRONZE_3104.time(&lp.ops) / XEON_GOLD_6130.parallel_lanes();
+        // The 16-byte-per-element double stream saturates memory before
+        // it runs out of lanes...
+        assert!(
+            mem_floor > lane_split,
+            "mem {mem_floor:e} vs lanes {lane_split:e}"
+        );
+        // ...and the model charges the ceiling, not the lane split.
+        assert!((t.loops[0].compute_s - mem_floor).abs() < mem_floor * 1e-9);
+        // Effective scaling is therefore well below the lane count.
+        let serial = XEON_BRONZE_3104.time(&lp.ops);
+        let local_speedup = serial / t.loops[0].total_s;
+        assert!(local_speedup < XEON_GOLD_6130.parallel_lanes() * 0.9);
+        assert!(local_speedup > 1.0);
+    }
+
+    #[test]
+    fn carried_loop_serializes_and_loses() {
+        let (prog, an) = setup();
+        let k = kernel(&prog, &an, 3);
+        assert!(matches!(k.dependence, Dependence::Carried(_)));
+        let t = simulate(&an, &[k], &XEON_BRONZE_3104, &XEON_GOLD_6130)
+            .unwrap();
+        // Serial region + fork/join: strictly slower than not offloading.
+        assert!(t.speedup < 1.0, "got {:.3}x", t.speedup);
+        let lp = an.profile.loop_profile(LoopId(3)).unwrap();
+        let serial = XEON_BRONZE_3104.time(&lp.ops);
+        assert!((t.loops[0].compute_s - serial).abs() < serial * 1e-9);
+    }
+
+    #[test]
+    fn reduction_pays_the_log_tree_combine() {
+        let (prog, an) = setup();
+        let k = kernel(&prog, &an, 4);
+        assert!(matches!(k.dependence, Dependence::Reduction(_)));
+        let t = simulate(&an, &[k], &XEON_BRONZE_3104, &XEON_GOLD_6130)
+            .unwrap();
+        let lp = an.profile.loop_profile(LoopId(4)).unwrap();
+        let lanes = XEON_GOLD_6130.parallel_lanes();
+        let lane_split = XEON_BRONZE_3104.time(&lp.ops) / lanes;
+        let combine = XEON_GOLD_6130.combine_levels(lanes)
+            * XEON_GOLD_6130.combine_latency_s;
+        // Strictly more than an independent loop of equal work...
+        assert!(t.loops[0].compute_s > lane_split);
+        // ...by exactly the combine tree (this loop is compute-bound).
+        assert!(
+            (t.loops[0].compute_s - (lane_split + combine)).abs()
+                < (lane_split + combine) * 1e-9
+        );
+    }
+
+    #[test]
+    fn overlapping_pattern_rejected() {
+        // A parallel region inside another parallel region of the same
+        // pattern is malformed on every destination.
+        const NESTED: &str = "
+#define R 16
+#define N 256
+float x[N]; float y[N];
+int main() {
+    for (int r = 0; r < R; r++) {             // L0 outer
+        for (int i = 0; i < N; i++) {         // L1 inner
+            y[i] = y[i] + x[i] * 0.5;
+        }
+    }
+    return 0;
+}";
+        let nprog = parse(NESTED).unwrap();
+        let nan = analyze(&nprog, "main").unwrap();
+        let k0 = kernel(&nprog, &nan, 0);
+        let k1 = kernel(&nprog, &nan, 1);
+        let err =
+            simulate(&nan, &[k0, k1], &XEON_BRONZE_3104, &XEON_GOLD_6130)
+                .unwrap_err();
+        assert!(matches!(err, SimError::OverlappingLoops(..)));
+    }
+
+    #[test]
+    fn empty_pattern_is_baseline() {
+        let (_prog, an) = setup();
+        let t = simulate(&an, &[], &XEON_BRONZE_3104, &XEON_GOLD_6130)
+            .unwrap();
+        assert!((t.speedup - 1.0).abs() < 1e-9);
+        assert_eq!(t.loops.len(), 0);
+        assert_eq!(t.combined, ResourceEstimate::default());
+    }
+
+    #[test]
+    fn omp_pattern_consumes_no_fpga_fabric() {
+        let (prog, an) = setup();
+        let k = kernel(&prog, &an, 1);
+        let t = simulate(&an, &[k], &XEON_BRONZE_3104, &XEON_GOLD_6130)
+            .unwrap();
+        assert_eq!(t.combined, ResourceEstimate::default());
+    }
+}

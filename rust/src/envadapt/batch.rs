@@ -32,7 +32,7 @@ use super::pipeline::{OffloadRequest, Pipeline, Plan, Planned};
 /// One destination's result for one application in a mixed cycle.
 #[derive(Debug)]
 pub struct DestinationOutcome {
-    /// Backend name ("fpga", "gpu", "cpu").
+    /// Backend name ("fpga", "gpu", "omp", "cpu").
     pub backend: &'static str,
     /// The plan this destination produced, when it solved.
     pub plan: Option<Plan>,
@@ -287,9 +287,9 @@ impl<'a> Batch<'a> {
     /// ties (put the preferred destination first).
     ///
     /// Routing and the report are keyed by [`crate::search::Backend::name`]
-    /// ("fpga", "gpu", "cpu") — register at most one pipeline per backend
-    /// *kind*; two same-kind backends on different boards would collide
-    /// in the per-app `backends` map and the destination split.
+    /// ("fpga", "gpu", "omp", "cpu") — register at most one pipeline per
+    /// backend *kind*; two same-kind backends on different boards would
+    /// collide in the per-app `backends` map and the destination split.
     pub fn mixed(pipelines: Vec<&'a Pipeline<'a>>) -> Self {
         Batch {
             pipelines,
@@ -323,8 +323,9 @@ impl<'a> Batch<'a> {
     /// Whether the destination pipelines can share one funnel run per
     /// app: identical search configuration (fingerprint covers every
     /// knob, the execution engine included) and identical narrowing
-    /// device. The bundled mixed cycle (fpga+gpu+cpu over one config,
-    /// all narrowing on the FPGA resource model) always qualifies.
+    /// device. The bundled mixed cycle (fpga+gpu+omp+cpu over one
+    /// config, all narrowing on the FPGA resource model) always
+    /// qualifies.
     fn sharable(&self) -> bool {
         self.pipelines.len() > 1
             && self.pipelines.windows(2).all(|w| {
@@ -634,11 +635,12 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cpu::XEON_BRONZE_3104;
+    use crate::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
     use crate::gpu::TESLA_T4;
     use crate::hls::ARRIA10_GX;
     use crate::search::{
-        Backend, CpuBaseline, FpgaBackend, GpuBackend, SearchConfig,
+        Backend, CpuBaseline, FpgaBackend, GpuBackend, OmpBackend,
+        SearchConfig,
     };
 
     const GOOD: &str = "
@@ -838,7 +840,7 @@ int main() {
     #[test]
     fn shared_funnel_routing_matches_independent_solves() {
         // The mixed cycle shares parse/analysis/extraction per app
-        // across the three destination pipelines. Routing and every
+        // across the four destination pipelines. Routing and every
         // per-destination figure must be identical to running each
         // (app × backend) solve independently — the PR-3 behavior.
         let fpga = backend();
@@ -847,14 +849,20 @@ int main() {
             gpu: &TESLA_T4,
             device: &ARRIA10_GX,
         };
+        let omp = OmpBackend {
+            cpu: &XEON_BRONZE_3104,
+            omp: &XEON_GOLD_6130,
+            device: &ARRIA10_GX,
+        };
         let cpu = CpuBaseline {
             cpu: &XEON_BRONZE_3104,
             device: &ARRIA10_GX,
         };
         let pf = Pipeline::new(SearchConfig::default(), &fpga).unwrap();
         let pg = Pipeline::new(SearchConfig::default(), &gpu).unwrap();
+        let po = Pipeline::new(SearchConfig::default(), &omp).unwrap();
         let pc = Pipeline::new(SearchConfig::default(), &cpu).unwrap();
-        let batch = Batch::mixed(vec![&pf, &pg, &pc])
+        let batch = Batch::mixed(vec![&pf, &pg, &po, &pc])
             .with(req("good", GOOD))
             .with(req("good2", GOOD2));
         assert!(batch.sharable());
@@ -865,7 +873,7 @@ int main() {
             report.entries.iter().zip([GOOD, GOOD2])
         {
             for (outcome, pipe) in
-                entry.outcomes.iter().zip([&pf, &pg, &pc])
+                entry.outcomes.iter().zip([&pf, &pg, &po, &pc])
             {
                 let solo = pipe.solve(req(&entry.app, source)).unwrap();
                 let shared = outcome.plan.as_ref().unwrap();
@@ -938,26 +946,37 @@ int main() {
             gpu: &TESLA_T4,
             device: &ARRIA10_GX,
         };
+        let omp = OmpBackend {
+            cpu: &XEON_BRONZE_3104,
+            omp: &XEON_GOLD_6130,
+            device: &ARRIA10_GX,
+        };
         let cpu = CpuBaseline {
             cpu: &XEON_BRONZE_3104,
             device: &ARRIA10_GX,
         };
         let pf = Pipeline::new(SearchConfig::default(), &fpga).unwrap();
         let pg = Pipeline::new(SearchConfig::default(), &gpu).unwrap();
+        let po = Pipeline::new(SearchConfig::default(), &omp).unwrap();
         let pc = Pipeline::new(SearchConfig::default(), &cpu).unwrap();
-        let report = Batch::mixed(vec![&pf, &pg, &pc])
+        let report = Batch::mixed(vec![&pf, &pg, &po, &pc])
             .with(req("good", GOOD))
             .run();
         assert!(report.is_mixed());
         assert_eq!(report.backend, "mixed");
-        assert_eq!(report.backends, vec!["fpga", "gpu", "cpu"]);
+        assert_eq!(report.backends, vec!["fpga", "gpu", "omp", "cpu"]);
         let entry = &report.entries[0];
-        assert_eq!(entry.outcomes.len(), 3);
+        assert_eq!(entry.outcomes.len(), 4);
         // Every destination solved this trivially offloadable app...
         assert!(entry.outcomes.iter().all(|o| o.plan.is_some()));
-        // ...and the winner beats (or equals) the all-CPU control.
+        // ...and the winner beats (or equals) the all-CPU control. (This
+        // tiny trig loop has no PCIe budget at all, so the shared-memory
+        // many-core actually takes it.)
         let dest = entry.destination.unwrap();
-        assert!(dest == "fpga" || dest == "gpu", "picked {dest}");
+        assert!(
+            dest == "fpga" || dest == "gpu" || dest == "omp",
+            "picked {dest}"
+        );
         let win = entry.plan.as_ref().unwrap();
         assert!(win.verified_ok());
         for o in &entry.outcomes {
@@ -970,6 +989,7 @@ int main() {
         let solo_pipe = match dest {
             "fpga" => &pf,
             "gpu" => &pg,
+            "omp" => &po,
             _ => &pc,
         };
         let solo = solo_pipe.solve(req("good", GOOD)).unwrap();

@@ -7,14 +7,31 @@
 //!   [`crate::search::Backend`].
 //! * [`batch`] — N applications through one shared pipeline per
 //!   automation cycle, funnels running concurrently; in mixed mode one
-//!   pipeline per destination backend (FPGA / GPU / CPU), with the best
-//!   verified speedup picking each app's destination.
+//!   pipeline per destination backend (FPGA / GPU / many-core OpenMP /
+//!   CPU), with the best verified speedup picking each app's
+//!   destination.
 //! * [`flow`] — the legacy one-call `run_flow`, now a shim over the
 //!   pipeline.
 //! * [`testdb`] — test-case DB (sample tests per app).
 //! * [`patterndb`] — code-pattern DB (persisted solutions, source-hash
 //!   stamped for reuse).
 //! * [`facilitydb`] — facility-resource DB (Fig. 3 machines).
+//!
+//! Requests are built (and validated) before any stage runs:
+//!
+//! ```
+//! use fpga_offload::envadapt::OffloadRequest;
+//!
+//! let req = OffloadRequest::builder("app")
+//!     .source("int main() { return 0; }")
+//!     .entry("main")
+//!     .seed(7)
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(req.app, "app");
+//! // A request without source never reaches the pipeline.
+//! assert!(OffloadRequest::builder("app").build().is_err());
+//! ```
 
 pub mod batch;
 pub mod facilitydb;

@@ -24,7 +24,7 @@ use crate::util::json::Json;
 pub struct ReuseKey {
     /// FNV-1a fingerprint of the application source.
     pub source_hash: u64,
-    /// Backend that measured the solution ("fpga", "gpu", "cpu").
+    /// Backend that measured the solution ("fpga", "gpu", "omp", "cpu").
     pub backend: String,
     /// Entry function the solution was profiled and verified under.
     pub entry: String,
@@ -48,9 +48,9 @@ pub struct StoredPattern {
     pub app: String,
     /// Source fingerprint at store time (None for pre-hash records).
     pub source_hash: Option<u64>,
-    /// Backend that measured the solution ("fpga", "gpu", "cpu"; None
-    /// for pre-hash records). Reuse must not cross backends: a 4x FPGA
-    /// plan is not a CPU-baseline plan.
+    /// Backend that measured the solution ("fpga", "gpu", "omp", "cpu";
+    /// None for pre-hash records). Reuse must not cross backends: a 4x
+    /// FPGA plan is not a CPU-baseline plan.
     pub backend: Option<String>,
     /// Entry function the solution was profiled under.
     pub entry: Option<String>,

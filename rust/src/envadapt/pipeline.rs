@@ -17,9 +17,10 @@
 //!
 //! Steps 4 and 6 route through a [`Backend`]
 //! ([`crate::search::FpgaBackend`] is the paper's destination,
-//! [`crate::search::CpuBaseline`] the control; a GPU backend is the
-//! planned third — see ROADMAP), so the same staged flow serves a
-//! mixed-destination environment.
+//! [`crate::search::GpuBackend`] the mixed-environment board,
+//! [`crate::search::OmpBackend`] the many-core OpenMP machine, and
+//! [`crate::search::CpuBaseline`] the control), so the same staged flow
+//! serves a mixed-destination environment.
 //!
 //! The artifact types make stage order a *compile-time* property — you
 //! cannot measure what was never analyzed:

@@ -23,6 +23,19 @@
 //! Enable per request via
 //! [`crate::envadapt::OffloadRequestBuilder::func_blocks`] (CLI:
 //! `repro offload --func-blocks`, `repro batch --func-blocks`).
+//!
+//! ```
+//! use fpga_offload::funcblock::{BlockKind, Catalog};
+//!
+//! let catalog = Catalog::builtin();
+//! // Sized to the bundled workloads: each of tdfir / mriq / sobel
+//! // contains at least one of these four blocks.
+//! assert_eq!(catalog.specs().len(), 4);
+//! assert_eq!(catalog.spec(BlockKind::Fir).kind, BlockKind::Fir);
+//! // The fingerprint is part of the pattern-DB reuse key: stable for
+//! // one catalog, different the moment any model knob moves.
+//! assert_eq!(catalog.fingerprint(), Catalog::builtin().fingerprint());
+//! ```
 
 pub mod catalog;
 pub mod confirm;

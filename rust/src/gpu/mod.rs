@@ -27,6 +27,18 @@
 //!
 //! Functional verification is destination-independent (outlined-kernel
 //! interpretation, [`crate::fpga::exec`]) and is shared by all backends.
+//!
+//! ```
+//! use fpga_offload::gpu::TESLA_T4;
+//! use fpga_offload::minic::OpCounts;
+//!
+//! // The SFU edge: one trig op costs 4 issue cycles here vs 42 on the
+//! // modeled Xeon — the discriminator that routes trig-dense loops to
+//! // the GPU destination.
+//! let trig = OpCounts { f_trig: 100, ..Default::default() };
+//! assert_eq!(TESLA_T4.issue_cycles(&trig), 400.0);
+//! assert_eq!(TESLA_T4.cores(), 2560);
+//! ```
 
 pub mod device;
 pub mod sim;

@@ -6,6 +6,15 @@
 //! resource-efficiency ratio the paper narrows candidates by — all
 //! without the ~3 h full place-and-route, which is exactly the asymmetry
 //! the paper's method is built around.
+//!
+//! ```
+//! use fpga_offload::hls::{full_compile_seconds, ResourceEstimate, ARRIA10_GX};
+//!
+//! // Even an empty design pays the base place-and-route hours — the
+//! // wall-clock asymmetry the pre-compile narrowing exists to avoid.
+//! let full = full_compile_seconds(&ResourceEstimate::default(), &ARRIA10_GX);
+//! assert!(full > 3600.0);
+//! ```
 
 pub mod device;
 pub mod report;

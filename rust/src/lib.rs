@@ -18,7 +18,8 @@
 //!    then combinations) — measuring each pattern through a pluggable
 //!    [`search::Backend`] inside the verification environment: the
 //!    [`fpga`] simulator (the paper's destination), the [`gpu`] model
-//!    (the mixed-environment board), or the CPU control.
+//!    (the mixed-environment board), the [`cpu::omp`] many-core model
+//!    (OpenMP parallel regions over shared memory), or the CPU control.
 //! 6. [`envadapt`] wires the above into the Fig.-1 environment-adaptive
 //!    software flow as the staged [`envadapt::Pipeline`] (one typed stage
 //!    per Fig.-1 step), with [`envadapt::Batch`] orchestration for
@@ -52,9 +53,41 @@
 //! | [`funcblock`]| function-block catalog, detection, sample-test confirmation, replacement planning |
 //! | [`envadapt`] | the staged Fig.-1 pipeline, batch orchestration, test-case / code-pattern / facility DBs |
 //!
-//! Support: [`cpu`] (CPU cost model), [`fpga`] (FPGA simulator +
-//! transfer model), [`runtime`] (PJRT artifacts), [`workloads`]
-//! (bundled applications), [`cli`], and [`util`].
+//! Support: [`cpu`] (CPU cost model + the [`cpu::omp`] many-core OpenMP
+//! destination), [`fpga`] (FPGA simulator + transfer model), [`runtime`]
+//! (PJRT artifacts), [`workloads`] (bundled applications), [`cli`], and
+//! [`util`]. See `ARCHITECTURE.md` at the repository root for the full
+//! data-flow map and the recipe for adding another destination.
+//!
+//! # Quickstart
+//!
+//! Solve one application end to end (the all-CPU control backend keeps
+//! this instant — swap in [`FpgaBackend`], [`GpuBackend`] or
+//! [`OmpBackend`] for a real destination):
+//!
+//! ```
+//! use fpga_offload::cpu::XEON_BRONZE_3104;
+//! use fpga_offload::hls::ARRIA10_GX;
+//! use fpga_offload::{CpuBaseline, OffloadRequest, Pipeline, SearchConfig};
+//!
+//! let backend = CpuBaseline { cpu: &XEON_BRONZE_3104, device: &ARRIA10_GX };
+//! let pipeline = Pipeline::new(SearchConfig::default(), &backend).unwrap();
+//! let request = OffloadRequest::builder("demo")
+//!     .source(
+//!         "#define N 256\n\
+//!          float a[N]; float out[N];\n\
+//!          int main() {\n\
+//!              for (int i = 0; i < N; i++) { a[i] = i * 0.01 - 1.0; }\n\
+//!              for (int i = 0; i < N; i++) { out[i] = sin(a[i]) * 2.0; }\n\
+//!              return 0;\n\
+//!          }",
+//!     )
+//!     .build()
+//!     .unwrap();
+//! let planned = pipeline.solve(request).unwrap();
+//! // The control never claims acceleration — exactly 1.0x.
+//! assert_eq!(planned.plan.speedup(), 1.0);
+//! ```
 
 pub mod analysis;
 pub mod cli;
@@ -72,6 +105,8 @@ pub mod util;
 pub mod workloads;
 
 pub use envadapt::{Batch, BatchReport, OffloadRequest, Pipeline};
-pub use search::backend::{Backend, CpuBaseline, FpgaBackend, GpuBackend};
+pub use search::backend::{
+    Backend, CpuBaseline, FpgaBackend, GpuBackend, OmpBackend,
+};
 pub use search::config::SearchConfig;
 pub use search::result::{OffloadSolution, PatternMeasurement};

@@ -33,6 +33,22 @@
 //! globals, totals, and per-loop profiles must match exactly. Engine
 //! selection is wired through [`engine::EngineKind`] (CLI: `--engine
 //! interp|vm`).
+//!
+//! ```
+//! use fpga_offload::minic::{parse, typecheck};
+//!
+//! let prog = parse(
+//!     "#define N 8\n\
+//!      float a[N];\n\
+//!      int main() {\n\
+//!          for (int i = 0; i < N; i++) { a[i] = i * 0.5; }\n\
+//!          return 0;\n\
+//!      }",
+//! )
+//! .unwrap();
+//! typecheck::check_ok(&prog).unwrap();
+//! assert!(prog.function("main").is_some());
+//! ```
 
 pub mod ast;
 pub mod bytecode;

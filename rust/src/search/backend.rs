@@ -6,7 +6,7 @@
 //! follow-on evaluations the ROADMAP names need more: many applications
 //! per automation cycle (arXiv:2002.09541) and mixed destinations —
 //! FPGA, GPU, many-core — per environment (arXiv:2011.12431). The
-//! [`Backend`] trait carries exactly the three destination-specific
+//! [`Backend`] trait carries exactly the destination-specific
 //! operations of the Fig.-1 flow:
 //!
 //! * [`Backend::measure`] — step 4: performance-measure one offload
@@ -17,17 +17,20 @@
 //! * [`Backend::deploy_check`] — step 6: the production deployment
 //!   check (the PJRT sample test for destinations that have real
 //!   artifacts).
+//! * [`Backend::price_block`] — the function-block path's per-
+//!   destination pricing hook (arXiv:2004.09883).
 //!
 //! Implementations: [`FpgaBackend`] (the paper's path), [`GpuBackend`]
-//! (the mixed-environment board, measured by [`crate::gpu::sim`]) and
-//! [`CpuBaseline`] (a control destination that offloads nothing — the
-//! all-CPU denominator as a first-class backend).
+//! (the mixed-environment board, measured by [`crate::gpu::sim`]),
+//! [`OmpBackend`] (the many-core fourth destination, measured by
+//! [`crate::cpu::omp`]) and [`CpuBaseline`] (a control destination that
+//! offloads nothing — the all-CPU denominator as a first-class backend).
 //!
 //! Backends are `Sync`: the verification environment's worker pool and
 //! the batch orchestrator share one backend across threads.
 
 use crate::analysis::Analysis;
-use crate::cpu::CpuModel;
+use crate::cpu::{omp, CpuModel, OmpDevice};
 use crate::fpga::{self, verify_pattern_with, PatternTiming};
 use crate::funcblock::{BlockCost, Catalog, ConfirmedBlock};
 use crate::gpu::{self, GpuDevice};
@@ -52,7 +55,7 @@ pub struct BackendMeasurement {
 /// A measurement/verification/deployment destination (see module docs).
 pub trait Backend: Sync {
     /// Short identifier used in reports and CLI flags ("fpga", "gpu",
-    /// "cpu").
+    /// "omp", "cpu").
     fn name(&self) -> &'static str;
 
     /// The device whose resource model narrows the funnel (pre-compile
@@ -310,6 +313,108 @@ impl Backend for GpuBackend<'_> {
     }
 }
 
+/// The many-core fourth destination (ROADMAP / arXiv:2011.12431):
+/// OpenMP parallel regions on a shared-memory Xeon, measured by the
+/// [`crate::cpu::omp`] fork-join/bandwidth model, verified by the same
+/// outlined-kernel interpretation as every destination. Like the GPU,
+/// the funnel narrows with the FPGA resource model (`device`) so all
+/// destinations rank the *same* candidate set; unlike the GPU, a
+/// pattern pays no PCIe at all and the destination build is seconds of
+/// `gcc -fopenmp`.
+#[derive(Debug, Clone, Copy)]
+pub struct OmpBackend<'a> {
+    pub cpu: &'a CpuModel,
+    pub omp: &'a OmpDevice,
+    /// Funnel-narrowing device model only; the destination is `omp`.
+    pub device: &'a Device,
+}
+
+impl Backend for OmpBackend<'_> {
+    fn name(&self) -> &'static str {
+        "omp"
+    }
+
+    fn device(&self) -> &Device {
+        self.device
+    }
+
+    fn destination(&self) -> &'static str {
+        self.omp.name
+    }
+
+    fn measure(
+        &self,
+        _prog: &Program,
+        analysis: &Analysis,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        _cfg: &SearchConfig,
+    ) -> Result<BackendMeasurement, SearchError> {
+        let kernels: Vec<_> = pattern
+            .iter()
+            .map(|&i| cands[i].split.kernel.clone())
+            .collect();
+        let timing = omp::simulate(analysis, &kernels, self.cpu, self.omp)
+            .map_err(SearchError::Sim)?;
+        // The destination build is a gcc -fopenmp compile: seconds, so
+        // a many-core automation cycle is essentially free.
+        Ok(BackendMeasurement {
+            timing,
+            compile_s: self.omp.build_seconds,
+        })
+    }
+
+    fn verify(
+        &self,
+        prog: &Program,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        entry: &str,
+        cfg: &SearchConfig,
+    ) -> Result<bool, SearchError> {
+        let splits: Vec<_> = pattern
+            .iter()
+            .map(|&i| cands[i].split.clone())
+            .collect();
+        let v = verify_pattern_with(prog, &splits, entry, cfg.engine)
+            .map_err(SearchError::Interp)?;
+        Ok(v.passed)
+    }
+
+    fn deploy_check(
+        &self,
+        sample: &str,
+        env: (&Runtime, &Artifacts),
+        seed: u64,
+    ) -> anyhow::Result<SampleRun> {
+        let (rt, art) = env;
+        runtime::run_app(rt, art, sample, seed)
+    }
+
+    /// Many-core block pricing, [`crate::funcblock::CpuLibModel`]-based
+    /// so replacements compete fairly with the FPGA core and the GPU
+    /// library: the catalog's tuned-CPU factor over the naive nest,
+    /// spread across the parallel lanes, floored by the shared memory
+    /// bandwidth, plus one fork/join per block invocation.
+    fn price_block(
+        &self,
+        block: &ConfirmedBlock,
+        catalog: &Catalog,
+    ) -> Option<BlockCost> {
+        let lib = &catalog.spec(block.kind).cpu;
+        let cpu_s = self.cpu.time(&block.ops);
+        let tuned_s = cpu_s / lib.speedup.max(f64::MIN_POSITIVE);
+        let compute_s = tuned_s / self.omp.parallel_lanes();
+        let mem_s = block.ops.bytes() as f64 / self.omp.mem_bytes_per_sec;
+        let fork_s = block.entries as f64 * self.omp.fork_join_s;
+        Some(BlockCost {
+            cpu_s,
+            accel_s: compute_s.max(mem_s) + fork_s,
+            build_s: self.omp.build_seconds,
+        })
+    }
+}
+
 /// Control destination: nothing is offloaded, every pattern runs at the
 /// all-CPU baseline (speedup exactly 1.0, no compile time). Useful as the
 /// denominator in mixed-destination comparisons and as a cheap smoke
@@ -468,6 +573,26 @@ int main() {
     }
 
     #[test]
+    fn omp_backend_measures_and_verifies() {
+        let (prog, an, cands) = setup();
+        let b = OmpBackend {
+            cpu: &XEON_BRONZE_3104,
+            omp: &crate::cpu::XEON_GOLD_6130,
+            device: &ARRIA10_GX,
+        };
+        let cfg = SearchConfig::default();
+        let m = b.measure(&prog, &an, &cands, &vec![0], &cfg).unwrap();
+        assert!(m.timing.speedup > 0.0);
+        // OpenMP builds are gcc seconds — below even the GPU's nvcc
+        // minutes, and nowhere near the FPGA's hours.
+        assert!(m.compile_s > 0.0);
+        assert!(m.compile_s < 60.0);
+        assert!(b.verify(&prog, &cands, &vec![0], "main", &cfg).unwrap());
+        assert_eq!(b.name(), "omp");
+        assert_eq!(b.destination(), crate::cpu::XEON_GOLD_6130.name);
+    }
+
+    #[test]
     fn cpu_baseline_is_exactly_one_x() {
         let (prog, an, cands) = setup();
         let b = CpuBaseline {
@@ -553,6 +678,24 @@ int compute() {
         assert!(pg.profitable(), "{pg:?}");
         assert_eq!(pg.cpu_s, pf.cpu_s);
 
+        // The many-core destination profits as well — the catalog's CPU
+        // library factor spread across the OpenMP lanes — but never by
+        // more than the lane count allows.
+        let o = OmpBackend {
+            cpu: &XEON_BRONZE_3104,
+            omp: &crate::cpu::XEON_GOLD_6130,
+            device: &ARRIA10_GX,
+        };
+        let po = o.price_block(fir, &catalog).unwrap();
+        assert!(po.profitable(), "{po:?}");
+        assert_eq!(po.cpu_s, pf.cpu_s);
+        assert!(
+            po.cpu_s / po.accel_s
+                <= crate::cpu::XEON_GOLD_6130.parallel_lanes() + 1e-9,
+            "{po:?}"
+        );
+        assert!(po.build_s < pg.build_s);
+
         // The control destination never strictly profits (library
         // factor 1.0): blocks stay un-replaced and the backend stays
         // the exact all-CPU denominator.
@@ -572,19 +715,32 @@ int compute() {
             gpu: &crate::gpu::TESLA_T4,
             device: &ARRIA10_GX,
         };
+        let o = OmpBackend {
+            cpu: &XEON_BRONZE_3104,
+            omp: &crate::cpu::XEON_GOLD_6130,
+            device: &ARRIA10_GX,
+        };
         let c = CpuBaseline {
             cpu: &XEON_BRONZE_3104,
             device: &ARRIA10_GX,
         };
-        assert_ne!(f.name(), c.name());
-        assert_ne!(f.name(), g.name());
-        assert_ne!(g.name(), c.name());
-        // All three narrow the funnel with the same device model, but
+        let names = [f.name(), g.name(), o.name(), c.name()];
+        for i in 0..names.len() {
+            for j in (i + 1)..names.len() {
+                assert_ne!(names[i], names[j]);
+            }
+        }
+        // All four narrow the funnel with the same device model, but
         // their *destinations* (the pattern-DB key) differ.
         assert_eq!(f.device().name, c.device().name);
         assert_eq!(f.device().name, g.device().name);
+        assert_eq!(f.device().name, o.device().name);
         assert_eq!(f.destination(), ARRIA10_GX.name);
         assert_eq!(g.destination(), crate::gpu::TESLA_T4.name);
+        assert_eq!(o.destination(), crate::cpu::XEON_GOLD_6130.name);
         assert_eq!(c.destination(), XEON_BRONZE_3104.name);
+        // The many-core board is not the baseline core: plans for one
+        // must never be replayed on the other.
+        assert_ne!(o.destination(), c.destination());
     }
 }

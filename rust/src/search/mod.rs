@@ -6,11 +6,24 @@
 //!   resource-cap rule.
 //! * [`backend`] — the destination seam: measurement, verification and
 //!   deploy-check per target ([`FpgaBackend`], [`GpuBackend`],
-//!   [`CpuBaseline`]).
+//!   [`OmpBackend`], [`CpuBaseline`]).
 //! * [`measure`] — the verification environment: worker-pool measurement,
 //!   two rounds, best-pattern selection, automation-time accounting.
 //! * [`ga`] — the previous work's GA strategy \[32\], as the comparison
 //!   baseline.
+//!
+//! The funnel's A/B/C/D knobs are a validated [`SearchConfig`]; its
+//! fingerprint is part of the pattern-DB reuse key, so two configs that
+//! differ in any knob never share stored plans:
+//!
+//! ```
+//! use fpga_offload::search::SearchConfig;
+//!
+//! let base = SearchConfig::default();
+//! assert!(base.validate().is_ok());
+//! let tighter = SearchConfig { max_patterns: 3, ..SearchConfig::default() };
+//! assert_ne!(base.fingerprint(), tighter.fingerprint());
+//! ```
 
 pub mod backend;
 pub mod config;
@@ -22,6 +35,7 @@ pub mod result;
 
 pub use backend::{
     Backend, BackendMeasurement, CpuBaseline, FpgaBackend, GpuBackend,
+    OmpBackend,
 };
 pub use config::SearchConfig;
 pub use funnel::{Candidate, FunnelError};

@@ -1,6 +1,21 @@
 //! Small self-contained substrates the offline build environment forces us
 //! to own: JSON, a seedable RNG, a property-testing harness, and unique
 //! self-cleaning temp dirs.
+//!
+//! Every report the crate writes (batch JSON, bench series, pattern-DB
+//! records) round-trips through [`json`]:
+//!
+//! ```
+//! use fpga_offload::util::json::Json;
+//!
+//! let v = Json::obj(vec![
+//!     ("speedup", Json::Num(3.49)),
+//!     ("destination", Json::Str("fpga".into())),
+//! ]);
+//! let text = v.pretty();
+//! assert_eq!(Json::parse(&text).unwrap(), v);
+//! assert_eq!(v.get(&["destination"]).unwrap().as_str(), Some("fpga"));
+//! ```
 
 pub mod bench;
 pub mod fnv;

@@ -1,5 +1,23 @@
 //! Evaluated applications: embedded MiniC sources, Rust reference
 //! numerics, and deterministic sample-data generators.
+//!
+//! Three bundled workloads, each exercising a different routing story:
+//! `tdfir` (HPEC complex FIR bank — deep MAC pipelines, the FPGA's
+//! home turf), `mriq` (MRI Q-matrix — trig-dense and massively
+//! parallel, the GPU's), and `sobel` (3x3 gradient stencil —
+//! memory-heavy with light per-pixel work, the many-core's).
+//!
+//! ```
+//! use fpga_offload::minic::parse;
+//! use fpga_offload::workloads;
+//!
+//! assert_eq!(workloads::APPS, ["tdfir", "mriq", "sobel"]);
+//! for app in workloads::APPS {
+//!     let src = workloads::source(app).expect("bundled");
+//!     assert!(parse(src).is_ok(), "{app} must stay parseable");
+//! }
+//! assert!(workloads::source("ghost").is_none());
+//! ```
 
 pub mod data;
 pub mod reference;

@@ -13,12 +13,13 @@
 //!   cache *invalidation* when the device or config changes,
 //! * end-to-end offload of a request with a non-`main` entry,
 //! * mixed-destination batches routing each app to its best verified
-//!   destination (FPGA / GPU / CPU),
+//!   destination (FPGA / GPU / many-core OpenMP / CPU), with solo-run
+//!   equivalence per destination,
 //! * `run_flow` shim equivalence against the staged pipeline.
 
 #![allow(deprecated)]
 
-use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
 use fpga_offload::envadapt::{
     run_flow, Batch, FlowOptions, OffloadRequest, Pipeline, PipelineError,
     TestDb,
@@ -26,7 +27,7 @@ use fpga_offload::envadapt::{
 use fpga_offload::gpu::TESLA_T4;
 use fpga_offload::hls::{Device, ARRIA10_GX};
 use fpga_offload::search::{
-    CpuBaseline, FpgaBackend, GpuBackend, SearchConfig,
+    CpuBaseline, FpgaBackend, GpuBackend, OmpBackend, SearchConfig,
 };
 use fpga_offload::util::tempdir::TempDir;
 use fpga_offload::workloads;
@@ -44,6 +45,14 @@ fn gpu_backend() -> GpuBackend<'static> {
     GpuBackend {
         cpu: &XEON_BRONZE_3104,
         gpu: &TESLA_T4,
+        device: &ARRIA10_GX,
+    }
+}
+
+fn omp_backend() -> OmpBackend<'static> {
+    OmpBackend {
+        cpu: &XEON_BRONZE_3104,
+        omp: &XEON_GOLD_6130,
         device: &ARRIA10_GX,
     }
 }
@@ -340,27 +349,32 @@ fn cache_invalidated_on_config_change() {
 
 /// The mixed-destination acceptance check: one cycle over the bundled
 /// workloads routes every app to a destination, the FPGA entries are
-/// identical to solo FPGA runs, and across the workload set both real
-/// destinations win at least one app (the Sobel stencil's sqrt-per-pixel
-/// parallelism suits the T4; the tdfir K-tap MAC suits the Arria10's
-/// spatialized pipeline).
+/// identical to solo FPGA runs, and across the workload set every real
+/// destination earns its seat (the tdfir K-tap MAC suits the Arria10's
+/// spatialized pipeline; the mriq trig kernel suits the T4's SFUs; the
+/// Sobel stencil's light per-pixel work cannot amortize PCIe but
+/// parallelizes cleanly over the many-core's shared memory).
 #[test]
 fn mixed_batch_routes_each_app_to_its_best_destination() {
     let fpga = fpga_backend();
     let gpu = gpu_backend();
+    let omp = omp_backend();
     let cpu = cpu_backend();
     let pf = Pipeline::new(SearchConfig::default(), &fpga).unwrap();
     let pg = Pipeline::new(SearchConfig::default(), &gpu).unwrap();
+    let po = Pipeline::new(SearchConfig::default(), &omp).unwrap();
     let pc = Pipeline::new(SearchConfig::default(), &cpu).unwrap();
 
-    let mut batch = Batch::mixed(vec![&pf, &pg, &pc]);
+    let mut batch = Batch::mixed(vec![&pf, &pg, &po, &pc]);
     for app in workloads::APPS {
         batch.push(bundled_request(app));
     }
     let report = batch.run();
     assert!(report.is_mixed());
+    assert_eq!(report.backends, vec!["fpga", "gpu", "omp", "cpu"]);
     assert_eq!(report.solved(), workloads::APPS.len());
 
+    let mut best_omp = 0.0f64;
     for (app, entry) in workloads::APPS.iter().zip(&report.entries) {
         assert_eq!(&entry.app, app);
         let dest = entry.destination.expect("every app routed");
@@ -374,6 +388,9 @@ fn mixed_batch_routes_each_app_to_its_best_destination() {
                     "{app}: {dest} lost to {}",
                     o.backend
                 );
+                if o.backend == "omp" {
+                    best_omp = best_omp.max(p.speedup());
+                }
             }
         }
         // Solo-run equivalence on the FPGA destination (outcome 0): the
@@ -401,6 +418,110 @@ fn mixed_batch_routes_each_app_to_its_best_destination() {
     assert!(
         dests.contains(&"gpu"),
         "no app landed on the GPU: {dests:?}"
+    );
+    // The many-core destination earns its seat: it wins an app outright
+    // or at minimum strictly beats the all-CPU control somewhere.
+    assert!(
+        dests.contains(&"omp") || best_omp > 1.0,
+        "many-core destination is dead weight: {dests:?}, best {best_omp}"
+    );
+}
+
+/// Solo-vs-mixed equivalence for the many-core destination: a `--backend
+/// omp` pipeline run alone produces exactly the plan the mixed cycle's
+/// omp outcome carries, for every bundled app.
+#[test]
+fn omp_solo_matches_mixed_outcome() {
+    let fpga = fpga_backend();
+    let gpu = gpu_backend();
+    let omp = omp_backend();
+    let cpu = cpu_backend();
+    let pf = Pipeline::new(SearchConfig::default(), &fpga).unwrap();
+    let pg = Pipeline::new(SearchConfig::default(), &gpu).unwrap();
+    let po = Pipeline::new(SearchConfig::default(), &omp).unwrap();
+    let pc = Pipeline::new(SearchConfig::default(), &cpu).unwrap();
+
+    let mut batch = Batch::mixed(vec![&pf, &pg, &po, &pc]);
+    for app in workloads::APPS {
+        batch.push(bundled_request(app));
+    }
+    let report = batch.run();
+
+    for (app, entry) in workloads::APPS.iter().zip(&report.entries) {
+        let omp_outcome = entry
+            .outcomes
+            .iter()
+            .find(|o| o.backend == "omp")
+            .expect("omp measured");
+        let mixed_plan = omp_outcome.plan.as_ref().unwrap();
+        let solo = po.solve(bundled_request(app)).unwrap();
+        assert_eq!(
+            mixed_plan.best_loops(),
+            solo.plan.best_loops(),
+            "{app}: mixed omp pattern differs from solo --backend omp"
+        );
+        assert!(
+            (mixed_plan.speedup() - solo.plan.speedup()).abs() < 1e-12,
+            "{app}: mixed omp speedup differs from solo --backend omp"
+        );
+        // Every omp measurement was functionally verified.
+        let sol = solo.plan.solution().expect("fresh plan");
+        for m in &sol.measurements {
+            assert_eq!(m.verified, Some(true), "{app} omp {}", m.label());
+        }
+    }
+}
+
+/// ... and when the backend switches between the FPGA and the many-core
+/// destination over one shared pattern DB: a plan measured for the
+/// Arria10 must never be replayed for the Xeon Gold's OpenMP runtime,
+/// and vice versa — while same-backend reuse keeps working on both.
+#[test]
+fn cache_invalidated_on_fpga_omp_switch() {
+    let dir = TempDir::new("fpga-offload-cache-omp").unwrap();
+    let fpga = fpga_backend();
+    let pipe_f = Pipeline::new(SearchConfig::default(), &fpga)
+        .unwrap()
+        .with_pattern_db(dir.path())
+        .with_cache_reuse(true);
+    assert!(!pipe_f
+        .solve(bundled_request("sobel"))
+        .unwrap()
+        .plan
+        .is_cached());
+    assert!(pipe_f
+        .solve(bundled_request("sobel"))
+        .unwrap()
+        .plan
+        .is_cached());
+
+    // Same app, same source, same DB — omp must re-search, then reuse
+    // its own record.
+    let omp = omp_backend();
+    let pipe_o = Pipeline::new(SearchConfig::default(), &omp)
+        .unwrap()
+        .with_pattern_db(dir.path())
+        .with_cache_reuse(true);
+    let first_omp = pipe_o.solve(bundled_request("sobel")).unwrap();
+    assert!(
+        !first_omp.plan.is_cached(),
+        "an FPGA plan must not be replayed on the many-core destination"
+    );
+    assert!(pipe_o
+        .solve(bundled_request("sobel"))
+        .unwrap()
+        .plan
+        .is_cached());
+
+    // Switching back: the omp record now owns the slot, so the FPGA
+    // pipeline re-searches rather than trusting it.
+    assert!(
+        !pipe_f
+            .solve(bundled_request("sobel"))
+            .unwrap()
+            .plan
+            .is_cached(),
+        "an omp plan must not be replayed on the FPGA destination"
     );
 }
 
