@@ -1,0 +1,130 @@
+//! Fault-tolerant automation cycle: what `repro batch --mixed
+//! --inject-faults <seed>` does, as a library walk-through.
+//!
+//! Wraps every destination backend in a deterministic
+//! [`fpga_offload::search::FaultyBackend`] (seeded transient bursts,
+//! hung builds, verify flips, panics), gives each pipeline a bounded
+//! [`fpga_offload::search::RetryPolicy`] on a shared simulated clock,
+//! and runs one mixed cycle. Transient faults are retried away;
+//! destinations that fail permanently drop out and their apps reroute;
+//! if everything fails an app still leaves the cycle served (stale
+//! cached plan, or the all-CPU baseline at worst). The printout shows
+//! each app's service level and the cycle's fault telemetry.
+//!
+//! Run with: `cargo run --release --example faulty_cycle`
+
+use fpga_offload::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
+use fpga_offload::envadapt::{Batch, OffloadRequest, Pipeline, TestDb};
+use fpga_offload::gpu::TESLA_T4;
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::search::{
+    Backend, CpuBaseline, FaultPlan, FaultyBackend, FpgaBackend,
+    GpuBackend, OmpBackend, RetryPolicy, SearchConfig, SimClock,
+};
+use fpga_offload::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let seed = 7u64;
+    println!(
+        "== fault-injected automation cycle: fpga + gpu + omp + cpu, \
+         seed {seed} ==\n"
+    );
+
+    let fpga = FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let gpu = GpuBackend {
+        cpu: &XEON_BRONZE_3104,
+        gpu: &TESLA_T4,
+        device: &ARRIA10_GX,
+    };
+    let omp = OmpBackend {
+        cpu: &XEON_BRONZE_3104,
+        omp: &XEON_GOLD_6130,
+        device: &ARRIA10_GX,
+    };
+    let cpu = CpuBaseline {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let inner: [&dyn Backend; 4] = [&fpga, &gpu, &omp, &cpu];
+
+    // One clock shared by the fault injector (hangs burn virtual hours)
+    // and the retry loops (backoff burns virtual seconds).
+    let clock = SimClock::new();
+    let faulty: Vec<FaultyBackend> = inner
+        .iter()
+        .map(|&b| {
+            FaultyBackend::new(b, FaultPlan::from_seed(seed), clock.clone())
+        })
+        .collect();
+
+    let cfg = SearchConfig::default();
+    let policy = RetryPolicy {
+        stage_deadline_s: Some(4.0 * 3600.0),
+        ..RetryPolicy::default()
+    };
+    let mut pipelines = Vec::new();
+    for b in &faulty {
+        let p = Pipeline::new(cfg.clone(), b)
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .with_retry(policy.clone())
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .with_clock(clock.clone());
+        pipelines.push(p);
+    }
+
+    let testdb = TestDb::builtin();
+    let mut batch = Batch::mixed(pipelines.iter().collect());
+    for app in workloads::APPS {
+        let case = testdb.get(app).expect("bundled apps are registered");
+        let src = workloads::source(app).expect("bundled source");
+        let mut req = OffloadRequest::from_case(case, src);
+        req.pjrt_sample = None;
+        batch.push(req);
+    }
+    let report = batch.run();
+
+    for e in &report.entries {
+        let plan = e.plan.as_ref().expect("the ladder always serves");
+        println!(
+            "  {:<8} → {:<5} {:>6.2}x  [{}]",
+            e.app,
+            e.destination.unwrap_or("-"),
+            plan.speedup(),
+            e.service,
+        );
+        if let Some(why) = &e.degradation {
+            println!("           {why}");
+        }
+    }
+
+    let t = &report.fault_telemetry;
+    println!(
+        "\n{}/{} solved, {} served, {} degraded",
+        report.solved(),
+        report.entries.len(),
+        report.served(),
+        report.degraded()
+    );
+    println!(
+        "faults: {} retries, {} exhausted budgets, {} panics caught; \
+         {:.1} virtual h spent on backoff and hung builds",
+        t.total_retries(),
+        t.total_exhausted(),
+        t.total_panics(),
+        clock.now_s() / 3600.0
+    );
+    println!(
+        "stage detail: measure {}r/{}t, verify {}r/{}t, deploy {}r/{}t \
+         (r = retries, t = timeouts)",
+        t.measure.retries,
+        t.measure.timeouts,
+        t.verify.retries,
+        t.verify.timeouts,
+        t.deploy.retries,
+        t.deploy.timeouts
+    );
+    Ok(())
+}

@@ -100,7 +100,10 @@ fn main() -> anyhow::Result<()> {
                 None => println!(
                     "             {:<5} failed: {}",
                     o.backend,
-                    o.error.as_deref().unwrap_or("?")
+                    o.error
+                        .as_ref()
+                        .map(|e| e.to_string())
+                        .unwrap_or_else(|| "?".into())
                 ),
             }
         }

@@ -1,0 +1,211 @@
+//! Resilience-layer cost and recovery: what does the retry seam cost a
+//! fault-free cycle, and how fast does a faulted cycle recover?
+//!
+//! Two figures, recorded as the `BENCH_resilience.json` series
+//! (target/bench-results/):
+//!
+//! * **Fault-free overhead** — wall-clock of a retry-wrapped mixed
+//!   batch over an unwrapped one, no faults injected (best-of-K, so
+//!   scheduler noise cancels). The wrapper adds a closure call and a
+//!   few atomic counters per measurement; the budget is < 2%.
+//! * **Time-to-recovery** — a seeded transient fault plan on every
+//!   destination: virtual backoff seconds and retry counts spent before
+//!   the cycle completes at full service with the fault-free plan.
+
+use std::time::Instant;
+
+use fpga_offload::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
+use fpga_offload::envadapt::{
+    Batch, OffloadRequest, Pipeline, ServiceLevel, TestDb,
+};
+use fpga_offload::gpu::TESLA_T4;
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::search::{
+    Backend, CpuBaseline, FaultPlan, FaultyBackend, FpgaBackend,
+    GpuBackend, OmpBackend, RetryPolicy, SearchConfig, SimClock,
+};
+use fpga_offload::util::bench::{save_results, Table};
+use fpga_offload::util::json::Json;
+use fpga_offload::workloads;
+
+const TIMING_ROUNDS: usize = 5;
+
+fn requests() -> Vec<OffloadRequest> {
+    let testdb = TestDb::builtin();
+    workloads::APPS
+        .iter()
+        .map(|app| {
+            let case = testdb.get(app).expect("registered");
+            let mut req = OffloadRequest::from_case(
+                case,
+                workloads::source(app).unwrap(),
+            );
+            req.pjrt_sample = None;
+            req
+        })
+        .collect()
+}
+
+fn run_mixed(pipelines: Vec<&Pipeline>) -> fpga_offload::envadapt::BatchReport {
+    let mut batch = Batch::mixed(pipelines);
+    for req in requests() {
+        batch.push(req);
+    }
+    batch.run()
+}
+
+/// Best-of-K wall clock of one mixed cycle over the given pipelines.
+fn best_wall_clock_s(pipelines: &[&Pipeline]) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..TIMING_ROUNDS {
+        let start = Instant::now();
+        let report = run_mixed(pipelines.to_vec());
+        let dt = start.elapsed().as_secs_f64();
+        assert_eq!(report.solved(), report.entries.len());
+        best = best.min(dt);
+    }
+    best
+}
+
+fn main() {
+    println!("== resilience: fault-free overhead + time-to-recovery ==\n");
+
+    let fpga = FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let gpu = GpuBackend {
+        cpu: &XEON_BRONZE_3104,
+        gpu: &TESLA_T4,
+        device: &ARRIA10_GX,
+    };
+    let omp = OmpBackend {
+        cpu: &XEON_BRONZE_3104,
+        omp: &XEON_GOLD_6130,
+        device: &ARRIA10_GX,
+    };
+    let cpu = CpuBaseline {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    };
+    let backends: [&dyn Backend; 4] = [&fpga, &gpu, &omp, &cpu];
+    let cfg = SearchConfig::default();
+
+    // --- Fault-free overhead -------------------------------------------
+    let plain: Vec<Pipeline> = backends
+        .iter()
+        .map(|&b| Pipeline::new(cfg.clone(), b).expect("pipeline"))
+        .collect();
+    let clock = SimClock::new();
+    let wrapped: Vec<Pipeline> = backends
+        .iter()
+        .map(|&b| {
+            Pipeline::new(cfg.clone(), b)
+                .expect("pipeline")
+                .with_retry(RetryPolicy::default())
+                .expect("valid policy")
+                .with_clock(clock.clone())
+        })
+        .collect();
+
+    // Identical results first (one run each), then timing.
+    let plain_report = run_mixed(plain.iter().collect());
+    let wrapped_report = run_mixed(wrapped.iter().collect());
+    assert_eq!(
+        plain_report.to_json().get(&["results"]),
+        wrapped_report.to_json().get(&["results"]),
+        "retry wrapping must not change fault-free results"
+    );
+    assert_eq!(wrapped_report.fault_telemetry.total_retries(), 0);
+
+    let plain_s = best_wall_clock_s(&plain.iter().collect::<Vec<_>>());
+    let wrapped_s = best_wall_clock_s(&wrapped.iter().collect::<Vec<_>>());
+    let overhead_pct = (wrapped_s / plain_s - 1.0) * 100.0;
+
+    let mut table =
+        Table::new(&["cycle", "wall clock (best of 5)", "overhead"]);
+    table.row(&[
+        "plain".into(),
+        format!("{:.3} s", plain_s),
+        "-".into(),
+    ]);
+    table.row(&[
+        "retry-wrapped".into(),
+        format!("{:.3} s", wrapped_s),
+        format!("{overhead_pct:+.2}%"),
+    ]);
+    table.print();
+
+    assert!(
+        overhead_pct < 2.0,
+        "fault-free retry overhead {overhead_pct:.2}% exceeds the 2% budget"
+    );
+
+    // --- Time-to-recovery under a seeded transient plan ----------------
+    let fault_clock = SimClock::new();
+    let faulty: Vec<FaultyBackend> = backends
+        .iter()
+        .map(|&b| {
+            FaultyBackend::new(
+                b,
+                FaultPlan::transient_only(2020),
+                fault_clock.clone(),
+            )
+        })
+        .collect();
+    let resilient: Vec<Pipeline> = faulty
+        .iter()
+        .map(|b| {
+            Pipeline::new(cfg.clone(), b)
+                .expect("pipeline")
+                .with_retry(RetryPolicy::default())
+                .expect("valid policy")
+                .with_clock(fault_clock.clone())
+        })
+        .collect();
+    let start = Instant::now();
+    let faulted_report = run_mixed(resilient.iter().collect());
+    let recovery_wall_s = start.elapsed().as_secs_f64();
+
+    assert_eq!(
+        faulted_report.solved(),
+        faulted_report.entries.len(),
+        "transient-only faults must all recover"
+    );
+    for e in &faulted_report.entries {
+        assert_eq!(e.service, ServiceLevel::Full, "{} degraded", e.app);
+    }
+    assert_eq!(
+        faulted_report.to_json().get(&["results"]),
+        plain_report.to_json().get(&["results"]),
+        "recovered cycle must match the fault-free plan"
+    );
+    let t = &faulted_report.fault_telemetry;
+    let retries = t.total_retries();
+    assert!(retries > 0, "the seeded plan injected nothing");
+    let virtual_backoff_s = fault_clock.now_s();
+    println!(
+        "\nrecovery: {} retries, {:.0} virtual seconds of backoff \
+         ({:.1} virtual h), identical plans, {:.3} s wall clock",
+        retries,
+        virtual_backoff_s,
+        virtual_backoff_s / 3600.0,
+        recovery_wall_s,
+    );
+
+    save_results(
+        "BENCH_resilience",
+        &Json::obj(vec![
+            ("plain_wall_s", Json::Num(plain_s)),
+            ("wrapped_wall_s", Json::Num(wrapped_s)),
+            ("fault_free_overhead_pct", Json::Num(overhead_pct)),
+            ("recovery_retries", Json::Num(retries as f64)),
+            ("recovery_virtual_backoff_s", Json::Num(virtual_backoff_s)),
+            ("recovery_wall_s", Json::Num(recovery_wall_s)),
+            ("fault_telemetry", t.to_json()),
+            ("apps", Json::Num(faulted_report.entries.len() as f64)),
+        ]),
+    );
+    println!("\nseries recorded: target/bench-results/BENCH_resilience.json");
+    println!("resilience shape: PASS");
+}

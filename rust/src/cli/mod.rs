@@ -8,6 +8,7 @@
 //!               [--entry FN] [--func-blocks]
 //! repro batch [apps...] [--out FILE] [--pattern-db DIR] [--reuse]
 //!             [--backend fpga|gpu|omp|cpu] [--mixed] [--func-blocks]
+//!             [--retries N] [--stage-deadline S] [--inject-faults SEED]
 //!             + the offload search flags
 //! repro analyze <app|file.c>       loop table + intensity ranking
 //! repro estimate <app|file.c> [--unroll B]   pre-compile reports (top-A)
@@ -33,8 +34,8 @@ use crate::hls::{render, ARRIA10_GX};
 use crate::minic::{parse, typecheck, EngineKind, Program};
 use crate::runtime::{Artifacts, Runtime};
 use crate::search::{
-    Backend, CpuBaseline, FpgaBackend, GaConfig, GpuBackend, OmpBackend,
-    SearchConfig,
+    Backend, CpuBaseline, FaultPlan, FaultyBackend, FpgaBackend, GaConfig,
+    GpuBackend, OmpBackend, RetryPolicy, SearchConfig, SimClock,
 };
 use crate::workloads;
 
@@ -120,6 +121,18 @@ fn print_usage() {
                                   every app in the cycle\n\
              --out FILE           batch-report JSON path\n\
                                   (default batch_report.json)\n\
+             --retries N          retry budget per measure/verify/deploy\n\
+                                  call (bounded exponential backoff on the\n\
+                                  simulated clock; default 3 once any\n\
+                                  resilience flag is given)\n\
+             --stage-deadline S   per-stage deadline budget in simulated\n\
+                                  seconds — a call that burns past it is\n\
+                                  a timeout fault\n\
+             --inject-faults SEED deterministic fault injection around\n\
+                                  every destination backend (transient\n\
+                                  bursts, hung builds, verify mismatches,\n\
+                                  panics — all drawn from SEED); implies\n\
+                                  the default retry policy\n\
              + the offload flags above (except --explain/--pjrt)\n\
            analyze <app|file.c>   loop table with intensity ranking\n\
            estimate <app|file.c>  pre-compile resource reports (top-A)\n\
@@ -252,6 +265,9 @@ const VALUE_FLAGS: &[&str] = &[
     "--seed",
     "--loop",
     "--out",
+    "--retries",
+    "--stage-deadline",
+    "--inject-faults",
 ];
 
 impl<'a> Flags<'a> {
@@ -460,11 +476,60 @@ fn cmd_offload(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// A pipeline with the batch's retry policy and shared simulated clock
+/// applied (when any resilience flag selected a policy).
+fn pipeline_with_resilience<'a>(
+    cfg: SearchConfig,
+    backend: &'a dyn Backend,
+    policy: &Option<RetryPolicy>,
+    clock: &SimClock,
+) -> anyhow::Result<Pipeline<'a>> {
+    let mut p = Pipeline::new(cfg, backend)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    if let Some(pol) = policy {
+        p = p
+            .with_retry(pol.clone())
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .with_clock(clock.clone());
+    }
+    Ok(p)
+}
+
 fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
     let f = Flags { args };
     let cfg = config_from_flags(&f)?;
     let mixed = f.has("--mixed");
     let seed = f.num("--seed", 42u64)?;
+
+    // Resilience knobs. Any of them implies a retry policy; the
+    // simulated clock is shared across every destination pipeline so
+    // backoff and injected hangs advance one coherent timeline.
+    let fault_seed: Option<u64> = match f.value("--inject-faults") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| {
+            anyhow::anyhow!("bad value for --inject-faults: {v:?}")
+        })?),
+    };
+    let stage_deadline: Option<f64> = match f.value("--stage-deadline") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| {
+            anyhow::anyhow!("bad value for --stage-deadline: {v:?}")
+        })?),
+    };
+    let policy: Option<RetryPolicy> = if f.value("--retries").is_some()
+        || stage_deadline.is_some()
+        || fault_seed.is_some()
+    {
+        Some(RetryPolicy {
+            max_attempts: f.num("--retries", 3u32)?,
+            stage_deadline_s: stage_deadline,
+            seed,
+            ..RetryPolicy::default()
+        })
+    } else {
+        None
+    };
+    let clock = SimClock::new();
 
     let specs: Vec<String> = {
         let given = f.positionals();
@@ -482,6 +547,7 @@ fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
     let omp = omp_backend();
     let cpu = cpu_backend();
     let choice;
+    let faulty: Vec<FaultyBackend>;
     let (pipelines, label): (Vec<Pipeline>, String) = if mixed {
         if f.value("--pattern-db").is_some() || f.has("--reuse") {
             anyhow::bail!(
@@ -498,20 +564,57 @@ fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
         // One pipeline per destination; registration order breaks ties
         // (prefer the paper's FPGA, then the GPU, then the many-core,
         // then the control).
-        let pipes = vec![
-            Pipeline::new(cfg.clone(), &fpga)
-                .map_err(|e| anyhow::anyhow!("{e}"))?,
-            Pipeline::new(cfg.clone(), &gpu)
-                .map_err(|e| anyhow::anyhow!("{e}"))?,
-            Pipeline::new(cfg.clone(), &omp)
-                .map_err(|e| anyhow::anyhow!("{e}"))?,
-            Pipeline::new(cfg, &cpu).map_err(|e| anyhow::anyhow!("{e}"))?,
-        ];
+        let inner: [&dyn Backend; 4] = [&fpga, &gpu, &omp, &cpu];
+        let pipes = if let Some(fseed) = fault_seed {
+            faulty = inner
+                .iter()
+                .map(|&b| {
+                    FaultyBackend::new(
+                        b,
+                        FaultPlan::from_seed(fseed),
+                        clock.clone(),
+                    )
+                })
+                .collect();
+            faulty
+                .iter()
+                .map(|b| {
+                    pipeline_with_resilience(
+                        cfg.clone(),
+                        b,
+                        &policy,
+                        &clock,
+                    )
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?
+        } else {
+            inner
+                .iter()
+                .map(|&b| {
+                    pipeline_with_resilience(
+                        cfg.clone(),
+                        b,
+                        &policy,
+                        &clock,
+                    )
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?
+        };
         (pipes, "mixed fpga+gpu+omp+cpu".to_string())
     } else {
         choice = BackendChoice::from_flags(&f)?;
-        let mut pipeline = Pipeline::new(cfg, choice.as_dyn())
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let backend: &dyn Backend = if let Some(fseed) = fault_seed {
+            faulty = vec![FaultyBackend::new(
+                choice.as_dyn(),
+                FaultPlan::from_seed(fseed),
+                clock.clone(),
+            )];
+            &faulty[0]
+        } else {
+            choice.as_dyn()
+        };
+        let mut pipeline =
+            pipeline_with_resilience(cfg, backend, &policy, &clock)?;
         if let Some(dir) = f.value("--pattern-db") {
             pipeline = pipeline
                 .with_pattern_db(dir)
@@ -579,6 +682,9 @@ fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
             (None, Some(err)) => println!("  {:<10} FAILED: {err}", e.app),
             (None, None) => println!("  {:<10} FAILED", e.app),
         }
+        if let Some(why) = &e.degradation {
+            println!("  {:<10}   [{}] {}", "", e.service, why);
+        }
     }
     if report.is_mixed() {
         let split: Vec<String> = report
@@ -589,13 +695,29 @@ fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
         println!("destination split: {}", split.join(" / "));
     }
     println!(
-        "cycle: {}/{} solved, {} cache hits — automation {:.1} h serial / {:.1} h concurrent",
+        "cycle: {}/{} solved ({} served, {} degraded), {} cache hits — \
+         automation {:.1} h serial / {:.1} h concurrent",
         report.solved(),
         report.entries.len(),
+        report.served(),
+        report.degraded(),
         report.cache_hits(),
         report.serial_automation_s / 3600.0,
         report.concurrent_automation_s / 3600.0
     );
+    let t = &report.fault_telemetry;
+    if policy.is_some() {
+        let timeouts =
+            t.measure.timeouts + t.verify.timeouts + t.deploy.timeouts;
+        println!(
+            "faults: {} retries, {} exhausted budgets, {} timeouts, \
+             {} panics (measure/verify/deploy)",
+            t.total_retries(),
+            t.total_exhausted(),
+            timeouts,
+            t.total_panics(),
+        );
+    }
 
     let out = f.value("--out").unwrap_or("batch_report.json");
     report.write_json(std::path::Path::new(out))?;

@@ -22,9 +22,24 @@
 //! running that app through [`Pipeline::solve`] alone on the same
 //! backend. A panicking or failing app degrades to an error entry (or a
 //! lost destination in mixed mode) — it never aborts the cycle.
+//!
+//! **Graceful degradation** (the resilience layer,
+//! [`crate::search::resilience`]): a destination that fails — or
+//! exhausts its retry budget under a [`RetryPolicy`] — drops out, and
+//! the app walks the ladder in [`ServiceLevel`] order: next-best
+//! verified destination, then a stale-but-valid cached plan from the
+//! pattern DB (flagged `served_stale`), then the all-CPU
+//! [`Plan::Baseline`]. An app never ends the cycle unserved. Failures
+//! are typed [`OffloadError`]s, and the report aggregates per-stage
+//! retry telemetry from every destination pipeline.
+//!
+//! [`RetryPolicy`]: crate::search::resilience::RetryPolicy
 
 use std::path::{Path, PathBuf};
 
+use crate::search::resilience::{
+    FaultClass, FaultReport, OffloadError, Stage,
+};
 use crate::util::json::Json;
 
 use super::pipeline::{OffloadRequest, Pipeline, Plan, Planned};
@@ -37,28 +52,79 @@ pub struct DestinationOutcome {
     /// The plan this destination produced, when it solved.
     pub plan: Option<Plan>,
     pub stored_at: Option<PathBuf>,
-    /// Stage-tagged error text (or panic message), when it failed.
-    pub error: Option<String>,
+    /// The stage-tagged, classed fault (or caught panic) when this
+    /// destination failed.
+    pub error: Option<OffloadError>,
+}
+
+/// How well an application was served by the cycle — the rungs of the
+/// degradation ladder, best first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceLevel {
+    /// A destination won with every destination healthy.
+    Full,
+    /// At least one destination dropped out (failed or exhausted its
+    /// retry budget); the app routed to its best surviving destination.
+    Rerouted,
+    /// Every destination failed; a stale-but-valid cached plan from the
+    /// pattern DB is served instead.
+    ServedStale,
+    /// Nothing worked and no cached plan exists; the app keeps running
+    /// all-CPU ([`Plan::Baseline`]).
+    Baseline,
+}
+
+impl ServiceLevel {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ServiceLevel::Full => "full",
+            ServiceLevel::Rerouted => "rerouted",
+            ServiceLevel::ServedStale => "served_stale",
+            ServiceLevel::Baseline => "baseline",
+        }
+    }
+}
+
+impl std::fmt::Display for ServiceLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
 }
 
 /// Outcome of one application in a batch.
 #[derive(Debug)]
 pub struct BatchEntry {
     pub app: String,
-    /// Winning destination backend, when any destination solved.
+    /// Winning destination backend, when any destination solved (also
+    /// set for a stale-served plan: the destination it was stored for).
     pub destination: Option<&'static str>,
-    /// The selected (winning) plan, when the app solved anywhere.
+    /// The plan the app is served with. Always present after the
+    /// degradation ladder — [`Plan::Baseline`] at worst.
     pub plan: Option<Plan>,
     pub stored_at: Option<PathBuf>,
     /// Combined error text, when every destination failed.
     pub error: Option<String>,
+    /// Which ladder rung served this app.
+    pub service: ServiceLevel,
+    /// Why the app was degraded below [`ServiceLevel::Full`], when it
+    /// was (dropped destinations and their fault classes).
+    pub degradation: Option<String>,
     /// Every measured destination, in backend registration order
     /// (exactly one for a single-backend batch).
     pub outcomes: Vec<DestinationOutcome>,
 }
 
 impl BatchEntry {
+    /// Whether the app solved on a real destination (fresh or cached
+    /// plan). The all-CPU baseline rung keeps the app *served* but does
+    /// not count as solved.
     pub fn ok(&self) -> bool {
+        self.plan.as_ref().is_some_and(|p| !p.is_baseline())
+    }
+
+    /// Whether the app left the cycle with *some* plan (the ladder
+    /// guarantees this for every entry).
+    pub fn served(&self) -> bool {
         self.plan.is_some()
     }
 
@@ -121,6 +187,21 @@ impl BatchEntry {
                 None => Json::Null,
             },
         ));
+        fields.push((
+            "service",
+            Json::Str(self.service.as_str().to_string()),
+        ));
+        fields.push((
+            "served_stale",
+            Json::Bool(self.service == ServiceLevel::ServedStale),
+        ));
+        fields.push((
+            "degradation",
+            match &self.degradation {
+                Some(d) => Json::Str(d.clone()),
+                None => Json::Null,
+            },
+        ));
         // Per-destination speedups (null where that destination failed).
         let mut backends = std::collections::BTreeMap::new();
         for o in &self.outcomes {
@@ -133,6 +214,23 @@ impl BatchEntry {
             );
         }
         fields.push(("backends", Json::Obj(backends)));
+        // Typed per-destination faults, in a separate object so the
+        // `backends` speedup map stays purely numeric for tooling.
+        let mut errors = std::collections::BTreeMap::new();
+        for o in &self.outcomes {
+            if let Some(e) = &o.error {
+                errors.insert(
+                    o.backend.to_string(),
+                    Json::obj(vec![
+                        ("stage", Json::Str(e.stage.as_str().to_string())),
+                        ("class", Json::Str(e.class.as_str().to_string())),
+                        ("attempts", Json::Num(e.attempts as f64)),
+                        ("message", Json::Str(e.message.clone())),
+                    ]),
+                );
+            }
+        }
+        fields.push(("errors", Json::Obj(errors)));
         Json::obj(fields)
     }
 }
@@ -156,6 +254,10 @@ pub struct BatchReport {
     /// concurrently (the batch's threads): the slowest measurement
     /// bounds the cycle, seconds.
     pub concurrent_automation_s: f64,
+    /// Aggregated per-stage retry/fault telemetry from every
+    /// destination pipeline (all zeros when no pipeline carries a
+    /// retry policy).
+    pub fault_telemetry: FaultReport,
 }
 
 impl BatchReport {
@@ -164,6 +266,7 @@ impl BatchReport {
         backends: Vec<&'static str>,
         budget_per_app: usize,
         entries: Vec<BatchEntry>,
+        fault_telemetry: FaultReport,
     ) -> Self {
         let times: Vec<f64> = entries
             .iter()
@@ -177,6 +280,7 @@ impl BatchReport {
             serial_automation_s: times.iter().sum(),
             concurrent_automation_s: times.iter().fold(0.0, |a, &b| a.max(b)),
             entries,
+            fault_telemetry,
         }
     }
 
@@ -190,6 +294,20 @@ impl BatchReport {
 
     pub fn failed(&self) -> usize {
         self.entries.len() - self.solved()
+    }
+
+    /// Apps that left the cycle with a plan of any kind — the ladder
+    /// makes this every app.
+    pub fn served(&self) -> usize {
+        self.entries.iter().filter(|e| e.served()).count()
+    }
+
+    /// Apps served below [`ServiceLevel::Full`].
+    pub fn degraded(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.service != ServiceLevel::Full)
+            .count()
     }
 
     pub fn cache_hits(&self) -> usize {
@@ -234,7 +352,10 @@ impl BatchReport {
             ("apps", Json::Num(self.entries.len() as f64)),
             ("solved", Json::Num(self.solved() as f64)),
             ("failed", Json::Num(self.failed() as f64)),
+            ("served", Json::Num(self.served() as f64)),
+            ("degraded", Json::Num(self.degraded() as f64)),
             ("cache_hits", Json::Num(self.cache_hits() as f64)),
+            ("fault_telemetry", self.fault_telemetry.to_json()),
             (
                 "budget_per_app",
                 Json::Num(self.budget_per_app as f64),
@@ -336,15 +457,16 @@ impl<'a> Batch<'a> {
     }
 
     /// Run every (request × destination) through stages 1–5,
-    /// concurrently, then pick each app's destination. In a sharable
-    /// mixed cycle, parse / profiling analysis / candidate extraction
-    /// run **once per app** and fan out to every destination (only
-    /// measurement and selection are per-backend); otherwise each
-    /// destination runs its own full funnel. One failing or *panicking*
-    /// app does not abort the cycle — its entry carries the error and
-    /// the remaining apps still solve.
+    /// concurrently, then serve each app through the degradation
+    /// ladder. In a sharable mixed cycle, parse / profiling analysis /
+    /// candidate extraction run **once per app** and fan out to every
+    /// destination (only measurement and selection are per-backend);
+    /// otherwise each destination runs its own full funnel. One failing
+    /// or *panicking* app does not abort the cycle — its entry carries
+    /// the typed fault, walks the ladder, and the remaining apps still
+    /// solve.
     pub fn run(&self) -> BatchReport {
-        let results: Vec<Vec<Result<Planned, String>>> =
+        let results: Vec<Vec<Result<Planned, OffloadError>>> =
             std::thread::scope(|scope| {
                 let handles: Vec<_> = self
                     .requests
@@ -358,13 +480,10 @@ impl<'a> Batch<'a> {
                         Err(payload) => {
                             // The shared prefix (parse / analysis)
                             // panicked: every destination loses this app.
-                            let msg = format!(
-                                "worker panicked: {}",
-                                panic_message(payload.as_ref())
-                            );
+                            let fault = panic_fault(payload.as_ref());
                             self.pipelines
                                 .iter()
-                                .map(|_| Err(msg.clone()))
+                                .map(|_| Err(fault.clone()))
                                 .collect()
                         }
                     })
@@ -397,7 +516,7 @@ impl<'a> Batch<'a> {
                         },
                     })
                     .collect();
-                select_destination(&req.app, outcomes)
+                self.serve_app(req, outcomes)
             })
             .collect();
 
@@ -412,7 +531,123 @@ impl<'a> Batch<'a> {
             .first()
             .map(|p| p.config().max_patterns)
             .unwrap_or(0);
-        BatchReport::new(label, backends, budget, entries)
+        let mut telemetry = FaultReport::default();
+        for p in &self.pipelines {
+            telemetry.merge(&p.fault_report());
+        }
+        BatchReport::new(label, backends, budget, entries, telemetry)
+    }
+
+    /// The degradation ladder for one application (see the module
+    /// docs): best verified surviving destination → stale-but-valid
+    /// cached plan → all-CPU baseline. Every rung produces an entry
+    /// with a plan; no invariant break can panic the batch.
+    fn serve_app(
+        &self,
+        req: &OffloadRequest,
+        outcomes: Vec<DestinationOutcome>,
+    ) -> BatchEntry {
+        // Rung 1: best surviving destination — verified plans beat
+        // unverified ones, then higher speedup wins; earlier
+        // registration breaks exact ties.
+        let mut best: Option<(usize, bool, f64)> = None;
+        for (i, o) in outcomes.iter().enumerate() {
+            let Some(plan) = &o.plan else { continue };
+            let verified = plan.verified_ok();
+            let speedup = plan.speedup();
+            let better = match best {
+                None => true,
+                Some((_, bv, bs)) => {
+                    (verified && !bv) || (verified == bv && speedup > bs)
+                }
+            };
+            if better {
+                best = Some((i, verified, speedup));
+            }
+        }
+        let dropped: Vec<String> = outcomes
+            .iter()
+            .filter_map(|o| {
+                o.error.as_ref().map(|e| {
+                    format!("{} ({} at {})", o.backend, e.class, e.stage)
+                })
+            })
+            .collect();
+        if let Some((i, ..)) = best {
+            let degradation = if dropped.is_empty() {
+                None
+            } else {
+                Some(format!(
+                    "destination(s) dropped out: {}",
+                    dropped.join(", ")
+                ))
+            };
+            let service = if dropped.is_empty() {
+                ServiceLevel::Full
+            } else {
+                ServiceLevel::Rerouted
+            };
+            return BatchEntry {
+                app: req.app.clone(),
+                destination: Some(outcomes[i].backend),
+                plan: outcomes[i].plan.clone(),
+                stored_at: outcomes[i].stored_at.clone(),
+                error: None,
+                service,
+                degradation,
+                outcomes,
+            };
+        }
+
+        // Every destination failed.
+        let combined = outcomes
+            .iter()
+            .map(|o| {
+                format!(
+                    "{}: {}",
+                    o.backend,
+                    o.error
+                        .as_ref()
+                        .map(|e| e.to_string())
+                        .unwrap_or_else(|| "no plan".to_string())
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("; ");
+
+        // Rung 2: a stale-but-valid cached plan, preferring
+        // registration order (the caller's destination preference).
+        for pipe in &self.pipelines {
+            if let Some(planned) = pipe.fallback_plan(req) {
+                return BatchEntry {
+                    app: req.app.clone(),
+                    destination: Some(pipe.backend().name()),
+                    plan: Some(planned.plan),
+                    stored_at: planned.stored_at,
+                    error: Some(combined.clone()),
+                    service: ServiceLevel::ServedStale,
+                    degradation: Some(format!(
+                        "all destinations failed; serving stored plan: \
+                         {combined}"
+                    )),
+                    outcomes,
+                };
+            }
+        }
+
+        // Rung 3: the all-CPU baseline — served, not solved.
+        BatchEntry {
+            app: req.app.clone(),
+            destination: None,
+            plan: Some(Plan::Baseline),
+            stored_at: None,
+            error: Some(combined.clone()),
+            service: ServiceLevel::Baseline,
+            degradation: Some(format!(
+                "all destinations failed; app stays all-CPU: {combined}"
+            )),
+            outcomes,
+        }
     }
 
     /// One application across every destination, funnel shared where
@@ -420,7 +655,7 @@ impl<'a> Batch<'a> {
     fn solve_app(
         &self,
         req: &OffloadRequest,
-    ) -> Vec<Result<Planned, String>> {
+    ) -> Vec<Result<Planned, OffloadError>> {
         if !self.sharable() {
             // Independent full solves, each isolated on its own thread
             // so a panicking backend only loses its own destination.
@@ -441,13 +676,17 @@ impl<'a> Batch<'a> {
         let first = self.pipelines[0];
         let parsed = match first.parse(req.clone()) {
             Ok(p) => p,
-            Err(e) => return self.every_destination_fails(e.to_string()),
+            Err(e) => {
+                return self.every_destination_fails(e.to_offload_error())
+            }
         };
         // Per-destination cache lookups against the shared parse.
-        let cached: Vec<Result<Option<Planned>, String>> = self
+        let cached: Vec<Result<Option<Planned>, OffloadError>> = self
             .pipelines
             .iter()
-            .map(|p| p.cached_plan(&parsed).map_err(|e| e.to_string()))
+            .map(|p| {
+                p.cached_plan(&parsed).map_err(|e| e.to_offload_error())
+            })
             .collect();
         let all_cached = cached
             .iter()
@@ -458,7 +697,8 @@ impl<'a> Batch<'a> {
             match first.analyze(parsed) {
                 Ok(a) => Some(a),
                 Err(e) => {
-                    return self.every_destination_fails(e.to_string())
+                    return self
+                        .every_destination_fails(e.to_offload_error())
                 }
             }
         };
@@ -474,7 +714,7 @@ impl<'a> Batch<'a> {
                     Ok(c) => Some(c),
                     Err(e) => {
                         return self
-                            .every_destination_fails(e.to_string())
+                            .every_destination_fails(e.to_offload_error())
                     }
                 }
             }
@@ -498,28 +738,35 @@ impl<'a> Batch<'a> {
                 .map(|(&pipe, cache_hit)| {
                     scope.spawn(move || match cache_hit {
                         Ok(Some(planned)) => Ok(planned),
-                        Err(e) => Err(PipelineErrorText(e)),
+                        Err(e) => Err(DestFault(e)),
                         Ok(None) => {
                             let r = match (shared_cands, shared_blocks) {
                                 (Some(c), _) => pipe
                                     .solve_from_candidates(c.clone()),
-                                (None, Some(blocks)) => {
-                                    let a = analyzed
-                                        .as_ref()
-                                        .expect("not all cached")
-                                        .clone();
-                                    pipe.solve_from_blocked(
-                                        pipe.price_blocks(a, blocks),
-                                    )
-                                }
-                                (None, None) => pipe.solve_from_analyzed(
-                                    analyzed
-                                        .as_ref()
-                                        .expect("not all cached")
-                                        .clone(),
-                                ),
+                                (None, Some(blocks)) => match analyzed {
+                                    Some(a) => pipe.solve_from_blocked(
+                                        pipe.price_blocks(
+                                            a.clone(),
+                                            blocks,
+                                        ),
+                                    ),
+                                    None => {
+                                        return Err(DestFault(
+                                            invariant_fault(),
+                                        ))
+                                    }
+                                },
+                                (None, None) => match analyzed {
+                                    Some(a) => pipe
+                                        .solve_from_analyzed(a.clone()),
+                                    None => {
+                                        return Err(DestFault(
+                                            invariant_fault(),
+                                        ))
+                                    }
+                                },
                             };
-                            r.map_err(|e| PipelineErrorText(e.to_string()))
+                            r.map_err(|e| DestFault(e.to_offload_error()))
                         }
                     })
                 })
@@ -528,11 +775,8 @@ impl<'a> Batch<'a> {
                 .into_iter()
                 .map(|h| match h.join() {
                     Ok(Ok(planned)) => Ok(planned),
-                    Ok(Err(PipelineErrorText(e))) => Err(e),
-                    Err(payload) => Err(format!(
-                        "worker panicked: {}",
-                        panic_message(payload.as_ref())
-                    )),
+                    Ok(Err(DestFault(e))) => Err(e),
+                    Err(payload) => Err(panic_fault(payload.as_ref())),
                 })
                 .collect()
         })
@@ -540,85 +784,50 @@ impl<'a> Batch<'a> {
 
     fn every_destination_fails(
         &self,
-        msg: String,
-    ) -> Vec<Result<Planned, String>> {
-        self.pipelines.iter().map(|_| Err(msg.clone())).collect()
+        fault: OffloadError,
+    ) -> Vec<Result<Planned, OffloadError>> {
+        self.pipelines
+            .iter()
+            .map(|_| Err(fault.clone()))
+            .collect()
     }
 }
 
-/// Error text carried across the per-destination worker boundary.
-struct PipelineErrorText(String);
+/// Typed fault carried across the per-destination worker boundary.
+struct DestFault(OffloadError);
 
 fn join_solve(
     h: std::thread::ScopedJoinHandle<
         '_,
         Result<Planned, super::pipeline::PipelineError>,
     >,
-) -> Result<Planned, String> {
+) -> Result<Planned, OffloadError> {
     match h.join() {
         Ok(Ok(planned)) => Ok(planned),
-        Ok(Err(e)) => Err(e.to_string()),
-        Err(payload) => Err(format!(
-            "worker panicked: {}",
-            panic_message(payload.as_ref())
-        )),
+        Ok(Err(e)) => Err(e.to_offload_error()),
+        Err(payload) => Err(panic_fault(payload.as_ref())),
     }
 }
 
-/// Pick the winning destination for one app: verified plans beat
-/// unverified ones, then higher speedup wins; earlier registration
-/// breaks exact ties.
-fn select_destination(
-    app: &str,
-    outcomes: Vec<DestinationOutcome>,
-) -> BatchEntry {
-    let mut winner: Option<usize> = None;
-    for (i, o) in outcomes.iter().enumerate() {
-        let Some(plan) = &o.plan else { continue };
-        let better = match winner {
-            None => true,
-            Some(w) => {
-                let best = outcomes[w].plan.as_ref().expect("winner solved");
-                (plan.verified_ok() && !best.verified_ok())
-                    || (plan.verified_ok() == best.verified_ok()
-                        && plan.speedup() > best.speedup())
-            }
-        };
-        if better {
-            winner = Some(i);
-        }
-    }
-    match winner {
-        Some(i) => BatchEntry {
-            app: app.to_string(),
-            destination: Some(outcomes[i].backend),
-            plan: outcomes[i].plan.clone(),
-            stored_at: outcomes[i].stored_at.clone(),
-            error: None,
-            outcomes,
-        },
-        None => {
-            let error = outcomes
-                .iter()
-                .map(|o| {
-                    format!(
-                        "{}: {}",
-                        o.backend,
-                        o.error.as_deref().unwrap_or("no plan")
-                    )
-                })
-                .collect::<Vec<_>>()
-                .join("; ");
-            BatchEntry {
-                app: app.to_string(),
-                destination: None,
-                plan: None,
-                stored_at: None,
-                error: Some(error),
-                outcomes,
-            }
-        }
-    }
+/// A caught worker panic as a typed, non-retryable fault.
+fn panic_fault(payload: &(dyn std::any::Any + Send)) -> OffloadError {
+    OffloadError::new(
+        Stage::Measure,
+        FaultClass::Panic,
+        format!("worker panicked: {}", panic_message(payload)),
+    )
+}
+
+/// The shared-funnel invariant ("analysis exists whenever any
+/// destination missed the cache") broke. Degrading beats panicking the
+/// whole cycle: the destination drops out and the ladder takes over.
+fn invariant_fault() -> OffloadError {
+    OffloadError::new(
+        Stage::Select,
+        FaultClass::Permanent,
+        "internal invariant broken: shared analysis missing for an \
+         uncached destination",
+    )
 }
 
 /// Best-effort text of a worker panic payload.

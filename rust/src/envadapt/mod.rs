@@ -40,7 +40,9 @@ pub mod patterndb;
 pub mod pipeline;
 pub mod testdb;
 
-pub use batch::{Batch, BatchEntry, BatchReport, DestinationOutcome};
+pub use batch::{
+    Batch, BatchEntry, BatchReport, DestinationOutcome, ServiceLevel,
+};
 pub use facilitydb::{Facility, FacilityDb, Role};
 pub use flow::{analyze_source, FlowOptions, FlowReport};
 #[allow(deprecated)]

@@ -196,8 +196,16 @@ impl PatternDb {
                 Json::Str(format!("{}", unix_now())),
             );
         }
-        std::fs::write(&path, j.pretty())
-            .with_context(|| format!("writing {path:?}"))?;
+        // Crash-safe: write the full record to a temp file in the same
+        // directory, then atomically rename it over the destination. A
+        // crash mid-write leaves only the `.tmp` file, which every read
+        // path ignores — never a parseable-but-partial record.
+        let tmp = self.dir.join(format!("{}.pattern.json.tmp", sol.app));
+        std::fs::write(&tmp, j.pretty())
+            .with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, &path).with_context(|| {
+            format!("renaming {tmp:?} over {path:?}")
+        })?;
         Ok(path)
     }
 
@@ -214,10 +222,25 @@ impl PatternDb {
         ))
     }
 
-    /// Load the stored record summary for an app, if present.
+    /// Load the stored record summary for an app, if present. A record
+    /// that exists but does not parse — a pre-atomic-write crash, disk
+    /// corruption, a stray hand edit — is *quarantined*: renamed to
+    /// `<app>.pattern.json.corrupt` (out of every read path, preserved
+    /// for inspection) and reported as absent rather than failing the
+    /// automation cycle.
     pub fn load_record(&self, app: &str) -> Result<Option<StoredPattern>> {
-        let Some(j) = self.load(app)? else {
+        let path = self.path_of(app);
+        if !path.exists() {
             return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let j = match Json::parse(&text) {
+            Ok(j) => j,
+            Err(_) => {
+                self.quarantine(&path);
+                return Ok(None);
+            }
         };
         let record = StoredPattern {
             app: j
@@ -280,12 +303,40 @@ impl PatternDb {
         Ok(Some(record))
     }
 
+    /// Move an unparseable record out of every read path. Best effort:
+    /// if even the rename fails, the file is removed so a poisoned
+    /// record cannot wedge the cycle forever.
+    fn quarantine(&self, path: &Path) {
+        let mut q = path.as_os_str().to_owned();
+        q.push(".corrupt");
+        if std::fs::rename(path, &q).is_err() {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+
     /// Apps with stored patterns.
     pub fn list(&self) -> Result<Vec<String>> {
         let mut out = Vec::new();
         for entry in std::fs::read_dir(&self.dir)? {
             let name = entry?.file_name().to_string_lossy().into_owned();
             if let Some(app) = name.strip_suffix(".pattern.json") {
+                out.push(app.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Apps whose records were quarantined as unparseable — the
+    /// `.pattern.json.corrupt` files a failed [`load_record`] leaves
+    /// behind, for operators to inspect or delete.
+    ///
+    /// [`load_record`]: Self::load_record
+    pub fn quarantined(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if let Some(app) = name.strip_suffix(".pattern.json.corrupt") {
                 out.push(app.to_string());
             }
         }
@@ -424,6 +475,55 @@ mod tests {
         assert!(!rec.matches(&key()));
         // Unstamped records count as infinitely old under any policy.
         assert_eq!(rec.age_secs(super::unix_now()), None);
+    }
+
+    #[test]
+    fn writes_leave_only_the_record_behind() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        db.store_hashed(&dummy_solution("demo"), &key()).unwrap();
+        let names: Vec<String> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .map(|e| {
+                e.unwrap().file_name().to_string_lossy().into_owned()
+            })
+            .collect();
+        // The temp file was renamed over the destination, not left over.
+        assert_eq!(names, vec!["demo.pattern.json".to_string()]);
+    }
+
+    #[test]
+    fn interrupted_write_is_invisible_to_readers() {
+        // A crash mid-write leaves only a partial `.tmp` file (the
+        // rename never happened). Every read path must ignore it and
+        // keep serving the last complete record.
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        db.store_hashed(&dummy_solution("demo"), &key()).unwrap();
+        let tmp = dir.path().join("demo.pattern.json.tmp");
+        std::fs::write(&tmp, "{\"app\": \"demo\", \"speedup\"").unwrap();
+        assert_eq!(db.list().unwrap(), vec!["demo".to_string()]);
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert_eq!(rec.speedup, 4.0);
+        assert!(db.quarantined().unwrap().is_empty());
+    }
+
+    #[test]
+    fn corrupt_record_is_quarantined_not_fatal() {
+        // A record that exists but does not parse (pre-atomic-write
+        // crash, corruption) is moved aside and reported absent — the
+        // cycle re-searches instead of dying.
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        db.store_hashed(&dummy_solution("demo"), &key()).unwrap();
+        std::fs::write(db.path_of("demo"), "{\"app\": \"demo\",").unwrap();
+        assert!(db.load_record("demo").unwrap().is_none());
+        assert_eq!(db.quarantined().unwrap(), vec!["demo".to_string()]);
+        assert!(db.list().unwrap().is_empty());
+        // A fresh store works again after the quarantine.
+        db.store_hashed(&dummy_solution("demo"), &key()).unwrap();
+        assert!(db.load_record("demo").unwrap().is_some());
+        assert_eq!(db.list().unwrap(), vec!["demo".to_string()]);
     }
 
     #[test]

@@ -52,6 +52,10 @@ use crate::minic::ast::LoopId;
 use crate::minic::{parse as parse_minic, typecheck, Program};
 use crate::runtime::{Artifacts, Runtime, SampleRun};
 use crate::search::backend::Backend;
+use crate::search::resilience::{
+    FaultClass, FaultReport, FaultStats, OffloadError, RetryPolicy,
+    RetryingBackend, SimClock, Stage,
+};
 use crate::search::{
     funnel, measure, Candidate, FunnelTrace, MeasuredSet, OffloadSolution,
     PatternMeasurement, SearchConfig, SearchError,
@@ -112,6 +116,50 @@ impl std::error::Error for PipelineError {}
 impl From<SearchError> for PipelineError {
     fn from(e: SearchError) -> Self {
         PipelineError::Search(e)
+    }
+}
+
+impl PipelineError {
+    /// Map this error onto the resilience taxonomy
+    /// ([`crate::search::resilience`]) so the batch orchestrator can
+    /// report every per-destination failure as a typed, stage-tagged
+    /// fault. Search faults pass through verbatim; the intrinsic
+    /// pipeline errors are permanent except DB I/O (a busy filesystem
+    /// is worth another look) and deploy errors that follow the
+    /// transient message convention.
+    pub fn to_offload_error(&self) -> OffloadError {
+        match self {
+            PipelineError::InvalidRequest(m)
+            | PipelineError::InvalidConfig(m)
+            | PipelineError::Parse(m) => OffloadError::new(
+                Stage::Parse,
+                FaultClass::Permanent,
+                m.clone(),
+            ),
+            PipelineError::Analysis(m) => OffloadError::new(
+                Stage::Analysis,
+                FaultClass::Permanent,
+                m.clone(),
+            ),
+            PipelineError::Search(SearchError::Fault(e)) => e.clone(),
+            PipelineError::Search(other) => {
+                let (stage, class) = other.classify();
+                OffloadError::new(stage, class, format!("{other}"))
+            }
+            PipelineError::Db(m) => OffloadError::new(
+                Stage::Db,
+                FaultClass::Transient,
+                m.clone(),
+            ),
+            PipelineError::Deploy(m) => {
+                let class = if m.contains("transient") {
+                    FaultClass::Transient
+                } else {
+                    FaultClass::Permanent
+                };
+                OffloadError::new(Stage::Deploy, class, m.clone())
+            }
+        }
     }
 }
 
@@ -301,6 +349,11 @@ pub struct Measured {
 pub enum Plan {
     Fresh(OffloadSolution),
     Cached(StoredPattern),
+    /// The degradation ladder's last rung: no destination could produce
+    /// a verified plan (or a stale cached one), so the application keeps
+    /// running all-CPU, unmodified. Speedup 1.0, trivially verified,
+    /// zero automation time — an app is never left unserved.
+    Baseline,
 }
 
 impl Plan {
@@ -308,11 +361,17 @@ impl Plan {
         matches!(self, Plan::Cached(_))
     }
 
+    /// Whether this is the degraded all-CPU fallback rather than a
+    /// searched or cached offload plan.
+    pub fn is_baseline(&self) -> bool {
+        matches!(self, Plan::Baseline)
+    }
+
     /// The full solution, when this plan came from a fresh search.
     pub fn solution(&self) -> Option<&OffloadSolution> {
         match self {
             Plan::Fresh(sol) => Some(sol),
-            Plan::Cached(_) => None,
+            Plan::Cached(_) | Plan::Baseline => None,
         }
     }
 
@@ -326,6 +385,7 @@ impl Plan {
                 .map(|l| l.0)
                 .collect(),
             Plan::Cached(rec) => rec.best_pattern.clone(),
+            Plan::Baseline => Vec::new(),
         }
     }
 
@@ -344,6 +404,7 @@ impl Plan {
                         .join("+")
                 }
             }
+            Plan::Baseline => "all-CPU".to_string(),
         }
     }
 
@@ -351,6 +412,7 @@ impl Plan {
         match self {
             Plan::Fresh(sol) => sol.speedup(),
             Plan::Cached(rec) => rec.speedup,
+            Plan::Baseline => 1.0,
         }
     }
 
@@ -366,6 +428,8 @@ impl Plan {
                 sol.best_measurement().verified != Some(false)
             }
             Plan::Cached(rec) => rec.verified != Some(false),
+            // Running the unmodified program is trivially correct.
+            Plan::Baseline => true,
         }
     }
 
@@ -374,7 +438,7 @@ impl Plan {
     pub fn automation_s(&self) -> f64 {
         match self {
             Plan::Fresh(sol) => sol.automation_s,
-            Plan::Cached(_) => 0.0,
+            Plan::Cached(_) | Plan::Baseline => 0.0,
         }
     }
 
@@ -384,6 +448,7 @@ impl Plan {
         match self {
             Plan::Fresh(sol) => sol.blocks.len(),
             Plan::Cached(rec) => rec.blocks as usize,
+            Plan::Baseline => 0,
         }
     }
 
@@ -392,7 +457,7 @@ impl Plan {
     pub fn block_replacements(&self) -> &[BlockReplacement] {
         match self {
             Plan::Fresh(sol) => &sol.blocks,
-            Plan::Cached(_) => &[],
+            Plan::Cached(_) | Plan::Baseline => &[],
         }
     }
 }
@@ -428,6 +493,9 @@ pub struct Pipeline<'a> {
     pattern_db: Option<PathBuf>,
     reuse_cached: bool,
     max_age: Option<Duration>,
+    retry: Option<RetryPolicy>,
+    clock: SimClock,
+    stats: FaultStats,
 }
 
 impl<'a> Pipeline<'a> {
@@ -443,6 +511,9 @@ impl<'a> Pipeline<'a> {
             pattern_db: None,
             reuse_cached: false,
             max_age: None,
+            retry: None,
+            clock: SimClock::new(),
+            stats: FaultStats::new(),
         })
     }
 
@@ -471,12 +542,64 @@ impl<'a> Pipeline<'a> {
         self
     }
 
+    /// Apply a validated [`RetryPolicy`] to the backend-facing stages
+    /// (measure / verify / deploy_check): transient faults are retried
+    /// with deterministic backoff on this pipeline's [`SimClock`],
+    /// permanent faults fail fast, and per-stage deadlines turn hung
+    /// builds into timeouts. Without a policy the pipeline behaves
+    /// exactly as before — every backend error is final and panics
+    /// propagate.
+    pub fn with_retry(
+        mut self,
+        policy: RetryPolicy,
+    ) -> Result<Self, PipelineError> {
+        policy.validate().map_err(PipelineError::InvalidConfig)?;
+        self.retry = Some(policy);
+        Ok(self)
+    }
+
+    /// Share a virtual clock (backoff waits, injected hangs, deadline
+    /// accounting) with other pipelines or a fault injector. Clones of
+    /// one `SimClock` share the same underlying time.
+    pub fn with_clock(mut self, clock: SimClock) -> Self {
+        self.clock = clock;
+        self
+    }
+
     pub fn config(&self) -> &SearchConfig {
         &self.config
     }
 
     pub fn backend(&self) -> &dyn Backend {
         self.backend
+    }
+
+    pub fn retry_policy(&self) -> Option<&RetryPolicy> {
+        self.retry.as_ref()
+    }
+
+    pub fn clock(&self) -> &SimClock {
+        &self.clock
+    }
+
+    /// Snapshot of the retry/fault telemetry accumulated by this
+    /// pipeline's wrapped stages (all zeros when no [`RetryPolicy`] is
+    /// configured).
+    pub fn fault_report(&self) -> FaultReport {
+        self.stats.snapshot()
+    }
+
+    /// A stack-local retry wrapper around this pipeline's backend,
+    /// when a [`RetryPolicy`] is configured. The wrapper shares the
+    /// pipeline's clock and telemetry, so repeated wrapping accumulates
+    /// into one [`FaultReport`].
+    fn retrying_backend(&self) -> Option<RetryingBackend<'_>> {
+        self.retry.as_ref().map(|policy| RetryingBackend {
+            inner: self.backend,
+            policy: policy.clone(),
+            clock: self.clock.clone(),
+            stats: self.stats.clone(),
+        })
     }
 
     /// Step 1 (front): parse + semantic check.
@@ -649,6 +772,17 @@ impl<'a> Pipeline<'a> {
     /// whose only winning region was swallowed by a block would be
     /// forced onto the least-bad *losing* loop pattern.
     pub fn measure(&self, c: Candidates) -> Result<Measured, PipelineError> {
+        match self.retrying_backend() {
+            Some(wrapped) => self.measure_with(c, &wrapped),
+            None => self.measure_with(c, self.backend),
+        }
+    }
+
+    fn measure_with(
+        &self,
+        c: Candidates,
+        backend: &dyn Backend,
+    ) -> Result<Measured, PipelineError> {
         let mut set = if c.cands.is_empty() {
             // Every candidate loop was claimed by a block (extract only
             // degrades to an empty set when blocks exist).
@@ -662,18 +796,17 @@ impl<'a> Pipeline<'a> {
                 &c.analysis,
                 &c.cands,
                 &self.config,
-                self.backend,
+                backend,
             )?
         };
         if !c.blocks.is_empty() {
             let empty: crate::search::patterns::Pattern = Vec::new();
-            let bm = self
-                .backend
+            let bm = backend
                 .measure(&c.prog, &c.analysis, &[], &empty, &self.config)
                 .map_err(PipelineError::Search)?;
             let verified = if self.config.verify_numerics {
                 Some(
-                    self.backend
+                    backend
                         .verify(
                             &c.prog,
                             &[],
@@ -778,11 +911,21 @@ impl<'a> Pipeline<'a> {
         env: Option<(&Runtime, &Artifacts)>,
     ) -> Result<Deployed, PipelineError> {
         let sample_run = match (&p.req.pjrt_sample, env) {
-            (Some(sample), Some((rt, art))) => Some(
-                self.backend
-                    .deploy_check(sample, (rt, art), p.req.seed)
-                    .map_err(|e| PipelineError::Deploy(format!("{e:#}")))?,
-            ),
+            (Some(sample), Some((rt, art))) => {
+                let run = match self.retrying_backend() {
+                    Some(wrapped) => {
+                        wrapped.deploy_check(sample, (rt, art), p.req.seed)
+                    }
+                    None => self.backend.deploy_check(
+                        sample,
+                        (rt, art),
+                        p.req.seed,
+                    ),
+                };
+                Some(run.map_err(|e| {
+                    PipelineError::Deploy(format!("{e:#}"))
+                })?)
+            }
             _ => None,
         };
         Ok(Deployed {
@@ -843,6 +986,34 @@ impl<'a> Pipeline<'a> {
             plan: Plan::Cached(rec),
             stored_at,
         }))
+    }
+
+    /// Degradation-ladder lookup (stale-but-valid rung): a stored plan
+    /// whose full reuse key matches this pipeline and request,
+    /// *ignoring* the `with_cache_reuse` switch and the age policy. The
+    /// batch orchestrator falls back to this only after every
+    /// destination has exhausted its retry budget — a stale verified
+    /// plan beats leaving the app unserved. Plans that failed
+    /// verification at store time are still never served, and DB I/O
+    /// errors degrade to "no fallback" rather than aborting the ladder.
+    pub fn fallback_plan(&self, req: &OffloadRequest) -> Option<Planned> {
+        let dir = self.pattern_db.as_ref()?;
+        let db = PatternDb::open(dir).ok()?;
+        let rec = db.load_record(&req.app).ok()??;
+        let key = self.reuse_key(
+            source_fingerprint(&req.source),
+            &req.entry,
+            req.func_blocks,
+        );
+        if !rec.matches(&key) || rec.verified == Some(false) {
+            return None;
+        }
+        let stored_at = Some(db.path_of(&req.app));
+        Some(Planned {
+            req: req.clone(),
+            plan: Plan::Cached(rec),
+            stored_at,
+        })
     }
 
     /// Stages 1–5 (parse → select), with the pattern-DB cache shortcut
@@ -1121,6 +1292,98 @@ int main() {
             .solve(request("mini").with_func_blocks(true))
             .unwrap();
         assert!(again.plan.is_cached());
+    }
+
+    #[test]
+    fn with_retry_rejects_bad_policy() {
+        let b = backend();
+        let bad = RetryPolicy {
+            max_attempts: 0,
+            ..RetryPolicy::default()
+        };
+        let err = Pipeline::new(SearchConfig::default(), &b)
+            .unwrap()
+            .with_retry(bad)
+            .unwrap_err();
+        assert!(matches!(err, PipelineError::InvalidConfig(_)), "{err}");
+    }
+
+    #[test]
+    fn retry_wrapped_solve_matches_plain_solve() {
+        // Fault-free regression guard: a retry policy must not change
+        // any plan — same loops, same speedup, zero telemetry.
+        let b = backend();
+        let plain = Pipeline::new(SearchConfig::default(), &b).unwrap();
+        let wrapped = Pipeline::new(SearchConfig::default(), &b)
+            .unwrap()
+            .with_retry(RetryPolicy::default())
+            .unwrap();
+        let p1 = plain.solve(request("mini")).unwrap();
+        let p2 = wrapped.solve(request("mini")).unwrap();
+        assert_eq!(p1.plan.best_loops(), p2.plan.best_loops());
+        assert!((p1.plan.speedup() - p2.plan.speedup()).abs() < 1e-12);
+        let report = wrapped.fault_report();
+        assert_eq!(report.total_retries(), 0, "{report:?}");
+        assert!(report.measure.calls > 0, "wrapper actually ran");
+    }
+
+    #[test]
+    fn fallback_plan_ignores_reuse_switch_and_age() {
+        let b = backend();
+        let dir = TempDir::new("fpga-offload-pipe-fallback").unwrap();
+        // Reuse disabled: cached_plan would refuse, fallback must not.
+        let pipe = Pipeline::new(SearchConfig::default(), &b)
+            .unwrap()
+            .with_pattern_db(dir.path())
+            .with_max_age(Duration::from_secs(3600));
+        let req = request("mini");
+        assert!(pipe.fallback_plan(&req).is_none(), "empty DB");
+        let first = pipe.solve(req.clone()).unwrap();
+        assert!(!first.plan.is_cached());
+
+        let fb = pipe.fallback_plan(&req).expect("stored plan serves");
+        assert!(fb.plan.is_cached());
+        assert_eq!(first.plan.best_loops(), fb.plan.best_loops());
+
+        // Age the record far past max_age: still served as fallback.
+        let path = first.stored_at.clone().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let crate::util::json::Json::Obj(mut map) =
+            crate::util::json::Json::parse(&text).unwrap()
+        else {
+            panic!("record is an object");
+        };
+        map.insert(
+            "stored_at".to_string(),
+            crate::util::json::Json::Str(format!(
+                "{}",
+                crate::envadapt::patterndb::unix_now() - 720_000
+            )),
+        );
+        std::fs::write(&path, crate::util::json::Json::Obj(map).pretty())
+            .unwrap();
+        assert!(pipe.fallback_plan(&req).is_some(), "stale still serves");
+
+        // A changed source must never be served a fallback.
+        let changed = OffloadRequest::builder("mini")
+            .source(SRC.replace("0.002", "0.004"))
+            .seed(1)
+            .build()
+            .unwrap();
+        assert!(pipe.fallback_plan(&changed).is_none());
+    }
+
+    #[test]
+    fn baseline_plan_shape() {
+        let plan = Plan::Baseline;
+        assert!(plan.is_baseline());
+        assert!(!plan.is_cached());
+        assert_eq!(plan.speedup(), 1.0);
+        assert_eq!(plan.label(), "all-CPU");
+        assert!(plan.verified_ok());
+        assert!(plan.best_loops().is_empty());
+        assert_eq!(plan.block_count(), 0);
+        assert_eq!(plan.automation_s(), 0.0);
     }
 
     #[test]

@@ -28,6 +28,7 @@ use super::backend::{Backend, FpgaBackend};
 use super::config::SearchConfig;
 use super::funnel::{self, Candidate, FunnelError};
 use super::patterns::{self, Pattern};
+use super::resilience::{FaultClass, OffloadError, Stage};
 use super::result::{FunnelTrace, OffloadSolution, PatternMeasurement};
 
 /// Search failure.
@@ -37,6 +38,27 @@ pub enum SearchError {
     Sim(fpga::SimError),
     Interp(crate::minic::MiniCError),
     NoMeasurements,
+    /// A typed resilience-layer fault (injected, retried-and-exhausted,
+    /// timed out, or panicked) — see [`super::resilience`].
+    Fault(OffloadError),
+}
+
+impl SearchError {
+    /// Map this error onto the resilience taxonomy: which stage it
+    /// belongs to and whether a retry could help. The intrinsic search
+    /// errors are all permanent — re-running the funnel or the
+    /// simulator on the same inputs reproduces them.
+    pub fn classify(&self) -> (Stage, FaultClass) {
+        match self {
+            SearchError::Funnel(_) => (Stage::Extract, FaultClass::Permanent),
+            SearchError::Sim(_) => (Stage::Measure, FaultClass::Permanent),
+            SearchError::Interp(_) => (Stage::Verify, FaultClass::Permanent),
+            SearchError::NoMeasurements => {
+                (Stage::Select, FaultClass::Permanent)
+            }
+            SearchError::Fault(e) => (e.stage, e.class),
+        }
+    }
 }
 
 impl std::fmt::Display for SearchError {
@@ -48,6 +70,7 @@ impl std::fmt::Display for SearchError {
             SearchError::NoMeasurements => {
                 write!(f, "no patterns could be measured")
             }
+            SearchError::Fault(e) => write!(f, "{e}"),
         }
     }
 }
@@ -57,6 +80,12 @@ impl std::error::Error for SearchError {}
 impl From<FunnelError> for SearchError {
     fn from(e: FunnelError) -> Self {
         SearchError::Funnel(e)
+    }
+}
+
+impl From<OffloadError> for SearchError {
+    fn from(e: OffloadError) -> Self {
+        SearchError::Fault(e)
     }
 }
 

@@ -9,6 +9,8 @@
 //!   [`OmpBackend`], [`CpuBaseline`]).
 //! * [`measure`] — the verification environment: worker-pool measurement,
 //!   two rounds, best-pattern selection, automation-time accounting.
+//! * [`resilience`] — typed faults, retry/deadline budgets, and the
+//!   seeded fault-injection harness around the backend seam.
 //! * [`ga`] — the previous work's GA strategy \[32\], as the comparison
 //!   baseline.
 //!
@@ -31,6 +33,7 @@ pub mod funnel;
 pub mod ga;
 pub mod measure;
 pub mod patterns;
+pub mod resilience;
 pub mod result;
 
 pub use backend::{
@@ -43,5 +46,9 @@ pub use ga::{GaConfig, GaResult};
 pub use measure::{
     measure_patterns, search, search_with_backend, select, MeasuredSet,
     SearchError,
+};
+pub use resilience::{
+    FaultClass, FaultPlan, FaultReport, FaultStats, FaultyBackend,
+    OffloadError, RetryPolicy, RetryingBackend, SimClock, Stage, StageReport,
 };
 pub use result::{FunnelTrace, OffloadSolution, PatternMeasurement};

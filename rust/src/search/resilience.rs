@@ -1,0 +1,1274 @@
+//! Resilience layer for the automation cycle: typed faults, retry
+//! budgets, and deterministic fault injection around the backend seam.
+//!
+//! The paper's cycle leans on long, flaky real-world steps — ~3-hour HLS
+//! builds, sample-test verification, deployment checks — yet a naive
+//! implementation treats every stage as infallible-or-fatal. This module
+//! supplies the three pieces the staged pipeline and the batch
+//! orchestrator need to survive a flaky verification environment:
+//!
+//! * [`OffloadError`] — a stage-tagged, classed fault
+//!   ([`FaultClass::Transient`] / [`Permanent`](FaultClass::Permanent) /
+//!   [`Timeout`](FaultClass::Timeout) / [`Panic`](FaultClass::Panic)) so
+//!   callers can tell "retry this" from "give up now".
+//! * [`RetryPolicy`] + [`RetryingBackend`] — bounded attempts with
+//!   deterministic exponential backoff (seeded jitter) and per-stage
+//!   deadline budgets, driven by a virtual [`SimClock`] so a "3-hour
+//!   hung build" costs microseconds in tests. Transient and timeout
+//!   faults are retried; permanent faults and panics fail fast.
+//! * [`FaultPlan`] + [`FaultyBackend`] — a deterministic, seeded fault
+//!   injector that wraps any inner [`Backend`] with transient error
+//!   bursts, hung builds, verify mismatches, one-shot panics, and
+//!   permanently dead sites. Fault decisions are keyed on the *call
+//!   site* (backend + stage + pattern/sample), not on call order, so
+//!   injection is reproducible regardless of worker-pool scheduling.
+//!
+//! Telemetry accumulates in [`FaultStats`] (shared, atomic) and is
+//! snapshotted into a [`FaultReport`] for `BatchReport` / CLI output.
+//!
+//! Classification note: [`Backend::deploy_check`] returns the vendored
+//! `anyhow::Result`, which carries no type information to downcast. The
+//! retry wrapper therefore classifies deploy errors by message
+//! convention — errors whose chain mentions `transient` are retried,
+//! everything else fails fast as permanent. [`FaultyBackend`] emits
+//! injected deploy faults under that convention.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::analysis::Analysis;
+use crate::funcblock::{BlockCost, Catalog, ConfirmedBlock};
+use crate::hls::Device;
+use crate::minic::Program;
+use crate::runtime::{Artifacts, Runtime, SampleRun};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+use super::backend::{Backend, BackendMeasurement};
+use super::config::SearchConfig;
+use super::funnel::Candidate;
+use super::measure::SearchError;
+use super::patterns::Pattern;
+
+/// How a fault should be treated by the retry machinery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Worth retrying: the next attempt may succeed (flaky build host,
+    /// transient toolchain error).
+    Transient,
+    /// Retrying cannot help (bad program, resource overflow, numeric
+    /// mismatch).
+    Permanent,
+    /// A stage deadline budget was exceeded (hung build).
+    Timeout,
+    /// The backend panicked; the attempt was abandoned.
+    Panic,
+}
+
+impl FaultClass {
+    /// Whether the retry loop should try again on this class.
+    pub fn retryable(self) -> bool {
+        matches!(self, FaultClass::Transient | FaultClass::Timeout)
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultClass::Transient => "transient",
+            FaultClass::Permanent => "permanent",
+            FaultClass::Timeout => "timeout",
+            FaultClass::Panic => "panic",
+        }
+    }
+}
+
+impl std::fmt::Display for FaultClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Which stage of the automation cycle a fault occurred in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Parse,
+    Analysis,
+    Extract,
+    Measure,
+    Verify,
+    Select,
+    Db,
+    Deploy,
+}
+
+impl Stage {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::Analysis => "analysis",
+            Stage::Extract => "extract",
+            Stage::Measure => "measure",
+            Stage::Verify => "verify",
+            Stage::Select => "select",
+            Stage::Db => "db",
+            Stage::Deploy => "deploy",
+        }
+    }
+}
+
+impl std::fmt::Display for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A typed automation-cycle fault: where it happened, how to treat it,
+/// and how many attempts were spent before giving up.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OffloadError {
+    pub stage: Stage,
+    pub class: FaultClass,
+    pub message: String,
+    /// Attempts made by the time the error was surfaced (1 = no retry).
+    pub attempts: u32,
+}
+
+impl OffloadError {
+    pub fn new(
+        stage: Stage,
+        class: FaultClass,
+        message: impl Into<String>,
+    ) -> Self {
+        OffloadError {
+            stage,
+            class,
+            message: message.into(),
+            attempts: 1,
+        }
+    }
+}
+
+impl std::fmt::Display for OffloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} fault at {} after {} attempt(s): {}",
+            self.class, self.stage, self.attempts, self.message
+        )
+    }
+}
+
+impl std::error::Error for OffloadError {}
+
+/// FNV-1a over string parts with a separator — the deterministic site
+/// key for fault injection and backoff jitter.
+fn fnv1a(parts: &[&str]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for part in parts {
+        for b in part.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^= 0xff;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// A shared virtual clock (microsecond ticks). Backoff waits and
+/// injected hangs advance it instead of sleeping, so retry/deadline
+/// semantics are exact and tests finish instantly. All clones share the
+/// same underlying time.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    micros: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time, seconds since clock creation.
+    pub fn now_s(&self) -> f64 {
+        self.micros.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+
+    /// Advance the clock by `s` virtual seconds.
+    pub fn advance_s(&self, s: f64) {
+        if s > 0.0 {
+            self.micros
+                .fetch_add((s * 1e6).round() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Retry and deadline budgets for the backend-facing stages
+/// (measure / verify / deploy_check).
+///
+/// Backoff is exponential with seeded jitter and fully deterministic:
+/// the jitter RNG is keyed on `(seed, stage, attempt)`, never on wall
+/// clock or thread identity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts per call, including the first (≥ 1).
+    pub max_attempts: u32,
+    /// First backoff wait, virtual seconds.
+    pub backoff_base_s: f64,
+    /// Multiplier per subsequent wait (≥ 1).
+    pub backoff_factor: f64,
+    /// Jitter as a fraction of the wait (0 = none, 0.25 = ±25%).
+    pub jitter_frac: f64,
+    /// Seed for the jitter RNG.
+    pub seed: u64,
+    /// Per-stage deadline budget, virtual seconds: once a single call's
+    /// attempts (including injected hangs and backoff waits) have
+    /// consumed this much clock, the call fails with
+    /// [`FaultClass::Timeout`]. `None` = no deadline.
+    pub stage_deadline_s: Option<f64>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            // The environment's builds are hours long; half a virtual
+            // minute between attempts is noise against that scale.
+            backoff_base_s: 30.0,
+            backoff_factor: 2.0,
+            jitter_frac: 0.25,
+            seed: 42,
+            stage_deadline_s: None,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Validate the knobs, mirroring [`SearchConfig::validate`].
+    pub fn validate(&self) -> Result<(), String> {
+        if self.max_attempts == 0 {
+            return Err("max_attempts must be >= 1".into());
+        }
+        if self.backoff_base_s < 0.0 || self.backoff_base_s.is_nan() {
+            return Err("backoff_base_s must be >= 0".into());
+        }
+        if self.backoff_factor < 1.0 || self.backoff_factor.is_nan() {
+            return Err("backoff_factor must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.jitter_frac) {
+            return Err("jitter_frac must be in [0, 1]".into());
+        }
+        if let Some(d) = self.stage_deadline_s {
+            if d <= 0.0 || d.is_nan() {
+                return Err("stage_deadline_s must be > 0".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Deterministic backoff wait before retry number `attempt`
+    /// (1-based: the wait after the first failed attempt is `attempt =
+    /// 1`).
+    pub fn backoff_s(&self, stage: Stage, attempt: u32) -> f64 {
+        let exp = attempt.saturating_sub(1).min(30);
+        let base = self.backoff_base_s * self.backoff_factor.powi(exp as i32);
+        let mut rng = Pcg32::new(
+            self.seed ^ fnv1a(&[stage.as_str()]),
+            attempt as u64,
+        );
+        let jitter = 1.0 + self.jitter_frac * (2.0 * rng.f64() - 1.0);
+        base * jitter
+    }
+}
+
+#[derive(Debug, Default)]
+struct StageCounters {
+    calls: AtomicU64,
+    retries: AtomicU64,
+    exhausted: AtomicU64,
+    timeouts: AtomicU64,
+    panics: AtomicU64,
+    backoff_micros: AtomicU64,
+}
+
+impl StageCounters {
+    fn snapshot(&self) -> StageReport {
+        StageReport {
+            calls: self.calls.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            exhausted: self.exhausted.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            backoff_s: self.backoff_micros.load(Ordering::Relaxed) as f64
+                * 1e-6,
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct StatsInner {
+    measure: StageCounters,
+    verify: StageCounters,
+    deploy: StageCounters,
+}
+
+/// Shared, thread-safe fault telemetry. Clones share the same counters,
+/// so one `FaultStats` can be handed to every wrapped backend in a
+/// batch and snapshotted once at the end.
+#[derive(Debug, Clone, Default)]
+pub struct FaultStats {
+    inner: Arc<StatsInner>,
+}
+
+impl FaultStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn counters(&self, stage: Stage) -> &StageCounters {
+        match stage {
+            Stage::Verify => &self.inner.verify,
+            Stage::Deploy => &self.inner.deploy,
+            _ => &self.inner.measure,
+        }
+    }
+
+    /// Snapshot the counters into a plain report.
+    pub fn snapshot(&self) -> FaultReport {
+        FaultReport {
+            measure: self.inner.measure.snapshot(),
+            verify: self.inner.verify.snapshot(),
+            deploy: self.inner.deploy.snapshot(),
+        }
+    }
+}
+
+/// Per-stage retry telemetry (a snapshot of [`FaultStats`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageReport {
+    /// Logical calls (each may span several attempts).
+    pub calls: u64,
+    /// Retries performed (attempts beyond the first).
+    pub retries: u64,
+    /// Calls that spent their whole retry budget and failed.
+    pub exhausted: u64,
+    /// Calls that hit the stage deadline.
+    pub timeouts: u64,
+    /// Calls whose backend panicked.
+    pub panics: u64,
+    /// Total virtual backoff time waited, seconds.
+    pub backoff_s: f64,
+}
+
+impl StageReport {
+    fn merge(&mut self, other: &StageReport) {
+        self.calls += other.calls;
+        self.retries += other.retries;
+        self.exhausted += other.exhausted;
+        self.timeouts += other.timeouts;
+        self.panics += other.panics;
+        self.backoff_s += other.backoff_s;
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("calls", Json::Num(self.calls as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("exhausted", Json::Num(self.exhausted as f64)),
+            ("timeouts", Json::Num(self.timeouts as f64)),
+            ("panics", Json::Num(self.panics as f64)),
+            ("backoff_s", Json::Num(self.backoff_s)),
+        ])
+    }
+}
+
+/// Fault telemetry across the retry-wrapped stages.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultReport {
+    pub measure: StageReport,
+    pub verify: StageReport,
+    pub deploy: StageReport,
+}
+
+impl FaultReport {
+    pub fn total_retries(&self) -> u64 {
+        self.measure.retries + self.verify.retries + self.deploy.retries
+    }
+
+    pub fn total_exhausted(&self) -> u64 {
+        self.measure.exhausted + self.verify.exhausted + self.deploy.exhausted
+    }
+
+    pub fn total_panics(&self) -> u64 {
+        self.measure.panics + self.verify.panics + self.deploy.panics
+    }
+
+    /// Fold another report into this one (batch-level aggregation).
+    pub fn merge(&mut self, other: &FaultReport) {
+        self.measure.merge(&other.measure);
+        self.verify.merge(&other.verify);
+        self.deploy.merge(&other.deploy);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("measure", self.measure.to_json()),
+            ("verify", self.verify.to_json()),
+            ("deploy", self.deploy.to_json()),
+            ("total_retries", Json::Num(self.total_retries() as f64)),
+            (
+                "total_exhausted",
+                Json::Num(self.total_exhausted() as f64),
+            ),
+            ("total_panics", Json::Num(self.total_panics() as f64)),
+        ])
+    }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// A [`Backend`] decorator that applies a [`RetryPolicy`] to the
+/// measure / verify / deploy_check stages: retryable faults are retried
+/// with deterministic backoff on the shared [`SimClock`], permanent
+/// faults fail fast, panics are caught and surfaced as
+/// [`FaultClass::Panic`], and per-stage deadline budgets turn hung
+/// calls into [`FaultClass::Timeout`].
+pub struct RetryingBackend<'a> {
+    pub inner: &'a dyn Backend,
+    pub policy: RetryPolicy,
+    pub clock: SimClock,
+    pub stats: FaultStats,
+}
+
+impl<'a> RetryingBackend<'a> {
+    pub fn new(inner: &'a dyn Backend, policy: RetryPolicy) -> Self {
+        RetryingBackend {
+            inner,
+            policy,
+            clock: SimClock::new(),
+            stats: FaultStats::new(),
+        }
+    }
+
+    /// Retry loop for the `SearchError`-returning stages.
+    fn run_stage<T>(
+        &self,
+        stage: Stage,
+        mut call: impl FnMut() -> Result<T, SearchError>,
+    ) -> Result<T, SearchError> {
+        let counters = self.stats.counters(stage);
+        counters.calls.fetch_add(1, Ordering::Relaxed);
+        let start = self.clock.now_s();
+        let mut attempt: u32 = 1;
+        loop {
+            let outcome = catch_unwind(AssertUnwindSafe(&mut call));
+            let err = match outcome {
+                Err(payload) => {
+                    counters.panics.fetch_add(1, Ordering::Relaxed);
+                    let mut e = OffloadError::new(
+                        stage,
+                        FaultClass::Panic,
+                        format!(
+                            "backend panicked: {}",
+                            panic_text(payload.as_ref())
+                        ),
+                    );
+                    e.attempts = attempt;
+                    return Err(SearchError::Fault(e));
+                }
+                Ok(Ok(v)) => return Ok(v),
+                Ok(Err(e)) => e,
+            };
+
+            let (err_stage, class) = err.classify();
+            if !class.retryable() {
+                // Permanent faults (and anything the taxonomy cannot
+                // call transient) fail fast, preserving the original
+                // error so callers like `measure_patterns` keep their
+                // skip semantics.
+                return Err(err);
+            }
+            if let Some(deadline) = self.policy.stage_deadline_s {
+                let elapsed = self.clock.now_s() - start;
+                if elapsed >= deadline {
+                    counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                    let mut e = OffloadError::new(
+                        err_stage,
+                        FaultClass::Timeout,
+                        format!(
+                            "stage deadline {deadline:.0}s exceeded \
+                             ({elapsed:.0}s elapsed): {err}"
+                        ),
+                    );
+                    e.attempts = attempt;
+                    return Err(SearchError::Fault(e));
+                }
+            }
+            if attempt >= self.policy.max_attempts {
+                counters.exhausted.fetch_add(1, Ordering::Relaxed);
+                let mut e = OffloadError::new(
+                    err_stage,
+                    class,
+                    format!("retry budget exhausted: {err}"),
+                );
+                e.attempts = attempt;
+                return Err(SearchError::Fault(e));
+            }
+            let wait = self.policy.backoff_s(err_stage, attempt);
+            self.clock.advance_s(wait);
+            counters
+                .backoff_micros
+                .fetch_add((wait * 1e6).round() as u64, Ordering::Relaxed);
+            counters.retries.fetch_add(1, Ordering::Relaxed);
+            attempt += 1;
+        }
+    }
+}
+
+impl Backend for RetryingBackend<'_> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn device(&self) -> &Device {
+        self.inner.device()
+    }
+
+    fn destination(&self) -> &'static str {
+        self.inner.destination()
+    }
+
+    fn measure(
+        &self,
+        prog: &Program,
+        analysis: &Analysis,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        cfg: &SearchConfig,
+    ) -> Result<BackendMeasurement, SearchError> {
+        self.run_stage(Stage::Measure, || {
+            self.inner.measure(prog, analysis, cands, pattern, cfg)
+        })
+    }
+
+    fn verify(
+        &self,
+        prog: &Program,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        entry: &str,
+        cfg: &SearchConfig,
+    ) -> Result<bool, SearchError> {
+        self.run_stage(Stage::Verify, || {
+            self.inner.verify(prog, cands, pattern, entry, cfg)
+        })
+    }
+
+    fn deploy_check(
+        &self,
+        sample: &str,
+        env: (&Runtime, &Artifacts),
+        seed: u64,
+    ) -> anyhow::Result<SampleRun> {
+        let counters = self.stats.counters(Stage::Deploy);
+        counters.calls.fetch_add(1, Ordering::Relaxed);
+        let start = self.clock.now_s();
+        let mut attempt: u32 = 1;
+        loop {
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                self.inner.deploy_check(sample, env, seed)
+            }));
+            let err = match outcome {
+                Err(payload) => {
+                    counters.panics.fetch_add(1, Ordering::Relaxed);
+                    return Err(anyhow::Error::msg(format!(
+                        "panic fault at deploy after {attempt} \
+                         attempt(s): backend panicked: {}",
+                        panic_text(payload.as_ref())
+                    )));
+                }
+                Ok(Ok(run)) => return Ok(run),
+                Ok(Err(e)) => e,
+            };
+
+            // No downcast through the vendored anyhow: classify by the
+            // documented message convention (see module docs).
+            let chain = format!("{err:#}");
+            if !chain.contains("transient") {
+                return Err(err);
+            }
+            if let Some(deadline) = self.policy.stage_deadline_s {
+                let elapsed = self.clock.now_s() - start;
+                if elapsed >= deadline {
+                    counters.timeouts.fetch_add(1, Ordering::Relaxed);
+                    return Err(anyhow::Error::msg(format!(
+                        "timeout fault at deploy after {attempt} \
+                         attempt(s): stage deadline {deadline:.0}s \
+                         exceeded: {chain}"
+                    )));
+                }
+            }
+            if attempt >= self.policy.max_attempts {
+                counters.exhausted.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow::Error::msg(format!(
+                    "transient fault at deploy after {attempt} \
+                     attempt(s): retry budget exhausted: {chain}"
+                )));
+            }
+            let wait = self.policy.backoff_s(Stage::Deploy, attempt);
+            self.clock.advance_s(wait);
+            counters
+                .backoff_micros
+                .fetch_add((wait * 1e6).round() as u64, Ordering::Relaxed);
+            counters.retries.fetch_add(1, Ordering::Relaxed);
+            attempt += 1;
+        }
+    }
+
+    fn price_block(
+        &self,
+        block: &ConfirmedBlock,
+        catalog: &Catalog,
+    ) -> Option<BlockCost> {
+        self.inner.price_block(block, catalog)
+    }
+}
+
+/// Which faults a [`FaultyBackend`] injects and how often. All rates are
+/// per-*site* probabilities (a site = backend + stage + pattern/sample),
+/// drawn once per site from a PCG stream keyed on `(seed, site)` — the
+/// same seed always produces the same fault plan, independent of call
+/// order or thread scheduling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability a site gets a burst of transient failures.
+    pub transient_rate: f64,
+    /// Maximum consecutive transient failures in a burst (burst size is
+    /// uniform in `1..=max_burst`).
+    pub max_burst: u32,
+    /// Probability a site's first call hangs (advances the virtual
+    /// clock by `hang_s`) before failing with a timeout-class fault.
+    pub hang_rate: f64,
+    /// Virtual seconds consumed by one injected hang.
+    pub hang_s: f64,
+    /// Probability a verify site's first successful call reports a
+    /// numeric mismatch (`Ok(false)`).
+    pub verify_flip_rate: f64,
+    /// Probability a site's first call panics.
+    pub panic_rate: f64,
+    /// Probability a site fails permanently on every call.
+    pub permanent_rate: f64,
+}
+
+impl FaultPlan {
+    /// No injection at all (the wrapper becomes a transparent proxy).
+    pub fn none() -> Self {
+        FaultPlan {
+            seed: 0,
+            transient_rate: 0.0,
+            max_burst: 0,
+            hang_rate: 0.0,
+            hang_s: 0.0,
+            verify_flip_rate: 0.0,
+            panic_rate: 0.0,
+            permanent_rate: 0.0,
+        }
+    }
+
+    /// Only recoverable faults: transient bursts short enough that the
+    /// default [`RetryPolicy`] always recovers.
+    pub fn transient_only(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            transient_rate: 0.5,
+            max_burst: 2,
+            ..FaultPlan::none()
+        }
+    }
+
+    /// The full chaos menu at moderate rates — the CLI's
+    /// `--inject-faults <seed>` plan.
+    pub fn from_seed(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            transient_rate: 0.3,
+            max_burst: 2,
+            hang_rate: 0.05,
+            hang_s: 3.0 * 3600.0,
+            verify_flip_rate: 0.05,
+            panic_rate: 0.02,
+            permanent_rate: 0.05,
+        }
+    }
+}
+
+/// What the plan injects for one call, in site-queue order.
+enum Injected {
+    Panic,
+    Hang,
+    Transient,
+    Permanent,
+    VerifyFlip,
+    None,
+}
+
+/// A deterministic fault injector around any inner [`Backend`] — the
+/// test/bench harness for the resilience layer. See [`FaultPlan`] for
+/// the fault menu and the determinism contract.
+pub struct FaultyBackend<'a> {
+    pub inner: &'a dyn Backend,
+    pub plan: FaultPlan,
+    pub clock: SimClock,
+    /// Per-site call counters (site key → calls made so far).
+    sites: Mutex<HashMap<u64, u32>>,
+}
+
+impl<'a> FaultyBackend<'a> {
+    pub fn new(inner: &'a dyn Backend, plan: FaultPlan, clock: SimClock) -> Self {
+        FaultyBackend {
+            inner,
+            plan,
+            clock,
+            sites: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Decide what (if anything) to inject for this call. The site
+    /// profile (permanent? panic? hang? burst size? flip?) is a pure
+    /// function of `(plan.seed, site)`; the per-site call counter turns
+    /// the profile into a failure queue: panic first, then the hang,
+    /// then the transient burst, then success.
+    fn injected(&self, stage: Stage, detail: &str) -> Injected {
+        let key = fnv1a(&[self.inner.name(), stage.as_str(), detail]);
+        let mut rng = Pcg32::new(self.plan.seed, key);
+        let permanent = rng.chance(self.plan.permanent_rate);
+        let panic_once = rng.chance(self.plan.panic_rate);
+        let hang = rng.chance(self.plan.hang_rate);
+        let burst = if rng.chance(self.plan.transient_rate) {
+            1 + rng.below(self.plan.max_burst.max(1))
+        } else {
+            0
+        };
+        let flip = rng.chance(self.plan.verify_flip_rate);
+
+        let call = {
+            let mut sites = self.sites.lock().unwrap();
+            let n = sites.entry(key).or_insert(0);
+            let call = *n;
+            *n += 1;
+            call
+        };
+
+        if permanent {
+            return Injected::Permanent;
+        }
+        let mut queue: Vec<Injected> = Vec::new();
+        if panic_once {
+            queue.push(Injected::Panic);
+        }
+        if hang {
+            queue.push(Injected::Hang);
+        }
+        for _ in 0..burst {
+            queue.push(Injected::Transient);
+        }
+        if (call as usize) < queue.len() {
+            return queue.swap_remove(call as usize);
+        }
+        if flip && stage == Stage::Verify && call as usize == queue.len() {
+            return Injected::VerifyFlip;
+        }
+        Injected::None
+    }
+
+    fn fault(&self, stage: Stage, detail: &str) -> Option<SearchError> {
+        match self.injected(stage, detail) {
+            Injected::None | Injected::VerifyFlip => None,
+            Injected::Panic => {
+                panic!("injected backend panic at {stage} ({detail})")
+            }
+            Injected::Hang => {
+                self.clock.advance_s(self.plan.hang_s);
+                Some(SearchError::Fault(OffloadError::new(
+                    stage,
+                    FaultClass::Timeout,
+                    format!(
+                        "injected hung build ({:.0}s) at {stage} ({detail})",
+                        self.plan.hang_s
+                    ),
+                )))
+            }
+            Injected::Transient => {
+                Some(SearchError::Fault(OffloadError::new(
+                    stage,
+                    FaultClass::Transient,
+                    format!("injected transient fault at {stage} ({detail})"),
+                )))
+            }
+            Injected::Permanent => {
+                Some(SearchError::Fault(OffloadError::new(
+                    stage,
+                    FaultClass::Permanent,
+                    format!("injected permanent fault at {stage} ({detail})"),
+                )))
+            }
+        }
+    }
+}
+
+impl Backend for FaultyBackend<'_> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn device(&self) -> &Device {
+        self.inner.device()
+    }
+
+    fn destination(&self) -> &'static str {
+        self.inner.destination()
+    }
+
+    fn measure(
+        &self,
+        prog: &Program,
+        analysis: &Analysis,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        cfg: &SearchConfig,
+    ) -> Result<BackendMeasurement, SearchError> {
+        let detail = format!("{}:{:?}", analysis.entry, pattern);
+        if let Some(e) = self.fault(Stage::Measure, &detail) {
+            return Err(e);
+        }
+        self.inner.measure(prog, analysis, cands, pattern, cfg)
+    }
+
+    fn verify(
+        &self,
+        prog: &Program,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        entry: &str,
+        cfg: &SearchConfig,
+    ) -> Result<bool, SearchError> {
+        let detail = format!("{entry}:{pattern:?}");
+        match self.injected(Stage::Verify, &detail) {
+            Injected::None => {}
+            Injected::VerifyFlip => return Ok(false),
+            Injected::Panic => {
+                panic!("injected backend panic at verify ({detail})")
+            }
+            Injected::Hang => {
+                self.clock.advance_s(self.plan.hang_s);
+                return Err(SearchError::Fault(OffloadError::new(
+                    Stage::Verify,
+                    FaultClass::Timeout,
+                    format!(
+                        "injected hung build ({:.0}s) at verify ({detail})",
+                        self.plan.hang_s
+                    ),
+                )));
+            }
+            Injected::Transient => {
+                return Err(SearchError::Fault(OffloadError::new(
+                    Stage::Verify,
+                    FaultClass::Transient,
+                    format!("injected transient fault at verify ({detail})"),
+                )));
+            }
+            Injected::Permanent => {
+                return Err(SearchError::Fault(OffloadError::new(
+                    Stage::Verify,
+                    FaultClass::Permanent,
+                    format!("injected permanent fault at verify ({detail})"),
+                )));
+            }
+        }
+        self.inner.verify(prog, cands, pattern, entry, cfg)
+    }
+
+    fn deploy_check(
+        &self,
+        sample: &str,
+        env: (&Runtime, &Artifacts),
+        seed: u64,
+    ) -> anyhow::Result<SampleRun> {
+        match self.injected(Stage::Deploy, sample) {
+            Injected::None | Injected::VerifyFlip => {}
+            Injected::Panic => {
+                panic!("injected backend panic at deploy ({sample})")
+            }
+            Injected::Hang => {
+                self.clock.advance_s(self.plan.hang_s);
+                // "transient" keeps the retry wrapper's message-
+                // convention classifier treating hangs as retryable.
+                anyhow::bail!(
+                    "transient injected hung deploy ({:.0}s) for {sample}",
+                    self.plan.hang_s
+                );
+            }
+            Injected::Transient => {
+                anyhow::bail!(
+                    "transient injected deploy fault for {sample}"
+                );
+            }
+            Injected::Permanent => {
+                anyhow::bail!(
+                    "injected permanent deploy fault for {sample}"
+                );
+            }
+        }
+        self.inner.deploy_check(sample, env, seed)
+    }
+
+    fn price_block(
+        &self,
+        block: &ConfirmedBlock,
+        catalog: &Catalog,
+    ) -> Option<BlockCost> {
+        self.inner.price_block(block, catalog)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::analyze;
+    use crate::cpu::XEON_BRONZE_3104;
+    use crate::hls::ARRIA10_GX;
+    use crate::minic::parse;
+    use crate::search::backend::FpgaBackend;
+    use crate::search::measure::search_with_backend;
+
+    const SRC: &str = "
+#define N 2048
+#define REP 16
+float sig[N]; float out1[N]; float out2[N];
+int main() {
+    for (int i = 0; i < N; i++) { sig[i] = i * 0.001 - 1.0; }
+    for (int r = 0; r < REP; r++) {
+        for (int i = 0; i < N; i++) {
+            out1[i] = sin(sig[i]) * cos(sig[i]) + sqrt(sig[i] * sig[i] + 1.0);
+        }
+    }
+    for (int i = 0; i < N; i++) { out2[i] = sqrt(out1[i] + 2.0); }
+    return 0;
+}";
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        let p = RetryPolicy::default();
+        let a = p.backoff_s(Stage::Measure, 1);
+        let b = p.backoff_s(Stage::Measure, 1);
+        assert_eq!(a, b);
+        // Jitter stays within ±jitter_frac of the nominal wait.
+        for attempt in 1..=4u32 {
+            let nominal = p.backoff_base_s
+                * p.backoff_factor.powi(attempt as i32 - 1);
+            let w = p.backoff_s(Stage::Measure, attempt);
+            assert!(
+                w >= nominal * (1.0 - p.jitter_frac)
+                    && w <= nominal * (1.0 + p.jitter_frac),
+                "attempt {attempt}: {w} vs nominal {nominal}"
+            );
+        }
+        // Different stages jitter differently but share the envelope.
+        assert_ne!(
+            p.backoff_s(Stage::Measure, 1),
+            p.backoff_s(Stage::Verify, 1)
+        );
+    }
+
+    #[test]
+    fn policy_validation_rejects_bad_knobs() {
+        assert!(RetryPolicy::default().validate().is_ok());
+        let bad = RetryPolicy {
+            max_attempts: 0,
+            ..RetryPolicy::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = RetryPolicy {
+            backoff_factor: 0.5,
+            ..RetryPolicy::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = RetryPolicy {
+            stage_deadline_s: Some(0.0),
+            ..RetryPolicy::default()
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn sim_clock_is_shared_across_clones() {
+        let clock = SimClock::new();
+        let other = clock.clone();
+        clock.advance_s(12.5);
+        assert!((other.now_s() - 12.5).abs() < 1e-9);
+    }
+
+    fn fault_free_solution() -> crate::search::OffloadSolution {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let backend = FpgaBackend {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        search_with_backend(
+            "t",
+            &prog,
+            &an,
+            &SearchConfig::default(),
+            &backend,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn transient_faults_retry_to_the_fault_free_solution() {
+        let clean = fault_free_solution();
+
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let backend = FpgaBackend {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        // Every site faults once or twice, then recovers — the default
+        // 3-attempt budget always wins.
+        let plan = FaultPlan {
+            transient_rate: 1.0,
+            ..FaultPlan::transient_only(7)
+        };
+        let clock = SimClock::new();
+        let faulty = FaultyBackend::new(&backend, plan, clock.clone());
+        let retrying = RetryingBackend {
+            inner: &faulty,
+            policy: RetryPolicy::default(),
+            clock: clock.clone(),
+            stats: FaultStats::new(),
+        };
+        let sol = search_with_backend(
+            "t",
+            &prog,
+            &an,
+            &SearchConfig::default(),
+            &retrying,
+        )
+        .unwrap();
+
+        assert_eq!(
+            clean.best_measurement().loops,
+            sol.best_measurement().loops
+        );
+        assert!((clean.speedup() - sol.speedup()).abs() < 1e-12);
+        let report = retrying.stats.snapshot();
+        assert!(report.total_retries() > 0, "{report:?}");
+        assert_eq!(report.total_exhausted(), 0, "{report:?}");
+        // Backoff waits landed on the virtual clock, not wall clock.
+        assert!(clock.now_s() > 0.0);
+        assert!(report.measure.backoff_s > 0.0);
+    }
+
+    #[test]
+    fn permanent_faults_fail_fast() {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let backend = FpgaBackend {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        let plan = FaultPlan {
+            seed: 3,
+            permanent_rate: 1.0,
+            ..FaultPlan::none()
+        };
+        let clock = SimClock::new();
+        let faulty = FaultyBackend::new(&backend, plan, clock.clone());
+        let retrying = RetryingBackend {
+            inner: &faulty,
+            policy: RetryPolicy::default(),
+            clock,
+            stats: FaultStats::new(),
+        };
+        let err = search_with_backend(
+            "t",
+            &prog,
+            &an,
+            &SearchConfig::default(),
+            &retrying,
+        )
+        .unwrap_err();
+        match err {
+            SearchError::Fault(e) => {
+                assert_eq!(e.class, FaultClass::Permanent);
+                assert_eq!(e.attempts, 1, "no retries on permanent faults");
+            }
+            other => panic!("expected a fault, got {other}"),
+        }
+        assert_eq!(retrying.stats.snapshot().total_retries(), 0);
+    }
+
+    #[test]
+    fn hung_builds_hit_the_stage_deadline() {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let backend = FpgaBackend {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        let plan = FaultPlan {
+            seed: 11,
+            hang_rate: 1.0,
+            hang_s: 3.0 * 3600.0,
+            ..FaultPlan::none()
+        };
+        let clock = SimClock::new();
+        let faulty = FaultyBackend::new(&backend, plan, clock.clone());
+        let retrying = RetryingBackend {
+            inner: &faulty,
+            policy: RetryPolicy {
+                stage_deadline_s: Some(3600.0),
+                ..RetryPolicy::default()
+            },
+            clock,
+            stats: FaultStats::new(),
+        };
+        let err = search_with_backend(
+            "t",
+            &prog,
+            &an,
+            &SearchConfig::default(),
+            &retrying,
+        )
+        .unwrap_err();
+        match err {
+            SearchError::Fault(e) => {
+                assert_eq!(e.class, FaultClass::Timeout);
+            }
+            other => panic!("expected a timeout, got {other}"),
+        }
+        let report = retrying.stats.snapshot();
+        assert!(report.measure.timeouts > 0, "{report:?}");
+    }
+
+    #[test]
+    fn panics_are_caught_and_classified() {
+        let prog = parse(SRC).unwrap();
+        let an = analyze(&prog, "main").unwrap();
+        let backend = FpgaBackend {
+            cpu: &XEON_BRONZE_3104,
+            device: &ARRIA10_GX,
+        };
+        let plan = FaultPlan {
+            seed: 5,
+            panic_rate: 1.0,
+            ..FaultPlan::none()
+        };
+        let clock = SimClock::new();
+        let faulty = FaultyBackend::new(&backend, plan, clock.clone());
+        let retrying = RetryingBackend {
+            inner: &faulty,
+            policy: RetryPolicy::default(),
+            clock,
+            stats: FaultStats::new(),
+        };
+        let err = search_with_backend(
+            "t",
+            &prog,
+            &an,
+            &SearchConfig::default(),
+            &retrying,
+        )
+        .unwrap_err();
+        match err {
+            SearchError::Fault(e) => {
+                assert_eq!(e.class, FaultClass::Panic);
+                assert!(e.message.contains("injected backend panic"));
+            }
+            other => panic!("expected a panic fault, got {other}"),
+        }
+        assert!(retrying.stats.snapshot().total_panics() > 0);
+    }
+
+    #[test]
+    fn injection_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let prog = parse(SRC).unwrap();
+            let an = analyze(&prog, "main").unwrap();
+            let backend = FpgaBackend {
+                cpu: &XEON_BRONZE_3104,
+                device: &ARRIA10_GX,
+            };
+            let clock = SimClock::new();
+            let faulty = FaultyBackend::new(
+                &backend,
+                FaultPlan::transient_only(seed),
+                clock.clone(),
+            );
+            let retrying = RetryingBackend {
+                inner: &faulty,
+                policy: RetryPolicy::default(),
+                clock,
+                stats: FaultStats::new(),
+            };
+            let sol = search_with_backend(
+                "t",
+                &prog,
+                &an,
+                &SearchConfig::default(),
+                &retrying,
+            )
+            .unwrap();
+            (sol.speedup(), retrying.stats.snapshot())
+        };
+        let (s1, r1) = run(99);
+        let (s2, r2) = run(99);
+        assert_eq!(s1, s2);
+        assert_eq!(r1, r2, "same seed, same fault telemetry");
+    }
+
+    #[test]
+    fn fault_report_json_shape() {
+        let stats = FaultStats::new();
+        stats
+            .counters(Stage::Measure)
+            .retries
+            .fetch_add(3, Ordering::Relaxed);
+        let report = stats.snapshot();
+        let j = report.to_json();
+        assert_eq!(
+            j.get(&["measure", "retries"]).and_then(Json::as_f64),
+            Some(3.0)
+        );
+        assert_eq!(
+            j.get(&["total_retries"]).and_then(Json::as_f64),
+            Some(3.0)
+        );
+        let mut merged = FaultReport::default();
+        merged.merge(&report);
+        merged.merge(&report);
+        assert_eq!(merged.measure.retries, 6);
+    }
+
+    #[test]
+    fn site_keys_separate_stages_and_details() {
+        let a = fnv1a(&["fpga", "measure", "main:[0]"]);
+        let b = fnv1a(&["fpga", "verify", "main:[0]"]);
+        let c = fnv1a(&["fpga", "measure", "main:[1]"]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, fnv1a(&["fpga", "measure", "main:[0]"]));
+    }
+}

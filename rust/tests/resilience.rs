@@ -1,0 +1,310 @@
+//! Integration: the fault-tolerant automation cycle end to end — typed
+//! faults, retry budgets, seeded injection, and the graceful-degradation
+//! ladder (reroute → stale cached plan → all-CPU baseline).
+
+use fpga_offload::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
+use fpga_offload::envadapt::{
+    Batch, OffloadRequest, Pipeline, ServiceLevel,
+};
+use fpga_offload::hls::ARRIA10_GX;
+use fpga_offload::search::{
+    FaultClass, FaultPlan, FaultyBackend, FpgaBackend, OmpBackend,
+    RetryPolicy, SearchConfig, SimClock,
+};
+use fpga_offload::util::tempdir::TempDir;
+
+const SRC: &str = "
+#define N 1024
+float a[N]; float out[N];
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.001 - 0.5; }
+    for (int i = 0; i < N; i++) { out[i] = sin(a[i]) * cos(a[i]); }
+    return 0;
+}";
+
+fn fpga() -> FpgaBackend<'static> {
+    FpgaBackend {
+        cpu: &XEON_BRONZE_3104,
+        device: &ARRIA10_GX,
+    }
+}
+
+fn omp() -> OmpBackend<'static> {
+    OmpBackend {
+        cpu: &XEON_BRONZE_3104,
+        omp: &XEON_GOLD_6130,
+        device: &ARRIA10_GX,
+    }
+}
+
+fn req(app: &str) -> OffloadRequest {
+    OffloadRequest::builder(app)
+        .source(SRC)
+        .seed(7)
+        .build()
+        .unwrap()
+}
+
+/// Transient bursts within the retry budget recover to *exactly* the
+/// plan a fault-free cycle produces — retries change telemetry, not
+/// results.
+#[test]
+fn transient_faults_recover_to_the_fault_free_plan() {
+    let clean_backend = fpga();
+    let clean_pipe =
+        Pipeline::new(SearchConfig::default(), &clean_backend).unwrap();
+    let clean = Batch::new(&clean_pipe).with(req("app")).run();
+
+    let inner = fpga();
+    let clock = SimClock::new();
+    let faulty =
+        FaultyBackend::new(&inner, FaultPlan::transient_only(11), clock.clone());
+    let pipe = Pipeline::new(SearchConfig::default(), &faulty)
+        .unwrap()
+        .with_retry(RetryPolicy::default())
+        .unwrap()
+        .with_clock(clock.clone());
+    let report = Batch::new(&pipe).with(req("app")).run();
+
+    assert_eq!(report.solved(), 1);
+    let entry = &report.entries[0];
+    assert_eq!(entry.service, ServiceLevel::Full);
+    assert!(entry.degradation.is_none());
+    let plan = entry.plan.as_ref().unwrap();
+    let clean_plan = clean.entries[0].plan.as_ref().unwrap();
+    assert_eq!(plan.best_loops(), clean_plan.best_loops());
+    assert!((plan.speedup() - clean_plan.speedup()).abs() < 1e-12);
+    // The faults were real: retries happened and backoff burned virtual
+    // time on the shared clock.
+    assert!(report.fault_telemetry.total_retries() > 0);
+    assert!(clock.now_s() > 0.0);
+}
+
+/// A destination that fails permanently drops out; the app reroutes to
+/// its next-best surviving destination and the entry says why.
+#[test]
+fn permanently_failing_destination_reroutes_to_next_best() {
+    let fpga_inner = fpga();
+    let omp_backend = omp();
+    let clock = SimClock::new();
+    let broken = FaultyBackend::new(
+        &fpga_inner,
+        FaultPlan {
+            permanent_rate: 1.0,
+            ..FaultPlan::none()
+        },
+        clock.clone(),
+    );
+    let pf = Pipeline::new(SearchConfig::default(), &broken)
+        .unwrap()
+        .with_retry(RetryPolicy::default())
+        .unwrap()
+        .with_clock(clock.clone());
+    let po = Pipeline::new(SearchConfig::default(), &omp_backend).unwrap();
+    let report = Batch::mixed(vec![&pf, &po]).with(req("app")).run();
+
+    assert_eq!(report.solved(), 1);
+    assert_eq!(report.degraded(), 1);
+    let entry = &report.entries[0];
+    assert_eq!(entry.destination, Some("omp"));
+    assert_eq!(entry.service, ServiceLevel::Rerouted);
+    let why = entry.degradation.as_ref().unwrap();
+    assert!(why.contains("fpga"), "{why}");
+    // The dropped destination carries its typed fault.
+    let fault = entry.outcomes[0].error.as_ref().unwrap();
+    assert_eq!(fault.class, FaultClass::Permanent);
+    // Permanent faults fail fast: no retry budget was spent on them.
+    assert_eq!(fault.attempts, 1);
+}
+
+/// When every destination fails but the pattern DB still holds a
+/// verified plan for the unchanged source, the cycle serves that stale
+/// plan instead of leaving the app unserved.
+#[test]
+fn all_destinations_failing_serve_the_stale_cached_plan() {
+    let dir = TempDir::new("fpga-offload-resilience-stale").unwrap();
+
+    // A healthy earlier cycle stores the plan.
+    let healthy = fpga();
+    let store_pipe = Pipeline::new(SearchConfig::default(), &healthy)
+        .unwrap()
+        .with_pattern_db(dir.path());
+    store_pipe.solve(req("app")).unwrap();
+
+    // Today every destination is broken.
+    let inner = fpga();
+    let clock = SimClock::new();
+    let broken = FaultyBackend::new(
+        &inner,
+        FaultPlan {
+            permanent_rate: 1.0,
+            ..FaultPlan::none()
+        },
+        clock.clone(),
+    );
+    let pipe = Pipeline::new(SearchConfig::default(), &broken)
+        .unwrap()
+        .with_pattern_db(dir.path())
+        .with_retry(RetryPolicy::default())
+        .unwrap()
+        .with_clock(clock);
+    let report = Batch::new(&pipe).with(req("app")).run();
+
+    assert_eq!(report.served(), 1);
+    let entry = &report.entries[0];
+    assert_eq!(entry.service, ServiceLevel::ServedStale);
+    assert_eq!(entry.destination, Some("fpga"));
+    let plan = entry.plan.as_ref().unwrap();
+    assert!(plan.is_cached());
+    assert!(plan.speedup() > 1.0);
+    assert!(entry.error.is_some(), "the failure is still reported");
+    // The report flags the stale serving for tooling.
+    let j = report.to_json();
+    let r0 = &j.get(&["results"]).unwrap().as_arr().unwrap()[0];
+    assert_eq!(r0.get(&["served_stale"]).unwrap().as_bool(), Some(true));
+    assert_eq!(
+        r0.get(&["service"]).unwrap().as_str(),
+        Some("served_stale")
+    );
+}
+
+/// With no cached plan anywhere, the last rung serves the all-CPU
+/// baseline: not solved, but never unserved — and the typed fault
+/// explains what happened.
+#[test]
+fn nothing_cached_degrades_to_the_cpu_baseline() {
+    let inner = fpga();
+    let clock = SimClock::new();
+    let broken = FaultyBackend::new(
+        &inner,
+        FaultPlan {
+            permanent_rate: 1.0,
+            ..FaultPlan::none()
+        },
+        clock.clone(),
+    );
+    let pipe = Pipeline::new(SearchConfig::default(), &broken)
+        .unwrap()
+        .with_retry(RetryPolicy::default())
+        .unwrap()
+        .with_clock(clock);
+    let report = Batch::new(&pipe).with(req("app")).run();
+
+    assert_eq!(report.solved(), 0);
+    assert_eq!(report.served(), 1);
+    assert_eq!(report.degraded(), 1);
+    let entry = &report.entries[0];
+    assert_eq!(entry.service, ServiceLevel::Baseline);
+    assert!(entry.destination.is_none());
+    let plan = entry.plan.as_ref().unwrap();
+    assert!(plan.is_baseline());
+    assert_eq!(plan.speedup(), 1.0);
+    assert!(entry.error.as_ref().unwrap().contains("fpga"));
+    // The JSON carries the typed per-destination fault.
+    let j = report.to_json();
+    let r0 = &j.get(&["results"]).unwrap().as_arr().unwrap()[0];
+    assert_eq!(r0.get(&["service"]).unwrap().as_str(), Some("baseline"));
+    assert_eq!(
+        r0.get(&["errors", "fpga", "class"]).unwrap().as_str(),
+        Some("permanent")
+    );
+}
+
+/// Retry wrapping with no faults injected is invisible: the per-app
+/// results are identical to an unwrapped cycle and no retries happen.
+#[test]
+fn fault_free_retry_wrapping_is_transparent() {
+    let bf = fpga();
+    let bo = omp();
+    let plain_f = Pipeline::new(SearchConfig::default(), &bf).unwrap();
+    let plain_o = Pipeline::new(SearchConfig::default(), &bo).unwrap();
+    let plain = Batch::mixed(vec![&plain_f, &plain_o])
+        .with(req("app"))
+        .run();
+
+    let clock = SimClock::new();
+    let wrapped_f = Pipeline::new(SearchConfig::default(), &bf)
+        .unwrap()
+        .with_retry(RetryPolicy::default())
+        .unwrap()
+        .with_clock(clock.clone());
+    let wrapped_o = Pipeline::new(SearchConfig::default(), &bo)
+        .unwrap()
+        .with_retry(RetryPolicy::default())
+        .unwrap()
+        .with_clock(clock.clone());
+    let wrapped = Batch::mixed(vec![&wrapped_f, &wrapped_o])
+        .with(req("app"))
+        .run();
+
+    // Same results object, byte for byte.
+    assert_eq!(
+        plain.to_json().get(&["results"]),
+        wrapped.to_json().get(&["results"])
+    );
+    assert_eq!(wrapped.fault_telemetry.total_retries(), 0);
+    assert_eq!(wrapped.fault_telemetry.total_panics(), 0);
+    // No backoff ever ran, so the virtual clock never moved.
+    assert_eq!(clock.now_s(), 0.0);
+}
+
+/// Hung builds burn the stage deadline and surface as timeout faults in
+/// the batch telemetry — the cycle still ends, degraded not wedged.
+#[test]
+fn hung_builds_time_out_and_the_cycle_still_ends() {
+    let inner = fpga();
+    let clock = SimClock::new();
+    let hung = FaultyBackend::new(
+        &inner,
+        FaultPlan {
+            hang_rate: 1.0,
+            hang_s: 3.0 * 3600.0,
+            ..FaultPlan::none()
+        },
+        clock.clone(),
+    );
+    let pipe = Pipeline::new(SearchConfig::default(), &hung)
+        .unwrap()
+        .with_retry(RetryPolicy {
+            stage_deadline_s: Some(3600.0),
+            ..RetryPolicy::default()
+        })
+        .unwrap()
+        .with_clock(clock.clone());
+    let report = Batch::new(&pipe).with(req("app")).run();
+
+    assert_eq!(report.served(), 1);
+    assert_eq!(report.entries[0].service, ServiceLevel::Baseline);
+    let t = &report.fault_telemetry;
+    assert!(
+        t.measure.timeouts + t.verify.timeouts > 0,
+        "expected timeout faults, got {t:?}"
+    );
+    assert!(clock.now_s() >= 3.0 * 3600.0);
+}
+
+/// The same fault seed produces the same cycle, entry for entry —
+/// injection is deterministic under concurrency.
+#[test]
+fn seeded_fault_cycles_are_reproducible() {
+    let run_once = || {
+        let inner = fpga();
+        let clock = SimClock::new();
+        let faulty = FaultyBackend::new(
+            &inner,
+            FaultPlan::from_seed(99),
+            clock.clone(),
+        );
+        let pipe = Pipeline::new(SearchConfig::default(), &faulty)
+            .unwrap()
+            .with_retry(RetryPolicy::default())
+            .unwrap()
+            .with_clock(clock);
+        let report = Batch::new(&pipe)
+            .with(req("app"))
+            .with(req("app2"))
+            .run();
+        report.to_json().pretty()
+    };
+    assert_eq!(run_once(), run_once());
+}
