@@ -1,0 +1,72 @@
+//! Offload-as-a-service in one process: start a [`Service`], take a
+//! cold solve, watch the identical request come back as a
+//! microsecond-class cache hit, and read the stats endpoint.
+//!
+//! ```text
+//! cargo run --example plan_service
+//! ```
+//!
+//! The same service speaks newline-delimited JSON over TCP via
+//! `repro serve` / `repro client`; this example uses the in-process API
+//! the daemon wraps.
+
+use fpga_offload::service::{PlanRequest, Service, ServiceConfig};
+use fpga_offload::util::tempdir::TempDir;
+use fpga_offload::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let dir = TempDir::new("plan-service-example")?;
+    let cfg = ServiceConfig {
+        pattern_db: Some(dir.path().to_path_buf()),
+        workers: 2,
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(cfg)?;
+
+    println!("== cold solves (full funnel per app) ==");
+    for app in workloads::APPS {
+        let src = workloads::source(app).expect("bundled app");
+        let resp = svc.request(PlanRequest::new(*app, src));
+        match &resp.result {
+            Ok(plan) => println!(
+                "{app}: {} {:.2}x [{}] in {:.1} ms",
+                plan.label,
+                plan.speedup,
+                resp.class.as_str(),
+                resp.latency_us as f64 / 1e3,
+            ),
+            Err(e) => println!("{app}: failed — {e}"),
+        }
+    }
+
+    println!("\n== warm hits (served from the in-memory index) ==");
+    for app in workloads::APPS {
+        let src = workloads::source(app).expect("bundled app");
+        let resp = svc.request(PlanRequest::new(*app, src));
+        let plan = resp.result.as_ref().expect("warm plan");
+        println!(
+            "{app}: {} {:.2}x [{}] in {} us{}",
+            plan.label,
+            plan.speedup,
+            resp.class.as_str(),
+            resp.latency_us,
+            if plan.cached { " (cached)" } else { "" },
+        );
+        assert!(resp.is_hit(), "{app} should be a hit on repeat");
+    }
+
+    let snap = svc.stats();
+    println!(
+        "\nstats: {} requests — {} hits (p50 {} us) / {} misses \
+         (p50 {} us), {} solves, queue {} deep",
+        snap.requests,
+        snap.hits,
+        snap.hit_p50_us,
+        snap.misses,
+        snap.miss_p50_us,
+        snap.solves,
+        snap.queue_depth,
+    );
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,235 @@
+//! Service-tier latency and throughput (ISSUE 7 acceptance): warm
+//! cache-hit p50/p99 vs cold solve, sustained req/s at a fixed hit
+//! ratio, and the no-starvation guarantee — a flood of cold solves must
+//! not move cached-lookup p99, while the bounded queue rejects the
+//! overload with typed admission errors.
+//!
+//! Writes `target/bench-results/BENCH_service.json`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fpga_offload::service::{
+    BackendKind, PlanRequest, Service, ServiceConfig,
+};
+use fpga_offload::util::bench::{save_results, Table};
+use fpga_offload::util::json::Json;
+use fpga_offload::util::tempdir::TempDir;
+use fpga_offload::workloads;
+
+/// Fast synthetic source for flood traffic. Cold requests vary the
+/// source text (trailing newlines via [`flood_source`]) because the
+/// reuse key is app-name-blind: identical sources would coalesce onto
+/// one in-flight solve instead of loading the queue.
+const FLOOD_SRC: &str = "
+#define N 512
+float a[N]; float out[N];
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.002 - 0.5; }
+    for (int i = 0; i < N; i++) { out[i] = sin(a[i]) * cos(a[i]); }
+    return 0;
+}";
+
+fn quantiles(samples: &mut [u64]) -> (u64, u64) {
+    samples.sort_unstable();
+    let idx = |q: f64| {
+        let rank = ((samples.len() as f64) * q).ceil() as usize;
+        samples[rank.clamp(1, samples.len()) - 1]
+    };
+    (idx(0.50), idx(0.99))
+}
+
+fn plan_for(app: &str) -> PlanRequest {
+    match workloads::source(app) {
+        Some(src) => PlanRequest::new(app, src),
+        None => PlanRequest::new(app, FLOOD_SRC),
+    }
+}
+
+/// `FLOOD_SRC` with a unique source fingerprint per `n` (same program,
+/// `n + 1` trailing newlines) — a genuinely distinct cold solve.
+fn flood_source(n: usize) -> String {
+    format!("{FLOOD_SRC}{}", "\n".repeat(n + 1))
+}
+
+fn main() {
+    let dir = TempDir::new("bench-service").unwrap();
+    // Queue deliberately smaller than the flood below (16 blocking
+    // producers vs 2 workers + 8 slots), so admission control must
+    // trip.
+    let cfg = ServiceConfig {
+        pattern_db: Some(dir.path().to_path_buf()),
+        workers: 2,
+        queue_cap: 8,
+        backend: BackendKind::Fpga,
+        ..ServiceConfig::default()
+    };
+    let svc = Arc::new(Service::start(cfg).unwrap());
+
+    // --- Cold solves: every bundled app once, timed individually.
+    let mut cold_us: Vec<u64> = Vec::new();
+    for app in workloads::APPS {
+        let t0 = Instant::now();
+        let resp = svc.request(plan_for(app));
+        assert!(resp.ok(), "{app} cold solve failed: {:?}", resp.result);
+        assert!(!resp.is_hit(), "{app} unexpectedly warm");
+        cold_us.push(t0.elapsed().as_micros() as u64);
+    }
+    let (cold_p50, cold_p99) = quantiles(&mut cold_us);
+
+    // --- Warm hits: the same apps served from the in-memory index.
+    let mut warm_us: Vec<u64> = Vec::new();
+    for _ in 0..200 {
+        for app in workloads::APPS {
+            let t0 = Instant::now();
+            let resp = svc.request(plan_for(app));
+            assert!(resp.is_hit(), "{app} should hit: {:?}", resp.result);
+            warm_us.push(t0.elapsed().as_micros() as u64);
+        }
+    }
+    let (warm_p50, warm_p99) = quantiles(&mut warm_us);
+
+    // --- Sustained mixed traffic at a fixed ~90/10 hit ratio.
+    let mixed_t0 = Instant::now();
+    let mut mixed_served = 0u64;
+    let mut cold_seq = 0u64;
+    const MIXED_TOTAL: u64 = 200;
+    for i in 0..MIXED_TOTAL {
+        let resp = if i % 10 == 9 {
+            cold_seq += 1;
+            svc.request(PlanRequest::new(
+                format!("mixed_cold_{cold_seq}"),
+                flood_source(cold_seq as usize),
+            ))
+        } else {
+            let app = workloads::APPS[(i as usize) % workloads::APPS.len()];
+            svc.request(plan_for(app))
+        };
+        if resp.ok() {
+            mixed_served += 1;
+        }
+    }
+    let mixed_s = mixed_t0.elapsed().as_secs_f64();
+    let mixed_rps = mixed_served as f64 / mixed_s.max(1e-9);
+    assert_eq!(mixed_served, MIXED_TOTAL, "mixed traffic dropped requests");
+
+    // --- Starvation check: flood the queue with cold solves from
+    // background threads while timing cached lookups from the caller
+    // side. Hits bypass the queue, so their p99 must stay bounded even
+    // with the queue saturated and rejecting.
+    let flood_threads: Vec<_> = (0..16)
+        .map(|t| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                let mut rejected = 0u64;
+                for i in 0..8u64 {
+                    let mut req = PlanRequest::new(
+                        format!("flood_{t}_{i}"),
+                        flood_source(100 + (t * 8 + i) as usize),
+                    );
+                    // Bounded patience so a saturated pool cannot wedge
+                    // the bench; rejects come back in microseconds and
+                    // the thread immediately offers the next request.
+                    req.deadline_ms = Some(10_000);
+                    let resp = svc.request(req);
+                    if resp.is_rejected() {
+                        rejected += 1;
+                        assert!(
+                            resp.retry_after_ms.is_some(),
+                            "reject without a retry hint"
+                        );
+                    }
+                }
+                rejected
+            })
+        })
+        .collect();
+    let mut flood_hit_us: Vec<u64> = Vec::new();
+    for _ in 0..100 {
+        for app in workloads::APPS {
+            let t0 = Instant::now();
+            let resp = svc.request(plan_for(app));
+            assert!(
+                resp.is_hit(),
+                "hit starved during flood: {:?}",
+                resp.result
+            );
+            flood_hit_us.push(t0.elapsed().as_micros() as u64);
+        }
+    }
+    let rejected: u64 =
+        flood_threads.into_iter().map(|h| h.join().unwrap()).sum();
+    let (flood_hit_p50, flood_hit_p99) = quantiles(&mut flood_hit_us);
+
+    let snap = svc.stats();
+    svc.shutdown();
+
+    let mut table = Table::new(&["series", "p50", "p99", "note"]);
+    table.row(&[
+        "cold solve".into(),
+        format!("{:.1} ms", cold_p50 as f64 / 1e3),
+        format!("{:.1} ms", cold_p99 as f64 / 1e3),
+        format!("{} bundled apps", workloads::APPS.len()),
+    ]);
+    table.row(&[
+        "warm hit".into(),
+        format!("{warm_p50} us"),
+        format!("{warm_p99} us"),
+        format!("{} lookups", 200 * workloads::APPS.len()),
+    ]);
+    table.row(&[
+        "hit under flood".into(),
+        format!("{flood_hit_p50} us"),
+        format!("{flood_hit_p99} us"),
+        format!("{rejected} flood rejects"),
+    ]);
+    table.row(&[
+        "mixed 90/10".into(),
+        format!("{mixed_rps:.0} req/s"),
+        "-".into(),
+        format!("{MIXED_TOTAL} requests"),
+    ]);
+    table.print();
+
+    // Acceptance: a warm hit is >= 100x faster than a cold solve at p50,
+    // and the flood cannot starve cached lookups.
+    assert!(
+        warm_p50.max(1) * 100 <= cold_p50,
+        "hit p50 {warm_p50}us not 100x faster than cold p50 {cold_p50}us"
+    );
+    assert!(
+        flood_hit_p99 <= 50_000,
+        "cached-lookup p99 {flood_hit_p99}us unbounded under flood"
+    );
+    assert!(
+        rejected > 0,
+        "flood never tripped admission control (queue too large \
+         for the workload?)"
+    );
+
+    save_results(
+        "BENCH_service",
+        &Json::obj(vec![
+            ("cold_p50_us", Json::Num(cold_p50 as f64)),
+            ("cold_p99_us", Json::Num(cold_p99 as f64)),
+            ("warm_hit_p50_us", Json::Num(warm_p50 as f64)),
+            ("warm_hit_p99_us", Json::Num(warm_p99 as f64)),
+            ("flood_hit_p50_us", Json::Num(flood_hit_p50 as f64)),
+            ("flood_hit_p99_us", Json::Num(flood_hit_p99 as f64)),
+            ("mixed_hit_ratio", Json::Num(0.9)),
+            ("mixed_req_per_s", Json::Num(mixed_rps)),
+            (
+                "hit_speedup_vs_cold_p50",
+                Json::Num(cold_p50 as f64 / warm_p50.max(1) as f64),
+            ),
+            ("flood_rejected", Json::Num(rejected as f64)),
+            ("served_hits", Json::Num(snap.hits as f64)),
+            ("served_misses", Json::Num(snap.misses as f64)),
+            ("coalesced", Json::Num(snap.coalesced as f64)),
+            ("timeouts", Json::Num(snap.timeouts as f64)),
+            ("avg_solve_ms", Json::Num(snap.avg_solve_ms)),
+        ]),
+    );
+    println!("series recorded: target/bench-results/BENCH_service.json");
+    println!("service bench PASS");
+}

@@ -16,6 +16,13 @@
 //! repro ga <app|file.c> [--seed S]           GA baseline from [32]
 //! repro run-sample <tdfir|mriq>    PJRT sample test only
 //! repro apps                       list bundled applications
+//! repro serve [--addr A] [--port-file F] [--workers N] [--queue-cap N]
+//!             [--pattern-db DIR] [--max-age S] [--refresh-ahead F]
+//!             [--backend B] [--retries N] [--stage-deadline S]
+//!             + the offload search flags
+//! repro client [apps...] [--addr A] [--deadline-ms N] [--json]
+//!              [--stats] [--shutdown]
+//! repro patterndb <stats|quarantined> --pattern-db DIR [--addr A]
 //! ```
 //!
 //! `offload` and `batch` are thin drivers over the staged
@@ -25,6 +32,12 @@
 //! app against all four destinations (FPGA, GPU, many-core OpenMP, CPU
 //! control) in one cycle and routes each app to the best verified
 //! speedup — the mixed-destination environment of arXiv:2011.12431.
+//! `serve`/`client`/`patterndb` front the resident [`crate::service`]
+//! tier: a daemon that answers pattern-DB hits from memory in
+//! microseconds and funnels misses through a bounded queue and worker
+//! pool with typed admission control.
+
+mod service;
 
 use crate::analysis::{analyze_with, Analysis};
 use crate::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
@@ -49,6 +62,9 @@ pub fn run(args: &[String]) -> i32 {
         Some("opencl") => cmd_opencl(&args[1..]),
         Some("ga") => cmd_ga(&args[1..]),
         Some("run-sample") => cmd_run_sample(&args[1..]),
+        Some("serve") => service::cmd_serve(&args[1..]),
+        Some("client") => service::cmd_client(&args[1..]),
+        Some("patterndb") => service::cmd_patterndb(&args[1..]),
         Some("apps") => {
             for app in workloads::APPS {
                 println!("{app}");
@@ -140,6 +156,40 @@ fn print_usage() {
            ga <app|file.c>        GA baseline search ([32])\n\
            run-sample <tdfir|mriq>  PJRT sample test\n\
            apps                   list bundled applications\n\
+           serve                  resident plan-serving daemon (newline-\n\
+                                  delimited JSON over TCP): pattern-DB\n\
+                                  hits answered from memory, misses\n\
+                                  queued to a worker pool with typed\n\
+                                  admission control\n\
+             --addr A             listen address (default 127.0.0.1:7411;\n\
+                                  port 0 for an OS-assigned port)\n\
+             --port-file F        write the bound address to F (for\n\
+                                  scripts using port 0)\n\
+             --workers N          miss-solving worker threads (default 2)\n\
+             --queue-cap N        admission queue slots (default 64);\n\
+                                  overflow is rejected immediately with\n\
+                                  a retry_after_ms hint\n\
+             --pattern-db DIR     hit index + write-through store\n\
+             --max-age S          serve hits younger than S seconds;\n\
+                                  older records are re-searched\n\
+             --refresh-ahead F    fraction of --max-age (default 0.8)\n\
+                                  past which a hit is served AND a\n\
+                                  background re-search is enqueued\n\
+             --backend B          destination for misses (default fpga)\n\
+             --retries/--stage-deadline   worker retry policy (see batch)\n\
+           client [apps...]       drive a running daemon (default: all\n\
+                                  bundled apps)\n\
+             --addr A             daemon address\n\
+             --deadline-ms N      per-request deadline\n\
+             --json               print raw response lines\n\
+             --stats              fetch the stats endpoint\n\
+             --shutdown           drain and stop the daemon\n\
+           patterndb <stats|quarantined> --pattern-db DIR\n\
+                                  offline DB inspection: record counts,\n\
+                                  per-backend split, age histogram\n\
+                                  (stats), or quarantined *.corrupt\n\
+                                  files; --addr adds live daemon\n\
+                                  hit/miss counters\n\
          \n\
          <app> is one of the bundled apps (repro apps) or a path to a .c file."
     );
@@ -268,6 +318,13 @@ const VALUE_FLAGS: &[&str] = &[
     "--retries",
     "--stage-deadline",
     "--inject-faults",
+    "--addr",
+    "--port-file",
+    "--workers",
+    "--queue-cap",
+    "--max-age",
+    "--refresh-ahead",
+    "--deadline-ms",
 ];
 
 impl<'a> Flags<'a> {

@@ -1,0 +1,369 @@
+//! `repro serve`, `repro client`, and `repro patterndb` — the CLI face
+//! of the [`crate::service`] tier.
+//!
+//! `serve` keeps a [`Service`] resident behind the newline-delimited
+//! JSON TCP protocol; `client` is the matching line-protocol client
+//! (one response line per request, `--json` for the raw lines);
+//! `patterndb` inspects a pattern-DB directory offline (record stats,
+//! quarantined files) without starting a daemon.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::envadapt::patterndb::unix_now;
+use crate::envadapt::PatternDb;
+use crate::search::RetryPolicy;
+use crate::service::{
+    BackendKind, Client, Service, ServiceConfig, TcpServer,
+    DEFAULT_ADDR,
+};
+use crate::util::json::Json;
+use crate::workloads;
+
+use super::{config_from_flags, Flags};
+
+fn service_config(f: &Flags) -> anyhow::Result<ServiceConfig> {
+    let backend = match f.value("--backend") {
+        None => BackendKind::Fpga,
+        Some(v) => BackendKind::parse(v).ok_or_else(|| {
+            anyhow::anyhow!(
+                "bad value for --backend: {v:?} (use fpga|gpu|omp|cpu)"
+            )
+        })?,
+    };
+    let max_age = match f.value("--max-age") {
+        None => None,
+        Some(v) => Some(Duration::from_secs(v.parse().map_err(|_| {
+            anyhow::anyhow!("bad value for --max-age: {v:?} (seconds)")
+        })?)),
+    };
+    let stage_deadline: Option<f64> = match f.value("--stage-deadline") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| {
+            anyhow::anyhow!("bad value for --stage-deadline: {v:?}")
+        })?),
+    };
+    let retry = if f.value("--retries").is_some() || stage_deadline.is_some()
+    {
+        Some(RetryPolicy {
+            max_attempts: f.num("--retries", 3u32)?,
+            stage_deadline_s: stage_deadline,
+            ..RetryPolicy::default()
+        })
+    } else {
+        None
+    };
+    let cfg = ServiceConfig {
+        search: config_from_flags(f)?,
+        backend,
+        pattern_db: f.value("--pattern-db").map(PathBuf::from),
+        workers: f.num("--workers", 2usize)?,
+        queue_cap: f.num("--queue-cap", 64usize)?,
+        max_age,
+        refresh_ahead: f.num("--refresh-ahead", 0.8f64)?,
+        retry,
+    };
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
+pub(super) fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let cfg = service_config(&f)?;
+    let addr = f.value("--addr").unwrap_or(DEFAULT_ADDR).to_string();
+    let workers = cfg.workers;
+    let queue_cap = cfg.queue_cap;
+    let service = Service::start(cfg)?;
+    let server = TcpServer::bind(service, &addr)?;
+    let local = server.local_addr();
+    if let Some(path) = f.value("--port-file") {
+        // Written atomically-enough for the smoke test: the file appears
+        // with the full address in one create+write.
+        let mut tmp = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        writeln!(tmp, "{local}")
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+    }
+    println!(
+        "serving on {local} — {workers} workers, queue {queue_cap} \
+         (send {{\"op\":\"shutdown\"}} or Ctrl-C to stop)"
+    );
+    server.wait();
+    println!("drained; bye");
+    Ok(())
+}
+
+pub(super) fn cmd_client(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let addr = f.value("--addr").unwrap_or(DEFAULT_ADDR);
+    let raw_json = f.has("--json");
+    let mut client = Client::connect(addr)?;
+    let mut id = 0u64;
+
+    if f.has("--shutdown") {
+        let resp = client.shutdown(id)?;
+        if raw_json {
+            println!("{resp}");
+        } else {
+            println!(
+                "shutdown: {}",
+                resp.get(&["status"]).and_then(Json::as_str).unwrap_or("?")
+            );
+        }
+        return Ok(());
+    }
+
+    let stats_only = f.has("--stats") && f.positionals().is_empty();
+    let mut failed = 0usize;
+    if !stats_only {
+        let apps: Vec<String> = {
+            let given = f.positionals();
+            if given.is_empty() {
+                workloads::APPS.iter().map(|s| s.to_string()).collect()
+            } else {
+                given.iter().map(|s| s.to_string()).collect()
+            }
+        };
+        let deadline_ms: Option<u64> = match f.value("--deadline-ms") {
+            None => None,
+            Some(v) => Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("bad value for --deadline-ms: {v:?}")
+            })?),
+        };
+        for app in &apps {
+            id += 1;
+            let resp = client.plan(id, app, None, deadline_ms)?;
+            let status = resp
+                .get(&["status"])
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string();
+            if status != "ok" {
+                failed += 1;
+            }
+            if raw_json {
+                println!("{resp}");
+                continue;
+            }
+            if status == "ok" {
+                println!(
+                    "{app}: {} {:.2}x [{}] {}us{}",
+                    resp.get(&["label"])
+                        .and_then(Json::as_str)
+                        .unwrap_or("?"),
+                    resp.get(&["speedup"])
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0),
+                    resp.get(&["class"])
+                        .and_then(Json::as_str)
+                        .unwrap_or("?"),
+                    resp.get(&["latency_us"])
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0),
+                    if resp.get(&["refresh_ahead"]).and_then(Json::as_bool)
+                        == Some(true)
+                    {
+                        " (refresh scheduled)"
+                    } else {
+                        ""
+                    },
+                );
+            } else {
+                println!(
+                    "{app}: {status} — {}",
+                    resp.get(&["message"])
+                        .and_then(Json::as_str)
+                        .unwrap_or("?"),
+                );
+            }
+        }
+    }
+
+    if f.has("--stats") {
+        id += 1;
+        let resp = client.stats(id)?;
+        if raw_json {
+            println!("{resp}");
+        } else if let Some(stats) = resp.get(&["stats"]) {
+            println!("{}", stats.pretty());
+        }
+    }
+
+    if failed > 0 {
+        anyhow::bail!("{failed} request(s) not served");
+    }
+    Ok(())
+}
+
+pub(super) fn cmd_patterndb(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let sub = f.positional(0).ok_or_else(|| {
+        anyhow::anyhow!(
+            "usage: repro patterndb <stats|quarantined> --pattern-db DIR"
+        )
+    })?;
+    let dir = f.value("--pattern-db").ok_or_else(|| {
+        anyhow::anyhow!("patterndb {sub} needs --pattern-db DIR")
+    })?;
+    let db = PatternDb::open(std::path::Path::new(dir))?;
+    match sub {
+        "stats" => {
+            let apps = db.list()?;
+            let mut by_backend: Vec<(String, usize)> = Vec::new();
+            let mut verified = 0usize;
+            let mut unstamped = 0usize;
+            // Age histogram: <1h, <1d, <7d, older.
+            let mut ages = [0usize; 4];
+            let now = unix_now();
+            let mut loaded = 0usize;
+            for app in &apps {
+                let Some(rec) = db.load_record(app)? else {
+                    continue;
+                };
+                loaded += 1;
+                let backend = rec
+                    .backend
+                    .clone()
+                    .unwrap_or_else(|| "unkeyed".into());
+                match by_backend.iter_mut().find(|(b, _)| *b == backend) {
+                    Some((_, n)) => *n += 1,
+                    None => by_backend.push((backend, 1)),
+                }
+                if rec.verified == Some(true) {
+                    verified += 1;
+                }
+                match rec.age_secs(now) {
+                    None => unstamped += 1,
+                    Some(age) if age < 3600 => ages[0] += 1,
+                    Some(age) if age < 86_400 => ages[1] += 1,
+                    Some(age) if age < 604_800 => ages[2] += 1,
+                    Some(_) => ages[3] += 1,
+                }
+            }
+            by_backend.sort();
+            println!("pattern DB {dir}: {loaded} records");
+            for (backend, n) in &by_backend {
+                println!("  backend {backend}: {n}");
+            }
+            println!(
+                "  age: {} <1h, {} <1d, {} <7d, {} older, {} unstamped",
+                ages[0], ages[1], ages[2], ages[3], unstamped
+            );
+            println!("  verified at store time: {verified}/{loaded}");
+            // A running daemon owns the live hit/miss counters.
+            if let Some(addr) = f.value("--addr") {
+                let mut client = Client::connect(addr)?;
+                let resp = client.stats(1)?;
+                if let Some(stats) = resp.get(&["stats"]) {
+                    let count = |k: &str| {
+                        stats
+                            .get(&[k])
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0)
+                    };
+                    println!(
+                        "  live service: {} hits / {} misses \
+                         (index: {} hits / {} misses)",
+                        count("hits"),
+                        count("misses"),
+                        count("index_hits"),
+                        count("index_misses"),
+                    );
+                }
+            }
+        }
+        "quarantined" => {
+            let bad = db.quarantined()?;
+            if bad.is_empty() {
+                println!("pattern DB {dir}: no quarantined records");
+            } else {
+                println!(
+                    "pattern DB {dir}: {} quarantined record(s)",
+                    bad.len()
+                );
+                for app in &bad {
+                    println!("  {app}  ({app}.pattern.json.corrupt)");
+                }
+            }
+        }
+        other => anyhow::bail!(
+            "unknown patterndb subcommand {other:?} (use stats|quarantined)"
+        ),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cli::run;
+    use crate::util::tempdir::TempDir;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn patterndb_stats_on_fresh_dir() {
+        let dir = TempDir::new("cli-pdb-stats").unwrap();
+        let d = dir.path().to_string_lossy().into_owned();
+        assert_eq!(
+            run(&s(&["patterndb", "stats", "--pattern-db", &d])),
+            0
+        );
+        assert_eq!(
+            run(&s(&["patterndb", "quarantined", "--pattern-db", &d])),
+            0
+        );
+    }
+
+    #[test]
+    fn patterndb_needs_a_dir() {
+        assert_eq!(run(&s(&["patterndb", "stats"])), 1);
+        assert_eq!(run(&s(&["patterndb"])), 1);
+    }
+
+    #[test]
+    fn patterndb_counts_stored_records_and_quarantine() {
+        let dir = TempDir::new("cli-pdb-counts").unwrap();
+        let d = dir.path().to_string_lossy().into_owned();
+        // A real record via a batch solve, plus a corrupt file.
+        assert_eq!(
+            run(&s(&[
+                "batch",
+                "sobel",
+                "--pattern-db",
+                &d,
+                "--out",
+                &dir.join("r.json").to_string_lossy().into_owned(),
+            ])),
+            0
+        );
+        std::fs::write(
+            dir.join("broken.pattern.json.corrupt"),
+            "not json",
+        )
+        .unwrap();
+        assert_eq!(
+            run(&s(&["patterndb", "stats", "--pattern-db", &d])),
+            0
+        );
+        assert_eq!(
+            run(&s(&["patterndb", "quarantined", "--pattern-db", &d])),
+            0
+        );
+    }
+
+    #[test]
+    fn serve_rejects_bad_flags() {
+        assert_eq!(
+            run(&s(&["serve", "--backend", "tpu"])),
+            1
+        );
+        assert_eq!(
+            run(&s(&["serve", "--refresh-ahead", "2.0"])),
+            1
+        );
+        assert_eq!(run(&s(&["client", "--addr", "127.0.0.1:1"])), 1);
+    }
+}

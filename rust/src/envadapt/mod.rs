@@ -47,7 +47,7 @@ pub use facilitydb::{Facility, FacilityDb, Role};
 pub use flow::{analyze_source, FlowOptions, FlowReport};
 #[allow(deprecated)]
 pub use flow::run_flow;
-pub use patterndb::{PatternDb, ReuseKey, StoredPattern};
+pub use patterndb::{PatternDb, PatternIndex, ReuseKey, StoredPattern};
 pub use pipeline::{
     source_fingerprint, Analyzed, Candidates, Deployed, FuncBlocked,
     Measured, OffloadRequest, OffloadRequestBuilder, Parsed, Pipeline,

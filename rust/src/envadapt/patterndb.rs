@@ -11,7 +11,10 @@
 //! key component existed are missing that field and therefore never
 //! match: stale plans degrade to a re-search, never to silent reuse.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use anyhow::{Context, Result};
 
@@ -20,7 +23,7 @@ use crate::util::json::Json;
 
 /// Everything a stored plan's validity depends on. All components must
 /// match for [`crate::envadapt::Pipeline`] to reuse the record.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ReuseKey {
     /// FNV-1a fingerprint of the application source.
     pub source_hash: u64,
@@ -107,6 +110,18 @@ pub(crate) fn unix_now() -> u64 {
         .unwrap_or(0)
 }
 
+/// Process-wide per-record write lock. Concurrent workers (service
+/// worker pool, mixed-batch destinations) storing the same app must not
+/// interleave their read-stamp/rename sequences, or a slower writer with
+/// an older `stored_at` silently clobbers a fresher record.
+fn record_lock(path: &Path) -> Arc<Mutex<()>> {
+    static LOCKS: OnceLock<Mutex<HashMap<PathBuf, Arc<Mutex<()>>>>> =
+        OnceLock::new();
+    let map = LOCKS.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = map.lock().unwrap_or_else(|p| p.into_inner());
+    guard.entry(path.to_path_buf()).or_default().clone()
+}
+
 /// File-backed pattern store.
 #[derive(Debug, Clone)]
 pub struct PatternDb {
@@ -149,6 +164,21 @@ impl PatternDb {
         &self,
         sol: &OffloadSolution,
         key: Option<&ReuseKey>,
+    ) -> Result<PathBuf> {
+        self.write_record_stamped(sol, key, unix_now())
+    }
+
+    /// [`write_record`](Self::write_record) with an explicit `stored_at`
+    /// stamp — the testable seam for the concurrent-writer ordering
+    /// rule. Hashed writes are serialized per record path and a write
+    /// whose stamp is *older* than the record already on disk is
+    /// dropped: when two workers race, the record that survives is the
+    /// freshest one, not whichever writer renamed last.
+    pub(crate) fn write_record_stamped(
+        &self,
+        sol: &OffloadSolution,
+        key: Option<&ReuseKey>,
+        stamp: u64,
     ) -> Result<PathBuf> {
         let path = self.path_of(&sol.app);
         let mut j = sol.to_json();
@@ -193,20 +223,55 @@ impl PatternDb {
             // the other stamps).
             map.insert(
                 "stored_at".to_string(),
-                Json::Str(format!("{}", unix_now())),
+                Json::Str(format!("{stamp}")),
             );
         }
-        // Crash-safe: write the full record to a temp file in the same
-        // directory, then atomically rename it over the destination. A
-        // crash mid-write leaves only the `.tmp` file, which every read
-        // path ignores — never a parseable-but-partial record.
-        let tmp = self.dir.join(format!("{}.pattern.json.tmp", sol.app));
-        std::fs::write(&tmp, j.pretty())
-            .with_context(|| format!("writing {tmp:?}"))?;
-        std::fs::rename(&tmp, &path).with_context(|| {
-            format!("renaming {tmp:?} over {path:?}")
-        })?;
+        // Crash-safe: write the full record to a per-writer temp file in
+        // the same directory, then atomically rename it over the
+        // destination. A crash mid-write leaves only a `.tmp` file,
+        // which every read path ignores — never a parseable-but-partial
+        // record. The temp name carries pid + a process counter so
+        // concurrent writers never share a scratch file.
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = self.dir.join(format!(
+            "{}.pattern.json.{}-{}.tmp",
+            sol.app,
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        // Stamped (hashed) writes serialize per record and respect the
+        // freshness rule; unstamped `store()` keeps its documented
+        // overwrite-unconditionally semantics.
+        if key.is_some() {
+            let lock = record_lock(&path);
+            let _held = lock.lock().unwrap_or_else(|p| p.into_inner());
+            if self.stamp_of(&path) > Some(stamp) {
+                return Ok(path);
+            }
+            std::fs::write(&tmp, j.pretty())
+                .with_context(|| format!("writing {tmp:?}"))?;
+            std::fs::rename(&tmp, &path).with_context(|| {
+                format!("renaming {tmp:?} over {path:?}")
+            })?;
+        } else {
+            std::fs::write(&tmp, j.pretty())
+                .with_context(|| format!("writing {tmp:?}"))?;
+            std::fs::rename(&tmp, &path).with_context(|| {
+                format!("renaming {tmp:?} over {path:?}")
+            })?;
+        }
         Ok(path)
+    }
+
+    /// `stored_at` stamp of the record currently on disk, if it exists,
+    /// parses, and is stamped. Any failure reads as "no stamp", which
+    /// lets an incoming write proceed.
+    fn stamp_of(&self, path: &Path) -> Option<u64> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let j = Json::parse(&text).ok()?;
+        j.get(&["stored_at"])
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse().ok())
     }
 
     /// Load the stored solution JSON for an app, if present.
@@ -342,6 +407,145 @@ impl PatternDb {
         }
         out.sort();
         Ok(out)
+    }
+}
+
+/// Shared in-memory index over a [`PatternDb`] directory: every record
+/// loaded once at open, then served from memory. This is the service
+/// tier's hit path — a reuse-key lookup is a `RwLock` read + a clone,
+/// microseconds instead of an open/read/parse of the on-disk JSON per
+/// request. Writes go through to disk first (keeping the crash-safe
+/// rename and the freshness rule) and then re-read the surviving record
+/// into memory, so the index never diverges from what a fresh process
+/// would load.
+///
+/// Hit/miss counters tally [`lookup`](Self::lookup) outcomes for the
+/// service stats surface.
+#[derive(Debug)]
+pub struct PatternIndex {
+    db: PatternDb,
+    records: RwLock<HashMap<String, StoredPattern>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PatternIndex {
+    /// Open the directory (created if needed) and load every parseable
+    /// record. Corrupt records quarantine exactly as in
+    /// [`PatternDb::load_record`] and simply don't appear in the index.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let db = PatternDb::open(dir)?;
+        let mut records = HashMap::new();
+        for app in db.list()? {
+            if let Some(rec) = db.load_record(&app)? {
+                records.insert(app, rec);
+            }
+        }
+        Ok(PatternIndex {
+            db,
+            records: RwLock::new(records),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// The file-backed store underneath the index.
+    pub fn db(&self) -> &PatternDb {
+        &self.db
+    }
+
+    /// Number of indexed records.
+    pub fn len(&self) -> usize {
+        self.read_guard().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn read_guard(
+        &self,
+    ) -> std::sync::RwLockReadGuard<'_, HashMap<String, StoredPattern>>
+    {
+        self.records.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Reuse-key lookup straight from memory. Counts a hit only when
+    /// the record exists *and* matches the full key — a record for the
+    /// right app stored under a different backend/config is a miss,
+    /// exactly as it would be for [`crate::envadapt::Pipeline`].
+    pub fn lookup(
+        &self,
+        app: &str,
+        key: &ReuseKey,
+    ) -> Option<StoredPattern> {
+        let guard = self.read_guard();
+        match guard.get(app) {
+            Some(rec) if rec.matches(key) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(rec.clone())
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// The indexed record for an app, key-blind and counter-free (the
+    /// stats surface, not the hit path).
+    pub fn get(&self, app: &str) -> Option<StoredPattern> {
+        self.read_guard().get(app).cloned()
+    }
+
+    /// All indexed records, sorted by app.
+    pub fn snapshot(&self) -> Vec<StoredPattern> {
+        let mut out: Vec<StoredPattern> =
+            self.read_guard().values().cloned().collect();
+        out.sort_by(|a, b| a.app.cmp(&b.app));
+        out
+    }
+
+    /// Write-through store: persist to disk (atomic rename + freshness
+    /// rule), then reload the surviving record into memory. When a
+    /// concurrent writer already stored a fresher record, *that* record
+    /// is what lands in the index.
+    pub fn store_hashed(
+        &self,
+        sol: &OffloadSolution,
+        key: &ReuseKey,
+    ) -> Result<PathBuf> {
+        let path = self.db.store_hashed(sol, key)?;
+        self.refresh(&sol.app)?;
+        Ok(path)
+    }
+
+    /// Re-read one app's record from disk into the index (dropping the
+    /// entry if the file is gone or quarantined). The seam for external
+    /// writers — a CLI batch run against the same directory, say.
+    pub fn refresh(&self, app: &str) -> Result<()> {
+        let rec = self.db.load_record(app)?;
+        let mut guard =
+            self.records.write().unwrap_or_else(|p| p.into_inner());
+        match rec {
+            Some(rec) => {
+                guard.insert(app.to_string(), rec);
+            }
+            None => {
+                guard.remove(app);
+            }
+        }
+        Ok(())
+    }
+
+    /// Matching lookups served since open.
+    pub fn hit_count(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that found no matching record since open.
+    pub fn miss_count(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
     }
 }
 
@@ -566,5 +770,147 @@ mod tests {
         let rec = db.load_record("demo").unwrap().unwrap();
         assert_eq!(rec.source_hash, Some(k.source_hash));
         assert!(!rec.matches(&k));
+    }
+
+    fn dummy_solution_with_speedup(app: &str, speedup: f64) -> OffloadSolution {
+        let mut sol = dummy_solution(app);
+        sol.measurements[0].timing.speedup = speedup;
+        sol
+    }
+
+    #[test]
+    fn older_stamped_write_does_not_clobber_newer_record() {
+        // The race this guards: worker A solves, worker B re-solves a
+        // moment later, A's write lands *after* B's. Before the
+        // freshness rule, A's rename silently discarded B's fresher
+        // record. Now the stale write is dropped on the floor.
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        let k = key();
+        db.write_record_stamped(
+            &dummy_solution_with_speedup("demo", 8.0),
+            Some(&k),
+            1_000,
+        )
+        .unwrap();
+        // A late writer with an older stamp: dropped.
+        db.write_record_stamped(
+            &dummy_solution_with_speedup("demo", 2.0),
+            Some(&k),
+            900,
+        )
+        .unwrap();
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert_eq!(rec.stored_at, Some(1_000));
+        assert_eq!(rec.speedup, 8.0);
+        // A genuinely fresher writer still wins.
+        db.write_record_stamped(
+            &dummy_solution_with_speedup("demo", 3.0),
+            Some(&k),
+            1_100,
+        )
+        .unwrap();
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert_eq!(rec.stored_at, Some(1_100));
+        assert_eq!(rec.speedup, 3.0);
+    }
+
+    #[test]
+    fn concurrent_same_app_stores_keep_the_freshest_stamp() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        let k = key();
+        std::thread::scope(|s| {
+            for i in 0..8u64 {
+                let db = db.clone();
+                let k = k.clone();
+                s.spawn(move || {
+                    db.write_record_stamped(
+                        &dummy_solution_with_speedup(
+                            "demo",
+                            i as f64 + 1.0,
+                        ),
+                        Some(&k),
+                        5_000 + i,
+                    )
+                    .unwrap();
+                });
+            }
+        });
+        // Whatever the interleaving, the surviving record parses and
+        // carries the freshest stamp (and that writer's payload).
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert_eq!(rec.stored_at, Some(5_007));
+        assert_eq!(rec.speedup, 8.0);
+        assert!(db.quarantined().unwrap().is_empty());
+        // No stray temp files survive the stampede.
+        let leftovers: Vec<String> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n != "demo.pattern.json")
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+    }
+
+    #[test]
+    fn index_lookup_serves_from_memory_and_counts() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let k = key();
+        let idx = PatternIndex::open(dir.path()).unwrap();
+        assert!(idx.is_empty());
+        idx.store_hashed(&dummy_solution("demo"), &k).unwrap();
+        assert_eq!(idx.len(), 1);
+        // Matching key: a hit, served without touching disk.
+        let rec = idx.lookup("demo", &k).expect("indexed");
+        assert_eq!(rec.speedup, 4.0);
+        // Right app, wrong key: a miss, same as the pipeline's rule.
+        let other = ReuseKey { backend: "gpu".into(), ..k.clone() };
+        assert!(idx.lookup("demo", &other).is_none());
+        assert!(idx.lookup("nope", &k).is_none());
+        assert_eq!(idx.hit_count(), 1);
+        assert_eq!(idx.miss_count(), 2);
+    }
+
+    #[test]
+    fn index_open_loads_existing_records_and_refresh_tracks_disk() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        let k = key();
+        db.store_hashed(&dummy_solution("demo"), &k).unwrap();
+        let idx = PatternIndex::open(dir.path()).unwrap();
+        assert_eq!(idx.len(), 1);
+        assert!(idx.lookup("demo", &k).is_some());
+        // An external writer updates the record; refresh picks it up.
+        db.store_hashed(&dummy_solution_with_speedup("demo", 6.0), &k)
+            .unwrap();
+        assert_eq!(idx.get("demo").unwrap().speedup, 4.0);
+        idx.refresh("demo").unwrap();
+        assert_eq!(idx.get("demo").unwrap().speedup, 6.0);
+        // The file disappears; refresh drops the entry.
+        std::fs::remove_file(db.path_of("demo")).unwrap();
+        idx.refresh("demo").unwrap();
+        assert!(idx.get("demo").is_none());
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn index_store_keeps_the_fresher_concurrent_record() {
+        // Write-through honors the freshness rule: if disk already has
+        // a fresher record, the index ends up holding *that* record,
+        // not the stale write it just attempted.
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        let k = key();
+        let idx = PatternIndex::open(dir.path()).unwrap();
+        db.write_record_stamped(
+            &dummy_solution_with_speedup("demo", 9.0),
+            Some(&k),
+            u64::MAX - 1,
+        )
+        .unwrap();
+        idx.store_hashed(&dummy_solution_with_speedup("demo", 1.5), &k)
+            .unwrap();
+        assert_eq!(idx.get("demo").unwrap().speedup, 9.0);
+        assert_eq!(idx.get("demo").unwrap().stored_at, Some(u64::MAX - 1));
     }
 }

@@ -849,6 +849,24 @@ impl<'a> Pipeline<'a> {
     /// before replaying one: source hash + backend + entry + destination
     /// device + search-config fingerprint + function-block catalog
     /// fingerprint (0 for loop-only requests).
+    /// The [`ReuseKey`] a given request resolves to under this
+    /// pipeline's backend and configuration — what [`select`] stores
+    /// records under and [`cached_plan`] demands back. Public so the
+    /// service tier's shared in-memory index
+    /// ([`crate::envadapt::PatternIndex`]) can probe for a hit with
+    /// exactly the key a worker-pool solve would store, without any
+    /// possibility of the two drifting apart.
+    ///
+    /// [`select`]: Self::select
+    /// [`cached_plan`]: Self::cached_plan
+    pub fn reuse_key_for(&self, req: &OffloadRequest) -> ReuseKey {
+        self.reuse_key(
+            source_fingerprint(&req.source),
+            &req.entry,
+            req.func_blocks,
+        )
+    }
+
     fn reuse_key(
         &self,
         source_hash: u64,

@@ -55,7 +55,8 @@
 //!
 //! Support: [`cpu`] (CPU cost model + the [`cpu::omp`] many-core OpenMP
 //! destination), [`fpga`] (FPGA simulator + transfer model), [`runtime`]
-//! (PJRT artifacts), [`workloads`] (bundled applications), [`cli`], and
+//! (PJRT artifacts), [`workloads`] (bundled applications), [`service`]
+//! (the resident plan-serving daemon behind `repro serve`), [`cli`], and
 //! [`util`]. See `ARCHITECTURE.md` at the repository root for the full
 //! data-flow map and the recipe for adding another destination.
 //!
@@ -101,6 +102,7 @@ pub mod hls;
 pub mod minic;
 pub mod runtime;
 pub mod search;
+pub mod service;
 pub mod util;
 pub mod workloads;
 

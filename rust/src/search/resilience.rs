@@ -100,6 +100,10 @@ pub enum Stage {
     Select,
     Db,
     Deploy,
+    /// Service-tier admission/scheduling: the request never reached a
+    /// pipeline stage (queue full, deadline expired while queued, or
+    /// the service was draining).
+    Queue,
 }
 
 impl Stage {
@@ -113,6 +117,7 @@ impl Stage {
             Stage::Select => "select",
             Stage::Db => "db",
             Stage::Deploy => "deploy",
+            Stage::Queue => "queue",
         }
     }
 }

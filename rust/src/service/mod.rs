@@ -1,0 +1,331 @@
+//! Offload-as-a-service: a resident daemon serving plan requests at
+//! traffic scale.
+//!
+//! Every solve in this crate used to be a one-shot CLI process — parse
+//! the app, run the funnel, write the pattern DB, exit. That shape
+//! cannot serve the paper's environment-adaptive vision, where plan
+//! requests arrive continuously from a fleet. This module keeps the
+//! whole machine resident: a [`Service`] owns a shared in-memory
+//! [`crate::envadapt::PatternIndex`], a bounded admission queue, and a
+//! worker pool built over the existing
+//! [`crate::envadapt::Batch`]/[`crate::envadapt::Pipeline`] machinery.
+//!
+//! Two service classes keep a flood of cold solves from ever starving
+//! cached lookups:
+//!
+//! * **Hits** — a request whose full [`crate::envadapt::ReuseKey`]
+//!   matches an indexed record is answered *synchronously on the caller
+//!   thread* from memory, in microseconds. Hits never enter the queue,
+//!   so no amount of cold-solve backlog can delay them.
+//! * **Misses** — occupy a queue slot and a worker. Duplicate in-flight
+//!   keys coalesce into one solve (every waiter gets the same plan),
+//!   per-request deadlines are honored (expired work is dropped with a
+//!   typed timeout, never a hang), and failures degrade through the
+//!   [`crate::envadapt::ServiceLevel`] ladder instead of erroring.
+//!
+//! Admission control is explicit: when the queue is full the request is
+//! rejected *immediately* with a typed
+//! [`crate::search::OffloadError`] (`stage=queue`, `class=transient`)
+//! and a `retry_after_ms` hint derived from the backlog — callers see
+//! backpressure, not latency.
+//!
+//! The refresh-ahead policy closes the expiry gap: a hit whose age
+//! exceeds a configurable fraction (default 80%) of `max_age` is served
+//! immediately *and* a background re-search is enqueued, so a hot key
+//! never waits on a cold solve just because its record aged out.
+//!
+//! Submodules: [`queue`] (bounded MPMC admission queue), [`server`]
+//! (the `Service`, worker pool, coalescing), [`stats`] (counters +
+//! latency quantiles), [`protocol`] (newline-delimited-JSON wire format
+//! over TCP, plus the client used by `repro client`).
+//!
+//! ```
+//! use fpga_offload::service::{PlanRequest, Service, ServiceConfig};
+//! use fpga_offload::util::tempdir::TempDir;
+//!
+//! let dir = TempDir::new("svc-doc").unwrap();
+//! let mut cfg = ServiceConfig::default();
+//! cfg.pattern_db = Some(dir.path().to_path_buf());
+//! cfg.workers = 1;
+//! let svc = Service::start(cfg).unwrap();
+//! let src = "
+//! #define N 256
+//! float a[N]; float out[N];
+//! int main() {
+//!     for (int i = 0; i < N; i++) { a[i] = i * 0.001 - 0.5; }
+//!     for (int i = 0; i < N; i++) { out[i] = sin(a[i]) * cos(a[i]); }
+//!     return 0;
+//! }";
+//! let cold = svc.request(PlanRequest::new("demo", src));
+//! assert!(cold.result.is_ok());
+//! let warm = svc.request(PlanRequest::new("demo", src));
+//! assert!(warm.is_hit());
+//! svc.shutdown();
+//! ```
+
+pub mod protocol;
+pub mod queue;
+pub mod server;
+pub mod stats;
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
+use crate::envadapt::ServiceLevel;
+use crate::gpu::TESLA_T4;
+use crate::hls::ARRIA10_GX;
+use crate::search::{
+    Backend, CpuBaseline, FpgaBackend, GpuBackend, OffloadError,
+    OmpBackend, RetryPolicy, SearchConfig,
+};
+
+pub use protocol::{Client, TcpServer, DEFAULT_ADDR};
+pub use queue::{BoundedQueue, PushError};
+pub use server::Service;
+pub use stats::{ServiceStats, StatsSnapshot};
+
+/// Which bundled destination backend a service solves misses on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Fpga,
+    Gpu,
+    Omp,
+    Cpu,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fpga" => Some(BackendKind::Fpga),
+            "gpu" => Some(BackendKind::Gpu),
+            "omp" => Some(BackendKind::Omp),
+            "cpu" => Some(BackendKind::Cpu),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Fpga => "fpga",
+            BackendKind::Gpu => "gpu",
+            BackendKind::Omp => "omp",
+            BackendKind::Cpu => "cpu",
+        }
+    }
+
+    /// Construct the bundled backend for this destination (the same
+    /// device statics the CLI uses).
+    pub fn build(self) -> Box<dyn Backend + Send + Sync> {
+        match self {
+            BackendKind::Fpga => Box::new(FpgaBackend {
+                cpu: &XEON_BRONZE_3104,
+                device: &ARRIA10_GX,
+            }),
+            BackendKind::Gpu => Box::new(GpuBackend {
+                cpu: &XEON_BRONZE_3104,
+                gpu: &TESLA_T4,
+                device: &ARRIA10_GX,
+            }),
+            BackendKind::Omp => Box::new(OmpBackend {
+                cpu: &XEON_BRONZE_3104,
+                omp: &XEON_GOLD_6130,
+                device: &ARRIA10_GX,
+            }),
+            BackendKind::Cpu => Box::new(CpuBaseline {
+                cpu: &XEON_BRONZE_3104,
+                device: &ARRIA10_GX,
+            }),
+        }
+    }
+}
+
+/// Everything a [`Service`] is configured with.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Funnel configuration shared by every miss solve.
+    pub search: SearchConfig,
+    /// Destination backend misses are solved on.
+    pub backend: BackendKind,
+    /// Pattern-DB directory. `Some` enables the in-memory hit index and
+    /// write-through persistence; `None` means every request is a cold
+    /// solve and nothing survives the process.
+    pub pattern_db: Option<PathBuf>,
+    /// Worker threads solving misses. `0` is allowed — nothing drains
+    /// the queue (admission-control tests use this to fill it
+    /// deterministically).
+    pub workers: usize,
+    /// Queue capacity; the `workers+queue_cap+1`-th concurrent distinct
+    /// miss is rejected with a typed admission error.
+    pub queue_cap: usize,
+    /// Age policy for the hit path, mirroring
+    /// [`crate::envadapt::Pipeline::with_max_age`]: an indexed record
+    /// older than this is a miss (re-searched), and unstamped records
+    /// count as infinitely old. `None` serves hits forever.
+    pub max_age: Option<Duration>,
+    /// Refresh-ahead fraction of `max_age` (default 0.8): a hit older
+    /// than `refresh_ahead * max_age` but younger than `max_age` is
+    /// served immediately *and* a background re-search is enqueued
+    /// (dropped silently if the queue is full — refresh is best
+    /// effort). Only meaningful with `max_age` set.
+    pub refresh_ahead: f64,
+    /// Retry/backoff budget wrapped around every worker solve (the
+    /// PR 6 seam). Per-request deadlines tighten this policy's
+    /// `stage_deadline_s`, so a hung simulated build trips the request
+    /// deadline too.
+    pub retry: Option<RetryPolicy>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            search: SearchConfig::default(),
+            backend: BackendKind::Fpga,
+            pattern_db: None,
+            workers: 2,
+            queue_cap: 64,
+            max_age: None,
+            refresh_ahead: 0.8,
+            retry: None,
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        self.search.validate()?;
+        if self.queue_cap == 0 {
+            return Err("queue_cap must be >= 1".into());
+        }
+        if !(self.refresh_ahead > 0.0 && self.refresh_ahead <= 1.0) {
+            return Err(format!(
+                "refresh_ahead must be in (0, 1], got {}",
+                self.refresh_ahead
+            ));
+        }
+        if let Some(policy) = &self.retry {
+            policy.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// One plan request as the service sees it, whatever front it arrived
+/// through (in-process call, TCP line, CLI client).
+#[derive(Debug, Clone)]
+pub struct PlanRequest {
+    pub app: String,
+    pub source: String,
+    /// Entry function for profiling and verification.
+    pub entry: String,
+    pub seed: u64,
+    /// Run the function-block detection/confirmation path.
+    pub func_blocks: bool,
+    /// Wall-clock budget from admission, milliseconds. An expired
+    /// request is answered with a typed timeout
+    /// (`stage=queue, class=timeout`) — never left hanging, never
+    /// solved past its deadline's usefulness.
+    pub deadline_ms: Option<u64>,
+}
+
+impl PlanRequest {
+    pub fn new(app: impl Into<String>, source: impl Into<String>) -> Self {
+        PlanRequest {
+            app: app.into(),
+            source: source.into(),
+            entry: "main".into(),
+            seed: 42,
+            func_blocks: false,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// Which service class answered a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeClass {
+    /// Answered synchronously from the in-memory index.
+    Hit,
+    /// Went through the queue and a worker solve (or was rejected /
+    /// timed out trying).
+    Miss,
+}
+
+impl ServeClass {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ServeClass::Hit => "hit",
+            ServeClass::Miss => "miss",
+        }
+    }
+}
+
+/// The plan summary a request is answered with.
+#[derive(Debug, Clone)]
+pub struct ServedPlan {
+    /// Offloaded loop ids of the selected pattern.
+    pub best_pattern: Vec<u32>,
+    /// Human label ("L12+L13", or "all-CPU").
+    pub label: String,
+    pub speedup: f64,
+    /// Function-block replacements carried by the plan.
+    pub blocks: u64,
+    /// Whether the plan came from the pattern DB rather than a fresh
+    /// funnel run.
+    pub cached: bool,
+    /// Whether the plan's verification outcome holds up (see
+    /// [`crate::envadapt::Plan::verified_ok`]).
+    pub verified_ok: bool,
+    /// Ladder rung that served the request ([`ServiceLevel::Full`] for
+    /// hits and clean solves).
+    pub service: ServiceLevel,
+    /// The hit was inside the refresh-ahead window and a background
+    /// re-search was scheduled.
+    pub refresh_ahead: bool,
+}
+
+/// What a [`Service`] answers every request with.
+#[derive(Debug, Clone)]
+pub struct PlanResponse {
+    pub app: String,
+    pub class: ServeClass,
+    /// The plan, or the typed fault: admission rejects are
+    /// `stage=queue, class=transient`; expired deadlines are
+    /// `stage=queue, class=timeout`; solve failures keep their pipeline
+    /// stage and class.
+    pub result: Result<ServedPlan, OffloadError>,
+    /// Backpressure hint, set only on admission rejects: how long the
+    /// backlog suggests waiting before retrying.
+    pub retry_after_ms: Option<u64>,
+    /// Submit-to-answer wall time, microseconds.
+    pub latency_us: u64,
+}
+
+impl PlanResponse {
+    /// Whether a plan was served (any ladder rung).
+    pub fn ok(&self) -> bool {
+        self.result.is_ok()
+    }
+
+    pub fn is_hit(&self) -> bool {
+        self.class == ServeClass::Hit && self.result.is_ok()
+    }
+
+    /// Whether this is a typed admission reject (queue full or service
+    /// draining).
+    pub fn is_rejected(&self) -> bool {
+        matches!(
+            &self.result,
+            Err(e) if e.stage == crate::search::Stage::Queue
+                && e.class == crate::search::FaultClass::Transient
+        )
+    }
+
+    /// Whether this is a typed deadline expiry.
+    pub fn is_timeout(&self) -> bool {
+        matches!(
+            &self.result,
+            Err(e) if e.class == crate::search::FaultClass::Timeout
+        )
+    }
+}

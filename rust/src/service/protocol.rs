@@ -1,0 +1,490 @@
+//! The wire format: newline-delimited JSON over TCP, one object per
+//! line, one response line per request line.
+//!
+//! Deliberately thin — the service's whole brain lives in
+//! [`Service`](crate::service::Service); this layer only parses lines,
+//! maps them to [`PlanRequest`]s, and serializes [`PlanResponse`]s
+//! back. Any client that can write a JSON line to a socket can use the
+//! daemon; no framing, no state, no protocol negotiation.
+//!
+//! Request lines:
+//!
+//! ```json
+//! {"id": 1, "op": "plan", "app": "tdfir", "source": "...", "deadline_ms": 5000}
+//! {"id": 2, "op": "stats"}
+//! {"id": 3, "op": "ping"}
+//! {"id": 4, "op": "shutdown"}
+//! ```
+//!
+//! `op` defaults to `"plan"`. A plan request without `source` falls
+//! back to the bundled workload of that name (and its registered entry
+//! point), so `{"app": "tdfir"}` alone is a valid request. Responses
+//! echo `id` and `op` and carry `status`: `"ok"`, `"rejected"` (typed
+//! admission reject — `retry_after_ms` is set), `"timeout"` (deadline
+//! expired), or `"error"`. Malformed lines get a `status:"error"`
+//! response and the connection stays up.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::envadapt::TestDb;
+use crate::search::FaultClass;
+use crate::util::json::Json;
+use crate::workloads;
+
+use super::server::Service;
+use super::{PlanRequest, PlanResponse};
+
+/// Where `repro serve` listens when no `--addr` is given.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:7411";
+
+fn num(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn str_of(s: impl Into<String>) -> Json {
+    Json::Str(s.into())
+}
+
+/// Build the [`PlanRequest`] a request line describes. Missing `source`
+/// resolves against the bundled workloads; missing `entry` against the
+/// test-case DB.
+fn plan_request_of(line: &Json) -> Result<PlanRequest, String> {
+    let app = match line.get(&["app"]).and_then(Json::as_str) {
+        Some(a) if !a.is_empty() => a.to_string(),
+        _ => return Err("missing \"app\"".into()),
+    };
+    let source = match line.get(&["source"]).and_then(Json::as_str) {
+        Some(src) => src.to_string(),
+        None => match workloads::source(&app) {
+            Some(src) => src.to_string(),
+            None => {
+                return Err(format!(
+                    "no \"source\" given and \"{app}\" is not a bundled \
+                     workload"
+                ))
+            }
+        },
+    };
+    let mut req = PlanRequest::new(app.clone(), source);
+    match line.get(&["entry"]).and_then(Json::as_str) {
+        Some(e) => req.entry = e.to_string(),
+        None => {
+            if let Some(case) = TestDb::builtin().get(&app) {
+                req.entry = case.entry.clone();
+            }
+        }
+    }
+    if let Some(seed) = line.get(&["seed"]).and_then(Json::as_f64) {
+        req.seed = seed as u64;
+    }
+    if let Some(fb) = line.get(&["func_blocks"]).and_then(Json::as_bool) {
+        req.func_blocks = fb;
+    }
+    if let Some(ms) = line.get(&["deadline_ms"]).and_then(Json::as_f64) {
+        req.deadline_ms = Some(ms as u64);
+    }
+    Ok(req)
+}
+
+/// Serialize one service answer as a response line.
+fn plan_response_json(id: Option<Json>, resp: &PlanResponse) -> Json {
+    let status = match &resp.result {
+        Ok(_) => "ok",
+        Err(_) if resp.is_rejected() => "rejected",
+        Err(e) if e.class == FaultClass::Timeout => "timeout",
+        Err(_) => "error",
+    };
+    let mut fields = vec![
+        ("id", id.unwrap_or(Json::Null)),
+        ("op", str_of("plan")),
+        ("app", str_of(resp.app.clone())),
+        ("status", str_of(status)),
+        ("class", str_of(resp.class.as_str())),
+        ("latency_us", num(resp.latency_us)),
+    ];
+    match &resp.result {
+        Ok(plan) => {
+            fields.push((
+                "best_pattern",
+                Json::Arr(
+                    plan.best_pattern
+                        .iter()
+                        .map(|l| num(u64::from(*l)))
+                        .collect(),
+                ),
+            ));
+            fields.push(("label", str_of(plan.label.clone())));
+            fields.push(("speedup", Json::Num(plan.speedup)));
+            fields.push(("blocks", num(plan.blocks)));
+            fields.push(("cached", Json::Bool(plan.cached)));
+            fields.push(("verified_ok", Json::Bool(plan.verified_ok)));
+            fields.push(("service", str_of(plan.service.as_str())));
+            fields
+                .push(("refresh_ahead", Json::Bool(plan.refresh_ahead)));
+        }
+        Err(e) => {
+            fields.push(("stage", str_of(e.stage.as_str())));
+            fields.push(("fault_class", str_of(e.class.as_str())));
+            fields.push(("message", str_of(e.message.clone())));
+            fields.push(("attempts", num(u64::from(e.attempts))));
+            if let Some(ms) = resp.retry_after_ms {
+                fields.push(("retry_after_ms", num(ms)));
+            }
+        }
+    }
+    Json::obj(fields)
+}
+
+fn error_line(id: Option<Json>, op: &str, message: String) -> Json {
+    Json::obj(vec![
+        ("id", id.unwrap_or(Json::Null)),
+        ("op", str_of(op)),
+        ("status", str_of("error")),
+        ("message", str_of(message)),
+    ])
+}
+
+/// Answer one request line. `stop` is raised by a `shutdown` op; the
+/// response is still written first so the client sees an ack.
+fn handle_line(service: &Service, raw: &str, stop: &AtomicBool) -> Json {
+    let line = match Json::parse(raw) {
+        Ok(v) => v,
+        Err(e) => {
+            return error_line(None, "?", format!("malformed line: {e}"))
+        }
+    };
+    let id = line.get(&["id"]).cloned();
+    let op = line
+        .get(&["op"])
+        .and_then(Json::as_str)
+        .unwrap_or("plan")
+        .to_string();
+    match op.as_str() {
+        "plan" => match plan_request_of(&line) {
+            Ok(req) => plan_response_json(id, &service.request(req)),
+            Err(msg) => error_line(id, "plan", msg),
+        },
+        "stats" => Json::obj(vec![
+            ("id", id.unwrap_or(Json::Null)),
+            ("op", str_of("stats")),
+            ("status", str_of("ok")),
+            ("stats", service.stats().to_json()),
+        ]),
+        "ping" => Json::obj(vec![
+            ("id", id.unwrap_or(Json::Null)),
+            ("op", str_of("ping")),
+            ("status", str_of("ok")),
+        ]),
+        "shutdown" => {
+            stop.store(true, Ordering::SeqCst);
+            Json::obj(vec![
+                ("id", id.unwrap_or(Json::Null)),
+                ("op", str_of("shutdown")),
+                ("status", str_of("ok")),
+            ])
+        }
+        other => {
+            error_line(id, other, format!("unknown op \"{other}\""))
+        }
+    }
+}
+
+fn serve_connection(
+    service: &Service,
+    stream: TcpStream,
+    stop: &AtomicBool,
+    local: std::net::SocketAddr,
+) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for raw in reader.lines() {
+        let Ok(raw) = raw else { break };
+        if raw.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(service, &raw, stop);
+        if writeln!(writer, "{resp}").is_err() {
+            break;
+        }
+        let _ = writer.flush();
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    if stop.load(Ordering::SeqCst) {
+        // A shutdown op arrived on this connection: the accept loop is
+        // blocked in accept(), so nudge it awake to see the flag.
+        let _ = TcpStream::connect(local);
+    }
+}
+
+/// The accept loop around a [`Service`]: binds, spawns one detached
+/// thread per connection, and drains the service when a `shutdown` op
+/// (or [`TcpServer::stop`]) arrives.
+pub struct TcpServer {
+    service: Arc<Service>,
+    local: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (use port `0` for an OS-assigned port — read it back
+    /// with [`TcpServer::local_addr`]) and start accepting.
+    pub fn bind(service: Service, addr: &str) -> Result<TcpServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("local addr")?;
+        let service = Arc::new(service);
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let service = Arc::clone(&service);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("offload-accept".into())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        let service = Arc::clone(&service);
+                        let stop = Arc::clone(&stop);
+                        let _ = std::thread::Builder::new()
+                            .name("offload-conn".into())
+                            .spawn(move || {
+                                serve_connection(
+                                    &service, stream, &stop, local,
+                                )
+                            });
+                    }
+                    service.shutdown();
+                })
+                .map_err(|e| anyhow::anyhow!("spawning accept: {e}"))?
+        };
+        Ok(TcpServer {
+            service,
+            local,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local
+    }
+
+    pub fn service(&self) -> &Service {
+        &self.service
+    }
+
+    /// Raise the stop flag and nudge the accept loop awake. Safe to
+    /// call more than once.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // The listener blocks in accept(); a throwaway connection
+        // unblocks it so the flag is seen.
+        let _ = TcpStream::connect(self.local);
+    }
+
+    /// Block until the accept loop exits (a `shutdown` op arrived, or
+    /// [`TcpServer::stop`] was called) and the service has drained.
+    pub fn wait(mut self) {
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(handle) = self.accept.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// A blocking line-protocol client (what `repro client` wraps).
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr}"))?;
+        let reader =
+            BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(Client {
+            writer: stream,
+            reader,
+        })
+    }
+
+    /// Send one request object, block for its response line.
+    pub fn roundtrip(&mut self, request: &Json) -> Result<Json> {
+        writeln!(self.writer, "{request}").context("writing request")?;
+        self.writer.flush().context("flushing request")?;
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .context("reading response")?;
+        if n == 0 {
+            anyhow::bail!("server closed the connection");
+        }
+        Json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("bad response line: {e}"))
+    }
+
+    /// Convenience: a full plan request for `app`.
+    pub fn plan(
+        &mut self,
+        id: u64,
+        app: &str,
+        source: Option<&str>,
+        deadline_ms: Option<u64>,
+    ) -> Result<Json> {
+        let mut fields = vec![
+            ("id", num(id)),
+            ("op", str_of("plan")),
+            ("app", str_of(app)),
+        ];
+        if let Some(src) = source {
+            fields.push(("source", str_of(src)));
+        }
+        if let Some(ms) = deadline_ms {
+            fields.push(("deadline_ms", num(ms)));
+        }
+        self.roundtrip(&Json::obj(fields))
+    }
+
+    pub fn stats(&mut self, id: u64) -> Result<Json> {
+        self.roundtrip(&Json::obj(vec![
+            ("id", num(id)),
+            ("op", str_of("stats")),
+        ]))
+    }
+
+    pub fn ping(&mut self, id: u64) -> Result<Json> {
+        self.roundtrip(&Json::obj(vec![
+            ("id", num(id)),
+            ("op", str_of("ping")),
+        ]))
+    }
+
+    pub fn shutdown(&mut self, id: u64) -> Result<Json> {
+        self.roundtrip(&Json::obj(vec![
+            ("id", num(id)),
+            ("op", str_of("shutdown")),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envadapt::ServiceLevel;
+    use crate::search::{FaultClass, OffloadError, Stage};
+    use crate::service::{PlanResponse, ServeClass, ServedPlan};
+
+    fn served() -> PlanResponse {
+        PlanResponse {
+            app: "demo".into(),
+            class: ServeClass::Hit,
+            result: Ok(ServedPlan {
+                best_pattern: vec![2, 3],
+                label: "L2+L3".into(),
+                speedup: 4.0,
+                blocks: 0,
+                cached: true,
+                verified_ok: true,
+                service: ServiceLevel::Full,
+                refresh_ahead: false,
+            }),
+            retry_after_ms: None,
+            latency_us: 12,
+        }
+    }
+
+    #[test]
+    fn plan_response_serializes_ok() {
+        let j = plan_response_json(Some(Json::Num(7.0)), &served());
+        assert_eq!(j.get(&["status"]).and_then(Json::as_str), Some("ok"));
+        assert_eq!(j.get(&["class"]).and_then(Json::as_str), Some("hit"));
+        assert_eq!(j.get(&["id"]).and_then(Json::as_f64), Some(7.0));
+        assert_eq!(
+            j.get(&["speedup"]).and_then(Json::as_f64),
+            Some(4.0)
+        );
+        let loops = j.get(&["best_pattern"]).and_then(Json::as_arr);
+        assert_eq!(loops.map(|a| a.len()), Some(2));
+    }
+
+    #[test]
+    fn reject_and_timeout_get_distinct_statuses() {
+        let mut resp = served();
+        resp.class = ServeClass::Miss;
+        resp.result = Err(OffloadError::new(
+            Stage::Queue,
+            FaultClass::Transient,
+            "queue full",
+        ));
+        resp.retry_after_ms = Some(120);
+        let j = plan_response_json(None, &resp);
+        assert_eq!(
+            j.get(&["status"]).and_then(Json::as_str),
+            Some("rejected")
+        );
+        assert_eq!(
+            j.get(&["retry_after_ms"]).and_then(Json::as_f64),
+            Some(120.0)
+        );
+        resp.result = Err(OffloadError::new(
+            Stage::Queue,
+            FaultClass::Timeout,
+            "deadline expired",
+        ));
+        resp.retry_after_ms = None;
+        let j = plan_response_json(None, &resp);
+        assert_eq!(
+            j.get(&["status"]).and_then(Json::as_str),
+            Some("timeout")
+        );
+    }
+
+    #[test]
+    fn plan_request_resolves_bundled_workloads() {
+        let line = Json::parse(r#"{"app": "tdfir"}"#).unwrap();
+        let req = plan_request_of(&line).unwrap();
+        assert_eq!(req.app, "tdfir");
+        assert!(!req.source.is_empty());
+        // Entry comes from the registered test case, not the default.
+        assert_eq!(
+            req.entry,
+            TestDb::builtin().get("tdfir").unwrap().entry
+        );
+        let bad = Json::parse(r#"{"app": "nosuch"}"#).unwrap();
+        assert!(plan_request_of(&bad).is_err());
+    }
+
+    #[test]
+    fn malformed_lines_answer_with_error_status() {
+        let j = error_line(None, "?", "malformed line: x".into());
+        assert_eq!(
+            j.get(&["status"]).and_then(Json::as_str),
+            Some("error")
+        );
+    }
+}

@@ -1,0 +1,831 @@
+//! The resident [`Service`]: shared pattern index, admission queue,
+//! worker pool, in-flight coalescing, refresh-ahead.
+//!
+//! Request lifecycle (see ARCHITECTURE.md "Service tier" for the full
+//! diagram):
+//!
+//! 1. The caller thread computes the request's
+//!    [`ReuseKey`](crate::envadapt::ReuseKey) and probes the in-memory
+//!    [`PatternIndex`] — a fresh-enough match is answered right there
+//!    (**hit**, microseconds, never queued).
+//! 2. A miss coalesces onto an identical in-flight solve when one
+//!    exists; otherwise it must win a queue slot — a full queue is an
+//!    *immediate* typed reject (`stage=queue, class=transient`) with a
+//!    `retry_after_ms` hint, not a stall.
+//! 3. A worker pops the job, re-checks waiter deadlines (expired work
+//!    is answered with a typed timeout and never solved), tightens the
+//!    retry policy's stage deadline to the remaining wall budget, and
+//!    runs the existing [`Batch`] ladder. The result is broadcast to
+//!    every coalesced waiter and pulled into the shared index so the
+//!    next identical request is a hit.
+//!
+//! Waiting callers enforce their own deadline with `recv_timeout`, so a
+//! deadline expiry returns a typed error even if the worker pool is
+//! wedged.
+
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::envadapt::patterndb::unix_now;
+use crate::envadapt::{
+    Batch, OffloadRequest, PatternIndex, Pipeline, Plan, ReuseKey,
+    ServiceLevel, StoredPattern,
+};
+use crate::search::{FaultClass, OffloadError, RetryPolicy, SimClock, Stage};
+
+use super::queue::{BoundedQueue, PushError};
+use super::stats::{ServiceStats, StatsSnapshot};
+use super::{
+    PlanRequest, PlanResponse, ServeClass, ServedPlan, ServiceConfig,
+};
+
+fn elapsed_us(start: Instant) -> u64 {
+    start.elapsed().as_micros().min(u64::MAX as u128) as u64
+}
+
+/// Why a job sits in the queue.
+enum JobKind {
+    /// At least one caller is blocked on the answer.
+    Foreground,
+    /// Refresh-ahead re-search; nobody waits, the result just lands in
+    /// the index.
+    Refresh,
+}
+
+/// One blocked caller of [`Service::request`].
+struct Waiter {
+    tx: mpsc::Sender<PlanResponse>,
+    deadline: Option<Instant>,
+}
+
+/// A queued miss.
+struct Job {
+    key: ReuseKey,
+    req: OffloadRequest,
+    enqueued: Instant,
+    kind: JobKind,
+}
+
+struct Inner {
+    cfg: ServiceConfig,
+    backend: Box<dyn crate::search::Backend + Send + Sync>,
+    index: Option<PatternIndex>,
+    queue: BoundedQueue<Job>,
+    /// Keys currently queued or being solved, with everyone waiting on
+    /// each. Presence in this map is what coalescing checks.
+    inflight: Mutex<HashMap<ReuseKey, Vec<Waiter>>>,
+    stats: ServiceStats,
+    clock: SimClock,
+}
+
+/// What an index probe found.
+enum Probe {
+    Hit {
+        rec: StoredPattern,
+        /// Inside the refresh-ahead window: serve, but also re-search.
+        refresh: bool,
+    },
+    Miss,
+}
+
+impl Inner {
+    /// A pipeline over the service's backend/config, optionally wrapped
+    /// in a retry policy sharing the service clock. Workers build one
+    /// per job; the hit path builds one only to derive reuse keys.
+    fn pipeline(
+        &self,
+        policy: Option<RetryPolicy>,
+    ) -> Result<Pipeline<'_>, OffloadError> {
+        let mut p =
+            Pipeline::new(self.cfg.search.clone(), self.backend.as_ref())
+                .map_err(|e| e.to_offload_error())?;
+        if let Some(dir) = &self.cfg.pattern_db {
+            p = p.with_pattern_db(dir);
+        }
+        if let Some(policy) = policy {
+            p = p
+                .with_retry(policy)
+                .map_err(|e| e.to_offload_error())?
+                .with_clock(self.clock.clone());
+        }
+        Ok(p)
+    }
+
+    fn reuse_key(
+        &self,
+        req: &OffloadRequest,
+    ) -> Result<ReuseKey, OffloadError> {
+        Ok(self.pipeline(None)?.reuse_key_for(req))
+    }
+
+    /// Probe the index for a servable record. `count` feeds the index
+    /// hit/miss counters; the coalescing double-check passes `false` so
+    /// a request is never counted twice.
+    fn probe(&self, app: &str, key: &ReuseKey, count: bool) -> Probe {
+        let Some(idx) = &self.index else {
+            return Probe::Miss;
+        };
+        let rec = if count {
+            idx.lookup(app, key)
+        } else {
+            idx.get(app).filter(|r| r.matches(key))
+        };
+        let Some(rec) = rec else {
+            return Probe::Miss;
+        };
+        match self.cfg.max_age {
+            None => Probe::Hit {
+                rec,
+                refresh: false,
+            },
+            Some(max_age) => {
+                let max_s = max_age.as_secs();
+                match rec.age_secs(unix_now()) {
+                    Some(age) if age <= max_s => {
+                        let window =
+                            (max_s as f64 * self.cfg.refresh_ahead) as u64;
+                        Probe::Hit {
+                            rec,
+                            refresh: age > window,
+                        }
+                    }
+                    // Unstamped records count as infinitely old, same
+                    // as the pipeline's max-age policy.
+                    _ => Probe::Miss,
+                }
+            }
+        }
+    }
+
+    /// Backlog-derived wait suggestion for a rejected caller.
+    fn retry_after_ms(&self) -> u64 {
+        let backlog = self.queue.len() as f64 + 1.0;
+        let workers = self.cfg.workers.max(1) as f64;
+        let ms = backlog * self.stats.avg_solve_ms() / workers;
+        (ms.ceil() as u64).max(1)
+    }
+
+    /// Best-effort: enqueue a background re-search for `key` unless one
+    /// is already in flight. A full queue drops the refresh silently —
+    /// the caller was already served.
+    fn schedule_refresh(&self, key: &ReuseKey, req: &OffloadRequest) {
+        {
+            let mut fl = self
+                .inflight
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            if fl.contains_key(key) {
+                return;
+            }
+            fl.insert(key.clone(), Vec::new());
+        }
+        let job = Job {
+            key: key.clone(),
+            req: req.clone(),
+            enqueued: Instant::now(),
+            kind: JobKind::Refresh,
+        };
+        match self.queue.try_push(job) {
+            Ok(_) => self.stats.refresh_scheduled(),
+            Err(_) => {
+                self.inflight
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                    .remove(key);
+                self.stats.refresh_dropped();
+            }
+        }
+    }
+
+    /// Answer (and drop) every waiter registered under `key`.
+    fn respond(
+        &self,
+        app: &str,
+        key: &ReuseKey,
+        class: ServeClass,
+        result: Result<ServedPlan, OffloadError>,
+    ) {
+        let waiters = self
+            .inflight
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .remove(key)
+            .unwrap_or_default();
+        for w in waiters {
+            // A gone receiver just means that caller timed out already.
+            let _ = w.tx.send(PlanResponse {
+                app: app.to_string(),
+                class,
+                result: result.clone(),
+                retry_after_ms: None,
+                // The caller stamps its own submit-to-answer latency.
+                latency_us: 0,
+            });
+        }
+    }
+
+    /// The effective wall deadline for a queued job: the *latest* among
+    /// its waiters if every one is bounded, `None` if any waiter (or a
+    /// refresh job, which has none) is unbounded.
+    fn job_deadline(&self, key: &ReuseKey) -> Option<Instant> {
+        let fl = self
+            .inflight
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let waiters = fl.get(key)?;
+        if waiters.is_empty() {
+            return None;
+        }
+        let mut latest = None;
+        for w in waiters {
+            let d = w.deadline?;
+            latest = Some(match latest {
+                None => d,
+                Some(prev) if d > prev => d,
+                Some(prev) => prev,
+            });
+        }
+        latest
+    }
+
+    /// The retry policy a worker solve runs under: the configured one
+    /// (or default, when a deadline forces one), with `stage_deadline_s`
+    /// clamped to the remaining wall budget. This is the PR 6 seam — a
+    /// simulated hung build burns the request's budget and trips its
+    /// deadline instead of wedging a worker forever.
+    fn effective_policy(
+        &self,
+        deadline: Option<Instant>,
+    ) -> Option<RetryPolicy> {
+        let remaining_s = deadline.map(|d| {
+            d.saturating_duration_since(Instant::now())
+                .as_secs_f64()
+                .max(0.001)
+        });
+        if self.cfg.retry.is_none() && remaining_s.is_none() {
+            return None;
+        }
+        let mut policy = self.cfg.retry.clone().unwrap_or_default();
+        if let Some(rem) = remaining_s {
+            policy.stage_deadline_s =
+                Some(policy.stage_deadline_s.map_or(rem, |s| s.min(rem)));
+        }
+        Some(policy)
+    }
+
+    /// Run one miss solve through the batch ladder and shape the
+    /// outcome.
+    fn run_ladder(
+        &self,
+        job: &Job,
+        policy: Option<RetryPolicy>,
+    ) -> Result<ServedPlan, OffloadError> {
+        let pipeline = self.pipeline(policy)?;
+        let report = Batch::new(&pipeline).with(job.req.clone()).run();
+        let Some(entry) = report.entries.into_iter().next() else {
+            return Err(OffloadError::new(
+                Stage::Select,
+                FaultClass::Permanent,
+                "batch cycle produced no entry",
+            ));
+        };
+        match entry.plan {
+            Some(plan) => Ok(ServedPlan {
+                best_pattern: plan.best_loops(),
+                label: plan.label(),
+                speedup: plan.speedup(),
+                blocks: plan.block_count() as u64,
+                cached: plan.is_cached(),
+                verified_ok: plan.verified_ok(),
+                service: entry.service,
+                refresh_ahead: false,
+            }),
+            None => Err(entry
+                .outcomes
+                .into_iter()
+                .find_map(|o| o.error)
+                .unwrap_or_else(|| {
+                    OffloadError::new(
+                        Stage::Analysis,
+                        FaultClass::Permanent,
+                        entry.error.unwrap_or_else(|| {
+                            "request could not be served".into()
+                        }),
+                    )
+                })),
+        }
+    }
+
+    fn serve_job(&self, job: Job) {
+        let deadline = match job.kind {
+            JobKind::Foreground => self.job_deadline(&job.key),
+            JobKind::Refresh => None,
+        };
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                // Every waiter's budget expired while the job sat
+                // queued: answer with a typed timeout, skip the solve.
+                let waited = job.enqueued.elapsed().as_millis();
+                let err = OffloadError::new(
+                    Stage::Queue,
+                    FaultClass::Timeout,
+                    format!(
+                        "deadline expired after {waited}ms in queue; \
+                         solve skipped"
+                    ),
+                );
+                self.respond(
+                    &job.req.app,
+                    &job.key,
+                    ServeClass::Miss,
+                    Err(err),
+                );
+                return;
+            }
+        }
+        let policy = self.effective_policy(deadline);
+        let t0 = Instant::now();
+        let result = self.run_ladder(&job, policy);
+        self.stats.solve(elapsed_us(t0), result.is_err());
+        if let Ok(plan) = &result {
+            if plan.service != ServiceLevel::Full {
+                self.stats.degraded();
+            }
+        }
+        // The pipeline wrote the record to disk (pattern DB configured);
+        // pull it into the shared index before answering so the next
+        // identical request is a hit.
+        if let Some(idx) = &self.index {
+            let _ = idx.refresh(&job.req.app);
+        }
+        if matches!(job.kind, JobKind::Refresh) {
+            self.stats.refresh_done();
+        }
+        self.respond(&job.req.app, &job.key, ServeClass::Miss, result);
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    while let Some(job) = inner.queue.pop() {
+        inner.serve_job(job);
+    }
+}
+
+/// The resident offload service. See the [module docs](self) and
+/// [`crate::service`] for the design; construct with
+/// [`Service::start`], submit with [`Service::request`], observe with
+/// [`Service::stats`], stop with [`Service::shutdown`] (also run on
+/// drop).
+pub struct Service {
+    inner: Arc<Inner>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Service {
+    /// Validate the config, build its bundled backend, and start the
+    /// worker pool.
+    pub fn start(cfg: ServiceConfig) -> Result<Service> {
+        let backend = cfg.backend.build();
+        Service::with_backend(cfg, backend)
+    }
+
+    /// Like [`Service::start`] but with a caller-supplied backend — the
+    /// test seam for instrumented backends (gated measures, fault
+    /// injection).
+    pub fn with_backend(
+        cfg: ServiceConfig,
+        backend: Box<dyn crate::search::Backend + Send + Sync>,
+    ) -> Result<Service> {
+        cfg.validate()
+            .map_err(|e| anyhow::anyhow!("invalid service config: {e}"))?;
+        let index = match &cfg.pattern_db {
+            Some(dir) => Some(PatternIndex::open(dir)?),
+            None => None,
+        };
+        let queue = BoundedQueue::new(cfg.queue_cap);
+        let worker_count = cfg.workers;
+        let inner = Arc::new(Inner {
+            cfg,
+            backend,
+            index,
+            queue,
+            inflight: Mutex::new(HashMap::new()),
+            stats: ServiceStats::new(),
+            clock: SimClock::new(),
+        });
+        let mut handles = Vec::with_capacity(worker_count);
+        for i in 0..worker_count {
+            let inner = Arc::clone(&inner);
+            let handle = std::thread::Builder::new()
+                .name(format!("offload-worker-{i}"))
+                .spawn(move || worker_loop(inner))
+                .map_err(|e| {
+                    anyhow::anyhow!("spawning worker {i}: {e}")
+                })?;
+            handles.push(handle);
+        }
+        Ok(Service {
+            inner,
+            workers: Mutex::new(handles),
+        })
+    }
+
+    /// Submit one request and block until it is answered, rejected, or
+    /// its deadline expires. Always returns — every failure mode is a
+    /// typed [`OffloadError`] in the response.
+    pub fn request(&self, preq: PlanRequest) -> PlanResponse {
+        let start = Instant::now();
+        let inner = &self.inner;
+        inner.stats.request();
+        let app = preq.app.clone();
+        let fail = |result: OffloadError| PlanResponse {
+            app: preq.app.clone(),
+            class: ServeClass::Miss,
+            result: Err(result),
+            retry_after_ms: None,
+            latency_us: elapsed_us(start),
+        };
+
+        let oreq = match OffloadRequest::builder(preq.app.as_str())
+            .source(preq.source.as_str())
+            .entry(preq.entry.as_str())
+            .seed(preq.seed)
+            .func_blocks(preq.func_blocks)
+            .build()
+        {
+            Ok(r) => r,
+            Err(e) => return fail(e.to_offload_error()),
+        };
+        let key = match inner.reuse_key(&oreq) {
+            Ok(k) => k,
+            Err(e) => return fail(e),
+        };
+
+        // Hit path: answered on this thread, never queued.
+        if let Probe::Hit { rec, refresh } = inner.probe(&app, &key, true)
+        {
+            if refresh {
+                inner.schedule_refresh(&key, &oreq);
+            }
+            let latency_us = elapsed_us(start);
+            inner.stats.hit(latency_us);
+            return PlanResponse {
+                app,
+                class: ServeClass::Hit,
+                result: Ok(served_from_record(rec, refresh)),
+                retry_after_ms: None,
+                latency_us,
+            };
+        }
+
+        // Miss path: coalesce or win a queue slot.
+        let deadline = preq
+            .deadline_ms
+            .map(|ms| start + Duration::from_millis(ms));
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut fl = inner
+                .inflight
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            if let Some(waiters) = fl.get_mut(&key) {
+                waiters.push(Waiter { tx, deadline });
+                inner.stats.coalesced();
+            } else {
+                // Double-check the index under the in-flight lock: a
+                // worker may have finished this key between the probe
+                // above and now (it removes the in-flight entry before
+                // we can see its index refresh, so no-entry + indexed
+                // record means "just completed").
+                if let Probe::Hit { rec, refresh } =
+                    inner.probe(&app, &key, false)
+                {
+                    drop(fl);
+                    if refresh {
+                        inner.schedule_refresh(&key, &oreq);
+                    }
+                    let latency_us = elapsed_us(start);
+                    inner.stats.hit(latency_us);
+                    return PlanResponse {
+                        app,
+                        class: ServeClass::Hit,
+                        result: Ok(served_from_record(rec, refresh)),
+                        retry_after_ms: None,
+                        latency_us,
+                    };
+                }
+                fl.insert(key.clone(), vec![Waiter { tx, deadline }]);
+                drop(fl);
+                let job = Job {
+                    key: key.clone(),
+                    req: oreq,
+                    enqueued: start,
+                    kind: JobKind::Foreground,
+                };
+                if let Err(err) = inner.queue.try_push(job) {
+                    inner
+                        .inflight
+                        .lock()
+                        .unwrap_or_else(|p| p.into_inner())
+                        .remove(&key);
+                    inner.stats.rejected();
+                    let (msg, hint) = match err {
+                        PushError::Full(_) => {
+                            let hint = inner.retry_after_ms();
+                            (
+                                format!(
+                                    "admission queue full ({} slots); \
+                                     retry in ~{hint}ms",
+                                    inner.queue.capacity()
+                                ),
+                                Some(hint),
+                            )
+                        }
+                        PushError::Closed(_) => (
+                            "service is draining; request not admitted"
+                                .to_string(),
+                            None,
+                        ),
+                    };
+                    return PlanResponse {
+                        app,
+                        class: ServeClass::Miss,
+                        result: Err(OffloadError::new(
+                            Stage::Queue,
+                            FaultClass::Transient,
+                            msg,
+                        )),
+                        retry_after_ms: hint,
+                        latency_us: elapsed_us(start),
+                    };
+                }
+            }
+        }
+
+        // Wait for the worker broadcast, bounded by our own deadline so
+        // a wedged pool can never hang the caller.
+        let received = match deadline {
+            None => rx.recv().ok(),
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    rx.try_recv().ok()
+                } else {
+                    rx.recv_timeout(d - now).ok()
+                }
+            }
+        };
+        match received {
+            Some(mut resp) => {
+                resp.latency_us = elapsed_us(start);
+                match &resp.result {
+                    Ok(_) => inner.stats.miss(resp.latency_us),
+                    Err(e) if e.class == FaultClass::Timeout => {
+                        inner.stats.timeout()
+                    }
+                    // Solve failures are already counted by the worker
+                    // (solve_errors); rejects never reach this channel.
+                    Err(_) => {}
+                }
+                resp
+            }
+            None if deadline.is_some() => {
+                inner.stats.timeout();
+                let ms = preq.deadline_ms.unwrap_or(0);
+                PlanResponse {
+                    app,
+                    class: ServeClass::Miss,
+                    result: Err(OffloadError::new(
+                        Stage::Queue,
+                        FaultClass::Timeout,
+                        format!(
+                            "deadline of {ms}ms expired after {}ms",
+                            start.elapsed().as_millis()
+                        ),
+                    )),
+                    retry_after_ms: None,
+                    latency_us: elapsed_us(start),
+                }
+            }
+            None => {
+                // No deadline and a disconnected channel: the service
+                // stopped under us. Typed, not a hang.
+                inner.stats.rejected();
+                PlanResponse {
+                    app,
+                    class: ServeClass::Miss,
+                    result: Err(OffloadError::new(
+                        Stage::Queue,
+                        FaultClass::Transient,
+                        "service stopped before the request completed",
+                    )),
+                    retry_after_ms: None,
+                    latency_us: elapsed_us(start),
+                }
+            }
+        }
+    }
+
+    /// Point-in-time counters and latency quantiles.
+    pub fn stats(&self) -> StatsSnapshot {
+        let inner = &self.inner;
+        let (records, index_hits, index_misses) = match &inner.index {
+            Some(idx) => {
+                (idx.len(), idx.hit_count(), idx.miss_count())
+            }
+            None => (0, 0, 0),
+        };
+        let inflight = inner
+            .inflight
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .len();
+        inner.stats.snapshot(
+            inner.queue.len(),
+            inflight,
+            records,
+            index_hits,
+            index_misses,
+        )
+    }
+
+    /// The virtual clock worker retry policies run on — tests advance
+    /// it to burn simulated backoff/hang time.
+    pub fn clock(&self) -> SimClock {
+        self.inner.clock.clone()
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.inner.cfg
+    }
+
+    /// Graceful drain: stop admitting, let workers finish everything
+    /// already queued, join them. Anything still queued afterwards
+    /// (possible only with zero workers) is answered with a typed
+    /// reject so no caller is left hanging. Idempotent; also run on
+    /// drop.
+    pub fn shutdown(&self) {
+        self.inner.queue.close();
+        let handles: Vec<_> = self
+            .workers
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .drain(..)
+            .collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        while let Some(job) = self.inner.queue.pop() {
+            let err = OffloadError::new(
+                Stage::Queue,
+                FaultClass::Transient,
+                "service shut down before the request was served",
+            );
+            self.inner.respond(
+                &job.req.app,
+                &job.key,
+                ServeClass::Miss,
+                Err(err),
+            );
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Shape an indexed record into the response plan (service level Full —
+/// a hit is the ladder's best case by construction).
+fn served_from_record(rec: StoredPattern, refresh: bool) -> ServedPlan {
+    let verified_ok = rec.verified != Some(false);
+    let speedup = rec.speedup;
+    let blocks = rec.blocks;
+    let plan = Plan::Cached(rec);
+    ServedPlan {
+        best_pattern: plan.best_loops(),
+        label: plan.label(),
+        speedup,
+        blocks,
+        cached: true,
+        verified_ok,
+        service: ServiceLevel::Full,
+        refresh_ahead: refresh,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::BackendKind;
+    use crate::util::tempdir::TempDir;
+
+    const TINY: &str = "
+#define N 128
+float a[N]; float out[N];
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.001 - 0.5; }
+    for (int i = 0; i < N; i++) { out[i] = sin(a[i]) * cos(a[i]); }
+    return 0;
+}";
+
+    #[test]
+    fn invalid_config_is_refused_at_start() {
+        let cfg = ServiceConfig {
+            queue_cap: 0,
+            ..ServiceConfig::default()
+        };
+        assert!(Service::start(cfg).is_err());
+        let cfg = ServiceConfig {
+            refresh_ahead: 1.5,
+            ..ServiceConfig::default()
+        };
+        assert!(Service::start(cfg).is_err());
+    }
+
+    #[test]
+    fn cold_solve_then_warm_hit() {
+        let dir = TempDir::new("svc-warm").unwrap();
+        let cfg = ServiceConfig {
+            pattern_db: Some(dir.path().to_path_buf()),
+            workers: 1,
+            ..ServiceConfig::default()
+        };
+        let svc = Service::start(cfg).unwrap();
+        let cold = svc.request(PlanRequest::new("tiny", TINY));
+        assert!(cold.ok(), "cold solve failed: {:?}", cold.result);
+        assert_eq!(cold.class, ServeClass::Miss);
+        let warm = svc.request(PlanRequest::new("tiny", TINY));
+        assert!(warm.is_hit(), "expected a hit: {:?}", warm.result);
+        let cold_plan = cold.result.unwrap();
+        let warm_plan = warm.result.unwrap();
+        assert_eq!(cold_plan.best_pattern, warm_plan.best_pattern);
+        assert!(warm_plan.cached);
+        let snap = svc.stats();
+        assert_eq!(snap.hits, 1);
+        assert_eq!(snap.misses, 1);
+        assert_eq!(snap.solves, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn zero_workers_fill_queue_then_typed_reject() {
+        let cfg = ServiceConfig {
+            workers: 0,
+            queue_cap: 1,
+            backend: BackendKind::Cpu,
+            ..ServiceConfig::default()
+        };
+        let svc = Service::start(cfg).unwrap();
+        // Two distinct keys, both with an expired budget so the callers
+        // return immediately while the jobs stay queued.
+        let mut a = PlanRequest::new("a", TINY);
+        a.deadline_ms = Some(0);
+        let ra = svc.request(a);
+        assert!(ra.is_timeout(), "expected timeout: {:?}", ra.result);
+        let mut b = PlanRequest::new("b", TINY);
+        b.entry = "other".into();
+        b.deadline_ms = Some(0);
+        let rb = svc.request(b);
+        assert!(
+            rb.is_rejected(),
+            "expected queue-full reject: {:?}",
+            rb.result
+        );
+        assert!(rb.retry_after_ms.is_some());
+        assert_eq!(svc.stats().rejected, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_answers_still_queued_jobs() {
+        let cfg = ServiceConfig {
+            workers: 0,
+            queue_cap: 4,
+            backend: BackendKind::Cpu,
+            ..ServiceConfig::default()
+        };
+        let svc = Arc::new(Service::start(cfg).unwrap());
+        let svc2 = Arc::clone(&svc);
+        let waiter = std::thread::spawn(move || {
+            svc2.request(PlanRequest::new("queued", TINY))
+        });
+        // Wait until the job is admitted, then drain.
+        while svc.stats().queue_depth == 0 {
+            std::thread::yield_now();
+        }
+        svc.shutdown();
+        let resp = waiter.join().unwrap();
+        assert!(
+            resp.is_rejected(),
+            "expected drain reject: {:?}",
+            resp.result
+        );
+    }
+}

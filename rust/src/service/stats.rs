@@ -1,0 +1,343 @@
+//! Service telemetry: lock-free counters plus per-class latency rings
+//! for p50/p99.
+//!
+//! Latencies land in a fixed-size ring (most recent [`RING_CAP`]
+//! samples per class), so quantiles track *current* behavior under
+//! sustained traffic instead of averaging over the process lifetime,
+//! and memory stays bounded at any request rate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Samples kept per latency class.
+const RING_CAP: usize = 8192;
+
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<u64>,
+    next: usize,
+    total: u64,
+}
+
+impl Ring {
+    fn push(&mut self, us: u64) {
+        if self.buf.len() < RING_CAP {
+            self.buf.push(us);
+        } else {
+            self.buf[self.next] = us;
+        }
+        self.next = (self.next + 1) % RING_CAP;
+        self.total += 1;
+    }
+
+    fn quantiles(&self) -> (u64, u64, u64) {
+        if self.buf.is_empty() {
+            return (0, 0, 0);
+        }
+        let mut sorted = self.buf.clone();
+        sorted.sort_unstable();
+        (
+            percentile(&sorted, 0.50),
+            percentile(&sorted, 0.99),
+            *sorted.last().unwrap(),
+        )
+    }
+}
+
+/// Nearest-rank percentile over a sorted slice.
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    let rank = ((sorted.len() as f64) * q).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Shared, thread-safe service counters. One instance lives in the
+/// service; every worker and caller thread updates it directly.
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    requests: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    rejected: AtomicU64,
+    timeouts: AtomicU64,
+    degraded: AtomicU64,
+    solves: AtomicU64,
+    solve_errors: AtomicU64,
+    solve_us_total: AtomicU64,
+    refreshes_scheduled: AtomicU64,
+    refreshes_dropped: AtomicU64,
+    refreshes_done: AtomicU64,
+    hit_latency: Mutex<Ring>,
+    miss_latency: Mutex<Ring>,
+}
+
+impl ServiceStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn request(&self) {
+        Self::bump(&self.requests);
+    }
+
+    pub(crate) fn hit(&self, latency_us: u64) {
+        Self::bump(&self.hits);
+        self.hit_latency
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(latency_us);
+    }
+
+    pub(crate) fn miss(&self, latency_us: u64) {
+        Self::bump(&self.misses);
+        self.miss_latency
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push(latency_us);
+    }
+
+    pub(crate) fn coalesced(&self) {
+        Self::bump(&self.coalesced);
+    }
+
+    pub(crate) fn rejected(&self) {
+        Self::bump(&self.rejected);
+    }
+
+    pub(crate) fn timeout(&self) {
+        Self::bump(&self.timeouts);
+    }
+
+    pub(crate) fn degraded(&self) {
+        Self::bump(&self.degraded);
+    }
+
+    pub(crate) fn solve(&self, solve_us: u64, failed: bool) {
+        Self::bump(&self.solves);
+        self.solve_us_total.fetch_add(solve_us, Ordering::Relaxed);
+        if failed {
+            Self::bump(&self.solve_errors);
+        }
+    }
+
+    pub(crate) fn refresh_scheduled(&self) {
+        Self::bump(&self.refreshes_scheduled);
+    }
+
+    pub(crate) fn refresh_dropped(&self) {
+        Self::bump(&self.refreshes_dropped);
+    }
+
+    pub(crate) fn refresh_done(&self) {
+        Self::bump(&self.refreshes_done);
+    }
+
+    /// Mean worker solve time so far, milliseconds (the retry-hint
+    /// input). A fallback guess before any solve has completed.
+    pub(crate) fn avg_solve_ms(&self) -> f64 {
+        let solves = self.solves.load(Ordering::Relaxed);
+        if solves == 0 {
+            return 50.0;
+        }
+        let total = self.solve_us_total.load(Ordering::Relaxed);
+        total as f64 / solves as f64 / 1000.0
+    }
+
+    /// Point-in-time copy of every counter and quantile. Queue/index
+    /// figures are passed in by the service, which owns those.
+    pub fn snapshot(
+        &self,
+        queue_depth: usize,
+        inflight: usize,
+        index_records: usize,
+        index_hits: u64,
+        index_misses: u64,
+    ) -> StatsSnapshot {
+        let (hit_p50_us, hit_p99_us, hit_max_us) = self
+            .hit_latency
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .quantiles();
+        let (miss_p50_us, miss_p99_us, miss_max_us) = self
+            .miss_latency
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .quantiles();
+        let load = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        StatsSnapshot {
+            requests: load(&self.requests),
+            hits: load(&self.hits),
+            misses: load(&self.misses),
+            coalesced: load(&self.coalesced),
+            rejected: load(&self.rejected),
+            timeouts: load(&self.timeouts),
+            degraded: load(&self.degraded),
+            solves: load(&self.solves),
+            solve_errors: load(&self.solve_errors),
+            refreshes_scheduled: load(&self.refreshes_scheduled),
+            refreshes_dropped: load(&self.refreshes_dropped),
+            refreshes_done: load(&self.refreshes_done),
+            avg_solve_ms: self.avg_solve_ms(),
+            queue_depth,
+            inflight,
+            index_records,
+            index_hits,
+            index_misses,
+            hit_p50_us,
+            hit_p99_us,
+            hit_max_us,
+            miss_p50_us,
+            miss_p99_us,
+            miss_max_us,
+        }
+    }
+}
+
+/// What [`ServiceStats::snapshot`] returns — the `stats` endpoint
+/// payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    /// Served synchronously from the in-memory index.
+    pub hits: u64,
+    /// Went through the worker pool and were answered (any rung).
+    pub misses: u64,
+    /// Attached to an already-in-flight identical solve.
+    pub coalesced: u64,
+    /// Refused at admission (queue full or draining).
+    pub rejected: u64,
+    /// Expired deadlines (queued or waiting).
+    pub timeouts: u64,
+    /// Worker answers below full service.
+    pub degraded: u64,
+    /// Worker solves completed (foreground + refresh).
+    pub solves: u64,
+    /// Worker solves that produced no plan at all.
+    pub solve_errors: u64,
+    pub refreshes_scheduled: u64,
+    pub refreshes_dropped: u64,
+    pub refreshes_done: u64,
+    pub avg_solve_ms: f64,
+    pub queue_depth: usize,
+    /// Distinct reuse keys currently being solved.
+    pub inflight: usize,
+    pub index_records: usize,
+    /// Key-match hits at the index (a superset of served hits: an
+    /// expired record matches the key but is re-searched anyway).
+    pub index_hits: u64,
+    pub index_misses: u64,
+    pub hit_p50_us: u64,
+    pub hit_p99_us: u64,
+    pub hit_max_us: u64,
+    pub miss_p50_us: u64,
+    pub miss_p99_us: u64,
+    pub miss_max_us: u64,
+}
+
+impl StatsSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("coalesced", Json::Num(self.coalesced as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("timeouts", Json::Num(self.timeouts as f64)),
+            ("degraded", Json::Num(self.degraded as f64)),
+            ("solves", Json::Num(self.solves as f64)),
+            ("solve_errors", Json::Num(self.solve_errors as f64)),
+            (
+                "refreshes_scheduled",
+                Json::Num(self.refreshes_scheduled as f64),
+            ),
+            (
+                "refreshes_dropped",
+                Json::Num(self.refreshes_dropped as f64),
+            ),
+            ("refreshes_done", Json::Num(self.refreshes_done as f64)),
+            ("avg_solve_ms", Json::Num(self.avg_solve_ms)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("inflight", Json::Num(self.inflight as f64)),
+            ("index_records", Json::Num(self.index_records as f64)),
+            ("index_hits", Json::Num(self.index_hits as f64)),
+            ("index_misses", Json::Num(self.index_misses as f64)),
+            ("hit_p50_us", Json::Num(self.hit_p50_us as f64)),
+            ("hit_p99_us", Json::Num(self.hit_p99_us as f64)),
+            ("hit_max_us", Json::Num(self.hit_max_us as f64)),
+            ("miss_p50_us", Json::Num(self.miss_p50_us as f64)),
+            ("miss_p99_us", Json::Num(self.miss_p99_us as f64)),
+            ("miss_max_us", Json::Num(self.miss_max_us as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_quantiles_track_recent_samples() {
+        let mut r = Ring::default();
+        for us in 1..=100u64 {
+            r.push(us);
+        }
+        let (p50, p99, max) = r.quantiles();
+        assert_eq!(p50, 50);
+        assert_eq!(p99, 99);
+        assert_eq!(max, 100);
+    }
+
+    #[test]
+    fn ring_wraps_at_capacity() {
+        let mut r = Ring::default();
+        for _ in 0..RING_CAP {
+            r.push(1);
+        }
+        // A full ring of 1s, then overwrite everything with 1000s.
+        for _ in 0..RING_CAP {
+            r.push(1000);
+        }
+        let (p50, p99, _) = r.quantiles();
+        assert_eq!(p50, 1000);
+        assert_eq!(p99, 1000);
+        assert_eq!(r.total, 2 * RING_CAP as u64);
+        assert_eq!(r.buf.len(), RING_CAP);
+    }
+
+    #[test]
+    fn empty_ring_reports_zero() {
+        assert_eq!(Ring::default().quantiles(), (0, 0, 0));
+    }
+
+    #[test]
+    fn snapshot_round_trips_to_json() {
+        let stats = ServiceStats::new();
+        stats.request();
+        stats.hit(5);
+        stats.request();
+        stats.miss(5000);
+        stats.solve(4900, false);
+        let snap = stats.snapshot(3, 1, 7, 10, 2);
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.hits, 1);
+        assert_eq!(snap.misses, 1);
+        assert_eq!(snap.queue_depth, 3);
+        assert_eq!(snap.index_records, 7);
+        let j = snap.to_json();
+        assert_eq!(j.get(&["hits"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get(&["hit_p50_us"]).unwrap().as_f64(), Some(5.0));
+        assert_eq!(
+            j.get(&["miss_p99_us"]).unwrap().as_f64(),
+            Some(5000.0)
+        );
+        assert_eq!(j.get(&["index_hits"]).unwrap().as_f64(), Some(10.0));
+        // avg solve reflects the one recorded solve.
+        assert!((snap.avg_solve_ms - 4.9).abs() < 1e-9);
+    }
+}

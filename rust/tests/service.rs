@@ -1,0 +1,507 @@
+//! End-to-end tests of the service tier (ISSUE 7 satellite 4): hit/miss
+//! service classes under concurrent clients, typed admission control,
+//! deadline handling, in-flight coalescing, graceful shutdown, and the
+//! TCP line protocol.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use fpga_offload::analysis::Analysis;
+use fpga_offload::cpu::XEON_BRONZE_3104;
+use fpga_offload::envadapt::PatternDb;
+use fpga_offload::hls::{Device, ARRIA10_GX};
+use fpga_offload::minic::Program;
+use fpga_offload::runtime::{Artifacts, Runtime, SampleRun};
+use fpga_offload::search::backend::BackendMeasurement;
+use fpga_offload::search::funnel::Candidate;
+use fpga_offload::search::measure::SearchError;
+use fpga_offload::search::patterns::Pattern;
+use fpga_offload::search::{Backend, FpgaBackend, SearchConfig};
+use fpga_offload::service::{
+    BackendKind, Client, PlanRequest, Service, ServiceConfig, TcpServer,
+};
+use fpga_offload::util::json::Json;
+use fpga_offload::util::tempdir::TempDir;
+
+/// Fast two-loop source every test can solve in milliseconds.
+const GOOD: &str = "
+#define N 1024
+float a[N]; float out[N];
+int main() {
+    for (int i = 0; i < N; i++) { a[i] = i * 0.001 - 0.5; }
+    for (int i = 0; i < N; i++) { out[i] = sin(a[i]) * cos(a[i]); }
+    return 0;
+}";
+
+/// `GOOD` with `n + 1` trailing newlines: same program, distinct source
+/// fingerprint. The `ReuseKey` is app-name-blind (it keys on
+/// source/entry/backend/config), so tests that need distinct cold
+/// solves — rather than coalescing onto one in-flight key — must vary
+/// the source text itself.
+fn uniq(n: usize) -> String {
+    format!("{GOOD}{}", "\n".repeat(n + 1))
+}
+
+fn cfg_with_db(dir: &TempDir) -> ServiceConfig {
+    ServiceConfig {
+        pattern_db: Some(dir.path().to_path_buf()),
+        workers: 2,
+        ..ServiceConfig::default()
+    }
+}
+
+/// Unix time, seconds — the same clock the pattern DB stamps with.
+fn now_secs() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_secs()
+}
+
+#[test]
+fn concurrent_clients_mixed_hits_and_misses() {
+    let dir = TempDir::new("svc-e2e-mixed").unwrap();
+    let svc = Arc::new(Service::start(cfg_with_db(&dir)).unwrap());
+    // Warm one app so the flood below mixes hits with cold solves.
+    let warmup = svc.request(PlanRequest::new("hot", GOOD));
+    assert!(warmup.ok(), "warmup failed: {:?}", warmup.result);
+
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                if i % 2 == 0 {
+                    svc.request(PlanRequest::new("hot", GOOD))
+                } else {
+                    // Distinct sources → distinct reuse keys → real
+                    // cold solves (identical sources would coalesce).
+                    svc.request(PlanRequest::new(
+                        format!("cold{i}"),
+                        uniq(i),
+                    ))
+                }
+            })
+        })
+        .collect();
+    let responses: Vec<_> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for resp in &responses {
+        assert!(resp.ok(), "{}: {:?}", resp.app, resp.result);
+    }
+    let hits = responses.iter().filter(|r| r.is_hit()).count();
+    assert_eq!(hits, 4, "every 'hot' request should hit the index");
+    let snap = svc.stats();
+    assert_eq!(snap.hits, 4);
+    // warmup + 4 cold apps solved.
+    assert_eq!(snap.misses, 5);
+    assert_eq!(snap.rejected, 0);
+    svc.shutdown();
+    // Records persisted: a fresh service over the same dir hits warm.
+    let svc2 = Service::start(cfg_with_db(&dir)).unwrap();
+    let warm = svc2.request(PlanRequest::new("cold1", uniq(1)));
+    assert!(warm.is_hit(), "restart lost the index: {:?}", warm.result);
+}
+
+#[test]
+fn queue_full_is_a_typed_reject_with_retry_hint() {
+    // No workers: admitted jobs stay queued, so capacity is exact.
+    let cfg = ServiceConfig {
+        workers: 0,
+        queue_cap: 2,
+        backend: BackendKind::Cpu,
+        ..ServiceConfig::default()
+    };
+    let svc = Arc::new(Service::start(cfg).unwrap());
+    for i in 0..2 {
+        // Distinct sources: identical ones would coalesce onto the
+        // first in-flight key instead of taking queue slots.
+        let mut req = PlanRequest::new(format!("fill{i}"), uniq(i));
+        req.deadline_ms = Some(0); // return immediately, job stays queued
+        let resp = svc.request(req);
+        assert!(resp.is_timeout(), "fill{i}: {:?}", resp.result);
+    }
+    assert_eq!(svc.stats().queue_depth, 2);
+    let mut req = PlanRequest::new("overflow", uniq(2));
+    req.deadline_ms = Some(0);
+    let resp = svc.request(req);
+    assert!(resp.is_rejected(), "expected reject: {:?}", resp.result);
+    assert!(!resp.is_timeout());
+    let err = resp.result.unwrap_err();
+    assert_eq!(err.stage.as_str(), "queue");
+    assert_eq!(err.class.as_str(), "transient");
+    assert!(resp.retry_after_ms.unwrap() >= 1);
+    assert_eq!(svc.stats().rejected, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn expired_deadline_returns_typed_timeout_not_a_hang() {
+    let cfg = ServiceConfig {
+        workers: 1,
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(cfg).unwrap();
+    let mut req = PlanRequest::new("expired", GOOD);
+    req.deadline_ms = Some(0);
+    let resp = svc.request(req);
+    assert!(resp.is_timeout(), "expected timeout: {:?}", resp.result);
+    let err = resp.result.unwrap_err();
+    assert_eq!(err.stage.as_str(), "queue");
+    assert_eq!(err.class.as_str(), "timeout");
+    assert_eq!(svc.stats().timeouts, 1);
+    // The pool is still healthy: an unbounded request is served. A
+    // distinct source keeps it off the expired job's reuse key, so it
+    // cannot coalesce onto a broadcast that races the worker's skip.
+    let ok = svc.request(PlanRequest::new("healthy", uniq(1)));
+    assert!(ok.ok(), "{:?}", ok.result);
+    svc.shutdown();
+}
+
+/// Delegates to the real FPGA backend but blocks every `measure` until
+/// the gate opens — makes "in flight" a controllable state.
+struct GateBackend {
+    inner: FpgaBackend<'static>,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl GateBackend {
+    fn new() -> (Self, Arc<(Mutex<bool>, Condvar)>) {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let backend = GateBackend {
+            inner: FpgaBackend {
+                cpu: &XEON_BRONZE_3104,
+                device: &ARRIA10_GX,
+            },
+            gate: Arc::clone(&gate),
+        };
+        (backend, gate)
+    }
+}
+
+fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+    let (lock, cv) = &**gate;
+    *lock.lock().unwrap() = true;
+    cv.notify_all();
+}
+
+impl Backend for GateBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn device(&self) -> &Device {
+        self.inner.device()
+    }
+
+    fn measure(
+        &self,
+        prog: &Program,
+        analysis: &Analysis,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        cfg: &SearchConfig,
+    ) -> Result<BackendMeasurement, SearchError> {
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.measure(prog, analysis, cands, pattern, cfg)
+    }
+
+    fn verify(
+        &self,
+        prog: &Program,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        entry: &str,
+        cfg: &SearchConfig,
+    ) -> Result<bool, SearchError> {
+        self.inner.verify(prog, cands, pattern, entry, cfg)
+    }
+
+    fn deploy_check(
+        &self,
+        sample: &str,
+        env: (&Runtime, &Artifacts),
+        seed: u64,
+    ) -> anyhow::Result<SampleRun> {
+        self.inner.deploy_check(sample, env, seed)
+    }
+}
+
+#[test]
+fn duplicate_in_flight_requests_coalesce_into_one_solve() {
+    let dir = TempDir::new("svc-e2e-coalesce").unwrap();
+    let (backend, gate) = GateBackend::new();
+    let cfg = ServiceConfig {
+        pattern_db: Some(dir.path().to_path_buf()),
+        workers: 1,
+        ..ServiceConfig::default()
+    };
+    let svc =
+        Arc::new(Service::with_backend(cfg, Box::new(backend)).unwrap());
+
+    const K: usize = 4;
+    let handles: Vec<_> = (0..K)
+        .map(|_| {
+            let svc = Arc::clone(&svc);
+            std::thread::spawn(move || {
+                svc.request(PlanRequest::new("dup", GOOD))
+            })
+        })
+        .collect();
+    // All K requests target one key; wait until K-1 have coalesced onto
+    // the single in-flight solve (the worker is parked at the gate).
+    let mut spins = 0;
+    while svc.stats().coalesced < (K - 1) as u64 {
+        std::thread::sleep(Duration::from_millis(5));
+        spins += 1;
+        assert!(spins < 2000, "coalescing never converged");
+    }
+    assert_eq!(svc.stats().inflight, 1, "one key in flight");
+    open_gate(&gate);
+    let responses: Vec<_> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let mut patterns = Vec::new();
+    for resp in responses {
+        assert!(resp.ok(), "{:?}", resp.result);
+        patterns.push(resp.result.unwrap().best_pattern);
+    }
+    patterns.dedup();
+    assert_eq!(patterns.len(), 1, "every waiter got the identical plan");
+    let snap = svc.stats();
+    assert_eq!(snap.solves, 1, "exactly one funnel run for K requests");
+    assert_eq!(snap.coalesced, (K - 1) as u64);
+    svc.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_admitted_work_then_rejects() {
+    let dir = TempDir::new("svc-e2e-drain").unwrap();
+    let (backend, gate) = GateBackend::new();
+    let cfg = ServiceConfig {
+        pattern_db: Some(dir.path().to_path_buf()),
+        workers: 1,
+        queue_cap: 8,
+        ..ServiceConfig::default()
+    };
+    let svc =
+        Arc::new(Service::with_backend(cfg, Box::new(backend)).unwrap());
+    // Two distinct jobs: one the worker picks up (parked at the gate),
+    // one waiting in the queue.
+    let t1 = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            svc.request(PlanRequest::new("drain_a", uniq(1)))
+        })
+    };
+    let t2 = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            svc.request(PlanRequest::new("drain_b", uniq(2)))
+        })
+    };
+    let mut spins = 0;
+    while svc.stats().inflight < 2 {
+        std::thread::sleep(Duration::from_millis(5));
+        spins += 1;
+        assert!(spins < 2000, "jobs never got admitted");
+    }
+    // Drain on a separate thread (shutdown blocks until workers finish),
+    // then release the gate so the drain can complete.
+    let drainer = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || svc.shutdown())
+    };
+    // Once the drain's close lands, new work gets a typed reject. An
+    // attempt racing ahead of the close is admitted but carries an
+    // expired deadline, so the worker skips it without solving.
+    let mut saw_reject = false;
+    for i in 0..200 {
+        let mut late = PlanRequest::new(format!("late{i}"), uniq(10 + i));
+        late.deadline_ms = Some(0);
+        let resp = svc.request(late);
+        if resp.is_rejected() {
+            saw_reject = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(saw_reject, "draining service never rejected new work");
+    open_gate(&gate);
+    drainer.join().unwrap();
+    // Both admitted requests were served, not dropped.
+    let ra = t1.join().unwrap();
+    let rb = t2.join().unwrap();
+    assert!(ra.ok(), "drain_a dropped: {:?}", ra.result);
+    assert!(rb.ok(), "drain_b dropped: {:?}", rb.result);
+    assert_eq!(svc.stats().solves, 2);
+}
+
+#[test]
+fn refresh_ahead_serves_stale_hit_and_schedules_research() {
+    let dir = TempDir::new("svc-e2e-refresh").unwrap();
+    let cfg = ServiceConfig {
+        pattern_db: Some(dir.path().to_path_buf()),
+        workers: 1,
+        max_age: Some(Duration::from_secs(1000)),
+        refresh_ahead: 0.8,
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(cfg).unwrap();
+    let cold = svc.request(PlanRequest::new("aging", GOOD));
+    assert!(cold.ok(), "{:?}", cold.result);
+
+    // Age the stored record to 90% of max_age: inside the serve window,
+    // past the refresh threshold.
+    let db = PatternDb::open(dir.path()).unwrap();
+    let path = db.path_of("aging");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut j = Json::parse(&text).unwrap();
+    let aged = now_secs() - 900;
+    if let Json::Obj(map) = &mut j {
+        map.insert("stored_at".into(), Json::Str(format!("{aged}")));
+    }
+    std::fs::write(&path, j.pretty()).unwrap();
+
+    // A fresh service (index loaded from disk) must serve the hit AND
+    // schedule the background re-search.
+    let cfg2 = ServiceConfig {
+        pattern_db: Some(dir.path().to_path_buf()),
+        workers: 1,
+        max_age: Some(Duration::from_secs(1000)),
+        refresh_ahead: 0.8,
+        ..ServiceConfig::default()
+    };
+    let svc2 = Service::start(cfg2).unwrap();
+    let warm = svc2.request(PlanRequest::new("aging", GOOD));
+    assert!(warm.is_hit(), "aged-but-valid must hit: {:?}", warm.result);
+    let plan = warm.result.unwrap();
+    assert!(plan.refresh_ahead, "refresh window not flagged");
+    let mut spins = 0;
+    while svc2.stats().refreshes_done < 1 {
+        std::thread::sleep(Duration::from_millis(5));
+        spins += 1;
+        assert!(spins < 2000, "background refresh never completed");
+    }
+    svc2.shutdown();
+    // The re-search rewrote the record with a fresh stamp.
+    let rec = db.load_record("aging").unwrap().unwrap();
+    assert!(
+        rec.stored_at.unwrap() > aged,
+        "record stamp was not refreshed: {:?} <= {aged}",
+        rec.stored_at
+    );
+    // And a record *past* max_age is a miss, not a hit.
+    let old = now_secs() - 2000;
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut j = Json::parse(&text).unwrap();
+    if let Json::Obj(map) = &mut j {
+        map.insert("stored_at".into(), Json::Str(format!("{old}")));
+    }
+    std::fs::write(&path, j.pretty()).unwrap();
+    let cfg3 = ServiceConfig {
+        pattern_db: Some(dir.path().to_path_buf()),
+        workers: 1,
+        max_age: Some(Duration::from_secs(1000)),
+        ..ServiceConfig::default()
+    };
+    let svc3 = Service::start(cfg3).unwrap();
+    let expired = svc3.request(PlanRequest::new("aging", GOOD));
+    assert!(expired.ok());
+    assert!(
+        !expired.is_hit(),
+        "expired record must re-search, got a hit"
+    );
+    svc3.shutdown();
+}
+
+#[test]
+fn tcp_round_trip_plan_stats_ping_and_malformed_lines() {
+    let dir = TempDir::new("svc-e2e-tcp").unwrap();
+    let server =
+        TcpServer::bind(Service::start(cfg_with_db(&dir)).unwrap(), "127.0.0.1:0")
+            .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+
+    let pong = client.ping(1).unwrap();
+    assert_eq!(pong.get(&["status"]).and_then(Json::as_str), Some("ok"));
+    assert_eq!(pong.get(&["id"]).and_then(Json::as_f64), Some(1.0));
+
+    // Bundled app by name only — the server resolves source and entry.
+    let plan = client.plan(2, "sobel", None, None).unwrap();
+    assert_eq!(
+        plan.get(&["status"]).and_then(Json::as_str),
+        Some("ok"),
+        "plan failed: {plan}"
+    );
+    assert_eq!(plan.get(&["class"]).and_then(Json::as_str), Some("miss"));
+    let again = client.plan(3, "sobel", None, None).unwrap();
+    assert_eq!(
+        again.get(&["class"]).and_then(Json::as_str),
+        Some("hit"),
+        "second identical request must hit: {again}"
+    );
+    assert_eq!(
+        again.get(&["cached"]).and_then(Json::as_bool),
+        Some(true)
+    );
+
+    // Inline source round-trips through JSON string escaping.
+    let inline = client.plan(4, "inline", Some(GOOD), None).unwrap();
+    assert_eq!(
+        inline.get(&["status"]).and_then(Json::as_str),
+        Some("ok"),
+        "inline plan failed: {inline}"
+    );
+
+    // Malformed line → error response, connection survives.
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let raw = std::net::TcpStream::connect(&addr).unwrap();
+        let mut w = raw.try_clone().unwrap();
+        writeln!(w, "{{this is not json").unwrap();
+        let mut line = String::new();
+        BufReader::new(raw).read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(
+            resp.get(&["status"]).and_then(Json::as_str),
+            Some("error"),
+            "malformed line: {resp}"
+        );
+    }
+    // A parseable line that isn't a valid request also errors politely.
+    let bad = client.roundtrip(&Json::Str("not an object".into()));
+    let bad = bad.unwrap();
+    assert_eq!(bad.get(&["status"]).and_then(Json::as_str), Some("error"));
+    let unknown_app =
+        client.roundtrip(&Json::obj(vec![("app", Json::Str("ghost".into()))]));
+    let unknown_app = unknown_app.unwrap();
+    assert_eq!(
+        unknown_app.get(&["status"]).and_then(Json::as_str),
+        Some("error")
+    );
+    let still_alive = client.ping(5).unwrap();
+    assert_eq!(
+        still_alive.get(&["status"]).and_then(Json::as_str),
+        Some("ok")
+    );
+
+    let stats = client.stats(6).unwrap();
+    let hits = stats.get(&["stats", "hits"]).and_then(Json::as_f64);
+    assert_eq!(hits, Some(1.0), "stats endpoint: {stats}");
+    assert!(
+        stats
+            .get(&["stats", "hit_p50_us"])
+            .and_then(Json::as_f64)
+            .is_some(),
+        "latency quantiles missing: {stats}"
+    );
+
+    let ack = client.shutdown(7).unwrap();
+    assert_eq!(ack.get(&["status"]).and_then(Json::as_str), Some("ok"));
+    server.wait();
+}
