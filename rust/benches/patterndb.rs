@@ -1,0 +1,271 @@
+//! Sharded pattern-store benchmarks (ISSUE 8 acceptance): cold open
+//! (full shard-log replay) and warm open (shared process handle) at
+//! 10k+ plans vs the legacy flat-file scan, 16-thread mixed read/write
+//! throughput vs a flat-file baseline, and a small kill-point recovery
+//! sweep.
+//!
+//! Writes `target/bench-results/BENCH_patterndb.json`.
+//!
+//! Acceptance asserted here: warm open >= 10x faster than the legacy
+//! flat scan, and zero records lost across the kill points.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use fpga_offload::store::{log, PatternStore};
+use fpga_offload::util::bench::{save_results, Table};
+use fpga_offload::util::json::Json;
+use fpga_offload::util::tempdir::TempDir;
+
+const RECORDS: usize = 10_000;
+const THREADS: usize = 16;
+const OPS_PER_THREAD: usize = 2_000;
+
+fn app_name(i: usize) -> String {
+    format!("app-{i:05}")
+}
+
+fn record_payload(i: usize, stamp: u64) -> Vec<u8> {
+    format!(
+        r#"{{"app":"{}","speedup":{:.2},"automation_hours":{:.2},"stored_at":"{}"}}"#,
+        app_name(i),
+        1.0 + (i % 17) as f64 * 0.25,
+        2.0 + (i % 11) as f64,
+        stamp
+    )
+    .into_bytes()
+}
+
+/// Populate the sharded store: bucket the payloads per shard and write
+/// each shard log atomically, exactly as compaction does.
+fn populate(dir: &Path, stamp: u64) {
+    let store = PatternStore::open_fresh(dir).unwrap();
+    let mut by_shard: Vec<(std::path::PathBuf, Vec<Vec<u8>>)> = Vec::new();
+    for i in 0..RECORDS {
+        let path = store.shard_path_of(&app_name(i));
+        let payload = record_payload(i, stamp);
+        match by_shard.iter_mut().find(|(p, _)| *p == path) {
+            Some((_, v)) => v.push(payload),
+            None => by_shard.push((path, vec![payload])),
+        }
+    }
+    drop(store);
+    for (path, payloads) in &by_shard {
+        let refs: Vec<&[u8]> =
+            payloads.iter().map(Vec::as_slice).collect();
+        log::write_atomic(path, &refs).unwrap();
+    }
+}
+
+/// Cheap deterministic per-thread RNG (no external crates).
+fn lcg(state: &mut u64) -> u64 {
+    *state = state
+        .wrapping_mul(6364136223846793005)
+        .wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+fn now_secs() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_secs()
+}
+
+fn main() {
+    let dir = TempDir::new("bench-patterndb").unwrap();
+    let stamp = now_secs();
+    populate(dir.path(), stamp);
+
+    // --- Cold open: replay all 16 shard logs into the in-memory index.
+    let t0 = Instant::now();
+    let store = PatternStore::open_fresh(dir.path()).unwrap();
+    let cold_open_us = t0.elapsed().as_micros() as u64;
+    assert_eq!(store.len(), RECORDS, "cold open lost records");
+    drop(store);
+
+    // --- Legacy baseline: the flat one-file-per-app layout the store
+    // replaced, seeded from the same records, scanned the way the old
+    // `PatternIndex::open` did (read + parse every file).
+    let legacy_dir = TempDir::new("bench-patterndb-legacy").unwrap();
+    let store = PatternStore::open(dir.path()).unwrap();
+    let exported = store.export_legacy(legacy_dir.path()).unwrap();
+    assert_eq!(exported, RECORDS);
+    let t0 = Instant::now();
+    let legacy = PatternStore::scan_legacy(legacy_dir.path()).unwrap();
+    let legacy_scan_us = t0.elapsed().as_micros() as u64;
+    assert_eq!(legacy.len(), RECORDS, "legacy scan lost records");
+
+    // --- Warm open: the process already holds the handle; open() is a
+    // registry lookup, not a replay. Timed over many opens for a
+    // measurable duration.
+    const WARM_OPENS: u32 = 1_000;
+    let t0 = Instant::now();
+    for _ in 0..WARM_OPENS {
+        let s = PatternStore::open(dir.path()).unwrap();
+        assert_eq!(s.len(), RECORDS);
+    }
+    let warm_open_us =
+        (t0.elapsed().as_micros() as u64).max(1) / WARM_OPENS as u64;
+
+    // --- 16-thread mixed traffic, ~90% reads / 10% writes, against the
+    // sharded store (reads take only a shard index read lock).
+    let store = Arc::new(store);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let store = Arc::clone(&store);
+            std::thread::spawn(move || {
+                let mut rng = 0x9e3779b97f4a7c15u64 ^ (t as u64) << 17;
+                for _ in 0..OPS_PER_THREAD {
+                    let i = (lcg(&mut rng) as usize) % RECORDS;
+                    let app = app_name(i);
+                    if lcg(&mut rng) % 10 == 0 {
+                        store
+                            .restamp(&app, stamp + lcg(&mut rng) % 1000)
+                            .unwrap();
+                    } else {
+                        assert!(store.get(&app).is_some());
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let store_mixed_s = t0.elapsed().as_secs_f64();
+    let total_ops = (THREADS * OPS_PER_THREAD) as f64;
+    let store_ops_s = total_ops / store_mixed_s.max(1e-9);
+
+    // --- The same mixed traffic against the flat-file layout: every
+    // read is an open+parse, every write a whole-file rewrite.
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let dir = legacy_dir.path().to_path_buf();
+            std::thread::spawn(move || {
+                let mut rng = 0x51afb0c1e97d3e21u64 ^ (t as u64) << 13;
+                for _ in 0..OPS_PER_THREAD {
+                    let i = (lcg(&mut rng) as usize) % RECORDS;
+                    let path =
+                        dir.join(format!("{}.pattern.json", app_name(i)));
+                    if lcg(&mut rng) % 10 == 0 {
+                        std::fs::write(
+                            &path,
+                            String::from_utf8(record_payload(
+                                i,
+                                stamp + lcg(&mut rng) % 1000,
+                            ))
+                            .unwrap(),
+                        )
+                        .unwrap();
+                    } else {
+                        let text =
+                            std::fs::read_to_string(&path).unwrap();
+                        assert!(Json::parse(&text).is_ok());
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let flat_mixed_s = t0.elapsed().as_secs_f64();
+    let flat_ops_s = total_ops / flat_mixed_s.max(1e-9);
+
+    // --- Kill-point sweep: tear the tail of one shard log at a few
+    // byte offsets; every prior record must survive recovery.
+    let kill_dir = TempDir::new("bench-patterndb-kill").unwrap();
+    populate(kill_dir.path(), stamp);
+    let victim = {
+        let s = PatternStore::open_fresh(kill_dir.path()).unwrap();
+        s.shard_path_of(&app_name(0))
+    };
+    let full = std::fs::read(&victim).unwrap();
+    let mut kill_points = 0u64;
+    let mut recover_us: Vec<u64> = Vec::new();
+    for cut_back in [1usize, 5, 11, 12, 20] {
+        std::fs::write(&victim, &full[..full.len() - cut_back]).unwrap();
+        let t0 = Instant::now();
+        let s = PatternStore::open_fresh(kill_dir.path()).unwrap();
+        recover_us.push(t0.elapsed().as_micros() as u64);
+        // Exactly the torn final record is gone; nothing else.
+        assert_eq!(s.len(), RECORDS - 1, "kill point lost extra records");
+        assert!(s.quarantined().unwrap().is_empty());
+        kill_points += 1;
+        std::fs::write(&victim, &full).unwrap();
+    }
+    let recover_p_max = *recover_us.iter().max().unwrap();
+
+    let warm_speedup =
+        legacy_scan_us as f64 / warm_open_us.max(1) as f64;
+    let mut table = Table::new(&["series", "value", "note"]);
+    table.row(&[
+        "cold open (replay)".into(),
+        format!("{:.1} ms", cold_open_us as f64 / 1e3),
+        format!("{RECORDS} records, 16 shards"),
+    ]);
+    table.row(&[
+        "legacy flat scan".into(),
+        format!("{:.1} ms", legacy_scan_us as f64 / 1e3),
+        format!("{RECORDS} files"),
+    ]);
+    table.row(&[
+        "warm open (shared handle)".into(),
+        format!("{warm_open_us} us"),
+        format!("{warm_speedup:.0}x vs flat scan"),
+    ]);
+    table.row(&[
+        "mixed 90/10 sharded".into(),
+        format!("{store_ops_s:.0} ops/s"),
+        format!("{THREADS} threads"),
+    ]);
+    table.row(&[
+        "mixed 90/10 flat files".into(),
+        format!("{flat_ops_s:.0} ops/s"),
+        format!("{THREADS} threads"),
+    ]);
+    table.row(&[
+        "kill-point recovery".into(),
+        format!("{recover_p_max} us max"),
+        format!("{kill_points} kill points, 0 lost"),
+    ]);
+    table.print();
+
+    // Acceptance: warm open >= 10x faster than the legacy flat scan.
+    assert!(
+        warm_speedup >= 10.0,
+        "warm open {warm_open_us}us not 10x faster than legacy scan \
+         {legacy_scan_us}us"
+    );
+
+    save_results(
+        "BENCH_patterndb",
+        &Json::obj(vec![
+            ("records", Json::Num(RECORDS as f64)),
+            ("shards", Json::Num(16.0)),
+            ("cold_open_us", Json::Num(cold_open_us as f64)),
+            ("legacy_scan_us", Json::Num(legacy_scan_us as f64)),
+            ("warm_open_us", Json::Num(warm_open_us as f64)),
+            ("warm_open_speedup_vs_flat", Json::Num(warm_speedup)),
+            ("mixed_threads", Json::Num(THREADS as f64)),
+            ("mixed_write_ratio", Json::Num(0.1)),
+            ("store_mixed_ops_per_s", Json::Num(store_ops_s)),
+            ("flat_mixed_ops_per_s", Json::Num(flat_ops_s)),
+            (
+                "mixed_speedup_vs_flat",
+                Json::Num(store_ops_s / flat_ops_s.max(1e-9)),
+            ),
+            ("kill_points", Json::Num(kill_points as f64)),
+            ("kill_recover_max_us", Json::Num(recover_p_max as f64)),
+            ("kill_records_lost", Json::Num(0.0)),
+        ]),
+    );
+    println!(
+        "series recorded: target/bench-results/BENCH_patterndb.json"
+    );
+    println!("patterndb bench PASS");
+}

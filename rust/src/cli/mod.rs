@@ -22,7 +22,8 @@
 //!             + the offload search flags
 //! repro client [apps...] [--addr A] [--deadline-ms N] [--json]
 //!              [--stats] [--shutdown]
-//! repro patterndb <stats|quarantined> --pattern-db DIR [--addr A]
+//! repro patterndb <stats|quarantined|migrate|compact|export>
+//!                 --pattern-db DIR [--addr A] [--out DIR]
 //! ```
 //!
 //! `offload` and `batch` are thin drivers over the staged
@@ -170,6 +171,10 @@ fn print_usage() {
                                   overflow is rejected immediately with\n\
                                   a retry_after_ms hint\n\
              --pattern-db DIR     hit index + write-through store\n\
+             --db-capacity N      cap the store at N live records;\n\
+                                  over capacity the cheapest-to-\n\
+                                  recompute (least solve time, most\n\
+                                  stale) records are evicted\n\
              --max-age S          serve hits younger than S seconds;\n\
                                   older records are re-searched\n\
              --refresh-ahead F    fraction of --max-age (default 0.8)\n\
@@ -184,12 +189,20 @@ fn print_usage() {
              --json               print raw response lines\n\
              --stats              fetch the stats endpoint\n\
              --shutdown           drain and stop the daemon\n\
-           patterndb <stats|quarantined> --pattern-db DIR\n\
-                                  offline DB inspection: record counts,\n\
-                                  per-backend split, age histogram\n\
-                                  (stats), or quarantined *.corrupt\n\
-                                  files; --addr adds live daemon\n\
+           patterndb <sub> --pattern-db DIR   offline DB tooling\n\
+             stats                record counts, per-backend split, age\n\
+                                  histogram, shard/eviction/compaction\n\
+                                  counters; --addr adds live daemon\n\
                                   hit/miss counters\n\
+             quarantined          list quarantined *.corrupt debris\n\
+             migrate              one-shot migration of legacy flat\n\
+                                  <app>.pattern.json files into the\n\
+                                  sharded log store (idempotent)\n\
+             compact              rewrite shard logs dropping dead\n\
+                                  (superseded/tombstoned) records\n\
+             export --out DIR     write live records back out as flat\n\
+                                  legacy files (migration smokes,\n\
+                                  bench baseline)\n\
          \n\
          <app> is one of the bundled apps (repro apps) or a path to a .c file."
     );
@@ -325,6 +338,7 @@ const VALUE_FLAGS: &[&str] = &[
     "--max-age",
     "--refresh-ahead",
     "--deadline-ms",
+    "--db-capacity",
 ];
 
 impl<'a> Flags<'a> {

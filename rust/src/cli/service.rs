@@ -54,6 +54,12 @@ fn service_config(f: &Flags) -> anyhow::Result<ServiceConfig> {
     } else {
         None
     };
+    let db_capacity = match f.value("--db-capacity") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| {
+            anyhow::anyhow!("bad value for --db-capacity: {v:?} (records)")
+        })?),
+    };
     let cfg = ServiceConfig {
         search: config_from_flags(f)?,
         backend,
@@ -63,6 +69,7 @@ fn service_config(f: &Flags) -> anyhow::Result<ServiceConfig> {
         max_age,
         refresh_ahead: f.num("--refresh-ahead", 0.8f64)?,
         retry,
+        db_capacity,
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
@@ -200,7 +207,8 @@ pub(super) fn cmd_patterndb(args: &[String]) -> anyhow::Result<()> {
     let f = Flags { args };
     let sub = f.positional(0).ok_or_else(|| {
         anyhow::anyhow!(
-            "usage: repro patterndb <stats|quarantined> --pattern-db DIR"
+            "usage: repro patterndb \
+             <stats|quarantined|migrate|compact|export> --pattern-db DIR"
         )
     })?;
     let dir = f.value("--pattern-db").ok_or_else(|| {
@@ -251,6 +259,27 @@ pub(super) fn cmd_patterndb(args: &[String]) -> anyhow::Result<()> {
                 ages[0], ages[1], ages[2], ages[3], unstamped
             );
             println!("  verified at store time: {verified}/{loaded}");
+            let store = db.store_handle();
+            let snap = store.stats().snapshot();
+            println!(
+                "  store: {} shards, {} dead record(s), \
+                 {} eviction(s), {} compaction(s)",
+                crate::store::SHARD_COUNT,
+                store.dead_records(),
+                snap.evictions,
+                snap.compactions,
+            );
+            match store.capacity() {
+                Some(cap) => println!("  capacity: {cap} records"),
+                None => println!("  capacity: unbounded"),
+            }
+            let legacy = store.legacy_count();
+            if legacy > 0 {
+                println!(
+                    "  {legacy} legacy flat file(s) present — run \
+                     `repro patterndb migrate --pattern-db {dir}`"
+                );
+            }
             // A running daemon owns the live hit/miss counters.
             if let Some(addr) = f.value("--addr") {
                 let mut client = Client::connect(addr)?;
@@ -264,11 +293,15 @@ pub(super) fn cmd_patterndb(args: &[String]) -> anyhow::Result<()> {
                     };
                     println!(
                         "  live service: {} hits / {} misses \
-                         (index: {} hits / {} misses)",
+                         (index: {} hits / {} misses, {} stale, \
+                         {} evictions, {} compactions)",
                         count("hits"),
                         count("misses"),
                         count("index_hits"),
                         count("index_misses"),
+                        count("stale_hits"),
+                        count("evictions"),
+                        count("compactions"),
                     );
                 }
             }
@@ -282,13 +315,49 @@ pub(super) fn cmd_patterndb(args: &[String]) -> anyhow::Result<()> {
                     "pattern DB {dir}: {} quarantined record(s)",
                     bad.len()
                 );
-                for app in &bad {
-                    println!("  {app}  ({app}.pattern.json.corrupt)");
+                for name in &bad {
+                    // Shard-log sidecars quarantine whole log suffixes;
+                    // anything else is a legacy flat record.
+                    if name.starts_with("shard-") {
+                        println!("  {name}  ({name}.corrupt)");
+                    } else {
+                        println!(
+                            "  {name}  ({name}.pattern.json.corrupt)"
+                        );
+                    }
                 }
             }
         }
+        "migrate" => {
+            let report = db.store_handle().migrate_legacy()?;
+            println!(
+                "pattern DB {dir}: migrated {} record(s), \
+                 {} skipped (stale), {} quarantined",
+                report.migrated, report.skipped_stale, report.quarantined
+            );
+        }
+        "compact" => {
+            let reclaimed = db.store_handle().compact_all()?;
+            println!(
+                "pattern DB {dir}: compacted, \
+                 {reclaimed} dead record(s) reclaimed"
+            );
+        }
+        "export" => {
+            let out = f.value("--out").ok_or_else(|| {
+                anyhow::anyhow!("patterndb export needs --out DIR")
+            })?;
+            let written = db
+                .store_handle()
+                .export_legacy(std::path::Path::new(out))?;
+            println!(
+                "pattern DB {dir}: exported {written} flat record(s) \
+                 to {out}"
+            );
+        }
         other => anyhow::bail!(
-            "unknown patterndb subcommand {other:?} (use stats|quarantined)"
+            "unknown patterndb subcommand {other:?} \
+             (use stats|quarantined|migrate|compact|export)"
         ),
     }
     Ok(())
@@ -364,6 +433,58 @@ mod tests {
             run(&s(&["serve", "--refresh-ahead", "2.0"])),
             1
         );
+        assert_eq!(run(&s(&["serve", "--db-capacity", "0"])), 1);
         assert_eq!(run(&s(&["client", "--addr", "127.0.0.1:1"])), 1);
+    }
+
+    #[test]
+    fn patterndb_export_then_migrate_roundtrip() {
+        let dir = TempDir::new("cli-pdb-migrate").unwrap();
+        let d = dir.path().to_string_lossy().into_owned();
+        assert_eq!(
+            run(&s(&[
+                "batch",
+                "sobel",
+                "--pattern-db",
+                &d,
+                "--out",
+                &dir.join("r.json").to_string_lossy().into_owned(),
+            ])),
+            0
+        );
+        // Export the record as a legacy flat file into a fresh dir,
+        // then migrate it into that dir's sharded store.
+        let legacy = dir.join("legacy");
+        let l = legacy.to_string_lossy().into_owned();
+        assert_eq!(
+            run(&s(&[
+                "patterndb", "export", "--pattern-db", &d, "--out", &l,
+            ])),
+            0
+        );
+        assert!(legacy.join("sobel.pattern.json").exists());
+        assert_eq!(
+            run(&s(&["patterndb", "migrate", "--pattern-db", &l])),
+            0
+        );
+        assert!(legacy.join("sobel.pattern.json.migrated").exists());
+        assert_eq!(
+            run(&s(&["patterndb", "compact", "--pattern-db", &l])),
+            0
+        );
+        assert_eq!(
+            run(&s(&["patterndb", "stats", "--pattern-db", &l])),
+            0
+        );
+    }
+
+    #[test]
+    fn patterndb_export_needs_out() {
+        let dir = TempDir::new("cli-pdb-export").unwrap();
+        let d = dir.path().to_string_lossy().into_owned();
+        assert_eq!(
+            run(&s(&["patterndb", "export", "--pattern-db", &d])),
+            1
+        );
     }
 }

@@ -4,10 +4,20 @@
 //! Mirrors the paper's experiment environment: a verification machine and
 //! a running (production) environment, both Dell R740 + Xeon Bronze 3104
 //! + Intel PAC Arria10 GX, plus the client note PC that submits code.
+//!
+//! Persistence rides the pattern store's checksummed frame format
+//! ([`crate::store::log`]): [`FacilityDb::save`] snapshots the inventory
+//! as one framed record per facility via an atomic rename, and
+//! [`FacilityDb::load`] reads back only frames whose checksums hold — a
+//! torn tail just means the previous save survives.
+
+use std::path::Path;
 
 use crate::cpu::{CpuModel, XEON_BRONZE_3104};
 use crate::hls::{Device, ARRIA10_GX};
+use crate::store::log;
 use crate::util::json::Json;
+use anyhow::Result;
 
 /// Role of a facility in the flow.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -84,38 +94,106 @@ impl FacilityDb {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::Arr(
-            self.facilities
-                .iter()
-                .map(|f| {
-                    Json::obj(vec![
-                        ("name", Json::Str(f.name.clone())),
-                        (
-                            "role",
-                            Json::Str(
-                                match f.role {
-                                    Role::Verification => "verification",
-                                    Role::Running => "running",
-                                    Role::Client => "client",
-                                }
-                                .into(),
-                            ),
-                        ),
-                        ("hardware", Json::Str(f.hardware.clone())),
-                        ("os", Json::Str(f.os.clone())),
-                        (
-                            "fpga",
-                            f.fpga
-                                .as_ref()
-                                .map(|d| Json::Str(d.name.into()))
-                                .unwrap_or(Json::Null),
-                        ),
-                        ("build_slots", Json::Num(f.build_slots as f64)),
-                    ])
-                })
-                .collect(),
-        )
+        Json::Arr(self.facilities.iter().map(facility_json).collect())
     }
+
+    /// Snapshot the inventory to `path`: one checksummed frame per
+    /// facility, written atomically (scratch file + rename) via the
+    /// pattern store's log writer.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let payloads: Vec<Vec<u8>> = self
+            .facilities
+            .iter()
+            .map(|f| facility_json(f).to_string().into_bytes())
+            .collect();
+        let refs: Vec<&[u8]> =
+            payloads.iter().map(Vec::as_slice).collect();
+        log::write_atomic(path, &refs)
+    }
+
+    /// Load a snapshot written by [`FacilityDb::save`]. Frames that fail
+    /// their checksum (and everything after them) are ignored; a missing
+    /// file loads as an empty inventory.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut db = FacilityDb::default();
+        for payload in log::read_frames(path)? {
+            let Ok(text) = String::from_utf8(payload) else {
+                continue;
+            };
+            let Ok(json) = Json::parse(&text) else {
+                continue;
+            };
+            if let Some(f) = facility_from_json(&json) {
+                db.facilities.push(f);
+            }
+        }
+        Ok(db)
+    }
+}
+
+fn facility_json(f: &Facility) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(f.name.clone())),
+        (
+            "role",
+            Json::Str(
+                match f.role {
+                    Role::Verification => "verification",
+                    Role::Running => "running",
+                    Role::Client => "client",
+                }
+                .into(),
+            ),
+        ),
+        ("hardware", Json::Str(f.hardware.clone())),
+        ("os", Json::Str(f.os.clone())),
+        (
+            "cpu",
+            f.cpu
+                .as_ref()
+                .map(|c| Json::Str(c.name.into()))
+                .unwrap_or(Json::Null),
+        ),
+        (
+            "fpga",
+            f.fpga
+                .as_ref()
+                .map(|d| Json::Str(d.name.into()))
+                .unwrap_or(Json::Null),
+        ),
+        ("build_slots", Json::Num(f.build_slots as f64)),
+    ])
+}
+
+/// Rebuild a facility from its snapshot JSON. Hardware models are
+/// resolved back to the bundled statics by name; an unrecognized name
+/// degrades to `None` rather than failing the load.
+fn facility_from_json(j: &Json) -> Option<Facility> {
+    let role = match j.get(&["role"])?.as_str()? {
+        "verification" => Role::Verification,
+        "running" => Role::Running,
+        "client" => Role::Client,
+        _ => return None,
+    };
+    let cpu = j
+        .get(&["cpu"])
+        .and_then(Json::as_str)
+        .filter(|n| *n == XEON_BRONZE_3104.name)
+        .map(|_| XEON_BRONZE_3104);
+    let fpga = j
+        .get(&["fpga"])
+        .and_then(Json::as_str)
+        .filter(|n| *n == ARRIA10_GX.name)
+        .map(|_| ARRIA10_GX);
+    Some(Facility {
+        name: j.get(&["name"])?.as_str()?.to_string(),
+        role,
+        hardware: j.get(&["hardware"])?.as_str()?.to_string(),
+        os: j.get(&["os"])?.as_str()?.to_string(),
+        cpu,
+        fpga,
+        build_slots: j.get(&["build_slots"])?.as_f64()? as usize,
+    })
 }
 
 #[cfg(test)]
@@ -140,5 +218,43 @@ mod tests {
         assert!(arr
             .iter()
             .any(|f| f.get(&["role"]).unwrap().as_str() == Some("client")));
+    }
+
+    #[test]
+    fn save_load_roundtrips_with_hardware_statics() {
+        let dir = crate::util::tempdir::TempDir::new("facdb").unwrap();
+        let path = dir.join("facilities.db");
+        let db = FacilityDb::paper_fig3();
+        db.save(&path).unwrap();
+        let back = FacilityDb::load(&path).unwrap();
+        assert_eq!(back.facilities.len(), 3);
+        let v = back.verification().unwrap();
+        assert_eq!(v.cpu.as_ref().unwrap().name, XEON_BRONZE_3104.name);
+        assert_eq!(v.fpga.as_ref().unwrap().name, ARRIA10_GX.name);
+        assert_eq!(v.build_slots, 1);
+        assert!(back
+            .facilities
+            .iter()
+            .any(|f| f.role == Role::Client && f.cpu.is_none()));
+    }
+
+    #[test]
+    fn torn_tail_loads_the_previous_save() {
+        let dir = crate::util::tempdir::TempDir::new("facdb-torn").unwrap();
+        let path = dir.join("facilities.db");
+        FacilityDb::paper_fig3().save(&path).unwrap();
+        // Simulate a crash mid-append: garbage half-frame at the tail.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[7u8; 5]);
+        std::fs::write(&path, bytes).unwrap();
+        let back = FacilityDb::load(&path).unwrap();
+        assert_eq!(back.facilities.len(), 3);
+    }
+
+    #[test]
+    fn missing_file_loads_empty() {
+        let dir = crate::util::tempdir::TempDir::new("facdb-miss").unwrap();
+        let db = FacilityDb::load(&dir.join("nope.db")).unwrap();
+        assert!(db.facilities.is_empty());
     }
 }

@@ -1,24 +1,32 @@
 //! Code-pattern DB (paper Fig. 1): persisted offload solutions.
 //!
 //! Once the verification environment selects a pattern, the solution is
-//! stored so production deployment (and later re-adaptation) can reuse it
-//! without re-searching. File-backed JSON, one file per app. Each record
-//! carries the full [`ReuseKey`] it was searched under — source
-//! fingerprint, backend, entry function, destination device, and a
-//! [`crate::search::SearchConfig`] fingerprint — so the pipeline's plan
-//! stage can prove "nothing that shaped this plan has changed" before
-//! reusing it instead of re-running the funnel. Records written before a
-//! key component existed are missing that field and therefore never
-//! match: stale plans degrade to a re-search, never to silent reuse.
+//! stored so production deployment (and later re-adaptation) can reuse
+//! it without re-searching. Each record carries the full [`ReuseKey`]
+//! it was searched under — source fingerprint, backend, entry function,
+//! destination device, and a [`crate::search::SearchConfig`]
+//! fingerprint — so the pipeline's plan stage can prove "nothing that
+//! shaped this plan has changed" before reusing it instead of
+//! re-running the funnel. Records written before a key component
+//! existed are missing that field and therefore never match: stale
+//! plans degrade to a re-search, never to silent reuse.
+//!
+//! Storage is the sharded, log-structured [`crate::store`] engine
+//! (append-only checksummed shard logs, in-memory index, cost-aware
+//! eviction, compaction). [`PatternDb`] and [`PatternIndex`] are thin
+//! facades over one shared [`PatternStore`] handle per directory —
+//! opening both on the same path costs one replay and gives both the
+//! same shard locks and counters. The legacy one-JSON-file-per-app
+//! layout is readable only via `repro patterndb migrate`
+//! ([`PatternStore::migrate_legacy`]).
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::search::OffloadSolution;
+use crate::store::PatternStore;
 use crate::util::json::Json;
 
 /// Everything a stored plan's validity depends on. All components must
@@ -45,7 +53,7 @@ pub struct ReuseKey {
 }
 
 /// Summary of a stored pattern record — enough to reuse the solution
-/// without re-measuring (the full measurement JSON stays on disk).
+/// without re-measuring (the full measurement JSON stays in the log).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StoredPattern {
     pub app: String,
@@ -69,7 +77,8 @@ pub struct StoredPattern {
     /// Unix seconds when the record was stored (None for pre-age
     /// records). Not part of [`matches`](Self::matches) — age is a
     /// *policy*, enforced by the pipeline's `max_age`, so operators can
-    /// tune re-search cadence without invalidating every record.
+    /// tune re-search cadence without invalidating every record. It
+    /// *is* what the store's freshness rule and eviction scoring read.
     pub stored_at: Option<u64>,
     /// Offloaded loop ids of the selected pattern.
     pub best_pattern: Vec<u32>,
@@ -100,219 +109,26 @@ impl StoredPattern {
     pub fn age_secs(&self, now: u64) -> Option<u64> {
         self.stored_at.map(|t| now.saturating_sub(t))
     }
-}
 
-/// Current unix time in whole seconds.
-pub(crate) fn unix_now() -> u64 {
-    std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0)
-}
-
-/// Process-wide per-record write lock. Concurrent workers (service
-/// worker pool, mixed-batch destinations) storing the same app must not
-/// interleave their read-stamp/rename sequences, or a slower writer with
-/// an older `stored_at` silently clobbers a fresher record.
-fn record_lock(path: &Path) -> Arc<Mutex<()>> {
-    static LOCKS: OnceLock<Mutex<HashMap<PathBuf, Arc<Mutex<()>>>>> =
-        OnceLock::new();
-    let map = LOCKS.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut guard = map.lock().unwrap_or_else(|p| p.into_inner());
-    guard.entry(path.to_path_buf()).or_default().clone()
-}
-
-/// File-backed pattern store.
-#[derive(Debug, Clone)]
-pub struct PatternDb {
-    dir: PathBuf,
-}
-
-impl PatternDb {
-    /// Open (creating the directory if needed).
-    pub fn open(dir: &Path) -> Result<Self> {
-        std::fs::create_dir_all(dir)
-            .with_context(|| format!("creating pattern DB dir {dir:?}"))?;
-        Ok(PatternDb {
-            dir: dir.to_path_buf(),
-        })
-    }
-
-    /// Where an app's record lives (whether or not it exists yet).
-    pub fn path_of(&self, app: &str) -> PathBuf {
-        self.dir.join(format!("{app}.pattern.json"))
-    }
-
-    /// Persist a solution (overwrites any previous one for the app).
-    /// Records stored this way carry no reuse key and are never reused.
-    pub fn store(&self, sol: &OffloadSolution) -> Result<PathBuf> {
-        self.write_record(sol, None)
-    }
-
-    /// Persist a solution together with its full [`ReuseKey`], enabling
-    /// cache reuse when source, backend, entry, destination device and
-    /// search config are all unchanged.
-    pub fn store_hashed(
-        &self,
-        sol: &OffloadSolution,
-        key: &ReuseKey,
-    ) -> Result<PathBuf> {
-        self.write_record(sol, Some(key))
-    }
-
-    fn write_record(
-        &self,
-        sol: &OffloadSolution,
-        key: Option<&ReuseKey>,
-    ) -> Result<PathBuf> {
-        self.write_record_stamped(sol, key, unix_now())
-    }
-
-    /// [`write_record`](Self::write_record) with an explicit `stored_at`
-    /// stamp — the testable seam for the concurrent-writer ordering
-    /// rule. Hashed writes are serialized per record path and a write
-    /// whose stamp is *older* than the record already on disk is
-    /// dropped: when two workers race, the record that survives is the
-    /// freshest one, not whichever writer renamed last.
-    pub(crate) fn write_record_stamped(
-        &self,
-        sol: &OffloadSolution,
-        key: Option<&ReuseKey>,
-        stamp: u64,
-    ) -> Result<PathBuf> {
-        let path = self.path_of(&sol.app);
-        let mut j = sol.to_json();
-        if let Json::Obj(map) = &mut j {
-            // Verification outcome of the *selected* pattern, hoisted to
-            // the top level so a cached plan keeps its verified status
-            // instead of laundering a failed check into "trusted".
-            map.insert(
-                "verified".to_string(),
-                match sol.best_measurement().verified {
-                    Some(v) => Json::Bool(v),
-                    None => Json::Null,
-                },
-            );
-        }
-        if let (Json::Obj(map), Some(key)) = (&mut j, key) {
-            // 64-bit hashes don't survive JSON's f64 numbers; store hex.
-            map.insert(
-                "source_hash".to_string(),
-                Json::Str(format!("{:016x}", key.source_hash)),
-            );
-            map.insert(
-                "backend".to_string(),
-                Json::Str(key.backend.clone()),
-            );
-            map.insert("entry".to_string(), Json::Str(key.entry.clone()));
-            map.insert(
-                "device".to_string(),
-                Json::Str(key.device.clone()),
-            );
-            map.insert(
-                "config_fp".to_string(),
-                Json::Str(format!("{:016x}", key.config_fp)),
-            );
-            map.insert(
-                "catalog_fp".to_string(),
-                Json::Str(format!("{:016x}", key.catalog_fp)),
-            );
-            // Age stamp for the re-search policy (unix seconds; decimal
-            // string — the value exceeds f64's exact-integer comfort
-            // zone in no plausible timeframe, but stay consistent with
-            // the other stamps).
-            map.insert(
-                "stored_at".to_string(),
-                Json::Str(format!("{stamp}")),
-            );
-        }
-        // Crash-safe: write the full record to a per-writer temp file in
-        // the same directory, then atomically rename it over the
-        // destination. A crash mid-write leaves only a `.tmp` file,
-        // which every read path ignores — never a parseable-but-partial
-        // record. The temp name carries pid + a process counter so
-        // concurrent writers never share a scratch file.
-        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
-        let tmp = self.dir.join(format!(
-            "{}.pattern.json.{}-{}.tmp",
-            sol.app,
-            std::process::id(),
-            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
-        ));
-        // Stamped (hashed) writes serialize per record and respect the
-        // freshness rule; unstamped `store()` keeps its documented
-        // overwrite-unconditionally semantics.
-        if key.is_some() {
-            let lock = record_lock(&path);
-            let _held = lock.lock().unwrap_or_else(|p| p.into_inner());
-            if self.stamp_of(&path) > Some(stamp) {
-                return Ok(path);
-            }
-            std::fs::write(&tmp, j.pretty())
-                .with_context(|| format!("writing {tmp:?}"))?;
-            std::fs::rename(&tmp, &path).with_context(|| {
-                format!("renaming {tmp:?} over {path:?}")
-            })?;
-        } else {
-            std::fs::write(&tmp, j.pretty())
-                .with_context(|| format!("writing {tmp:?}"))?;
-            std::fs::rename(&tmp, &path).with_context(|| {
-                format!("renaming {tmp:?} over {path:?}")
-            })?;
-        }
-        Ok(path)
-    }
-
-    /// `stored_at` stamp of the record currently on disk, if it exists,
-    /// parses, and is stamped. Any failure reads as "no stamp", which
-    /// lets an incoming write proceed.
-    fn stamp_of(&self, path: &Path) -> Option<u64> {
-        let text = std::fs::read_to_string(path).ok()?;
-        let j = Json::parse(&text).ok()?;
-        j.get(&["stored_at"])
-            .and_then(Json::as_str)
-            .and_then(|s| s.parse().ok())
-    }
-
-    /// Load the stored solution JSON for an app, if present.
-    pub fn load(&self, app: &str) -> Result<Option<Json>> {
-        let path = self.path_of(app);
-        if !path.exists() {
-            return Ok(None);
-        }
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?}"))?;
-        Ok(Some(
-            Json::parse(&text).with_context(|| format!("parsing {path:?}"))?,
-        ))
-    }
-
-    /// Load the stored record summary for an app, if present. A record
-    /// that exists but does not parse — a pre-atomic-write crash, disk
-    /// corruption, a stray hand edit — is *quarantined*: renamed to
-    /// `<app>.pattern.json.corrupt` (out of every read path, preserved
-    /// for inspection) and reported as absent rather than failing the
-    /// automation cycle.
-    pub fn load_record(&self, app: &str) -> Result<Option<StoredPattern>> {
-        let path = self.path_of(app);
-        if !path.exists() {
-            return Ok(None);
-        }
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?}"))?;
-        let j = match Json::parse(&text) {
-            Ok(j) => j,
-            Err(_) => {
-                self.quarantine(&path);
-                return Ok(None);
-            }
+    /// Parse a record payload (one log record, or a legacy flat file).
+    /// `fallback_app` names the record when the payload predates the
+    /// `app` field (legacy files are named `<app>.pattern.json`, so the
+    /// filename supplies it). `None` when the payload is not a record
+    /// object at all.
+    pub(crate) fn from_json(
+        j: &Json,
+        fallback_app: Option<&str>,
+    ) -> Option<StoredPattern> {
+        let Json::Obj(_) = j else {
+            return None;
         };
-        let record = StoredPattern {
-            app: j
-                .get(&["app"])
-                .and_then(Json::as_str)
-                .unwrap_or(app)
-                .to_string(),
+        let app = j
+            .get(&["app"])
+            .and_then(Json::as_str)
+            .or(fallback_app)?
+            .to_string();
+        Some(StoredPattern {
+            app,
             source_hash: j
                 .get(&["source_hash"])
                 .and_then(Json::as_str)
@@ -364,110 +180,219 @@ impl PatternDb {
                 .and_then(Json::as_f64)
                 .unwrap_or(0.0),
             verified: j.get(&["verified"]).and_then(Json::as_bool),
-        };
-        Ok(Some(record))
-    }
-
-    /// Move an unparseable record out of every read path. Best effort:
-    /// if even the rename fails, the file is removed so a poisoned
-    /// record cannot wedge the cycle forever.
-    fn quarantine(&self, path: &Path) {
-        let mut q = path.as_os_str().to_owned();
-        q.push(".corrupt");
-        if std::fs::rename(path, &q).is_err() {
-            let _ = std::fs::remove_file(path);
-        }
-    }
-
-    /// Apps with stored patterns.
-    pub fn list(&self) -> Result<Vec<String>> {
-        let mut out = Vec::new();
-        for entry in std::fs::read_dir(&self.dir)? {
-            let name = entry?.file_name().to_string_lossy().into_owned();
-            if let Some(app) = name.strip_suffix(".pattern.json") {
-                out.push(app.to_string());
-            }
-        }
-        out.sort();
-        Ok(out)
-    }
-
-    /// Apps whose records were quarantined as unparseable — the
-    /// `.pattern.json.corrupt` files a failed [`load_record`] leaves
-    /// behind, for operators to inspect or delete.
-    ///
-    /// [`load_record`]: Self::load_record
-    pub fn quarantined(&self) -> Result<Vec<String>> {
-        let mut out = Vec::new();
-        for entry in std::fs::read_dir(&self.dir)? {
-            let name = entry?.file_name().to_string_lossy().into_owned();
-            if let Some(app) = name.strip_suffix(".pattern.json.corrupt") {
-                out.push(app.to_string());
-            }
-        }
-        out.sort();
-        Ok(out)
+        })
     }
 }
 
-/// Shared in-memory index over a [`PatternDb`] directory: every record
-/// loaded once at open, then served from memory. This is the service
-/// tier's hit path — a reuse-key lookup is a `RwLock` read + a clone,
-/// microseconds instead of an open/read/parse of the on-disk JSON per
-/// request. Writes go through to disk first (keeping the crash-safe
-/// rename and the freshness rule) and then re-read the surviving record
-/// into memory, so the index never diverges from what a fresh process
-/// would load.
-///
-/// Hit/miss counters tally [`lookup`](Self::lookup) outcomes for the
-/// service stats surface.
-#[derive(Debug)]
-pub struct PatternIndex {
-    db: PatternDb,
-    records: RwLock<HashMap<String, StoredPattern>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+/// Current unix time in whole seconds.
+pub(crate) fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
 }
 
-impl PatternIndex {
-    /// Open the directory (created if needed) and load every parseable
-    /// record. Corrupt records quarantine exactly as in
-    /// [`PatternDb::load_record`] and simply don't appear in the index.
+/// The record payload for a solution — the one schema both the shard
+/// logs and the legacy flat files speak. Keyed records additionally
+/// carry the reuse key (64-bit hashes as hex strings — they don't
+/// survive JSON's f64 numbers) and the `stored_at` stamp; unkeyed
+/// records carry neither and are never reused.
+pub(crate) fn record_json(
+    sol: &OffloadSolution,
+    key: Option<&ReuseKey>,
+    stamp: u64,
+) -> Json {
+    let mut j = sol.to_json();
+    if let Json::Obj(map) = &mut j {
+        // Verification outcome of the *selected* pattern, hoisted to
+        // the top level so a cached plan keeps its verified status
+        // instead of laundering a failed check into "trusted".
+        map.insert(
+            "verified".to_string(),
+            match sol.best_measurement().verified {
+                Some(v) => Json::Bool(v),
+                None => Json::Null,
+            },
+        );
+    }
+    if let (Json::Obj(map), Some(key)) = (&mut j, key) {
+        map.insert(
+            "source_hash".to_string(),
+            Json::Str(format!("{:016x}", key.source_hash)),
+        );
+        map.insert("backend".to_string(), Json::Str(key.backend.clone()));
+        map.insert("entry".to_string(), Json::Str(key.entry.clone()));
+        map.insert("device".to_string(), Json::Str(key.device.clone()));
+        map.insert(
+            "config_fp".to_string(),
+            Json::Str(format!("{:016x}", key.config_fp)),
+        );
+        map.insert(
+            "catalog_fp".to_string(),
+            Json::Str(format!("{:016x}", key.catalog_fp)),
+        );
+        // Age stamp for the re-search policy (unix seconds; decimal
+        // string, consistent with the other stamps).
+        map.insert("stored_at".to_string(), Json::Str(format!("{stamp}")));
+    }
+    j
+}
+
+/// Pattern store facade: the write/load surface the pipeline and CLI
+/// use. Cloning is cheap (an `Arc` bump) and every clone — and every
+/// [`PatternIndex`] on the same directory — shares the same underlying
+/// [`PatternStore`].
+#[derive(Debug, Clone)]
+pub struct PatternDb {
+    store: Arc<PatternStore>,
+}
+
+impl PatternDb {
+    /// Open (creating the directory if needed). Re-opening a directory
+    /// this process already has open shares the existing handle — no
+    /// replay, no second set of locks.
     pub fn open(dir: &Path) -> Result<Self> {
-        let db = PatternDb::open(dir)?;
-        let mut records = HashMap::new();
-        for app in db.list()? {
-            if let Some(rec) = db.load_record(&app)? {
-                records.insert(app, rec);
-            }
-        }
-        Ok(PatternIndex {
-            db,
-            records: RwLock::new(records),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+        Ok(PatternDb {
+            store: PatternStore::open(dir)?,
         })
     }
 
-    /// The file-backed store underneath the index.
+    /// Wrap an already-open store handle (tests and benches that need
+    /// registry-bypassing [`PatternStore::open_fresh`] semantics).
+    pub fn from_store(store: Arc<PatternStore>) -> Self {
+        PatternDb { store }
+    }
+
+    /// The storage engine underneath (stats, capacity, migration,
+    /// compaction live there).
+    pub fn store_handle(&self) -> &Arc<PatternStore> {
+        &self.store
+    }
+
+    /// The shard log an app's records land in (whether or not any
+    /// exist yet).
+    pub fn path_of(&self, app: &str) -> PathBuf {
+        self.store.shard_path_of(app)
+    }
+
+    /// Persist a solution (supersedes any previous one for the app).
+    /// Records stored this way carry no reuse key and are never reused.
+    pub fn store(&self, sol: &OffloadSolution) -> Result<PathBuf> {
+        self.store.store_solution(sol, None, unix_now())
+    }
+
+    /// Persist a solution together with its full [`ReuseKey`], enabling
+    /// cache reuse when source, backend, entry, destination device and
+    /// search config are all unchanged.
+    pub fn store_hashed(
+        &self,
+        sol: &OffloadSolution,
+        key: &ReuseKey,
+    ) -> Result<PathBuf> {
+        self.store.store_solution(sol, Some(key), unix_now())
+    }
+
+    /// [`store_hashed`](Self::store_hashed) with an explicit
+    /// `stored_at` stamp — the testable seam for the concurrent-writer
+    /// ordering rule. Keyed appends whose stamp is *older* than the
+    /// live record are dropped: when two workers race, the record that
+    /// survives is the freshest one, not whichever writer landed last.
+    pub(crate) fn write_record_stamped(
+        &self,
+        sol: &OffloadSolution,
+        key: Option<&ReuseKey>,
+        stamp: u64,
+    ) -> Result<PathBuf> {
+        self.store.store_solution(sol, key, stamp)
+    }
+
+    /// Rewrite an app's record with a new `stored_at` stamp. The seam
+    /// age-policy tests and operators use to age or revive a record
+    /// without touching log bytes.
+    pub fn restamp(&self, app: &str, stamp: u64) -> Result<bool> {
+        self.store.restamp(app, stamp)
+    }
+
+    /// Remove an app's record (tombstone append). Returns whether one
+    /// was live.
+    pub fn remove(&self, app: &str) -> Result<bool> {
+        self.store.remove(app)
+    }
+
+    /// Load the stored solution JSON for an app, if present.
+    pub fn load(&self, app: &str) -> Result<Option<Json>> {
+        Ok(self.store.load_json(app))
+    }
+
+    /// Load the stored record summary for an app, if present. Corrupt
+    /// log damage was already quarantined when the store replayed the
+    /// shard logs; a damaged record is simply absent here.
+    pub fn load_record(&self, app: &str) -> Result<Option<StoredPattern>> {
+        Ok(self.store.get(app))
+    }
+
+    /// Apps with stored patterns, sorted.
+    pub fn list(&self) -> Result<Vec<String>> {
+        Ok(self.store.list())
+    }
+
+    /// Quarantined debris for operators to inspect or delete: shard-log
+    /// `.corrupt` sidecars, plus legacy `<app>.pattern.json.corrupt`
+    /// files (listed by app name, as the flat layout reported them).
+    pub fn quarantined(&self) -> Result<Vec<String>> {
+        self.store.quarantined()
+    }
+}
+
+/// Shared in-memory index over a pattern-DB directory — the service
+/// tier's hit path. With the sharded store this is the same handle
+/// [`PatternDb`] wraps: lookups are a shard-local `RwLock` read + a
+/// clone (microseconds, no log I/O), and a cold solve writing some
+/// *other* shard can't block them at all.
+///
+/// Hit/miss counters tally [`lookup`](Self::lookup) outcomes for the
+/// service stats surface; they live in the store's
+/// [`StoreStats`](crate::store::StoreStats) so every facade on the
+/// directory reports the same numbers.
+#[derive(Debug)]
+pub struct PatternIndex {
+    db: PatternDb,
+}
+
+impl PatternIndex {
+    /// Open the directory (created if needed). First open in the
+    /// process replays the shard logs (quarantining damage exactly as
+    /// [`PatternStore::open`] documents); subsequent opens are O(1).
+    pub fn open(dir: &Path) -> Result<Self> {
+        Ok(PatternIndex {
+            db: PatternDb::open(dir)?,
+        })
+    }
+
+    /// Wrap an already-open store handle.
+    pub fn from_store(store: Arc<PatternStore>) -> Self {
+        PatternIndex {
+            db: PatternDb::from_store(store),
+        }
+    }
+
+    /// The store facade underneath the index.
     pub fn db(&self) -> &PatternDb {
         &self.db
     }
 
-    /// Number of indexed records.
+    /// The storage engine itself.
+    pub fn store_handle(&self) -> &Arc<PatternStore> {
+        self.db.store_handle()
+    }
+
+    /// Number of live records.
     pub fn len(&self) -> usize {
-        self.read_guard().len()
+        self.db.store.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
-    }
-
-    fn read_guard(
-        &self,
-    ) -> std::sync::RwLockReadGuard<'_, HashMap<String, StoredPattern>>
-    {
-        self.records.read().unwrap_or_else(|p| p.into_inner())
     }
 
     /// Reuse-key lookup straight from memory. Counts a hit only when
@@ -479,73 +404,50 @@ impl PatternIndex {
         app: &str,
         key: &ReuseKey,
     ) -> Option<StoredPattern> {
-        let guard = self.read_guard();
-        match guard.get(app) {
-            Some(rec) if rec.matches(key) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(rec.clone())
-            }
-            _ => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
-        }
+        self.db.store.lookup(app, key)
     }
 
     /// The indexed record for an app, key-blind and counter-free (the
     /// stats surface, not the hit path).
     pub fn get(&self, app: &str) -> Option<StoredPattern> {
-        self.read_guard().get(app).cloned()
+        self.db.store.get(app)
     }
 
-    /// All indexed records, sorted by app.
+    /// All live records, sorted by app.
     pub fn snapshot(&self) -> Vec<StoredPattern> {
-        let mut out: Vec<StoredPattern> =
-            self.read_guard().values().cloned().collect();
-        out.sort_by(|a, b| a.app.cmp(&b.app));
-        out
+        self.db.store.records()
     }
 
-    /// Write-through store: persist to disk (atomic rename + freshness
-    /// rule), then reload the surviving record into memory. When a
+    /// Write-through store: append to the shard log (freshness rule
+    /// applies) and publish to the in-memory index in one step. When a
     /// concurrent writer already stored a fresher record, *that* record
-    /// is what lands in the index.
+    /// is what stays live.
     pub fn store_hashed(
         &self,
         sol: &OffloadSolution,
         key: &ReuseKey,
     ) -> Result<PathBuf> {
-        let path = self.db.store_hashed(sol, key)?;
-        self.refresh(&sol.app)?;
-        Ok(path)
+        self.db.store_hashed(sol, key)
     }
 
-    /// Re-read one app's record from disk into the index (dropping the
-    /// entry if the file is gone or quarantined). The seam for external
-    /// writers — a CLI batch run against the same directory, say.
+    /// Re-sync one app's entry from its shard log on disk — the seam
+    /// for *external* writers (another process on the same directory).
+    /// Only the affected shard is read; the entry is published
+    /// atomically, so a concurrent hit sees the old record or the new
+    /// one, never a torn state. In-process writers don't need this:
+    /// they are write-through.
     pub fn refresh(&self, app: &str) -> Result<()> {
-        let rec = self.db.load_record(app)?;
-        let mut guard =
-            self.records.write().unwrap_or_else(|p| p.into_inner());
-        match rec {
-            Some(rec) => {
-                guard.insert(app.to_string(), rec);
-            }
-            None => {
-                guard.remove(app);
-            }
-        }
-        Ok(())
+        self.db.store.refresh(app)
     }
 
-    /// Matching lookups served since open.
+    /// Matching lookups served since this directory was opened.
     pub fn hit_count(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.db.store.stats().snapshot().hits
     }
 
     /// Lookups that found no matching record since open.
     pub fn miss_count(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.db.store.stats().snapshot().misses
     }
 }
 
@@ -553,6 +455,7 @@ impl PatternIndex {
 mod tests {
     use super::*;
     use crate::search::{FunnelTrace, PatternMeasurement};
+    use crate::store::{log, PatternStore};
     use crate::util::tempdir::TempDir;
 
     fn dummy_solution(app: &str) -> OffloadSolution {
@@ -585,23 +488,24 @@ mod tests {
         }
     }
 
+    fn fresh_db(dir: &TempDir) -> PatternDb {
+        PatternDb::from_store(PatternStore::open_fresh(dir.path()).unwrap())
+    }
+
     #[test]
     fn store_and_load_roundtrip() {
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let db = fresh_db(&dir);
         db.store(&dummy_solution("demo")).unwrap();
         let loaded = db.load("demo").unwrap().unwrap();
-        assert_eq!(
-            loaded.get(&["speedup"]).unwrap().as_f64(),
-            Some(4.0)
-        );
+        assert_eq!(loaded.get(&["speedup"]).unwrap().as_f64(), Some(4.0));
         assert_eq!(db.list().unwrap(), vec!["demo".to_string()]);
     }
 
     #[test]
     fn missing_app_is_none() {
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let db = fresh_db(&dir);
         assert!(db.load("nope").unwrap().is_none());
         assert!(db.load_record("nope").unwrap().is_none());
     }
@@ -621,7 +525,7 @@ mod tests {
     #[test]
     fn hashed_record_roundtrips_the_reuse_key() {
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let db = fresh_db(&dir);
         let k = key();
         db.store_hashed(&dummy_solution("demo"), &k).unwrap();
         let rec = db.load_record("demo").unwrap().unwrap();
@@ -645,9 +549,21 @@ mod tests {
     }
 
     #[test]
+    fn record_survives_a_reopen_from_disk() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let k = key();
+        fresh_db(&dir).store_hashed(&dummy_solution("demo"), &k).unwrap();
+        // A brand-new handle replays the shard logs from scratch.
+        let db = fresh_db(&dir);
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert!(rec.matches(&k));
+        assert_eq!(rec.speedup, 4.0);
+    }
+
+    #[test]
     fn any_changed_key_component_misses() {
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let db = fresh_db(&dir);
         let k = key();
         db.store_hashed(&dummy_solution("demo"), &k).unwrap();
         let rec = db.load_record("demo").unwrap().unwrap();
@@ -666,7 +582,7 @@ mod tests {
     #[test]
     fn unhashed_record_has_no_reuse_key_and_never_matches() {
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let db = fresh_db(&dir);
         db.store(&dummy_solution("demo")).unwrap();
         let rec = db.load_record("demo").unwrap().unwrap();
         assert_eq!(rec.source_hash, None);
@@ -682,47 +598,64 @@ mod tests {
     }
 
     #[test]
-    fn writes_leave_only_the_record_behind() {
+    fn writes_leave_only_shard_logs_behind() {
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let db = fresh_db(&dir);
         db.store_hashed(&dummy_solution("demo"), &key()).unwrap();
-        let names: Vec<String> = std::fs::read_dir(dir.path())
-            .unwrap()
-            .map(|e| {
-                e.unwrap().file_name().to_string_lossy().into_owned()
-            })
-            .collect();
-        // The temp file was renamed over the destination, not left over.
-        assert_eq!(names, vec!["demo.pattern.json".to_string()]);
+        for entry in std::fs::read_dir(dir.path()).unwrap() {
+            let name =
+                entry.unwrap().file_name().to_string_lossy().into_owned();
+            // Only shard logs — no scratch files, no flat records.
+            assert!(
+                name.starts_with("shard-") && name.ends_with(".log"),
+                "unexpected file {name:?}"
+            );
+        }
     }
 
     #[test]
-    fn interrupted_write_is_invisible_to_readers() {
-        // A crash mid-write leaves only a partial `.tmp` file (the
-        // rename never happened). Every read path must ignore it and
-        // keep serving the last complete record.
+    fn torn_append_is_truncated_and_prior_records_survive() {
+        // A crash mid-append leaves a torn frame at the shard log's
+        // tail. Reopening truncates the tear and serves every record
+        // that was durable before it.
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let db = fresh_db(&dir);
         db.store_hashed(&dummy_solution("demo"), &key()).unwrap();
-        let tmp = dir.path().join("demo.pattern.json.tmp");
-        std::fs::write(&tmp, "{\"app\": \"demo\", \"speedup\"").unwrap();
-        assert_eq!(db.list().unwrap(), vec!["demo".to_string()]);
+        let shard = db.path_of("demo");
+        let full = std::fs::read(&shard).unwrap();
+        let mut torn = full.clone();
+        torn.extend_from_slice(&full[..full.len() - 3]);
+        std::fs::write(&shard, &torn).unwrap();
+        drop(db);
+        let db = fresh_db(&dir);
         let rec = db.load_record("demo").unwrap().unwrap();
         assert_eq!(rec.speedup, 4.0);
         assert!(db.quarantined().unwrap().is_empty());
+        assert_eq!(
+            db.store_handle().stats().snapshot().torn_truncations,
+            1
+        );
     }
 
     #[test]
     fn corrupt_record_is_quarantined_not_fatal() {
-        // A record that exists but does not parse (pre-atomic-write
-        // crash, corruption) is moved aside and reported absent — the
+        // A record that checksums wrong (bit rot, a hand edit) is moved
+        // to the shard's `.corrupt` sidecar and reported absent — the
         // cycle re-searches instead of dying.
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let db = fresh_db(&dir);
         db.store_hashed(&dummy_solution("demo"), &key()).unwrap();
-        std::fs::write(db.path_of("demo"), "{\"app\": \"demo\",").unwrap();
+        let shard = db.path_of("demo");
+        let mut bytes = std::fs::read(&shard).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&shard, &bytes).unwrap();
+        drop(db);
+        let db = fresh_db(&dir);
         assert!(db.load_record("demo").unwrap().is_none());
-        assert_eq!(db.quarantined().unwrap(), vec!["demo".to_string()]);
+        let bad = db.quarantined().unwrap();
+        assert_eq!(bad.len(), 1);
+        assert!(bad[0].starts_with("shard-"), "{bad:?}");
         assert!(db.list().unwrap().is_empty());
         // A fresh store works again after the quarantine.
         db.store_hashed(&dummy_solution("demo"), &key()).unwrap();
@@ -732,47 +665,43 @@ mod tests {
 
     #[test]
     fn pre_funcblock_schema_record_never_matches() {
-        // Simulate a PR-3-era record: every key component except the
-        // catalog fingerprint. It must re-search, never reuse.
-        let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        // A PR-3-era record: every key component except the catalog
+        // fingerprint. It must re-search, never reuse.
         let k = key();
-        db.store_hashed(&dummy_solution("demo"), &k).unwrap();
-        let path = db.path_of("demo");
-        let text = std::fs::read_to_string(&path).unwrap();
-        let Json::Obj(mut map) = Json::parse(&text).unwrap() else {
+        let Json::Obj(mut map) =
+            record_json(&dummy_solution("demo"), Some(&k), 123)
+        else {
             panic!("record is an object");
         };
         map.remove("catalog_fp");
-        std::fs::write(&path, Json::Obj(map).pretty()).unwrap();
-        let rec = db.load_record("demo").unwrap().unwrap();
+        let rec =
+            StoredPattern::from_json(&Json::Obj(map), None).unwrap();
         assert_eq!(rec.config_fp, Some(k.config_fp));
         assert!(!rec.matches(&k));
     }
 
     #[test]
     fn pre_device_schema_record_never_matches() {
-        // Simulate a PR-2-era record: source_hash + backend + entry but
-        // no device / config fingerprint. It must be re-searched, never
-        // reused.
-        let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        // A PR-2-era record: source_hash + backend + entry but no
+        // device / config fingerprint. Re-searched, never reused.
         let k = key();
-        db.store_hashed(&dummy_solution("demo"), &k).unwrap();
-        let path = db.path_of("demo");
-        let text = std::fs::read_to_string(&path).unwrap();
-        let Json::Obj(mut map) = Json::parse(&text).unwrap() else {
+        let Json::Obj(mut map) =
+            record_json(&dummy_solution("demo"), Some(&k), 123)
+        else {
             panic!("record is an object");
         };
         map.remove("device");
         map.remove("config_fp");
-        std::fs::write(&path, Json::Obj(map).pretty()).unwrap();
-        let rec = db.load_record("demo").unwrap().unwrap();
+        let rec =
+            StoredPattern::from_json(&Json::Obj(map), None).unwrap();
         assert_eq!(rec.source_hash, Some(k.source_hash));
         assert!(!rec.matches(&k));
     }
 
-    fn dummy_solution_with_speedup(app: &str, speedup: f64) -> OffloadSolution {
+    fn dummy_solution_with_speedup(
+        app: &str,
+        speedup: f64,
+    ) -> OffloadSolution {
         let mut sol = dummy_solution(app);
         sol.measurements[0].timing.speedup = speedup;
         sol
@@ -781,11 +710,10 @@ mod tests {
     #[test]
     fn older_stamped_write_does_not_clobber_newer_record() {
         // The race this guards: worker A solves, worker B re-solves a
-        // moment later, A's write lands *after* B's. Before the
-        // freshness rule, A's rename silently discarded B's fresher
-        // record. Now the stale write is dropped on the floor.
+        // moment later, A's write lands *after* B's. The freshness rule
+        // drops the stale append on the floor.
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let db = fresh_db(&dir);
         let k = key();
         db.write_record_stamped(
             &dummy_solution_with_speedup("demo", 8.0),
@@ -803,6 +731,10 @@ mod tests {
         let rec = db.load_record("demo").unwrap().unwrap();
         assert_eq!(rec.stored_at, Some(1_000));
         assert_eq!(rec.speedup, 8.0);
+        assert_eq!(
+            db.store_handle().stats().snapshot().stale_writes_dropped,
+            1
+        );
         // A genuinely fresher writer still wins.
         db.write_record_stamped(
             &dummy_solution_with_speedup("demo", 3.0),
@@ -818,7 +750,7 @@ mod tests {
     #[test]
     fn concurrent_same_app_stores_keep_the_freshest_stamp() {
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let db = fresh_db(&dir);
         let k = key();
         std::thread::scope(|s| {
             for i in 0..8u64 {
@@ -837,26 +769,48 @@ mod tests {
                 });
             }
         });
-        // Whatever the interleaving, the surviving record parses and
-        // carries the freshest stamp (and that writer's payload).
+        // Whatever the interleaving, the live record carries the
+        // freshest stamp (and that writer's payload) — in memory and
+        // after a cold replay.
         let rec = db.load_record("demo").unwrap().unwrap();
         assert_eq!(rec.stored_at, Some(5_007));
         assert_eq!(rec.speedup, 8.0);
         assert!(db.quarantined().unwrap().is_empty());
-        // No stray temp files survive the stampede.
-        let leftovers: Vec<String> = std::fs::read_dir(dir.path())
-            .unwrap()
-            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
-            .filter(|n| n != "demo.pattern.json")
-            .collect();
-        assert!(leftovers.is_empty(), "{leftovers:?}");
+        drop(db);
+        let db = fresh_db(&dir);
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert_eq!(rec.stored_at, Some(5_007));
+        assert_eq!(rec.speedup, 8.0);
+    }
+
+    #[test]
+    fn restamp_ages_a_record_in_memory_and_on_disk() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let db = fresh_db(&dir);
+        let k = key();
+        db.store_hashed(&dummy_solution("demo"), &k).unwrap();
+        assert!(db.restamp("demo", 42).unwrap());
+        assert!(!db.restamp("nope", 42).unwrap());
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert_eq!(rec.stored_at, Some(42));
+        // The restamped record still matches its key…
+        assert!(rec.matches(&k));
+        // …and the new stamp is durable.
+        drop(db);
+        let db = fresh_db(&dir);
+        assert_eq!(
+            db.load_record("demo").unwrap().unwrap().stored_at,
+            Some(42)
+        );
     }
 
     #[test]
     fn index_lookup_serves_from_memory_and_counts() {
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
         let k = key();
-        let idx = PatternIndex::open(dir.path()).unwrap();
+        let idx = PatternIndex::from_store(
+            PatternStore::open_fresh(dir.path()).unwrap(),
+        );
         assert!(idx.is_empty());
         idx.store_hashed(&dummy_solution("demo"), &k).unwrap();
         assert_eq!(idx.len(), 1);
@@ -872,36 +826,105 @@ mod tests {
     }
 
     #[test]
-    fn index_open_loads_existing_records_and_refresh_tracks_disk() {
+    fn index_refresh_tracks_external_appends_per_shard() {
+        // An *external process* appends to the shard log behind the
+        // index's back (simulated with a raw framed append). refresh()
+        // re-reads just that shard and syncs the one entry — including
+        // an external tombstone, which drops it.
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let store = PatternStore::open_fresh(dir.path()).unwrap();
+        let idx = PatternIndex::from_store(store.clone());
         let k = key();
-        db.store_hashed(&dummy_solution("demo"), &k).unwrap();
-        let idx = PatternIndex::open(dir.path()).unwrap();
-        assert_eq!(idx.len(), 1);
-        assert!(idx.lookup("demo", &k).is_some());
-        // An external writer updates the record; refresh picks it up.
-        db.store_hashed(&dummy_solution_with_speedup("demo", 6.0), &k)
-            .unwrap();
+        idx.store_hashed(&dummy_solution("demo"), &k).unwrap();
+        assert_eq!(idx.get("demo").unwrap().speedup, 4.0);
+
+        let external = record_json(
+            &dummy_solution_with_speedup("demo", 6.0),
+            Some(&k),
+            unix_now() + 10,
+        );
+        log::append(
+            &store.shard_path_of("demo"),
+            external.pretty().as_bytes(),
+        )
+        .unwrap();
+        // Not visible until refresh — the index is memory-backed.
         assert_eq!(idx.get("demo").unwrap().speedup, 4.0);
         idx.refresh("demo").unwrap();
         assert_eq!(idx.get("demo").unwrap().speedup, 6.0);
-        // The file disappears; refresh drops the entry.
-        std::fs::remove_file(db.path_of("demo")).unwrap();
+
+        // External tombstone: refresh drops the entry.
+        let tomb = Json::obj(vec![("tombstone", Json::Str("demo".into()))]);
+        log::append(
+            &store.shard_path_of("demo"),
+            tomb.pretty().as_bytes(),
+        )
+        .unwrap();
         idx.refresh("demo").unwrap();
         assert!(idx.get("demo").is_none());
         assert!(idx.is_empty());
     }
 
     #[test]
-    fn index_store_keeps_the_fresher_concurrent_record() {
-        // Write-through honors the freshness rule: if disk already has
-        // a fresher record, the index ends up holding *that* record,
-        // not the stale write it just attempted.
+    fn refresh_during_concurrent_hits_never_serves_a_torn_record() {
+        // Satellite regression: readers hammer the hit path while a
+        // writer alternates external appends + refresh. Every observed
+        // record must be exactly one of the two valid versions — a
+        // half-written or field-mixed record means the index published
+        // a torn state.
         let dir = TempDir::new("fpga-offload-pdb").unwrap();
-        let db = PatternDb::open(dir.path()).unwrap();
+        let store = PatternStore::open_fresh(dir.path()).unwrap();
+        let idx = PatternIndex::from_store(store.clone());
         let k = key();
-        let idx = PatternIndex::open(dir.path()).unwrap();
+        idx.store_hashed(&dummy_solution_with_speedup("demo", 4.0), &k)
+            .unwrap();
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed)
+                    {
+                        if let Some(rec) = idx.lookup("demo", &k) {
+                            // A torn record would break the pairing
+                            // between stamp and payload (or the key).
+                            assert!(rec.matches(&k));
+                            let valid = (rec.speedup == 4.0)
+                                || (rec.speedup == 9.0
+                                    && rec.stored_at
+                                        == Some(9_999_999_999));
+                            assert!(
+                                valid,
+                                "torn record observed: {rec:?}"
+                            );
+                        }
+                    }
+                });
+            }
+            let shard = store.shard_path_of("demo");
+            for _ in 0..100 {
+                let fresh = record_json(
+                    &dummy_solution_with_speedup("demo", 9.0),
+                    Some(&k),
+                    9_999_999_999,
+                );
+                log::append(&shard, fresh.pretty().as_bytes()).unwrap();
+                idx.refresh("demo").unwrap();
+            }
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert_eq!(idx.get("demo").unwrap().speedup, 9.0);
+    }
+
+    #[test]
+    fn index_store_keeps_the_fresher_concurrent_record() {
+        // Write-through honors the freshness rule: if the store already
+        // holds a fresher record, the index keeps *that* record, not
+        // the stale write it just attempted.
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let store = PatternStore::open_fresh(dir.path()).unwrap();
+        let db = PatternDb::from_store(store.clone());
+        let idx = PatternIndex::from_store(store);
+        let k = key();
         db.write_record_stamped(
             &dummy_solution_with_speedup("demo", 9.0),
             Some(&k),
@@ -912,5 +935,153 @@ mod tests {
             .unwrap();
         assert_eq!(idx.get("demo").unwrap().speedup, 9.0);
         assert_eq!(idx.get("demo").unwrap().stored_at, Some(u64::MAX - 1));
+    }
+
+    #[test]
+    fn eviction_prefers_cheap_stale_records_and_counts() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let store = PatternStore::open_fresh(dir.path()).unwrap();
+        store.set_capacity(Some(2));
+        let db = PatternDb::from_store(store.clone());
+        let k = key();
+        let now = unix_now();
+        // Expensive+fresh, cheap+ancient, then a third write that
+        // overflows capacity: the cheap stale record must be the victim.
+        db.write_record_stamped(
+            &dummy_solution_with_speedup("keeper", 4.0),
+            Some(&k),
+            now,
+        )
+        .unwrap();
+        db.write_record_stamped(
+            &dummy_solution_with_speedup("victim", 4.0),
+            Some(&k),
+            now.saturating_sub(30 * 86_400),
+        )
+        .unwrap();
+        db.write_record_stamped(
+            &dummy_solution_with_speedup("newcomer", 4.0),
+            Some(&k),
+            now,
+        )
+        .unwrap();
+        assert_eq!(
+            db.list().unwrap(),
+            vec!["keeper".to_string(), "newcomer".to_string()]
+        );
+        let snap = store.stats().snapshot();
+        assert_eq!(snap.evictions, 1);
+        // Eviction is durable: a cold replay agrees.
+        drop((db, store));
+        let db = fresh_db(&dir);
+        assert_eq!(
+            db.list().unwrap(),
+            vec!["keeper".to_string(), "newcomer".to_string()]
+        );
+    }
+
+    #[test]
+    fn compaction_reclaims_dead_records_and_preserves_live_state() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let store = PatternStore::open_fresh(dir.path()).unwrap();
+        let db = PatternDb::from_store(store.clone());
+        let k = key();
+        // Many supersedes of one app pile up dead records until the
+        // policy (dead >= 8, ratio >= 0.5) rewrites the shard.
+        for i in 0..20u64 {
+            db.write_record_stamped(
+                &dummy_solution_with_speedup("demo", i as f64 + 1.0),
+                Some(&k),
+                1_000 + i,
+            )
+            .unwrap();
+        }
+        let snap = store.stats().snapshot();
+        assert!(snap.compactions >= 1, "{snap:?}");
+        // Low dead load after compaction, and the freshest record won.
+        assert!(store.dead_records() < 8);
+        let rec = db.load_record("demo").unwrap().unwrap();
+        assert_eq!(rec.speedup, 20.0);
+        // Durability across a cold replay.
+        drop((db, store));
+        let db = fresh_db(&dir);
+        assert_eq!(db.load_record("demo").unwrap().unwrap().speedup, 20.0);
+    }
+
+    #[test]
+    fn migrate_legacy_moves_flat_records_into_the_shards() {
+        let dir = TempDir::new("fpga-offload-pdb").unwrap();
+        let k = key();
+        // Seed a legacy layout: two flat records + one corrupt file.
+        let a = record_json(&dummy_solution("alpha"), Some(&k), 1_000);
+        let b = record_json(&dummy_solution("beta"), None, 0);
+        std::fs::write(dir.join("alpha.pattern.json"), a.pretty())
+            .unwrap();
+        std::fs::write(dir.join("beta.pattern.json"), b.pretty()).unwrap();
+        std::fs::write(dir.join("bad.pattern.json"), "{\"app\": ").unwrap();
+
+        let store = PatternStore::open_fresh(dir.path()).unwrap();
+        let db = PatternDb::from_store(store.clone());
+        // Legacy files are invisible until migrated.
+        assert!(db.list().unwrap().is_empty());
+        assert_eq!(store.legacy_count(), 3);
+
+        let report = store.migrate_legacy().unwrap();
+        assert_eq!(report.migrated, 2);
+        assert_eq!(report.quarantined, 1);
+        assert_eq!(report.skipped_stale, 0);
+        assert_eq!(
+            db.list().unwrap(),
+            vec!["alpha".to_string(), "beta".to_string()]
+        );
+        let alpha = db.load_record("alpha").unwrap().unwrap();
+        assert!(alpha.matches(&k));
+        assert_eq!(alpha.stored_at, Some(1_000));
+        assert_eq!(db.quarantined().unwrap(), vec!["bad".to_string()]);
+        assert_eq!(store.legacy_count(), 0);
+
+        // Idempotent: nothing left to migrate.
+        let again = store.migrate_legacy().unwrap();
+        assert_eq!(again, crate::store::MigrationReport::default());
+
+        // And durable: a cold replay serves the migrated records.
+        drop((db, store));
+        let db = fresh_db(&dir);
+        assert_eq!(db.list().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn export_then_migrate_roundtrips() {
+        let src = TempDir::new("fpga-offload-pdb-src").unwrap();
+        let dst = TempDir::new("fpga-offload-pdb-dst").unwrap();
+        let k = key();
+        let store = PatternStore::open_fresh(src.path()).unwrap();
+        let db = PatternDb::from_store(store.clone());
+        db.store_hashed(&dummy_solution("alpha"), &k).unwrap();
+        db.store_hashed(&dummy_solution("beta"), &k).unwrap();
+        assert_eq!(store.export_legacy(dst.path()).unwrap(), 2);
+        // The export is a valid legacy layout: flat-scannable…
+        let scanned = PatternStore::scan_legacy(dst.path()).unwrap();
+        assert_eq!(scanned.len(), 2);
+        assert!(scanned.iter().all(|r| r.matches(&k)));
+        // …and migratable into a fresh store.
+        let dst_store = PatternStore::open_fresh(dst.path()).unwrap();
+        assert_eq!(dst_store.migrate_legacy().unwrap().migrated, 2);
+        assert_eq!(
+            PatternDb::from_store(dst_store).list().unwrap(),
+            vec!["alpha".to_string(), "beta".to_string()]
+        );
+    }
+
+    #[test]
+    fn open_shares_one_handle_per_directory() {
+        let dir = TempDir::new("fpga-offload-pdb-reg").unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        let idx = PatternIndex::open(dir.path()).unwrap();
+        // Same engine: a write through one facade is instantly visible
+        // (and counted) through the other.
+        db.store_hashed(&dummy_solution("demo"), &key()).unwrap();
+        assert_eq!(idx.len(), 1);
+        assert!(Arc::ptr_eq(db.store_handle(), idx.store_handle()));
     }
 }

@@ -1252,23 +1252,10 @@ int main() {
         assert!(second.plan.is_cached());
 
         // Age the record past max_age: the hit must degrade to a fresh
-        // re-measurement, not blind reuse.
-        let path = first.stored_at.clone().unwrap();
-        let text = std::fs::read_to_string(&path).unwrap();
-        let crate::util::json::Json::Obj(mut map) =
-            crate::util::json::Json::parse(&text).unwrap()
-        else {
-            panic!("record is an object");
-        };
-        map.insert(
-            "stored_at".to_string(),
-            crate::util::json::Json::Str(format!(
-                "{}",
-                crate::envadapt::patterndb::unix_now() - 7200
-            )),
-        );
-        std::fs::write(&path, crate::util::json::Json::Obj(map).pretty())
-            .unwrap();
+        // re-measurement, not blind reuse. (restamp is the store's seam
+        // for exactly this — the record itself stays byte-identical.)
+        let db = PatternDb::open(dir.path()).unwrap();
+        db.restamp("mini", unix_now() - 7200).unwrap();
 
         let third = pipe.solve(request("mini")).unwrap();
         assert!(!third.plan.is_cached(), "aged record must re-measure");
@@ -1276,8 +1263,8 @@ int main() {
         let fourth = pipe.solve(request("mini")).unwrap();
         assert!(fourth.plan.is_cached());
 
-        // A pipeline without an age policy reuses the aged record.
-        std::fs::write(&path, text).unwrap();
+        // A pipeline without an age policy reuses even an aged record.
+        db.restamp("mini", unix_now() - 720_000).unwrap();
         let lax = Pipeline::new(SearchConfig::default(), &b)
             .unwrap()
             .with_pattern_db(dir.path())
@@ -1364,22 +1351,8 @@ int main() {
         assert_eq!(first.plan.best_loops(), fb.plan.best_loops());
 
         // Age the record far past max_age: still served as fallback.
-        let path = first.stored_at.clone().unwrap();
-        let text = std::fs::read_to_string(&path).unwrap();
-        let crate::util::json::Json::Obj(mut map) =
-            crate::util::json::Json::parse(&text).unwrap()
-        else {
-            panic!("record is an object");
-        };
-        map.insert(
-            "stored_at".to_string(),
-            crate::util::json::Json::Str(format!(
-                "{}",
-                crate::envadapt::patterndb::unix_now() - 720_000
-            )),
-        );
-        std::fs::write(&path, crate::util::json::Json::Obj(map).pretty())
-            .unwrap();
+        let db = PatternDb::open(dir.path()).unwrap();
+        db.restamp("mini", unix_now() - 720_000).unwrap();
         assert!(pipe.fallback_plan(&req).is_some(), "stale still serves");
 
         // A changed source must never be served a fallback.

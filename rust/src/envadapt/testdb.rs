@@ -5,10 +5,17 @@
 //! verification environment can run "the sample processing specified by
 //! the application". Here: app name → entry function + expected arrays +
 //! optional PJRT sample-test id (the real-kernel numeric probe).
+//!
+//! On-disk snapshots share the pattern store's checksummed frame format
+//! ([`crate::store::log`]): [`TestDb::save`] writes one frame per case
+//! atomically, [`TestDb::load`] reads back only checksum-clean frames.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
+use crate::store::log;
 use crate::util::json::Json;
+use anyhow::Result;
 
 /// One registered test case.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -78,61 +85,89 @@ impl TestDb {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::Arr(
-            self.cases
-                .values()
-                .map(|c| {
-                    Json::obj(vec![
-                        ("app", Json::Str(c.app.clone())),
-                        ("entry", Json::Str(c.entry.clone())),
-                        (
-                            "observed_arrays",
-                            Json::Arr(
-                                c.observed_arrays
-                                    .iter()
-                                    .map(|a| Json::Str(a.clone()))
-                                    .collect(),
-                            ),
-                        ),
-                        (
-                            "pjrt_sample",
-                            c.pjrt_sample
-                                .clone()
-                                .map(Json::Str)
-                                .unwrap_or(Json::Null),
-                        ),
-                        ("description", Json::Str(c.description.clone())),
-                    ])
-                })
-                .collect(),
-        )
+        Json::Arr(self.cases.values().map(case_json).collect())
     }
 
     pub fn from_json(v: &Json) -> Option<Self> {
         let mut db = Self::new();
         for item in v.as_arr()? {
-            let case = TestCase {
-                app: item.get(&["app"])?.as_str()?.to_string(),
-                entry: item.get(&["entry"])?.as_str()?.to_string(),
-                observed_arrays: item
-                    .get(&["observed_arrays"])?
-                    .as_arr()?
-                    .iter()
-                    .filter_map(|a| a.as_str().map(String::from))
-                    .collect(),
-                pjrt_sample: item
-                    .get(&["pjrt_sample"])
-                    .and_then(Json::as_str)
-                    .map(String::from),
-                description: item
-                    .get(&["description"])?
-                    .as_str()?
-                    .to_string(),
-            };
-            db.register(case);
+            db.register(case_from_json(item)?);
         }
         Some(db)
     }
+
+    /// Snapshot the registry to `path`: one checksummed frame per case,
+    /// replaced atomically via the pattern store's log writer.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let payloads: Vec<Vec<u8>> = self
+            .cases
+            .values()
+            .map(|c| case_json(c).to_string().into_bytes())
+            .collect();
+        let refs: Vec<&[u8]> =
+            payloads.iter().map(Vec::as_slice).collect();
+        log::write_atomic(path, &refs)
+    }
+
+    /// Load a snapshot written by [`TestDb::save`]. Only frames whose
+    /// checksums hold are read; a missing file loads as empty.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut db = Self::new();
+        for payload in log::read_frames(path)? {
+            let Ok(text) = String::from_utf8(payload) else {
+                continue;
+            };
+            let Ok(json) = Json::parse(&text) else {
+                continue;
+            };
+            if let Some(case) = case_from_json(&json) {
+                db.register(case);
+            }
+        }
+        Ok(db)
+    }
+}
+
+fn case_json(c: &TestCase) -> Json {
+    Json::obj(vec![
+        ("app", Json::Str(c.app.clone())),
+        ("entry", Json::Str(c.entry.clone())),
+        (
+            "observed_arrays",
+            Json::Arr(
+                c.observed_arrays
+                    .iter()
+                    .map(|a| Json::Str(a.clone()))
+                    .collect(),
+            ),
+        ),
+        (
+            "pjrt_sample",
+            c.pjrt_sample
+                .clone()
+                .map(Json::Str)
+                .unwrap_or(Json::Null),
+        ),
+        ("description", Json::Str(c.description.clone())),
+    ])
+}
+
+fn case_from_json(item: &Json) -> Option<TestCase> {
+    Some(TestCase {
+        app: item.get(&["app"])?.as_str()?.to_string(),
+        entry: item.get(&["entry"])?.as_str()?.to_string(),
+        observed_arrays: item
+            .get(&["observed_arrays"])?
+            .as_arr()?
+            .iter()
+            .filter_map(|a| a.as_str().map(String::from))
+            .collect(),
+        pjrt_sample: item
+            .get(&["pjrt_sample"])
+            .and_then(Json::as_str)
+            .map(String::from),
+        description: item.get(&["description"])?.as_str()?.to_string(),
+    })
 }
 
 #[cfg(test)]
@@ -163,5 +198,30 @@ mod tests {
     fn sobel_is_cpu_only() {
         let db = TestDb::builtin();
         assert!(db.get("sobel").unwrap().pjrt_sample.is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrips() {
+        let dir = crate::util::tempdir::TempDir::new("testdb").unwrap();
+        let path = dir.join("cases.db");
+        let db = TestDb::builtin();
+        db.save(&path).unwrap();
+        let back = TestDb::load(&path).unwrap();
+        assert_eq!(db.apps(), back.apps());
+        assert_eq!(db.get("tdfir"), back.get("tdfir"));
+    }
+
+    #[test]
+    fn torn_tail_keeps_checksum_clean_cases() {
+        let dir =
+            crate::util::tempdir::TempDir::new("testdb-torn").unwrap();
+        let path = dir.join("cases.db");
+        TestDb::builtin().save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        std::fs::write(&path, &bytes).unwrap();
+        let back = TestDb::load(&path).unwrap();
+        // The torn final frame is dropped; everything before it loads.
+        assert_eq!(back.apps().len(), TestDb::builtin().apps().len() - 1);
     }
 }

@@ -55,10 +55,12 @@
 //!
 //! Support: [`cpu`] (CPU cost model + the [`cpu::omp`] many-core OpenMP
 //! destination), [`fpga`] (FPGA simulator + transfer model), [`runtime`]
-//! (PJRT artifacts), [`workloads`] (bundled applications), [`service`]
-//! (the resident plan-serving daemon behind `repro serve`), [`cli`], and
-//! [`util`]. See `ARCHITECTURE.md` at the repository root for the full
-//! data-flow map and the recipe for adding another destination.
+//! (PJRT artifacts), [`workloads`] (bundled applications), [`store`]
+//! (the sharded, log-structured pattern store every DB facade sits on),
+//! [`service`] (the resident plan-serving daemon behind `repro serve`),
+//! [`cli`], and [`util`]. See `ARCHITECTURE.md` at the repository root
+//! for the full data-flow map and the recipe for adding another
+//! destination.
 //!
 //! # Quickstart
 //!
@@ -103,6 +105,7 @@ pub mod minic;
 pub mod runtime;
 pub mod search;
 pub mod service;
+pub mod store;
 pub mod util;
 pub mod workloads;
 

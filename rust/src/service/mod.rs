@@ -174,6 +174,11 @@ pub struct ServiceConfig {
     /// `stage_deadline_s`, so a hung simulated build trips the request
     /// deadline too.
     pub retry: Option<RetryPolicy>,
+    /// Live-record cap on the pattern store. Over capacity, the
+    /// cheapest-to-recompute records (low solve investment, high
+    /// staleness — see [`crate::store::evict`]) are evicted on the next
+    /// write. `None` (the default) never evicts.
+    pub db_capacity: Option<usize>,
 }
 
 impl Default for ServiceConfig {
@@ -187,6 +192,7 @@ impl Default for ServiceConfig {
             max_age: None,
             refresh_ahead: 0.8,
             retry: None,
+            db_capacity: None,
         }
     }
 }
@@ -205,6 +211,12 @@ impl ServiceConfig {
         }
         if let Some(policy) = &self.retry {
             policy.validate()?;
+        }
+        if self.db_capacity == Some(0) {
+            return Err(
+                "db_capacity must be >= 1 (omit it to disable eviction)"
+                    .into(),
+            );
         }
         Ok(())
     }

@@ -39,6 +39,7 @@ use crate::search::{FaultClass, OffloadError, RetryPolicy, SimClock, Stage};
 
 use super::queue::{BoundedQueue, PushError};
 use super::stats::{ServiceStats, StatsSnapshot};
+use crate::store::StoreStatsSnapshot;
 use super::{
     PlanRequest, PlanResponse, ServeClass, ServedPlan, ServiceConfig,
 };
@@ -154,8 +155,16 @@ impl Inner {
                         }
                     }
                     // Unstamped records count as infinitely old, same
-                    // as the pipeline's max-age policy.
-                    _ => Probe::Miss,
+                    // as the pipeline's max-age policy. Either way the
+                    // record *matched* the key — count it as a stale
+                    // hit so operators can tell "cache too old" apart
+                    // from "cache never had it".
+                    _ => {
+                        if count {
+                            idx.store_handle().stats().note_stale_hit();
+                        }
+                        Probe::Miss
+                    }
                 }
             }
         }
@@ -356,9 +365,11 @@ impl Inner {
                 self.stats.degraded();
             }
         }
-        // The pipeline wrote the record to disk (pattern DB configured);
-        // pull it into the shared index before answering so the next
-        // identical request is a hit.
+        // The pipeline wrote through the shared sharded store, so the
+        // index already sees the record. The per-shard refresh here only
+        // re-syncs against *external* writers (another process on the
+        // same DB dir) and touches one shard, never the hit path's read
+        // locks on the other fifteen.
         if let Some(idx) = &self.index {
             let _ = idx.refresh(&job.req.app);
         }
@@ -403,7 +414,14 @@ impl Service {
         cfg.validate()
             .map_err(|e| anyhow::anyhow!("invalid service config: {e}"))?;
         let index = match &cfg.pattern_db {
-            Some(dir) => Some(PatternIndex::open(dir)?),
+            Some(dir) => {
+                let idx = PatternIndex::open(dir)?;
+                // The store handle is shared process-wide, so the
+                // capacity set here also governs the workers' pipeline
+                // writes.
+                idx.store_handle().set_capacity(cfg.db_capacity);
+                Some(idx)
+            }
             None => None,
         };
         let queue = BoundedQueue::new(cfg.queue_cap);
@@ -633,11 +651,11 @@ impl Service {
     /// Point-in-time counters and latency quantiles.
     pub fn stats(&self) -> StatsSnapshot {
         let inner = &self.inner;
-        let (records, index_hits, index_misses) = match &inner.index {
+        let (records, store) = match &inner.index {
             Some(idx) => {
-                (idx.len(), idx.hit_count(), idx.miss_count())
+                (idx.len(), idx.store_handle().stats().snapshot())
             }
-            None => (0, 0, 0),
+            None => (0, StoreStatsSnapshot::default()),
         };
         let inflight = inner
             .inflight
@@ -648,8 +666,7 @@ impl Service {
             inner.queue.len(),
             inflight,
             records,
-            index_hits,
-            index_misses,
+            store,
         )
     }
 

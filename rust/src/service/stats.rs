@@ -9,6 +9,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::store::StoreStatsSnapshot;
 use crate::util::json::Json;
 
 /// Samples kept per latency class.
@@ -150,14 +151,15 @@ impl ServiceStats {
     }
 
     /// Point-in-time copy of every counter and quantile. Queue/index
-    /// figures are passed in by the service, which owns those.
+    /// figures are passed in by the service, which owns those; `store`
+    /// is the pattern store's own counter snapshot (lookups, staleness,
+    /// eviction, compaction, recovery).
     pub fn snapshot(
         &self,
         queue_depth: usize,
         inflight: usize,
         index_records: usize,
-        index_hits: u64,
-        index_misses: u64,
+        store: StoreStatsSnapshot,
     ) -> StatsSnapshot {
         let (hit_p50_us, hit_p99_us, hit_max_us) = self
             .hit_latency
@@ -187,8 +189,9 @@ impl ServiceStats {
             queue_depth,
             inflight,
             index_records,
-            index_hits,
-            index_misses,
+            index_hits: store.hits,
+            index_misses: store.misses,
+            store,
             hit_p50_us,
             hit_p99_us,
             hit_max_us,
@@ -232,6 +235,9 @@ pub struct StatsSnapshot {
     /// expired record matches the key but is re-searched anyway).
     pub index_hits: u64,
     pub index_misses: u64,
+    /// The sharded pattern store's own counters — staleness, appends,
+    /// eviction, compaction, crash-recovery tallies.
+    pub store: StoreStatsSnapshot,
     pub hit_p50_us: u64,
     pub hit_p99_us: u64,
     pub hit_max_us: u64,
@@ -242,7 +248,7 @@ pub struct StatsSnapshot {
 
 impl StatsSnapshot {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("requests", Json::Num(self.requests as f64)),
             ("hits", Json::Num(self.hits as f64)),
             ("misses", Json::Num(self.misses as f64)),
@@ -273,7 +279,9 @@ impl StatsSnapshot {
             ("miss_p50_us", Json::Num(self.miss_p50_us as f64)),
             ("miss_p99_us", Json::Num(self.miss_p99_us as f64)),
             ("miss_max_us", Json::Num(self.miss_max_us as f64)),
-        ])
+        ];
+        fields.extend(self.store.to_json_fields());
+        Json::obj(fields)
     }
 }
 
@@ -323,7 +331,15 @@ mod tests {
         stats.request();
         stats.miss(5000);
         stats.solve(4900, false);
-        let snap = stats.snapshot(3, 1, 7, 10, 2);
+        let store = StoreStatsSnapshot {
+            hits: 10,
+            misses: 2,
+            evictions: 4,
+            compactions: 1,
+            stale_hits: 3,
+            ..StoreStatsSnapshot::default()
+        };
+        let snap = stats.snapshot(3, 1, 7, store);
         assert_eq!(snap.requests, 2);
         assert_eq!(snap.hits, 1);
         assert_eq!(snap.misses, 1);
@@ -337,6 +353,11 @@ mod tests {
             Some(5000.0)
         );
         assert_eq!(j.get(&["index_hits"]).unwrap().as_f64(), Some(10.0));
+        // The store's counters ride along in the same flat object —
+        // the contract the TCP smoke asserts on.
+        assert_eq!(j.get(&["evictions"]).unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.get(&["compactions"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get(&["stale_hits"]).unwrap().as_f64(), Some(3.0));
         // avg solve reflects the one recorded solve.
         assert!((snap.avg_solve_ms - 4.9).abs() < 1e-9);
     }

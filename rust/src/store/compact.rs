@@ -1,0 +1,67 @@
+//! When to rewrite a shard log.
+//!
+//! Appends never overwrite: every re-store, restamp, tombstone, and
+//! eviction leaves a dead record behind in the log, and replay cost on
+//! the next cold open grows with *total* records, not live ones. The
+//! compaction policy bounds that growth without rewriting the log on
+//! every mutation:
+//!
+//! * `min_dead` — don't bother below this many dead records; a rewrite
+//!   costs a full shard serialization + atomic rename.
+//! * `dead_ratio` — rewrite once dead records are at least this
+//!   fraction of the log. At the default 0.5 a shard log is never more
+//!   than ~2x its live size, so replay work stays proportional to the
+//!   live record count.
+//!
+//! The check runs *after* a mutation has released the shard's writer
+//! mutex (the mutex is not reentrant), so a storm of writers may each
+//! see `wants_compaction` and queue up — [`maybe_compact`] re-checks
+//! under the lock-free counters and at worst compacts an extra time,
+//! which is correct, just redundant.
+
+use anyhow::Result;
+
+use super::shard::Shard;
+use super::stats::StoreStats;
+
+/// Tunables for the dead-record rewrite trigger.
+#[derive(Debug, Clone, Copy)]
+pub struct CompactionPolicy {
+    /// Minimum dead records before a rewrite is worth the I/O.
+    pub min_dead: usize,
+    /// Dead fraction of the log (dead / total) that triggers a rewrite.
+    pub dead_ratio: f64,
+}
+
+impl Default for CompactionPolicy {
+    fn default() -> Self {
+        CompactionPolicy {
+            min_dead: 8,
+            dead_ratio: 0.5,
+        }
+    }
+}
+
+impl CompactionPolicy {
+    /// A policy that never triggers automatically (benches that want to
+    /// measure raw append throughput, tests that inspect dead counts).
+    pub fn never() -> Self {
+        CompactionPolicy {
+            min_dead: usize::MAX,
+            dead_ratio: 1.0,
+        }
+    }
+}
+
+/// Compact `shard` if the policy says so. Returns the number of dead
+/// records reclaimed (0 = no compaction ran).
+pub(crate) fn maybe_compact(
+    shard: &Shard,
+    policy: &CompactionPolicy,
+    stats: &StoreStats,
+) -> Result<usize> {
+    if !shard.wants_compaction(policy.min_dead, policy.dead_ratio) {
+        return Ok(0);
+    }
+    shard.compact(stats)
+}

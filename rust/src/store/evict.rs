@@ -1,0 +1,124 @@
+//! Cost-aware eviction policy for the pattern store.
+//!
+//! When a capacity is configured and the store grows past it, records
+//! must go — but unlike a generic LRU, pattern records have wildly
+//! different replacement costs: `automation_hours` is the solve time
+//! the paper's funnel + verification sweep took to discover the plan, a
+//! stand-in for a multi-hour HLS build. Evicting a 12-hour plan to keep
+//! a 4-minute one is a bad trade even if the 12-hour plan is older.
+//!
+//! The policy: each record gets a *keep score* of stored solve cost
+//! discounted by staleness — `automation_hours / (1 + age_hours)` — and
+//! the lowest score is evicted first. Stale records decay toward
+//! eviction (they were going to be re-searched under the age policy
+//! anyway), expensive records resist it, and unstamped records (no
+//! `stored_at`, infinitely old under every age policy) always go first.
+//! Ties break on the app name so concurrent runs evict deterministically.
+
+use crate::envadapt::patterndb::StoredPattern;
+
+/// Keep score at `now`. Higher = more worth keeping.
+pub(crate) fn keep_score(rec: &StoredPattern, now: u64) -> f64 {
+    match rec.age_secs(now) {
+        // Unstamped: infinitely stale, first out the door.
+        None => -1.0,
+        Some(age) => {
+            let age_hours = age as f64 / 3600.0;
+            rec.automation_hours.max(0.0) / (1.0 + age_hours)
+        }
+    }
+}
+
+/// Pick the `excess` cheapest-to-recompute victims from `candidates`,
+/// never choosing `protect` (the app whose store triggered the
+/// eviction — evicting what was just written would thrash).
+pub(crate) fn choose_victims(
+    candidates: &[StoredPattern],
+    excess: usize,
+    protect: &str,
+    now: u64,
+) -> Vec<String> {
+    let mut scored: Vec<(f64, &str)> = candidates
+        .iter()
+        .filter(|r| r.app != protect)
+        .map(|r| (keep_score(r, now), r.app.as_str()))
+        .collect();
+    scored.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.1.cmp(b.1))
+    });
+    scored
+        .into_iter()
+        .take(excess)
+        .map(|(_, app)| app.to_string())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(app: &str, hours: f64, stored_at: Option<u64>) -> StoredPattern {
+        StoredPattern {
+            app: app.to_string(),
+            source_hash: None,
+            backend: None,
+            entry: None,
+            device: None,
+            config_fp: None,
+            catalog_fp: None,
+            stored_at,
+            best_pattern: vec![],
+            blocks: 0,
+            speedup: 1.0,
+            automation_hours: hours,
+            verified: None,
+        }
+    }
+
+    #[test]
+    fn cheap_and_stale_go_before_expensive_and_fresh() {
+        let now = 1_000_000;
+        let candidates = vec![
+            rec("expensive-fresh", 12.0, Some(now - 60)),
+            rec("cheap-fresh", 0.1, Some(now - 60)),
+            rec("expensive-stale", 12.0, Some(now - 14 * 86_400)),
+            rec("cheap-stale", 0.1, Some(now - 14 * 86_400)),
+        ];
+        let victims = choose_victims(&candidates, 2, "none", now);
+        assert_eq!(victims, vec!["cheap-stale", "expensive-stale"]);
+        // Two weeks of staleness discounts a 12-hour plan below a fresh
+        // 6-minute one (12/337 < 0.1/1): age wins the next slot.
+        let three = choose_victims(&candidates, 3, "none", now);
+        assert_eq!(three[2], "cheap-fresh");
+    }
+
+    #[test]
+    fn unstamped_records_evict_first_and_protect_is_never_chosen() {
+        let now = 1_000_000;
+        let candidates = vec![
+            rec("unstamped", 100.0, None),
+            rec("fresh", 0.01, Some(now)),
+        ];
+        assert_eq!(
+            choose_victims(&candidates, 1, "none", now),
+            vec!["unstamped"]
+        );
+        assert_eq!(
+            choose_victims(&candidates, 2, "unstamped", now),
+            vec!["fresh"]
+        );
+    }
+
+    #[test]
+    fn ties_break_deterministically_by_app_name() {
+        let now = 500;
+        let candidates = vec![
+            rec("b", 1.0, Some(now)),
+            rec("a", 1.0, Some(now)),
+            rec("c", 1.0, Some(now)),
+        ];
+        assert_eq!(choose_victims(&candidates, 2, "none", now), vec!["a", "b"]);
+    }
+}

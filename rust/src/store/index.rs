@@ -1,0 +1,99 @@
+//! Shard routing and the process-wide open-store registry.
+//!
+//! ## Routing
+//!
+//! Records are keyed by app name (the unit every lookup, refresh, and
+//! tombstone addresses — a [`crate::envadapt::ReuseKey`] is matched
+//! *within* the app's record), so the app name is what routes to a
+//! shard: FNV-1a of the name, mod 16. The same hash family fingerprints
+//! sources and frames log records, so the whole store speaks one hash.
+//!
+//! 16 shards is deliberate overprovisioning for the service tier's
+//! worker pools (2–16 workers): with independent writer mutexes per
+//! shard, the probability that two concurrent cold solves serialize on
+//! the same lock stays low, and a shard log at 10k records holds ~625
+//! records — a sub-millisecond replay.
+//!
+//! ## Registry
+//!
+//! Opening the same directory twice in one process must yield the
+//! *same* store: the service's `PatternIndex` and a pipeline's
+//! `PatternDb` write through one set of shard locks and one in-memory
+//! index (this is also what makes warm opens O(1) — the replay already
+//! happened). The registry maps the canonicalized directory to a
+//! [`Weak`] handle: when the last `Arc` drops, the entry dies, and the
+//! next open replays from disk — which is exactly what crash-recovery
+//! tests (drop, mangle bytes, reopen) need.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+use super::PatternStore;
+
+/// Number of shards per store directory. Baked into the on-disk layout
+/// (`shard-00.log` … `shard-15.log`); changing it is a migration.
+pub const SHARD_COUNT: usize = 16;
+
+/// Which shard an app's records live in.
+pub(crate) fn shard_of(app: &str) -> usize {
+    (super::log::fnv1a(app.as_bytes()) % SHARD_COUNT as u64) as usize
+}
+
+/// Log file name for a shard slot.
+pub(crate) fn shard_file(slot: usize) -> String {
+    format!("shard-{slot:02}.log")
+}
+
+type Registry = Mutex<HashMap<PathBuf, Weak<PatternStore>>>;
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Stable per-directory key. The directory exists by the time this is
+/// called (open creates it), so canonicalization only fails on exotic
+/// filesystems — fall back to the raw path rather than erroring.
+fn registry_key(dir: &Path) -> PathBuf {
+    dir.canonicalize().unwrap_or_else(|_| dir.to_path_buf())
+}
+
+/// A live store already open on `dir`, if any.
+pub(crate) fn lookup(dir: &Path) -> Option<Arc<PatternStore>> {
+    let key = registry_key(dir);
+    let guard = registry().lock().unwrap_or_else(|p| p.into_inner());
+    guard.get(&key).and_then(Weak::upgrade)
+}
+
+/// Publish a freshly opened store (and sweep dead entries so the map
+/// doesn't accumulate one tombstone per temp dir ever opened).
+pub(crate) fn publish(dir: &Path, store: &Arc<PatternStore>) {
+    let key = registry_key(dir);
+    let mut guard = registry().lock().unwrap_or_else(|p| p.into_inner());
+    guard.retain(|_, w| w.strong_count() > 0);
+    guard.insert(key, Arc::downgrade(store));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_and_in_range() {
+        for app in ["tdfir", "mriq", "sobel", "", "a", "Ω"] {
+            let s = shard_of(app);
+            assert!(s < SHARD_COUNT);
+            assert_eq!(s, shard_of(app));
+        }
+    }
+
+    #[test]
+    fn shard_files_are_zero_padded_and_unique() {
+        let names: std::collections::BTreeSet<String> =
+            (0..SHARD_COUNT).map(shard_file).collect();
+        assert_eq!(names.len(), SHARD_COUNT);
+        assert!(names.contains("shard-00.log"));
+        assert!(names.contains("shard-15.log"));
+    }
+}

@@ -1,0 +1,354 @@
+//! Record framing for the append-only shard logs: length-prefixed,
+//! checksummed, crash-safe.
+//!
+//! Every durable byte the pattern store writes goes through this module,
+//! and the same helpers back the [`crate::envadapt::TestDb`] /
+//! [`crate::envadapt::FacilityDb`] persistence paths, so there is exactly
+//! one framing/recovery implementation in the repo.
+//!
+//! ## Frame format
+//!
+//! ```text
+//! [u32 LE payload length][u64 LE FNV-1a(payload)][payload bytes]
+//! ```
+//!
+//! A record is valid only if the full frame is present *and* the
+//! checksum matches. Recovery ([`replay`]) distinguishes the two ways a
+//! log can be damaged:
+//!
+//! * **Torn tail** — the file ends mid-frame (a crash between `write`
+//!   and completion). Everything before the tear is intact; the tail is
+//!   truncated away and replay reports how many bytes were dropped.
+//! * **Corruption** — a frame whose checksum does not match its payload
+//!   (bit rot, a hand edit, overlapping writers from a foreign process).
+//!   Framing downstream of a corrupt record cannot be trusted, so the
+//!   remainder of the file is *quarantined*: moved verbatim into a
+//!   `.corrupt` sidecar for inspection, then truncated out of the log —
+//!   the same "preserve, don't serve" policy the flat-file store applied
+//!   per app.
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Frame header size: u32 length + u64 checksum.
+pub const FRAME_HEADER: usize = 12;
+
+/// Payloads above this are rejected as corruption during replay (no
+/// legitimate record is remotely this large; a garbage length would
+/// otherwise make replay "wait" for gigabytes that never existed).
+pub const MAX_PAYLOAD: usize = 1 << 28;
+
+/// 64-bit FNV-1a over a byte slice — the same hash family the reuse
+/// keys and shard router use.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Append one framed payload to `buf`.
+pub fn push_frame(buf: &mut Vec<u8>, payload: &[u8]) {
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&fnv1a(payload).to_le_bytes());
+    buf.extend_from_slice(payload);
+}
+
+/// Append one framed record to the log at `path` (created if absent).
+/// The frame is assembled in memory and handed to the kernel in a
+/// single `write`, so a crash can tear the *tail* of a record but never
+/// interleave two records.
+pub fn append(path: &Path, payload: &[u8]) -> Result<()> {
+    let mut frame = Vec::with_capacity(FRAME_HEADER + payload.len());
+    push_frame(&mut frame, payload);
+    let mut file = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening log {path:?}"))?;
+    file.write_all(&frame)
+        .with_context(|| format!("appending to log {path:?}"))?;
+    file.flush()
+        .with_context(|| format!("flushing log {path:?}"))?;
+    Ok(())
+}
+
+/// Atomically replace the file at `path` with the framed `payloads`
+/// (compaction, whole-file snapshots): write a scratch file in the same
+/// directory, then rename it over the destination. A crash mid-write
+/// leaves only the scratch file, which no read path looks at.
+pub fn write_atomic(path: &Path, payloads: &[&[u8]]) -> Result<()> {
+    let total: usize =
+        payloads.iter().map(|p| FRAME_HEADER + p.len()).sum();
+    let mut buf = Vec::with_capacity(total);
+    for payload in payloads {
+        push_frame(&mut buf, payload);
+    }
+    let tmp = scratch_path(path);
+    std::fs::write(&tmp, &buf)
+        .with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} over {path:?}"))?;
+    Ok(())
+}
+
+/// Per-writer scratch-file name next to `path` (same filesystem, so the
+/// rename is atomic; pid + counter so concurrent writers never share).
+fn scratch_path(path: &Path) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let mut name = path.as_os_str().to_owned();
+    name.push(format!(
+        ".{}-{}.tmp",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::path::PathBuf::from(name)
+}
+
+/// What [`replay`] found besides the valid records.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Recovery {
+    /// Bytes of torn tail truncated away (0 = the log ended cleanly).
+    pub torn_bytes: u64,
+    /// Bytes quarantined to the `.corrupt` sidecar after a checksum
+    /// mismatch (0 = no corruption).
+    pub quarantined_bytes: u64,
+}
+
+impl Recovery {
+    pub fn clean(&self) -> bool {
+        self.torn_bytes == 0 && self.quarantined_bytes == 0
+    }
+}
+
+/// Replay a log: return every valid payload in append order, repairing
+/// the file in place per the module policy (torn tail truncated, the
+/// remainder after a corrupt frame quarantined to `<path>.corrupt` and
+/// truncated). A missing file replays as empty.
+pub fn replay(path: &Path) -> Result<(Vec<Vec<u8>>, Recovery)> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok((Vec::new(), Recovery::default()))
+        }
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading log {path:?}"))
+        }
+    };
+    let (records, valid_up_to, damage) = scan(&bytes);
+    let mut recovery = Recovery::default();
+    match damage {
+        Damage::None => {}
+        Damage::TornTail => {
+            recovery.torn_bytes = (bytes.len() - valid_up_to) as u64;
+            truncate(path, valid_up_to)?;
+        }
+        Damage::Corrupt => {
+            recovery.quarantined_bytes =
+                (bytes.len() - valid_up_to) as u64;
+            quarantine(path, &bytes[valid_up_to..])?;
+            truncate(path, valid_up_to)?;
+        }
+    }
+    Ok((records, recovery))
+}
+
+/// Non-destructive replay: valid payloads only, no file repair. The
+/// loader for single-snapshot DB files (test-case / facility DBs),
+/// where a torn tail simply means "the previous save survives".
+pub fn read_frames(path: &Path) -> Result<Vec<Vec<u8>>> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Vec::new())
+        }
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading {path:?}"))
+        }
+    };
+    Ok(scan(&bytes).0)
+}
+
+enum Damage {
+    None,
+    TornTail,
+    Corrupt,
+}
+
+/// Walk the frames in `bytes`: valid payloads, the offset where
+/// validity ends, and what kind of damage (if any) starts there.
+fn scan(bytes: &[u8]) -> (Vec<Vec<u8>>, usize, Damage) {
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let rest = &bytes[pos..];
+        if rest.len() < FRAME_HEADER {
+            return (records, pos, Damage::TornTail);
+        }
+        let len =
+            u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+        if len > MAX_PAYLOAD {
+            // A length no writer ever produces: corruption, not a tear.
+            return (records, pos, Damage::Corrupt);
+        }
+        if rest.len() < FRAME_HEADER + len {
+            return (records, pos, Damage::TornTail);
+        }
+        let sum = u64::from_le_bytes(rest[4..12].try_into().unwrap());
+        let payload = &rest[FRAME_HEADER..FRAME_HEADER + len];
+        if fnv1a(payload) != sum {
+            return (records, pos, Damage::Corrupt);
+        }
+        records.push(payload.to_vec());
+        pos += FRAME_HEADER + len;
+    }
+    (records, pos, Damage::None)
+}
+
+fn truncate(path: &Path, len: usize) -> Result<()> {
+    let file = OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening {path:?} for repair"))?;
+    file.set_len(len as u64)
+        .with_context(|| format!("truncating {path:?} to {len}"))?;
+    Ok(())
+}
+
+/// Where a log's quarantined bytes land.
+pub fn corrupt_sidecar(path: &Path) -> std::path::PathBuf {
+    let mut name = path.as_os_str().to_owned();
+    name.push(".corrupt");
+    std::path::PathBuf::from(name)
+}
+
+fn quarantine(path: &Path, bytes: &[u8]) -> Result<()> {
+    let sidecar = corrupt_sidecar(path);
+    let mut file = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&sidecar)
+        .with_context(|| format!("opening quarantine {sidecar:?}"))?;
+    file.write_all(bytes)
+        .with_context(|| format!("writing quarantine {sidecar:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let dir = TempDir::new("store-log").unwrap();
+        let path = dir.join("a.log");
+        append(&path, b"one").unwrap();
+        append(&path, b"two").unwrap();
+        append(&path, b"").unwrap();
+        let (records, rec) = replay(&path).unwrap();
+        assert_eq!(records, vec![b"one".to_vec(), b"two".to_vec(), vec![]]);
+        assert!(rec.clean());
+    }
+
+    #[test]
+    fn missing_log_replays_empty() {
+        let dir = TempDir::new("store-log").unwrap();
+        let (records, rec) = replay(&dir.join("nope.log")).unwrap();
+        assert!(records.is_empty());
+        assert!(rec.clean());
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_every_prior_record_survives() {
+        let dir = TempDir::new("store-log").unwrap();
+        let path = dir.join("a.log");
+        append(&path, b"alpha").unwrap();
+        append(&path, b"beta").unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let second_start = FRAME_HEADER + 5;
+        // Every possible crash point inside the second record.
+        for cut in second_start..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let (records, rec) = replay(&path).unwrap();
+            assert_eq!(records, vec![b"alpha".to_vec()], "cut at {cut}");
+            assert_eq!(rec.torn_bytes, (cut - second_start) as u64);
+            assert_eq!(rec.quarantined_bytes, 0);
+            // The repair truncated the tear: a second replay is clean.
+            let (again, rec2) = replay(&path).unwrap();
+            assert_eq!(again.len(), 1);
+            assert!(rec2.clean(), "cut at {cut}: {rec2:?}");
+        }
+    }
+
+    #[test]
+    fn corrupt_frame_quarantines_the_rest() {
+        let dir = TempDir::new("store-log").unwrap();
+        let path = dir.join("a.log");
+        append(&path, b"alpha").unwrap();
+        append(&path, b"beta").unwrap();
+        append(&path, b"gamma").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip a payload byte of the second record.
+        let flip = FRAME_HEADER + 5 + FRAME_HEADER;
+        bytes[flip] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let (records, rec) = replay(&path).unwrap();
+        assert_eq!(records, vec![b"alpha".to_vec()]);
+        assert!(rec.quarantined_bytes > 0);
+        assert_eq!(rec.torn_bytes, 0);
+        // The damaged bytes are preserved for inspection, out of band.
+        let sidecar = corrupt_sidecar(&path);
+        assert_eq!(
+            std::fs::read(&sidecar).unwrap().len() as u64,
+            rec.quarantined_bytes
+        );
+        // The log itself is clean again and appendable.
+        append(&path, b"delta").unwrap();
+        let (records, rec) = replay(&path).unwrap();
+        assert_eq!(records, vec![b"alpha".to_vec(), b"delta".to_vec()]);
+        assert!(rec.clean());
+    }
+
+    #[test]
+    fn absurd_length_reads_as_corruption_not_a_wait() {
+        let dir = TempDir::new("store-log").unwrap();
+        let path = dir.join("a.log");
+        append(&path, b"alpha").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mut garbage = ((MAX_PAYLOAD + 1) as u32).to_le_bytes().to_vec();
+        garbage.extend_from_slice(&[0u8; 16]);
+        bytes.extend_from_slice(&garbage);
+        std::fs::write(&path, &bytes).unwrap();
+        let (records, rec) = replay(&path).unwrap();
+        assert_eq!(records, vec![b"alpha".to_vec()]);
+        assert!(rec.quarantined_bytes > 0);
+    }
+
+    #[test]
+    fn write_atomic_replaces_wholesale() {
+        let dir = TempDir::new("store-log").unwrap();
+        let path = dir.join("a.log");
+        append(&path, b"old1").unwrap();
+        append(&path, b"old2").unwrap();
+        write_atomic(&path, &[b"new"]).unwrap();
+        let (records, rec) = replay(&path).unwrap();
+        assert_eq!(records, vec![b"new".to_vec()]);
+        assert!(rec.clean());
+        // No scratch files left behind.
+        let stray: Vec<_> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n != "a.log")
+            .collect();
+        assert!(stray.is_empty(), "{stray:?}");
+    }
+}

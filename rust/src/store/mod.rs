@@ -1,0 +1,471 @@
+//! Sharded, log-structured, crash-safe pattern store.
+//!
+//! The pattern DB is the product at service scale (every hit avoids
+//! re-paying a verification-environment search that stands in for a
+//! multi-hour HLS build), and the flat one-JSON-file-per-app layout
+//! stopped scaling with it: every open re-read and re-parsed every
+//! record, every concurrent writer contended on one global lock map,
+//! and nothing ever got evicted. This module is the replacement — an
+//! embedded store in the column-family spirit of log-structured KV
+//! engines, sized for tens of thousands of records:
+//!
+//! * **Sharded** ([`index`]): records route to one of
+//!   [`SHARD_COUNT`](index::SHARD_COUNT) append-only logs by FNV-1a of
+//!   the app name. Each shard has its own writer mutex and its own
+//!   in-memory index under a `RwLock`, so concurrent batch/service
+//!   workers only serialize when they hit the *same* shard, and the
+//!   service's synchronous hit path reads without waiting on any cold
+//!   solve's log I/O.
+//! * **Log-structured** ([`log`], [`shard`]): a store is an append of
+//!   one length-prefixed, checksummed record; the live state is
+//!   rebuilt by replaying the logs on open and then served from
+//!   memory. Torn tails truncate, corrupt frames quarantine to
+//!   `.corrupt` sidecars — a crash never costs a previously durable
+//!   record.
+//! * **Bounded** ([`evict`], [`compact`]): under a configured capacity
+//!   the cheapest-to-recompute records (solve cost discounted by
+//!   staleness) are tombstoned first, and shards whose dead-record
+//!   fraction crosses the [`CompactionPolicy`] are rewritten in place.
+//!
+//! [`crate::envadapt::PatternDb`] and [`crate::envadapt::PatternIndex`]
+//! are thin facades over this type, so the pipeline, the batch ladder,
+//! the service tier, and the CLI all share one storage engine — and one
+//! process-wide handle per directory (see [`index`]'s registry), which
+//! is what makes a warm open O(1).
+
+pub mod compact;
+pub mod evict;
+pub mod index;
+pub mod log;
+pub mod shard;
+pub mod stats;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::envadapt::patterndb::{
+    record_json, unix_now, ReuseKey, StoredPattern,
+};
+use crate::search::OffloadSolution;
+use crate::util::json::Json;
+
+pub use compact::CompactionPolicy;
+pub use index::SHARD_COUNT;
+pub use stats::{StoreStats, StoreStatsSnapshot};
+
+use shard::{AppendOutcome, Entry, Shard};
+
+/// Open-time tunables.
+#[derive(Debug, Clone, Default)]
+pub struct StoreConfig {
+    /// Maximum live records across all shards (`None` = unbounded).
+    /// Exceeding it evicts per [`evict`]'s cost-aware policy.
+    pub capacity: Option<usize>,
+    /// Dead-record rewrite trigger.
+    pub compaction: CompactionPolicy,
+}
+
+/// What a legacy-layout migration did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MigrationReport {
+    /// Flat records appended into the shard logs.
+    pub migrated: usize,
+    /// Flat records dropped because the store already held a fresher
+    /// record for the app (the normal freshness rule).
+    pub skipped_stale: usize,
+    /// Unparseable flat files quarantined to `.corrupt`.
+    pub quarantined: usize,
+}
+
+/// The sharded pattern store. Obtain via [`PatternStore::open`]; all
+/// methods take `&self` and are safe under arbitrary thread sharing.
+#[derive(Debug)]
+pub struct PatternStore {
+    dir: PathBuf,
+    shards: Vec<Shard>,
+    stats: StoreStats,
+    /// Live-record cap; 0 = unbounded. Runtime-settable (the service
+    /// applies `--db-capacity` after open).
+    capacity: AtomicUsize,
+    compaction: CompactionPolicy,
+}
+
+impl PatternStore {
+    /// Open the store on `dir` (created if needed). If this process
+    /// already has the directory open, the existing handle is returned
+    /// — shard locks, in-memory index, and counters are shared, and no
+    /// replay happens (the warm-open path).
+    pub fn open(dir: &Path) -> Result<Arc<PatternStore>> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating pattern DB dir {dir:?}"))?;
+        if let Some(existing) = index::lookup(dir) {
+            return Ok(existing);
+        }
+        let store = Self::replay(dir, StoreConfig::default())?;
+        index::publish(dir, &store);
+        Ok(store)
+    }
+
+    /// Open bypassing the process registry: always replays from disk
+    /// and is *not* shared with (or visible to) other handles. For
+    /// cold-open benches and crash-recovery tests; production code
+    /// wants [`open`](Self::open).
+    pub fn open_fresh(dir: &Path) -> Result<Arc<PatternStore>> {
+        Self::open_fresh_with(dir, StoreConfig::default())
+    }
+
+    /// [`open_fresh`](Self::open_fresh) with explicit tunables.
+    pub fn open_fresh_with(
+        dir: &Path,
+        config: StoreConfig,
+    ) -> Result<Arc<PatternStore>> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating pattern DB dir {dir:?}"))?;
+        Self::replay(dir, config)
+    }
+
+    fn replay(dir: &Path, config: StoreConfig) -> Result<Arc<PatternStore>> {
+        let stats = StoreStats::default();
+        let mut shards = Vec::with_capacity(SHARD_COUNT);
+        for slot in 0..SHARD_COUNT {
+            let path = dir.join(index::shard_file(slot));
+            shards.push(Shard::open(&path, &stats)?);
+        }
+        Ok(Arc::new(PatternStore {
+            dir: dir.to_path_buf(),
+            shards,
+            stats,
+            capacity: AtomicUsize::new(config.capacity.unwrap_or(0)),
+            compaction: config.compaction,
+        }))
+    }
+
+    /// The directory this store lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn shard(&self, app: &str) -> &Shard {
+        &self.shards[index::shard_of(app)]
+    }
+
+    /// The shard log an app's records are appended to (whether or not
+    /// any exist yet).
+    pub fn shard_path_of(&self, app: &str) -> PathBuf {
+        self.shard(app).path().to_path_buf()
+    }
+
+    /// Live counters for this handle.
+    pub fn stats(&self) -> &StoreStats {
+        &self.stats
+    }
+
+    /// Live record count across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(Shard::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dead (reclaimable) records across all shards.
+    pub fn dead_records(&self) -> usize {
+        self.shards.iter().map(Shard::dead).sum()
+    }
+
+    /// Current capacity (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        match self.capacity.load(Ordering::Relaxed) {
+            0 => None,
+            n => Some(n),
+        }
+    }
+
+    /// Change the capacity. Takes effect on the next store (an
+    /// over-capacity store is trimmed lazily, not eagerly).
+    pub fn set_capacity(&self, capacity: Option<usize>) {
+        self.capacity
+            .store(capacity.unwrap_or(0), Ordering::Relaxed);
+    }
+
+    /// The live record for an app (no key check, no counters).
+    pub fn get(&self, app: &str) -> Option<StoredPattern> {
+        self.shard(app).get(app).map(|e| e.rec)
+    }
+
+    /// The full stored JSON for an app.
+    pub fn load_json(&self, app: &str) -> Option<Json> {
+        self.shard(app).get(app).map(|e| e.json)
+    }
+
+    /// Reuse-key lookup — the hit path. Counts a hit only when the
+    /// record exists *and* matches the full key.
+    pub fn lookup(
+        &self,
+        app: &str,
+        key: &ReuseKey,
+    ) -> Option<StoredPattern> {
+        match self.shard(app).get(app) {
+            Some(e) if e.rec.matches(key) => {
+                self.stats.note_hit();
+                Some(e.rec)
+            }
+            _ => {
+                self.stats.note_miss();
+                None
+            }
+        }
+    }
+
+    /// Persist a solution. Keyed writes (`key.is_some()`) carry the
+    /// full reuse key + `stored_at` stamp and obey the freshness rule;
+    /// unkeyed writes overwrite unconditionally and are never reused.
+    /// Returns the shard log path the record lives in.
+    pub fn store_solution(
+        &self,
+        sol: &OffloadSolution,
+        key: Option<&ReuseKey>,
+        stamp: u64,
+    ) -> Result<PathBuf> {
+        let json = record_json(sol, key, stamp);
+        let Some(rec) = StoredPattern::from_json(&json, Some(&sol.app))
+        else {
+            anyhow::bail!("solution for {:?} did not serialize", sol.app);
+        };
+        let app = rec.app.clone();
+        let shard = self.shard(&app);
+        let stored = shard.store(
+            Entry { rec, json },
+            key.is_some(),
+            &self.stats,
+        )?;
+        if stored == AppendOutcome::Stored {
+            self.enforce_capacity(&app)?;
+        }
+        compact::maybe_compact(shard, &self.compaction, &self.stats)?;
+        Ok(shard.path().to_path_buf())
+    }
+
+    /// Tombstone an app's record. Returns whether one was live.
+    pub fn remove(&self, app: &str) -> Result<bool> {
+        let shard = self.shard(app);
+        let removed = shard.remove(app, &self.stats)?;
+        compact::maybe_compact(shard, &self.compaction, &self.stats)?;
+        Ok(removed)
+    }
+
+    /// Rewrite an app's record with a new `stored_at` stamp — the seam
+    /// age-policy tests and operators use instead of editing log bytes.
+    pub fn restamp(&self, app: &str, stamp: u64) -> Result<bool> {
+        let shard = self.shard(app);
+        let hit = shard.restamp(app, stamp, &self.stats)?;
+        compact::maybe_compact(shard, &self.compaction, &self.stats)?;
+        Ok(hit)
+    }
+
+    /// Re-sync one app's entry from its shard log on disk (external
+    /// writers — another process on the same directory). Touches only
+    /// the affected shard; every other shard's index is untouched.
+    pub fn refresh(&self, app: &str) -> Result<()> {
+        self.shard(app).refresh_app(app, &self.stats)
+    }
+
+    /// Apps with live records, sorted.
+    pub fn list(&self) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.entries().into_iter().map(|e| e.rec.app))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// All live records, sorted by app.
+    pub fn records(&self) -> Vec<StoredPattern> {
+        let mut out: Vec<StoredPattern> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.entries().into_iter().map(|e| e.rec))
+            .collect();
+        out.sort_by(|a, b| a.app.cmp(&b.app));
+        out
+    }
+
+    /// Compact every shard unconditionally (the `repro patterndb
+    /// compact` path). Returns total dead records reclaimed.
+    pub fn compact_all(&self) -> Result<usize> {
+        let mut reclaimed = 0;
+        for shard in &self.shards {
+            reclaimed += shard.compact(&self.stats)?;
+        }
+        Ok(reclaimed)
+    }
+
+    /// Evict down to capacity, never touching `protect`.
+    fn enforce_capacity(&self, protect: &str) -> Result<()> {
+        let Some(cap) = self.capacity() else {
+            return Ok(());
+        };
+        let len = self.len();
+        if len <= cap {
+            return Ok(());
+        }
+        let victims = evict::choose_victims(
+            &self.records(),
+            len - cap,
+            protect,
+            unix_now(),
+        );
+        for app in victims {
+            if self.shard(&app).remove(&app, &self.stats)? {
+                self.stats.note_eviction();
+            }
+        }
+        Ok(())
+    }
+
+    /// Quarantined debris in the directory: shard-log `.corrupt`
+    /// sidecars plus any legacy `<app>.pattern.json.corrupt` files
+    /// (reported by app name, as before the sharded layout).
+    pub fn quarantined(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if let Some(app) = name.strip_suffix(".pattern.json.corrupt") {
+                out.push(app.to_string());
+            } else if let Some(log) = name.strip_suffix(".corrupt") {
+                out.push(log.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Unmigrated legacy flat files still sitting in the directory.
+    pub fn legacy_count(&self) -> usize {
+        legacy_files(&self.dir).map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// One-shot migration from the legacy one-file-per-app layout:
+    /// every `<app>.pattern.json` in the directory is appended into its
+    /// shard (payload preserved byte-for-byte as a record; the record's
+    /// own `stored_at` drives the freshness rule) and the flat file is
+    /// renamed to `.migrated`. Unparseable files quarantine to
+    /// `.corrupt`. Idempotent: a second run finds nothing to do.
+    pub fn migrate_legacy(&self) -> Result<MigrationReport> {
+        let mut report = MigrationReport::default();
+        for path in legacy_files(&self.dir)? {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {path:?}"))?;
+            let parsed = Json::parse(&text).ok().and_then(|json| {
+                let app = legacy_app_name(&path);
+                StoredPattern::from_json(&json, app.as_deref())
+                    .map(|rec| Entry { rec, json })
+            });
+            let Some(entry) = parsed else {
+                let bytes = text.len() as u64;
+                rename_suffix(&path, ".corrupt")?;
+                self.stats.note_quarantined(bytes);
+                report.quarantined += 1;
+                continue;
+            };
+            let shard = self.shard(&entry.rec.app);
+            match shard.store(entry, true, &self.stats)? {
+                AppendOutcome::Stored => report.migrated += 1,
+                AppendOutcome::DroppedStale => report.skipped_stale += 1,
+            }
+            rename_suffix(&path, ".migrated")?;
+        }
+        // The logs may now exceed capacity; trim once at the end.
+        self.enforce_capacity("")?;
+        for shard in &self.shards {
+            compact::maybe_compact(shard, &self.compaction, &self.stats)?;
+        }
+        Ok(report)
+    }
+
+    /// Write every live record back out as legacy flat files under
+    /// `out` (`<app>.pattern.json`) — the seed for migration smokes and
+    /// the flat-file baseline the benches compare against. Returns the
+    /// number of files written.
+    pub fn export_legacy(&self, out: &Path) -> Result<usize> {
+        std::fs::create_dir_all(out)
+            .with_context(|| format!("creating export dir {out:?}"))?;
+        let mut written = 0;
+        for shard in &self.shards {
+            for entry in shard.entries() {
+                let path =
+                    out.join(format!("{}.pattern.json", entry.rec.app));
+                std::fs::write(&path, entry.json.pretty())
+                    .with_context(|| format!("writing {path:?}"))?;
+                written += 1;
+            }
+        }
+        Ok(written)
+    }
+
+    /// Parse every legacy flat file under `dir` — the "cold flat scan"
+    /// the old layout performed on every open, kept as the bench
+    /// baseline and the migration dry-run.
+    pub fn scan_legacy(dir: &Path) -> Result<Vec<StoredPattern>> {
+        let mut out = Vec::new();
+        for path in legacy_files(dir)? {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {path:?}"))?;
+            let Ok(json) = Json::parse(&text) else {
+                continue;
+            };
+            let app = legacy_app_name(&path);
+            if let Some(rec) =
+                StoredPattern::from_json(&json, app.as_deref())
+            {
+                out.push(rec);
+            }
+        }
+        out.sort_by(|a, b| a.app.cmp(&b.app));
+        Ok(out)
+    }
+}
+
+/// `<app>.pattern.json` files in `dir`, sorted for determinism.
+fn legacy_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(out)
+        }
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading dir {dir:?}"))
+        }
+    };
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.ends_with(".pattern.json") {
+            out.push(entry.path());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn legacy_app_name(path: &Path) -> Option<String> {
+    path.file_name()
+        .and_then(|n| n.to_str())
+        .and_then(|n| n.strip_suffix(".pattern.json"))
+        .map(String::from)
+}
+
+fn rename_suffix(path: &Path, suffix: &str) -> Result<()> {
+    let mut target = path.as_os_str().to_owned();
+    target.push(suffix);
+    std::fs::rename(path, &target)
+        .with_context(|| format!("renaming {path:?} -> {target:?}"))?;
+    Ok(())
+}

@@ -1,0 +1,336 @@
+//! One shard of the pattern store: an append-only log file plus the
+//! in-memory index replayed from it.
+//!
+//! Concurrency contract (the whole point of sharding):
+//!
+//! * Every *mutation* — append, tombstone, restamp, compaction, refresh
+//!   — first takes this shard's `writer` mutex, does its log I/O, then
+//!   briefly takes the index write lock to publish the result. Writers
+//!   on different shards never contend.
+//! * Every *read* takes only the index read lock and clones an entry.
+//!   The hit path therefore never waits on log I/O, only on the
+//!   microseconds-long publish of a concurrent writer on the *same*
+//!   shard — cold solves on other shards are invisible to it.
+//!
+//! Records in the log are whole-JSON payloads (the same schema as the
+//! legacy one-file-per-app layout, so migration is a byte-preserving
+//! append). Later records for an app supersede earlier ones; a
+//! `{"tombstone": app}` payload deletes. Superseded and tombstone
+//! records are *dead* — still in the file, invisible to readers — and
+//! the dead count drives compaction.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard, RwLock};
+
+use anyhow::Result;
+
+use crate::envadapt::patterndb::StoredPattern;
+use crate::util::json::Json;
+
+use super::log::{self, Recovery};
+use super::stats::StoreStats;
+
+/// A live record: the parsed summary the hit path matches against plus
+/// the full JSON the `load` surface returns.
+#[derive(Debug, Clone)]
+pub(crate) struct Entry {
+    pub rec: StoredPattern,
+    pub json: Json,
+}
+
+/// One decoded log payload.
+pub(crate) enum Payload {
+    Record(Entry),
+    Tombstone(String),
+}
+
+/// Decode a log payload. `None` means the payload checksummed fine but
+/// is not a record this version understands — counted by callers, never
+/// fatal.
+pub(crate) fn decode(bytes: &[u8]) -> Option<Payload> {
+    let text = std::str::from_utf8(bytes).ok()?;
+    let json = Json::parse(text).ok()?;
+    if let Some(app) = json.get(&["tombstone"]).and_then(Json::as_str) {
+        return Some(Payload::Tombstone(app.to_string()));
+    }
+    let rec = StoredPattern::from_json(&json, None)?;
+    Some(Payload::Record(Entry { rec, json }))
+}
+
+fn encode_tombstone(app: &str) -> Vec<u8> {
+    Json::obj(vec![("tombstone", Json::Str(app.to_string()))])
+        .pretty()
+        .into_bytes()
+}
+
+/// Log bookkeeping, guarded by the writer mutex.
+#[derive(Debug, Default)]
+struct Bookkeeping {
+    /// Records currently framed in the log file (live + dead).
+    total: usize,
+    /// Superseded records + tombstones — reclaimable by compaction.
+    dead: usize,
+}
+
+/// Whether a keyed append survived the freshness rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum AppendOutcome {
+    Stored,
+    /// A fresher record (newer `stored_at`) was already live; the write
+    /// was dropped, exactly as the flat-file rename rule dropped it.
+    DroppedStale,
+}
+
+#[derive(Debug)]
+pub(crate) struct Shard {
+    path: PathBuf,
+    writer: Mutex<Bookkeeping>,
+    index: RwLock<HashMap<String, Entry>>,
+}
+
+impl Shard {
+    /// Replay the log at `path` (repairing torn/corrupt damage per
+    /// [`log::replay`]) and build the in-memory index.
+    pub fn open(path: &Path, stats: &StoreStats) -> Result<Shard> {
+        let (payloads, recovery) = log::replay(path)?;
+        note_recovery(&recovery, stats);
+        let (index, bk) = fold(&payloads);
+        Ok(Shard {
+            path: path.to_path_buf(),
+            writer: Mutex::new(bk),
+            index: RwLock::new(index),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn lock_writer(&self) -> MutexGuard<'_, Bookkeeping> {
+        self.writer.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn read_index(
+        &self,
+    ) -> std::sync::RwLockReadGuard<'_, HashMap<String, Entry>> {
+        self.index.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn write_index(
+        &self,
+    ) -> std::sync::RwLockWriteGuard<'_, HashMap<String, Entry>> {
+        self.index.write().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Live record for an app (read lock + clone; no I/O).
+    pub fn get(&self, app: &str) -> Option<Entry> {
+        self.read_index().get(app).cloned()
+    }
+
+    /// All live entries (unordered).
+    pub fn entries(&self) -> Vec<Entry> {
+        self.read_index().values().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.read_index().len()
+    }
+
+    /// Dead records currently reclaimable by compaction.
+    pub fn dead(&self) -> usize {
+        self.lock_writer().dead
+    }
+
+    /// Append a record. With `enforce_freshness` (every keyed write) an
+    /// incoming stamp older than the live record's is dropped: when two
+    /// workers race, the freshest solve survives, not the last rename.
+    pub fn store(
+        &self,
+        entry: Entry,
+        enforce_freshness: bool,
+        stats: &StoreStats,
+    ) -> Result<AppendOutcome> {
+        let app = entry.rec.app.clone();
+        let mut bk = self.lock_writer();
+        if enforce_freshness {
+            if let Some(live) = self.read_index().get(&app) {
+                if live.rec.stored_at > entry.rec.stored_at {
+                    stats.note_stale_write();
+                    return Ok(AppendOutcome::DroppedStale);
+                }
+            }
+        }
+        log::append(&self.path, entry.json.pretty().as_bytes())?;
+        stats.note_append();
+        let replaced = self.write_index().insert(app, entry).is_some();
+        bk.total += 1;
+        if replaced {
+            bk.dead += 1;
+        }
+        Ok(AppendOutcome::Stored)
+    }
+
+    /// Tombstone an app (eviction, operator delete). Returns whether a
+    /// live record was actually removed.
+    pub fn remove(&self, app: &str, stats: &StoreStats) -> Result<bool> {
+        let mut bk = self.lock_writer();
+        if !self.read_index().contains_key(app) {
+            return Ok(false);
+        }
+        log::append(&self.path, &encode_tombstone(app))?;
+        stats.note_append();
+        self.write_index().remove(app);
+        bk.total += 1;
+        // The superseded record *and* the tombstone itself are dead.
+        bk.dead += 2;
+        Ok(true)
+    }
+
+    /// Rewrite an app's live record with a new `stored_at` stamp — the
+    /// seam age-policy tests use instead of editing files by hand.
+    pub fn restamp(
+        &self,
+        app: &str,
+        stamp: u64,
+        stats: &StoreStats,
+    ) -> Result<bool> {
+        let mut bk = self.lock_writer();
+        let Some(mut entry) = self.read_index().get(app).cloned() else {
+            return Ok(false);
+        };
+        entry.rec.stored_at = Some(stamp);
+        if let Json::Obj(map) = &mut entry.json {
+            map.insert(
+                "stored_at".to_string(),
+                Json::Str(format!("{stamp}")),
+            );
+        }
+        log::append(&self.path, entry.json.pretty().as_bytes())?;
+        stats.note_append();
+        self.write_index().insert(app.to_string(), entry);
+        bk.total += 1;
+        bk.dead += 1;
+        Ok(true)
+    }
+
+    /// Whether the dead-record load warrants a compaction. Checked by
+    /// the store *after* a mutation returns (never inside one — the
+    /// writer mutex is not reentrant).
+    pub fn wants_compaction(&self, min_dead: usize, ratio: f64) -> bool {
+        let bk = self.lock_writer();
+        bk.dead >= min_dead
+            && bk.total > 0
+            && (bk.dead as f64) >= ratio * (bk.total as f64)
+    }
+
+    /// Rewrite the log with only the live records (atomic replace).
+    /// Returns the number of dead records reclaimed.
+    pub fn compact(&self, stats: &StoreStats) -> Result<usize> {
+        let mut bk = self.lock_writer();
+        let reclaimed = bk.dead;
+        let mut live: Vec<(String, String)> = self
+            .read_index()
+            .iter()
+            .map(|(app, e)| (app.clone(), e.json.pretty()))
+            .collect();
+        // Deterministic log order after compaction.
+        live.sort_by(|a, b| a.0.cmp(&b.0));
+        let payloads: Vec<&[u8]> =
+            live.iter().map(|(_, j)| j.as_bytes()).collect();
+        log::write_atomic(&self.path, &payloads)?;
+        bk.total = live.len();
+        bk.dead = 0;
+        stats.note_compaction();
+        Ok(reclaimed)
+    }
+
+    /// Re-read *one app's* entry from the log on disk (the satellite-1
+    /// refresh semantics: an external process may have appended; sync
+    /// just the affected entry instead of rebuilding every app). Runs
+    /// under the writer mutex so it cannot interleave with in-process
+    /// writers, and publishes the entry in one index-write — a
+    /// concurrent hit sees either the old record or the new one, never
+    /// a half-written state.
+    pub fn refresh_app(
+        &self,
+        app: &str,
+        stats: &StoreStats,
+    ) -> Result<()> {
+        let mut bk = self.lock_writer();
+        let (payloads, recovery) = log::replay(&self.path)?;
+        note_recovery(&recovery, stats);
+        // Latest on-disk verdict for this app only.
+        let mut latest: Option<Entry> = None;
+        let total = payloads.len();
+        let mut live_apps: HashMap<&str, bool> = HashMap::new();
+        let decoded: Vec<Payload> =
+            payloads.iter().filter_map(|p| decode(p)).collect();
+        for payload in &decoded {
+            match payload {
+                Payload::Record(e) => {
+                    if e.rec.app == app {
+                        latest = Some(e.clone());
+                    }
+                    live_apps.insert(e.rec.app.as_str(), true);
+                }
+                Payload::Tombstone(t) => {
+                    if t == app {
+                        latest = None;
+                    }
+                    live_apps.insert(t.as_str(), false);
+                }
+            }
+        }
+        // Disk is the source of truth for the log bookkeeping too (an
+        // external writer's appends count toward compaction pressure).
+        let live = live_apps.values().filter(|v| **v).count();
+        bk.total = total;
+        bk.dead = total.saturating_sub(live);
+        let mut index = self.write_index();
+        match latest {
+            Some(entry) => {
+                index.insert(app.to_string(), entry);
+            }
+            None => {
+                index.remove(app);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn note_recovery(recovery: &Recovery, stats: &StoreStats) {
+    if recovery.torn_bytes > 0 {
+        stats.note_torn();
+    }
+    if recovery.quarantined_bytes > 0 {
+        stats.note_quarantined(recovery.quarantined_bytes);
+    }
+}
+
+/// Fold replayed payloads into the live index + bookkeeping.
+fn fold(payloads: &[Vec<u8>]) -> (HashMap<String, Entry>, Bookkeeping) {
+    let mut index: HashMap<String, Entry> = HashMap::new();
+    let mut total = 0usize;
+    for bytes in payloads {
+        let Some(payload) = decode(bytes) else {
+            // Checksummed but unintelligible (a future schema?): dead
+            // weight until the next compaction.
+            total += 1;
+            continue;
+        };
+        total += 1;
+        match payload {
+            Payload::Record(entry) => {
+                index.insert(entry.rec.app.clone(), entry);
+            }
+            Payload::Tombstone(app) => {
+                index.remove(&app);
+            }
+        }
+    }
+    let dead = total - index.len();
+    let bk = Bookkeeping { total, dead };
+    (index, bk)
+}

@@ -1,0 +1,163 @@
+//! Operational counters for a [`crate::store::PatternStore`] handle.
+//!
+//! Everything here is a relaxed atomic: counters are advisory telemetry
+//! for the `stats` surfaces (service [`StatsSnapshot`], `repro patterndb
+//! stats`), never control flow. They tally since *open* of this handle —
+//! a fresh process starts from zero even over a populated store.
+//!
+//! [`StatsSnapshot`]: crate::service::StatsSnapshot
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Live counters owned by a store handle (shared by every facade —
+/// `PatternDb`, `PatternIndex`, the service — opened on the same dir in
+/// this process, since they share the handle itself).
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    /// Keyed lookups that found a record matching the full reuse key.
+    pub(crate) hits: AtomicU64,
+    /// Keyed lookups that found nothing (or a non-matching record).
+    pub(crate) misses: AtomicU64,
+    /// Hits whose record was older than the caller's age policy —
+    /// counted by the policy layer (the service's probe), since the
+    /// store itself has no age opinion.
+    pub(crate) stale_hits: AtomicU64,
+    /// Records appended to a shard log (stores, restamps, migrations).
+    pub(crate) appends: AtomicU64,
+    /// Keyed writes dropped by the freshness rule (an older stamp
+    /// arriving after a newer record).
+    pub(crate) stale_writes_dropped: AtomicU64,
+    /// Records evicted under the capacity policy.
+    pub(crate) evictions: AtomicU64,
+    /// Shard compactions performed.
+    pub(crate) compactions: AtomicU64,
+    /// Bytes quarantined to `.corrupt` sidecars during recovery.
+    pub(crate) quarantined_bytes: AtomicU64,
+    /// Torn-tail truncations performed during recovery.
+    pub(crate) torn_truncations: AtomicU64,
+}
+
+macro_rules! bump {
+    ($($name:ident => $field:ident),* $(,)?) => {
+        $(pub(crate) fn $name(&self) {
+            self.$field.fetch_add(1, Ordering::Relaxed);
+        })*
+    };
+}
+
+impl StoreStats {
+    bump! {
+        note_hit => hits,
+        note_miss => misses,
+        note_append => appends,
+        note_stale_write => stale_writes_dropped,
+        note_eviction => evictions,
+        note_compaction => compactions,
+        note_torn => torn_truncations,
+    }
+
+    /// Count a hit that the caller's age policy judged stale. Public via
+    /// [`count_stale`](StoreStatsSnapshot) consumers: the service's
+    /// probe calls this when a matching record exceeds `max_age`.
+    pub fn note_stale_hit(&self) {
+        self.stale_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn note_quarantined(&self, bytes: u64) {
+        self.quarantined_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every counter.
+    pub fn snapshot(&self) -> StoreStatsSnapshot {
+        let get = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        StoreStatsSnapshot {
+            hits: get(&self.hits),
+            misses: get(&self.misses),
+            stale_hits: get(&self.stale_hits),
+            appends: get(&self.appends),
+            stale_writes_dropped: get(&self.stale_writes_dropped),
+            evictions: get(&self.evictions),
+            compactions: get(&self.compactions),
+            quarantined_bytes: get(&self.quarantined_bytes),
+            torn_truncations: get(&self.torn_truncations),
+        }
+    }
+}
+
+/// Frozen [`StoreStats`] values.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStatsSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub stale_hits: u64,
+    pub appends: u64,
+    pub stale_writes_dropped: u64,
+    pub evictions: u64,
+    pub compactions: u64,
+    pub quarantined_bytes: u64,
+    pub torn_truncations: u64,
+}
+
+impl StoreStatsSnapshot {
+    /// The store-owned slice of the service stats JSON. Keys are flat so
+    /// smoke tests and dashboards address them without nesting.
+    pub fn to_json_fields(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("store_hits", Json::Num(self.hits as f64)),
+            ("store_misses", Json::Num(self.misses as f64)),
+            ("stale_hits", Json::Num(self.stale_hits as f64)),
+            ("appends", Json::Num(self.appends as f64)),
+            (
+                "stale_writes_dropped",
+                Json::Num(self.stale_writes_dropped as f64),
+            ),
+            ("evictions", Json::Num(self.evictions as f64)),
+            ("compactions", Json::Num(self.compactions as f64)),
+            (
+                "quarantined_bytes",
+                Json::Num(self.quarantined_bytes as f64),
+            ),
+            (
+                "torn_truncations",
+                Json::Num(self.torn_truncations as f64),
+            ),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_start_zero_and_tally() {
+        let s = StoreStats::default();
+        assert_eq!(s.snapshot(), StoreStatsSnapshot::default());
+        s.note_hit();
+        s.note_hit();
+        s.note_miss();
+        s.note_stale_hit();
+        s.note_eviction();
+        s.note_compaction();
+        s.note_quarantined(17);
+        let snap = s.snapshot();
+        assert_eq!(snap.hits, 2);
+        assert_eq!(snap.misses, 1);
+        assert_eq!(snap.stale_hits, 1);
+        assert_eq!(snap.evictions, 1);
+        assert_eq!(snap.compactions, 1);
+        assert_eq!(snap.quarantined_bytes, 17);
+    }
+
+    #[test]
+    fn json_fields_cover_the_smoke_contract() {
+        let snap = StoreStats::default().snapshot();
+        let keys: Vec<&str> =
+            snap.to_json_fields().iter().map(|(k, _)| *k).collect();
+        for required in ["evictions", "compactions", "stale_hits"] {
+            assert!(keys.contains(&required), "{required} missing");
+        }
+    }
+}

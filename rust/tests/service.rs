@@ -357,14 +357,8 @@ fn refresh_ahead_serves_stale_hit_and_schedules_research() {
     // Age the stored record to 90% of max_age: inside the serve window,
     // past the refresh threshold.
     let db = PatternDb::open(dir.path()).unwrap();
-    let path = db.path_of("aging");
-    let text = std::fs::read_to_string(&path).unwrap();
-    let mut j = Json::parse(&text).unwrap();
     let aged = now_secs() - 900;
-    if let Json::Obj(map) = &mut j {
-        map.insert("stored_at".into(), Json::Str(format!("{aged}")));
-    }
-    std::fs::write(&path, j.pretty()).unwrap();
+    assert!(db.restamp("aging", aged).unwrap());
 
     // A fresh service (index loaded from disk) must serve the hit AND
     // schedule the background re-search.
@@ -396,12 +390,7 @@ fn refresh_ahead_serves_stale_hit_and_schedules_research() {
     );
     // And a record *past* max_age is a miss, not a hit.
     let old = now_secs() - 2000;
-    let text = std::fs::read_to_string(&path).unwrap();
-    let mut j = Json::parse(&text).unwrap();
-    if let Json::Obj(map) = &mut j {
-        map.insert("stored_at".into(), Json::Str(format!("{old}")));
-    }
-    std::fs::write(&path, j.pretty()).unwrap();
+    assert!(db.restamp("aging", old).unwrap());
     let cfg3 = ServiceConfig {
         pattern_db: Some(dir.path().to_path_buf()),
         workers: 1,
@@ -500,6 +489,23 @@ fn tcp_round_trip_plan_stats_ping_and_malformed_lines() {
             .is_some(),
         "latency quantiles missing: {stats}"
     );
+    // The sharded store's counters ride the same flat stats object —
+    // the contract `repro client --stats` dashboards and the CI smoke
+    // assert on.
+    for key in [
+        "evictions",
+        "compactions",
+        "stale_hits",
+        "appends",
+        "store_hits",
+        "store_misses",
+        "torn_truncations",
+    ] {
+        assert!(
+            stats.get(&["stats", key]).and_then(Json::as_f64).is_some(),
+            "store counter {key} missing from stats: {stats}"
+        );
+    }
 
     let ack = client.shutdown(7).unwrap();
     assert_eq!(ack.get(&["status"]).and_then(Json::as_str), Some("ok"));

@@ -1,0 +1,127 @@
+//! Kill-point recovery suite for the sharded pattern store.
+//!
+//! The crash contract under test: an append is a single `write` of a
+//! length-prefixed, checksummed frame, so a kill can tear only the
+//! *tail* of a shard log. `open()` must then recover every record
+//! written before the torn one, truncate the torn bytes, and quarantine
+//! nothing — a torn tail is not corruption.
+//!
+//! The sweep truncates a shard log at **every byte boundary of the
+//! final record** (from "frame entirely missing" through "one byte
+//! short of complete") and re-opens the store cold each time.
+
+use fpga_offload::store::{log, PatternStore};
+use fpga_offload::util::tempdir::TempDir;
+
+fn payload(app: &str, speedup: f64) -> Vec<u8> {
+    format!(r#"{{"app":"{app}","speedup":{speedup}}}"#).into_bytes()
+}
+
+/// `n` app names that all route to the same shard as `seed`, so the
+/// whole sweep exercises one log file with multiple prior records.
+fn same_shard_apps(dir: &std::path::Path, n: usize) -> Vec<String> {
+    let store = PatternStore::open_fresh(dir).unwrap();
+    let seed = "kp-0".to_string();
+    let target = store.shard_path_of(&seed);
+    let mut apps = vec![seed];
+    let mut i = 1;
+    while apps.len() < n {
+        let name = format!("kp-{i}");
+        if store.shard_path_of(&name) == target {
+            apps.push(name);
+        }
+        i += 1;
+    }
+    apps
+}
+
+#[test]
+fn truncation_at_every_byte_of_the_final_record_loses_nothing_else() {
+    let dir = TempDir::new("store-killpoints").unwrap();
+    let apps = same_shard_apps(dir.path(), 4);
+    let shard_path = {
+        let store = PatternStore::open_fresh(dir.path()).unwrap();
+        store.shard_path_of(&apps[0])
+    };
+
+    for (i, app) in apps.iter().enumerate() {
+        log::append(&shard_path, &payload(app, i as f64 + 1.0)).unwrap();
+    }
+    let full = std::fs::read(&shard_path).unwrap();
+    let last_frame =
+        log::FRAME_HEADER + payload(&apps[3], 4.0).len();
+    let prior_len = full.len() - last_frame;
+
+    // Every kill point inside the final record's frame, including the
+    // boundary where the frame is missing entirely.
+    for cut in prior_len..full.len() {
+        std::fs::write(&shard_path, &full[..cut]).unwrap();
+        let store = PatternStore::open_fresh(dir.path()).unwrap();
+
+        // All prior records recovered, the torn one gone, none lost.
+        assert_eq!(
+            store.len(),
+            3,
+            "cut at byte {cut}: wrong live record count"
+        );
+        for (i, app) in apps.iter().take(3).enumerate() {
+            let rec = store.get(app).unwrap_or_else(|| {
+                panic!("cut at byte {cut}: lost record {app}")
+            });
+            assert_eq!(rec.speedup, i as f64 + 1.0);
+        }
+        assert!(store.get(&apps[3]).is_none());
+
+        // A torn tail is truncated, never quarantined.
+        assert_eq!(
+            store.quarantined().unwrap(),
+            Vec::<String>::new(),
+            "cut at byte {cut}: torn tail was quarantined"
+        );
+        let snap = store.stats().snapshot();
+        if cut > prior_len {
+            assert_eq!(
+                snap.torn_truncations, 1,
+                "cut at byte {cut}: torn tail not counted"
+            );
+        }
+        assert_eq!(snap.quarantined_bytes, 0);
+
+        // The repair is durable: the file now ends exactly at the last
+        // complete record, so the next open is clean.
+        let repaired = std::fs::read(&shard_path).unwrap();
+        assert_eq!(
+            repaired,
+            &full[..prior_len],
+            "cut at byte {cut}: file not repaired to the record boundary"
+        );
+        let reopened = PatternStore::open_fresh(dir.path()).unwrap();
+        assert_eq!(reopened.len(), 3);
+        assert_eq!(reopened.stats().snapshot().torn_truncations, 0);
+    }
+}
+
+#[test]
+fn append_after_torn_tail_repair_roundtrips() {
+    let dir = TempDir::new("store-kill-append").unwrap();
+    let apps = same_shard_apps(dir.path(), 2);
+    let shard_path = {
+        let store = PatternStore::open_fresh(dir.path()).unwrap();
+        store.shard_path_of(&apps[0])
+    };
+    log::append(&shard_path, &payload(&apps[0], 1.0)).unwrap();
+    log::append(&shard_path, &payload(&apps[1], 2.0)).unwrap();
+
+    // Tear the final record mid-payload, recover, then write again
+    // through the repaired log.
+    let full = std::fs::read(&shard_path).unwrap();
+    std::fs::write(&shard_path, &full[..full.len() - 7]).unwrap();
+    let store = PatternStore::open_fresh(dir.path()).unwrap();
+    assert_eq!(store.len(), 1);
+    log::append(&shard_path, &payload(&apps[1], 5.0)).unwrap();
+
+    let reopened = PatternStore::open_fresh(dir.path()).unwrap();
+    assert_eq!(reopened.len(), 2);
+    assert_eq!(reopened.get(&apps[1]).unwrap().speedup, 5.0);
+    assert_eq!(reopened.stats().snapshot().torn_truncations, 0);
+}
