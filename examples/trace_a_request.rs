@@ -1,0 +1,61 @@
+//! Follow one plan request end to end through the observability layer:
+//! serve a cold solve on a traced [`Service`], then render the span
+//! tree — admission, queue wait, every pipeline stage, the backend
+//! calls, and the final pattern-store append — all under one trace id,
+//! plus the Prometheus families the `metrics` op exposes.
+//!
+//! ```text
+//! cargo run --example trace_a_request
+//! ```
+//!
+//! Against a live daemon the same views come from `repro trace`
+//! (summary / `--id` tree / `--chrome` export) and `repro client
+//! --metrics`.
+
+use fpga_offload::obs::export::{render_tree, sort_spans};
+use fpga_offload::obs::SpanRow;
+use fpga_offload::service::{PlanRequest, Service, ServiceConfig};
+use fpga_offload::util::tempdir::TempDir;
+use fpga_offload::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let dir = TempDir::new("trace-example")?;
+    let cfg = ServiceConfig {
+        pattern_db: Some(dir.path().to_path_buf()),
+        workers: 1,
+        ..ServiceConfig::default() // tracing is on by default
+    };
+    let svc = Service::start(cfg)?;
+
+    let src = workloads::source("sobel").expect("bundled app");
+    let resp = svc.request(PlanRequest::new("sobel", src));
+    let plan = resp.result.as_ref().expect("sobel plan");
+    println!(
+        "served sobel: {} {:.2}x in {:.1} ms\n",
+        plan.label,
+        plan.speedup,
+        resp.latency_us as f64 / 1e3
+    );
+
+    // The collector holds every span the request minted; one trace id
+    // links the caller thread, the worker, and the batch's destination
+    // thread.
+    let mut rows: Vec<SpanRow> =
+        svc.spans().iter().map(SpanRow::from).collect();
+    sort_spans(&mut rows);
+    println!("== span tree (repro trace --id N shows this live) ==");
+    print!("{}", render_tree(&rows));
+
+    println!("\n== metrics excerpt (the TCP `metrics` op) ==");
+    for line in svc.stats().to_prometheus().lines() {
+        if line.starts_with("offload_requests")
+            || line.starts_with("offload_store_appends")
+            || line.contains("hit_latency_us_bucket")
+        {
+            println!("{line}");
+        }
+    }
+
+    svc.shutdown();
+    Ok(())
+}

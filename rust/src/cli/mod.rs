@@ -9,6 +9,7 @@
 //! repro batch [apps...] [--out FILE] [--pattern-db DIR] [--reuse]
 //!             [--backend fpga|gpu|omp|cpu] [--mixed] [--func-blocks]
 //!             [--retries N] [--stage-deadline S] [--inject-faults SEED]
+//!             [--trace-out FILE] [--trace-chrome FILE]
 //!             + the offload search flags
 //! repro analyze <app|file.c>       loop table + intensity ranking
 //! repro estimate <app|file.c> [--unroll B]   pre-compile reports (top-A)
@@ -19,9 +20,12 @@
 //! repro serve [--addr A] [--port-file F] [--workers N] [--queue-cap N]
 //!             [--pattern-db DIR] [--max-age S] [--refresh-ahead F]
 //!             [--backend B] [--retries N] [--stage-deadline S]
+//!             [--no-trace] [--trace-capacity N] [--trace-sample N]
 //!             + the offload search flags
 //! repro client [apps...] [--addr A] [--deadline-ms N] [--json]
-//!              [--stats] [--shutdown]
+//!              [--stats] [--metrics] [--shutdown]
+//! repro trace [--addr A] [--last N] [--id N] [--slow-ms MS]
+//!             [--out FILE] [--chrome FILE] [--in FILE] [--json]
 //! repro patterndb <stats|quarantined|migrate|compact|export>
 //!                 --pattern-db DIR [--addr A] [--out DIR]
 //! ```
@@ -39,6 +43,7 @@
 //! pool with typed admission control.
 
 mod service;
+mod trace;
 
 use crate::analysis::{analyze_with, Analysis};
 use crate::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
@@ -46,6 +51,8 @@ use crate::envadapt::{Batch, OffloadRequest, Pipeline, TestDb};
 use crate::gpu::TESLA_T4;
 use crate::hls::{render, ARRIA10_GX};
 use crate::minic::{parse, typecheck, EngineKind, Program};
+use crate::obs::export::{sort_spans, to_chrome, to_ndjson};
+use crate::obs::{SpanRow, TraceConfig, Tracer};
 use crate::runtime::{Artifacts, Runtime};
 use crate::search::{
     Backend, CpuBaseline, FaultPlan, FaultyBackend, FpgaBackend, GaConfig,
@@ -66,6 +73,7 @@ pub fn run(args: &[String]) -> i32 {
         Some("serve") => service::cmd_serve(&args[1..]),
         Some("client") => service::cmd_client(&args[1..]),
         Some("patterndb") => service::cmd_patterndb(&args[1..]),
+        Some("trace") => trace::cmd_trace(&args[1..]),
         Some("apps") => {
             for app in workloads::APPS {
                 println!("{app}");
@@ -150,6 +158,12 @@ fn print_usage() {
                                   bursts, hung builds, verify mismatches,\n\
                                   panics — all drawn from SEED); implies\n\
                                   the default retry policy\n\
+             --trace-out FILE     record spans for the whole cycle and\n\
+                                  dump them as NDJSON (deterministic\n\
+                                  timestamps under --inject-faults: the\n\
+                                  spans ride the simulated clock)\n\
+             --trace-chrome FILE  same spans as Chrome trace-event JSON\n\
+                                  (chrome://tracing, Perfetto)\n\
              + the offload flags above (except --explain/--pjrt)\n\
            analyze <app|file.c>   loop table with intensity ranking\n\
            estimate <app|file.c>  pre-compile resource reports (top-A)\n\
@@ -182,13 +196,32 @@ fn print_usage() {
                                   background re-search is enqueued\n\
              --backend B          destination for misses (default fpga)\n\
              --retries/--stage-deadline   worker retry policy (see batch)\n\
+             --no-trace           turn end-to-end tracing off (it is on\n\
+                                  by default; every span site becomes a\n\
+                                  no-op)\n\
+             --trace-capacity N   span ring size (default 4096); the\n\
+                                  oldest spans are overwritten first\n\
+             --trace-sample N     keep 1 trace in N (default 1 = all)\n\
            client [apps...]       drive a running daemon (default: all\n\
                                   bundled apps)\n\
              --addr A             daemon address\n\
              --deadline-ms N      per-request deadline\n\
              --json               print raw response lines\n\
-             --stats              fetch the stats endpoint\n\
+             --stats              fetch the stats endpoint (aligned\n\
+                                  table; --json for the raw snapshot)\n\
+             --metrics            fetch the Prometheus text exposition\n\
              --shutdown           drain and stop the daemon\n\
+           trace                  inspect the daemon's span ring\n\
+             --addr A             daemon address\n\
+             --last N             newest N traces (default 8)\n\
+             --id N               one trace, rendered as a span tree\n\
+             --slow-ms MS         only traces whose root took ≥ MS\n\
+                                  (outlier capture)\n\
+             --out FILE           dump matching spans as NDJSON\n\
+             --chrome FILE        dump as Chrome trace-event JSON\n\
+             --in FILE            read a prior --out dump instead of\n\
+                                  connecting (same filters)\n\
+             --json               print spans as NDJSON to stdout\n\
            patterndb <sub> --pattern-db DIR   offline DB tooling\n\
              stats                record counts, per-backend split, age\n\
                                   histogram, shard/eviction/compaction\n\
@@ -339,6 +372,15 @@ const VALUE_FLAGS: &[&str] = &[
     "--refresh-ahead",
     "--deadline-ms",
     "--db-capacity",
+    "--trace-capacity",
+    "--trace-sample",
+    "--trace-out",
+    "--trace-chrome",
+    "--id",
+    "--slow-ms",
+    "--last",
+    "--chrome",
+    "--in",
 ];
 
 impl<'a> Flags<'a> {
@@ -695,7 +737,23 @@ fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
         (vec![pipeline], label)
     };
 
-    let mut batch = Batch::mixed(pipelines.iter().collect());
+    // Span recording for the cycle. Under a resilience policy the spans
+    // ride the shared simulated clock (deterministic timestamps for a
+    // given --inject-faults seed); otherwise they stamp wall time.
+    let trace_out = f.value("--trace-out");
+    let trace_chrome = f.value("--trace-chrome");
+    let tracer = if trace_out.is_some() || trace_chrome.is_some() {
+        if policy.is_some() {
+            Tracer::with_sim_clock(&TraceConfig::default(), clock.clone())
+        } else {
+            Tracer::new(&TraceConfig::default())
+        }
+    } else {
+        Tracer::disabled()
+    };
+
+    let mut batch = Batch::mixed(pipelines.iter().collect())
+        .with_tracer(tracer.clone());
     for spec in &specs {
         let (app, src) = resolve_source(spec)?;
         batch.push(request_for(
@@ -788,6 +846,25 @@ fn cmd_batch(args: &[String]) -> anyhow::Result<()> {
             timeouts,
             t.total_panics(),
         );
+    }
+
+    if tracer.enabled() {
+        let mut rows: Vec<SpanRow> =
+            tracer.spans().iter().map(SpanRow::from).collect();
+        sort_spans(&mut rows);
+        if let Some(path) = trace_out {
+            std::fs::write(path, to_ndjson(&rows))
+                .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            println!("{} span(s) written to {path}", rows.len());
+        }
+        if let Some(path) = trace_chrome {
+            std::fs::write(path, to_chrome(&rows).pretty())
+                .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            println!(
+                "chrome trace ({} spans) written to {path}",
+                rows.len()
+            );
+        }
     }
 
     let out = f.value("--out").unwrap_or("batch_report.json");
@@ -1087,6 +1164,38 @@ mod tests {
             run(&s(&["offload", "sobel", "--backend", "tpu"])),
             1
         );
+    }
+
+    #[test]
+    fn batch_trace_dump_is_deterministic_under_faults() {
+        let dir = TempDir::new("cli-batch-trace").unwrap();
+        let mut dumps = Vec::new();
+        for name in ["t1.ndjson", "t2.ndjson"] {
+            let t = dir.join(name).to_string_lossy().into_owned();
+            let r = dir
+                .join(format!("{name}.report.json"))
+                .to_string_lossy()
+                .into_owned();
+            assert_eq!(
+                run(&s(&[
+                    "batch",
+                    "sobel",
+                    "--inject-faults",
+                    "7",
+                    "--trace-out",
+                    &t,
+                    "--out",
+                    &r,
+                ])),
+                0
+            );
+            dumps.push(std::fs::read_to_string(dir.join(name)).unwrap());
+        }
+        // Same seed, same simulated clock → byte-identical span dumps.
+        assert_eq!(dumps[0], dumps[1]);
+        assert!(dumps[0].contains("request"), "{}", dumps[0]);
+        assert!(dumps[0].contains("destination"), "{}", dumps[0]);
+        assert!(dumps[0].contains("stage.measure"), "{}", dumps[0]);
     }
 
     #[test]

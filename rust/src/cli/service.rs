@@ -13,6 +13,7 @@ use std::time::Duration;
 
 use crate::envadapt::patterndb::unix_now;
 use crate::envadapt::PatternDb;
+use crate::obs::TraceConfig;
 use crate::search::RetryPolicy;
 use crate::service::{
     BackendKind, Client, Service, ServiceConfig, TcpServer,
@@ -60,6 +61,12 @@ fn service_config(f: &Flags) -> anyhow::Result<ServiceConfig> {
             anyhow::anyhow!("bad value for --db-capacity: {v:?} (records)")
         })?),
     };
+    let trace_default = TraceConfig::default();
+    let trace = TraceConfig {
+        enabled: !f.has("--no-trace"),
+        capacity: f.num("--trace-capacity", trace_default.capacity)?,
+        sample: f.num("--trace-sample", trace_default.sample)?,
+    };
     let cfg = ServiceConfig {
         search: config_from_flags(f)?,
         backend,
@@ -70,6 +77,7 @@ fn service_config(f: &Flags) -> anyhow::Result<ServiceConfig> {
         refresh_ahead: f.num("--refresh-ahead", 0.8f64)?,
         retry,
         db_capacity,
+        trace,
     };
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
@@ -101,6 +109,84 @@ pub(super) fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The aligned human view of a stats snapshot (`client --stats`). The
+/// raw JSON — schema pinned by the golden test in
+/// [`crate::service::stats`] — stays available behind `--json`.
+fn render_stats(stats: &Json) -> String {
+    let n = |k: &str| stats.get(&[k]).and_then(Json::as_f64).unwrap_or(0.0);
+    let mut out = String::from("service\n");
+    for (label, key) in [
+        ("requests", "requests"),
+        ("hits", "hits"),
+        ("misses", "misses"),
+        ("coalesced", "coalesced"),
+        ("rejected", "rejected"),
+        ("timeouts", "timeouts"),
+        ("degraded", "degraded"),
+        ("solves", "solves"),
+        ("solve errors", "solve_errors"),
+        ("avg solve ms", "avg_solve_ms"),
+        ("queue depth", "queue_depth"),
+        ("inflight", "inflight"),
+        ("refreshes scheduled", "refreshes_scheduled"),
+        ("refreshes done", "refreshes_done"),
+        ("refreshes dropped", "refreshes_dropped"),
+    ] {
+        out.push_str(&format!("  {label:<22} {:>12}\n", n(key)));
+    }
+    out.push_str("latency (us)\n");
+    for (label, p50, p99, max) in [
+        ("hit", "hit_p50_us", "hit_p99_us", "hit_max_us"),
+        ("miss", "miss_p50_us", "miss_p99_us", "miss_max_us"),
+    ] {
+        out.push_str(&format!(
+            "  {label:<8} p50 {:>10}  p99 {:>10}  max {:>10}\n",
+            n(p50),
+            n(p99),
+            n(max)
+        ));
+    }
+    out.push_str("store\n");
+    for (label, key) in [
+        ("index records", "index_records"),
+        ("index hits", "index_hits"),
+        ("index misses", "index_misses"),
+        ("stale hits", "stale_hits"),
+        ("appends", "appends"),
+        ("stale writes dropped", "stale_writes_dropped"),
+        ("evictions", "evictions"),
+        ("compactions", "compactions"),
+        ("quarantined bytes", "quarantined_bytes"),
+        ("torn truncations", "torn_truncations"),
+    ] {
+        out.push_str(&format!("  {label:<22} {:>12}\n", n(key)));
+    }
+    out.push_str("retries (per stage)\n");
+    let stage = |s: &str, k: &str| {
+        stats
+            .get(&["faults", s, k])
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    out.push_str(&format!(
+        "  {:<10} {:>10} {:>10} {:>10} {:>10} {:>8} {:>11}\n",
+        "stage", "calls", "retries", "exhausted", "timeouts", "panics",
+        "backoff s"
+    ));
+    for s in ["measure", "verify", "deploy"] {
+        out.push_str(&format!(
+            "  {s:<10} {:>10} {:>10} {:>10} {:>10} {:>8} {:>11.1}\n",
+            stage(s, "calls"),
+            stage(s, "retries"),
+            stage(s, "exhausted"),
+            stage(s, "timeouts"),
+            stage(s, "panics"),
+            stage(s, "backoff_s"),
+        ));
+    }
+    out
+}
+
 pub(super) fn cmd_client(args: &[String]) -> anyhow::Result<()> {
     let f = Flags { args };
     let addr = f.value("--addr").unwrap_or(DEFAULT_ADDR);
@@ -121,7 +207,8 @@ pub(super) fn cmd_client(args: &[String]) -> anyhow::Result<()> {
         return Ok(());
     }
 
-    let stats_only = f.has("--stats") && f.positionals().is_empty();
+    let stats_only = (f.has("--stats") || f.has("--metrics"))
+        && f.positionals().is_empty();
     let mut failed = 0usize;
     if !stats_only {
         let apps: Vec<String> = {
@@ -193,8 +280,15 @@ pub(super) fn cmd_client(args: &[String]) -> anyhow::Result<()> {
         if raw_json {
             println!("{resp}");
         } else if let Some(stats) = resp.get(&["stats"]) {
-            println!("{}", stats.pretty());
+            print!("{}", render_stats(stats));
         }
+    }
+
+    if f.has("--metrics") {
+        id += 1;
+        // Prometheus exposition is already a text format; print it
+        // verbatim (it is what a scraper would ingest).
+        print!("{}", client.metrics(id)?);
     }
 
     if failed > 0 {
@@ -424,6 +518,34 @@ mod tests {
     }
 
     #[test]
+    fn stats_table_renders_all_sections() {
+        use crate::util::json::Json;
+        let stats = Json::parse(
+            r#"{"requests": 10, "hits": 7, "hit_p50_us": 120,
+                "faults": {"measure": {"retries": 3,
+                                       "backoff_s": 90.0}}}"#,
+        )
+        .unwrap();
+        let table = super::render_stats(&stats);
+        for section in
+            ["service", "latency (us)", "store", "retries (per stage)"]
+        {
+            assert!(table.contains(section), "{table}");
+        }
+        assert!(table
+            .lines()
+            .any(|l| l.contains("requests") && l.contains("10")));
+        assert!(table
+            .lines()
+            .any(|l| l.contains("p50") && l.contains("120")));
+        assert!(table
+            .lines()
+            .any(|l| l.starts_with("  measure")
+                && l.contains('3')
+                && l.contains("90.0")));
+    }
+
+    #[test]
     fn serve_rejects_bad_flags() {
         assert_eq!(
             run(&s(&["serve", "--backend", "tpu"])),
@@ -434,6 +556,8 @@ mod tests {
             1
         );
         assert_eq!(run(&s(&["serve", "--db-capacity", "0"])), 1);
+        assert_eq!(run(&s(&["serve", "--trace-capacity", "0"])), 1);
+        assert_eq!(run(&s(&["serve", "--trace-sample", "0"])), 1);
         assert_eq!(run(&s(&["client", "--addr", "127.0.0.1:1"])), 1);
     }
 

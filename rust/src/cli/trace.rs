@@ -1,0 +1,189 @@
+//! `repro trace` — inspect the observability layer's span ring: recent
+//! traces as a summary table, one trace as an indented tree, slow-root
+//! outlier capture, and NDJSON / Chrome-trace dumps.
+//!
+//! The data source is either a live daemon (the `trace` op over the
+//! line protocol) or an NDJSON dump written earlier with `--out`
+//! (re-read with `--in` — same filters, no daemon needed).
+
+use crate::obs::export::{
+    from_ndjson, render_summary, render_tree, sort_spans, to_chrome,
+    to_ndjson,
+};
+use crate::obs::SpanRow;
+use crate::service::{Client, DEFAULT_ADDR};
+use crate::util::json::Json;
+
+use super::Flags;
+
+/// The `--in FILE` equivalent of the daemon-side span selection: one
+/// trace by id, slow-root traces, or the last N traces.
+fn filter_rows(
+    rows: Vec<SpanRow>,
+    trace_id: Option<u64>,
+    slow_ms: Option<f64>,
+    last: usize,
+) -> Vec<SpanRow> {
+    use std::collections::BTreeSet;
+    if let Some(id) = trace_id {
+        return rows.into_iter().filter(|s| s.trace_id == id).collect();
+    }
+    let keep: BTreeSet<u64> = match slow_ms {
+        Some(ms) => {
+            let cut_us = (ms * 1000.0).max(0.0) as u64;
+            rows.iter()
+                .filter(|s| s.parent_id == 0 && s.duration_us() >= cut_us)
+                .map(|s| s.trace_id)
+                .collect()
+        }
+        None => {
+            let mut ids: Vec<u64> =
+                rows.iter().map(|s| s.trace_id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            ids.into_iter().rev().take(last).collect()
+        }
+    };
+    rows.into_iter()
+        .filter(|s| keep.contains(&s.trace_id))
+        .collect()
+}
+
+pub(super) fn cmd_trace(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let trace_id: Option<u64> = match f.value("--id") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| {
+            anyhow::anyhow!("bad value for --id: {v:?}")
+        })?),
+    };
+    let slow_ms: Option<f64> = match f.value("--slow-ms") {
+        None => None,
+        Some(v) => Some(v.parse().map_err(|_| {
+            anyhow::anyhow!("bad value for --slow-ms: {v:?}")
+        })?),
+    };
+    let last: usize = f.num("--last", 8usize)?;
+
+    let mut spans: Vec<SpanRow> = match f.value("--in") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+            let rows = from_ndjson(&text)
+                .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+            filter_rows(rows, trace_id, slow_ms, last)
+        }
+        None => {
+            let addr = f.value("--addr").unwrap_or(DEFAULT_ADDR);
+            let mut client = Client::connect(addr)?;
+            let resp = client.trace(1, trace_id, slow_ms, Some(last))?;
+            let Some(arr) = resp.get(&["spans"]).and_then(Json::as_arr)
+            else {
+                anyhow::bail!("trace response carries no spans: {resp}");
+            };
+            arr.iter().filter_map(SpanRow::from_json).collect()
+        }
+    };
+    sort_spans(&mut spans);
+
+    if let Some(path) = f.value("--out") {
+        std::fs::write(path, to_ndjson(&spans))
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("{} span(s) written to {path}", spans.len());
+        return Ok(());
+    }
+    if let Some(path) = f.value("--chrome") {
+        std::fs::write(path, to_chrome(&spans).pretty())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!(
+            "chrome trace ({} spans) written to {path} — load it in \
+             chrome://tracing or Perfetto",
+            spans.len()
+        );
+        return Ok(());
+    }
+    if f.has("--json") {
+        print!("{}", to_ndjson(&spans));
+        return Ok(());
+    }
+    if spans.is_empty() {
+        println!(
+            "no spans matched (is tracing on? `repro serve` traces \
+             unless started with --no-trace)"
+        );
+        return Ok(());
+    }
+    if trace_id.is_some() {
+        print!("{}", render_tree(&spans));
+    } else {
+        print!("{}", render_summary(&spans));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(trace: u64, parent: u64, start: u64, end: u64) -> SpanRow {
+        SpanRow {
+            trace_id: trace,
+            span_id: if parent == 0 { 1 } else { 2 },
+            parent_id: parent,
+            name: "request".to_string(),
+            detail: String::new(),
+            start_us: start,
+            end_us: end,
+        }
+    }
+
+    #[test]
+    fn dump_filters_match_the_daemon_semantics() {
+        let rows = vec![
+            row(1, 0, 0, 500_000),
+            row(1, 1, 10, 20),
+            row(2, 0, 0, 100),
+            row(3, 0, 0, 80_000),
+        ];
+        let one = filter_rows(rows.clone(), Some(1), None, 8);
+        assert_eq!(one.len(), 2);
+        let slow = filter_rows(rows.clone(), None, Some(60.0), 8);
+        let ids: Vec<u64> = slow.iter().map(|s| s.trace_id).collect();
+        assert!(ids.contains(&1) && ids.contains(&3) && !ids.contains(&2));
+        let newest = filter_rows(rows, None, None, 1);
+        assert!(newest.iter().all(|s| s.trace_id == 3));
+    }
+
+    #[test]
+    fn trace_cli_reads_back_a_dump() {
+        use crate::util::tempdir::TempDir;
+        let dir = TempDir::new("cli-trace-dump").unwrap();
+        let dump = dir.join("spans.ndjson");
+        let rows = vec![row(1, 0, 0, 900), row(1, 1, 10, 20)];
+        std::fs::write(&dump, to_ndjson(&rows)).unwrap();
+        let dump_s = dump.to_string_lossy().into_owned();
+        let chrome = dir.join("trace.json");
+        let chrome_s = chrome.to_string_lossy().into_owned();
+        let s = |v: &[&str]| -> Vec<String> {
+            v.iter().map(|x| x.to_string()).collect()
+        };
+        // Summary, tree, and chrome re-export all succeed offline.
+        assert_eq!(crate::cli::run(&s(&["trace", "--in", &dump_s])), 0);
+        assert_eq!(
+            crate::cli::run(&s(&[
+                "trace", "--in", &dump_s, "--id", "1"
+            ])),
+            0
+        );
+        assert_eq!(
+            crate::cli::run(&s(&[
+                "trace", "--in", &dump_s, "--chrome", &chrome_s
+            ])),
+            0
+        );
+        let text = std::fs::read_to_string(&chrome).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let events = j.get(&["traceEvents"]).unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+    }
+}

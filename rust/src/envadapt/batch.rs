@@ -37,12 +37,16 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::funcblock::ConfirmedBlock;
+use crate::obs::{self, Tracer};
 use crate::search::resilience::{
     FaultClass, FaultReport, OffloadError, Stage,
 };
 use crate::util::json::Json;
 
-use super::pipeline::{OffloadRequest, Pipeline, Plan, Planned};
+use super::pipeline::{
+    Analyzed, Candidates, OffloadRequest, Pipeline, Plan, Planned,
+};
 
 /// One destination's result for one application in a mixed cycle.
 #[derive(Debug)]
@@ -390,6 +394,7 @@ impl BatchReport {
 pub struct Batch<'a> {
     pipelines: Vec<&'a Pipeline<'a>>,
     requests: Vec<OffloadRequest>,
+    tracer: Tracer,
 }
 
 impl<'a> Batch<'a> {
@@ -399,6 +404,7 @@ impl<'a> Batch<'a> {
         Batch {
             pipelines: vec![pipeline],
             requests: Vec::new(),
+            tracer: Tracer::disabled(),
         }
     }
 
@@ -415,7 +421,17 @@ impl<'a> Batch<'a> {
         Batch {
             pipelines,
             requests: Vec::new(),
+            tracer: Tracer::disabled(),
         }
+    }
+
+    /// Record spans for this cycle on `tracer`: each app mints its own
+    /// root `request` trace, and the destination fan-out, pipeline
+    /// stages, retries, and store writes nest under it. Without this
+    /// the batch runs untraced (every span site is a no-op).
+    pub fn with_tracer(mut self, tracer: Tracer) -> Self {
+        self.tracer = tracer;
+        self
     }
 
     pub fn push(&mut self, req: OffloadRequest) {
@@ -466,12 +482,30 @@ impl<'a> Batch<'a> {
     /// the typed fault, walks the ladder, and the remaining apps still
     /// solve.
     pub fn run(&self) -> BatchReport {
+        // Thread-local trace context does not cross the scoped-thread
+        // boundary by itself; capture a handoff here so worker threads
+        // can ride an enclosing trace when the caller has one.
+        let inherited = obs::handoff();
         let results: Vec<Vec<Result<Planned, OffloadError>>> =
             std::thread::scope(|scope| {
+                let inherited = &inherited;
                 let handles: Vec<_> = self
                     .requests
                     .iter()
-                    .map(|req| scope.spawn(move || self.solve_app(req)))
+                    .map(|req| {
+                        scope.spawn(move || {
+                            let _enter = obs::enter(inherited);
+                            let mut _child =
+                                _enter.is_some().then(|| obs::span("request"));
+                            if let Some(s) = _child.as_mut() {
+                                s.note(|| req.app.clone());
+                            }
+                            let _root = _enter.is_none().then(|| {
+                                self.tracer.trace("request", &req.app)
+                            });
+                            self.solve_app(req)
+                        })
+                    })
                     .collect();
                 handles
                     .into_iter()
@@ -659,13 +693,22 @@ impl<'a> Batch<'a> {
         if !self.sharable() {
             // Independent full solves, each isolated on its own thread
             // so a panicking backend only loses its own destination.
+            let trace = obs::handoff();
             return std::thread::scope(|scope| {
+                let trace = &trace;
                 let handles: Vec<_> = self
                     .pipelines
                     .iter()
                     .map(|&pipe| {
                         let req = req.clone();
-                        scope.spawn(move || pipe.solve(req))
+                        scope.spawn(move || {
+                            let _enter = obs::enter(trace);
+                            let mut span = obs::span("destination");
+                            span.note(|| {
+                                pipe.backend().name().to_string()
+                            });
+                            pipe.solve(req)
+                        })
                     })
                     .collect();
                 handles.into_iter().map(join_solve).collect()
@@ -727,46 +770,32 @@ impl<'a> Batch<'a> {
             _ => None,
         };
 
+        let trace = obs::handoff();
         std::thread::scope(|scope| {
             let analyzed = &analyzed;
             let shared_cands = &shared_cands;
             let shared_blocks = &shared_blocks;
+            let trace = &trace;
             let handles: Vec<_> = self
                 .pipelines
                 .iter()
                 .zip(cached)
                 .map(|(&pipe, cache_hit)| {
-                    scope.spawn(move || match cache_hit {
-                        Ok(Some(planned)) => Ok(planned),
-                        Err(e) => Err(DestFault(e)),
-                        Ok(None) => {
-                            let r = match (shared_cands, shared_blocks) {
-                                (Some(c), _) => pipe
-                                    .solve_from_candidates(c.clone()),
-                                (None, Some(blocks)) => match analyzed {
-                                    Some(a) => pipe.solve_from_blocked(
-                                        pipe.price_blocks(
-                                            a.clone(),
-                                            blocks,
-                                        ),
-                                    ),
-                                    None => {
-                                        return Err(DestFault(
-                                            invariant_fault(),
-                                        ))
-                                    }
-                                },
-                                (None, None) => match analyzed {
-                                    Some(a) => pipe
-                                        .solve_from_analyzed(a.clone()),
-                                    None => {
-                                        return Err(DestFault(
-                                            invariant_fault(),
-                                        ))
-                                    }
-                                },
-                            };
-                            r.map_err(|e| DestFault(e.to_offload_error()))
+                    scope.spawn(move || {
+                        let _enter = obs::enter(trace);
+                        let mut span = obs::span("destination");
+                        span.note(|| pipe.backend().name().to_string());
+                        match cache_hit {
+                            Ok(Some(planned)) => Ok(planned),
+                            Err(e) => Err(DestFault(e)),
+                            Ok(None) => {
+                                solve_uncached(
+                                    pipe,
+                                    analyzed,
+                                    shared_cands,
+                                    shared_blocks,
+                                )
+                            }
                         }
                     })
                 })
@@ -795,6 +824,30 @@ impl<'a> Batch<'a> {
 
 /// Typed fault carried across the per-destination worker boundary.
 struct DestFault(OffloadError);
+
+/// Stages 4–5 for one destination that missed the cache, fed from the
+/// shared per-app funnel prefix (see [`Batch::run`]). Hoisted out of
+/// the worker closure so the trace guards wrap exactly one call.
+fn solve_uncached(
+    pipe: &Pipeline<'_>,
+    analyzed: &Option<Analyzed>,
+    shared_cands: &Option<Candidates>,
+    shared_blocks: &Option<Vec<ConfirmedBlock>>,
+) -> Result<Planned, DestFault> {
+    let r = match (shared_cands, shared_blocks) {
+        (Some(c), _) => pipe.solve_from_candidates(c.clone()),
+        (None, Some(blocks)) => match analyzed {
+            Some(a) => pipe
+                .solve_from_blocked(pipe.price_blocks(a.clone(), blocks)),
+            None => return Err(DestFault(invariant_fault())),
+        },
+        (None, None) => match analyzed {
+            Some(a) => pipe.solve_from_analyzed(a.clone()),
+            None => return Err(DestFault(invariant_fault())),
+        },
+    };
+    r.map_err(|e| DestFault(e.to_offload_error()))
+}
 
 fn join_solve(
     h: std::thread::ScopedJoinHandle<
@@ -1119,6 +1172,44 @@ int main() {
                     >= best.plan.as_ref().unwrap().speedup()
             );
         }
+    }
+
+    #[test]
+    fn traced_batch_mints_one_root_per_app() {
+        let b = backend();
+        let pipe = Pipeline::new(SearchConfig::default(), &b).unwrap();
+        let tracer = Tracer::new(&crate::obs::TraceConfig::default());
+        let report = Batch::new(&pipe)
+            .with(req("good", GOOD))
+            .with(req("good2", GOOD2))
+            .with_tracer(tracer.clone())
+            .run();
+        assert_eq!(report.solved(), 2);
+        let spans = tracer.spans();
+        let roots: Vec<_> = spans
+            .iter()
+            .filter(|s| s.name == "request")
+            .collect();
+        assert_eq!(roots.len(), 2, "one root trace per app");
+        let apps: std::collections::BTreeSet<&str> =
+            roots.iter().map(|s| s.detail.as_str()).collect();
+        assert!(apps.contains("good") && apps.contains("good2"));
+        assert_ne!(roots[0].trace_id, roots[1].trace_id);
+        // The destination fan-out and the pipeline stages nest inside
+        // the same traces the roots minted.
+        let ids: std::collections::BTreeSet<u64> =
+            roots.iter().map(|s| s.trace_id).collect();
+        for name in ["destination", "stage.measure", "stage.select"] {
+            assert!(
+                spans
+                    .iter()
+                    .any(|s| s.name == name && ids.contains(&s.trace_id)),
+                "missing {name} span inside the app traces"
+            );
+        }
+        // An untraced batch records nothing and still solves.
+        let silent = Batch::new(&pipe).with(req("good", GOOD)).run();
+        assert_eq!(silent.solved(), 1);
     }
 
     #[test]

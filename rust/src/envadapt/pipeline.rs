@@ -50,8 +50,9 @@ use crate::analysis::{analyze_with, Analysis};
 use crate::funcblock::{self, BlockReplacement, Catalog};
 use crate::minic::ast::LoopId;
 use crate::minic::{parse as parse_minic, typecheck, Program};
+use crate::obs;
 use crate::runtime::{Artifacts, Runtime, SampleRun};
-use crate::search::backend::Backend;
+use crate::search::backend::{Backend, TracedBackend};
 use crate::search::resilience::{
     FaultClass, FaultReport, FaultStats, OffloadError, RetryPolicy,
     RetryingBackend, SimClock, Stage,
@@ -566,6 +567,16 @@ impl<'a> Pipeline<'a> {
         self
     }
 
+    /// Accumulate retry/fault telemetry into a caller-owned
+    /// [`FaultStats`] instead of this pipeline's private one. The
+    /// service tier hands every worker pipeline the same sink, so
+    /// per-job counters survive the pipeline being dropped and surface
+    /// through [`StatsSnapshot`](crate::service::StatsSnapshot).
+    pub fn with_fault_stats(mut self, stats: FaultStats) -> Self {
+        self.stats = stats;
+        self
+    }
+
     pub fn config(&self) -> &SearchConfig {
         &self.config
     }
@@ -604,6 +615,7 @@ impl<'a> Pipeline<'a> {
 
     /// Step 1 (front): parse + semantic check.
     pub fn parse(&self, req: OffloadRequest) -> Result<Parsed, PipelineError> {
+        let _span = obs::span("stage.parse");
         let prog = parse_minic(&req.source)
             .map_err(|e| PipelineError::Parse(format!("{e}")))?;
         typecheck::check_ok(&prog)
@@ -618,6 +630,7 @@ impl<'a> Pipeline<'a> {
 
     /// Step 1 (back): profiling analysis on the configured engine.
     pub fn analyze(&self, p: Parsed) -> Result<Analyzed, PipelineError> {
+        let _span = obs::span("stage.analyze");
         let analysis =
             analyze_with(&p.prog, &p.req.entry, self.config.engine)
                 .map_err(|e| PipelineError::Analysis(format!("{e}")))?;
@@ -640,6 +653,7 @@ impl<'a> Pipeline<'a> {
         &self,
         a: Analyzed,
     ) -> Result<FuncBlocked, PipelineError> {
+        let _span = obs::span("stage.funcblock");
         let confirmed = self.confirm_blocks(&a);
         Ok(self.price_blocks(a, &confirmed))
     }
@@ -723,6 +737,7 @@ impl<'a> Pipeline<'a> {
         &self,
         f: FuncBlocked,
     ) -> Result<Candidates, PipelineError> {
+        let _span = obs::span("stage.extract");
         let claimed: std::collections::BTreeSet<LoopId> = f
             .blocks
             .iter()
@@ -773,8 +788,12 @@ impl<'a> Pipeline<'a> {
     /// forced onto the least-bad *losing* loop pattern.
     pub fn measure(&self, c: Candidates) -> Result<Measured, PipelineError> {
         match self.retrying_backend() {
+            // The retry wrapper emits its own backend.measure /
+            // backend.verify spans (with per-attempt children); the
+            // bare backend gets the span decorator instead.
             Some(wrapped) => self.measure_with(c, &wrapped),
-            None => self.measure_with(c, self.backend),
+            None => self
+                .measure_with(c, &TracedBackend::new(self.backend)),
         }
     }
 
@@ -783,6 +802,7 @@ impl<'a> Pipeline<'a> {
         c: Candidates,
         backend: &dyn Backend,
     ) -> Result<Measured, PipelineError> {
+        let _span = obs::span("stage.measure");
         let mut set = if c.cands.is_empty() {
             // Every candidate loop was claimed by a block (extract only
             // degrades to an empty set when blocks exist).
@@ -890,6 +910,7 @@ impl<'a> Pipeline<'a> {
     /// Step 5: solution selection (loop pattern + block replacements),
     /// then persistence when a pattern DB is configured.
     pub fn select(&self, m: Measured) -> Result<Planned, PipelineError> {
+        let _span = obs::span("stage.select");
         let mut sol =
             measure::select(&m.req.app, m.trace, m.set, &self.config)?;
         // Fold the block replacements into the solution: combined
@@ -928,13 +949,14 @@ impl<'a> Pipeline<'a> {
         p: Planned,
         env: Option<(&Runtime, &Artifacts)>,
     ) -> Result<Deployed, PipelineError> {
+        let _span = obs::span("stage.deploy");
         let sample_run = match (&p.req.pjrt_sample, env) {
             (Some(sample), Some((rt, art))) => {
                 let run = match self.retrying_backend() {
                     Some(wrapped) => {
                         wrapped.deploy_check(sample, (rt, art), p.req.seed)
                     }
-                    None => self.backend.deploy_check(
+                    None => TracedBackend::new(self.backend).deploy_check(
                         sample,
                         (rt, art),
                         p.req.seed,

@@ -58,6 +58,8 @@
 //! (PJRT artifacts), [`workloads`] (bundled applications), [`store`]
 //! (the sharded, log-structured pattern store every DB facade sits on),
 //! [`service`] (the resident plan-serving daemon behind `repro serve`),
+//! [`obs`] (end-to-end tracing, lock-free latency histograms, and the
+//! Prometheus exposition behind `repro trace` and the `metrics` op),
 //! [`cli`], and [`util`]. See `ARCHITECTURE.md` at the repository root
 //! for the full data-flow map and the recipe for adding another
 //! destination.
@@ -102,6 +104,7 @@ pub mod funcblock;
 pub mod gpu;
 pub mod hls;
 pub mod minic;
+pub mod obs;
 pub mod runtime;
 pub mod search;
 pub mod service;

@@ -1,0 +1,180 @@
+//! The bounded in-process span sink.
+//!
+//! Writers never block and never propagate poison: a slot is claimed
+//! with one wait-free `fetch_add`, and the slot write uses `try_lock` —
+//! if an exporter (or a wedged thread) holds that slot, the span is
+//! *dropped* and counted, because losing one span is always better than
+//! stalling the request path. Readers take the slot locks properly and
+//! recover from poison, so a panicking writer can never wedge future
+//! recording or snapshots.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::span::SpanRecord;
+
+/// Fixed-capacity span ring. Oldest spans are overwritten once the ring
+/// wraps; memory is bounded at `capacity * sizeof(slot)` forever.
+#[derive(Debug)]
+pub struct Collector {
+    slots: Box<[Mutex<Option<SpanRecord>>]>,
+    /// Total spans ever claimed (slot = claimed % capacity).
+    claimed: AtomicU64,
+    /// Spans lost to slot contention (see module docs).
+    dropped: AtomicU64,
+}
+
+impl Collector {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        let slots = (0..capacity)
+            .map(|_| Mutex::new(None))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Collector {
+            slots,
+            claimed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Spans recorded over the collector's lifetime (including ones the
+    /// ring has since overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.claimed.load(Ordering::Relaxed)
+    }
+
+    /// Spans dropped because their slot was contended at write time.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Store one span. Never blocks: contended slots drop the span.
+    pub fn record(&self, rec: SpanRecord) {
+        let idx = self.claimed.fetch_add(1, Ordering::Relaxed) as usize
+            % self.slots.len();
+        match self.slots[idx].try_lock() {
+            Ok(mut slot) => *slot = Some(rec),
+            Err(std::sync::TryLockError::Poisoned(p)) => {
+                *p.into_inner() = Some(rec)
+            }
+            Err(std::sync::TryLockError::WouldBlock) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Copy out every retained span, oldest claim first. Poisoned slots
+    /// are read through, not propagated.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let claimed = self.claimed.load(Ordering::Relaxed) as usize;
+        let cap = self.slots.len();
+        let read = |i: usize| -> Option<SpanRecord> {
+            self.slots[i]
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .clone()
+        };
+        let mut out = Vec::with_capacity(claimed.min(cap));
+        if claimed <= cap {
+            out.extend((0..claimed).filter_map(read));
+        } else {
+            let head = claimed % cap;
+            out.extend((head..cap).filter_map(read));
+            out.extend((0..head).filter_map(read));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn rec(span_id: u64) -> SpanRecord {
+        SpanRecord {
+            trace_id: 1,
+            span_id,
+            parent_id: 0,
+            name: "test",
+            detail: String::new(),
+            start_us: span_id,
+            end_us: span_id + 1,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_the_newest_spans() {
+        let c = Collector::new(4);
+        for i in 0..10 {
+            c.record(rec(i));
+        }
+        let spans = c.snapshot();
+        let ids: Vec<u64> = spans.iter().map(|s| s.span_id).collect();
+        assert_eq!(ids, vec![8, 9, 6, 7]);
+        assert_eq!(c.recorded(), 10);
+        assert_eq!(c.dropped(), 0);
+    }
+
+    #[test]
+    fn contended_slot_drops_instead_of_blocking() {
+        let c = Collector::new(1);
+        // Hold the only slot's lock and record from another thread: the
+        // writer must return immediately with the span dropped.
+        let guard = c.slots[0].lock().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| c.record(rec(1))).join().unwrap();
+        });
+        drop(guard);
+        assert_eq!(c.dropped(), 1);
+        assert!(c.snapshot().is_empty());
+    }
+
+    #[test]
+    fn poisoned_slot_never_wedges_recording_or_snapshots() {
+        let c = Arc::new(Collector::new(2));
+        // Poison slot 0 by panicking while holding its lock.
+        let c2 = Arc::clone(&c);
+        let _ = std::thread::spawn(move || {
+            let _guard = c2.slots[0].lock().unwrap();
+            panic!("poison the slot");
+        })
+        .join();
+        // Both recording into the poisoned slot and snapshotting recover.
+        c.record(rec(1));
+        c.record(rec(2));
+        let ids: Vec<u64> =
+            c.snapshot().iter().map(|s| s.span_id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(c.dropped(), 0);
+    }
+
+    #[test]
+    fn concurrent_writers_never_lose_more_than_contention() {
+        let c = Arc::new(Collector::new(64));
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        c.record(rec(t * 1000 + i));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.recorded(), 8000);
+        // Everything still present was stored intact (never torn), and
+        // the ring never grew past its capacity.
+        let spans = c.snapshot();
+        assert!(spans.len() <= 64);
+        assert!(spans.iter().all(|s| s.end_us == s.start_us + 1));
+    }
+}

@@ -1,0 +1,378 @@
+//! Span exporters: JSON wire shape, NDJSON dumps, Chrome trace-event
+//! JSON, and terminal rendering for `repro trace`.
+//!
+//! Two shapes exist on purpose. [`SpanRecord`] is the in-process record
+//! (static name, cheap to produce on the hot path); [`SpanRow`] is the
+//! owned equivalent that survives a trip through the wire protocol —
+//! `repro trace` parses responses into rows and renders or re-exports
+//! from there, so a dump taken from a live daemon and one written
+//! locally are byte-identical in format.
+
+use crate::util::json::Json;
+
+use super::span::SpanRecord;
+
+impl SpanRecord {
+    /// The wire/NDJSON shape of one span.
+    pub fn to_json(&self) -> Json {
+        span_json(
+            self.trace_id,
+            self.span_id,
+            self.parent_id,
+            self.name,
+            &self.detail,
+            self.start_us,
+            self.end_us,
+        )
+    }
+}
+
+fn span_json(
+    trace_id: u64,
+    span_id: u64,
+    parent_id: u64,
+    name: &str,
+    detail: &str,
+    start_us: u64,
+    end_us: u64,
+) -> Json {
+    Json::obj(vec![
+        ("trace_id", Json::Num(trace_id as f64)),
+        ("span_id", Json::Num(span_id as f64)),
+        ("parent_id", Json::Num(parent_id as f64)),
+        ("name", Json::Str(name.to_string())),
+        ("detail", Json::Str(detail.to_string())),
+        ("start_us", Json::Num(start_us as f64)),
+        ("end_us", Json::Num(end_us as f64)),
+    ])
+}
+
+/// An owned span — what the CLI works with after parsing a `trace` op
+/// response or an NDJSON dump.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRow {
+    pub trace_id: u64,
+    pub span_id: u64,
+    pub parent_id: u64,
+    pub name: String,
+    pub detail: String,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+impl SpanRow {
+    pub fn duration_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+
+    pub fn from_json(j: &Json) -> Option<SpanRow> {
+        let num = |k: &str| j.get(&[k])?.as_f64().map(|v| v as u64);
+        Some(SpanRow {
+            trace_id: num("trace_id")?,
+            span_id: num("span_id")?,
+            parent_id: num("parent_id")?,
+            name: j.get(&["name"])?.as_str()?.to_string(),
+            detail: j
+                .get(&["detail"])
+                .and_then(|d| d.as_str())
+                .unwrap_or_default()
+                .to_string(),
+            start_us: num("start_us")?,
+            end_us: num("end_us")?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        span_json(
+            self.trace_id,
+            self.span_id,
+            self.parent_id,
+            &self.name,
+            &self.detail,
+            self.start_us,
+            self.end_us,
+        )
+    }
+}
+
+impl From<&SpanRecord> for SpanRow {
+    fn from(rec: &SpanRecord) -> SpanRow {
+        SpanRow {
+            trace_id: rec.trace_id,
+            span_id: rec.span_id,
+            parent_id: rec.parent_id,
+            name: rec.name.to_string(),
+            detail: rec.detail.clone(),
+            start_us: rec.start_us,
+            end_us: rec.end_us,
+        }
+    }
+}
+
+/// Stable export order: by trace, then start time, then id.
+pub fn sort_spans(spans: &mut [SpanRow]) {
+    spans.sort_by(|a, b| {
+        (a.trace_id, a.start_us, a.span_id).cmp(&(
+            b.trace_id,
+            b.start_us,
+            b.span_id,
+        ))
+    });
+}
+
+/// One span object per line — the dump format `repro trace --out`
+/// writes and `--in` reads back.
+pub fn to_ndjson(spans: &[SpanRow]) -> String {
+    let mut out = String::new();
+    for s in spans {
+        out.push_str(&s.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse an NDJSON dump (blank lines skipped; unparseable lines are an
+/// error naming the line number).
+pub fn from_ndjson(text: &str) -> Result<Vec<SpanRow>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| format!("line {}: {e}", i + 1))?;
+        let row = SpanRow::from_json(&j)
+            .ok_or_else(|| format!("line {}: not a span object", i + 1))?;
+        out.push(row);
+    }
+    Ok(out)
+}
+
+/// Chrome trace-event JSON (the `chrome://tracing` / Perfetto "JSON
+/// Array Format"): complete (`ph:"X"`) events, one virtual thread per
+/// trace so concurrent requests stack side by side on the timeline.
+pub fn to_chrome(spans: &[SpanRow]) -> Json {
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            let label = if s.detail.is_empty() {
+                s.name.clone()
+            } else {
+                format!("{} ({})", s.name, s.detail)
+            };
+            Json::obj(vec![
+                ("name", Json::Str(label)),
+                ("cat", Json::Str("offload".to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(s.start_us as f64)),
+                ("dur", Json::Num(s.duration_us() as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(s.trace_id as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("span_id", Json::Num(s.span_id as f64)),
+                        (
+                            "parent_id",
+                            Json::Num(s.parent_id as f64),
+                        ),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+fn fmt_us(us: u64) -> String {
+    if us >= 10_000_000 {
+        format!("{:.1}s", us as f64 / 1e6)
+    } else if us >= 10_000 {
+        format!("{:.1}ms", us as f64 / 1e3)
+    } else {
+        format!("{us}us")
+    }
+}
+
+/// Indented tree of one trace's spans (children under parents, siblings
+/// in start order) — what `repro trace --id N` prints.
+pub fn render_tree(spans: &[SpanRow]) -> String {
+    let mut sorted: Vec<&SpanRow> = spans.iter().collect();
+    sorted.sort_by_key(|s| (s.start_us, s.span_id));
+    let mut out = String::new();
+    fn walk(
+        out: &mut String,
+        all: &[&SpanRow],
+        parent: u64,
+        depth: usize,
+    ) {
+        for s in all.iter().filter(|s| s.parent_id == parent) {
+            let detail = if s.detail.is_empty() {
+                String::new()
+            } else {
+                format!("  [{}]", s.detail)
+            };
+            out.push_str(&format!(
+                "{:indent$}{} {} +{}{}\n",
+                "",
+                fmt_us(s.duration_us()),
+                s.name,
+                fmt_us(s.start_us),
+                detail,
+                indent = depth * 2,
+            ));
+            walk(out, all, s.span_id, depth + 1);
+        }
+    }
+    walk(&mut out, &sorted, 0, 0);
+    // Orphans (parent overwritten out of the ring) still show up, flat.
+    let known: std::collections::BTreeSet<u64> =
+        sorted.iter().map(|s| s.span_id).collect();
+    for s in &sorted {
+        if s.parent_id != 0 && !known.contains(&s.parent_id) {
+            out.push_str(&format!(
+                "{} {} +{}  [orphan of span {}]\n",
+                fmt_us(s.duration_us()),
+                s.name,
+                fmt_us(s.start_us),
+                s.parent_id,
+            ));
+        }
+    }
+    out
+}
+
+/// One summary line per trace (id, root name/detail, span count, root
+/// duration) — what a bare `repro trace` prints.
+pub fn render_summary(spans: &[SpanRow]) -> String {
+    use std::collections::BTreeMap;
+    let mut per: BTreeMap<u64, (Option<&SpanRow>, usize)> =
+        BTreeMap::new();
+    for s in spans {
+        let e = per.entry(s.trace_id).or_insert((None, 0));
+        e.1 += 1;
+        if s.parent_id == 0 {
+            e.0 = Some(s);
+        }
+    }
+    let mut out = format!(
+        "{:>8}  {:>10}  {:>6}  {:<14}  {}\n",
+        "trace", "duration", "spans", "root", "detail"
+    );
+    for (id, (root, n)) in per {
+        let (dur, name, detail) = match root {
+            Some(r) => (
+                fmt_us(r.duration_us()),
+                r.name.as_str(),
+                r.detail.as_str(),
+            ),
+            None => ("?".to_string(), "(root evicted)", ""),
+        };
+        out.push_str(&format!(
+            "{id:>8}  {dur:>10}  {n:>6}  {name:<14}  {detail}\n"
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(
+        trace: u64,
+        span: u64,
+        parent: u64,
+        name: &str,
+        start: u64,
+        end: u64,
+    ) -> SpanRow {
+        SpanRow {
+            trace_id: trace,
+            span_id: span,
+            parent_id: parent,
+            name: name.to_string(),
+            detail: String::new(),
+            start_us: start,
+            end_us: end,
+        }
+    }
+
+    #[test]
+    fn ndjson_round_trips() {
+        let spans = vec![
+            row(1, 1, 0, "request", 0, 100),
+            row(1, 2, 1, "stage.parse", 5, 50),
+        ];
+        let text = to_ndjson(&spans);
+        assert_eq!(text.lines().count(), 2);
+        let back = from_ndjson(&text).unwrap();
+        assert_eq!(back, spans);
+    }
+
+    #[test]
+    fn ndjson_parse_errors_name_the_line() {
+        let err = from_ndjson("{\"trace_id\":1}\nnot json\n")
+            .unwrap_err();
+        assert!(err.contains("line 1") || err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn chrome_export_is_loadable_shape() {
+        let spans = vec![
+            row(1, 1, 0, "request", 0, 100),
+            row(2, 1, 0, "request", 10, 60),
+        ];
+        let j = to_chrome(&spans);
+        let events = j.get(&["traceEvents"]).unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let e0 = &events[0];
+        assert_eq!(e0.get(&["ph"]).unwrap().as_str(), Some("X"));
+        assert_eq!(e0.get(&["ts"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(e0.get(&["dur"]).unwrap().as_f64(), Some(100.0));
+        // One virtual tid per trace.
+        assert_eq!(e0.get(&["tid"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            events[1].get(&["tid"]).unwrap().as_f64(),
+            Some(2.0)
+        );
+        // The whole document parses back (it is what --chrome writes).
+        let text = j.to_string();
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn tree_rendering_indents_children() {
+        let spans = vec![
+            row(1, 1, 0, "request", 0, 100),
+            row(1, 2, 1, "admission", 1, 10),
+            row(1, 3, 2, "store.read", 2, 8),
+        ];
+        let tree = render_tree(&spans);
+        let lines: Vec<&str> = tree.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("request"));
+        assert!(lines[1].starts_with("  ") && lines[1].contains("admission"));
+        assert!(
+            lines[2].starts_with("    ")
+                && lines[2].contains("store.read")
+        );
+    }
+
+    #[test]
+    fn summary_lists_each_trace_once() {
+        let spans = vec![
+            row(1, 1, 0, "request", 0, 100),
+            row(1, 2, 1, "admission", 1, 10),
+            row(2, 1, 0, "request", 0, 50),
+        ];
+        let s = render_summary(&spans);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3); // header + 2 traces
+        assert!(lines[1].contains("100us"));
+        assert!(lines[2].contains("50us"));
+    }
+}

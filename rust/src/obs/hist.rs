@@ -1,0 +1,250 @@
+//! Lock-free log-linear histograms for latency recording.
+//!
+//! The layout is the HdrHistogram idea cut down to one tuning knob:
+//! 64 linear sub-buckets per power-of-two octave. Values below 64 are
+//! recorded exactly (one bucket per value); above that, a bucket spans
+//! `2^(octave-6)` consecutive values, so the reported bound is never
+//! more than 1/64 (~1.6%) above the true value. Recording is a single
+//! relaxed `fetch_add` on a pre-sized atomic array — no locks, no
+//! allocation, safe to hammer from every service thread at once — which
+//! is what lets the hit path record latencies without the `Mutex<Ring>`
+//! it used to take on every cached lookup.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 of the linear sub-buckets per octave.
+const SUB_BITS: u32 = 6;
+/// Linear sub-buckets per octave (and the exact-value range).
+const SUB: usize = 1 << SUB_BITS;
+/// Octaves above the exact range: values with their MSB at bit
+/// `SUB_BITS..=63`.
+const OCTAVES: usize = (64 - SUB_BITS) as usize;
+/// Total buckets: the exact range plus `OCTAVES` octaves of `SUB`.
+const NUM_BUCKETS: usize = SUB + OCTAVES * SUB;
+
+/// Bucket index for a value (exact below [`SUB`], log-linear above).
+fn bucket_of(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+    let octave = (msb - SUB_BITS) as usize;
+    let sub = ((v >> (msb - SUB_BITS)) as usize) & (SUB - 1);
+    SUB + octave * SUB + sub
+}
+
+/// Largest value bucket `i` covers — what quantiles report.
+fn upper_of(i: usize) -> u64 {
+    if i < SUB {
+        return i as u64;
+    }
+    let octave = ((i - SUB) / SUB) as u32;
+    let sub = ((i - SUB) % SUB) as u64;
+    let width = 1u64 << octave;
+    (SUB as u64 + sub)
+        .checked_shl(octave)
+        .map_or(u64::MAX, |lo| lo.saturating_add(width - 1))
+}
+
+/// A concurrent log-linear histogram of `u64` samples (typically
+/// microseconds). All methods are lock-free; `record` is wait-free.
+#[derive(Debug)]
+pub struct LogHistogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        let buckets = (0..NUM_BUCKETS)
+            .map(|_| AtomicU64::new(0))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        LogHistogram {
+            buckets,
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Wait-free: three relaxed adds and a
+    /// `fetch_max`.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Point-in-time copy of the non-empty buckets plus the scalar
+    /// aggregates. Quantiles and the Prometheus exposition both work
+    /// from this.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = Vec::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                counts.push((upper_of(i), n));
+            }
+        }
+        HistogramSnapshot {
+            counts,
+            count: self.count(),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+
+    /// `(p50, p99, max)` — the shape [`crate::service::StatsSnapshot`]
+    /// reports.
+    pub fn quantiles(&self) -> (u64, u64, u64) {
+        let snap = self.snapshot();
+        (snap.quantile(0.50), snap.quantile(0.99), snap.max)
+    }
+}
+
+/// A plain, comparable copy of a [`LogHistogram`] at one instant.
+/// `counts` holds `(bucket_upper_bound, samples)` pairs for the
+/// non-empty buckets, in ascending bound order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub counts: Vec<(u64, u64)>,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistogramSnapshot {
+    /// Nearest-rank quantile (`q` in `[0, 1]`), reported as the bucket's
+    /// upper bound and clamped to the exact observed max. Zero when
+    /// empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank =
+            ((self.count as f64 * q).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for &(upper, n) in &self.counts {
+            seen += n;
+            if seen >= rank {
+                return upper.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Mean of the recorded samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = LogHistogram::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let (p50, p99, max) = h.quantiles();
+        // Everything below 128 sits in an exact (width-1) bucket.
+        assert_eq!(p50, 50);
+        assert_eq!(p99, 99);
+        assert_eq!(max, 100);
+        assert_eq!(h.count(), 100);
+    }
+
+    #[test]
+    fn single_sample_round_trips() {
+        let h = LogHistogram::new();
+        h.record(5);
+        assert_eq!(h.quantiles(), (5, 5, 5));
+    }
+
+    #[test]
+    fn empty_reports_zero() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantiles(), (0, 0, 0));
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn large_values_stay_within_relative_error() {
+        let h = LogHistogram::new();
+        for v in [1_000u64, 10_000, 100_000, 1_000_000, 123_456_789] {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        for &v in &[1_000u64, 10_000, 100_000, 1_000_000, 123_456_789] {
+            let upper = upper_of(bucket_of(v));
+            assert!(upper >= v, "bucket bound below sample: {upper} < {v}");
+            let err = (upper - v) as f64 / v as f64;
+            assert!(err <= 1.0 / 64.0, "relative error {err} for {v}");
+        }
+        assert_eq!(snap.max, 123_456_789);
+        // p100 is clamped to the true max, not the bucket bound.
+        assert_eq!(snap.quantile(1.0), 123_456_789);
+    }
+
+    #[test]
+    fn bucket_bounds_are_monotonic_and_cover_u64() {
+        let mut prev = 0u64;
+        for i in 1..NUM_BUCKETS {
+            let u = upper_of(i);
+            assert!(u > prev, "bound not increasing at {i}");
+            prev = u;
+        }
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(63), 63);
+        assert_eq!(bucket_of(64), 64);
+        assert_eq!(upper_of(bucket_of(u64::MAX)), u64::MAX);
+        assert!(bucket_of(u64::MAX) < NUM_BUCKETS);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = std::sync::Arc::new(LogHistogram::new());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let h = std::sync::Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.record(t * 1_000 + (i % 97));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 80_000);
+        let snap = h.snapshot();
+        let total: u64 = snap.counts.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, 80_000);
+    }
+}

@@ -1,0 +1,163 @@
+//! Prometheus-style text exposition, built from counters and
+//! [`HistogramSnapshot`]s.
+//!
+//! No client library, just the stable text format: `# HELP` / `# TYPE`
+//! headers, `name value` samples, and the `_bucket{le="..."}` /
+//! `_sum` / `_count` triple for histograms. The `metrics` protocol op
+//! wraps the finished text in its JSON response line; anything that
+//! scrapes Prometheus text can parse the body.
+
+use super::hist::HistogramSnapshot;
+
+/// Incremental builder for one exposition document.
+#[derive(Debug, Default)]
+pub struct PromText {
+    out: String,
+}
+
+/// Format a sample value the way Prometheus expects (integers bare,
+/// floats with their natural shortest form).
+fn num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl PromText {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn header(&mut self, name: &str, help: &str, kind: &str) {
+        self.out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} {kind}\n"
+        ));
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, v: f64) {
+        self.header(name, help, "counter");
+        self.out.push_str(&format!("{name} {}\n", num(v)));
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, v: f64) {
+        self.header(name, help, "gauge");
+        self.out.push_str(&format!("{name} {}\n", num(v)));
+    }
+
+    /// A counter family with one label dimension, e.g.
+    /// `offload_retries_total{stage="measure"} 3`.
+    pub fn counter_vec(
+        &mut self,
+        name: &str,
+        help: &str,
+        label: &str,
+        samples: &[(&str, f64)],
+    ) {
+        self.header(name, help, "counter");
+        for (value, v) in samples {
+            self.out.push_str(&format!(
+                "{name}{{{label}=\"{value}\"}} {}\n",
+                num(*v)
+            ));
+        }
+    }
+
+    /// The cumulative `_bucket`/`_sum`/`_count` triple from a
+    /// log-bucketed snapshot. Bucket bounds are the histogram's own
+    /// non-empty bucket uppers — variable per scrape, which the text
+    /// format is fine with.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        snap: &HistogramSnapshot,
+    ) {
+        self.header(name, help, "histogram");
+        let mut cumulative = 0u64;
+        for &(upper, count) in &snap.counts {
+            cumulative += count;
+            self.out.push_str(&format!(
+                "{name}_bucket{{le=\"{upper}\"}} {cumulative}\n"
+            ));
+        }
+        self.out.push_str(&format!(
+            "{name}_bucket{{le=\"+Inf\"}} {}\n",
+            snap.count
+        ));
+        self.out
+            .push_str(&format!("{name}_sum {}\n", snap.sum));
+        self.out
+            .push_str(&format!("{name}_count {}\n", snap.count));
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::LogHistogram;
+
+    #[test]
+    fn counters_and_gauges_have_help_and_type() {
+        let mut p = PromText::new();
+        p.counter("offload_requests_total", "Requests admitted.", 7.0);
+        p.gauge("offload_queue_depth", "Jobs queued.", 3.0);
+        let text = p.finish();
+        assert!(text.contains("# HELP offload_requests_total"));
+        assert!(text.contains("# TYPE offload_requests_total counter"));
+        assert!(text.contains("offload_requests_total 7\n"));
+        assert!(text.contains("# TYPE offload_queue_depth gauge"));
+        assert!(text.contains("offload_queue_depth 3\n"));
+    }
+
+    #[test]
+    fn labeled_counters_quote_their_label() {
+        let mut p = PromText::new();
+        p.counter_vec(
+            "offload_retries_total",
+            "Retries by stage.",
+            "stage",
+            &[("measure", 2.0), ("verify", 0.0)],
+        );
+        let text = p.finish();
+        assert!(text
+            .contains("offload_retries_total{stage=\"measure\"} 2\n"));
+        assert!(text
+            .contains("offload_retries_total{stage=\"verify\"} 0\n"));
+    }
+
+    #[test]
+    fn histogram_triple_is_cumulative_and_ends_at_inf() {
+        let h = LogHistogram::new();
+        h.record(5);
+        h.record(5);
+        h.record(100);
+        let mut p = PromText::new();
+        p.histogram(
+            "offload_hit_latency_us",
+            "Hit latency.",
+            &h.snapshot(),
+        );
+        let text = p.finish();
+        assert!(text
+            .contains("offload_hit_latency_us_bucket{le=\"5\"} 2\n"));
+        assert!(text
+            .contains("offload_hit_latency_us_bucket{le=\"100\"} 3\n"));
+        assert!(text
+            .contains("offload_hit_latency_us_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("offload_hit_latency_us_sum 110\n"));
+        assert!(text.contains("offload_hit_latency_us_count 3\n"));
+    }
+
+    #[test]
+    fn fractional_values_keep_their_precision() {
+        let mut p = PromText::new();
+        p.gauge("offload_avg_solve_ms", "Mean solve.", 4.9);
+        assert!(p.finish().contains("offload_avg_solve_ms 4.9\n"));
+    }
+}

@@ -1,0 +1,104 @@
+//! Unified observability: request-scoped tracing, lock-free latency
+//! histograms, and a Prometheus-style exposition.
+//!
+//! Before this module, telemetry lived in silos — `ServiceStats`
+//! atomics, the retry seam's `FaultReport`, the store's counters — and
+//! none of it was *request-scoped*: when one request in a thousand
+//! degraded to `served_stale`, nothing could say which stage ate the
+//! time. This module follows a single `trace_id` from TCP accept to
+//! shard append:
+//!
+//! ```text
+//! request (root, per service request / batch app)
+//! ├── admission            reuse-key + index probe + queue decision
+//! │   └── store.read       sharded-store lookup (the hit path)
+//! ├── queue.wait           enqueue → worker pickup
+//! └── solve                the worker's ladder run
+//!     └── destination      one per destination pipeline
+//!         ├── stage.parse … stage.analyze … stage.funcblock
+//!         ├── stage.extract
+//!         ├── stage.measure
+//!         │   └── backend.measure / backend.verify
+//!         │       ├── retry.attempt (detail: "attempt N")
+//!         │       └── retry.backoff (detail: wait seconds)
+//!         ├── stage.select
+//!         │   └── store.append → store.evict → store.compact
+//!         └── stage.deploy
+//! ```
+//!
+//! The context rides a thread-local; crossing the admission queue or a
+//! batch's scoped threads is an explicit [`TraceHandoff`]. Timestamps
+//! come from wall clock in production or the shared
+//! [`SimClock`](crate::search::SimClock) in tests, so seeded fault runs
+//! produce byte-identical span trees. Recording is bounded and
+//! non-blocking by construction (see [`Collector`]): the request path
+//! can never be stalled or poisoned by its own telemetry.
+//!
+//! Exporters: NDJSON span dumps and Chrome trace-event JSON
+//! ([`export`]), plus the Prometheus text exposition ([`metrics`])
+//! built from the log-bucketed [`LogHistogram`]s that also back the
+//! service's latency quantiles. Surfaced over the wire as the `metrics`
+//! and `trace` protocol ops and the `repro trace` subcommand.
+//!
+//! ```
+//! use fpga_offload::obs::{self, TraceConfig, Tracer};
+//!
+//! let tracer = Tracer::new(&TraceConfig::default());
+//! {
+//!     let _root = tracer.trace("request", "demo-app");
+//!     let _stage = obs::span("stage.parse");
+//!     // ... work ...
+//! }
+//! let spans = tracer.spans();
+//! assert_eq!(spans.len(), 2);
+//! assert!(spans.iter().any(|s| s.name == "stage.parse"));
+//! ```
+
+pub mod collector;
+pub mod export;
+pub mod hist;
+pub mod metrics;
+pub mod span;
+
+pub use collector::Collector;
+pub use export::SpanRow;
+pub use hist::{HistogramSnapshot, LogHistogram};
+pub use metrics::PromText;
+pub use span::{
+    closed_span, enter, handoff, span, SpanGuard, SpanRecord,
+    TraceGuard, TraceHandoff, Tracer, ROOT_SPAN_ID,
+};
+
+/// Tracing knobs, carried by
+/// [`ServiceConfig`](crate::service::ServiceConfig) and the CLI flags.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceConfig {
+    /// Master switch; off means [`Tracer::disabled`] everywhere.
+    pub enabled: bool,
+    /// Span-ring capacity (spans retained, oldest overwritten).
+    pub capacity: usize,
+    /// Head sampling: keep 1 trace in `sample` (1 = trace everything).
+    pub sample: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            enabled: true,
+            capacity: 4096,
+            sample: 1,
+        }
+    }
+}
+
+impl TraceConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.enabled && self.capacity == 0 {
+            return Err("trace capacity must be >= 1".into());
+        }
+        if self.enabled && self.sample == 0 {
+            return Err("trace sample must be >= 1".into());
+        }
+        Ok(())
+    }
+}

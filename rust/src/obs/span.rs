@@ -1,0 +1,543 @@
+//! Trace contexts, RAII span guards, and cross-thread handoff.
+//!
+//! A [`Tracer`] mints one `trace_id` per root operation (a service
+//! request, a batch app). The active context lives in a thread-local;
+//! [`span`] reads it and returns a guard that records a [`SpanRecord`]
+//! into the tracer's [`Collector`](super::Collector) on drop, so
+//! instrumentation points deep in the store or the retry loop need no
+//! signature changes — they pick the context up from the thread.
+//! Crossing a thread boundary (queue → worker, batch → destination
+//! thread) is explicit: capture a [`TraceHandoff`] on the source
+//! thread, [`enter`](TraceHandoff::enter) it on the target.
+//!
+//! Everything degrades to a no-op: a disabled tracer, a sampled-out
+//! trace, or a thread with no context all cost one thread-local read
+//! per span. Recording never blocks (see
+//! [`Collector`](super::Collector)), and guards hold their own `Arc` to
+//! the collector, so dropping the `Tracer` (or the whole service) while
+//! spans are in flight is safe.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::search::SimClock;
+
+use super::collector::Collector;
+use super::TraceConfig;
+
+/// The root span's id within every trace (parent id 0 marks the root).
+pub const ROOT_SPAN_ID: u64 = 1;
+
+/// One finished span. `detail` is free-form ("tdfir" on a root,
+/// "attempt 2" on a retry); empty when there is nothing to say.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    pub span_id: u64,
+    /// 0 for the trace root.
+    pub parent_id: u64,
+    pub name: &'static str,
+    pub detail: String,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+impl SpanRecord {
+    pub fn duration_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+}
+
+/// Where span timestamps come from: wall time anchored at tracer
+/// creation (production), or the shared [`SimClock`] (deterministic
+/// tests — backoff waits are the only thing that advances it).
+#[derive(Debug)]
+enum TraceClock {
+    Wall(Instant),
+    Sim(SimClock),
+}
+
+impl TraceClock {
+    fn now_us(&self) -> u64 {
+        match self {
+            TraceClock::Wall(epoch) => {
+                epoch.elapsed().as_micros().min(u64::MAX as u128) as u64
+            }
+            TraceClock::Sim(clock) => {
+                (clock.now_s() * 1e6).round() as u64
+            }
+        }
+    }
+}
+
+#[derive(Debug)]
+struct TracerInner {
+    collector: Collector,
+    clock: TraceClock,
+    /// Traces minted so far; also drives head sampling.
+    next_trace: AtomicU64,
+    /// Keep 1 trace in `sample`; 1 = keep everything.
+    sample: u64,
+}
+
+/// Handle to one collector + clock. Cheap to clone; a disabled tracer
+/// (the default) is a single `None` and every operation on it is a
+/// no-op.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    inner: Option<Arc<TracerInner>>,
+}
+
+impl Tracer {
+    /// The no-op tracer: no collector, no overhead beyond an `Option`
+    /// check.
+    pub fn disabled() -> Tracer {
+        Tracer::default()
+    }
+
+    /// A wall-clock tracer (production: `repro serve`, `repro batch`).
+    pub fn new(cfg: &TraceConfig) -> Tracer {
+        Self::build(cfg, TraceClock::Wall(Instant::now()))
+    }
+
+    /// A tracer stamping spans from the shared virtual clock —
+    /// deterministic timestamps for tests and seeded fault runs.
+    pub fn with_sim_clock(cfg: &TraceConfig, clock: SimClock) -> Tracer {
+        Self::build(cfg, TraceClock::Sim(clock))
+    }
+
+    fn build(cfg: &TraceConfig, clock: TraceClock) -> Tracer {
+        if !cfg.enabled {
+            return Tracer::disabled();
+        }
+        Tracer {
+            inner: Some(Arc::new(TracerInner {
+                collector: Collector::new(cfg.capacity),
+                clock,
+                next_trace: AtomicU64::new(0),
+                sample: cfg.sample.max(1),
+            })),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Current trace-clock reading (0 when disabled). Pair with
+    /// [`closed_span`] to record an interval that started before its
+    /// recording thread existed (queue wait).
+    pub fn now_us(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.clock.now_us())
+    }
+
+    /// Mint a trace and install its context on this thread. The guard
+    /// records the root span and restores the previous context on drop.
+    /// Sampled-out traces return an inert guard.
+    pub fn trace(&self, name: &'static str, detail: &str) -> TraceGuard {
+        let Some(inner) = &self.inner else {
+            return TraceGuard(None);
+        };
+        let seq = inner.next_trace.fetch_add(1, Ordering::Relaxed);
+        if seq % inner.sample != 0 {
+            return TraceGuard(None);
+        }
+        let trace_id = seq + 1;
+        let ctx = ActiveCtx {
+            inner: Arc::clone(inner),
+            trace_id,
+            parent: ROOT_SPAN_ID,
+            counter: Arc::new(AtomicU64::new(ROOT_SPAN_ID + 1)),
+        };
+        let start_us = inner.clock.now_us();
+        let prev = CURRENT.with(|c| c.borrow_mut().replace(ctx));
+        TraceGuard(Some(RootSpan {
+            inner: Arc::clone(inner),
+            trace_id,
+            name,
+            detail: detail.to_string(),
+            start_us,
+            prev,
+        }))
+    }
+
+    /// Every span currently retained, oldest claim first.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.inner
+            .as_ref()
+            .map_or_else(Vec::new, |i| i.collector.snapshot())
+    }
+
+    /// Spans recorded over the tracer's lifetime.
+    pub fn recorded(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.collector.recorded())
+    }
+
+    /// Spans lost to slot contention.
+    pub fn dropped(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.collector.dropped())
+    }
+}
+
+/// The per-thread trace context.
+#[derive(Debug, Clone)]
+struct ActiveCtx {
+    inner: Arc<TracerInner>,
+    trace_id: u64,
+    /// Parent for the next child span opened on this thread.
+    parent: u64,
+    /// Shared per-trace span-id allocator, so ids stay unique (and,
+    /// under a single worker, deterministic) across handoffs.
+    counter: Arc<AtomicU64>,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<ActiveCtx>> =
+        const { RefCell::new(None) };
+}
+
+/// Root-span guard returned by [`Tracer::trace`].
+pub struct TraceGuard(Option<RootSpan>);
+
+struct RootSpan {
+    inner: Arc<TracerInner>,
+    trace_id: u64,
+    name: &'static str,
+    detail: String,
+    start_us: u64,
+    prev: Option<ActiveCtx>,
+}
+
+impl TraceGuard {
+    /// Whether this guard is live (enabled tracer, sampled in).
+    pub fn active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// The minted trace id (0 when inert).
+    pub fn trace_id(&self) -> u64 {
+        self.0.as_ref().map_or(0, |r| r.trace_id)
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        let Some(root) = self.0.take() else {
+            return;
+        };
+        let end_us = root.inner.clock.now_us();
+        root.inner.collector.record(SpanRecord {
+            trace_id: root.trace_id,
+            span_id: ROOT_SPAN_ID,
+            parent_id: 0,
+            name: root.name,
+            detail: root.detail,
+            start_us: root.start_us,
+            end_us,
+        });
+        CURRENT.with(|c| *c.borrow_mut() = root.prev);
+    }
+}
+
+/// Child-span guard returned by [`span`]. Records on drop; inert when
+/// the thread has no trace context.
+pub struct SpanGuard(Option<LiveSpan>);
+
+struct LiveSpan {
+    inner: Arc<TracerInner>,
+    trace_id: u64,
+    span_id: u64,
+    parent_id: u64,
+    name: &'static str,
+    detail: String,
+    start_us: u64,
+}
+
+impl SpanGuard {
+    pub fn active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Attach detail, paying for the `String` only when the span is
+    /// live.
+    pub fn note(&mut self, detail: impl FnOnce() -> String) {
+        if let Some(s) = &mut self.0 {
+            s.detail = detail();
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(s) = self.0.take() else {
+            return;
+        };
+        let end_us = s.inner.clock.now_us();
+        // Restore the parent pointer if this thread is still inside the
+        // same trace (it always is when guards nest lexically).
+        CURRENT.with(|c| {
+            if let Some(ctx) = c.borrow_mut().as_mut() {
+                if ctx.trace_id == s.trace_id
+                    && ctx.parent == s.span_id
+                {
+                    ctx.parent = s.parent_id;
+                }
+            }
+        });
+        s.inner.collector.record(SpanRecord {
+            trace_id: s.trace_id,
+            span_id: s.span_id,
+            parent_id: s.parent_id,
+            name: s.name,
+            detail: s.detail,
+            start_us: s.start_us,
+            end_us,
+        });
+    }
+}
+
+/// Open a child span under the current thread's context. A no-op
+/// costing one thread-local read when there is none.
+pub fn span(name: &'static str) -> SpanGuard {
+    CURRENT.with(|c| {
+        let mut cur = c.borrow_mut();
+        let Some(ctx) = cur.as_mut() else {
+            return SpanGuard(None);
+        };
+        let span_id = ctx.counter.fetch_add(1, Ordering::Relaxed);
+        let parent_id = std::mem::replace(&mut ctx.parent, span_id);
+        SpanGuard(Some(LiveSpan {
+            inner: Arc::clone(&ctx.inner),
+            trace_id: ctx.trace_id,
+            span_id,
+            parent_id,
+            name,
+            detail: String::new(),
+            start_us: ctx.inner.clock.now_us(),
+        }))
+    })
+}
+
+/// Record an already-elapsed interval ending now — the queue-wait span,
+/// whose start predates the worker thread picking the job up.
+/// `start_us` is in trace-clock units ([`Tracer::now_us`] at enqueue).
+pub fn closed_span(name: &'static str, start_us: u64) {
+    CURRENT.with(|c| {
+        let mut cur = c.borrow_mut();
+        let Some(ctx) = cur.as_mut() else {
+            return;
+        };
+        let span_id = ctx.counter.fetch_add(1, Ordering::Relaxed);
+        let end_us = ctx.inner.clock.now_us();
+        ctx.inner.collector.record(SpanRecord {
+            trace_id: ctx.trace_id,
+            span_id,
+            parent_id: ctx.parent,
+            name,
+            detail: String::new(),
+            start_us: start_us.min(end_us),
+            end_us,
+        });
+    })
+}
+
+/// A capture of the current trace context, safe to move to another
+/// thread. `Job` structs carry one across the admission queue; batch
+/// orchestration captures one per spawned destination thread.
+#[derive(Debug, Clone)]
+pub struct TraceHandoff {
+    ctx: ActiveCtx,
+}
+
+/// Capture the current thread's context (None when untraced).
+pub fn handoff() -> Option<TraceHandoff> {
+    CURRENT.with(|c| {
+        c.borrow().clone().map(|ctx| TraceHandoff { ctx })
+    })
+}
+
+/// Enter each of `h` on this thread, when present. Sugar for the
+/// `Option` every handoff naturally travels as.
+pub fn enter(h: &Option<TraceHandoff>) -> Option<EnterGuard> {
+    h.as_ref().map(|h| h.enter())
+}
+
+impl TraceHandoff {
+    /// Install this context on the current thread until the guard
+    /// drops (the previous context, if any, is restored).
+    pub fn enter(&self) -> EnterGuard {
+        let prev = CURRENT
+            .with(|c| c.borrow_mut().replace(self.ctx.clone()));
+        EnterGuard { prev: Some(prev) }
+    }
+
+    /// Trace-clock reading through the captured context.
+    pub fn now_us(&self) -> u64 {
+        self.ctx.inner.clock.now_us()
+    }
+}
+
+/// Restores the pre-[`enter`](TraceHandoff::enter) context on drop.
+pub struct EnterGuard {
+    prev: Option<Option<ActiveCtx>>,
+}
+
+impl Drop for EnterGuard {
+    fn drop(&mut self) {
+        if let Some(prev) = self.prev.take() {
+            CURRENT.with(|c| *c.borrow_mut() = prev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim_tracer() -> (Tracer, SimClock) {
+        let clock = SimClock::new();
+        let cfg = TraceConfig::default();
+        (Tracer::with_sim_clock(&cfg, clock.clone()), clock)
+    }
+
+    #[test]
+    fn disabled_tracer_and_bare_threads_are_no_ops() {
+        let t = Tracer::disabled();
+        assert!(!t.enabled());
+        {
+            let _root = t.trace("request", "app");
+            let mut s = span("anything");
+            assert!(!s.active());
+            s.note(|| unreachable!("detail must not be computed"));
+        }
+        assert!(t.spans().is_empty());
+        assert!(handoff().is_none());
+        closed_span("queue.wait", 0);
+    }
+
+    #[test]
+    fn spans_nest_and_record_parentage() {
+        let (t, clock) = sim_tracer();
+        {
+            let _root = t.trace("request", "tdfir");
+            clock.advance_s(1.0);
+            {
+                let _a = span("stage.parse");
+                clock.advance_s(1.0);
+                let _b = span("store.read");
+                clock.advance_s(1.0);
+            }
+            let _c = span("stage.measure");
+            clock.advance_s(1.0);
+        }
+        let mut spans = t.spans();
+        spans.sort_by_key(|s| s.span_id);
+        let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+        assert_eq!(
+            names,
+            vec!["request", "stage.parse", "store.read", "stage.measure"]
+        );
+        let by_name = |n: &str| {
+            spans.iter().find(|s| s.name == n).unwrap().clone()
+        };
+        let root = by_name("request");
+        assert_eq!(root.parent_id, 0);
+        assert_eq!(root.span_id, ROOT_SPAN_ID);
+        assert_eq!(root.detail, "tdfir");
+        assert_eq!((root.start_us, root.end_us), (0, 4_000_000));
+        let parse = by_name("stage.parse");
+        assert_eq!(parse.parent_id, root.span_id);
+        let read = by_name("store.read");
+        // store.read nests under stage.parse, not the root.
+        assert_eq!(read.parent_id, parse.span_id);
+        let measure = by_name("stage.measure");
+        // ...while stage.measure is back at the root after parse ends.
+        assert_eq!(measure.parent_id, root.span_id);
+        assert!(spans.iter().all(|s| s.trace_id == 1));
+    }
+
+    #[test]
+    fn handoff_carries_the_trace_across_threads() {
+        let (t, clock) = sim_tracer();
+        {
+            let _root = t.trace("request", "app");
+            let h = handoff().expect("context must be capturable");
+            let enqueued = t.now_us();
+            clock.advance_s(2.0);
+            std::thread::scope(|s| {
+                s.spawn(move || {
+                    let _e = h.enter();
+                    closed_span("queue.wait", enqueued);
+                    let _solve = span("solve");
+                    clock.advance_s(1.0);
+                })
+                .join()
+                .unwrap();
+            });
+            // Back on the origin thread the context still works.
+            let _tail = span("admission");
+        }
+        let spans = t.spans();
+        let wait = spans.iter().find(|s| s.name == "queue.wait").unwrap();
+        assert_eq!(wait.parent_id, ROOT_SPAN_ID);
+        assert_eq!(wait.duration_us(), 2_000_000);
+        let solve = spans.iter().find(|s| s.name == "solve").unwrap();
+        assert_eq!(solve.parent_id, ROOT_SPAN_ID);
+        assert_eq!(solve.duration_us(), 1_000_000);
+        let tail = spans.iter().find(|s| s.name == "admission").unwrap();
+        assert_eq!(tail.parent_id, ROOT_SPAN_ID);
+        assert_eq!(spans.len(), 4);
+    }
+
+    #[test]
+    fn sampling_keeps_one_in_n_traces() {
+        let cfg = TraceConfig {
+            sample: 4,
+            ..TraceConfig::default()
+        };
+        let t = Tracer::new(&cfg);
+        let mut live = 0;
+        for _ in 0..16 {
+            let root = t.trace("request", "");
+            if root.active() {
+                live += 1;
+            }
+        }
+        assert_eq!(live, 4);
+        assert_eq!(t.spans().len(), 4);
+    }
+
+    #[test]
+    fn guards_survive_the_tracer_being_dropped() {
+        let (t, _clock) = sim_tracer();
+        let root = t.trace("request", "app");
+        let child = span("stage.parse");
+        let spans_handle = t.clone();
+        drop(t);
+        // The service owning the tracer is gone; in-flight guards must
+        // still complete (they hold their own Arc) without blocking.
+        drop(child);
+        drop(root);
+        assert_eq!(spans_handle.spans().len(), 2);
+    }
+
+    #[test]
+    fn wall_clock_timestamps_are_monotonic() {
+        let t = Tracer::new(&TraceConfig::default());
+        {
+            let _root = t.trace("request", "");
+            let _child = span("stage.parse");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let spans = t.spans();
+        assert_eq!(spans.len(), 2);
+        for s in &spans {
+            assert!(s.end_us >= s.start_us);
+        }
+        let root =
+            spans.iter().find(|s| s.name == "request").unwrap();
+        assert!(root.duration_us() >= 2_000);
+    }
+}

@@ -117,6 +117,78 @@ pub trait Backend: Sync {
     }
 }
 
+/// A [`Backend`] decorator that wraps each backend-facing call in an
+/// observability span (`backend.measure` / `backend.verify` /
+/// `backend.deploy`), picking the trace context up from the thread.
+/// Used on the *unretried* pipeline path; the retry wrapper
+/// ([`RetryingBackend`](super::RetryingBackend)) emits the same spans
+/// itself, with per-attempt children, so the two are never stacked.
+pub struct TracedBackend<'a> {
+    inner: &'a dyn Backend,
+}
+
+impl<'a> TracedBackend<'a> {
+    pub fn new(inner: &'a dyn Backend) -> Self {
+        TracedBackend { inner }
+    }
+}
+
+impl Backend for TracedBackend<'_> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn device(&self) -> &Device {
+        self.inner.device()
+    }
+
+    fn destination(&self) -> &'static str {
+        self.inner.destination()
+    }
+
+    fn measure(
+        &self,
+        prog: &Program,
+        analysis: &Analysis,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        cfg: &SearchConfig,
+    ) -> Result<BackendMeasurement, SearchError> {
+        let _span = crate::obs::span("backend.measure");
+        self.inner.measure(prog, analysis, cands, pattern, cfg)
+    }
+
+    fn verify(
+        &self,
+        prog: &Program,
+        cands: &[Candidate],
+        pattern: &Pattern,
+        entry: &str,
+        cfg: &SearchConfig,
+    ) -> Result<bool, SearchError> {
+        let _span = crate::obs::span("backend.verify");
+        self.inner.verify(prog, cands, pattern, entry, cfg)
+    }
+
+    fn deploy_check(
+        &self,
+        sample: &str,
+        env: (&Runtime, &Artifacts),
+        seed: u64,
+    ) -> anyhow::Result<SampleRun> {
+        let _span = crate::obs::span("backend.deploy");
+        self.inner.deploy_check(sample, env, seed)
+    }
+
+    fn price_block(
+        &self,
+        block: &ConfirmedBlock,
+        catalog: &Catalog,
+    ) -> Option<BlockCost> {
+        self.inner.price_block(block, catalog)
+    }
+}
+
 /// The paper's destination: Arria10-class FPGA measured by the cycle /
 /// transfer simulator, verified by outlined-kernel interpretation, and
 /// deploy-checked by the PJRT sample test.

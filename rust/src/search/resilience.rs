@@ -42,6 +42,7 @@ use crate::analysis::Analysis;
 use crate::funcblock::{BlockCost, Catalog, ConfirmedBlock};
 use crate::hls::Device;
 use crate::minic::Program;
+use crate::obs;
 use crate::runtime::{Artifacts, Runtime, SampleRun};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
@@ -431,6 +432,17 @@ impl FaultReport {
     }
 }
 
+/// Span name for a retry-wrapped backend call (the same taxonomy
+/// [`crate::search::backend::TracedBackend`] uses on the unretried
+/// path).
+fn backend_span_name(stage: Stage) -> &'static str {
+    match stage {
+        Stage::Verify => "backend.verify",
+        Stage::Deploy => "backend.deploy",
+        _ => "backend.measure",
+    }
+}
+
 fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
@@ -470,12 +482,17 @@ impl<'a> RetryingBackend<'a> {
         stage: Stage,
         mut call: impl FnMut() -> Result<T, SearchError>,
     ) -> Result<T, SearchError> {
+        let _span = obs::span(backend_span_name(stage));
         let counters = self.stats.counters(stage);
         counters.calls.fetch_add(1, Ordering::Relaxed);
         let start = self.clock.now_s();
         let mut attempt: u32 = 1;
         loop {
-            let outcome = catch_unwind(AssertUnwindSafe(&mut call));
+            let outcome = {
+                let mut att = obs::span("retry.attempt");
+                att.note(|| format!("attempt {attempt}"));
+                catch_unwind(AssertUnwindSafe(&mut call))
+            };
             let err = match outcome {
                 Err(payload) => {
                     counters.panics.fetch_add(1, Ordering::Relaxed);
@@ -529,7 +546,11 @@ impl<'a> RetryingBackend<'a> {
                 return Err(SearchError::Fault(e));
             }
             let wait = self.policy.backoff_s(err_stage, attempt);
-            self.clock.advance_s(wait);
+            {
+                let mut backoff = obs::span("retry.backoff");
+                backoff.note(|| format!("{wait:.1}s"));
+                self.clock.advance_s(wait);
+            }
             counters
                 .backoff_micros
                 .fetch_add((wait * 1e6).round() as u64, Ordering::Relaxed);
@@ -584,14 +605,19 @@ impl Backend for RetryingBackend<'_> {
         env: (&Runtime, &Artifacts),
         seed: u64,
     ) -> anyhow::Result<SampleRun> {
+        let _span = obs::span(backend_span_name(Stage::Deploy));
         let counters = self.stats.counters(Stage::Deploy);
         counters.calls.fetch_add(1, Ordering::Relaxed);
         let start = self.clock.now_s();
         let mut attempt: u32 = 1;
         loop {
-            let outcome = catch_unwind(AssertUnwindSafe(|| {
-                self.inner.deploy_check(sample, env, seed)
-            }));
+            let outcome = {
+                let mut att = obs::span("retry.attempt");
+                att.note(|| format!("attempt {attempt}"));
+                catch_unwind(AssertUnwindSafe(|| {
+                    self.inner.deploy_check(sample, env, seed)
+                }))
+            };
             let err = match outcome {
                 Err(payload) => {
                     counters.panics.fetch_add(1, Ordering::Relaxed);
@@ -630,7 +656,11 @@ impl Backend for RetryingBackend<'_> {
                 )));
             }
             let wait = self.policy.backoff_s(Stage::Deploy, attempt);
-            self.clock.advance_s(wait);
+            {
+                let mut backoff = obs::span("retry.backoff");
+                backoff.note(|| format!("{wait:.1}s"));
+                self.clock.advance_s(wait);
+            }
             counters
                 .backoff_micros
                 .fetch_add((wait * 1e6).round() as u64, Ordering::Relaxed);

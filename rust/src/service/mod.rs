@@ -75,6 +75,7 @@ use crate::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
 use crate::envadapt::ServiceLevel;
 use crate::gpu::TESLA_T4;
 use crate::hls::ARRIA10_GX;
+use crate::obs::TraceConfig;
 use crate::search::{
     Backend, CpuBaseline, FpgaBackend, GpuBackend, OffloadError,
     OmpBackend, RetryPolicy, SearchConfig,
@@ -179,6 +180,10 @@ pub struct ServiceConfig {
     /// staleness — see [`crate::store::evict`]) are evicted on the next
     /// write. `None` (the default) never evicts.
     pub db_capacity: Option<usize>,
+    /// End-to-end tracing knobs (span ring capacity, head sampling).
+    /// Tracing is on by default; `repro serve --no-trace` turns it off,
+    /// at which point every span site is a no-op.
+    pub trace: TraceConfig,
 }
 
 impl Default for ServiceConfig {
@@ -193,6 +198,7 @@ impl Default for ServiceConfig {
             refresh_ahead: 0.8,
             retry: None,
             db_capacity: None,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -218,6 +224,7 @@ impl ServiceConfig {
                     .into(),
             );
         }
+        self.trace.validate()?;
         Ok(())
     }
 }

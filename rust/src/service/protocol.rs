@@ -12,8 +12,12 @@
 //! ```json
 //! {"id": 1, "op": "plan", "app": "tdfir", "source": "...", "deadline_ms": 5000}
 //! {"id": 2, "op": "stats"}
-//! {"id": 3, "op": "ping"}
-//! {"id": 4, "op": "shutdown"}
+//! {"id": 3, "op": "metrics"}
+//! {"id": 4, "op": "trace", "last": 8}
+//! {"id": 5, "op": "trace", "trace_id": 42}
+//! {"id": 6, "op": "trace", "slow_ms": 50}
+//! {"id": 7, "op": "ping"}
+//! {"id": 8, "op": "shutdown"}
 //! ```
 //!
 //! `op` defaults to `"plan"`. A plan request without `source` falls
@@ -23,6 +27,15 @@
 //! admission reject — `retry_after_ms` is set), `"timeout"` (deadline
 //! expired), or `"error"`. Malformed lines get a `status:"error"`
 //! response and the connection stays up.
+//!
+//! `metrics` answers with the Prometheus text exposition of the
+//! [`StatsSnapshot`](super::StatsSnapshot) in a `"metrics"` string
+//! field (the transport stays one JSON line per response; a scraper
+//! unwraps the field). `trace` answers with the retained spans as a
+//! `"spans"` array — the whole buffer filtered to one trace
+//! (`trace_id`), to traces whose root span took at least `slow_ms`
+//! (outlier capture), or to the `last` N traces (default 8; ids are
+//! minted in order, so the highest ids are the newest).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -33,6 +46,7 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use crate::envadapt::TestDb;
+use crate::obs::SpanRecord;
 use crate::search::FaultClass;
 use crate::util::json::Json;
 use crate::workloads;
@@ -141,6 +155,44 @@ fn plan_response_json(id: Option<Json>, resp: &PlanResponse) -> Json {
     Json::obj(fields)
 }
 
+/// Which retained spans a `trace` op answers with: one trace by id,
+/// traces whose *root* span took at least `slow_ms`, or the `last` N
+/// traces (trace ids are minted in order, so highest = newest). Spans
+/// whose root was already evicted out of the ring still match the
+/// `last` filter — a truncated trace beats a silently missing one.
+fn select_spans(
+    spans: Vec<SpanRecord>,
+    trace_id: Option<u64>,
+    slow_ms: Option<f64>,
+    last: usize,
+) -> Vec<SpanRecord> {
+    use std::collections::BTreeSet;
+    if let Some(id) = trace_id {
+        return spans.into_iter().filter(|s| s.trace_id == id).collect();
+    }
+    let keep: BTreeSet<u64> = match slow_ms {
+        Some(ms) => {
+            let cut_us = (ms * 1000.0).max(0.0) as u64;
+            spans
+                .iter()
+                .filter(|s| s.parent_id == 0 && s.duration_us() >= cut_us)
+                .map(|s| s.trace_id)
+                .collect()
+        }
+        None => {
+            let mut ids: Vec<u64> =
+                spans.iter().map(|s| s.trace_id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            ids.into_iter().rev().take(last).collect()
+        }
+    };
+    spans
+        .into_iter()
+        .filter(|s| keep.contains(&s.trace_id))
+        .collect()
+}
+
 fn error_line(id: Option<Json>, op: &str, message: String) -> Json {
     Json::obj(vec![
         ("id", id.unwrap_or(Json::Null)),
@@ -176,6 +228,35 @@ fn handle_line(service: &Service, raw: &str, stop: &AtomicBool) -> Json {
             ("status", str_of("ok")),
             ("stats", service.stats().to_json()),
         ]),
+        "metrics" => Json::obj(vec![
+            ("id", id.unwrap_or(Json::Null)),
+            ("op", str_of("metrics")),
+            ("status", str_of("ok")),
+            ("metrics", str_of(service.stats().to_prometheus())),
+        ]),
+        "trace" => {
+            let tid = line
+                .get(&["trace_id"])
+                .and_then(Json::as_f64)
+                .map(|v| v as u64);
+            let slow_ms = line.get(&["slow_ms"]).and_then(Json::as_f64);
+            let last = line
+                .get(&["last"])
+                .and_then(Json::as_usize)
+                .unwrap_or(8);
+            let spans = select_spans(service.spans(), tid, slow_ms, last);
+            Json::obj(vec![
+                ("id", id.unwrap_or(Json::Null)),
+                ("op", str_of("trace")),
+                ("status", str_of("ok")),
+                (
+                    "spans",
+                    Json::Arr(
+                        spans.iter().map(SpanRecord::to_json).collect(),
+                    ),
+                ),
+            ])
+        }
         "ping" => Json::obj(vec![
             ("id", id.unwrap_or(Json::Null)),
             ("op", str_of("ping")),
@@ -377,6 +458,44 @@ impl Client {
         ]))
     }
 
+    /// Fetch the Prometheus text exposition. Returns the unwrapped
+    /// text, ready to print or serve to a scraper.
+    pub fn metrics(&mut self, id: u64) -> Result<String> {
+        let resp = self.roundtrip(&Json::obj(vec![
+            ("id", num(id)),
+            ("op", str_of("metrics")),
+        ]))?;
+        match resp.get(&["metrics"]).and_then(Json::as_str) {
+            Some(text) => Ok(text.to_string()),
+            None => anyhow::bail!("metrics response missing text: {resp}"),
+        }
+    }
+
+    /// Fetch retained spans: one trace (`trace_id`), slow-root traces
+    /// (`slow_ms`), or the last `last` traces — the same filters the
+    /// `trace` op takes. Returns the raw response; pull `spans` out
+    /// with [`crate::obs::SpanRow::from_json`].
+    pub fn trace(
+        &mut self,
+        id: u64,
+        trace_id: Option<u64>,
+        slow_ms: Option<f64>,
+        last: Option<usize>,
+    ) -> Result<Json> {
+        let mut fields =
+            vec![("id", num(id)), ("op", str_of("trace"))];
+        if let Some(t) = trace_id {
+            fields.push(("trace_id", num(t)));
+        }
+        if let Some(ms) = slow_ms {
+            fields.push(("slow_ms", Json::Num(ms)));
+        }
+        if let Some(n) = last {
+            fields.push(("last", num(n as u64)));
+        }
+        self.roundtrip(&Json::obj(fields))
+    }
+
     pub fn ping(&mut self, id: u64) -> Result<Json> {
         self.roundtrip(&Json::obj(vec![
             ("id", num(id)),
@@ -486,5 +605,44 @@ mod tests {
             j.get(&["status"]).and_then(Json::as_str),
             Some("error")
         );
+    }
+
+    fn rec(
+        trace: u64,
+        span: u64,
+        parent: u64,
+        start: u64,
+        end: u64,
+    ) -> SpanRecord {
+        SpanRecord {
+            trace_id: trace,
+            span_id: span,
+            parent_id: parent,
+            name: "request",
+            detail: String::new(),
+            start_us: start,
+            end_us: end,
+        }
+    }
+
+    #[test]
+    fn trace_selection_filters_by_id_slowness_and_recency() {
+        let all = vec![
+            rec(1, 1, 0, 0, 900_000),
+            rec(1, 2, 1, 10, 50),
+            rec(2, 1, 0, 0, 1_000),
+            rec(3, 1, 0, 0, 60_000),
+        ];
+        let one = select_spans(all.clone(), Some(1), None, 8);
+        assert_eq!(one.len(), 2);
+        assert!(one.iter().all(|s| s.trace_id == 1));
+        // slow_ms keys off the root span's duration.
+        let slow = select_spans(all.clone(), None, Some(50.0), 8);
+        let ids: Vec<u64> = slow.iter().map(|s| s.trace_id).collect();
+        assert!(ids.contains(&1) && ids.contains(&3) && !ids.contains(&2));
+        // last N keeps the newest trace ids.
+        let last = select_spans(all, None, None, 2);
+        assert!(last.iter().all(|s| s.trace_id >= 2));
+        assert_eq!(last.len(), 2);
     }
 }

@@ -35,7 +35,10 @@ use crate::envadapt::{
     Batch, OffloadRequest, PatternIndex, Pipeline, Plan, ReuseKey,
     ServiceLevel, StoredPattern,
 };
-use crate::search::{FaultClass, OffloadError, RetryPolicy, SimClock, Stage};
+use crate::obs::{self, SpanRecord, TraceHandoff, Tracer};
+use crate::search::{
+    FaultClass, FaultStats, OffloadError, RetryPolicy, SimClock, Stage,
+};
 
 use super::queue::{BoundedQueue, PushError};
 use super::stats::{ServiceStats, StatsSnapshot};
@@ -69,6 +72,12 @@ struct Job {
     req: OffloadRequest,
     enqueued: Instant,
     kind: JobKind,
+    /// The admitting request's trace context; the worker re-enters it
+    /// so the solve's spans land under the same `trace_id`.
+    trace: Option<TraceHandoff>,
+    /// Tracer timestamp at enqueue — the start of the `queue.wait`
+    /// span the worker closes on pickup.
+    trace_enqueued_us: u64,
 }
 
 struct Inner {
@@ -81,6 +90,11 @@ struct Inner {
     inflight: Mutex<HashMap<ReuseKey, Vec<Waiter>>>,
     stats: ServiceStats,
     clock: SimClock,
+    tracer: Tracer,
+    /// One shared retry-telemetry sink for every worker pipeline — the
+    /// counters [`Service::stats`] surfaces. (Each job used to build a
+    /// fresh `FaultStats` and drop it with the pipeline.)
+    fault_stats: FaultStats,
 }
 
 /// What an index probe found.
@@ -103,7 +117,8 @@ impl Inner {
     ) -> Result<Pipeline<'_>, OffloadError> {
         let mut p =
             Pipeline::new(self.cfg.search.clone(), self.backend.as_ref())
-                .map_err(|e| e.to_offload_error())?;
+                .map_err(|e| e.to_offload_error())?
+                .with_fault_stats(self.fault_stats.clone());
         if let Some(dir) = &self.cfg.pattern_db {
             p = p.with_pattern_db(dir);
         }
@@ -197,6 +212,10 @@ impl Inner {
             req: req.clone(),
             enqueued: Instant::now(),
             kind: JobKind::Refresh,
+            // The refresh rides the triggering request's trace, so one
+            // exported tree shows the hit *and* the re-search it cost.
+            trace: obs::handoff(),
+            trace_enqueued_us: self.tracer.now_us(),
         };
         match self.queue.try_push(job) {
             Ok(_) => self.stats.refresh_scheduled(),
@@ -330,6 +349,10 @@ impl Inner {
     }
 
     fn serve_job(&self, job: Job) {
+        // Re-enter the admitting request's trace on this worker thread
+        // and close out the time the job spent queued.
+        let _trace = obs::enter(&job.trace);
+        obs::closed_span("queue.wait", job.trace_enqueued_us);
         let deadline = match job.kind {
             JobKind::Foreground => self.job_deadline(&job.key),
             JobKind::Refresh => None,
@@ -358,7 +381,11 @@ impl Inner {
         }
         let policy = self.effective_policy(deadline);
         let t0 = Instant::now();
-        let result = self.run_ladder(&job, policy);
+        let result = {
+            let mut solve = obs::span("solve");
+            solve.note(|| job.req.app.clone());
+            self.run_ladder(&job, policy)
+        };
         self.stats.solve(elapsed_us(t0), result.is_err());
         if let Ok(plan) = &result {
             if plan.service != ServiceLevel::Full {
@@ -411,6 +438,29 @@ impl Service {
         cfg: ServiceConfig,
         backend: Box<dyn crate::search::Backend + Send + Sync>,
     ) -> Result<Service> {
+        let tracer = Tracer::new(&cfg.trace);
+        Service::build(cfg, backend, SimClock::new(), tracer)
+    }
+
+    /// Like [`Service::with_backend`] but with both the retry clock and
+    /// the tracer on the caller's virtual clock — the determinism seam:
+    /// a seeded fault run against a [`crate::search::FaultyBackend`]
+    /// sharing `clock` produces a byte-identical span tree every run.
+    pub fn with_backend_on_clock(
+        cfg: ServiceConfig,
+        backend: Box<dyn crate::search::Backend + Send + Sync>,
+        clock: SimClock,
+    ) -> Result<Service> {
+        let tracer = Tracer::with_sim_clock(&cfg.trace, clock.clone());
+        Service::build(cfg, backend, clock, tracer)
+    }
+
+    fn build(
+        cfg: ServiceConfig,
+        backend: Box<dyn crate::search::Backend + Send + Sync>,
+        clock: SimClock,
+        tracer: Tracer,
+    ) -> Result<Service> {
         cfg.validate()
             .map_err(|e| anyhow::anyhow!("invalid service config: {e}"))?;
         let index = match &cfg.pattern_db {
@@ -433,7 +483,9 @@ impl Service {
             queue,
             inflight: Mutex::new(HashMap::new()),
             stats: ServiceStats::new(),
-            clock: SimClock::new(),
+            clock,
+            tracer,
+            fault_stats: FaultStats::new(),
         });
         let mut handles = Vec::with_capacity(worker_count);
         for i in 0..worker_count {
@@ -460,6 +512,13 @@ impl Service {
         let inner = &self.inner;
         inner.stats.request();
         let app = preq.app.clone();
+        // Root span for the whole request; lives until this function
+        // returns, so its duration is the submit-to-answer latency.
+        let _root = inner.tracer.trace("request", &app);
+        // Admission: reuse-key derivation, index probe, queue decision.
+        // Ended explicitly before blocking on a worker; every other
+        // return path ends it (and the root) by dropping out of scope.
+        let mut admission = Some(obs::span("admission"));
         let fail = |result: OffloadError| PlanResponse {
             app: preq.app.clone(),
             class: ServeClass::Miss,
@@ -543,6 +602,8 @@ impl Service {
                     req: oreq,
                     enqueued: start,
                     kind: JobKind::Foreground,
+                    trace: obs::handoff(),
+                    trace_enqueued_us: inner.tracer.now_us(),
                 };
                 if let Err(err) = inner.queue.try_push(job) {
                     inner
@@ -583,6 +644,10 @@ impl Service {
                 }
             }
         }
+
+        // Admission is over; what follows is the wait, which the worker
+        // accounts as `queue.wait` + `solve` under this same trace.
+        admission.take();
 
         // Wait for the worker broadcast, bounded by our own deadline so
         // a wedged pool can never hang the caller.
@@ -667,7 +732,20 @@ impl Service {
             inflight,
             records,
             store,
+            inner.fault_stats.snapshot(),
         )
+    }
+
+    /// Every span currently retained by the trace collector, oldest
+    /// first — what the `trace` protocol op and `repro trace` read.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        self.inner.tracer.spans()
+    }
+
+    /// The service's tracer (shared collector; clones observe the same
+    /// spans).
+    pub fn tracer(&self) -> &Tracer {
+        &self.inner.tracer
     }
 
     /// The virtual clock worker retry policies run on — tests advance

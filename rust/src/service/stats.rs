@@ -1,57 +1,26 @@
-//! Service telemetry: lock-free counters plus per-class latency rings
-//! for p50/p99.
+//! Service telemetry: lock-free counters plus log-bucketed latency
+//! histograms for p50/p99.
 //!
-//! Latencies land in a fixed-size ring (most recent [`RING_CAP`]
-//! samples per class), so quantiles track *current* behavior under
-//! sustained traffic instead of averaging over the process lifetime,
-//! and memory stays bounded at any request rate.
+//! Latencies land in a [`LogHistogram`] per class — wait-free
+//! `fetch_add`s into log-linear buckets (exact below 128µs, ≤1/64
+//! relative error above), so the hit path never takes a lock to record
+//! its own latency and memory stays bounded at any request rate. The
+//! same snapshots feed the JSON `stats` op, the Prometheus-text
+//! `metrics` op, and `repro client --stats`.
+//!
+//! The snapshot also carries the retry seam's [`FaultReport`] — the
+//! per-stage retry/timeout/panic/backoff tallies that PR 6 collected
+//! per batch cycle but the service tier used to drop on the floor
+//! (every job built a fresh `FaultStats`). The service now threads one
+//! shared `FaultStats` through every worker pipeline and surfaces it
+//! here.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
+use crate::obs::{HistogramSnapshot, LogHistogram, PromText};
+use crate::search::FaultReport;
 use crate::store::StoreStatsSnapshot;
 use crate::util::json::Json;
-
-/// Samples kept per latency class.
-const RING_CAP: usize = 8192;
-
-#[derive(Debug, Default)]
-struct Ring {
-    buf: Vec<u64>,
-    next: usize,
-    total: u64,
-}
-
-impl Ring {
-    fn push(&mut self, us: u64) {
-        if self.buf.len() < RING_CAP {
-            self.buf.push(us);
-        } else {
-            self.buf[self.next] = us;
-        }
-        self.next = (self.next + 1) % RING_CAP;
-        self.total += 1;
-    }
-
-    fn quantiles(&self) -> (u64, u64, u64) {
-        if self.buf.is_empty() {
-            return (0, 0, 0);
-        }
-        let mut sorted = self.buf.clone();
-        sorted.sort_unstable();
-        (
-            percentile(&sorted, 0.50),
-            percentile(&sorted, 0.99),
-            *sorted.last().unwrap(),
-        )
-    }
-}
-
-/// Nearest-rank percentile over a sorted slice.
-fn percentile(sorted: &[u64], q: f64) -> u64 {
-    let rank = ((sorted.len() as f64) * q).ceil() as usize;
-    sorted[rank.clamp(1, sorted.len()) - 1]
-}
 
 /// Shared, thread-safe service counters. One instance lives in the
 /// service; every worker and caller thread updates it directly.
@@ -70,8 +39,8 @@ pub struct ServiceStats {
     refreshes_scheduled: AtomicU64,
     refreshes_dropped: AtomicU64,
     refreshes_done: AtomicU64,
-    hit_latency: Mutex<Ring>,
-    miss_latency: Mutex<Ring>,
+    hit_latency: LogHistogram,
+    miss_latency: LogHistogram,
 }
 
 impl ServiceStats {
@@ -89,18 +58,12 @@ impl ServiceStats {
 
     pub(crate) fn hit(&self, latency_us: u64) {
         Self::bump(&self.hits);
-        self.hit_latency
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .push(latency_us);
+        self.hit_latency.record(latency_us);
     }
 
     pub(crate) fn miss(&self, latency_us: u64) {
         Self::bump(&self.misses);
-        self.miss_latency
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .push(latency_us);
+        self.miss_latency.record(latency_us);
     }
 
     pub(crate) fn coalesced(&self) {
@@ -152,25 +115,28 @@ impl ServiceStats {
 
     /// Point-in-time copy of every counter and quantile. Queue/index
     /// figures are passed in by the service, which owns those; `store`
-    /// is the pattern store's own counter snapshot (lookups, staleness,
-    /// eviction, compaction, recovery).
+    /// is the pattern store's own counter snapshot and `faults` the
+    /// shared retry seam's per-stage telemetry.
     pub fn snapshot(
         &self,
         queue_depth: usize,
         inflight: usize,
         index_records: usize,
         store: StoreStatsSnapshot,
+        faults: FaultReport,
     ) -> StatsSnapshot {
-        let (hit_p50_us, hit_p99_us, hit_max_us) = self
-            .hit_latency
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .quantiles();
-        let (miss_p50_us, miss_p99_us, miss_max_us) = self
-            .miss_latency
-            .lock()
-            .unwrap_or_else(|p| p.into_inner())
-            .quantiles();
+        let hit_hist = self.hit_latency.snapshot();
+        let miss_hist = self.miss_latency.snapshot();
+        let (hit_p50_us, hit_p99_us, hit_max_us) = (
+            hit_hist.quantile(0.50),
+            hit_hist.quantile(0.99),
+            hit_hist.max,
+        );
+        let (miss_p50_us, miss_p99_us, miss_max_us) = (
+            miss_hist.quantile(0.50),
+            miss_hist.quantile(0.99),
+            miss_hist.max,
+        );
         let load = |c: &AtomicU64| c.load(Ordering::Relaxed);
         StatsSnapshot {
             requests: load(&self.requests),
@@ -192,12 +158,15 @@ impl ServiceStats {
             index_hits: store.hits,
             index_misses: store.misses,
             store,
+            faults,
             hit_p50_us,
             hit_p99_us,
             hit_max_us,
             miss_p50_us,
             miss_p99_us,
             miss_max_us,
+            hit_hist,
+            miss_hist,
         }
     }
 }
@@ -238,12 +207,21 @@ pub struct StatsSnapshot {
     /// The sharded pattern store's own counters — staleness, appends,
     /// eviction, compaction, crash-recovery tallies.
     pub store: StoreStatsSnapshot,
+    /// The shared retry seam's per-stage telemetry (retries, budget
+    /// exhaustions, timeouts, panics, virtual backoff seconds). All
+    /// zeros when the service runs without a retry policy.
+    pub faults: FaultReport,
     pub hit_p50_us: u64,
     pub hit_p99_us: u64,
     pub hit_max_us: u64,
     pub miss_p50_us: u64,
     pub miss_p99_us: u64,
     pub miss_max_us: u64,
+    /// Full latency distributions (the quantile fields above are views
+    /// of these) — what the Prometheus exposition exports as
+    /// `_bucket` series.
+    pub hit_hist: HistogramSnapshot,
+    pub miss_hist: HistogramSnapshot,
 }
 
 impl StatsSnapshot {
@@ -279,48 +257,245 @@ impl StatsSnapshot {
             ("miss_p50_us", Json::Num(self.miss_p50_us as f64)),
             ("miss_p99_us", Json::Num(self.miss_p99_us as f64)),
             ("miss_max_us", Json::Num(self.miss_max_us as f64)),
+            ("faults", self.faults.to_json()),
         ];
         fields.extend(self.store.to_json_fields());
         Json::obj(fields)
+    }
+
+    /// The Prometheus text exposition the `metrics` op serves: every
+    /// counter as a `_total`, live depths as gauges, the per-stage
+    /// retry tallies as one labeled family each, and the full latency
+    /// distributions as histogram triples.
+    pub fn to_prometheus(&self) -> String {
+        let mut p = PromText::new();
+        p.counter(
+            "offload_requests_total",
+            "Plan requests admitted (any class).",
+            self.requests as f64,
+        );
+        p.counter(
+            "offload_hits_total",
+            "Requests served synchronously from the index.",
+            self.hits as f64,
+        );
+        p.counter(
+            "offload_misses_total",
+            "Requests that went through the worker pool.",
+            self.misses as f64,
+        );
+        p.counter(
+            "offload_coalesced_total",
+            "Requests attached to an in-flight identical solve.",
+            self.coalesced as f64,
+        );
+        p.counter(
+            "offload_rejected_total",
+            "Requests refused at admission.",
+            self.rejected as f64,
+        );
+        p.counter(
+            "offload_timeouts_total",
+            "Requests whose deadline expired.",
+            self.timeouts as f64,
+        );
+        p.counter(
+            "offload_degraded_total",
+            "Answers below full service level.",
+            self.degraded as f64,
+        );
+        p.counter(
+            "offload_solves_total",
+            "Worker solves completed (foreground + refresh).",
+            self.solves as f64,
+        );
+        p.counter(
+            "offload_solve_errors_total",
+            "Worker solves that produced no plan.",
+            self.solve_errors as f64,
+        );
+        p.counter(
+            "offload_refreshes_scheduled_total",
+            "Refresh-ahead re-searches enqueued.",
+            self.refreshes_scheduled as f64,
+        );
+        p.counter(
+            "offload_refreshes_dropped_total",
+            "Refresh-ahead re-searches dropped (queue full).",
+            self.refreshes_dropped as f64,
+        );
+        p.counter(
+            "offload_refreshes_done_total",
+            "Refresh-ahead re-searches completed.",
+            self.refreshes_done as f64,
+        );
+        p.gauge(
+            "offload_avg_solve_ms",
+            "Mean worker solve time, milliseconds.",
+            self.avg_solve_ms,
+        );
+        p.gauge(
+            "offload_queue_depth",
+            "Jobs waiting in the admission queue.",
+            self.queue_depth as f64,
+        );
+        p.gauge(
+            "offload_inflight",
+            "Distinct reuse keys currently being solved.",
+            self.inflight as f64,
+        );
+        p.gauge(
+            "offload_index_records",
+            "Records in the in-memory hit index.",
+            self.index_records as f64,
+        );
+        p.counter(
+            "offload_store_hits_total",
+            "Pattern-store key-match lookups.",
+            self.store.hits as f64,
+        );
+        p.counter(
+            "offload_store_misses_total",
+            "Pattern-store lookup misses.",
+            self.store.misses as f64,
+        );
+        p.counter(
+            "offload_store_stale_hits_total",
+            "Lookups that matched an expired record.",
+            self.store.stale_hits as f64,
+        );
+        p.counter(
+            "offload_store_appends_total",
+            "Records appended to the sharded store.",
+            self.store.appends as f64,
+        );
+        p.counter(
+            "offload_store_evictions_total",
+            "Records evicted over capacity.",
+            self.store.evictions as f64,
+        );
+        p.counter(
+            "offload_store_compactions_total",
+            "Shard log compactions.",
+            self.store.compactions as f64,
+        );
+        p.counter(
+            "offload_store_torn_truncations_total",
+            "Torn shard tails truncated at recovery.",
+            self.store.torn_truncations as f64,
+        );
+        p.gauge(
+            "offload_store_quarantined_bytes",
+            "Bytes quarantined by crash recovery.",
+            self.store.quarantined_bytes as f64,
+        );
+        let stages = |f: &dyn Fn(&crate::search::StageReport) -> f64| {
+            [
+                ("measure", f(&self.faults.measure)),
+                ("verify", f(&self.faults.verify)),
+                ("deploy", f(&self.faults.deploy)),
+            ]
+        };
+        p.counter_vec(
+            "offload_retries_total",
+            "Backend retries beyond the first attempt, by stage.",
+            "stage",
+            &stages(&|s| s.retries as f64),
+        );
+        p.counter_vec(
+            "offload_retry_exhausted_total",
+            "Calls that spent their whole retry budget, by stage.",
+            "stage",
+            &stages(&|s| s.exhausted as f64),
+        );
+        p.counter_vec(
+            "offload_retry_timeouts_total",
+            "Calls that hit the stage deadline, by stage.",
+            "stage",
+            &stages(&|s| s.timeouts as f64),
+        );
+        p.counter_vec(
+            "offload_retry_panics_total",
+            "Backend panics caught, by stage.",
+            "stage",
+            &stages(&|s| s.panics as f64),
+        );
+        p.counter_vec(
+            "offload_backoff_seconds_total",
+            "Virtual backoff seconds waited, by stage.",
+            "stage",
+            &stages(&|s| s.backoff_s),
+        );
+        p.histogram(
+            "offload_hit_latency_us",
+            "Hit-path submit-to-answer latency, microseconds.",
+            &self.hit_hist,
+        );
+        p.histogram(
+            "offload_miss_latency_us",
+            "Miss-path submit-to-answer latency, microseconds.",
+            &self.miss_hist,
+        );
+        p.finish()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::search::StageReport;
 
     #[test]
-    fn ring_quantiles_track_recent_samples() {
-        let mut r = Ring::default();
+    fn histogram_quantiles_track_samples() {
+        let stats = ServiceStats::new();
         for us in 1..=100u64 {
-            r.push(us);
+            stats.hit(us);
         }
-        let (p50, p99, max) = r.quantiles();
-        assert_eq!(p50, 50);
-        assert_eq!(p99, 99);
-        assert_eq!(max, 100);
+        let snap = stats.snapshot(
+            0,
+            0,
+            0,
+            StoreStatsSnapshot::default(),
+            FaultReport::default(),
+        );
+        assert_eq!(snap.hit_p50_us, 50);
+        assert_eq!(snap.hit_p99_us, 99);
+        assert_eq!(snap.hit_max_us, 100);
+        assert_eq!(snap.hits, 100);
     }
 
     #[test]
-    fn ring_wraps_at_capacity() {
-        let mut r = Ring::default();
-        for _ in 0..RING_CAP {
-            r.push(1);
-        }
-        // A full ring of 1s, then overwrite everything with 1000s.
-        for _ in 0..RING_CAP {
-            r.push(1000);
-        }
-        let (p50, p99, _) = r.quantiles();
-        assert_eq!(p50, 1000);
-        assert_eq!(p99, 1000);
-        assert_eq!(r.total, 2 * RING_CAP as u64);
-        assert_eq!(r.buf.len(), RING_CAP);
+    fn empty_latencies_report_zero() {
+        let snap = ServiceStats::new().snapshot(
+            0,
+            0,
+            0,
+            StoreStatsSnapshot::default(),
+            FaultReport::default(),
+        );
+        assert_eq!(
+            (snap.hit_p50_us, snap.hit_p99_us, snap.hit_max_us),
+            (0, 0, 0)
+        );
+        assert_eq!(
+            (snap.miss_p50_us, snap.miss_p99_us, snap.miss_max_us),
+            (0, 0, 0)
+        );
     }
 
-    #[test]
-    fn empty_ring_reports_zero() {
-        assert_eq!(Ring::default().quantiles(), (0, 0, 0));
+    fn sample_faults() -> FaultReport {
+        FaultReport {
+            measure: StageReport {
+                calls: 5,
+                retries: 2,
+                exhausted: 1,
+                timeouts: 0,
+                panics: 0,
+                backoff_s: 90.0,
+            },
+            verify: StageReport::default(),
+            deploy: StageReport::default(),
+        }
     }
 
     #[test]
@@ -339,7 +514,7 @@ mod tests {
             stale_hits: 3,
             ..StoreStatsSnapshot::default()
         };
-        let snap = stats.snapshot(3, 1, 7, store);
+        let snap = stats.snapshot(3, 1, 7, store, sample_faults());
         assert_eq!(snap.requests, 2);
         assert_eq!(snap.hits, 1);
         assert_eq!(snap.misses, 1);
@@ -358,7 +533,141 @@ mod tests {
         assert_eq!(j.get(&["evictions"]).unwrap().as_f64(), Some(4.0));
         assert_eq!(j.get(&["compactions"]).unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get(&["stale_hits"]).unwrap().as_f64(), Some(3.0));
+        // The retry telemetry is nested under "faults" — the PR 6
+        // counters the service used to drop.
+        assert_eq!(
+            j.get(&["faults", "total_retries"]).unwrap().as_f64(),
+            Some(2.0)
+        );
+        assert_eq!(
+            j.get(&["faults", "measure", "backoff_s"])
+                .unwrap()
+                .as_f64(),
+            Some(90.0)
+        );
         // avg solve reflects the one recorded solve.
         assert!((snap.avg_solve_ms - 4.9).abs() < 1e-9);
+    }
+
+    /// Golden schema: the exact top-level key set of the `stats` op
+    /// payload. Adding a field is fine (add it here); renaming or
+    /// dropping one breaks dashboards and the CI smoke, so this test
+    /// makes that a deliberate act.
+    #[test]
+    fn golden_stats_schema() {
+        let snap = ServiceStats::new().snapshot(
+            0,
+            0,
+            0,
+            StoreStatsSnapshot::default(),
+            FaultReport::default(),
+        );
+        let j = snap.to_json();
+        let keys: Vec<&str> =
+            j.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "appends",
+                "avg_solve_ms",
+                "coalesced",
+                "compactions",
+                "degraded",
+                "evictions",
+                "faults",
+                "hit_max_us",
+                "hit_p50_us",
+                "hit_p99_us",
+                "hits",
+                "index_hits",
+                "index_misses",
+                "index_records",
+                "inflight",
+                "miss_max_us",
+                "miss_p50_us",
+                "miss_p99_us",
+                "misses",
+                "quarantined_bytes",
+                "queue_depth",
+                "refreshes_done",
+                "refreshes_dropped",
+                "refreshes_scheduled",
+                "rejected",
+                "requests",
+                "solve_errors",
+                "solves",
+                "stale_hits",
+                "stale_writes_dropped",
+                "store_hits",
+                "store_misses",
+                "timeouts",
+                "torn_truncations",
+            ]
+        );
+        // Each stage block under "faults" keeps the StageReport shape.
+        for stage in ["measure", "verify", "deploy"] {
+            let s = j.get(&["faults", stage]).unwrap();
+            let keys: Vec<&str> =
+                s.as_obj().unwrap().keys().map(|k| k.as_str()).collect();
+            assert_eq!(
+                keys,
+                vec![
+                    "backoff_s",
+                    "calls",
+                    "exhausted",
+                    "panics",
+                    "retries",
+                    "timeouts",
+                ]
+            );
+        }
+    }
+
+    #[test]
+    fn prometheus_exposition_has_all_families() {
+        let stats = ServiceStats::new();
+        stats.request();
+        stats.hit(5);
+        stats.miss(4200);
+        let snap = stats.snapshot(
+            2,
+            1,
+            7,
+            StoreStatsSnapshot::default(),
+            sample_faults(),
+        );
+        let text = snap.to_prometheus();
+        for family in [
+            "offload_requests_total",
+            "offload_hits_total",
+            "offload_misses_total",
+            "offload_queue_depth",
+            "offload_inflight",
+            "offload_store_appends_total",
+            "offload_retries_total",
+            "offload_backoff_seconds_total",
+            "offload_hit_latency_us",
+            "offload_miss_latency_us",
+        ] {
+            assert!(
+                text.contains(&format!("# TYPE {family} ")),
+                "missing family {family}"
+            );
+        }
+        assert!(text
+            .contains("offload_retries_total{stage=\"measure\"} 2\n"));
+        assert!(text.contains("offload_hit_latency_us_count 1\n"));
+        assert!(text
+            .contains("offload_hit_latency_us_bucket{le=\"+Inf\"} 1\n"));
+        // Every sample line is "name[{labels}] value" — parseable by
+        // anything that reads the exposition format.
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').unwrap();
+            assert!(!name.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "bad sample: {line}");
+        }
     }
 }

@@ -63,5 +63,6 @@ pub(crate) fn maybe_compact(
     if !shard.wants_compaction(policy.min_dead, policy.dead_ratio) {
         return Ok(0);
     }
+    let _span = crate::obs::span("store.compact");
     shard.compact(stats)
 }

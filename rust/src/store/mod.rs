@@ -49,6 +49,7 @@ use anyhow::{Context, Result};
 use crate::envadapt::patterndb::{
     record_json, unix_now, ReuseKey, StoredPattern,
 };
+use crate::obs;
 use crate::search::OffloadSolution;
 use crate::util::json::Json;
 
@@ -209,6 +210,7 @@ impl PatternStore {
         app: &str,
         key: &ReuseKey,
     ) -> Option<StoredPattern> {
+        let _span = obs::span("store.read");
         match self.shard(app).get(app) {
             Some(e) if e.rec.matches(key) => {
                 self.stats.note_hit();
@@ -231,6 +233,7 @@ impl PatternStore {
         key: Option<&ReuseKey>,
         stamp: u64,
     ) -> Result<PathBuf> {
+        let _span = obs::span("store.append");
         let json = record_json(sol, key, stamp);
         let Some(rec) = StoredPattern::from_json(&json, Some(&sol.app))
         else {
@@ -299,6 +302,7 @@ impl PatternStore {
     /// Compact every shard unconditionally (the `repro patterndb
     /// compact` path). Returns total dead records reclaimed.
     pub fn compact_all(&self) -> Result<usize> {
+        let _span = obs::span("store.compact");
         let mut reclaimed = 0;
         for shard in &self.shards {
             reclaimed += shard.compact(&self.stats)?;
@@ -315,6 +319,7 @@ impl PatternStore {
         if len <= cap {
             return Ok(());
         }
+        let _span = obs::span("store.evict");
         let victims = evict::choose_victims(
             &self.records(),
             len - cap,
