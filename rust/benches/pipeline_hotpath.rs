@@ -11,7 +11,9 @@ use fpga_offload::codegen::split;
 use fpga_offload::cpu::XEON_BRONZE_3104;
 use fpga_offload::fpga::simulate;
 use fpga_offload::hls::{estimate, precompile, ARRIA10_GX};
-use fpga_offload::minic::{parse, resolve, typecheck, Interp, Vm};
+use fpga_offload::minic::{
+    parse, resolve, typecheck, Interp, ResolveOpts, Vm,
+};
 use fpga_offload::search::{funnel, search, SearchConfig};
 use fpga_offload::util::bench::{bench, save_results};
 use fpga_offload::util::json::Json;
@@ -48,6 +50,40 @@ fn main() {
     });
     let vm_speedup = s_profile.mean_ms() / s_profile_vm.mean_ms();
     println!("  -> vm speedup over tree-walker: {vm_speedup:.1}x");
+
+    // §PGO series: the fused-superinstruction encoding vs the unfused
+    // baseline, per bundled workload. Both run from precompiled modules
+    // so the comparison isolates dispatch cost — the thing the PGO pass
+    // (arm reorder + superinstructions) actually moves.
+    let mut pgo_rows: Vec<(&str, Json)> = Vec::new();
+    let mut best_speedup = 0.0f64;
+    for app in workloads::APPS {
+        let app_prog = parse(workloads::source(app).unwrap()).unwrap();
+        let base_m =
+            resolve::compile_with(&app_prog, &ResolveOpts::baseline())
+                .unwrap();
+        let pgo_m = resolve::compile(&app_prog).unwrap();
+        let s_base =
+            bench(&format!("hotpath/vm-baseline({app})"), 1, 5, || {
+                let mut v = Vm::from_module(base_m.clone()).unwrap();
+                v.call("main", &[]).unwrap();
+            });
+        let s_pgo = bench(&format!("hotpath/vm-pgo({app})"), 1, 5, || {
+            let mut v = Vm::from_module(pgo_m.clone()).unwrap();
+            v.call("main", &[]).unwrap();
+        });
+        let x = s_base.mean_ms() / s_pgo.mean_ms();
+        best_speedup = best_speedup.max(x);
+        println!("  -> {app}: pgo encoding {x:.2}x over unfused baseline");
+        pgo_rows.push((
+            app,
+            Json::obj(vec![
+                ("vm_ms", Json::Num(s_base.mean_ms())),
+                ("vm_pgo_ms", Json::Num(s_pgo.mean_ms())),
+                ("speedup", Json::Num(x)),
+            ]),
+        ));
+    }
 
     let an = analyze(&prog, "main").unwrap();
     let s_funnel = bench("hotpath/funnel(narrow+precompile)", 3, 50, || {
@@ -101,7 +137,15 @@ fn main() {
         vm_speedup >= 5.0,
         "vm must be ≥5x the tree-walker on the profiling run, got {vm_speedup:.1}x"
     );
-    println!("\nperf targets: PASS (static pipeline in single-digit ms, vm ≥5x)");
+    assert!(
+        best_speedup >= 1.3,
+        "pgo encoding must be ≥1.3x the unfused baseline on at least \
+         one workload, got best {best_speedup:.2}x"
+    );
+    println!(
+        "\nperf targets: PASS (static pipeline in single-digit ms, \
+         vm ≥5x, pgo ≥1.3x)"
+    );
 
     // Both engine series recorded so the perf trajectory has history:
     // target/bench-results/BENCH_hotpath.json.
@@ -119,6 +163,8 @@ fn main() {
             ("report_ms", Json::Num(s_report.mean_ms())),
             ("simulate_ms", Json::Num(s_sim.mean_ms())),
             ("search_ms", Json::Num(s_search.mean_ms())),
+            ("vm-pgo", Json::obj(pgo_rows)),
+            ("vm_pgo_best_speedup", Json::Num(best_speedup)),
         ]),
     );
 }

@@ -40,4 +40,6 @@ pub mod profile;
 pub use depend::Dependence;
 pub use intensity::{LoopIntensity, TRIG_FLOP_WEIGHT};
 pub use loopinfo::{Blocker, LoopInfo};
-pub use profile::{analyze, analyze_with, Analysis, AnalyzedLoop};
+pub use profile::{
+    analyze, analyze_with, opcode_profile, Analysis, AnalyzedLoop,
+};

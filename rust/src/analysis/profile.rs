@@ -11,7 +11,9 @@
 use std::collections::BTreeSet;
 
 use crate::minic::ast::{LoopId, Stmt};
-use crate::minic::{EngineKind, MiniCError, Profile, Program};
+use crate::minic::{
+    EngineKind, MiniCError, OpReport, Profile, Program, ResolveOpts, Vm,
+};
 
 use super::depend::{classify, Dependence};
 use super::intensity::{rank, LoopIntensity};
@@ -121,6 +123,28 @@ pub fn analyze_with(
     })
 }
 
+/// Profile `entry()` on an instruction-profiled VM under the given
+/// encoding: the §PGO measurement run behind `repro vmprofile`.
+///
+/// Returns the ordinary loop [`Profile`] (identical to [`analyze`]'s —
+/// the profiler is observationally invisible) plus the [`OpReport`]
+/// of per-opcode and adjacent-pair dispatch counts, truncated to
+/// `top_pairs` pair rows.
+pub fn opcode_profile(
+    prog: &Program,
+    entry: &str,
+    opts: &ResolveOpts,
+    top_pairs: usize,
+) -> Result<(Profile, OpReport), MiniCError> {
+    let mut vm = Vm::new_profiled_with(prog, opts)?;
+    vm.call(entry, &[])?;
+    let report = vm
+        .instr_profiler()
+        .expect("profiled VM has a profiler")
+        .report(top_pairs);
+    Ok((vm.profile(), report))
+}
+
 /// Find the loop body in the program and classify its dependence.
 fn loop_dependence(prog: &Program, info: &LoopInfo) -> Dependence {
     let mut dep = Dependence::Independent;
@@ -195,6 +219,25 @@ int main() {
             assert_eq!(lp.ops, lv.ops, "{id}");
             assert_eq!(lp.trips, lv.trips, "{id}");
         }
+    }
+
+    #[test]
+    fn opcode_profile_matches_plain_analysis() {
+        let prog = parse(SRC).unwrap();
+        let a = analyze(&prog, "main").unwrap();
+        let (p, report) =
+            opcode_profile(&prog, "main", &ResolveOpts::default(), 8)
+                .unwrap();
+        // The instruction profiler is invisible to the loop profile.
+        assert_eq!(a.profile.total, p.total);
+        assert!(report.dispatches > 0);
+        assert!(report.pairs.len() <= 8);
+        // Baseline encoding dispatches strictly more instructions —
+        // that gap is the fusion win vmprofile reports.
+        let (_, base) =
+            opcode_profile(&prog, "main", &ResolveOpts::baseline(), 8)
+                .unwrap();
+        assert!(base.dispatches > report.dispatches);
     }
 
     #[test]

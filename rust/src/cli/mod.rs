@@ -15,6 +15,8 @@
 //! repro estimate <app|file.c> [--unroll B]   pre-compile reports (top-A)
 //! repro opencl <app|file.c> --loop N [--unroll B]   emit kernel + host
 //! repro ga <app|file.c> [--seed S]           GA baseline from [32]
+//! repro vmprofile [apps...] [--pairs N] [--baseline] [--regs]
+//!                 [--disasm] [--json] [--out FILE] [--entry FN]
 //! repro run-sample <tdfir|mriq>    PJRT sample test only
 //! repro apps                       list bundled applications
 //! repro serve [--addr A] [--port-file F] [--workers N] [--queue-cap N]
@@ -50,7 +52,7 @@ use crate::cpu::{XEON_BRONZE_3104, XEON_GOLD_6130};
 use crate::envadapt::{Batch, OffloadRequest, Pipeline, TestDb};
 use crate::gpu::TESLA_T4;
 use crate::hls::{render, ARRIA10_GX};
-use crate::minic::{parse, typecheck, EngineKind, Program};
+use crate::minic::{parse, typecheck, EngineKind, Program, ResolveOpts};
 use crate::obs::export::{sort_spans, to_chrome, to_ndjson};
 use crate::obs::{SpanRow, TraceConfig, Tracer};
 use crate::runtime::{Artifacts, Runtime};
@@ -69,6 +71,7 @@ pub fn run(args: &[String]) -> i32 {
         Some("estimate") => cmd_estimate(&args[1..]),
         Some("opencl") => cmd_opencl(&args[1..]),
         Some("ga") => cmd_ga(&args[1..]),
+        Some("vmprofile") => cmd_vmprofile(&args[1..]),
         Some("run-sample") => cmd_run_sample(&args[1..]),
         Some("serve") => service::cmd_serve(&args[1..]),
         Some("client") => service::cmd_client(&args[1..]),
@@ -111,7 +114,10 @@ fn print_usage() {
            offload <app|file.c>   full staged pipeline: parse → analyze →\n\
                                   extract → measure → select → deploy\n\
              --explain            print the funnel trace and reports\n\
-             --engine E           execution engine: vm (default) | interp\n\
+             --engine E           execution engine: vm (default) |\n\
+                                  interp | vm-baseline (unfused\n\
+                                  encoding) | vm-regs (register\n\
+                                  experiment)\n\
              --backend B          destination: fpga (default) | gpu |\n\
                                   omp (many-core OpenMP) | cpu (control)\n\
              --entry FN           entry function for profiling and\n\
@@ -169,6 +175,19 @@ fn print_usage() {
            estimate <app|file.c>  pre-compile resource reports (top-A)\n\
            opencl <app|file.c> --loop N   emit OpenCL kernel + host text\n\
            ga <app|file.c>        GA baseline search ([32])\n\
+           vmprofile [apps...]    per-opcode / adjacent-pair dispatch\n\
+                                  profile of the MiniC VM over the\n\
+                                  bundled workloads (default: all) —\n\
+                                  the measurement behind the fused\n\
+                                  superinstruction encoding (§PGO)\n\
+             --pairs N            pair rows per report (default 12)\n\
+             --baseline           profile the unfused pre-PGO encoding\n\
+             --regs               profile the register-operand\n\
+                                  encoding experiment\n\
+             --disasm             print the bytecode disassembly first\n\
+             --json               machine-readable report on stdout\n\
+             --out FILE           write the JSON report to FILE\n\
+             --entry FN           entry function (default main)\n\
            run-sample <tdfir|mriq>  PJRT sample test\n\
            apps                   list bundled applications\n\
            serve                  resident plan-serving daemon (newline-\n\
@@ -275,7 +294,10 @@ fn engine_from_flags(f: &Flags) -> anyhow::Result<EngineKind> {
     match f.value("--engine") {
         None => Ok(EngineKind::default()),
         Some(v) => EngineKind::parse(v).ok_or_else(|| {
-            anyhow::anyhow!("bad value for --engine: {v:?} (use interp|vm)")
+            anyhow::anyhow!(
+                "bad value for --engine: {v:?} \
+                 (use interp|vm|vm-baseline|vm-regs)"
+            )
         }),
     }
 }
@@ -351,6 +373,7 @@ const VALUE_FLAGS: &[&str] = &[
     "--engine",
     "--backend",
     "--entry",
+    "--pairs",
     "--top-a",
     "--unroll",
     "--top-c",
@@ -993,6 +1016,117 @@ fn cmd_ga(args: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro vmprofile` — the §PGO measurement tool: run each workload on
+/// an instruction-profiled VM and report per-opcode dispatch ranking
+/// plus the hottest adjacent pairs (annotated with the superinstruction
+/// that fuses them, when one exists). Always profiles the unfused
+/// baseline too, so the dispatch/cycle reduction of the current
+/// encoding is printed alongside.
+fn cmd_vmprofile(args: &[String]) -> anyhow::Result<()> {
+    let f = Flags { args };
+    let pairs: usize = f.num("--pairs", 12usize)?;
+    let (opts, label) = if f.has("--baseline") {
+        (ResolveOpts::baseline(), "baseline")
+    } else if f.has("--regs") {
+        (ResolveOpts::regs(), "regs")
+    } else {
+        (ResolveOpts::default(), "fused")
+    };
+    let entry = f.value("--entry").unwrap_or("main");
+    let specs: Vec<String> = {
+        let p = f.positionals();
+        if p.is_empty() {
+            workloads::APPS.iter().map(|s| s.to_string()).collect()
+        } else {
+            p.iter().map(|s| s.to_string()).collect()
+        }
+    };
+
+    use crate::util::json::Json;
+    let want_json = f.has("--json") || f.value("--out").is_some();
+    let mut doc = std::collections::BTreeMap::new();
+
+    for spec in &specs {
+        let (app, src) = resolve_source(spec)?;
+        let prog = parse(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+        typecheck::check_ok(&prog).map_err(|e| anyhow::anyhow!("{e}"))?;
+
+        if f.has("--disasm") {
+            let module =
+                crate::minic::resolve::compile_with(&prog, &opts)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+            println!("== {app}: {label} encoding disassembly ==");
+            println!("{}", module.disassemble());
+        }
+
+        let (_, report) =
+            crate::analysis::opcode_profile(&prog, entry, &opts, pairs)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let (_, base) = crate::analysis::opcode_profile(
+            &prog,
+            entry,
+            &ResolveOpts::baseline(),
+            pairs,
+        )
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let dispatch_x = base.dispatches as f64 / report.dispatches as f64;
+        let cycles_x = base.est_cycles as f64 / report.est_cycles as f64;
+
+        if want_json {
+            doc.insert(
+                app.clone(),
+                Json::obj(vec![
+                    ("encoding", Json::Str(label.into())),
+                    ("entry", Json::Str(entry.into())),
+                    ("report", report.to_json()),
+                    ("baseline", base.to_json()),
+                    ("dispatch_reduction", Json::Num(dispatch_x)),
+                    ("est_cycle_reduction", Json::Num(cycles_x)),
+                ]),
+            );
+        }
+        if !f.has("--json") {
+            println!("== {app} ({label} encoding, entry {entry}) ==");
+            print!("{}", report.render());
+            if label != "baseline" {
+                println!(
+                    "  vs baseline: dispatches {} -> {} ({dispatch_x:.2}x), \
+                     est cycles {} -> {} ({cycles_x:.2}x)",
+                    base.dispatches,
+                    report.dispatches,
+                    base.est_cycles,
+                    report.est_cycles
+                );
+                println!("  baseline pairs (fusion candidates):");
+                for p in &base.pairs {
+                    println!(
+                        "    {} -> {}  x{}{}",
+                        p.prev.name(),
+                        p.next.name(),
+                        p.count,
+                        p.fused_as
+                            .map(|n| format!("   [fused as {n}]"))
+                            .unwrap_or_default()
+                    );
+                }
+            }
+            println!();
+        }
+    }
+
+    if want_json {
+        let doc = Json::Obj(doc);
+        if f.has("--json") {
+            println!("{}", doc.pretty());
+        }
+        if let Some(out) = f.value("--out") {
+            std::fs::write(out, doc.pretty() + "\n")?;
+            println!("vmprofile report written to {out}");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_run_sample(args: &[String]) -> anyhow::Result<()> {
     let f = Flags { args };
     let app = f
@@ -1196,6 +1330,51 @@ mod tests {
         assert!(dumps[0].contains("request"), "{}", dumps[0]);
         assert!(dumps[0].contains("destination"), "{}", dumps[0]);
         assert!(dumps[0].contains("stage.measure"), "{}", dumps[0]);
+    }
+
+    #[test]
+    fn vmprofile_runs_on_a_bundled_app() {
+        assert_eq!(run(&s(&["vmprofile", "tdfir", "--pairs", "6"])), 0);
+    }
+
+    #[test]
+    fn vmprofile_baseline_regs_and_disasm_run() {
+        assert_eq!(run(&s(&["vmprofile", "sobel", "--baseline"])), 0);
+        assert_eq!(
+            run(&s(&["vmprofile", "sobel", "--regs", "--disasm", "--json"])),
+            0
+        );
+    }
+
+    #[test]
+    fn vmprofile_writes_json_report() {
+        let dir = TempDir::new("fpga-offload-cli-vmprofile").unwrap();
+        let out = dir.join("vmprof.json");
+        let out_s = out.to_string_lossy().into_owned();
+        assert_eq!(
+            run(&s(&["vmprofile", "mriq", "--out", &out_s])),
+            0
+        );
+        let text = std::fs::read_to_string(&out).unwrap();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert!(j.get(&["mriq", "report", "dispatches"]).is_some());
+        assert!(j.get(&["mriq", "baseline", "pairs"]).is_some());
+        // Fused encoding must dispatch strictly fewer instructions.
+        let x = j
+            .get(&["mriq", "dispatch_reduction"])
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(x > 1.0, "dispatch reduction {x}");
+    }
+
+    #[test]
+    fn bad_engine_value_mentions_new_kinds() {
+        assert_eq!(run(&s(&["analyze", "sobel", "--engine", "jit"])), 1);
+        assert_eq!(
+            run(&s(&["analyze", "sobel", "--engine", "vm-baseline"])),
+            0
+        );
     }
 
     #[test]

@@ -180,6 +180,56 @@ pub enum Instr {
     /// where the tree-walker would fail at execution time, so programs
     /// whose errors live in dead code behave identically.
     Trap(u32),
+
+    // ---- superinstructions (§PGO) ----
+    //
+    // Each fuses one measured-hot adjacent pair from the baseline
+    // encoding's pair-frequency report (`repro vmprofile`) into a
+    // single dispatch. All fusions are *in-place*: the peephole in
+    // `resolve.rs` overwrites the pair's first instruction when pushing
+    // the second, so code length, every jump target, and all
+    // observable semantics (pop order, op counts, error order) are
+    // unchanged — the differential fuzzer pins each against the
+    // tree-walker oracle.
+    /// `LoadLocal(idx)` + `LoadIndex`: the last (innermost) index comes
+    /// straight from a frame slot; `rank - 1` outer indices still pop.
+    LoadIndexLocal {
+        base: Storage,
+        rank: u8,
+        idx: u16,
+        name: u32,
+    },
+    /// `LoadLocal(idx)` + `StoreIndex`: same, for the store side.
+    StoreIndexLocal {
+        base: Storage,
+        rank: u8,
+        idx: u16,
+        name: u32,
+        op: AssignOp,
+    },
+    /// `LoadIndex` + `Bin(op)`: the indexed load feeds the operator as
+    /// its rhs without a push/pop round trip — the index-chain pair the
+    /// workloads' tap/stencil loops are made of.
+    LoadIndexBin {
+        base: Storage,
+        rank: u8,
+        name: u32,
+        op: BinOp,
+    },
+    /// `ConstInt(v)` + `Bin(op)`: constant rhs (folded `#define` loop
+    /// bounds, modulo constants).
+    BinConstInt(BinOp, i64),
+    /// `ConstInt(v)` + `CompoundLocal(slot, op)`: the `i++` / `i += c`
+    /// loop-step shape. Constants beyond `i32` stay unfused.
+    CompoundLocalConst { slot: u16, op: BinOp, v: i32 },
+    /// `BinConstInt(op, v)` + `JumpIfFalse(target)`: the whole
+    /// `i < N`-and-branch loop condition in one dispatch. Constants
+    /// beyond `i32` stay unfused.
+    CmpConstJump { op: BinOp, v: i32, target: u32 },
+    /// `LoadLocal(slot)` + `Bin(op)`: register-style rhs operand read
+    /// directly from the frame slot. Only emitted under the gated
+    /// `vm-regs` encoding experiment (see `resolve::ResolveOpts`).
+    BinLocal { slot: u16, op: BinOp },
 }
 
 /// A compiled function.
@@ -245,4 +295,180 @@ impl Module {
     pub fn code_len(&self) -> usize {
         self.funcs.iter().map(|f| f.code.len()).sum()
     }
+
+    /// Deterministic text disassembly of every function, in module
+    /// order. Interned ids are resolved back to source names so the
+    /// output reads like the program; the golden-file tests
+    /// (`tests/bytecode_golden.rs`) pin each bundled workload's
+    /// disassembly so encoding changes show up as reviewable diffs.
+    pub fn disassemble(&self) -> String {
+        let mut out = String::new();
+        for f in &self.funcs {
+            out.push_str(&format!(
+                "fn {}(params={}, slots={})\n",
+                f.name,
+                f.params.len(),
+                f.n_slots
+            ));
+            for (i, instr) in f.code.iter().enumerate() {
+                out.push_str(&format!(
+                    "  {:>4}  {}\n",
+                    i,
+                    self.disasm_instr(instr)
+                ));
+            }
+        }
+        out
+    }
+
+    fn storage_name(&self, s: Storage) -> String {
+        match s {
+            Storage::Local(i) => format!("l{i}"),
+            Storage::Global(i) => {
+                format!("g{i}({})", self.globals[i as usize].name)
+            }
+        }
+    }
+
+    fn disasm_instr(&self, instr: &Instr) -> String {
+        let arr = |name: &u32| self.names[*name as usize].clone();
+        match instr {
+            Instr::ConstInt(v) => format!("ConstInt {v}"),
+            Instr::ConstFloat(v) => format!("ConstFloat {v:?}"),
+            Instr::LoadLocal(s) => format!("LoadLocal l{s}"),
+            Instr::StoreLocal(s) => format!("StoreLocal l{s}"),
+            Instr::StoreLocalCoerce(s, sc) => {
+                format!("StoreLocalCoerce l{s} {sc:?}")
+            }
+            Instr::LoadGlobal(s) => {
+                format!("LoadGlobal {}", self.storage_name(Storage::Global(*s)))
+            }
+            Instr::StoreGlobal(s) => {
+                format!("StoreGlobal {}", self.storage_name(Storage::Global(*s)))
+            }
+            Instr::CompoundLocal(s, op) => {
+                format!("CompoundLocal l{s} {op:?}")
+            }
+            Instr::CompoundGlobal(s, op) => format!(
+                "CompoundGlobal {} {op:?}",
+                self.storage_name(Storage::Global(*s))
+            ),
+            Instr::MacLocal(s) => format!("MacLocal l{s}"),
+            Instr::ZeroLocal(s, sc) => format!("ZeroLocal l{s} {sc:?}"),
+            Instr::AllocLocalArray { slot, dims } => {
+                let (elem, d) = &self.array_dims[*dims as usize];
+                format!("AllocLocalArray l{slot} {elem:?}{d:?}")
+            }
+            Instr::LoadIndex { base, rank, name } => format!(
+                "LoadIndex {} rank={rank} ({})",
+                self.storage_name(*base),
+                arr(name)
+            ),
+            Instr::StoreIndex { base, rank, name, op } => format!(
+                "StoreIndex {} rank={rank} {op:?} ({})",
+                self.storage_name(*base),
+                arr(name)
+            ),
+            Instr::Bin(op) => format!("Bin {op:?}"),
+            Instr::Neg => "Neg".into(),
+            Instr::Not => "Not".into(),
+            Instr::CastInt => "CastInt".into(),
+            Instr::CastFloat => "CastFloat".into(),
+            Instr::BumpCmp => "BumpCmp".into(),
+            Instr::Jump(t) => format!("Jump -> {t}"),
+            Instr::JumpIfFalse(t) => format!("JumpIfFalse -> {t}"),
+            Instr::AndCheck(t) => format!("AndCheck -> {t}"),
+            Instr::OrCheck(t) => format!("OrCheck -> {t}"),
+            Instr::ToBool => "ToBool".into(),
+            Instr::Pop => "Pop".into(),
+            Instr::LoopEnter(id) => format!("LoopEnter L{}", id.0),
+            Instr::LoopTrip(id) => format!("LoopTrip L{}", id.0),
+            Instr::LoopExit => "LoopExit".into(),
+            Instr::Call { func, argc } => format!(
+                "Call {}({} args)",
+                self.funcs[*func as usize].name, argc
+            ),
+            Instr::Builtin1(b) => format!("Builtin1 {b:?}"),
+            Instr::Builtin2(b) => format!("Builtin2 {b:?}"),
+            Instr::Return => "Return".into(),
+            Instr::Trap(id) => {
+                format!("Trap {:?}", self.traps[*id as usize])
+            }
+            Instr::LoadIndexLocal { base, rank, idx, name } => format!(
+                "LoadIndexLocal {} rank={rank} idx=l{idx} ({})",
+                self.storage_name(*base),
+                arr(name)
+            ),
+            Instr::StoreIndexLocal { base, rank, idx, name, op } => format!(
+                "StoreIndexLocal {} rank={rank} idx=l{idx} {op:?} ({})",
+                self.storage_name(*base),
+                arr(name)
+            ),
+            Instr::LoadIndexBin { base, rank, name, op } => format!(
+                "LoadIndexBin {} rank={rank} {op:?} ({})",
+                self.storage_name(*base),
+                arr(name)
+            ),
+            Instr::BinConstInt(op, v) => format!("BinConstInt {op:?} {v}"),
+            Instr::CompoundLocalConst { slot, op, v } => {
+                format!("CompoundLocalConst l{slot} {op:?} {v}")
+            }
+            Instr::CmpConstJump { op, v, target } => {
+                format!("CmpConstJump {op:?} {v} -> {target}")
+            }
+            Instr::BinLocal { slot, op } => {
+                format!("BinLocal l{slot} {op:?}")
+            }
+        }
+    }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::minic::{parse, resolve};
+
+    #[test]
+    fn instructions_stay_word_pair_sized() {
+        // The dispatch loop fetches instructions by value; keeping the
+        // enum at 16 bytes is why the superinstruction payloads carry
+        // `i32` constants rather than `i64`.
+        assert!(std::mem::size_of::<Instr>() <= 16);
+    }
+
+    #[test]
+    fn disassembly_resolves_names_and_targets() {
+        let prog = parse(
+            "#define N 4\nfloat a[N];\n\
+             int main() {\n\
+                 float s = 0.0;\n\
+                 for (int i = 0; i < N; i++) { s += a[i] * 2.0; }\n\
+                 return (int) s;\n\
+             }",
+        )
+        .unwrap();
+        let m = resolve::compile(&prog).unwrap();
+        let text = m.disassemble();
+        assert!(text.contains("fn main(params=0, slots="), "{text}");
+        assert!(text.contains("fn @init"), "{text}");
+        assert!(text.contains("(a)"), "{text}");
+        assert!(text.contains("LoopEnter L0"), "{text}");
+        // Every function disassembles every instruction.
+        let lines = text.lines().filter(|l| !l.starts_with("fn ")).count();
+        assert_eq!(lines, m.code_len());
+    }
+
+    #[test]
+    fn disassembly_is_deterministic() {
+        let prog = parse(
+            "int f(int x) { return x * 3; }\n\
+             int main() { return f(2) + f(3); }",
+        )
+        .unwrap();
+        let a = resolve::compile(&prog).unwrap().disassemble();
+        let b = resolve::compile(&prog).unwrap().disassemble();
+        assert_eq!(a, b);
+        assert!(a.contains("Call f(1 args)"), "{a}");
+    }
+}
+

@@ -13,6 +13,7 @@
 
 use super::ast::Scalar;
 use super::interp::{Interp, Profile};
+use super::resolve::ResolveOpts;
 use super::value::{ArrayObj, ArrayRef, Value};
 use super::vm::Vm;
 use super::{MiniCError, Program};
@@ -118,9 +119,16 @@ impl Engine for Vm {
 pub enum EngineKind {
     /// Tree-walking interpreter (semantics oracle).
     TreeWalk,
-    /// Slot-resolved bytecode VM (§Perf fast path).
+    /// Slot-resolved bytecode VM (§Perf fast path), superinstruction
+    /// encoding (the §PGO default).
     #[default]
     Bytecode,
+    /// The VM on the pre-PGO unfused encoding — the measurement
+    /// baseline `repro vmprofile` compares against.
+    BytecodeBaseline,
+    /// The VM with the register-operand encoding experiment enabled
+    /// (`ResolveOpts::regs`; default-on under the `vm-regs` feature).
+    BytecodeRegs,
 }
 
 impl EngineKind {
@@ -129,6 +137,8 @@ impl EngineKind {
         match s {
             "interp" | "treewalk" | "oracle" => Some(EngineKind::TreeWalk),
             "vm" | "bytecode" => Some(EngineKind::Bytecode),
+            "vm-baseline" | "baseline" => Some(EngineKind::BytecodeBaseline),
+            "vm-regs" | "regs" => Some(EngineKind::BytecodeRegs),
             _ => None,
         }
     }
@@ -141,6 +151,12 @@ impl EngineKind {
         Ok(match self {
             EngineKind::TreeWalk => Box::new(Interp::new(prog)?),
             EngineKind::Bytecode => Box::new(Vm::new(prog)?),
+            EngineKind::BytecodeBaseline => {
+                Box::new(Vm::new_with(prog, &ResolveOpts::baseline())?)
+            }
+            EngineKind::BytecodeRegs => {
+                Box::new(Vm::new_with(prog, &ResolveOpts::regs())?)
+            }
         })
     }
 }
@@ -150,6 +166,8 @@ impl std::fmt::Display for EngineKind {
         f.write_str(match self {
             EngineKind::TreeWalk => "interp",
             EngineKind::Bytecode => "vm",
+            EngineKind::BytecodeBaseline => "vm-baseline",
+            EngineKind::BytecodeRegs => "vm-regs",
         })
     }
 }
@@ -170,7 +188,12 @@ int main() {
     #[test]
     fn both_engines_run_and_agree() {
         let prog = parse(SRC).unwrap();
-        for kind in [EngineKind::TreeWalk, EngineKind::Bytecode] {
+        for kind in [
+            EngineKind::TreeWalk,
+            EngineKind::Bytecode,
+            EngineKind::BytecodeBaseline,
+            EngineKind::BytecodeRegs,
+        ] {
             let mut eng = kind.build(&prog).unwrap();
             eng.call("main", &[]).unwrap();
             let r = eng.global_array("a").unwrap();
@@ -184,6 +207,14 @@ int main() {
         assert_eq!(EngineKind::default(), EngineKind::Bytecode);
         assert_eq!(EngineKind::parse("interp"), Some(EngineKind::TreeWalk));
         assert_eq!(EngineKind::parse("vm"), Some(EngineKind::Bytecode));
+        assert_eq!(
+            EngineKind::parse("vm-baseline"),
+            Some(EngineKind::BytecodeBaseline)
+        );
+        assert_eq!(
+            EngineKind::parse("vm-regs"),
+            Some(EngineKind::BytecodeRegs)
+        );
         assert_eq!(EngineKind::parse("gpu"), None);
     }
 }

@@ -32,7 +32,20 @@
 //! (`tests/vm_differential.rs`): over randomized programs, final
 //! globals, totals, and per-loop profiles must match exactly. Engine
 //! selection is wired through [`engine::EngineKind`] (CLI: `--engine
-//! interp|vm`).
+//! interp|vm|vm-baseline|vm-regs`).
+//!
+//! # The PGO loop (§PGO)
+//!
+//! The VM's encoding is profile-guided. [`profile`] adds an optional
+//! per-opcode / adjacent-pair counter layer ([`OpProfiler`], a no-op
+//! handle when absent, like `obs::Tracer`); `repro vmprofile` records
+//! it over the bundled workloads. The measured ranking ordered the
+//! dispatch arms in [`vm`], and the hottest adjacent pairs became
+//! fused superinstructions emitted by [`resolve`]'s peepholes
+//! ([`ResolveOpts`] selects the encoding: fused default, unfused
+//! `baseline`, or the `regs` register-operand experiment, default-on
+//! under the `vm-regs` cargo feature). Every fused handler is pinned
+//! to the oracle by the same differential harness.
 //!
 //! ```
 //! use fpga_offload::minic::{parse, typecheck};
@@ -57,6 +70,7 @@ pub mod interp;
 pub mod lexer;
 pub mod parser;
 pub mod pretty;
+pub mod profile;
 pub mod resolve;
 pub mod token;
 pub mod typecheck;
@@ -70,6 +84,8 @@ pub use ast::{
 pub use engine::{Engine, EngineKind};
 pub use interp::{Interp, LoopProfile, OpCounts, Profile};
 pub use parser::parse;
+pub use profile::{Op, OpProfiler, OpReport};
+pub use resolve::ResolveOpts;
 pub use value::{ArrayObj, ArrayRef, Value};
 pub use vm::Vm;
 

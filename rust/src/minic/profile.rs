@@ -1,0 +1,609 @@
+//! Instruction-level profiling for the bytecode VM (§PGO).
+//!
+//! The PGO loop (ARCHITECTURE.md "VM + PGO loop") starts here: run the
+//! bundled workloads under an [`OpProfiler`], read off the per-opcode
+//! ranking and the per-adjacent-pair frequencies, and let the *measured*
+//! numbers — not intuition — pick the dispatch layout of `vm.rs` and the
+//! superinstruction peepholes of `resolve.rs`. `repro vmprofile` dumps
+//! the same report from the CLI.
+//!
+//! Like [`crate::obs::Tracer`], the profiler is a handle the VM may or
+//! may not carry: a non-profiled VM holds `None` and the hot loop pays
+//! one predictable branch, nothing else — the differential and property
+//! tests pin profiled and unprofiled runs to byte-identical results.
+//!
+//! Determinism rule: the profiler never reads a clock. Cycle figures in
+//! the report come from a static per-opcode cost model ([`Op::weight`]),
+//! so a report is a pure function of the executed instruction stream and
+//! two runs (on any thread schedule) produce byte-identical reports.
+
+use crate::util::json::Json;
+
+use super::bytecode::Instr;
+
+/// Payload-free mirror of [`Instr`] — the profiler's counter index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    ConstInt,
+    ConstFloat,
+    LoadLocal,
+    StoreLocal,
+    StoreLocalCoerce,
+    LoadGlobal,
+    StoreGlobal,
+    CompoundLocal,
+    CompoundGlobal,
+    MacLocal,
+    ZeroLocal,
+    AllocLocalArray,
+    LoadIndex,
+    StoreIndex,
+    Bin,
+    Neg,
+    Not,
+    CastInt,
+    CastFloat,
+    BumpCmp,
+    Jump,
+    JumpIfFalse,
+    AndCheck,
+    OrCheck,
+    ToBool,
+    Pop,
+    LoopEnter,
+    LoopTrip,
+    LoopExit,
+    Call,
+    Builtin1,
+    Builtin2,
+    Return,
+    Trap,
+    LoadIndexLocal,
+    StoreIndexLocal,
+    LoadIndexBin,
+    BinConstInt,
+    CompoundLocalConst,
+    CmpConstJump,
+    BinLocal,
+}
+
+/// Number of distinct opcodes (size of the counter vectors).
+pub const N_OPS: usize = 41;
+
+impl Op {
+    /// Every opcode, in discriminant order.
+    pub const ALL: [Op; N_OPS] = [
+        Op::ConstInt,
+        Op::ConstFloat,
+        Op::LoadLocal,
+        Op::StoreLocal,
+        Op::StoreLocalCoerce,
+        Op::LoadGlobal,
+        Op::StoreGlobal,
+        Op::CompoundLocal,
+        Op::CompoundGlobal,
+        Op::MacLocal,
+        Op::ZeroLocal,
+        Op::AllocLocalArray,
+        Op::LoadIndex,
+        Op::StoreIndex,
+        Op::Bin,
+        Op::Neg,
+        Op::Not,
+        Op::CastInt,
+        Op::CastFloat,
+        Op::BumpCmp,
+        Op::Jump,
+        Op::JumpIfFalse,
+        Op::AndCheck,
+        Op::OrCheck,
+        Op::ToBool,
+        Op::Pop,
+        Op::LoopEnter,
+        Op::LoopTrip,
+        Op::LoopExit,
+        Op::Call,
+        Op::Builtin1,
+        Op::Builtin2,
+        Op::Return,
+        Op::Trap,
+        Op::LoadIndexLocal,
+        Op::StoreIndexLocal,
+        Op::LoadIndexBin,
+        Op::BinConstInt,
+        Op::CompoundLocalConst,
+        Op::CmpConstJump,
+        Op::BinLocal,
+    ];
+
+    /// The opcode of an instruction (payload dropped).
+    #[inline]
+    pub fn of(instr: &Instr) -> Op {
+        match instr {
+            Instr::ConstInt(_) => Op::ConstInt,
+            Instr::ConstFloat(_) => Op::ConstFloat,
+            Instr::LoadLocal(_) => Op::LoadLocal,
+            Instr::StoreLocal(_) => Op::StoreLocal,
+            Instr::StoreLocalCoerce(..) => Op::StoreLocalCoerce,
+            Instr::LoadGlobal(_) => Op::LoadGlobal,
+            Instr::StoreGlobal(_) => Op::StoreGlobal,
+            Instr::CompoundLocal(..) => Op::CompoundLocal,
+            Instr::CompoundGlobal(..) => Op::CompoundGlobal,
+            Instr::MacLocal(_) => Op::MacLocal,
+            Instr::ZeroLocal(..) => Op::ZeroLocal,
+            Instr::AllocLocalArray { .. } => Op::AllocLocalArray,
+            Instr::LoadIndex { .. } => Op::LoadIndex,
+            Instr::StoreIndex { .. } => Op::StoreIndex,
+            Instr::Bin(_) => Op::Bin,
+            Instr::Neg => Op::Neg,
+            Instr::Not => Op::Not,
+            Instr::CastInt => Op::CastInt,
+            Instr::CastFloat => Op::CastFloat,
+            Instr::BumpCmp => Op::BumpCmp,
+            Instr::Jump(_) => Op::Jump,
+            Instr::JumpIfFalse(_) => Op::JumpIfFalse,
+            Instr::AndCheck(_) => Op::AndCheck,
+            Instr::OrCheck(_) => Op::OrCheck,
+            Instr::ToBool => Op::ToBool,
+            Instr::Pop => Op::Pop,
+            Instr::LoopEnter(_) => Op::LoopEnter,
+            Instr::LoopTrip(_) => Op::LoopTrip,
+            Instr::LoopExit => Op::LoopExit,
+            Instr::Call { .. } => Op::Call,
+            Instr::Builtin1(_) => Op::Builtin1,
+            Instr::Builtin2(_) => Op::Builtin2,
+            Instr::Return => Op::Return,
+            Instr::Trap(_) => Op::Trap,
+            Instr::LoadIndexLocal { .. } => Op::LoadIndexLocal,
+            Instr::StoreIndexLocal { .. } => Op::StoreIndexLocal,
+            Instr::LoadIndexBin { .. } => Op::LoadIndexBin,
+            Instr::BinConstInt(..) => Op::BinConstInt,
+            Instr::CompoundLocalConst { .. } => Op::CompoundLocalConst,
+            Instr::CmpConstJump { .. } => Op::CmpConstJump,
+            Instr::BinLocal { .. } => Op::BinLocal,
+        }
+    }
+
+    /// Mnemonic, as used in disassembly and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::ConstInt => "ConstInt",
+            Op::ConstFloat => "ConstFloat",
+            Op::LoadLocal => "LoadLocal",
+            Op::StoreLocal => "StoreLocal",
+            Op::StoreLocalCoerce => "StoreLocalCoerce",
+            Op::LoadGlobal => "LoadGlobal",
+            Op::StoreGlobal => "StoreGlobal",
+            Op::CompoundLocal => "CompoundLocal",
+            Op::CompoundGlobal => "CompoundGlobal",
+            Op::MacLocal => "MacLocal",
+            Op::ZeroLocal => "ZeroLocal",
+            Op::AllocLocalArray => "AllocLocalArray",
+            Op::LoadIndex => "LoadIndex",
+            Op::StoreIndex => "StoreIndex",
+            Op::Bin => "Bin",
+            Op::Neg => "Neg",
+            Op::Not => "Not",
+            Op::CastInt => "CastInt",
+            Op::CastFloat => "CastFloat",
+            Op::BumpCmp => "BumpCmp",
+            Op::Jump => "Jump",
+            Op::JumpIfFalse => "JumpIfFalse",
+            Op::AndCheck => "AndCheck",
+            Op::OrCheck => "OrCheck",
+            Op::ToBool => "ToBool",
+            Op::Pop => "Pop",
+            Op::LoopEnter => "LoopEnter",
+            Op::LoopTrip => "LoopTrip",
+            Op::LoopExit => "LoopExit",
+            Op::Call => "Call",
+            Op::Builtin1 => "Builtin1",
+            Op::Builtin2 => "Builtin2",
+            Op::Return => "Return",
+            Op::Trap => "Trap",
+            Op::LoadIndexLocal => "LoadIndexLocal",
+            Op::StoreIndexLocal => "StoreIndexLocal",
+            Op::LoadIndexBin => "LoadIndexBin",
+            Op::BinConstInt => "BinConstInt",
+            Op::CompoundLocalConst => "CompoundLocalConst",
+            Op::CmpConstJump => "CmpConstJump",
+            Op::BinLocal => "BinLocal",
+        }
+    }
+
+    /// Static cost estimate per dispatch, in abstract cycles.
+    ///
+    /// Deliberately *not* a measurement (a clock would make reports
+    /// schedule-dependent): a coarse model — stack/slot traffic ≈1,
+    /// arithmetic ≈3, indexed access ≈6 (bounds check + footprint
+    /// attribution), loop bookkeeping ≈4, calls ≈10, libm builtins ≈20 —
+    /// that weights the ranking toward where the VM really spends time.
+    pub fn weight(self) -> u64 {
+        match self {
+            Op::ConstInt
+            | Op::ConstFloat
+            | Op::LoadLocal
+            | Op::StoreLocal
+            | Op::StoreLocalCoerce
+            | Op::LoadGlobal
+            | Op::StoreGlobal
+            | Op::ZeroLocal
+            | Op::Pop
+            | Op::Jump
+            | Op::JumpIfFalse
+            | Op::ToBool
+            | Op::BumpCmp
+            | Op::Trap => 1,
+            Op::Bin
+            | Op::BinConstInt
+            | Op::BinLocal
+            | Op::Neg
+            | Op::Not
+            | Op::CastInt
+            | Op::CastFloat
+            | Op::AndCheck
+            | Op::OrCheck
+            | Op::CmpConstJump
+            | Op::CompoundLocal
+            | Op::CompoundGlobal
+            | Op::CompoundLocalConst => 3,
+            Op::MacLocal => 5,
+            Op::LoadIndex
+            | Op::StoreIndex
+            | Op::LoadIndexLocal
+            | Op::StoreIndexLocal => 6,
+            Op::LoadIndexBin => 7,
+            Op::LoopEnter | Op::LoopTrip | Op::LoopExit => 4,
+            Op::Call | Op::Return => 10,
+            Op::AllocLocalArray => 20,
+            Op::Builtin1 | Op::Builtin2 => 20,
+        }
+    }
+}
+
+/// The superinstruction an adjacent `(prev, next)` pair fuses into, if
+/// the `resolve.rs` peepholes cover it. This is the discovery table the
+/// pair report annotates: a hot *unannotated* pair is a fusion
+/// candidate; a hot *annotated* pair measured on the baseline encoding
+/// is the justification for the peephole that removes it.
+pub fn fused_by(prev: Op, next: Op) -> Option<&'static str> {
+    Some(match (prev, next) {
+        (Op::LoadLocal, Op::LoadIndex) => "LoadIndexLocal",
+        (Op::LoadLocal, Op::StoreIndex) => "StoreIndexLocal",
+        (Op::LoadIndex, Op::Bin) => "LoadIndexBin",
+        (Op::ConstInt, Op::Bin) => "BinConstInt",
+        (Op::ConstInt, Op::CompoundLocal) => "CompoundLocalConst",
+        (Op::BinConstInt, Op::JumpIfFalse) => "CmpConstJump",
+        (Op::Bin, Op::CompoundLocal) => "MacLocal",
+        (Op::LoadLocal, Op::Bin) => "BinLocal (vm-regs)",
+        _ => return None,
+    })
+}
+
+/// Per-opcode and per-adjacent-pair dispatch counters.
+///
+/// `record` is the only hot-path entry point: one counter bump, one
+/// pair-matrix bump, no allocation, no clock. Everything else
+/// (ranking, cycle estimates, JSON) happens at report time.
+#[derive(Debug, Clone)]
+pub struct OpProfiler {
+    counts: Vec<u64>,
+    /// Row-major `N_OPS × N_OPS` matrix: `pairs[prev * N_OPS + next]`.
+    pairs: Vec<u64>,
+    /// Previously recorded opcode index; `N_OPS` = none yet.
+    prev: usize,
+    dispatches: u64,
+}
+
+impl Default for OpProfiler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OpProfiler {
+    pub fn new() -> Self {
+        OpProfiler {
+            counts: vec![0; N_OPS],
+            pairs: vec![0; N_OPS * N_OPS],
+            prev: N_OPS,
+            dispatches: 0,
+        }
+    }
+
+    /// Record one dispatched instruction.
+    #[inline]
+    pub fn record(&mut self, op: Op) {
+        let i = op as usize;
+        self.counts[i] += 1;
+        self.dispatches += 1;
+        if self.prev < N_OPS {
+            self.pairs[self.prev * N_OPS + i] += 1;
+        }
+        self.prev = i;
+    }
+
+    /// Total instructions recorded (== the VM's dispatch count).
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches
+    }
+
+    /// Dispatches of one opcode.
+    pub fn count(&self, op: Op) -> u64 {
+        self.counts[op as usize]
+    }
+
+    /// Dispatches of `next` immediately after `prev`.
+    pub fn pair(&self, prev: Op, next: Op) -> u64 {
+        self.pairs[prev as usize * N_OPS + next as usize]
+    }
+
+    /// Sum over the pair matrix (== `dispatches - 1` for any non-empty
+    /// single profiler, since only the first record has no predecessor).
+    pub fn pair_total(&self) -> u64 {
+        self.pairs.iter().sum()
+    }
+
+    /// Build the ranked report. `top_pairs` bounds the pair list (the
+    /// full matrix is mostly zeros); opcode rows with zero count are
+    /// dropped. Ordering is count-descending, ties broken by opcode
+    /// index, so the report is deterministic.
+    pub fn report(&self, top_pairs: usize) -> OpReport {
+        let mut ops: Vec<OpStat> = Op::ALL
+            .iter()
+            .filter(|op| self.count(**op) > 0)
+            .map(|op| OpStat {
+                op: *op,
+                count: self.count(*op),
+                est_cycles: self.count(*op) * op.weight(),
+            })
+            .collect();
+        ops.sort_by(|a, b| {
+            b.count
+                .cmp(&a.count)
+                .then((a.op as usize).cmp(&(b.op as usize)))
+        });
+
+        let mut pairs: Vec<PairStat> = Vec::new();
+        for prev in Op::ALL {
+            for next in Op::ALL {
+                let count = self.pair(prev, next);
+                if count > 0 {
+                    pairs.push(PairStat {
+                        prev,
+                        next,
+                        count,
+                        fused_as: fused_by(prev, next),
+                    });
+                }
+            }
+        }
+        pairs.sort_by(|a, b| {
+            b.count.cmp(&a.count).then(
+                (a.prev as usize, a.next as usize)
+                    .cmp(&(b.prev as usize, b.next as usize)),
+            )
+        });
+        pairs.truncate(top_pairs);
+
+        OpReport {
+            dispatches: self.dispatches,
+            est_cycles: ops.iter().map(|s| s.est_cycles).sum(),
+            ops,
+            pairs,
+        }
+    }
+}
+
+/// One ranked opcode row.
+#[derive(Debug, Clone)]
+pub struct OpStat {
+    pub op: Op,
+    pub count: u64,
+    /// `count × weight` under the static cost model.
+    pub est_cycles: u64,
+}
+
+/// One ranked adjacent-pair row.
+#[derive(Debug, Clone)]
+pub struct PairStat {
+    pub prev: Op,
+    pub next: Op,
+    pub count: u64,
+    /// Superinstruction that fuses this pair, if a peephole exists.
+    pub fused_as: Option<&'static str>,
+}
+
+/// Deterministic, rendered view of one profiled run.
+#[derive(Debug, Clone)]
+pub struct OpReport {
+    pub dispatches: u64,
+    /// Total estimated cycles under the static model.
+    pub est_cycles: u64,
+    /// Opcodes by descending count (zero rows dropped).
+    pub ops: Vec<OpStat>,
+    /// Hottest adjacent pairs by descending count.
+    pub pairs: Vec<PairStat>,
+}
+
+impl OpReport {
+    /// JSON form (stable key order via the `Json` object's `BTreeMap`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dispatches", Json::Num(self.dispatches as f64)),
+            ("est_cycles", Json::Num(self.est_cycles as f64)),
+            (
+                "ops",
+                Json::Arr(
+                    self.ops
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("op", Json::Str(s.op.name().into())),
+                                ("count", Json::Num(s.count as f64)),
+                                (
+                                    "est_cycles",
+                                    Json::Num(s.est_cycles as f64),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "pairs",
+                Json::Arr(
+                    self.pairs
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("prev", Json::Str(p.prev.name().into())),
+                                ("next", Json::Str(p.next.name().into())),
+                                ("count", Json::Num(p.count as f64)),
+                                (
+                                    "fused_as",
+                                    match p.fused_as {
+                                        Some(n) => Json::Str(n.into()),
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human-readable table (the `repro vmprofile` text output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "dispatches {}   est cycles {}\n",
+            self.dispatches, self.est_cycles
+        ));
+        out.push_str("  rank  opcode               count      share  est.cycles\n");
+        for (i, s) in self.ops.iter().enumerate() {
+            let share = if self.dispatches == 0 {
+                0.0
+            } else {
+                100.0 * s.count as f64 / self.dispatches as f64
+            };
+            out.push_str(&format!(
+                "  {:>4}  {:<20} {:>9}  {:>8.2}%  {:>10}\n",
+                i + 1,
+                s.op.name(),
+                s.count,
+                share,
+                s.est_cycles
+            ));
+        }
+        if !self.pairs.is_empty() {
+            out.push_str("  top adjacent pairs:\n");
+            for (i, p) in self.pairs.iter().enumerate() {
+                out.push_str(&format!(
+                    "  {:>4}  {} -> {}  x{}{}\n",
+                    i + 1,
+                    p.prev.name(),
+                    p.next.name(),
+                    p.count,
+                    match p.fused_as {
+                        Some(n) => format!("   [fused as {n}]"),
+                        None => String::new(),
+                    }
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_covers_every_discriminant_in_order() {
+        assert_eq!(Op::ALL.len(), N_OPS);
+        for (i, op) in Op::ALL.iter().enumerate() {
+            assert_eq!(*op as usize, i, "{op:?} out of order");
+        }
+    }
+
+    #[test]
+    fn record_counts_and_pairs() {
+        let mut p = OpProfiler::new();
+        p.record(Op::LoadLocal);
+        p.record(Op::LoadIndex);
+        p.record(Op::Bin);
+        p.record(Op::LoadIndex);
+        assert_eq!(p.dispatches(), 4);
+        assert_eq!(p.count(Op::LoadIndex), 2);
+        assert_eq!(p.pair(Op::LoadLocal, Op::LoadIndex), 1);
+        assert_eq!(p.pair(Op::LoadIndex, Op::Bin), 1);
+        assert_eq!(p.pair(Op::Bin, Op::LoadIndex), 1);
+        assert_eq!(p.pair_total(), p.dispatches() - 1);
+    }
+
+    #[test]
+    fn report_ranks_by_count_and_annotates_fusions() {
+        let mut p = OpProfiler::new();
+        for _ in 0..3 {
+            p.record(Op::LoadLocal);
+            p.record(Op::LoadIndex);
+        }
+        p.record(Op::Bin);
+        let r = p.report(8);
+        assert_eq!(r.dispatches, 7);
+        assert_eq!(r.ops[0].count, 3);
+        let hot = &r.pairs[0];
+        assert_eq!((hot.prev, hot.next), (Op::LoadLocal, Op::LoadIndex));
+        assert_eq!(hot.fused_as, Some("LoadIndexLocal"));
+        // 3×LoadLocal(1) + 3×LoadIndex(6) + 1×Bin(3)
+        assert_eq!(r.est_cycles, 3 + 18 + 3);
+    }
+
+    #[test]
+    fn report_is_deterministic_and_serializes() {
+        let mut a = OpProfiler::new();
+        let mut b = OpProfiler::new();
+        for p in [&mut a, &mut b] {
+            for _ in 0..5 {
+                p.record(Op::ConstInt);
+                p.record(Op::Bin);
+                p.record(Op::JumpIfFalse);
+            }
+        }
+        let ja = a.report(16).to_json().to_string();
+        let jb = b.report(16).to_json().to_string();
+        assert_eq!(ja, jb);
+        assert!(ja.contains("\"fused_as\":\"BinConstInt\""), "{ja}");
+        let parsed = Json::parse(&ja).unwrap();
+        assert_eq!(parsed.to_string(), ja);
+    }
+
+    #[test]
+    fn fusion_table_matches_the_emitted_peepholes() {
+        assert_eq!(fused_by(Op::LoadIndex, Op::Bin), Some("LoadIndexBin"));
+        assert_eq!(
+            fused_by(Op::ConstInt, Op::CompoundLocal),
+            Some("CompoundLocalConst")
+        );
+        assert_eq!(
+            fused_by(Op::BinConstInt, Op::JumpIfFalse),
+            Some("CmpConstJump")
+        );
+        assert_eq!(fused_by(Op::Bin, Op::CompoundLocal), Some("MacLocal"));
+        assert_eq!(fused_by(Op::Jump, Op::Jump), None);
+    }
+
+    #[test]
+    fn render_mentions_the_hot_opcode() {
+        let mut p = OpProfiler::new();
+        p.record(Op::MacLocal);
+        let text = p.report(4).render();
+        assert!(text.contains("MacLocal"), "{text}");
+        assert!(text.contains("dispatches 1"), "{text}");
+    }
+}

@@ -34,13 +34,66 @@ use super::MiniCError;
 /// Maximum supported array rank (fixed index buffer in the VM).
 pub const MAX_RANK: usize = 4;
 
-/// Lower a parsed program to a [`Module`].
+/// Encoding options for [`compile_with`] — the PGO loop's knobs.
+///
+/// The peepholes fuse measured-hot adjacent instruction pairs (see
+/// `minic::profile` and `repro vmprofile`) into superinstructions.
+/// Every fusion is in-place (the pair's first instruction is
+/// overwritten when the second is emitted), so code length and jump
+/// targets never change and the baseline/fused encodings stay
+/// observably identical — the differential fuzzer holds across all
+/// option combinations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResolveOpts {
+    /// Fuse hot adjacent pairs into superinstructions
+    /// (`LoadIndexLocal`, `LoadIndexBin`, `BinConstInt`,
+    /// `CompoundLocalConst`, `CmpConstJump`, `StoreIndexLocal`).
+    pub fuse_pairs: bool,
+    /// Register-style operand encoding experiment (`BinLocal`): binary
+    /// operators read their rhs straight from a frame slot. Off by
+    /// default; opt in per call or build with `--features vm-regs`.
+    pub reg_encoding: bool,
+}
+
+impl Default for ResolveOpts {
+    fn default() -> Self {
+        ResolveOpts {
+            fuse_pairs: true,
+            reg_encoding: cfg!(feature = "vm-regs"),
+        }
+    }
+}
+
+impl ResolveOpts {
+    /// The pre-PGO encoding (only the original `MacLocal` fusion).
+    /// This is the `vm-baseline` engine and the bench's control series.
+    pub fn baseline() -> Self {
+        ResolveOpts { fuse_pairs: false, reg_encoding: false }
+    }
+
+    /// All peepholes plus the register-encoding experiment
+    /// (the `vm-regs` engine).
+    pub fn regs() -> Self {
+        ResolveOpts { fuse_pairs: true, reg_encoding: true }
+    }
+}
+
+/// Lower a parsed program to a [`Module`] with the default encoding.
 ///
 /// Fails only where [`super::Interp::new`] would fail at construction
 /// (pointer-typed globals have no binding to allocate).
 pub fn compile(prog: &Program) -> Result<Module, MiniCError> {
+    compile_with(prog, &ResolveOpts::default())
+}
+
+/// Lower with explicit encoding options (see [`ResolveOpts`]).
+pub fn compile_with(
+    prog: &Program,
+    opts: &ResolveOpts,
+) -> Result<Module, MiniCError> {
     let mut c = Compiler {
         prog,
+        opts: *opts,
         names: Vec::new(),
         name_ids: FnvMap::default(),
         traps: Vec::new(),
@@ -138,6 +191,7 @@ fn assigned_var_names(prog: &Program) -> HashSet<String> {
 
 struct Compiler<'p> {
     prog: &'p Program,
+    opts: ResolveOpts,
     names: Vec<String>,
     name_ids: FnvMap<String, u32>,
     traps: Vec<String>,
@@ -269,8 +323,119 @@ impl FnCompiler {
             Instr::JumpIfFalse(_) => Instr::JumpIfFalse(target),
             Instr::AndCheck(_) => Instr::AndCheck(target),
             Instr::OrCheck(_) => Instr::OrCheck(target),
+            Instr::CmpConstJump { op, v, .. } => {
+                Instr::CmpConstJump { op, v, target }
+            }
             other => unreachable!("patching {other:?}"),
         };
+    }
+
+    // ---- superinstruction peepholes (§PGO) ----
+    //
+    // Each helper overwrites the just-emitted first member of a
+    // measured-hot pair in place of pushing the second, so fusion never
+    // changes code length or invalidates a jump target. Soundness: the
+    // overwritten instruction is always the final instruction of the
+    // sub-expression emitted immediately before, and no branch target
+    // can point *at* it (targets only ever land on statement/condition
+    // boundaries — loop tops, post-body joins, `&&`/`||` joins), so no
+    // control path can enter between the fused halves.
+
+    /// `Bin(op)`, fusing a trailing `LoadIndex` / `ConstInt` /
+    /// (under `reg_encoding`) `LoadLocal` rhs.
+    fn emit_bin(&mut self, c: &Compiler, op: BinOp) {
+        if c.opts.fuse_pairs {
+            match self.code.last().copied() {
+                Some(Instr::LoadIndex { base, rank, name }) => {
+                    *self.code.last_mut().expect("peephole") =
+                        Instr::LoadIndexBin { base, rank, name, op };
+                    return;
+                }
+                Some(Instr::ConstInt(v)) => {
+                    *self.code.last_mut().expect("peephole") =
+                        Instr::BinConstInt(op, v);
+                    return;
+                }
+                Some(Instr::LoadLocal(slot)) if c.opts.reg_encoding => {
+                    *self.code.last_mut().expect("peephole") =
+                        Instr::BinLocal { slot, op };
+                    return;
+                }
+                _ => {}
+            }
+        }
+        self.code.push(Instr::Bin(op));
+    }
+
+    /// `CompoundLocal(slot, op)`, fusing a trailing small-constant rhs
+    /// (`i++`, `i += c`).
+    fn emit_compound_local(&mut self, c: &Compiler, slot: u16, op: BinOp) {
+        if c.opts.fuse_pairs {
+            if let Some(Instr::ConstInt(v)) = self.code.last().copied() {
+                if let Ok(v) = i32::try_from(v) {
+                    *self.code.last_mut().expect("peephole") =
+                        Instr::CompoundLocalConst { slot, op, v };
+                    return;
+                }
+            }
+        }
+        self.code.push(Instr::CompoundLocal(slot, op));
+    }
+
+    /// `LoadIndex`, fusing a trailing `LoadLocal` innermost index.
+    fn emit_load_index(
+        &mut self,
+        c: &Compiler,
+        base: Storage,
+        rank: u8,
+        name: u32,
+    ) {
+        if c.opts.fuse_pairs {
+            if let Some(Instr::LoadLocal(idx)) = self.code.last().copied() {
+                *self.code.last_mut().expect("peephole") =
+                    Instr::LoadIndexLocal { base, rank, idx, name };
+                return;
+            }
+        }
+        self.code.push(Instr::LoadIndex { base, rank, name });
+    }
+
+    /// `StoreIndex`, fusing a trailing `LoadLocal` innermost index.
+    fn emit_store_index(
+        &mut self,
+        c: &Compiler,
+        base: Storage,
+        rank: u8,
+        name: u32,
+        op: AssignOp,
+    ) {
+        if c.opts.fuse_pairs {
+            if let Some(Instr::LoadLocal(idx)) = self.code.last().copied() {
+                *self.code.last_mut().expect("peephole") =
+                    Instr::StoreIndexLocal { base, rank, idx, name, op };
+                return;
+            }
+        }
+        self.code.push(Instr::StoreIndex { base, rank, name, op });
+    }
+
+    /// Conditional branch for an `if`/loop condition, fusing a trailing
+    /// small-constant compare (`i < N`) into one dispatch. Returns the
+    /// index to [`Self::patch`] once the target is known.
+    fn emit_jump_if_false(&mut self, c: &Compiler) -> usize {
+        if c.opts.fuse_pairs {
+            if let Some(Instr::BinConstInt(op, v)) = self.code.last().copied()
+            {
+                if let Ok(v) = i32::try_from(v) {
+                    let at = self.code.len() - 1;
+                    self.code[at] = Instr::CmpConstJump { op, v, target: 0 };
+                    return at;
+                }
+            }
+        }
+        let at = self.code.len();
+        self.code.push(Instr::JumpIfFalse(0));
+        at
     }
 
     fn trap(&mut self, c: &mut Compiler, msg: String) {
@@ -302,8 +467,7 @@ impl FnCompiler {
             } => {
                 self.expr(c, cond);
                 self.code.push(Instr::BumpCmp);
-                let jf = self.code.len();
-                self.code.push(Instr::JumpIfFalse(0));
+                let jf = self.emit_jump_if_false(c);
                 self.block(c, then_branch);
                 let jend = self.code.len();
                 self.code.push(Instr::Jump(0));
@@ -329,9 +493,7 @@ impl FnCompiler {
                     Some(cexpr) => {
                         self.code.push(Instr::BumpCmp);
                         self.expr(c, cexpr);
-                        let jf = self.code.len();
-                        self.code.push(Instr::JumpIfFalse(0));
-                        Some(jf)
+                        Some(self.emit_jump_if_false(c))
                     }
                     None => None,
                 };
@@ -352,8 +514,7 @@ impl FnCompiler {
                 let top = self.here();
                 self.code.push(Instr::BumpCmp);
                 self.expr(c, cond);
-                let jf = self.code.len();
-                self.code.push(Instr::JumpIfFalse(0));
+                let jf = self.emit_jump_if_false(c);
                 self.code.push(Instr::LoopTrip(*id));
                 self.block(c, body);
                 self.code.push(Instr::Jump(top));
@@ -452,12 +613,10 @@ impl FnCompiler {
         self.expr(c, value);
         match target {
             LValue::Var(name) => match self.resolve(c, name) {
-                Some(Storage::Local(slot)) => {
-                    self.code.push(match compound_op(op) {
-                        None => Instr::StoreLocal(slot),
-                        Some(bin) => Instr::CompoundLocal(slot, bin),
-                    });
-                }
+                Some(Storage::Local(slot)) => match compound_op(op) {
+                    None => self.code.push(Instr::StoreLocal(slot)),
+                    Some(bin) => self.emit_compound_local(c, slot, bin),
+                },
                 Some(Storage::Global(slot)) => {
                     self.code.push(match compound_op(op) {
                         None => Instr::StoreGlobal(slot),
@@ -487,12 +646,13 @@ impl FnCompiler {
                 }
                 let name = c.intern(base);
                 match self.resolve(c, base) {
-                    Some(storage) => self.code.push(Instr::StoreIndex {
-                        base: storage,
-                        rank: indices.len() as u8,
+                    Some(storage) => self.emit_store_index(
+                        c,
+                        storage,
+                        indices.len() as u8,
                         name,
                         op,
-                    }),
+                    ),
                     None => {
                         self.trap(c, format!("undeclared `{base}`"));
                     }
@@ -534,11 +694,12 @@ impl FnCompiler {
                 }
                 let name = c.intern(base);
                 match self.resolve(c, base) {
-                    Some(storage) => self.code.push(Instr::LoadIndex {
-                        base: storage,
-                        rank: indices.len() as u8,
+                    Some(storage) => self.emit_load_index(
+                        c,
+                        storage,
+                        indices.len() as u8,
                         name,
-                    }),
+                    ),
                     None => self.trap(c, format!("undeclared `{base}`")),
                 }
             }
@@ -561,7 +722,7 @@ impl FnCompiler {
             Expr::Bin { op, lhs, rhs } => {
                 self.expr(c, lhs);
                 self.expr(c, rhs);
-                self.code.push(Instr::Bin(*op));
+                self.emit_bin(c, *op);
             }
             Expr::Un { op, operand } => {
                 self.expr(c, operand);
@@ -657,14 +818,22 @@ mod tests {
     use super::*;
     use crate::minic::parse;
 
+    fn main_code(m: &Module) -> &[Instr] {
+        &m.funcs[m.func("main").unwrap() as usize].code
+    }
+
     #[test]
     fn compiles_minimal_program() {
         let prog = parse("int main() { return 1 + 2; }").unwrap();
         let m = compile(&prog).unwrap();
         assert_eq!(m.funcs.len(), 2); // main + @init
         assert!(m.func("main").is_some());
-        let main = &m.funcs[m.func("main").unwrap() as usize];
-        assert!(main.code.contains(&Instr::Bin(BinOp::Add)));
+        // The constant rhs fuses: `1 + 2` is one dispatch after the
+        // lhs push. The baseline encoding keeps the plain pair.
+        assert!(main_code(&m).contains(&Instr::BinConstInt(BinOp::Add, 2)));
+        let mb = compile_with(&prog, &ResolveOpts::baseline()).unwrap();
+        assert!(main_code(&mb).contains(&Instr::Bin(BinOp::Add)));
+        assert!(main_code(&mb).contains(&Instr::ConstInt(2)));
     }
 
     #[test]
@@ -777,5 +946,211 @@ mod tests {
     fn pointer_global_rejected_at_compile() {
         let prog = parse("float *p;\nint main() { return 0; }").unwrap();
         assert!(compile(&prog).is_err());
+    }
+
+    // ---- superinstruction peepholes (§PGO) ----
+
+    #[test]
+    fn local_index_fuses_into_index_ops() {
+        let prog = parse(
+            "#define N 4\nfloat a[N]; float b[N][N];\n\
+             int main() {\n\
+                 for (int i = 0; i < N; i++) {\n\
+                     a[i] = b[i][i] + 1.0;\n\
+                 }\n\
+                 return 0;\n\
+             }",
+        )
+        .unwrap();
+        let m = compile(&prog).unwrap();
+        let code = main_code(&m);
+        // `b[i][i]`: the innermost `i` folds into the load; the outer
+        // index still pops. `a[i] = ...`: the store's index folds too —
+        // but its rhs ends in `+ 1.0` (ConstFloat stays unfused), so
+        // the store fusion only fires where the last instruction before
+        // it is the index load. Check both shapes by opcode presence:
+        assert!(code.iter().any(|i| matches!(
+            i,
+            Instr::LoadIndexLocal { rank: 2, .. }
+        )));
+        assert!(!code.iter().any(|i| matches!(i, Instr::LoadIndex { .. })));
+        // Baseline keeps the plain pair everywhere.
+        let mb = compile_with(&prog, &ResolveOpts::baseline()).unwrap();
+        let cb = main_code(&mb);
+        assert!(cb.iter().any(|i| matches!(i, Instr::LoadIndex { .. })));
+        assert!(!cb
+            .iter()
+            .any(|i| matches!(i, Instr::LoadIndexLocal { .. })));
+    }
+
+    #[test]
+    fn store_with_local_index_fuses() {
+        // Stores emit rhs first, then indices: `a[i] = 2;` lowers to
+        // ConstInt, LoadLocal(i), StoreIndex — the trailing index load
+        // fuses into the store.
+        let prog = parse(
+            "#define N 4\nfloat a[N];\n\
+             int main() {\n\
+                 for (int i = 0; i < N; i++) { a[i] = 2; }\n\
+                 return 0;\n\
+             }",
+        )
+        .unwrap();
+        let m = compile(&prog).unwrap();
+        assert!(main_code(&m).iter().any(|i| matches!(
+            i,
+            Instr::StoreIndexLocal { rank: 1, .. }
+        )));
+        assert!(!main_code(&m)
+            .iter()
+            .any(|i| matches!(i, Instr::StoreIndex { .. })));
+    }
+
+    #[test]
+    fn index_load_feeding_operator_fuses_to_load_index_bin() {
+        // `x[n + k]` leaves a genuine LoadIndex (computed index), and
+        // the multiply after it fuses into LoadIndexBin — the
+        // index-chain candidate the pair profile surfaces first.
+        let prog = parse(
+            "#define N 8\nfloat h[N]; float x[N];\n\
+             int main() {\n\
+                 float acc = 0.0;\n\
+                 for (int n = 0; n < 4; n++) {\n\
+                     acc = acc + h[n] * x[n + 1];\n\
+                 }\n\
+                 return (int) acc;\n\
+             }",
+        )
+        .unwrap();
+        let m = compile(&prog).unwrap();
+        assert!(main_code(&m).iter().any(|i| matches!(
+            i,
+            Instr::LoadIndexBin { op: BinOp::Mul, .. }
+        )));
+    }
+
+    #[test]
+    fn constant_compare_and_branch_fuse_in_loop_conditions() {
+        let prog = parse(
+            "#define N 8\n\
+             int main() {\n\
+                 int s = 0;\n\
+                 for (int i = 0; i < N; i++) { s += 2; }\n\
+                 return s;\n\
+             }",
+        )
+        .unwrap();
+        let m = compile(&prog).unwrap();
+        let code = main_code(&m);
+        // `i < N` + branch → CmpConstJump; `i++` and `s += 2` →
+        // CompoundLocalConst; no unfused remnants of either pair.
+        assert!(code.iter().any(|i| matches!(
+            i,
+            Instr::CmpConstJump { op: BinOp::Lt, v: 8, .. }
+        )));
+        assert_eq!(
+            code.iter()
+                .filter(|i| matches!(i, Instr::CompoundLocalConst { .. }))
+                .count(),
+            2
+        );
+        assert!(!code.iter().any(|i| matches!(i, Instr::JumpIfFalse(_))));
+        assert!(!code
+            .iter()
+            .any(|i| matches!(i, Instr::CompoundLocal(..))));
+        // The if-statement shape keeps a plain JumpIfFalse (BumpCmp
+        // sits between the compare and the branch).
+        let prog2 = parse(
+            "int main() { if (1 < 2) { return 1; } return 0; }",
+        )
+        .unwrap();
+        let m2 = compile(&prog2).unwrap();
+        assert!(main_code(&m2)
+            .iter()
+            .any(|i| matches!(i, Instr::JumpIfFalse(_))));
+    }
+
+    #[test]
+    fn oversized_constants_stay_unfused() {
+        // CompoundLocalConst/CmpConstJump carry i32 payloads; a bound
+        // beyond that range keeps the plain encoding.
+        let prog = parse(
+            "int main() {\n\
+                 int s = 0;\n\
+                 s += 5000000000;\n\
+                 if (s < 6000000000) { return 1; }\n\
+                 return 0;\n\
+             }",
+        )
+        .unwrap();
+        let m = compile(&prog).unwrap();
+        let code = main_code(&m);
+        assert!(code.iter().any(|i| matches!(i, Instr::CompoundLocal(..))));
+        assert!(code.contains(&Instr::BinConstInt(BinOp::Lt, 6_000_000_000)));
+        assert!(!code
+            .iter()
+            .any(|i| matches!(i, Instr::CompoundLocalConst { .. })));
+    }
+
+    #[test]
+    fn register_encoding_is_opt_in() {
+        let prog = parse(
+            "int main() { int a = 3; int b = 4; return a * b; }",
+        )
+        .unwrap();
+        let m = compile_with(&prog, &ResolveOpts::regs()).unwrap();
+        assert!(main_code(&m).iter().any(|i| matches!(
+            i,
+            Instr::BinLocal { op: BinOp::Mul, .. }
+        )));
+        // Off under the baseline encoding (and the default unless the
+        // `vm-regs` feature is enabled).
+        let mb = compile_with(&prog, &ResolveOpts::baseline()).unwrap();
+        assert!(!main_code(&mb)
+            .iter()
+            .any(|i| matches!(i, Instr::BinLocal { .. })));
+    }
+
+    #[test]
+    fn fused_and_baseline_encodings_keep_identical_layout_lengths() {
+        // In-place fusion must never change instruction count deltas
+        // caused by *jumps*: every function's jump targets must land on
+        // valid instruction boundaries in both encodings.
+        let prog = parse(
+            "#define N 6\nfloat a[N];\n\
+             int main() {\n\
+                 float s = 0.0;\n\
+                 for (int i = 0; i < N; i++) {\n\
+                     if (i % 2 == 0) { s += a[i] * 2.0; } else { s -= 1.0; }\n\
+                 }\n\
+                 while (s > 10.0) { s -= 3.0; }\n\
+                 return (int) s;\n\
+             }",
+        )
+        .unwrap();
+        for opts in [
+            ResolveOpts::default(),
+            ResolveOpts::baseline(),
+            ResolveOpts::regs(),
+        ] {
+            let m = compile_with(&prog, &opts).unwrap();
+            for f in &m.funcs {
+                for (at, i) in f.code.iter().enumerate() {
+                    let t = match i {
+                        Instr::Jump(t)
+                        | Instr::JumpIfFalse(t)
+                        | Instr::AndCheck(t)
+                        | Instr::OrCheck(t)
+                        | Instr::CmpConstJump { target: t, .. } => *t,
+                        _ => continue,
+                    };
+                    assert!(
+                        (t as usize) <= f.code.len(),
+                        "{opts:?}: jump at {at} to {t} escapes {}",
+                        f.name
+                    );
+                }
+            }
+        }
     }
 }

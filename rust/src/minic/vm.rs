@@ -15,13 +15,24 @@
 //!
 //! The tree-walker remains the *semantics oracle*; this VM is the
 //! default engine (see [`super::engine`]).
+//!
+//! The dispatch loop is profile-guided (§PGO): an optional
+//! [`OpProfiler`] — a no-op handle like `obs::Tracer`, attached only by
+//! the `*_profiled` constructors — counts per-opcode and adjacent-pair
+//! frequencies, and the match arms are ordered by the measured ranking
+//! from the bundled workloads. The pair report is what justified the
+//! fused superinstructions in [`super::resolve`]; every fused handler
+//! mirrors the unfused sequence's pops, counter bumps, and error order
+//! exactly (the differential fuzz harness enforces this).
 
 use std::collections::HashMap;
 
 use super::ast::{LoopId, Scalar, Type};
 use super::bytecode::{Builtin2, Instr, Module, Storage};
 use super::interp::{LoopProfile, OpCounts, Profile};
+use super::profile::{Op, OpProfiler};
 use super::resolve;
+use super::resolve::ResolveOpts;
 use super::value::{ArrayObj, ArrayRef, Value};
 use super::{BinOp, MiniCError, Program};
 
@@ -78,6 +89,12 @@ fn slot_as_i64(v: Slot) -> Result<i64, MiniCError> {
 
 fn truthy(v: Slot) -> Result<bool, MiniCError> {
     Ok(slot_as_f64(v)? != 0.0)
+}
+
+#[cold]
+#[inline(never)]
+fn step_limit_err() -> MiniCError {
+    MiniCError::Runtime(format!("step limit exceeded ({MAX_STEPS})"))
 }
 
 fn int_cmp(op: BinOp, a: i64, b: i64) -> bool {
@@ -138,6 +155,10 @@ pub struct Vm {
     locals: Vec<Slot>,
     frames: Vec<Frame>,
     steps: u64,
+    /// Instruction profiler, same no-op-handle pattern as
+    /// [`crate::obs::Tracer`]: `None` (the default) costs one
+    /// predictable branch per dispatch and nothing else.
+    profiler: Option<Box<OpProfiler>>,
 }
 
 impl Vm {
@@ -147,8 +168,40 @@ impl Vm {
         Self::from_module(resolve::compile(prog)?)
     }
 
+    /// Lower with explicit encoding options (see [`ResolveOpts`]).
+    pub fn new_with(
+        prog: &Program,
+        opts: &ResolveOpts,
+    ) -> Result<Self, MiniCError> {
+        Self::build(resolve::compile_with(prog, opts)?, false)
+    }
+
+    /// Like [`Vm::new`], with the instruction profiler attached.
+    pub fn new_profiled(prog: &Program) -> Result<Self, MiniCError> {
+        Self::build(resolve::compile(prog)?, true)
+    }
+
+    /// Profiled VM under explicit encoding options — the PGO loop's
+    /// measurement configuration (`repro vmprofile --baseline` runs
+    /// this over `ResolveOpts::baseline()` to surface fusion pairs).
+    pub fn new_profiled_with(
+        prog: &Program,
+        opts: &ResolveOpts,
+    ) -> Result<Self, MiniCError> {
+        Self::build(resolve::compile_with(prog, opts)?, true)
+    }
+
     /// Build a VM from an already-compiled module.
     pub fn from_module(module: Module) -> Result<Self, MiniCError> {
+        Self::build(module, false)
+    }
+
+    /// Like [`Vm::from_module`], with the instruction profiler attached.
+    pub fn from_module_profiled(module: Module) -> Result<Self, MiniCError> {
+        Self::build(module, true)
+    }
+
+    fn build(module: Module, profiled: bool) -> Result<Self, MiniCError> {
         let loop_count = module.loop_count as usize;
         let mut vm = Vm {
             arena: Vec::new(),
@@ -160,6 +213,7 @@ impl Vm {
             locals: Vec::with_capacity(256),
             frames: Vec::with_capacity(16),
             steps: 0,
+            profiler: profiled.then(|| Box::new(OpProfiler::new())),
             module,
         };
         for g in &vm.module.globals {
@@ -259,6 +313,18 @@ impl Vm {
         Some(self.globals[*idx as usize])
     }
 
+    /// Total instructions dispatched so far (all calls, including the
+    /// `@init` chunk). Equals the profiler's counter total — the
+    /// property test pins the two together.
+    pub fn dispatches(&self) -> u64 {
+        self.steps
+    }
+
+    /// The attached instruction profiler, when built profiled.
+    pub fn instr_profiler(&self) -> Option<&OpProfiler> {
+        self.profiler.as_deref()
+    }
+
     /// Assemble the public [`Profile`] (identical shape and contents to
     /// the tree-walker's: never-entered loops omitted).
     pub fn profile(&self) -> Profile {
@@ -344,18 +410,160 @@ impl Vm {
             let instr = self.module.funcs[func].code[pc];
             pc += 1;
             self.steps += 1;
-            if self.steps > MAX_STEPS {
-                return Err(MiniCError::Runtime(format!(
-                    "step limit exceeded ({MAX_STEPS})"
-                )));
+            // Profiler hook sits before the step guard so counter
+            // totals equal `steps` even on error paths (the property
+            // test relies on this).
+            if let Some(p) = self.profiler.as_deref_mut() {
+                p.record(Op::of(&instr));
             }
+            if self.steps > MAX_STEPS {
+                return Err(step_limit_err());
+            }
+            // Arm order follows the measured opcode ranking from
+            // `repro vmprofile` over the bundled workloads (hottest
+            // first, allocation/trap in the cold tail) so the common
+            // dispatch path stays in front.
             match instr {
-                Instr::ConstInt(v) => self.stack.push(Slot::Int(v)),
-                Instr::ConstFloat(v) => self.stack.push(Slot::Float(v)),
                 Instr::LoadLocal(s) => {
                     let v = self.locals[base + s as usize];
                     self.stack.push(v);
                 }
+                Instr::LoadIndexLocal { base: b, rank, idx, name } => {
+                    // Fused `LoadLocal(idx)` + `LoadIndex`: the unfused
+                    // pair pops the innermost index first (it was
+                    // pushed last), so the local slot is converted
+                    // first here for identical error order.
+                    let rank = rank as usize;
+                    let mut buf = [0i64; resolve::MAX_RANK];
+                    buf[rank - 1] =
+                        slot_as_i64(self.locals[base + idx as usize])?;
+                    for i in (0..rank - 1).rev() {
+                        let v = self.stack.pop().expect("index");
+                        buf[i] = slot_as_i64(v)?;
+                    }
+                    let out =
+                        self.load_index_value(b, base, name, &buf[..rank])?;
+                    self.stack.push(out);
+                }
+                Instr::CmpConstJump { op, v, target } => {
+                    // Fused `BinConstInt` + `JumpIfFalse`: one dispatch
+                    // for a whole `i < N`-and-branch.
+                    let l = self.stack.pop().expect("lhs");
+                    let out = self.apply_bin(op, l, Slot::Int(v as i64))?;
+                    if !truthy(out)? {
+                        pc = target as usize;
+                    }
+                }
+                Instr::CompoundLocalConst { slot, op, v } => {
+                    // Fused `ConstInt` + `CompoundLocal` (`i++`,
+                    // `s += 2`): rhs comes from the immediate.
+                    let old = self.locals[base + slot as usize];
+                    let new =
+                        self.apply_bin(op, old, Slot::Int(v as i64))?;
+                    self.locals[base + slot as usize] = new;
+                }
+                Instr::LoadIndexBin { base: b, rank, name, op } => {
+                    // Fused `LoadIndex` + `Bin`: the loaded element is
+                    // the operator's rhs (it was on top of the stack).
+                    let rank = rank as usize;
+                    let mut buf = [0i64; resolve::MAX_RANK];
+                    for i in (0..rank).rev() {
+                        let v = self.stack.pop().expect("index");
+                        buf[i] = slot_as_i64(v)?;
+                    }
+                    let r =
+                        self.load_index_value(b, base, name, &buf[..rank])?;
+                    let l = self.stack.pop().expect("lhs");
+                    let out = self.apply_bin(op, l, r)?;
+                    self.stack.push(out);
+                }
+                Instr::BinConstInt(op, v) => {
+                    // Fused `ConstInt` + `Bin`: rhs from the immediate.
+                    let l = self.stack.pop().expect("lhs");
+                    let out = self.apply_bin(op, l, Slot::Int(v))?;
+                    self.stack.push(out);
+                }
+                Instr::MacLocal(s) => {
+                    // Fused `Bin(Mul)` + `CompoundLocal(s, Add)`: same
+                    // pops, same typing/count rules, same error order.
+                    let r = self.stack.pop().expect("mac rhs");
+                    let l = self.stack.pop().expect("mac lhs");
+                    let prod = self.apply_bin(BinOp::Mul, l, r)?;
+                    let old = self.locals[base + s as usize];
+                    let new = self.apply_bin(BinOp::Add, old, prod)?;
+                    self.locals[base + s as usize] = new;
+                }
+                Instr::BinLocal { slot, op } => {
+                    // Fused `LoadLocal` + `Bin` (register-encoding
+                    // experiment): rhs read straight from its slot.
+                    let r = self.locals[base + slot as usize];
+                    let l = self.stack.pop().expect("lhs");
+                    let out = self.apply_bin(op, l, r)?;
+                    self.stack.push(out);
+                }
+                Instr::Bin(op) => {
+                    let r = self.stack.pop().expect("rhs");
+                    let l = self.stack.pop().expect("lhs");
+                    let v = self.apply_bin(op, l, r)?;
+                    self.stack.push(v);
+                }
+                Instr::LoadIndex { base: b, rank, name } => {
+                    let rank = rank as usize;
+                    let mut buf = [0i64; resolve::MAX_RANK];
+                    for i in (0..rank).rev() {
+                        let v = self.stack.pop().expect("index");
+                        buf[i] = slot_as_i64(v)?;
+                    }
+                    let out =
+                        self.load_index_value(b, base, name, &buf[..rank])?;
+                    self.stack.push(out);
+                }
+                Instr::StoreIndexLocal { base: b, rank, idx, name, op } => {
+                    // Fused `LoadLocal(idx)` + `StoreIndex`: innermost
+                    // index from the slot first (error-order parity),
+                    // then outer indices, then the stored value.
+                    let rank = rank as usize;
+                    let mut buf = [0i64; resolve::MAX_RANK];
+                    buf[rank - 1] =
+                        slot_as_i64(self.locals[base + idx as usize])?;
+                    for i in (0..rank - 1).rev() {
+                        let v = self.stack.pop().expect("index");
+                        buf[i] = slot_as_i64(v)?;
+                    }
+                    let rhs = self.stack.pop().expect("rhs");
+                    self.store_index_value(
+                        b,
+                        base,
+                        name,
+                        op,
+                        &buf[..rank],
+                        rhs,
+                    )?;
+                }
+                Instr::StoreIndex { base: b, rank, name, op } => {
+                    let rank = rank as usize;
+                    let mut buf = [0i64; resolve::MAX_RANK];
+                    for i in (0..rank).rev() {
+                        let v = self.stack.pop().expect("index");
+                        buf[i] = slot_as_i64(v)?;
+                    }
+                    let rhs = self.stack.pop().expect("rhs");
+                    self.store_index_value(
+                        b,
+                        base,
+                        name,
+                        op,
+                        &buf[..rank],
+                        rhs,
+                    )?;
+                }
+                Instr::BumpCmp => self.total.cmp += 1,
+                Instr::Jump(t) => pc = t as usize,
+                Instr::LoopTrip(id) => {
+                    self.loop_slots[id.0 as usize].trips += 1;
+                }
+                Instr::ConstInt(v) => self.stack.push(Slot::Int(v)),
+                Instr::ConstFloat(v) => self.stack.push(Slot::Float(v)),
                 Instr::StoreLocal(s) => {
                     let v = self.stack.pop().expect("store value");
                     self.locals[base + s as usize] = v;
@@ -377,16 +585,6 @@ impl Vm {
                     let new = self.apply_bin(op, old, rhs)?;
                     self.locals[base + s as usize] = new;
                 }
-                Instr::MacLocal(s) => {
-                    // Fused `Bin(Mul)` + `CompoundLocal(s, Add)`: same
-                    // pops, same typing/count rules, same error order.
-                    let r = self.stack.pop().expect("mac rhs");
-                    let l = self.stack.pop().expect("mac lhs");
-                    let prod = self.apply_bin(BinOp::Mul, l, r)?;
-                    let old = self.locals[base + s as usize];
-                    let new = self.apply_bin(BinOp::Add, old, prod)?;
-                    self.locals[base + s as usize] = new;
-                }
                 Instr::CompoundGlobal(s, op) => {
                     let rhs = self.stack.pop().expect("rhs");
                     let old = self.globals[s as usize];
@@ -399,71 +597,6 @@ impl Vm {
                     } else {
                         Slot::Float(0.0)
                     };
-                }
-                Instr::AllocLocalArray { slot, dims } => {
-                    let (elem, d) =
-                        self.module.array_dims[dims as usize].clone();
-                    self.arena.push(ArrayObj::new(elem, d));
-                    self.locals[base + slot as usize] =
-                        Slot::Arr((self.arena.len() - 1) as u32);
-                }
-                Instr::LoadIndex { base: b, rank, name } => {
-                    let rank = rank as usize;
-                    let mut buf = [0i64; resolve::MAX_RANK];
-                    for i in (0..rank).rev() {
-                        let v = self.stack.pop().expect("index");
-                        buf[i] = slot_as_i64(v)?;
-                    }
-                    self.total.i_op += rank as u64;
-                    let aidx = self.array_of(b, base, name)?;
-                    let arr = &self.arena[aidx];
-                    let flat = arr.flat_index(&buf[..rank])?;
-                    let v = arr.data[flat];
-                    let elem = arr.elem;
-                    self.count_read(name, elem.size_bytes());
-                    self.stack.push(if elem == Scalar::Int {
-                        Slot::Int(v as i64)
-                    } else {
-                        Slot::Float(v)
-                    });
-                }
-                Instr::StoreIndex { base: b, rank, name, op } => {
-                    let rank = rank as usize;
-                    let mut buf = [0i64; resolve::MAX_RANK];
-                    for i in (0..rank).rev() {
-                        let v = self.stack.pop().expect("index");
-                        buf[i] = slot_as_i64(v)?;
-                    }
-                    let rhs = self.stack.pop().expect("rhs");
-                    self.total.i_op += rank as u64;
-                    let aidx = self.array_of(b, base, name)?;
-                    let (elem_size, flat) = {
-                        let arr = &self.arena[aidx];
-                        (arr.elem.size_bytes(), arr.flat_index(&buf[..rank])?)
-                    };
-                    let new = match op {
-                        super::ast::AssignOp::Set => rhs,
-                        compound => {
-                            let old = Slot::Float(self.arena[aidx].data[flat]);
-                            self.count_read(name, elem_size);
-                            let bin = match compound {
-                                super::ast::AssignOp::AddSet => BinOp::Add,
-                                super::ast::AssignOp::SubSet => BinOp::Sub,
-                                super::ast::AssignOp::MulSet => BinOp::Mul,
-                                super::ast::AssignOp::DivSet => BinOp::Div,
-                                super::ast::AssignOp::Set => unreachable!(),
-                            };
-                            self.apply_bin(bin, old, rhs)?
-                        }
-                    };
-                    self.arena[aidx].data[flat] = slot_as_f64(new)?;
-                    self.count_write(name, elem_size);
-                }
-                Instr::Bin(op) => {
-                    let r = self.stack.pop().expect("rhs");
-                    let l = self.stack.pop().expect("lhs");
-                    let v = self.apply_bin(op, l, r)?;
-                    self.stack.push(v);
                 }
                 Instr::Neg => {
                     let v = self.stack.pop().expect("operand");
@@ -500,8 +633,6 @@ impl Vm {
                     let out = Slot::Float(slot_as_f64(v)?);
                     self.stack.push(out);
                 }
-                Instr::BumpCmp => self.total.cmp += 1,
-                Instr::Jump(t) => pc = t as usize,
                 Instr::JumpIfFalse(t) => {
                     let v = self.stack.pop().expect("cond");
                     if !truthy(v)? {
@@ -535,9 +666,6 @@ impl Vm {
                 Instr::LoopEnter(id) => {
                     self.loop_stack.push((id, self.total));
                     self.loop_slots[id.0 as usize].entries += 1;
-                }
-                Instr::LoopTrip(id) => {
-                    self.loop_slots[id.0 as usize].trips += 1;
                 }
                 Instr::LoopExit => {
                     let (id, snapshot) =
@@ -593,13 +721,85 @@ impl Vm {
                     base = self.frames.last().expect("frame").base as usize;
                     self.stack.push(v);
                 }
-                Instr::Trap(id) => {
-                    return Err(MiniCError::Runtime(
-                        self.module.traps[id as usize].clone(),
-                    ))
+                // ---- cold tail: setup and failure paths ----
+                Instr::AllocLocalArray { slot, dims } => {
+                    let (elem, d) =
+                        self.module.array_dims[dims as usize].clone();
+                    self.arena.push(ArrayObj::new(elem, d));
+                    self.locals[base + slot as usize] =
+                        Slot::Arr((self.arena.len() - 1) as u32);
                 }
+                Instr::Trap(id) => return Err(self.trap_err(id)),
             }
         }
+    }
+
+    /// Shared tail of `LoadIndex` / `LoadIndexLocal` / `LoadIndexBin`:
+    /// count the index ops, locate the array, read one element. The
+    /// callers differ only in where the indices come from.
+    #[inline]
+    fn load_index_value(
+        &mut self,
+        b: Storage,
+        base: usize,
+        name: u32,
+        idx: &[i64],
+    ) -> Result<Slot, MiniCError> {
+        self.total.i_op += idx.len() as u64;
+        let aidx = self.array_of(b, base, name)?;
+        let arr = &self.arena[aidx];
+        let flat = arr.flat_index(idx)?;
+        let v = arr.data[flat];
+        let elem = arr.elem;
+        self.count_read(name, elem.size_bytes());
+        Ok(if elem == Scalar::Int {
+            Slot::Int(v as i64)
+        } else {
+            Slot::Float(v)
+        })
+    }
+
+    /// Shared tail of `StoreIndex` / `StoreIndexLocal`: count the index
+    /// ops, locate the array, apply the (possibly compound) store.
+    #[inline]
+    fn store_index_value(
+        &mut self,
+        b: Storage,
+        base: usize,
+        name: u32,
+        op: super::ast::AssignOp,
+        idx: &[i64],
+        rhs: Slot,
+    ) -> Result<(), MiniCError> {
+        self.total.i_op += idx.len() as u64;
+        let aidx = self.array_of(b, base, name)?;
+        let (elem_size, flat) = {
+            let arr = &self.arena[aidx];
+            (arr.elem.size_bytes(), arr.flat_index(idx)?)
+        };
+        let new = match op {
+            super::ast::AssignOp::Set => rhs,
+            compound => {
+                let old = Slot::Float(self.arena[aidx].data[flat]);
+                self.count_read(name, elem_size);
+                let bin = match compound {
+                    super::ast::AssignOp::AddSet => BinOp::Add,
+                    super::ast::AssignOp::SubSet => BinOp::Sub,
+                    super::ast::AssignOp::MulSet => BinOp::Mul,
+                    super::ast::AssignOp::DivSet => BinOp::Div,
+                    super::ast::AssignOp::Set => unreachable!(),
+                };
+                self.apply_bin(bin, old, rhs)?
+            }
+        };
+        self.arena[aidx].data[flat] = slot_as_f64(new)?;
+        self.count_write(name, elem_size);
+        Ok(())
+    }
+
+    #[cold]
+    fn trap_err(&self, id: u32) -> MiniCError {
+        MiniCError::Runtime(self.module.traps[id as usize].clone())
     }
 
     fn enter_call(
@@ -977,5 +1177,214 @@ int main() {
             interp.global_scalar("acc"),
             vm.global_scalar("acc")
         );
+    }
+
+    /// Run `main` under the oracle and under every VM encoding
+    /// (default fused, baseline unfused, register experiment),
+    /// asserting identical results and profiles throughout.
+    fn diff_all_encodings(src: &str) -> Value {
+        let prog = parse(src).unwrap();
+        let mut interp = crate::minic::Interp::new(&prog).unwrap();
+        let vi = interp.call("main", &[]).unwrap();
+        let pi = interp.profile();
+        for opts in [
+            ResolveOpts::default(),
+            ResolveOpts::baseline(),
+            ResolveOpts::regs(),
+        ] {
+            let mut vm = Vm::new_with(&prog, &opts).unwrap();
+            let vv = vm.call("main", &[]).unwrap();
+            let pv = vm.profile();
+            assert_eq!(vi, vv, "{opts:?}");
+            assert_eq!(pi.total, pv.total, "{opts:?}");
+            assert_eq!(pi.loops.len(), pv.loops.len(), "{opts:?}");
+            for (id, lp) in &pi.loops {
+                let lv = pv.loop_profile(*id).unwrap();
+                assert_eq!(lp.entries, lv.entries, "{opts:?} {id}");
+                assert_eq!(lp.trips, lv.trips, "{opts:?} {id}");
+                assert_eq!(lp.ops, lv.ops, "{opts:?} {id}");
+                assert_eq!(lp.arrays_read, lv.arrays_read, "{opts:?} {id}");
+                assert_eq!(
+                    lp.arrays_written, lv.arrays_written,
+                    "{opts:?} {id}"
+                );
+            }
+        }
+        vi
+    }
+
+    /// Same as [`diff_all_encodings`] for a program whose `main`
+    /// faults: every engine must produce the oracle's error string and
+    /// stay reusable.
+    fn diff_all_encodings_err(src: &str) -> String {
+        let prog = parse(src).unwrap();
+        let ei = crate::minic::Interp::new(&prog)
+            .unwrap()
+            .call("main", &[])
+            .unwrap_err()
+            .to_string();
+        for opts in [
+            ResolveOpts::default(),
+            ResolveOpts::baseline(),
+            ResolveOpts::regs(),
+        ] {
+            let mut vm = Vm::new_with(&prog, &opts).unwrap();
+            let ev = vm.call("main", &[]).unwrap_err().to_string();
+            assert_eq!(ei, ev, "{opts:?}");
+            assert_eq!(vm.call("ok", &[]).unwrap(), Value::Int(1), "{opts:?}");
+        }
+        ei
+    }
+
+    #[test]
+    fn fused_index_ops_match_tree_walker_exactly() {
+        // Exercises every §PGO superinstruction the bundled workloads
+        // hit: StoreIndexLocal (rank 1 and 2), LoadIndexLocal (rank 1
+        // and 2), LoadIndexBin (computed innermost index feeding a
+        // multiply), BinConstInt, CompoundLocalConst, CmpConstJump,
+        // plus MacLocal alongside them.
+        let v = diff_all_encodings(
+            "
+#define R 3
+#define C 4
+float t[R][C]; float x[C];
+int main() {
+    float acc = 0.0;
+    int cnt = 0;
+    for (int r = 0; r < R; r++) {
+        for (int c = 0; c < C; c++) {
+            t[r][c] = r * 1.0 + c * 0.5;
+            x[c] = c * 0.25 + 1.0;
+        }
+    }
+    for (int r = 0; r < R; r++) {
+        for (int c = 1; c < C; c++) {
+            acc += t[r][c] * x[c - 1];
+            acc = acc + 2.0 * x[c - 1];
+            cnt += t[r][c] > 1.0;
+            t[r][c] += x[c] / 2.0;
+        }
+    }
+    return (int) acc + cnt;
+}",
+        );
+        assert!(matches!(v, Value::Int(_)));
+    }
+
+    #[test]
+    fn fused_int_element_loads_match_tree_walker() {
+        // Int-element arrays take the `Slot::Int` branch of the shared
+        // load tail; local arrays take the `Storage::Local` branch.
+        diff_all_encodings(
+            "
+#define N 8
+int g[N];
+int main() {
+    int m[N];
+    for (int i = 0; i < N; i++) { m[i] = i * 3; g[i] = m[i] - 1; }
+    int s = 0;
+    for (int i = 0; i < N; i++) {
+        s += g[i] * m[i];
+        s = s + 2 * g[i];
+        s += 5;
+    }
+    return s;
+}",
+        );
+    }
+
+    #[test]
+    fn fused_store_out_of_bounds_matches_unfused_error() {
+        diff_all_encodings_err(
+            "
+#define N 4
+float s[N];
+int main() { int i = 9; s[i] = 1.0; return 0; }
+int ok() { return 1; }",
+        );
+    }
+
+    #[test]
+    fn fused_load_out_of_bounds_matches_unfused_error() {
+        diff_all_encodings_err(
+            "
+#define N 4
+float s[N];
+int main() { int i = 7; float v = s[i]; return (int) v; }
+int ok() { return 1; }",
+        );
+    }
+
+    #[test]
+    fn cmp_const_jump_fault_matches_unfused_error() {
+        // `a < 4` on an array operand faults inside the fused
+        // compare-and-branch; the error string must match the oracle's
+        // unfused compare.
+        let e = diff_all_encodings_err(
+            "
+#define N 4
+float a[N];
+int main() { int n = 0; while (a < 4) { n++; } return n; }
+int ok() { return 1; }",
+        );
+        assert!(e.contains("array used as scalar"), "{e}");
+    }
+
+    #[test]
+    fn profiled_run_is_invisible_and_counters_total() {
+        let src = "
+#define N 16
+float a[N];
+int main() {
+    float acc = 0.0;
+    for (int i = 0; i < N; i++) { a[i] = i * 0.5; }
+    for (int i = 0; i < N; i++) { acc += a[i] * 2.0; }
+    return (int) acc;
+}";
+        let prog = parse(src).unwrap();
+        let mut plain = Vm::new(&prog).unwrap();
+        let vp = plain.call("main", &[]).unwrap();
+        assert!(plain.instr_profiler().is_none());
+
+        let mut prof = Vm::new_profiled(&prog).unwrap();
+        let vq = prof.call("main", &[]).unwrap();
+        // Profiling is observationally invisible: same value, same
+        // counters, same dispatch count.
+        assert_eq!(vp, vq);
+        assert_eq!(plain.profile().total, prof.profile().total);
+        assert_eq!(plain.dispatches(), prof.dispatches());
+
+        let p = prof.instr_profiler().unwrap();
+        assert_eq!(p.dispatches(), prof.dispatches());
+        let total: u64 = Op::ALL.iter().map(|op| p.count(*op)).sum();
+        assert_eq!(total, prof.dispatches());
+        assert_eq!(p.pair_total(), p.dispatches() - 1);
+        assert!(p.count(Op::CmpConstJump) > 0);
+        assert!(p.count(Op::CompoundLocalConst) > 0);
+        assert_eq!(p.count(Op::JumpIfFalse), 0);
+
+        // The baseline encoding profiles the unfused pairs instead —
+        // this is the measurement that justifies the fusions.
+        let mut b =
+            Vm::new_profiled_with(&prog, &ResolveOpts::baseline()).unwrap();
+        assert_eq!(b.call("main", &[]).unwrap(), vp);
+        let pb = b.instr_profiler().unwrap();
+        assert_eq!(pb.count(Op::CmpConstJump), 0);
+        assert!(pb.count(Op::JumpIfFalse) > 0);
+        assert!(pb.pair(Op::ConstInt, Op::CompoundLocal) > 0);
+    }
+
+    #[test]
+    fn profiler_counts_cover_error_paths() {
+        // The hook runs before the fault, so counter totals equal the
+        // dispatch count even when `main` errors.
+        let src = "
+int main() { int x = 0; for (int i = 0; i < 9; i++) { x += 3 / (4 - i); } return x; }";
+        let prog = parse(src).unwrap();
+        let mut vm = Vm::new_profiled(&prog).unwrap();
+        assert!(vm.call("main", &[]).is_err());
+        let p = vm.instr_profiler().unwrap();
+        let total: u64 = Op::ALL.iter().map(|op| p.count(*op)).sum();
+        assert_eq!(total, vm.dispatches());
     }
 }

@@ -1,0 +1,102 @@
+//! Golden-file tests pinning the bytecode encoding of every bundled
+//! workload, under both the fused §PGO encoding and the unfused
+//! baseline.
+//!
+//! The disassemblies live in `tests/golden/<app>[.baseline].disasm`.
+//! A missing golden is written on first run (bless-on-missing); after
+//! an intentional encoding change, re-bless with `UPDATE_GOLDEN=1
+//! cargo test --test bytecode_golden`. The structural assertions below
+//! hold regardless of blessing, so a fresh checkout still verifies the
+//! encoding shape.
+
+use std::fs;
+use std::path::PathBuf;
+
+use fpga_offload::minic::{parse, resolve, ResolveOpts};
+use fpga_offload::workloads;
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join(format!("{name}.disasm"))
+}
+
+fn disasm(app: &str, opts: &ResolveOpts) -> String {
+    let prog = parse(workloads::source(app).unwrap()).unwrap();
+    resolve::compile_with(&prog, opts)
+        .unwrap()
+        .disassemble()
+}
+
+fn check_golden(name: &str, text: &str) {
+    let path = golden_path(name);
+    if std::env::var("UPDATE_GOLDEN").is_ok() || !path.exists() {
+        fs::create_dir_all(path.parent().unwrap()).unwrap();
+        fs::write(&path, text).unwrap();
+        return;
+    }
+    let want = fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        want, text,
+        "bytecode disassembly for {name} changed — if intentional, \
+         re-bless with UPDATE_GOLDEN=1"
+    );
+}
+
+#[test]
+fn bundled_workload_encodings_are_pinned() {
+    for app in workloads::APPS {
+        check_golden(app, &disasm(app, &ResolveOpts::default()));
+        check_golden(
+            &format!("{app}.baseline"),
+            &disasm(app, &ResolveOpts::baseline()),
+        );
+    }
+}
+
+#[test]
+fn fused_encoding_contains_the_profiled_superinstructions() {
+    // tdfir's tap loops are the motivating profile: computed-index
+    // loads feeding multiplies, local-index loads/stores, counted
+    // loops with constant bounds and `i++` steps.
+    let t = disasm("tdfir", &ResolveOpts::default());
+    for op in [
+        "LoadIndexBin",
+        "LoadIndexLocal",
+        "StoreIndexLocal",
+        "CmpConstJump",
+        "CompoundLocalConst",
+    ] {
+        assert!(t.contains(op), "tdfir missing {op}:\n{t}");
+    }
+    // mriq's phase accumulation is the local-MAC shape.
+    let m = disasm("mriq", &ResolveOpts::default());
+    assert!(m.contains("MacLocal"), "mriq missing MacLocal:\n{m}");
+    // sobel's stencil hits the rank-2 index fusions.
+    let s = disasm("sobel", &ResolveOpts::default());
+    assert!(s.contains("rank=2"), "sobel missing rank-2 access:\n{s}");
+    assert!(s.contains("LoadIndexLocal"), "sobel missing LoadIndexLocal");
+}
+
+#[test]
+fn baseline_encoding_stays_free_of_pair_fusions() {
+    for app in workloads::APPS {
+        let d = disasm(app, &ResolveOpts::baseline());
+        for op in [
+            "LoadIndexLocal",
+            "StoreIndexLocal",
+            "LoadIndexBin",
+            "BinConstInt",
+            "CompoundLocalConst",
+            "CmpConstJump",
+            "BinLocal",
+        ] {
+            assert!(!d.contains(op), "{app} baseline contains {op}");
+        }
+        assert!(d.contains("JumpIfFalse"), "{app} baseline lost branches");
+    }
+    // MacLocal predates the §PGO pass and fires under every encoding.
+    let m = disasm("mriq", &ResolveOpts::baseline());
+    assert!(m.contains("MacLocal"), "mriq baseline lost MacLocal");
+}

@@ -14,12 +14,25 @@
 //! or both must fail with the same runtime error. This is the contract
 //! that lets the VM replace the interpreter on the profiling /
 //! verification hot paths without changing any downstream decision.
+//!
+//! Every program runs against the oracle under *three* VM encodings
+//! (§PGO): the default fused-superinstruction encoding, the unfused
+//! baseline, and the register-operand experiment — so each fused
+//! handler (`MacLocal`, `LoadIndexLocal`, `StoreIndexLocal`,
+//! `LoadIndexBin`, `BinConstInt`, `CompoundLocalConst`, `CmpConstJump`,
+//! `BinLocal`) is differentially pinned on the same corpus.
+//!
+//! Corpus size and seed come from `VM_FUZZ_CASES` / `VM_FUZZ_SEED`
+//! (defaults: 1000 programs, fixed seed — CI pins both for
+//! reproducible runs).
 
 use std::collections::BTreeSet;
 
 use fpga_offload::minic::ast::Stmt;
-use fpga_offload::minic::{parse, Engine, Interp, OpCounts, Value, Vm};
-use fpga_offload::util::prop::{check, holds, int_in, weighted, Outcome};
+use fpga_offload::minic::{
+    parse, Engine, Interp, OpCounts, ResolveOpts, Value, Vm,
+};
+use fpga_offload::util::prop::{int_in, weighted};
 use fpga_offload::util::rng::Pcg32;
 
 // ---- random program generator ----
@@ -46,6 +59,8 @@ float lim = 2.5;
 float mix(float u, float v) { return u * 0.5 + v * 0.25; }
 float clampf(float v) { return fmin(fmax(v, -8.0), 8.0); }
 int main() {
+    float lacc = 0.0;
+    int lcnt = 0;
 ";
 
 impl<'r> Gen<'r> {
@@ -60,7 +75,10 @@ impl<'r> Gen<'r> {
     }
 
     fn finish(mut self) -> String {
-        self.src.push_str("    return cnt;\n}\n");
+        // Fold the local accumulators into the result so divergence in
+        // any fused local-op handler is observable.
+        self.src
+            .push_str("    return cnt + lcnt + (int) lacc;\n}\n");
         self.src
     }
 
@@ -284,7 +302,7 @@ impl<'r> Gen<'r> {
 
     fn scalar_update(&mut self) {
         let ind = self.indent();
-        match self.rng.index(3) {
+        match self.rng.index(5) {
             0 => {
                 let e = self.fexpr(0);
                 let op = *self.rng.choose(&["=", "+=", "*="]);
@@ -293,6 +311,23 @@ impl<'r> Gen<'r> {
             1 => {
                 let e = self.iexpr(0);
                 self.src.push_str(&format!("{ind}cnt += {e};\n"));
+            }
+            2 => {
+                // Local MAC shape (fuses to `MacLocal`).
+                let a = self.fexpr(1);
+                let b = self.fexpr(1);
+                self.src
+                    .push_str(&format!("{ind}lacc += {a} * {b};\n"));
+            }
+            3 => {
+                // Local compound with an int immediate (fuses to
+                // `CompoundLocalConst`).
+                if self.rng.chance(0.5) {
+                    let c = int_in(self.rng, 1, 5);
+                    self.src.push_str(&format!("{ind}lcnt += {c};\n"));
+                } else {
+                    self.src.push_str(&format!("{ind}lcnt++;\n"));
+                }
             }
             _ => {
                 self.src.push_str(&format!("{ind}cnt++;\n"));
@@ -470,39 +505,74 @@ fn engines_agree(src: &str) -> Result<(), String> {
 
     let mut interp = Interp::new(&prog).map_err(|e| e.to_string())?;
     let oracle = observe(&mut interp, &globals);
-    let mut vm = Vm::new(&prog).map_err(|e| e.to_string())?;
-    let fast = observe(&mut vm, &globals);
 
-    match (oracle, fast) {
-        (Ok(a), Ok(b)) => match diff(&a, &b) {
-            None => Ok(()),
-            Some(d) => Err(d),
-        },
-        (Err(a), Err(b)) => {
-            if a == b {
-                Ok(())
-            } else {
-                Err(format!("different errors: {a:?} vs {b:?}"))
+    for (label, opts) in [
+        ("vm", ResolveOpts::default()),
+        ("vm-baseline", ResolveOpts::baseline()),
+        ("vm-regs", ResolveOpts::regs()),
+    ] {
+        let mut vm =
+            Vm::new_with(&prog, &opts).map_err(|e| e.to_string())?;
+        let fast = observe(&mut vm, &globals);
+        match (&oracle, fast) {
+            (Ok(a), Ok(b)) => {
+                if let Some(d) = diff(a, &b) {
+                    return Err(format!("{label}: {d}"));
+                }
+            }
+            (Err(a), Err(b)) => {
+                if *a != b {
+                    return Err(format!(
+                        "{label}: different errors: {a:?} vs {b:?}"
+                    ));
+                }
+            }
+            (Ok(_), Err(e)) => {
+                return Err(format!("{label} failed, oracle passed: {e}"))
+            }
+            (Err(e), Ok(_)) => {
+                return Err(format!("oracle failed, {label} passed: {e}"))
             }
         }
-        (Ok(_), Err(e)) => Err(format!("vm failed, oracle passed: {e}")),
-        (Err(e), Ok(_)) => Err(format!("oracle failed, vm passed: {e}")),
     }
+    Ok(())
 }
 
 // ---- tests ----
 
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 #[test]
 fn vm_matches_oracle_on_random_programs() {
-    // ≥100 random programs: identical results, globals, OpCounts, and
-    // per-loop profiles.
-    check(128, |rng| {
-        let src = gen_program(rng);
-        match engines_agree(&src) {
-            Ok(()) => Outcome::Pass,
-            Err(d) => holds(false, format!("{d}\n--- program ---\n{src}")),
+    // Seeded fuzz sweep: every program runs on the oracle and all
+    // three VM encodings; identical results, globals, OpCounts, and
+    // per-loop profiles (or identical errors) required throughout.
+    let cases = env_u64("VM_FUZZ_CASES", 1000);
+    let seed = env_u64("VM_FUZZ_SEED", 0x5eed_0000);
+    let mut divergences = Vec::new();
+    for case in 0..cases {
+        let mut rng = Pcg32::new(seed.wrapping_add(case), case);
+        let src = gen_program(&mut rng);
+        if let Err(d) = engines_agree(&src) {
+            divergences.push(format!(
+                "case {case} (seed {seed}): {d}\n--- program ---\n{src}"
+            ));
+            if divergences.len() >= 3 {
+                break;
+            }
         }
-    });
+    }
+    assert!(
+        divergences.is_empty(),
+        "{} divergence(s) over {cases} programs:\n\n{}",
+        divergences.len(),
+        divergences.join("\n\n")
+    );
 }
 
 #[test]
@@ -521,6 +591,12 @@ fn vm_matches_oracle_on_error_programs() {
         "int main() { int x = 0; return 3 / x; }",
         "int main() { int x = 0; return 3 % x; }",
         "#define N 4\nfloat a[N];\nint main() { return a[0][1]; }",
+        // Faults inside fused handlers: StoreIndexLocal going out of
+        // bounds mid-loop, LoadIndexLocal on a read, and an array
+        // operand inside a fused compare-and-branch.
+        "#define N 4\nfloat a[N];\nint main() { for (int i = 0; i < 9; i++) { a[i] = 1.0; } return 0; }",
+        "#define N 4\nfloat a[N];\nint main() { float s = 0.0; for (int i = 0; i < 9; i++) { s += a[i]; } return (int) s; }",
+        "#define N 4\nfloat a[N];\nint main() { int n = 0; while (a < 4) { n++; } return n; }",
     ] {
         engines_agree(src).unwrap_or_else(|d| panic!("{src}: {d}"));
     }

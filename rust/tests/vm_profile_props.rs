@@ -1,0 +1,157 @@
+//! Property tests for the §PGO opcode profiler.
+//!
+//! Three invariants lock the profiler down as a measurement tool:
+//!
+//!   1. Conservation: the per-opcode counters sum to exactly the number
+//!      of dispatched instructions, and adjacent-pair counts sum to
+//!      dispatches - 1 (every dispatch after the first closes a pair).
+//!   2. Determinism: the rendered report and its JSON form are
+//!      byte-identical across repeated runs and across thread
+//!      schedules — no wall-clock, no iteration-order leaks.
+//!   3. Invisibility: enabling the profiler changes nothing observable
+//!      (result value, loop profile, dispatch count), and a plain run
+//!      matches the tree-walking oracle.
+
+use fpga_offload::minic::{
+    parse, Interp, Op, ResolveOpts, Value, Vm,
+};
+use fpga_offload::workloads;
+
+/// A small fusion-rich program: counted loops (CmpConstJump,
+/// CompoundLocalConst), indexed loads/stores (LoadIndexLocal,
+/// StoreIndexLocal), computed indices feeding multiplies
+/// (LoadIndexBin), and a local MAC (MacLocal).
+const SRC: &str = "\
+float t[40];
+float acc;
+int main() {
+    for (int i = 0; i < 40; i++) {
+        t[i] = i * 0.25 - 3.0;
+    }
+    float lacc = 0.0;
+    for (int r = 0; r < 50; r++) {
+        for (int c = 1; c < 40; c++) {
+            lacc += t[c] * 0.5;
+            acc = acc + 2.0 * t[c - 1];
+            t[c] += 0.125;
+        }
+    }
+    acc += lacc;
+    return (int) acc;
+}
+";
+
+fn run_profiled(opts: &ResolveOpts) -> (Value, Vm, String, String) {
+    let prog = parse(SRC).unwrap();
+    let mut vm = Vm::new_profiled_with(&prog, opts).unwrap();
+    let v = vm.call("main", &[]).unwrap();
+    let report = vm
+        .instr_profiler()
+        .expect("profiled VM exposes its profiler")
+        .report(10);
+    let text = report.render();
+    let json = report.to_json().pretty();
+    (v, vm, text, json)
+}
+
+#[test]
+fn counters_conserve_dispatches() {
+    for opts in [
+        ResolveOpts::default(),
+        ResolveOpts::baseline(),
+        ResolveOpts::regs(),
+    ] {
+        let (_, vm, _, _) = run_profiled(&opts);
+        let p = vm.instr_profiler().unwrap();
+        let total: u64 = Op::ALL.iter().map(|&op| p.count(op)).sum();
+        assert_eq!(
+            total,
+            p.dispatches(),
+            "{opts:?}: opcode counts must sum to dispatches"
+        );
+        assert_eq!(
+            vm.dispatches(),
+            p.dispatches(),
+            "{opts:?}: VM step count and profiler disagree"
+        );
+        assert_eq!(
+            p.pair_total(),
+            p.dispatches() - 1,
+            "{opts:?}: every dispatch after the first closes one pair"
+        );
+    }
+}
+
+#[test]
+fn counters_conserve_on_a_bundled_workload() {
+    let prog = parse(workloads::source("mriq").unwrap()).unwrap();
+    let mut vm = Vm::new_profiled(&prog).unwrap();
+    vm.call("main", &[]).unwrap();
+    let p = vm.instr_profiler().unwrap();
+    let total: u64 = Op::ALL.iter().map(|&op| p.count(op)).sum();
+    assert_eq!(total, p.dispatches());
+    assert_eq!(p.pair_total(), p.dispatches() - 1);
+    assert!(p.dispatches() > 10_000, "mriq should dispatch plenty");
+}
+
+#[test]
+fn reports_are_byte_identical_across_runs() {
+    let (v1, _, text1, json1) = run_profiled(&ResolveOpts::default());
+    let (v2, _, text2, json2) = run_profiled(&ResolveOpts::default());
+    assert_eq!(v1, v2);
+    assert_eq!(text1, text2, "rendered report must be deterministic");
+    assert_eq!(json1, json2, "JSON report must be deterministic");
+}
+
+#[test]
+fn reports_are_byte_identical_across_thread_schedules() {
+    let (_, _, text0, json0) = run_profiled(&ResolveOpts::default());
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(|| {
+                let (_, _, text, json) =
+                    run_profiled(&ResolveOpts::default());
+                (text, json)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (text, json) = h.join().unwrap();
+        assert_eq!(text, text0, "report differs across threads");
+        assert_eq!(json, json0, "JSON differs across threads");
+    }
+}
+
+#[test]
+fn profiling_is_observably_invisible() {
+    let prog = parse(SRC).unwrap();
+
+    let mut plain = Vm::new(&prog).unwrap();
+    let v_plain = plain.call("main", &[]).unwrap();
+    let (v_prof, prof_vm, _, _) = run_profiled(&ResolveOpts::default());
+
+    assert_eq!(v_plain, v_prof, "profiler changed the result");
+    assert_eq!(
+        plain.dispatches(),
+        prof_vm.dispatches(),
+        "profiler changed the dispatch count"
+    );
+    assert!(plain.instr_profiler().is_none(), "plain VM carries no profiler");
+
+    let pp = plain.profile();
+    let qp = prof_vm.profile();
+    assert_eq!(pp.total, qp.total, "profiler perturbed the op counts");
+    assert_eq!(pp.loops.len(), qp.loops.len());
+    for (id, lp) in &pp.loops {
+        let lq = qp.loop_profile(*id).unwrap();
+        assert_eq!(lp.entries, lq.entries);
+        assert_eq!(lp.trips, lq.trips);
+        assert_eq!(lp.ops, lq.ops);
+    }
+
+    // And the whole stack agrees with the tree-walking oracle.
+    let mut oracle = Interp::new(&prog).unwrap();
+    let v_oracle = oracle.call("main", &[]).unwrap();
+    assert_eq!(v_oracle, v_plain);
+    assert_eq!(oracle.profile().total, pp.total);
+}

@@ -1,0 +1,38 @@
+#!/usr/bin/env python3
+"""CI regression gate for the hot-path bench series.
+
+Usage: python3 tools/bench_gate.py <BENCH_hotpath.json> <baseline.json>
+
+The baseline maps speedup-series names (higher is better) to their
+committed floor. The gate fails if any current value drops below
+95% of its floor — enough slack to absorb runner jitter while still
+catching a real dispatch-loop regression. Raise the floors when a
+change lands that durably improves a series.
+"""
+import json
+import sys
+
+SLACK = 0.95
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__.strip())
+    results = json.load(open(sys.argv[1]))
+    baseline = json.load(open(sys.argv[2]))
+    failures = []
+    for key, floor in sorted(baseline.items()):
+        got = results.get(key)
+        if got is None:
+            failures.append(f"{key}: missing from results")
+            continue
+        limit = floor * SLACK
+        verdict = "ok" if got >= limit else "REGRESSION"
+        print(f"{key}: {got:.2f}x (floor {floor:.2f}x, limit {limit:.2f}x) {verdict}")
+        if got < limit:
+            failures.append(f"{key}: {got:.2f}x < {limit:.2f}x")
+    if failures:
+        sys.exit("bench gate failed:\n  " + "\n  ".join(failures))
+    print("bench gate: PASS")
+
+if __name__ == "__main__":
+    main()
